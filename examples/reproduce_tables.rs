@@ -1,0 +1,37 @@
+//! Regenerate every table and figure of the paper's evaluation from the
+//! performance model, with the paper's own numbers printed beside each
+//! modeled cell.
+//!
+//! ```sh
+//! cargo run --release --example reproduce_tables > tables.txt
+//! ```
+
+use qimeng::report::tables;
+
+fn main() {
+    println!("{}", tables::table1());
+    println!("{}", tables::table2());
+    println!("{}", tables::table3());
+    // Table 4's time column is measured live from the pipeline.
+    let spec = qimeng::sketch::spec::OpSpec::benchmark(
+        qimeng::sketch::spec::AttnVariant::Mha,
+        1024,
+        64,
+        false,
+    );
+    let t0 = std::time::Instant::now();
+    let _ = qimeng::pipeline::run(
+        &spec,
+        &qimeng::perfmodel::gpu::GpuArch::a100(),
+        &qimeng::reasoner::profiles::LlmProfile::deepseek_v3(),
+        qimeng::pipeline::Target::Pallas,
+    )
+    .expect("pipeline");
+    println!("{}", tables::table4(t0.elapsed().as_secs_f64() * 1e3));
+    println!("{}", tables::table5());
+    println!("{}", tables::table6());
+    println!("{}", tables::table7());
+    println!("{}", tables::table8());
+    println!("{}", tables::table9());
+    println!("{}", tables::figure1());
+}

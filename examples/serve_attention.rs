@@ -1,0 +1,100 @@
+//! End-to-end driver (the repository's E2E validation): serve batched
+//! attention requests through the full stack —
+//!
+//!   tlc-generated Pallas kernels → AOT HLO artifacts → rust PJRT
+//!   runtime → signature batcher → responses — with correctness checked
+//!   against the rust-side reference oracle and latency/throughput
+//!   reported (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example serve_attention
+//! ```
+
+use std::time::Duration;
+
+use qimeng::coordinator::{run_stream, Coordinator, ServeConfig};
+use qimeng::verify::tensor::{reference_attention, Tensor2};
+use qimeng::workload::{request_stream, SyntheticRequest};
+
+fn main() {
+    let config = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        batch_window: Duration::from_millis(5),
+    };
+    let coordinator = match Coordinator::start(config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start coordinator (run `make artifacts` first): {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "coordinator up: {} servable attention families",
+        coordinator.families.len()
+    );
+    for f in coordinator.families.iter().take(4) {
+        println!("  e.g. {:?} causal={} qk={} heads {}/{}", f.variant, f.causal, f.qk_dim, f.q_heads, f.kv_heads);
+    }
+
+    // -- correctness spot check through the full serving path --
+    println!("\n== correctness: served output vs rust reference oracle ==");
+    let fam = coordinator
+        .families
+        .iter()
+        .find(|f| f.causal && f.qk_dim == 64)
+        .expect("no causal hd64 family")
+        .clone();
+    let req = SyntheticRequest { family: fam.clone(), seed: 2024, arrival: Duration::ZERO };
+    let (q, k, v) = req.payload();
+    let rx = coordinator.submit(fam.clone(), q.clone(), k.clone(), v.clone());
+    let resp = rx.recv().expect("no response");
+    let out = resp.result.expect("serve error");
+    // Compare head 0 (per-head slices; GQA maps q-head h -> kv-head h/g).
+    let (s, d, vd) = (fam.seq, fam.qk_dim, fam.v_dim);
+    let qt = Tensor2 { rows: s, cols: d, data: q[..s * d].to_vec() };
+    let kt = Tensor2 { rows: s, cols: d, data: k[..s * d].to_vec() };
+    let vt = Tensor2 { rows: s, cols: vd, data: v[..s * vd].to_vec() };
+    let want = reference_attention(&qt, &kt, &vt, 1.0 / (d as f32).sqrt(), true);
+    let got = Tensor2 { rows: s, cols: vd, data: out[..s * vd].to_vec() };
+    let diff = got.max_abs_diff(&want);
+    println!("  max |served - reference| = {diff:.3e}  ({})", if diff < 5e-4 { "OK" } else { "MISMATCH" });
+    assert!(diff < 5e-4);
+
+    // -- warm the executables (compile on first use), one per family --
+    println!("\n== warmup: compiling every family's executables ==");
+    let t0 = std::time::Instant::now();
+    let warm_rxs: Vec<_> = coordinator
+        .families
+        .iter()
+        .enumerate()
+        .map(|(i, fam)| {
+            let r = SyntheticRequest {
+                family: fam.clone(),
+                seed: i as u64,
+                arrival: Duration::ZERO,
+            };
+            let (q, k, v) = r.payload();
+            coordinator.submit(fam.clone(), q, k, v)
+        })
+        .collect();
+    for rx in warm_rxs {
+        rx.recv().unwrap().result.unwrap();
+    }
+    println!("  {} families warm in {:.2?}", coordinator.families.len(), t0.elapsed());
+
+    println!("\n== serving 128 requests (Poisson arrivals, zipf family mix) ==");
+    let stream = request_stream(&coordinator.families, 128, 12.0, 42);
+    let report = run_stream(&coordinator, &stream, 1.0);
+    println!(
+        "  {} ok / {} errors in {:.2?}",
+        report.ok, report.errors, report.wall
+    );
+    println!(
+        "  throughput {:.1} req/s | latency mean {:.2?} p50 {:.2?} p95 {:.2?} | occupancy {:.2}",
+        report.throughput_rps, report.mean_latency, report.p50, report.p95, report.mean_occupancy
+    );
+    println!("  metrics: {}", report.metrics_summary);
+    coordinator.shutdown();
+}

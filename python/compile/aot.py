@@ -1,0 +1,149 @@
+"""AOT lowering: jax functions (with Pallas kernels inside) → HLO text
+artifacts consumed by the rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot [--out-dir ../artifacts]
+Artifacts:
+  <kernel>__b<B>_h<H>kv<HK>_s<S>.hlo.txt     one per (kernel family, shape)
+  tiny_lm__v<V>_d<D>_h<H>_l<L>_b<B>_s<S>.hlo.txt
+  manifest.txt                                key=value lines, rust-parseable
+"""
+
+import argparse
+import importlib
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _attention_shapes(meta):
+    """Serving shapes per kernel family (CPU-sized; the perf model covers
+    paper-scale shapes). Two batch sizes per family so the coordinator's
+    dynamic batcher has real capacity choices. q_heads must be a multiple
+    of the kernel's compiled GROUP_SIZE."""
+    group = meta["group_size"]
+    q_heads = max(4, group)
+    kv_heads = q_heads // group
+    seq = 256
+    return [
+        dict(batch=1, q_heads=q_heads, kv_heads=kv_heads, seq=seq, kv=seq),
+        dict(batch=4, q_heads=q_heads, kv_heads=kv_heads, seq=seq, kv=seq),
+    ]
+
+
+def lower_attention_kernel(mod_name, out_dir):
+    """Lower one generated kernel module to an HLO artifact. Returns the
+    manifest line."""
+    mod = importlib.import_module(f"compile.kernels.generated.{mod_name}")
+    meta = mod.META
+    qk, vd = meta["qk_dim"], meta["v_dim"]
+
+    def fn(q, k, v):
+        return (mod.attention(q, k, v, interpret=True),)
+
+    lines = []
+    for sh in _attention_shapes(meta):
+        q = jax.ShapeDtypeStruct((sh["batch"], sh["q_heads"], sh["seq"], qk), jnp.float32)
+        k = jax.ShapeDtypeStruct((sh["batch"], sh["kv_heads"], sh["kv"], qk), jnp.float32)
+        v = jax.ShapeDtypeStruct((sh["batch"], sh["kv_heads"], sh["kv"], vd), jnp.float32)
+        lowered = jax.jit(fn).lower(q, k, v)
+        text = to_hlo_text(lowered)
+
+        art_id = (
+            f"{mod_name}__b{sh['batch']}_h{sh['q_heads']}kv{sh['kv_heads']}_s{sh['seq']}"
+        )
+        fname = f"{art_id}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lines.append(
+            f"artifact {art_id} file={fname} kind=attention kernel={mod_name} "
+            f"variant={meta['variant']} causal={int(meta['causal'])} "
+            f"batch={sh['batch']} q_heads={sh['q_heads']} kv_heads={sh['kv_heads']} "
+            f"seq={sh['seq']} kv={sh['kv']} qk={qk} vd={vd}"
+        )
+    return lines
+
+
+def lower_tiny_lm(out_dir, *, vocab=512, dim=128, heads=4, layers=2, batch=4, seq=128):
+    """Lower the tiny transformer LM (weights burned in as constants)."""
+    fn = model.tiny_lm_fn(vocab=vocab, dim=dim, heads=heads, layers=layers)
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lowered = fn.lower(tokens)
+    text = to_hlo_text(lowered)
+    art_id = f"tiny_lm__v{vocab}_d{dim}_h{heads}_l{layers}_b{batch}_s{seq}"
+    fname = f"{art_id}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return (
+        f"artifact {art_id} file={fname} kind=lm vocab={vocab} dim={dim} "
+        f"heads={heads} layers={layers} batch={batch} seq={seq}"
+    )
+
+
+def discover_generated():
+    """Names of tlc-generated kernel modules."""
+    gen_dir = os.path.join(os.path.dirname(__file__), "kernels", "generated")
+    names = []
+    if os.path.isdir(gen_dir):
+        for f in sorted(os.listdir(gen_dir)):
+            if f.endswith(".py") and not f.startswith("__"):
+                names.append(f[: -len(".py")])
+    return names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    kernels = discover_generated()
+    if not kernels:
+        print(
+            "no generated kernels found — run `cargo run --release --bin tlc -- "
+            "generate-all` (or `make kernels`) first",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+    manifest = []
+    for name in kernels:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        manifest.extend(lower_attention_kernel(name, args.out_dir))
+        print(f"lowered {name} in {time.time() - t0:.1f}s")
+
+    if not args.skip_lm and (not args.only or "tiny_lm" in args.only):
+        t0 = time.time()
+        manifest.append(lower_tiny_lm(args.out_dir))
+        print(f"lowered tiny_lm in {time.time() - t0:.1f}s")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# AOT artifact manifest — parsed by rust/src/runtime/registry.rs\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

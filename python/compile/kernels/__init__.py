@@ -1,0 +1,12 @@
+"""L1 — Pallas kernels (build-time only; never imported at runtime).
+
+* ``ref``       pure-jnp oracles for every variant (also the vanilla-LLM
+                torch-style baseline of the paper's tables)
+* ``flash``     hand-written FlashAttention kernel ("human expert",
+                Table 4 baseline)
+* ``nsa``       blocked simplified Native Sparse Attention (Table 9)
+* ``generated`` kernels emitted by ``tlc generate-all`` (the paper's
+                pipeline output) — created by ``make kernels``
+"""
+
+from . import flash, nsa, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Hand-written FlashAttention Pallas kernel — the "human expert"
+baseline of the paper's Table 4.
+
+Functionally equivalent to what `tlc generate` emits; written the way a
+kernel engineer would (parametrized over tile sizes, variants and causal
+masking) to stand in for the months-of-effort expert implementation the
+paper compares development cost against. The generated kernels must match
+this one (and both must match ref.py) — pytest enforces all three-way
+agreements.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): VMEM tiles instead
+of CUDA shared memory, MXU `jnp.dot` instead of Tensor-Core mma, BlockSpec
+instead of the threadblock schedule. interpret=True everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK_VALUE = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bm, bn, causal):
+    """One (batch, q-head, q-block) program instance."""
+    block_idx = pl.program_id(2)
+    kv_len = k_ref.shape[2]
+    v_dim = v_ref.shape[3]
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    acc = jnp.zeros((bm, v_dim), jnp.float32)
+    m_i = jnp.zeros((bm, 1), jnp.float32)
+    l_i = jnp.zeros((bm, 1), jnp.float32)
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], i * bn, bn, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], i * bn, bn, axis=0)
+        s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        s = s * scale
+        if causal:
+            q_pos = block_idx * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+            k_pos = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+            s = jnp.where(k_pos <= q_pos, s, MASK_VALUE)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * corr + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    if causal:
+        num_blocks = ((block_idx + 1) * bm + bn - 1) // bn
+    else:
+        num_blocks = kv_len // bn
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_blocks, body, (acc, m_i, l_i))
+    o_ref[0, 0] = (acc / l_i).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=False, bm=128, bn=64, interpret=True):
+    """FlashAttention over batched multi-head inputs.
+
+    Args:
+        q: (batch, q_heads, seq, qk_dim)
+        k: (batch, kv_heads, kv, qk_dim)
+        v: (batch, kv_heads, kv, v_dim) — kv_heads divides q_heads
+           (GQA/MQA use the same kernel through the BlockSpec index map).
+    """
+    batch, q_heads, seq, qk_dim = q.shape
+    if causal:
+        # Causal masking is prefix-aligned (query i attends keys <= i),
+        # the paper's benchmark setting; it requires kv == seq.
+        assert k.shape[2] == seq, (k.shape[2], seq)
+    kv_heads, kv_len = k.shape[1], k.shape[2]
+    v_dim = v.shape[3]
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+    bm = min(bm, seq)
+    bn = min(bn, kv_len)
+    assert seq % bm == 0 and kv_len % bn == 0, (seq, bm, kv_len, bn)
+
+    kernel = functools.partial(_flash_kernel, bm=bm, bn=bn, causal=causal)
+    grid = (batch, q_heads, seq // bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, qk_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kv_len, qk_dim), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, kv_len, v_dim), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, v_dim), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, q_heads, seq, v_dim), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def mla_flash_attention(q, c_kv, k_rope, w_uk, w_uv, *, causal=True, interpret=True):
+    """MLA forward: decompress the latent KV cache, then run the flash
+    kernel with asymmetric head dims (qk = nope+rope, v = v_dim).
+
+    The decompression is L2 (jax) work that fuses into the same lowered
+    module; the kernel itself is dimension-agnostic.
+    """
+    from . import ref
+
+    k, v = ref.mla_decompress(c_kv, k_rope, w_uk, w_uv)
+    return flash_attention(q, k, v, causal=causal, bm=64, bn=64, interpret=interpret)

@@ -1,0 +1,214 @@
+"""FlashAttention backward pass (extension beyond the paper).
+
+The paper generates forward operators only and names "a broader range of
+complex operators" as future work; the backward pass is the natural next
+operator, and its TL description uses the same Copy/Compute vocabulary
+(two extra fused GEMMs per tile plus the ds = p * (dp - D) rescale).
+
+Implementation follows Dao et al. (2022): the forward saves the row
+log-sum-exp; backward recomputes P tile-by-tile instead of storing it.
+Two kernels, both online over the opposite axis:
+
+  * dq kernel: one program per (b, h, q-block), sweeping KV tiles;
+  * dkv kernel: one program per (b, h, kv-block), sweeping Q tiles.
+
+Validated against jax.grad of the jnp reference in
+tests/test_flash_bwd.py. interpret=True (CPU PJRT) as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK_VALUE = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bm, bn, causal):
+    """Forward with saved row log-sum-exp (scale folded in)."""
+    block_idx = pl.program_id(2)
+    kv_len = k_ref.shape[2]
+    v_dim = v_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    acc = jnp.zeros((bm, v_dim), jnp.float32)
+    m_i = jnp.full((bm, 1), -jnp.inf, jnp.float32)
+    l_i = jnp.zeros((bm, 1), jnp.float32)
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], i * bn, bn, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], i * bn, bn, axis=0)
+        s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        s = s * scale
+        if causal:
+            q_pos = block_idx * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+            k_pos = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+            s = jnp.where(k_pos <= q_pos, s, MASK_VALUE)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * corr + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    num_blocks = ((block_idx + 1) * bm + bn - 1) // bn if causal else kv_len // bn
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_blocks, body, (acc, m_i, l_i))
+    o_ref[0, 0] = (acc / l_i).astype(o_ref.dtype)
+    lse_ref[0, 0] = (m_i + jnp.log(l_i)).astype(lse_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, bm, bn, causal):
+    block_idx = pl.program_id(2)
+    kv_len = k_ref.shape[2]
+    q = q_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    delta = delta_ref[0, 0].astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    dq = jnp.zeros_like(q)
+
+    def body(i, dq):
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], i * bn, bn, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], i * bn, bn, axis=0).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = block_idx * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+            k_pos = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+            s = jnp.where(k_pos <= q_pos, s, MASK_VALUE)
+        p = jnp.exp(s - lse)  # recomputed softmax via saved lse
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        return dq + jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+
+    num_blocks = ((block_idx + 1) * bm + bn - 1) // bn if causal else kv_len // bn
+    dq = jax.lax.fori_loop(0, num_blocks, body, dq)
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, bm, bn, causal):
+    kv_block = pl.program_id(2)
+    seq_len = q_ref.shape[2]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    d = k.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    dk = jnp.zeros_like(k)
+    dv = jnp.zeros_like(v)
+
+    def body(j, carry):
+        dk, dv = carry
+        q = jax.lax.dynamic_slice_in_dim(q_ref[0, 0], j * bm, bm, axis=0).astype(jnp.float32)
+        do = jax.lax.dynamic_slice_in_dim(do_ref[0, 0], j * bm, bm, axis=0).astype(jnp.float32)
+        lse = jax.lax.dynamic_slice_in_dim(lse_ref[0, 0], j * bm, bm, axis=0).astype(jnp.float32)
+        delta = jax.lax.dynamic_slice_in_dim(delta_ref[0, 0], j * bm, bm, axis=0).astype(
+            jnp.float32
+        )
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, k.shape[0]), 0)
+            k_pos = kv_block * k.shape[0] + jax.lax.broadcasted_iota(
+                jnp.int32, (bm, k.shape[0]), 1
+            )
+            s = jnp.where(k_pos <= q_pos, s, MASK_VALUE)
+        p = jnp.exp(s - lse)
+        dv = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        dk = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+        return dk, dv
+
+    if causal:
+        # q-blocks before this kv-block are fully masked: start there.
+        start = (kv_block * k.shape[0]) // bm
+    else:
+        start = 0
+    dk, dv = jax.lax.fori_loop(start, seq_len // bm, body, (dk, dv))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=False, bm=64, bn=64, interpret=True):
+    """Forward returning (o, lse); lse: (batch, heads, seq, 1)."""
+    batch, heads, seq, d = q.shape
+    kv_len = k.shape[2]
+    v_dim = v.shape[3]
+    assert k.shape[1] == heads, "backward path requires MHA layout (repeat KV first)"
+    bm = min(bm, seq)
+    bn = min(bn, kv_len)
+    kernel = functools.partial(_fwd_kernel, bm=bm, bn=bn, causal=causal)
+    grid = (batch, heads, seq // bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kv_len, d), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, kv_len, v_dim), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bm, v_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bm, 1), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, heads, seq, v_dim), q.dtype),
+            jax.ShapeDtypeStruct((batch, heads, seq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=False, bm=64, bn=64, interpret=True):
+    """Backward: returns (dq, dk, dv). Recomputation strategy with the
+    saved lse; delta = rowsum(do * o) computed at L2."""
+    batch, heads, seq, d = q.shape
+    kv_len = k.shape[2]
+    v_dim = v.shape[3]
+    bm = min(bm, seq)
+    bn = min(bn, kv_len)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1, keepdims=True)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bm=bm, bn=bn, causal=causal),
+        grid=(batch, heads, seq // bm),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kv_len, d), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, kv_len, v_dim), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bm, v_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bm, 1), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bm, 1), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, bm=bm, bn=bn, causal=causal),
+        grid=(batch, heads, kv_len // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1, seq, d), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bn, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bn, v_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, seq, v_dim), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq, 1), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq, 1), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bn, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bn, v_dim), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

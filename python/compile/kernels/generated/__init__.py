@@ -1,0 +1,14 @@
+"""AUTO-GENERATED kernel package (tlc generate-all). DO NOT EDIT."""
+from . import mha_hd64_full_f16  # noqa: F401
+from . import mha_hd64_causal_f16  # noqa: F401
+from . import mha_hd128_full_f16  # noqa: F401
+from . import mha_hd128_causal_f16  # noqa: F401
+from . import gqa_hd64_full_f16  # noqa: F401
+from . import gqa_hd64_causal_f16  # noqa: F401
+from . import gqa_hd128_full_f16  # noqa: F401
+from . import gqa_hd128_causal_f16  # noqa: F401
+from . import mqa_hd64_full_f16  # noqa: F401
+from . import mqa_hd64_causal_f16  # noqa: F401
+from . import mqa_hd128_full_f16  # noqa: F401
+from . import mqa_hd128_causal_f16  # noqa: F401
+from . import mla_hd128_causal_f16  # noqa: F401

@@ -1,0 +1,138 @@
+"""Pure-jnp reference oracles for every attention variant.
+
+These are the ground truth the Pallas kernels (hand-written *and*
+tlc-generated) are validated against at build time — the pytest half of
+the paper's correctness story. Everything here materializes the full
+(S, K) score matrix, i.e. it is also the "vanilla LLM" torch-style
+baseline of the paper's tables (the one that OOMs at long context).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Finite stand-in for -inf; must match rust verify::tensor::MASK_VALUE and
+# the generated kernels' MASK_VALUE so all three layers agree on masked
+# softmax behaviour.
+MASK_VALUE = -1e30
+
+
+def attention_ref(q, k, v, *, causal=False, scale=None):
+    """Reference attention with GQA/MQA head broadcasting.
+
+    Args:
+        q: (batch, q_heads, seq, qk_dim)
+        k: (batch, kv_heads, kv, qk_dim) — kv_heads must divide q_heads
+        v: (batch, kv_heads, kv, v_dim)
+        causal: apply a causal mask (query i attends keys <= i).
+        scale: softmax scale; default 1/sqrt(qk_dim).
+
+    Returns:
+        (batch, q_heads, seq, v_dim) in float32.
+    """
+    b, hq, s, d = q.shape
+    hk = k.shape[1]
+    assert hq % hk == 0, f"q_heads {hq} not a multiple of kv_heads {hk}"
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q = q.astype(jnp.float32)
+    k = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    v = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        kv = k.shape[2]
+        mask = jnp.tril(jnp.ones((s, kv), dtype=bool), k=kv - s)
+        s_mat = jnp.where(mask, s_mat, MASK_VALUE)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def mla_decompress(c_kv, k_rope, w_uk, w_uv):
+    """DeepSeek-style MLA decompression (Table 2 setup).
+
+    The KV cache stores a per-token latent ``c_kv`` (latent_dim) plus a
+    shared rope key ``k_rope`` (rope_dim). Per-head K/V are reconstructed
+    with the up-projection matrices.
+
+    Args:
+        c_kv:   (batch, kv, latent_dim)
+        k_rope: (batch, kv, rope_dim) — shared across heads
+        w_uk:   (heads, latent_dim, nope_dim)
+        w_uv:   (heads, latent_dim, v_dim)
+
+    Returns:
+        k: (batch, heads, kv, nope_dim + rope_dim), v: (batch, heads, kv, v_dim)
+    """
+    k_nope = jnp.einsum("bkl,hld->bhkd", c_kv, w_uk)
+    v = jnp.einsum("bkl,hld->bhkd", c_kv, w_uv)
+    h = w_uk.shape[0]
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, None, :, :], (k_rope.shape[0], h, k_rope.shape[1], k_rope.shape[2])
+    )
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_ref(q, c_kv, k_rope, w_uk, w_uv, *, causal=True):
+    """Reference MLA: decompress, then standard attention with asymmetric
+    dims (qk over nope+rope, v over v_dim). q: (b, h, s, nope+rope)."""
+    k, v = mla_decompress(c_kv, k_rope, w_uk, w_uv)
+    return attention_ref(q, k, v, causal=causal)
+
+
+def nsa_branches(q, k, v, *, block=64, topk=16, window=512):
+    """Simplified Native Sparse Attention (Appendix A, Table 9), dense
+    reference. Returns the three branch outputs (cmp, sel, win).
+
+    Branches over the causal KV stream:
+      * compression: attention over mean-pooled KV blocks;
+      * selection: attention restricted to the top-k blocks ranked by the
+        compression scores (per query);
+      * sliding window: attention over the last `window` positions.
+    """
+    b, h, s, d = q.shape
+    kv = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+
+    pos_q = jnp.arange(s)[:, None]
+    pos_k = jnp.arange(kv)[None, :]
+    causal = pos_k <= pos_q
+
+    # --- compression branch: mean-pool non-overlapping blocks ---
+    nblk = kv // block
+    k_cmp = k32[:, :, : nblk * block].reshape(b, h, nblk, block, d).mean(axis=3)
+    v_cmp = v32[:, :, : nblk * block].reshape(b, h, nblk, block, d).mean(axis=3)
+    s_cmp = jnp.einsum("bhqd,bhkd->bhqk", q32, k_cmp) * scale
+    blk_end = (jnp.arange(nblk) + 1) * block - 1
+    cmp_mask = blk_end[None, :] <= pos_q  # block fully visible to query
+    s_cmp = jnp.where(cmp_mask[None, None], s_cmp, MASK_VALUE)
+    p_cmp = jax.nn.softmax(s_cmp, axis=-1)
+    o_cmp = jnp.einsum("bhqk,bhkd->bhqd", p_cmp, v_cmp)
+
+    # --- selection branch: top-k blocks by compression score ---
+    kk = min(topk, nblk)
+    top_blocks = jnp.argsort(s_cmp, axis=-1)[..., ::-1][..., :kk]
+    sel_mask = jnp.any(jax.nn.one_hot(top_blocks, nblk, dtype=bool), axis=-2)
+    tok_sel = jnp.repeat(sel_mask, block, axis=-1)
+    if tok_sel.shape[-1] < kv:  # ragged tail beyond pooled blocks
+        pad = jnp.zeros((*tok_sel.shape[:-1], kv - tok_sel.shape[-1]), bool)
+        tok_sel = jnp.concatenate([tok_sel, pad], axis=-1)
+    s_full = jnp.einsum("bhqd,bhkd->bhqk", q32, k32) * scale
+    s_sel = jnp.where(tok_sel & causal[None, None], s_full, MASK_VALUE)
+    p_sel = jax.nn.softmax(s_sel, axis=-1)
+    o_sel = jnp.einsum("bhqk,bhkd->bhqd", p_sel, v32)
+
+    # --- sliding-window branch ---
+    win_mask = (pos_q - pos_k < window) & causal
+    s_win = jnp.where(win_mask[None, None], s_full, MASK_VALUE)
+    p_win = jax.nn.softmax(s_win, axis=-1)
+    o_win = jnp.einsum("bhqk,bhkd->bhqd", p_win, v32)
+    return o_cmp, o_sel, o_win
+
+
+def nsa_ref(q, k, v, *, block=64, topk=16, window=512):
+    """NSA with equal branch gates (the NSA paper learns the gate; a fixed
+    gate preserves the compute/data-movement structure Table 9 measures)."""
+    o_cmp, o_sel, o_win = nsa_branches(q, k, v, block=block, topk=topk, window=window)
+    return (o_cmp + o_sel + o_win) / 3.0

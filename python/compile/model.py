@@ -1,0 +1,131 @@
+"""L2 — jax model layer: attention ops and a tiny transformer block.
+
+Build-time only. ``aot.py`` lowers these functions (with the Pallas
+kernels inside) to HLO text; the rust runtime loads and executes the
+artifacts — Python never sits on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash, ref
+
+
+def attention_op(q, k, v, *, causal, bm=128, bn=64, use_generated=None):
+    """The servable attention op: generated kernel when available,
+    hand-written flash otherwise.
+
+    ``use_generated`` names a module in kernels.generated (e.g.
+    "mha_hd64_causal_f16"); its META must match (causal, dims).
+    """
+    if use_generated is not None:
+        import importlib
+
+        mod = importlib.import_module(f"compile.kernels.generated.{use_generated}")
+        assert mod.META["causal"] == causal, (
+            f"kernel {use_generated} causal={mod.META['causal']} != {causal}"
+        )
+        return mod.attention(q, k, v, interpret=True)
+    return flash.flash_attention(q, k, v, causal=causal, bm=bm, bn=bn, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Tiny decoder-only transformer used by the end-to-end serving example: the
+# attention inside is the generated/flash kernel, everything else is plain
+# jax. Weights are created deterministically (seeded) at AOT time and burned
+# into the artifact as constants — the serving path only feeds token ids.
+# ---------------------------------------------------------------------------
+
+
+def make_params(key, *, vocab, dim, heads, layers, mlp_ratio=4):
+    """Deterministic tiny-LM parameters."""
+    keys = jax.random.split(key, layers * 6 + 2)
+    scale = dim ** -0.5
+    params = {
+        "embed": jax.random.normal(keys[0], (vocab, dim), jnp.float32) * scale,
+        "layers": [],
+        "out_norm": jnp.ones((dim,), jnp.float32),
+    }
+    for i in range(layers):
+        k0 = keys[2 + i * 6 : 2 + (i + 1) * 6]
+        params["layers"].append(
+            {
+                "wq": jax.random.normal(k0[0], (dim, dim), jnp.float32) * scale,
+                "wk": jax.random.normal(k0[1], (dim, dim), jnp.float32) * scale,
+                "wv": jax.random.normal(k0[2], (dim, dim), jnp.float32) * scale,
+                "wo": jax.random.normal(k0[3], (dim, dim), jnp.float32) * scale,
+                "w_up": jax.random.normal(k0[4], (dim, mlp_ratio * dim), jnp.float32)
+                * scale,
+                "w_down": jax.random.normal(k0[5], (mlp_ratio * dim, dim), jnp.float32)
+                * (mlp_ratio * dim) ** -0.5,
+                "norm1": jnp.ones((dim,), jnp.float32),
+                "norm2": jnp.ones((dim,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _rmsnorm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * w
+
+
+def transformer_forward(params, tokens, *, heads, causal=True):
+    """Forward pass of the tiny LM: (batch, seq) int32 -> logits.
+
+    Attention runs through the flash Pallas kernel — the same code path
+    the paper's generated operators take.
+    """
+    x = params["embed"][tokens]  # (b, s, dim)
+    b, s, dim = x.shape
+    hd = dim // heads
+    for lp in params["layers"]:
+        h = _rmsnorm(x, lp["norm1"])
+        q = (h @ lp["wq"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        o = flash.flash_attention(
+            q, k, v, causal=causal, bm=min(128, s), bn=min(64, s), interpret=True
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, dim)
+        x = x + o @ lp["wo"]
+        h = _rmsnorm(x, lp["norm2"])
+        x = x + jax.nn.gelu(h @ lp["w_up"]) @ lp["w_down"]
+    x = _rmsnorm(x, params["out_norm"])
+    return x @ params["embed"].T  # tied logits
+
+
+def transformer_forward_ref(params, tokens, *, heads, causal=True):
+    """Same forward with the jnp reference attention — the oracle used to
+    validate the kernel-backed forward."""
+    x = params["embed"][tokens]
+    b, s, dim = x.shape
+    hd = dim // heads
+    for lp in params["layers"]:
+        h = _rmsnorm(x, lp["norm1"])
+        q = (h @ lp["wq"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+        o = ref.attention_ref(q, k, v, causal=causal)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, dim)
+        x = x + o @ lp["wo"]
+        h = _rmsnorm(x, lp["norm2"])
+        x = x + jax.nn.gelu(h @ lp["w_up"]) @ lp["w_down"]
+    x = _rmsnorm(x, params["out_norm"])
+    return x @ params["embed"].T
+
+
+def tiny_lm_fn(*, vocab=512, dim=128, heads=4, layers=2, seed=0):
+    """A closed-over tiny-LM forward suitable for AOT lowering: weights are
+    constants inside the jitted function; the only runtime input is the
+    token batch."""
+    params = make_params(
+        jax.random.PRNGKey(seed), vocab=vocab, dim=dim, heads=heads, layers=layers
+    )
+
+    @functools.partial(jax.jit)
+    def fn(tokens):
+        return (transformer_forward(params, tokens, heads=heads),)
+
+    return fn

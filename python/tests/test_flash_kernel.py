@@ -1,0 +1,98 @@
+"""Hand-written flash Pallas kernel vs the jnp reference oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import flash, ref
+
+
+def make_qkv(b, hq, hk, s, kv, dq, dv, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, hq, s, dq)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hk, kv, dq)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hk, kv, dv)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("head_dim", [64, 128])
+def test_flash_mha_matches_ref(causal, head_dim):
+    q, k, v = make_qkv(2, 4, 4, 256, 256, head_dim, head_dim, seed=1)
+    got = flash.flash_attention(q, k, v, causal=causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("group", [2, 4, 8])
+def test_flash_gqa_groups(group):
+    q, k, v = make_qkv(1, 8, 8 // group, 128, 128, 64, 64, seed=2)
+    got = flash.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_mqa_single_kv_head():
+    q, k, v = make_qkv(2, 8, 1, 128, 128, 64, 64, seed=3)
+    got = flash.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(32, 32), (64, 32), (32, 64), (128, 64)])
+def test_flash_tiling_invariance(bm, bn):
+    """Tile sizes must not change the result (same invariant the rust
+    interpreter asserts across LLM profiles)."""
+    q, k, v = make_qkv(1, 2, 2, 128, 128, 64, 64, seed=4)
+    a = flash.flash_attention(q, k, v, causal=True, bm=bm, bn=bn)
+    b = flash.flash_attention(q, k, v, causal=True, bm=64, bn=64)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_asymmetric_dims_mla_shape():
+    """MLA-shaped attention: qk over 192, v over 128."""
+    q, k, v = make_qkv(1, 4, 4, 128, 128, 192, 128, seed=5)
+    got = flash.flash_attention(q, k, v, causal=True, bm=64, bn=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_kv_longer_than_q():
+    """Decode-style: 64 queries against a 256-token KV cache."""
+    q, k, v = make_qkv(1, 2, 2, 64, 256, 64, 64, seed=6)
+    got = flash.flash_attention(q, k, v, causal=False, bm=64, bn=64)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_large_scores_no_overflow():
+    """Online softmax must be stable for large logits."""
+    q = jnp.full((1, 1, 64, 64), 12.0, jnp.float32)
+    k = jnp.full((1, 1, 64, 64), 12.0, jnp.float32)
+    v = jnp.asarray(np.random.default_rng(7).standard_normal((1, 1, 64, 64)), jnp.float32)
+    got = flash.flash_attention(q, k, v, causal=False, bm=32, bn=32)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_flash_rows_sum_to_one_through_ones_v():
+    q, k, _ = make_qkv(1, 2, 2, 128, 128, 64, 64, seed=8)
+    v = jnp.ones((1, 2, 128, 64), jnp.float32)
+    got = flash.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, jnp.ones_like(got), atol=1e-5)
+
+
+def test_mla_flash_matches_mla_ref():
+    rng = np.random.default_rng(9)
+    b, h, s, kv = 1, 4, 128, 128
+    nope, rope, latent, vd = 128, 64, 512, 128
+    q = jnp.asarray(rng.standard_normal((b, h, s, nope + rope)), jnp.float32)
+    c_kv = jnp.asarray(rng.standard_normal((b, kv, latent)) * 0.1, jnp.float32)
+    k_rope = jnp.asarray(rng.standard_normal((b, kv, rope)), jnp.float32)
+    w_uk = jnp.asarray(rng.standard_normal((h, latent, nope)) * 0.05, jnp.float32)
+    w_uv = jnp.asarray(rng.standard_normal((h, latent, vd)) * 0.05, jnp.float32)
+    got = flash.mla_flash_attention(q, c_kv, k_rope, w_uk, w_uv, causal=True)
+    want = ref.mla_ref(q, c_kv, k_rope, w_uk, w_uv, causal=True)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)

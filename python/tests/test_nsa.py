@@ -1,0 +1,48 @@
+"""Simplified NSA: blocked implementation vs the dense oracle (Table 9's
+two rows must agree numerically; the latency ratio is the perf model's
+job)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import nsa, ref
+
+
+def make(b, h, s, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("topk", [2, 4])
+def test_nsa_blocked_matches_ref(topk):
+    q, k, v = make(1, 2, 256, 64, seed=1)
+    got = nsa.nsa_blocked(q, k, v, block=32, topk=topk, window=64)
+    want = ref.nsa_ref(q, k, v, block=32, topk=topk, window=64)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_nsa_full_window_reduces_to_causal_attention():
+    """With window >= kv, the window branch equals dense causal attention."""
+    q, k, v = make(1, 2, 128, 64, seed=2)
+    o_cmp, o_sel, o_win = ref.nsa_branches(q, k, v, block=32, topk=2, window=128)
+    dense = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(o_win, dense, atol=2e-5, rtol=2e-5)
+
+
+def test_nsa_selection_subset_of_causal():
+    """Selection-branch rows are convex combinations of visible V rows:
+    with V == ones, outputs are exactly one."""
+    q, k, _ = make(1, 1, 128, 64, seed=3)
+    v = jnp.ones((1, 1, 128, 64), jnp.float32)
+    out = ref.nsa_ref(q, k, v, block=32, topk=2, window=32)
+    np.testing.assert_allclose(out, jnp.ones_like(out), atol=1e-5)
+
+
+def test_nsa_outputs_finite():
+    q, k, v = make(2, 2, 256, 64, seed=4)
+    out = nsa.nsa_blocked(q, k, v, block=64, topk=2, window=128)
+    assert bool(jnp.all(jnp.isfinite(out)))

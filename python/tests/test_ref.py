@@ -1,0 +1,57 @@
+"""Self-consistency of the reference oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    v = jnp.ones((1, 2, 64, 16), jnp.float32)
+    out = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, jnp.ones_like(out), atol=1e-5)
+
+
+def test_causal_first_position_copies_v0():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 16, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 16, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 16, 8)), jnp.float32)
+    out = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=1e-5)
+
+
+def test_gqa_broadcast_equals_explicit_repeat():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    got = ref.attention_ref(q, k, v, causal=False)
+    k_rep = jnp.repeat(k, 2, axis=1)
+    v_rep = jnp.repeat(v, 2, axis=1)
+    want = ref.attention_ref(q, k_rep, v_rep, causal=False)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_mla_decompress_shapes():
+    rng = np.random.default_rng(3)
+    c_kv = jnp.asarray(rng.standard_normal((2, 32, 64)), jnp.float32)
+    k_rope = jnp.asarray(rng.standard_normal((2, 32, 8)), jnp.float32)
+    w_uk = jnp.asarray(rng.standard_normal((4, 64, 16)), jnp.float32)
+    w_uv = jnp.asarray(rng.standard_normal((4, 64, 16)), jnp.float32)
+    k, v = ref.mla_decompress(c_kv, k_rope, w_uk, w_uv)
+    assert k.shape == (2, 4, 32, 24)  # nope 16 + rope 8
+    assert v.shape == (2, 4, 32, 16)
+
+
+def test_scale_defaults_to_rsqrt_head_dim():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((1, 1, 16, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 16, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 16, 64)), jnp.float32)
+    a = ref.attention_ref(q, k, v)
+    b = ref.attention_ref(q, k, v, scale=1.0 / 8.0)
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,80 @@
+//! Design-choice ablations (DESIGN.md §5, Listings 1-2 context): each
+//! knob the reasoner controls, isolated and measured two ways — modeled
+//! GPU TFLOPS (A100) and, where it changes generated code, real pipeline
+//! wall-clock.
+//!
+//!   * tiling strategy: one-shot heuristic vs cost-model search
+//!   * double-buffer prefetch: on vs off
+//!   * causal block skipping: on vs off
+//!   * softmax/mma overlap sensitivity
+
+use qimeng::perfmodel::cost::estimate;
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::perfmodel::schedules;
+use qimeng::reasoner::tiling::{choose, TilingStrategy};
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::tl::types::DType;
+use qimeng::util::bench::Bench;
+
+fn main() {
+    let arch = GpuArch::a100();
+
+    println!("== ablation: tiling strategy (A100, modeled TFLOPS @16k causal) ==");
+    for hd in [64usize, 128] {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, hd, true);
+        for (name, strat) in
+            [("heuristic", TilingStrategy::Heuristic), ("cost-search", TilingStrategy::CostSearch)]
+        {
+            let t = choose(strat, &spec, &arch, true);
+            let mut sched = schedules::ours(&arch, hd, DType::F16);
+            sched.bm = t.bm;
+            sched.bn = t.bn;
+            let est = estimate(&spec, &arch, &sched);
+            println!(
+                "  hd{hd:<4} {name:<12} BM={:<4} BN={:<4} smem={:<6} blocks/SM={} -> {:.1} TFLOPS",
+                t.bm, t.bn, t.smem_bytes, t.blocks_per_sm, est.tflops
+            );
+        }
+    }
+
+    println!("\n== ablation: double-buffer prefetch (modeled; Listing-1 knob) ==");
+    for hd in [64usize, 128] {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, hd, true);
+        let with = schedules::ours(&arch, hd, DType::F16);
+        let mut without = with.clone();
+        without.softmax_overlap -= 0.25; // staging exposed without the prefetch
+        let a = estimate(&spec, &arch, &with).tflops;
+        let b = estimate(&spec, &arch, &without).tflops;
+        println!("  hd{hd:<4} prefetch on {a:.1} | off {b:.1} TFLOPS ({:+.1}%)", (a / b - 1.0) * 100.0);
+    }
+
+    println!("\n== ablation: causal block skipping (modeled) ==");
+    for seq in [2048usize, 16384] {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, seq, 64, true);
+        let skip = schedules::ours(&arch, 64, DType::F16);
+        let mut no_skip = skip.clone();
+        no_skip.causal_block_skip = false;
+        let a = estimate(&spec, &arch, &skip).tflops;
+        let b = estimate(&spec, &arch, &no_skip).tflops;
+        println!("  seq {seq:<6} skip {a:.1} | visit-all {b:.1} TFLOPS ({:.2}x)", a / b);
+    }
+
+    println!("\n== ablation: softmax overlap sensitivity (modeled, hd64 @16k) ==");
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, 64, true);
+    for overlap in [0.0, 0.4, 0.8] {
+        let mut sched = schedules::ours(&arch, 64, DType::F16);
+        sched.softmax_overlap = overlap;
+        let est = estimate(&spec, &arch, &sched);
+        println!("  overlap {overlap:.1} -> {:.1} TFLOPS", est.tflops);
+    }
+
+    println!("\n== real pipeline cost of the search (generation wall-clock) ==");
+    use qimeng::reasoner::profiles::LlmProfile;
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, 128, true);
+    for profile in [LlmProfile::deepseek_v3(), LlmProfile::deepseek_r1()] {
+        let sk = qimeng::sketch::generate_sketch(&spec);
+        Bench::new(format!("reasoning_{}", profile.name)).samples(100).run(|| {
+            qimeng::reasoner::reason(&sk, &spec, &arch, &profile)
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Coordinator benches: serving throughput/latency under open-loop load,
+//! batching on vs off (window = 0), plus the pure batcher-planning hot
+//! path. §Perf target: coordinator overhead ≤ 5% of kernel execute time
+//! at batch 8. Requires `make artifacts`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use qimeng::coordinator::batcher::plan_batches;
+use qimeng::coordinator::{run_stream, Coordinator, FamilyKey, ServeConfig};
+use qimeng::sketch::spec::AttnVariant;
+use qimeng::util::bench::Bench;
+use qimeng::workload::request_stream;
+
+fn main() {
+    // -- pure planning hot path (no PJRT) --
+    let fam = FamilyKey {
+        variant: AttnVariant::Mha,
+        causal: true,
+        qk_dim: 64,
+        v_dim: 64,
+        q_heads: 4,
+        kv_heads: 4,
+        seq: 256,
+        kv: 256,
+    };
+    let caps: BTreeMap<FamilyKey, Vec<usize>> = [(fam.clone(), vec![1, 4])].into();
+    let pending: Vec<(usize, FamilyKey, bool)> =
+        (0..256).map(|i| (i, fam.clone(), i % 7 == 0)).collect();
+    let rep = Bench::new("batch_planning_256_pending").samples(200).run(|| {
+        plan_batches(&pending, &caps)
+    });
+    println!("  -> {:.1} plans/ms", 1e-3 / (rep.mean.as_secs_f64() / 64.0));
+
+    // -- end-to-end serving --
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping serving benches: run `make artifacts` first");
+        return;
+    }
+    for (label, window_ms) in [("batched_w5ms", 5u64), ("unbatched_w0", 0)] {
+        let coordinator = Coordinator::start(ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            batch_window: Duration::from_millis(window_ms),
+        })
+        .expect("coordinator");
+        // Warm all executables once.
+        let warm = request_stream(&coordinator.families, coordinator.families.len() * 4, 1e6, 3);
+        let _ = run_stream(&coordinator, &warm, 1e9);
+        let stream = request_stream(&coordinator.families, 64, 1e6, 11);
+        let t0 = std::time::Instant::now();
+        let report = run_stream(&coordinator, &stream, 1e9);
+        println!(
+            "serve_{label}: {} ok in {:.2?} -> {:.1} req/s, occupancy {:.2}, p50 {:.1?}, p95 {:.1?}",
+            report.ok,
+            t0.elapsed(),
+            report.throughput_rps,
+            report.mean_occupancy,
+            report.p50,
+            report.p95
+        );
+        coordinator.shutdown();
+    }
+}

@@ -1,0 +1,32 @@
+//! Numeric TL interpreter benches: the verification gate's hot path
+//! (O(n^3) host matmuls). §Perf tracks the per-probe cost since every
+//! `tlc generate` pays it.
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::reasoner::generate_tl_code;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::util::bench::Bench;
+use qimeng::verify::interp::run_attention;
+use qimeng::verify::tensor::{reference_attention, Tensor2};
+
+fn main() {
+    let arch = GpuArch::a100();
+    for (label, seq, hd) in
+        [("probe_256_hd64", 256usize, 64usize), ("probe_512_hd128", 512, 128)]
+    {
+        let mut spec = OpSpec::benchmark(AttnVariant::Mha, seq, hd, true);
+        spec.batch = 1;
+        let r = generate_tl_code(&spec, &arch, &LlmProfile::deepseek_v3());
+        let q = Tensor2::randn(seq, spec.qk_dim(), 1);
+        let k = Tensor2::randn(seq, spec.qk_dim(), 2);
+        let v = Tensor2::randn(seq, spec.v_head_dim, 3);
+        let scale = 1.0 / (spec.qk_dim() as f32).sqrt();
+        Bench::new(format!("tl_interpreter_{label}")).samples(10).run(|| {
+            run_attention(&r.program, &q, &k, &v, scale).unwrap()
+        });
+        Bench::new(format!("host_reference_{label}")).samples(10).run(|| {
+            reference_attention(&q, &k, &v, scale, true)
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Table-regeneration benches: each paper table rendered end to end from
+//! the performance model. DESIGN.md §7 target: the full Table-1 grid in
+//! under 1 second.
+
+use qimeng::report::tables;
+use qimeng::util::bench::Bench;
+
+fn main() {
+    let t1 = Bench::new("table1_full_grid").samples(20).run(tables::table1);
+    println!(
+        "table1 mean {:?} — 1 s target: {}",
+        t1.mean,
+        if t1.mean < std::time::Duration::from_secs(1) { "MET" } else { "MISSED" }
+    );
+    Bench::new("table2_mla").samples(50).run(tables::table2);
+    Bench::new("table3_llm_ablation").samples(50).run(tables::table3);
+    Bench::new("table5_prompt_ablation").samples(50).run(tables::table5);
+    Bench::new("table6_fp8").samples(50).run(tables::table6);
+    Bench::new("table7_t4_grid").samples(20).run(tables::table7);
+    Bench::new("table8_real_models").samples(20).run(tables::table8);
+    Bench::new("table9_nsa").samples(50).run(tables::table9);
+    Bench::new("figure1").samples(50).run(tables::figure1);
+}

@@ -1,0 +1,46 @@
+//! Pipeline benches — the Table-4 "development cost" measurement: wall
+//! clock of sketch → reason → verify → translate, per stage and end to
+//! end. DESIGN.md §7 target: full pipeline < 50 ms in release mode
+//! (vs ~10 minutes with a live LLM, vs months for a human expert).
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::pipeline::{run, Target};
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::reasoner::{generate_tl_code, reason};
+use qimeng::sketch::{generate_sketch, spec::{AttnVariant, OpSpec}};
+use qimeng::translate::{pallas::PallasBackend, Backend};
+use qimeng::util::bench::Bench;
+use qimeng::verify::verify_program;
+
+fn main() {
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, 128, true);
+    let arch = GpuArch::a100();
+    let profile = LlmProfile::deepseek_r1();
+
+    Bench::new("sketch_generation").samples(200).run(|| generate_sketch(&spec));
+
+    let sketch = generate_sketch(&spec);
+    Bench::new("parameter_reasoning").samples(200).run(|| {
+        reason(&sketch, &spec, &arch, &profile)
+    });
+
+    let reasoned = reason(&sketch, &spec, &arch, &profile);
+    Bench::new("verification_gate").samples(20).run(|| {
+        verify_program(&reasoned.program, spec.causal, 7)
+    });
+
+    Bench::new("pallas_translation").samples(200).run(|| {
+        PallasBackend.emit(&reasoned, &spec, &arch).unwrap()
+    });
+
+    let report = Bench::new("full_pipeline_end_to_end").samples(20).run(|| {
+        run(&spec, &arch, &profile, Target::Pallas).unwrap()
+    });
+    let target = std::time::Duration::from_millis(50);
+    println!(
+        "full pipeline mean {:?} — target {:?}: {}",
+        report.mean,
+        target,
+        if report.mean < target { "MET" } else { "MISSED" }
+    );
+}

@@ -1,0 +1,58 @@
+//! PJRT runtime benches: artifact compile time and steady-state execute
+//! latency/throughput for the serving shapes. Requires `make artifacts`.
+//! Reported TFLOPS here are CPU-interpret numbers — structural only; the
+//! GPU estimates come from the perf model (DESIGN.md §2).
+
+use std::path::PathBuf;
+
+use qimeng::runtime::registry::{AttnSignature, Registry};
+use qimeng::util::bench::{fmt_rate, Bench};
+use qimeng::util::prng::Rng;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping runtime benches: run `make artifacts` first");
+        return;
+    }
+    let reg = Registry::open(&dir).expect("open registry");
+
+    // Compile-time bench on a fresh registry each iteration.
+    let first_id = reg.attention_metas().next().unwrap().id.clone();
+    Bench::new("artifact_compile_cold").samples(5).warmup(0).run(|| {
+        let fresh = Registry::open(&dir).unwrap();
+        fresh.executable(&first_id).unwrap()
+    });
+
+    // Steady-state execution for a representative artifact per variant.
+    for meta in reg.attention_metas() {
+        let sig = AttnSignature::from_meta(meta).unwrap();
+        if sig.batch != 1 || !sig.causal {
+            continue;
+        }
+        let exe = reg.executable(&meta.id).unwrap();
+        let mut rng = Rng::new(7);
+        let mut gen = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+        };
+        let q = gen(sig.batch * sig.q_heads * sig.seq * sig.qk_dim);
+        let k = gen(sig.batch * sig.kv_heads * sig.kv * sig.qk_dim);
+        let v = gen(sig.batch * sig.kv_heads * sig.kv * sig.v_dim);
+        let qs = [sig.batch as i64, sig.q_heads as i64, sig.seq as i64, sig.qk_dim as i64];
+        let ks = [sig.batch as i64, sig.kv_heads as i64, sig.kv as i64, sig.qk_dim as i64];
+        let vs = [sig.batch as i64, sig.kv_heads as i64, sig.kv as i64, sig.v_dim as i64];
+        let report = Bench::new(format!("execute_{}", meta.id)).samples(10).run(|| {
+            reg.runtime
+                .execute_f32(&exe, &[(&q, &qs), (&k, &ks), (&v, &vs)])
+                .unwrap()
+        });
+        // Effective attention FLOPs through the CPU backend.
+        let flops = 2.0
+            * (sig.batch * sig.q_heads * sig.seq * sig.kv * (sig.qk_dim + sig.v_dim)) as f64
+            * if sig.causal { 0.5 } else { 1.0 };
+        println!(
+            "  -> {} attention-flops/s (CPU interpret path)",
+            fmt_rate(flops / report.mean.as_secs_f64())
+        );
+    }
+}

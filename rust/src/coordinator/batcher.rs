@@ -1,0 +1,189 @@
+//! Dynamic signature batcher (vLLM-style, specialized to fixed-shape AOT
+//! executables).
+//!
+//! Requests are grouped by [`FamilyKey`]; each family has a set of
+//! compiled batch capacities (the artifact batch sizes from the AOT
+//! manifest, e.g. {1, 4}). The planner packs queued requests into batches
+//! that (a) never mix families, (b) never exceed a compiled capacity, and
+//! (c) prefer the largest capacity that can be filled, falling back to
+//! padded execution for stragglers once their deadline expires.
+//!
+//! The planning logic is pure (no PJRT, no channels) so its invariants
+//! are property-tested in `rust/tests/proptest_batcher.rs`.
+
+use std::collections::BTreeMap;
+
+use super::request::FamilyKey;
+
+/// A planned execution batch: indices into the pending queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub family: FamilyKey,
+    /// Capacity of the executable to use (compiled batch size).
+    pub capacity: usize,
+    /// Queue indices of the requests packed into this batch
+    /// (len <= capacity; the gap is zero-padding).
+    pub members: Vec<usize>,
+}
+
+impl BatchPlan {
+    pub fn padding(&self) -> usize {
+        self.capacity - self.members.len()
+    }
+}
+
+/// Plan batches over the pending queue.
+///
+/// * `pending`: (queue index, family, waited-past-deadline) per request.
+/// * `capacities`: compiled batch sizes per family (sorted ascending).
+///
+/// Full batches (filling the largest capacity) are always emitted.
+/// Partial batches are emitted only when at least one member is past its
+/// batching deadline — otherwise requests keep waiting for peers.
+pub fn plan_batches(
+    pending: &[(usize, FamilyKey, bool)],
+    capacities: &BTreeMap<FamilyKey, Vec<usize>>,
+) -> Vec<BatchPlan> {
+    let mut by_family: BTreeMap<&FamilyKey, Vec<(usize, bool)>> = BTreeMap::new();
+    for (idx, fam, expired) in pending {
+        by_family.entry(fam).or_default().push((*idx, *expired));
+    }
+
+    let mut plans = Vec::new();
+    for (fam, mut reqs) in by_family {
+        let Some(caps) = capacities.get(fam) else {
+            continue; // no executable for this family; router rejects upstream
+        };
+        let max_cap = *caps.iter().max().unwrap_or(&1);
+        // FIFO order.
+        reqs.sort_by_key(|(idx, _)| *idx);
+        let mut cursor = 0;
+        while cursor < reqs.len() {
+            let remaining = reqs.len() - cursor;
+            if remaining >= max_cap {
+                // Full batch at max capacity.
+                plans.push(BatchPlan {
+                    family: fam.clone(),
+                    capacity: max_cap,
+                    members: reqs[cursor..cursor + max_cap].iter().map(|r| r.0).collect(),
+                });
+                cursor += max_cap;
+                continue;
+            }
+            // Partial tail: flush only if someone expired.
+            let any_expired = reqs[cursor..].iter().any(|(_, e)| *e);
+            if !any_expired {
+                break;
+            }
+            // Smallest capacity that fits the tail (pad if none smaller).
+            let cap = caps
+                .iter()
+                .copied()
+                .find(|c| *c >= remaining)
+                .unwrap_or(max_cap);
+            let take = remaining.min(cap);
+            plans.push(BatchPlan {
+                family: fam.clone(),
+                capacity: cap,
+                members: reqs[cursor..cursor + take].iter().map(|r| r.0).collect(),
+            });
+            cursor += take;
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::AttnVariant;
+
+    fn fam(variant: AttnVariant, seq: usize) -> FamilyKey {
+        FamilyKey {
+            variant,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq,
+            kv: seq,
+        }
+    }
+
+    fn caps(fams: &[&FamilyKey]) -> BTreeMap<FamilyKey, Vec<usize>> {
+        fams.iter().map(|f| ((*f).clone(), vec![1, 4])).collect()
+    }
+
+    #[test]
+    fn full_batches_emitted_immediately() {
+        let f = fam(AttnVariant::Mha, 256);
+        let pending: Vec<_> = (0..8).map(|i| (i, f.clone(), false)).collect();
+        let plans = plan_batches(&pending, &caps(&[&f]));
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.capacity == 4 && p.members.len() == 4));
+    }
+
+    #[test]
+    fn partial_waits_until_deadline() {
+        let f = fam(AttnVariant::Mha, 256);
+        let pending: Vec<_> = (0..2).map(|i| (i, f.clone(), false)).collect();
+        assert!(plan_batches(&pending, &caps(&[&f])).is_empty());
+        let pending: Vec<_> = (0..2).map(|i| (i, f.clone(), i == 0)).collect();
+        let plans = plan_batches(&pending, &caps(&[&f]));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].members, vec![0, 1]);
+        assert_eq!(plans[0].capacity, 4);
+        assert_eq!(plans[0].padding(), 2);
+    }
+
+    #[test]
+    fn single_expired_request_uses_smallest_capacity() {
+        let f = fam(AttnVariant::Mha, 256);
+        let pending = vec![(0, f.clone(), true)];
+        let plans = plan_batches(&pending, &caps(&[&f]));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].capacity, 1);
+        assert_eq!(plans[0].padding(), 0);
+    }
+
+    #[test]
+    fn families_never_mix() {
+        let f1 = fam(AttnVariant::Mha, 256);
+        let f2 = fam(AttnVariant::Gqa, 256);
+        let mut pending = Vec::new();
+        for i in 0..3 {
+            pending.push((i * 2, f1.clone(), true));
+            pending.push((i * 2 + 1, f2.clone(), true));
+        }
+        let plans = plan_batches(&pending, &caps(&[&f1, &f2]));
+        for p in &plans {
+            let expect = &p.family;
+            for m in &p.members {
+                let fam_of_m = &pending.iter().find(|(i, _, _)| i == m).unwrap().1;
+                assert_eq!(fam_of_m, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_skipped() {
+        let f1 = fam(AttnVariant::Mha, 256);
+        let f2 = fam(AttnVariant::Mla, 512);
+        let pending = vec![(0, f2.clone(), true)];
+        assert!(plan_batches(&pending, &caps(&[&f1])).is_empty());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let f = fam(AttnVariant::Mha, 256);
+        let pending: Vec<_> = [5usize, 1, 3, 2, 4, 0, 7, 6]
+            .iter()
+            .map(|i| (*i, f.clone(), false))
+            .collect();
+        let plans = plan_batches(&pending, &caps(&[&f]));
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].members, vec![0, 1, 2, 3]);
+        assert_eq!(plans[1].members, vec![4, 5, 6, 7]);
+    }
+}

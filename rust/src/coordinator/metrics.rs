@@ -1,0 +1,101 @@
+//! Serving metrics: request counts, batch occupancy, latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub errors: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> Option<Duration> {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * p).round() as usize;
+        Some(Duration::from_micros(v[idx]))
+    }
+
+    pub fn mean_latency(&self) -> Option<Duration> {
+        let v = self.latencies_us.lock().unwrap();
+        if v.is_empty() {
+            return None;
+        }
+        Some(Duration::from_micros(v.iter().sum::<u64>() / v.len() as u64))
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.responses.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} occupancy={:.2} padded={} errors={} \
+             latency mean={:?} p50={:?} p95={:?}",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_occupancy(),
+            self.padded_slots.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.mean_latency().unwrap_or_default(),
+            self.latency_percentile(0.5).unwrap_or_default(),
+            self.latency_percentile(0.95).unwrap_or_default(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.latency_percentile(0.0).unwrap(), Duration::from_micros(100));
+        assert_eq!(m.latency_percentile(1.0).unwrap(), Duration::from_micros(500));
+        assert_eq!(m.latency_percentile(0.5).unwrap(), Duration::from_micros(300));
+        assert_eq!(m.mean_latency().unwrap(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let m = Metrics::new();
+        m.responses.store(12, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        assert!((m.mean_occupancy() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert!(m.latency_percentile(0.5).is_none());
+        assert_eq!(m.mean_occupancy(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

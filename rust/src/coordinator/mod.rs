@@ -1,0 +1,124 @@
+//! L3 serving coordinator: request router + dynamic signature batcher +
+//! PJRT execution loop.
+//!
+//! The paper's contribution lives in the generation pipeline (L2/L1), so
+//! per DESIGN.md the coordinator is the serving shell around the compiled
+//! operators: it routes attention requests to the right AOT artifact,
+//! packs same-signature requests into batched executions (vLLM-style,
+//! specialized to fixed-shape executables), and reports latency /
+//! throughput / occupancy metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use request::{AttnRequest, AttnResponse, FamilyKey};
+pub use service::{Coordinator, ServeConfig};
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::util::cli::Args;
+
+/// Outcome of a serving run (used by `tlc serve`, the E2E example and the
+/// coordinator bench).
+#[derive(Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub mean_latency: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub mean_occupancy: f64,
+    pub metrics_summary: String,
+}
+
+/// Drive a synthetic request stream through a coordinator and collect the
+/// report. Requests are submitted following their arrival offsets
+/// (time-compressed by `speedup` — 1.0 replays in real time).
+pub fn run_stream(
+    coordinator: &Coordinator,
+    stream: &[crate::workload::SyntheticRequest],
+    speedup: f64,
+) -> ServeReport {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(stream.len());
+    for req in stream {
+        let due = Duration::from_secs_f64(req.arrival.as_secs_f64() / speedup);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        let (q, k, v) = req.payload();
+        rxs.push(coordinator.submit(req.family.clone(), q, k, v));
+    }
+    let mut ok = 0;
+    let mut errors = 0;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    let m = &coordinator.metrics;
+    ServeReport {
+        requests: stream.len(),
+        ok,
+        errors,
+        wall,
+        throughput_rps: ok as f64 / wall.as_secs_f64(),
+        mean_latency: m.mean_latency().unwrap_or_default(),
+        p50: m.latency_percentile(0.5).unwrap_or_default(),
+        p95: m.latency_percentile(0.95).unwrap_or_default(),
+        mean_occupancy: m.mean_occupancy(),
+        metrics_summary: m.summary(),
+    }
+}
+
+/// `tlc serve`: stand up the coordinator on the AOT artifacts and push a
+/// synthetic stream through it.
+pub fn cli_serve(args: &Args) -> Result<(), String> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n = args.get_usize("requests", 64)?;
+    let rate = args
+        .get("rate-hz")
+        .map(|v| v.parse::<f64>().map_err(|_| "bad --rate-hz".to_string()))
+        .transpose()?
+        .unwrap_or(200.0);
+    let window_ms = args.get_usize("window-ms", 5)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    args.finish()?;
+
+    let coordinator = Coordinator::start(ServeConfig {
+        artifacts_dir: artifacts,
+        batch_window: Duration::from_millis(window_ms as u64),
+    })
+    .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "coordinator up: {} servable attention families",
+        coordinator.families.len()
+    );
+    let stream = crate::workload::request_stream(&coordinator.families, n, rate, seed);
+    let report = run_stream(&coordinator, &stream, 1.0);
+    println!(
+        "served {} requests in {:.2?}: {} ok, {} errors",
+        report.requests, report.wall, report.ok, report.errors
+    );
+    println!(
+        "throughput {:.1} req/s; latency mean {:.2?} p50 {:.2?} p95 {:.2?}; \
+         mean batch occupancy {:.2}",
+        report.throughput_rps,
+        report.mean_latency,
+        report.p50,
+        report.p95,
+        report.mean_occupancy
+    );
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Request/response types for the attention-serving coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::sketch::spec::AttnVariant;
+
+/// The routing key: everything that identifies a kernel family + problem
+/// shape except the batch dimension (which the batcher chooses).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FamilyKey {
+    pub variant: AttnVariant,
+    pub causal: bool,
+    pub qk_dim: usize,
+    pub v_dim: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub seq: usize,
+    pub kv: usize,
+}
+
+impl FamilyKey {
+    /// Element counts per single request.
+    pub fn q_len(&self) -> usize {
+        self.q_heads * self.seq * self.qk_dim
+    }
+
+    pub fn k_len(&self) -> usize {
+        self.kv_heads * self.kv * self.qk_dim
+    }
+
+    pub fn v_len(&self) -> usize {
+        self.kv_heads * self.kv * self.v_dim
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.q_heads * self.seq * self.v_dim
+    }
+}
+
+/// One attention request: per-request Q/K/V (batch dim 1).
+pub struct AttnRequest {
+    pub id: u64,
+    pub family: FamilyKey,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<AttnResponse>,
+}
+
+#[derive(Debug)]
+pub struct AttnResponse {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// Queueing + execution time.
+    pub latency: std::time::Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_lengths() {
+        let f = FamilyKey {
+            variant: AttnVariant::Gqa,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 8,
+            kv_heads: 2,
+            seq: 256,
+            kv: 256,
+        };
+        assert_eq!(f.q_len(), 8 * 256 * 64);
+        assert_eq!(f.k_len(), 2 * 256 * 64);
+        assert_eq!(f.out_len(), 8 * 256 * 64);
+    }
+}

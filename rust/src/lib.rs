@@ -1,0 +1,41 @@
+//! # QiMeng-Attention (reproduction)
+//!
+//! Reproduction of *QiMeng-Attention: SOTA Attention Operator is generated
+//! by SOTA Attention Algorithm* (Zhou et al., ACL 2025 Findings) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution is a code-generation pipeline built around
+//! **LLM-TL**, an abstract "thinking language" with `Copy` / `Compute`
+//! statements describing the execution flow of attention on a GPU, and a
+//! two-stage workflow:
+//!
+//! 1. **TL Code generation** — sketch generation ([`sketch`]) followed by
+//!    parameter analysis & reasoning ([`reasoner`]);
+//! 2. **TL Code translation** — lowering TL to a concrete backend
+//!    ([`translate`]): a runnable Pallas kernel (TPU adaptation) or a
+//!    CuTe-like CUDA rendering (as in the paper).
+//!
+//! Around the pipeline this crate provides the verifier and numeric TL
+//! interpreter ([`verify`]), the analytical GPU performance model used to
+//! regenerate the paper's tables ([`perfmodel`]), the PJRT runtime that
+//! loads AOT-compiled artifacts ([`runtime`]), and the serving coordinator
+//! ([`coordinator`]).
+//!
+//! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in this
+//! environment) and the experiment index.
+
+pub mod coordinator;
+pub mod perfmodel;
+pub mod pipeline;
+pub mod reasoner;
+pub mod report;
+pub mod runtime;
+pub mod sketch;
+pub mod tl;
+pub mod translate;
+pub mod util;
+pub mod verify;
+pub mod workload;
+
+pub use sketch::spec::{AttnVariant, OpSpec};
+pub use tl::ast::TlProgram;

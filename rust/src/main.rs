@@ -1,0 +1,239 @@
+//! `tlc` — the QiMeng-Attention pipeline CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   generate      run the full pipeline for one operator, print/emit code
+//!   generate-all  emit the standard kernel set into python/compile/kernels/generated/
+//!   verify        run stage 1a+1b and the verification gate, print report
+//!   ablate        single-stage ablation (Appendix B): show rejected TL
+//!   tables        regenerate a paper table/figure from the perf model
+//!   serve         start the attention-serving coordinator (PJRT runtime)
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::pipeline::{self, Target};
+use qimeng::reasoner::profiles::{FailureMode, LlmProfile};
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::tl::printer::print_program;
+use qimeng::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("tlc: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(String::as_str) {
+        Some("generate") => cmd_generate(&args),
+        Some("generate-all") => cmd_generate_all(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => Err(format!("unknown subcommand `{other}`")),
+        None => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+tlc — QiMeng-Attention (ACL 2025) reproduction pipeline
+
+USAGE: tlc <generate|generate-all|verify|ablate|tables|serve> [flags]
+
+  generate     --variant mha|gqa|mqa|mla [--seq N] [--head-dim 64|128]
+               [--causal] [--target a100|rtx8000|t4|l40s]
+               [--llm deepseek-v3|deepseek-r1|claude-3.5|gpt-4o|gpt-4o+v3]
+               [--backend pallas|cute] [--out FILE] [--show sketch|tl|all]
+  generate-all [--out-dir python/compile/kernels/generated]
+  verify       same operator flags as generate
+  ablate       --failure reshape|gemm [operator flags]
+  tables       --table 1|2|3|4|5|6|7|8|9 | --figure 1 | --all
+  serve        [--artifacts artifacts] [--requests N] [--batch N]
+";
+
+fn spec_from(args: &Args) -> Result<OpSpec, String> {
+    let variant = AttnVariant::parse(args.get_or("variant", "mha"))
+        .ok_or("bad --variant (mha|gqa|mqa|mla|nsa)")?;
+    let seq = args.get_usize("seq", 1024)?;
+    let head_dim = args.get_usize("head-dim", 64)?;
+    let causal = args.get_bool("causal");
+    Ok(match variant {
+        AttnVariant::Mla => OpSpec::mla(seq, true),
+        AttnVariant::Nsa => OpSpec::nsa(seq),
+        _ => OpSpec::benchmark(variant, seq, head_dim, causal),
+    })
+}
+
+fn arch_from(args: &Args) -> Result<GpuArch, String> {
+    let name = args.get_or("target", "a100");
+    GpuArch::by_name(name).ok_or_else(|| format!("unknown --target `{name}`"))
+}
+
+fn profile_from(args: &Args) -> Result<LlmProfile, String> {
+    Ok(match args.get_or("llm", "deepseek-v3").to_ascii_lowercase().as_str() {
+        "deepseek-v3" | "v3" => LlmProfile::deepseek_v3(),
+        "deepseek-r1" | "r1" => LlmProfile::deepseek_r1(),
+        "claude-3.5" | "claude" => LlmProfile::claude35(),
+        "gpt-4o" | "4o" => LlmProfile::gpt4o(),
+        "gpt-4o+v3" | "4o+v3" => LlmProfile::gpt4o_plus_v3(),
+        other => return Err(format!("unknown --llm `{other}`")),
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    let spec = spec_from(args)?;
+    let arch = arch_from(args)?;
+    let profile = profile_from(args)?;
+    let backend = match args.get_or("backend", "pallas") {
+        "pallas" => Target::Pallas,
+        "cute" => Target::Cute,
+        other => return Err(format!("unknown --backend `{other}`")),
+    };
+    let show = args.get_or("show", "code").to_string();
+    let out = args.get("out").map(String::from);
+    args.finish()?;
+
+    let result =
+        pipeline::run(&spec, &arch, &profile, backend).map_err(|e| e.to_string())?;
+    if show == "sketch" || show == "all" {
+        println!("==== TL Sketch ({} stmts) ====", result.sketch.stmt_count());
+        println!("{}", print_program(&result.sketch));
+    }
+    if show == "tl" || show == "all" {
+        println!("==== TL Code ({} stmts) ====", result.reasoned.program.stmt_count());
+        println!("{}", print_program(&result.reasoned.program));
+    }
+    let source = result.source.unwrap();
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &source).map_err(|e| format!("write {path}: {e}"))?;
+            eprintln!(
+                "wrote {path} ({} lines); pipeline {:.2?}; tiling BM={} BN={} smem={}B",
+                source.lines().count(),
+                result.timings.total(),
+                result.reasoned.tiling.bm,
+                result.reasoned.tiling.bn,
+                result.reasoned.tiling.smem_bytes,
+            );
+        }
+        None => {
+            if show == "code" || show == "all" {
+                println!("{source}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The standard kernel set consumed by `python/compile/aot.py`: every
+/// (variant, head-dim, causal) family of the paper's main tables plus MLA.
+pub fn standard_kernel_set() -> Vec<OpSpec> {
+    let mut specs = Vec::new();
+    for variant in [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa] {
+        for head_dim in [64, 128] {
+            for causal in [false, true] {
+                specs.push(OpSpec::benchmark(variant, 1024, head_dim, causal));
+            }
+        }
+    }
+    specs.push(OpSpec::mla(1024, true));
+    specs
+}
+
+fn cmd_generate_all(args: &Args) -> Result<(), String> {
+    let out_dir = args.get_or("out-dir", "python/compile/kernels/generated").to_string();
+    let arch = arch_from(args)?;
+    let profile = profile_from(args)?;
+    args.finish()?;
+
+    std::fs::create_dir_all(&out_dir).map_err(|e| format!("mkdir {out_dir}: {e}"))?;
+    let mut manifest = String::from("# kernels emitted by `tlc generate-all`\n");
+    let mut init = String::from(
+        "\"\"\"AUTO-GENERATED kernel package (tlc generate-all). DO NOT EDIT.\"\"\"\n",
+    );
+    let specs = standard_kernel_set();
+    let n = specs.len();
+    for spec in &specs {
+        let result = pipeline::run(spec, &arch, &profile, Target::Pallas)
+            .map_err(|e| format!("{}: {e}", spec.kernel_name()))?;
+        let name = spec.kernel_name();
+        let path = format!("{out_dir}/{name}.py");
+        std::fs::write(&path, result.source.unwrap())
+            .map_err(|e| format!("write {path}: {e}"))?;
+        manifest.push_str(&format!(
+            "{name} bm={} bn={} verify_diff={:.3e}\n",
+            result.reasoned.tiling.bm,
+            result.reasoned.tiling.bn,
+            result.verify.max_abs_diff.unwrap_or(f32::NAN),
+        ));
+        init.push_str(&format!("from . import {name}  # noqa: F401\n"));
+        eprintln!(
+            "generated {name}: BM={} BN={} verified diff {:.2e} in {:.1?}",
+            result.reasoned.tiling.bm,
+            result.reasoned.tiling.bn,
+            result.verify.max_abs_diff.unwrap_or(f32::NAN),
+            result.timings.total()
+        );
+    }
+    std::fs::write(format!("{out_dir}/MANIFEST.txt"), manifest)
+        .map_err(|e| format!("write manifest: {e}"))?;
+    std::fs::write(format!("{out_dir}/__init__.py"), init)
+        .map_err(|e| format!("write __init__: {e}"))?;
+    eprintln!("generated {n} kernels into {out_dir}");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let spec = spec_from(args)?;
+    let arch = arch_from(args)?;
+    let profile = profile_from(args)?;
+    args.finish()?;
+    match pipeline::run(&spec, &arch, &profile, Target::Pallas) {
+        Ok(r) => {
+            println!(
+                "PASS {}: diagnostics 0, numeric probe max|diff| = {:.3e} (tol {:.0e})",
+                spec.kernel_name(),
+                r.verify.max_abs_diff.unwrap_or(f32::NAN),
+                qimeng::verify::NUMERIC_TOL,
+            );
+            Ok(())
+        }
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+fn cmd_ablate(args: &Args) -> Result<(), String> {
+    let spec = spec_from(args)?;
+    let arch = arch_from(args)?;
+    let failure = match args.get_or("failure", "reshape") {
+        "reshape" => FailureMode::ReshapeOmission,
+        "gemm" => FailureMode::GemmLayoutError,
+        other => return Err(format!("unknown --failure `{other}` (reshape|gemm)")),
+    };
+    args.finish()?;
+    let profile = LlmProfile::single_stage(LlmProfile::deepseek_v3(), failure);
+    match pipeline::run(&spec, &arch, &profile, Target::Pallas) {
+        Err(e) => {
+            println!("single-stage generation rejected (as in paper Appendix B):\n{e}");
+            Ok(())
+        }
+        Ok(_) => Err("ablation unexpectedly passed verification".into()),
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    qimeng::report::cli_tables(args)
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    qimeng::coordinator::cli_serve(args)
+}

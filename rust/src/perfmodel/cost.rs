@@ -1,0 +1,326 @@
+//! Analytical cost model: prices an attention *schedule* on a GPU
+//! descriptor and reports achieved TFLOPS the way the paper's tables do.
+//!
+//! Structure (validated against the paper's own measurements — see
+//! `report::paper` for the anchor comparison tests):
+//!
+//! * **Fused (flash-style) schedules**: each (batch, head, q-block)
+//!   thread block visits `nkv` KV tiles (halved by causal block
+//!   skipping); per-tile cost = two mma GEMMs at a calibrated pipeline
+//!   efficiency + the exposed (non-overlapped) softmax/mask work on CUDA
+//!   cores; plus an epilogue worth ~`c_epi` KV-tile iterations — this
+//!   epilogue amortization is what makes TFLOPS rise with sequence
+//!   length in every column of Table 1.
+//! * **Unfused (torch-style) schedules**: bandwidth-bound on the
+//!   materialized f32 score/probability matrices. Fitting the paper's
+//!   vanilla rows gives a remarkably consistent ~16.5 effective passes
+//!   over S across A100/RTX8000/T4 (eager softmax chains), which this
+//!   model adopts; OOM is declared when the intermediates exceed device
+//!   memory, reproducing the paper's OOM cells exactly.
+//!
+//! Calibration: one mma-efficiency scalar per (schedule kind, GPU
+//! generation, head-dim bucket), anchored at the paper's seq=16k causal
+//! measurements; everything else (the other five sequence lengths,
+//! non-causal, crossovers, OOM) is *predicted* by the model.
+
+use super::gpu::GpuArch;
+use crate::sketch::spec::OpSpec;
+
+/// Schedule kind — determines the calibration row and structural path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedKind {
+    /// The paper's pipeline output (DeepSeek-V3 + Ours by default).
+    Ours,
+    OursFp8,
+    FlashV2,
+    FlashV1,
+    CuDnn,
+    FlexAttention,
+    /// Unfused vanilla-LLM (torch eager) implementation.
+    TorchNaive,
+    /// DeepSeek's open-source torch MLA (einsum chain, better than eager).
+    TorchMla,
+    /// Chain-of-thought CUDA-core kernel (Table 5): no Tensor Cores.
+    CotCuda,
+}
+
+/// A fully-parameterized schedule to price.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: SchedKind,
+    pub name: String,
+    pub bm: usize,
+    pub bn: usize,
+    pub tensor_core: bool,
+    /// Single fused pass (no S materialization in HBM).
+    pub fused: bool,
+    /// Causal block skipping (visit only the lower-triangular KV tiles).
+    pub causal_block_skip: bool,
+    /// Fraction of softmax/pointwise time hidden under the mma pipeline.
+    pub softmax_overlap: f64,
+    /// Epilogue + prologue cost in units of KV-tile iterations.
+    pub c_epi: f64,
+    /// Calibrated mma pipeline efficiency (fraction of peak TC FLOPS).
+    pub mma_eff: f64,
+    /// Unfused only: effective f32 passes over the S matrix.
+    pub unfused_passes: f64,
+}
+
+/// Model output for one (spec, arch, schedule) cell.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub seconds: f64,
+    /// Achieved TFLOPS using the paper's FLOP formula (0 when OOM).
+    pub tflops: f64,
+    pub dram_gb: f64,
+    pub oom: bool,
+}
+
+impl Estimate {
+    pub fn oom() -> Self {
+        Estimate { seconds: f64::INFINITY, tflops: 0.0, dram_gb: 0.0, oom: true }
+    }
+}
+
+const KERNEL_LAUNCH_S: f64 = 5e-6;
+
+/// Mean number of KV tiles visited per q-block under causal block
+/// skipping: mean over q-blocks of ceil((i+1)*BM / BN).
+fn mean_causal_kv_tiles(seq: usize, kv: usize, bm: usize, bn: usize) -> f64 {
+    let nqb = (seq / bm).max(1);
+    let mut total = 0.0;
+    for i in 0..nqb {
+        let tiles = (((i + 1) * bm + bn - 1) / bn).min(kv / bn.max(1));
+        total += tiles as f64;
+    }
+    total / nqb as f64
+}
+
+/// Price one cell.
+pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
+    let b = spec.batch as f64;
+    let h = spec.num_q_heads as f64;
+    let s = spec.seq_len as f64;
+    let kv = spec.kv_len as f64;
+    let e = spec.dtype.bytes() as f64;
+    let gemm_width = (spec.qk_dim() + spec.v_head_dim) as f64;
+
+    // ---- OOM check for unfused schedules ----
+    // Peak live set in eager torch: the f16 score matrix S plus the f32
+    // softmax output held simultaneously = 6 bytes per score element.
+    // This single rule reproduces every OOM cell of Tables 1 and 7
+    // (RTX8000@16k-hd64, T4@{8k,16k}-hd64, T4@16k-hd128, A100 never).
+    if !sched.fused {
+        let intermediates = b * h * s * kv * 6.0;
+        let weights_inputs = spec.io_bytes() as f64;
+        if intermediates + weights_inputs > arch.mem_gib * 1024.0 * 1024.0 * 1024.0 {
+            return Estimate::oom();
+        }
+    }
+
+    let reported_flops = spec.flops();
+
+    if !sched.fused {
+        // Bandwidth-bound unfused path. A causal mask in eager torch
+        // materializes the mask tensor and runs `where`, nearly doubling
+        // the S-matrix traffic (this reproduces the paper's ~4x gap
+        // between the causal and non-causal vanilla rows).
+        let mask_factor =
+            if spec.causal && sched.kind == SchedKind::TorchNaive { 1.9 } else { 1.0 };
+        let s_bytes = b * h * s * kv * 4.0;
+        let traffic = spec.io_bytes() as f64 + sched.unfused_passes * mask_factor * s_bytes;
+        let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
+        // Compute floor (matmuls still run, on TC or CUDA cores).
+        let peak = if sched.tensor_core {
+            arch.tc_tflops(spec.dtype.bytes()) * 1e12
+        } else {
+            arch.cuda_tflops_f32 * 1e12
+        };
+        // Unfused computes the full rectangle even under a causal mask.
+        let executed = 2.0 * b * s * kv * h * gemm_width;
+        let mut t_compute = executed / (peak * sched.mma_eff);
+        // MLA: the latent KV decompression einsums are extra GEMM work
+        // proportional to total tokens (constant across the sweep — this
+        // is what makes the torch-MLA row of Table 2 rise with seq).
+        if spec.latent_dim > 0 {
+            let decompress = 2.0
+                * b
+                * kv
+                * spec.latent_dim as f64
+                * h
+                * (spec.head_dim + spec.v_head_dim) as f64;
+            t_compute += decompress / (peak * 0.5);
+        }
+        let seconds = t_mem + t_compute + KERNEL_LAUNCH_S * 8.0;
+        return Estimate {
+            seconds,
+            tflops: reported_flops / seconds / 1e12,
+            dram_gb: traffic / 1e9,
+            oom: false,
+        };
+    }
+
+    // ---- fused flash-style path ----
+    let bm = sched.bm.min(spec.seq_len).max(1);
+    let bn = sched.bn.min(spec.kv_len).max(1);
+    let nqb = (spec.seq_len / bm).max(1) as f64;
+    let blocks = b * h * nqb;
+
+    let nkv = if spec.causal && sched.causal_block_skip {
+        mean_causal_kv_tiles(spec.seq_len, spec.kv_len, bm, bn)
+    } else {
+        kv / bn as f64
+    };
+
+    // Per-KV-tile mma work (both GEMMs). Times are aggregate: total tile
+    // work over the whole-GPU peak (full occupancy assumed; the paper's
+    // grids always have thousands of thread blocks for 108 SMs).
+    let tile_flops = 2.0 * (bm * bn) as f64 * gemm_width;
+    let peak_tc = if sched.tensor_core {
+        arch.tc_tflops(spec.dtype.bytes()) * 1e12
+    } else {
+        arch.cuda_tflops_f32 * 1e12
+    };
+    let t_tile_mma = tile_flops / (peak_tc * sched.mma_eff);
+
+    // Softmax / mask / rescale on CUDA cores: ~5 f32 ops per score element
+    // (+2 for mask index math under causal).
+    let sm_ops_per_elem = if spec.causal { 7.0 } else { 5.0 };
+    let t_tile_sm = sm_ops_per_elem * (bm * bn) as f64
+        / (arch.cuda_tflops_f32 * 1e12)
+        * (1.0 - sched.softmax_overlap);
+
+    let t_block = (nkv + sched.c_epi) * (t_tile_mma + t_tile_sm);
+    let t_compute = blocks * t_block;
+
+    // DRAM traffic: Q + O once; K/V streamed per q-block with partial L2
+    // reuse (working set vs L2 capacity).
+    let q_bytes = b * h * s * spec.qk_dim() as f64 * e;
+    let o_bytes = b * h * s * spec.v_head_dim as f64 * e;
+    let kv_bytes_head = kv * gemm_width * e;
+    let kv_heads = (spec.batch * spec.num_kv_heads) as f64;
+    // Fraction of K/V rereads that miss L2: 0 when a head's K/V fits with
+    // room for the concurrently-active heads, -> 1 as it overflows.
+    let active = (arch.sm_count as f64 / nqb.max(1.0)).min(kv_heads).max(1.0);
+    let l2_pressure = (kv_bytes_head * active) / arch.l2_bytes as f64;
+    let miss = (l2_pressure / (1.0 + l2_pressure)).min(1.0);
+    let reread = 1.0 + (nqb - 1.0).max(0.0) * miss * if spec.causal { 0.5 } else { 1.0 };
+    let traffic = q_bytes + o_bytes + kv_bytes_head * kv_heads * reread;
+    let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
+
+    let seconds = t_compute.max(t_mem) + KERNEL_LAUNCH_S;
+    Estimate {
+        seconds,
+        tflops: reported_flops / seconds / 1e12,
+        dram_gb: traffic / 1e9,
+        oom: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::schedules;
+    use crate::sketch::spec::AttnVariant;
+
+    fn mha(seq: usize, hd: usize, causal: bool) -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, seq, hd, causal)
+    }
+
+    #[test]
+    fn causal_tile_mean() {
+        // BM=BN: q-block i visits i+1 tiles; mean over 4 blocks = 2.5.
+        assert!((mean_causal_kv_tiles(512, 512, 128, 128) - 2.5).abs() < 1e-9);
+        // BM=128, BN=64: q-block i visits 2(i+1) tiles; mean = 5.
+        assert!((mean_causal_kv_tiles(512, 512, 128, 64) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tflops_rise_with_sequence_length() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let mut prev = 0.0;
+        for seq in [512, 1024, 2048, 4096, 8192, 16384] {
+            let est = estimate(&mha(seq, 64, true), &arch, &sched);
+            assert!(
+                est.tflops > prev,
+                "TFLOPS must rise with seq: {} at {seq}",
+                est.tflops
+            );
+            prev = est.tflops;
+        }
+    }
+
+    #[test]
+    fn fused_never_oom_unfused_ooms_like_paper() {
+        // Paper Table 1: vanilla OOMs at 16k on RTX8000 (48 GB) but not on
+        // A100 (80 GB); fused never OOMs.
+        let spec = mha(16384, 64, true);
+        let rtx = GpuArch::rtx8000();
+        let a100 = GpuArch::a100();
+        let naive_rtx = estimate(&spec, &rtx, &schedules::torch_naive());
+        let naive_a100 = estimate(&spec, &a100, &schedules::torch_naive());
+        let ours_rtx =
+            estimate(&spec, &rtx, &schedules::ours(&rtx, 64, crate::tl::types::DType::F16));
+        assert!(naive_rtx.oom, "vanilla must OOM at 16k on RTX8000");
+        assert!(!naive_a100.oom, "vanilla survives on 80 GB A100");
+        assert!(!ours_rtx.oom);
+    }
+
+    #[test]
+    fn t4_vanilla_oom_pattern_matches_table7() {
+        // Table 7: hd64 vanilla OOMs at 8k & 16k; hd128 only at 16k.
+        let t4 = GpuArch::t4();
+        let naive = schedules::torch_naive();
+        assert!(!estimate(&mha(4096, 64, true), &t4, &naive).oom);
+        assert!(estimate(&mha(8192, 64, true), &t4, &naive).oom);
+        assert!(estimate(&mha(16384, 64, true), &t4, &naive).oom);
+        assert!(!estimate(&mha(8192, 128, true), &t4, &naive).oom);
+        assert!(estimate(&mha(16384, 128, true), &t4, &naive).oom);
+    }
+
+    #[test]
+    fn vanilla_is_bandwidth_bound_and_flat() {
+        let arch = GpuArch::a100();
+        let naive = schedules::torch_naive();
+        let a = estimate(&mha(1024, 64, true), &arch, &naive);
+        let b = estimate(&mha(8192, 64, true), &arch, &naive);
+        let ratio = a.tflops / b.tflops;
+        assert!((0.5..2.0).contains(&ratio), "vanilla should be roughly flat: {ratio}");
+        assert!(a.tflops < 15.0, "vanilla must be slow: {}", a.tflops);
+    }
+
+    #[test]
+    fn causal_block_skipping_wins_at_long_context() {
+        // The paper's headline causal speedups require the skip: compare
+        // ours against an identical schedule without skipping.
+        let arch = GpuArch::a100();
+        let spec = mha(16384, 64, true);
+        let ours = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let mut no_skip = ours.clone();
+        no_skip.causal_block_skip = false;
+        let with = estimate(&spec, &arch, &ours);
+        let without = estimate(&spec, &arch, &no_skip);
+        assert!(
+            with.tflops > 1.6 * without.tflops,
+            "skip {} vs no-skip {}",
+            with.tflops,
+            without.tflops
+        );
+    }
+
+    #[test]
+    fn estimates_are_finite_and_positive_across_grid() {
+        for arch in GpuArch::all() {
+            for spec in crate::workload::table1_grid(true) {
+                for sched in schedules::baselines(&arch, spec.head_dim, spec.dtype) {
+                    let est = estimate(&spec, &arch, &sched);
+                    if !est.oom {
+                        assert!(est.seconds.is_finite() && est.seconds > 0.0);
+                        assert!(est.tflops > 0.0, "{} on {}", sched.name, arch.name);
+                    }
+                }
+            }
+        }
+    }
+}

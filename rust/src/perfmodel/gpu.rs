@@ -1,0 +1,209 @@
+//! GPU architecture descriptors for the cards the paper evaluates on.
+//!
+//! These are the public datasheet numbers (peak Tensor-Core throughput,
+//! memory bandwidth, SM counts, shared-memory sizes). The stage-1b
+//! reasoner uses the shared-memory budget and Tensor-Core tile shape to
+//! pick `BM`/`BN`; the analytical performance model uses the full
+//! descriptor to price a TL schedule (DESIGN.md §2 explains why a machine
+//! model substitutes for the physical cards in this environment).
+
+use std::fmt;
+
+/// NVIDIA GPU generation (instruction set family). Determines which mma
+/// shapes CuTe can use and whether FlashAttention v2 is available (the
+/// official library does not support Turing — §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuGeneration {
+    Ampere,
+    Turing,
+    /// Ada Lovelace (L40S) — adds FP8 Tensor Cores (Table 6).
+    Ada,
+}
+
+/// One GPU target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    pub generation: GpuGeneration,
+    pub sm_count: usize,
+    /// SM boost clock in GHz.
+    pub clock_ghz: f64,
+    /// Peak dense Tensor-Core throughput for FP16 inputs with FP32
+    /// accumulate, in TFLOPS.
+    pub tc_tflops_f16: f64,
+    /// Peak FP8 Tensor-Core TFLOPS (0 when unsupported).
+    pub tc_tflops_f8: f64,
+    /// Peak non-TensorCore FP32 CUDA-core TFLOPS (softmax, exp, pointwise
+    /// run here).
+    pub cuda_tflops_f32: f64,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Shared memory per SM, bytes (configurable carve-out maximum).
+    pub smem_per_sm: usize,
+    /// Maximum shared memory a single thread block may use, bytes.
+    pub smem_per_block: usize,
+    /// Register file per SM, bytes.
+    pub regfile_per_sm: usize,
+    /// L2 cache size, bytes.
+    pub l2_bytes: usize,
+    /// Shared-memory bandwidth per SM, bytes/clock (for staging cost).
+    pub smem_bytes_per_clk: f64,
+    /// Device memory capacity, GiB (OOM modelling for the unfused
+    /// vanilla-LLM baseline).
+    pub mem_gib: f64,
+}
+
+impl GpuArch {
+    /// NVIDIA A100-SXM4-80GB (Ampere, the paper's primary card).
+    pub fn a100() -> Self {
+        GpuArch {
+            name: "A100",
+            generation: GpuGeneration::Ampere,
+            sm_count: 108,
+            clock_ghz: 1.41,
+            tc_tflops_f16: 312.0,
+            tc_tflops_f8: 0.0,
+            cuda_tflops_f32: 19.5,
+            mem_bw_gbs: 2039.0,
+            smem_per_sm: 164 * 1024,
+            smem_per_block: 163 * 1024,
+            regfile_per_sm: 256 * 1024,
+            l2_bytes: 40 * 1024 * 1024,
+            smem_bytes_per_clk: 128.0,
+            mem_gib: 80.0,
+        }
+    }
+
+    /// Quadro RTX 8000 (Turing). FlashAttention v2 does not support this
+    /// generation; the paper compares against flash-attn v1 here.
+    pub fn rtx8000() -> Self {
+        GpuArch {
+            name: "RTX8000",
+            generation: GpuGeneration::Turing,
+            sm_count: 72,
+            clock_ghz: 1.77,
+            tc_tflops_f16: 130.5,
+            tc_tflops_f8: 0.0,
+            cuda_tflops_f32: 16.3,
+            mem_bw_gbs: 672.0,
+            smem_per_sm: 64 * 1024,
+            smem_per_block: 64 * 1024,
+            regfile_per_sm: 256 * 1024,
+            l2_bytes: 6 * 1024 * 1024,
+            smem_bytes_per_clk: 64.0,
+            mem_gib: 48.0,
+        }
+    }
+
+    /// Tesla T4 (Turing, the paper's low-power card, Table 7).
+    pub fn t4() -> Self {
+        GpuArch {
+            name: "T4",
+            generation: GpuGeneration::Turing,
+            sm_count: 40,
+            clock_ghz: 1.59,
+            tc_tflops_f16: 65.0,
+            tc_tflops_f8: 0.0,
+            cuda_tflops_f32: 8.1,
+            mem_bw_gbs: 320.0,
+            smem_per_sm: 64 * 1024,
+            smem_per_block: 64 * 1024,
+            regfile_per_sm: 256 * 1024,
+            l2_bytes: 4 * 1024 * 1024,
+            smem_bytes_per_clk: 64.0,
+            mem_gib: 16.0,
+        }
+    }
+
+    /// L40S (Ada) — the FP8 case study of Table 6.
+    pub fn l40s() -> Self {
+        GpuArch {
+            name: "L40S",
+            generation: GpuGeneration::Ada,
+            sm_count: 142,
+            clock_ghz: 2.52,
+            tc_tflops_f16: 362.0,
+            tc_tflops_f8: 366.0,  // dense (733 is the 2:4-sparsity marketing number)
+            cuda_tflops_f32: 91.6,
+            mem_bw_gbs: 864.0,
+            smem_per_sm: 100 * 1024,
+            smem_per_block: 99 * 1024,
+            regfile_per_sm: 256 * 1024,
+            l2_bytes: 96 * 1024 * 1024,
+            smem_bytes_per_clk: 128.0,
+            mem_gib: 48.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(Self::a100()),
+            "rtx8000" => Some(Self::rtx8000()),
+            "t4" => Some(Self::t4()),
+            "l40s" => Some(Self::l40s()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Self> {
+        vec![Self::a100(), Self::rtx8000(), Self::t4(), Self::l40s()]
+    }
+
+    /// Peak Tensor-Core TFLOPS for a given element width (bytes).
+    pub fn tc_tflops(&self, dtype_bytes: usize) -> f64 {
+        match dtype_bytes {
+            1 if self.tc_tflops_f8 > 0.0 => self.tc_tflops_f8,
+            _ => self.tc_tflops_f16,
+        }
+    }
+
+    /// Does the official FlashAttention v2 support this generation?
+    /// (v2 requires Ampere+; on Turing the paper falls back to v1.)
+    pub fn supports_flash_v2(&self) -> bool {
+        !matches!(self.generation, GpuGeneration::Turing)
+    }
+}
+
+impl fmt::Display for GpuArch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ({:?}, {} SMs, {:.0} TFLOPS fp16-TC, {:.0} GB/s)",
+            self.name, self.generation, self.sm_count, self.tc_tflops_f16, self.mem_bw_gbs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuArch::by_name("A100").unwrap().name, "A100");
+        assert_eq!(GpuArch::by_name("rtx8000").unwrap().generation, GpuGeneration::Turing);
+        assert!(GpuArch::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn flash_v2_support_matches_paper() {
+        assert!(GpuArch::a100().supports_flash_v2());
+        assert!(!GpuArch::rtx8000().supports_flash_v2());
+        assert!(!GpuArch::t4().supports_flash_v2());
+    }
+
+    #[test]
+    fn fp8_only_on_ada() {
+        assert!(GpuArch::l40s().tc_tflops(1) > GpuArch::l40s().tc_tflops(2));
+        // Cards without FP8 fall back to the f16 path.
+        assert_eq!(GpuArch::a100().tc_tflops(1), GpuArch::a100().tc_tflops(2));
+    }
+
+    #[test]
+    fn rooflines_ordered_as_expected() {
+        // A100 > RTX8000 > T4 in both compute and bandwidth.
+        let (a, r, t) = (GpuArch::a100(), GpuArch::rtx8000(), GpuArch::t4());
+        assert!(a.tc_tflops_f16 > r.tc_tflops_f16 && r.tc_tflops_f16 > t.tc_tflops_f16);
+        assert!(a.mem_bw_gbs > r.mem_bw_gbs && r.mem_bw_gbs > t.mem_bw_gbs);
+    }
+}

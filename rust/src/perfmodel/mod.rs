@@ -1,0 +1,16 @@
+//! Analytical GPU performance model.
+//!
+//! Substitutes for the physical A100 / RTX8000 / T4 / L40S testbeds (see
+//! DESIGN.md §2): GPU descriptors ([`gpu`]), the schedule cost model
+//! ([`cost`]), per-implementation schedule presets ([`schedules`]) and
+//! the NSA latency model ([`nsa`]). The table renderers in
+//! [`crate::report`] drive this model to regenerate every table and
+//! figure of the paper's evaluation.
+
+pub mod cost;
+pub mod gpu;
+pub mod nsa;
+pub mod schedules;
+
+pub use cost::{estimate, Estimate, Schedule};
+pub use gpu::GpuArch;

@@ -1,0 +1,190 @@
+//! End-to-end generation pipeline: the paper's Figure-3 workflow as one
+//! callable unit.
+//!
+//! ```text
+//! OpSpec ──sketch──▶ TL Sketch ──reason──▶ TL Code ──verify──▶ backend ──▶ source
+//! ```
+//!
+//! Every run records per-stage wall-clock so the Table-4 development-cost
+//! comparison ("months → minutes"; here milliseconds) is measured, not
+//! asserted.
+
+use std::time::{Duration, Instant};
+
+use crate::perfmodel::gpu::GpuArch;
+use crate::reasoner::profiles::LlmProfile;
+use crate::reasoner::{self, Reasoned};
+use crate::sketch::{self, spec::OpSpec};
+use crate::tl::ast::TlProgram;
+use crate::translate::{cute::CuteBackend, pallas::PallasBackend, Backend};
+use crate::verify::{self, VerifyReport};
+
+/// Which backend to translate to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Pallas,
+    Cute,
+}
+
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub sketch: TlProgram,
+    pub reasoned: Reasoned,
+    pub verify: VerifyReport,
+    /// Emitted backend source (None if verification failed or the profile
+    /// cannot translate — the GPT-4o row of Table 3).
+    pub source: Option<String>,
+    pub timings: Timings,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Timings {
+    pub sketch: Duration,
+    pub reason: Duration,
+    pub verify: Duration,
+    pub translate: Duration,
+}
+
+impl Timings {
+    pub fn total(&self) -> Duration {
+        self.sketch + self.reason + self.verify + self.translate
+    }
+}
+
+#[derive(Debug)]
+pub enum PipelineError {
+    /// Verification rejected the TL Code (diagnostics inside).
+    VerifyFailed(VerifyReport),
+    /// The selected profile cannot run stage-2 translation (GPT-4o).
+    CannotTranslate(&'static str),
+    Translate(crate::translate::TranslateError),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::VerifyFailed(r) => {
+                write!(f, "verification failed:")?;
+                for d in &r.diagnostics {
+                    write!(f, "\n  {d}")?;
+                }
+                if let Some(diff) = r.max_abs_diff {
+                    write!(f, "\n  numeric probe max|diff| = {diff:e}")?;
+                }
+                Ok(())
+            }
+            PipelineError::CannotTranslate(name) => {
+                write!(f, "profile `{name}` cannot translate TL to backend code (Table 3)")
+            }
+            PipelineError::Translate(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// Run the full pipeline. Returns Ok even when verification fails only if
+/// `allow_unverified` (used by the ablation driver to show the rejected
+/// code); otherwise failures are errors.
+pub fn run(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    profile: &LlmProfile,
+    target: Target,
+) -> Result<PipelineResult, PipelineError> {
+    let t0 = Instant::now();
+    let sketch = sketch::generate_sketch(spec);
+    let t_sketch = t0.elapsed();
+
+    let t0 = Instant::now();
+    let reasoned = reasoner::reason(&sketch, spec, arch, profile);
+    let t_reason = t0.elapsed();
+
+    let t0 = Instant::now();
+    let report = verify::verify_program(&reasoned.program, spec.causal, 0xC0FFEE);
+    let t_verify = t0.elapsed();
+
+    if !report.passed {
+        return Err(PipelineError::VerifyFailed(report));
+    }
+    if !profile.can_translate {
+        return Err(PipelineError::CannotTranslate(profile.name));
+    }
+
+    let t0 = Instant::now();
+    let backend: &dyn Backend = match target {
+        Target::Pallas => &PallasBackend,
+        Target::Cute => &CuteBackend,
+    };
+    let source = backend.emit(&reasoned, spec, arch).map_err(PipelineError::Translate)?;
+    let t_translate = t0.elapsed();
+
+    Ok(PipelineResult {
+        sketch,
+        reasoned,
+        verify: report,
+        source: Some(source),
+        timings: Timings {
+            sketch: t_sketch,
+            reason: t_reason,
+            verify: t_verify,
+            translate: t_translate,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reasoner::profiles::FailureMode;
+    use crate::sketch::spec::AttnVariant;
+
+    #[test]
+    fn full_pipeline_produces_source() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+            .expect("pipeline");
+        assert!(r.source.unwrap().contains("pallas_call"));
+        assert!(r.verify.passed);
+    }
+
+    #[test]
+    fn pipeline_blocks_unverified_code() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::ReshapeOmission,
+        );
+        match run(&spec, &GpuArch::a100(), &p, Target::Pallas) {
+            Err(PipelineError::VerifyFailed(r)) => assert!(!r.diagnostics.is_empty()),
+            other => panic!("expected VerifyFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gpt4o_blocked_at_translation() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        match run(&spec, &GpuArch::a100(), &LlmProfile::gpt4o(), Target::Pallas) {
+            Err(PipelineError::CannotTranslate(name)) => assert_eq!(name, "GPT-4o"),
+            other => panic!("expected CannotTranslate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipeline_wall_clock_well_under_paper_budget() {
+        // Table 4: LLM-TL takes ~10 minutes with a live LLM; our rule
+        // engine must run in milliseconds (<50 ms per DESIGN.md §7).
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, 128, true);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_r1(), Target::Pallas)
+            .expect("pipeline");
+        // Debug builds run the O(n^3) verification probe unoptimized, so
+        // the bound here is generous; the release-mode target (<50 ms,
+        // DESIGN.md §7) is enforced by `cargo bench pipeline` and recorded
+        // in EXPERIMENTS.md §Perf.
+        assert!(
+            r.timings.total() < Duration::from_secs(10),
+            "pipeline too slow: {:?}",
+            r.timings.total()
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! "LLM" profiles — the generator personalities of the paper's ablations.
+//!
+//! The paper validates LLM-TL with GPT-4o, Claude 3.5, DeepSeek-V3 and
+//! DeepSeek-R1 (Table 3) and shows two failure classes when the two-stage
+//! generation is collapsed into one (Appendix B). In this reproduction the
+//! LLM is replaced by a deterministic rule engine (DESIGN.md §2); a
+//! profile selects which rules fire, reproducing the observable
+//! differences between models:
+//!
+//! * **DeepSeek-R1** — longest reasoning: cost-model tile search and
+//!   double-buffered prefetch (best Table-3 numbers).
+//! * **DeepSeek-V3** — heuristic tiles, prefetch on.
+//! * **Claude 3.5** — heuristic tiles, no prefetch (slightly lower).
+//! * **GPT-4o** — generates TL but fails CuTe translation ("-" rows in
+//!   Table 3; its training corpus predates CuTe maturity).
+//! * **GPT-4o + DeepSeek-V3** — GPT-4o's TL handed to V3's backend.
+//! * **single-stage** — the Appendix-B ablation: skipping the sketch makes
+//!   the generator omit the fusion `Reshape` (Listing 1) or drop the
+//!   formal transpose (Listing 2); the verifier must reject both.
+
+use super::tiling::TilingStrategy;
+
+/// Injected defect for the single-stage ablation (Appendix B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureMode {
+    /// Listing 1: no `Reshape` between the fused GEMMs.
+    ReshapeOmission,
+    /// Listing 2: `Compute GEMM Q, K and get S` — formal `.T` dropped.
+    GemmLayoutError,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmProfile {
+    pub name: &'static str,
+    pub tiling: TilingStrategy,
+    /// Emit the guarded next-tile prefetch (Listing 1 style) and assume
+    /// double-buffered staging.
+    pub prefetch: bool,
+    /// Whether this model can perform stage-2 translation itself.
+    pub can_translate: bool,
+    /// Single-stage ablation defect, if any.
+    pub failure: Option<FailureMode>,
+}
+
+impl LlmProfile {
+    pub fn deepseek_r1() -> Self {
+        LlmProfile {
+            name: "DeepSeek-R1",
+            tiling: TilingStrategy::CostSearch,
+            prefetch: true,
+            can_translate: true,
+            failure: None,
+        }
+    }
+
+    pub fn deepseek_v3() -> Self {
+        LlmProfile {
+            name: "DeepSeek-V3",
+            tiling: TilingStrategy::Heuristic,
+            prefetch: true,
+            can_translate: true,
+            failure: None,
+        }
+    }
+
+    pub fn claude35() -> Self {
+        LlmProfile {
+            name: "Claude-3.5",
+            tiling: TilingStrategy::Heuristic,
+            prefetch: false,
+            can_translate: true,
+            failure: None,
+        }
+    }
+
+    pub fn gpt4o() -> Self {
+        LlmProfile {
+            name: "GPT-4o",
+            tiling: TilingStrategy::Heuristic,
+            prefetch: false,
+            can_translate: false,
+            failure: None,
+        }
+    }
+
+    /// GPT-4o generates the TL Code, DeepSeek-V3 handles translation
+    /// (Table 3, row 2).
+    pub fn gpt4o_plus_v3() -> Self {
+        LlmProfile { name: "GPT-4o+DeepSeek-V3", can_translate: true, ..Self::gpt4o() }
+    }
+
+    /// Single-stage ablation: same knobs as `base`, plus an injected
+    /// Appendix-B defect.
+    pub fn single_stage(base: LlmProfile, failure: FailureMode) -> Self {
+        LlmProfile { name: "single-stage", failure: Some(failure), ..base }
+    }
+
+    pub fn all_table3() -> Vec<Self> {
+        vec![
+            Self::gpt4o(),
+            Self::gpt4o_plus_v3(),
+            Self::claude35(),
+            Self::deepseek_v3(),
+            Self::deepseek_r1(),
+        ]
+    }
+
+    /// The default generator used everywhere a specific profile is not
+    /// under test (the paper's main tables use DeepSeek-V3 + Ours).
+    pub fn default_profile() -> Self {
+        Self::deepseek_v3()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_uses_search() {
+        assert_eq!(LlmProfile::deepseek_r1().tiling, TilingStrategy::CostSearch);
+    }
+
+    #[test]
+    fn gpt4o_cannot_translate_alone() {
+        assert!(!LlmProfile::gpt4o().can_translate);
+        assert!(LlmProfile::gpt4o_plus_v3().can_translate);
+    }
+
+    #[test]
+    fn single_stage_injects_failure() {
+        let p = LlmProfile::single_stage(LlmProfile::deepseek_v3(), FailureMode::ReshapeOmission);
+        assert_eq!(p.failure, Some(FailureMode::ReshapeOmission));
+        assert!(p.prefetch, "base knobs preserved");
+    }
+
+    #[test]
+    fn table3_has_five_rows() {
+        assert_eq!(LlmProfile::all_table3().len(), 5);
+    }
+}

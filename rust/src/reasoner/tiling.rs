@@ -1,0 +1,216 @@
+//! Tile-size selection (the `BM`/`BN` parameters of §3.2.2).
+//!
+//! The paper's stage-1b prompt walks the LLM through exactly this
+//! reasoning: each thread block owns a `(BM, HeadDim)` slice of Q; K/V
+//! stream through shared memory in `(BN, HeadDim)` tiles; the tiles must
+//! fit the card's shared-memory budget while keeping enough thread blocks
+//! resident per SM for latency hiding. Two strategies mirror the LLM
+//! ablation (Table 3): a one-shot heuristic (what DeepSeek-V3 / Claude
+//! produce) and a small cost-model search (DeepSeek-R1's longer
+//! reasoning finds the better configuration).
+
+use crate::perfmodel::gpu::GpuArch;
+use crate::sketch::spec::OpSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TilingStrategy {
+    /// One-shot rule: BM = 128 for head-dim ≤ 64 else 64, BN = 64, shrink
+    /// to fit shared memory.
+    Heuristic,
+    /// Enumerate candidates, score with an occupancy × pipeline model,
+    /// keep the best.
+    CostSearch,
+}
+
+/// A chosen tiling plus the derived footprint/occupancy facts that the
+/// verifier, perf model and EXPERIMENTS.md report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tiling {
+    pub bm: usize,
+    pub bn: usize,
+    /// Double-buffered K/V staging (prefetch next tile during GEMM).
+    pub double_buffer: bool,
+    /// Shared-memory bytes per thread block.
+    pub smem_bytes: usize,
+    /// Register bytes per thread block (fp32 accumulators).
+    pub reg_bytes: usize,
+    /// Thread blocks resident per SM under the smem + register limits.
+    pub blocks_per_sm: usize,
+}
+
+/// Shared-memory footprint of one thread block: Q tile + K/V tiles
+/// (x2 when double-buffered), in the operator's element type.
+fn smem_bytes(spec: &OpSpec, bm: usize, bn: usize, double_buffer: bool) -> usize {
+    let e = spec.dtype.bytes();
+    let q = bm * spec.qk_dim() * e;
+    let kv = bn * spec.qk_dim() * e + bn * spec.v_head_dim * e;
+    q + if double_buffer { 2 * kv } else { kv }
+}
+
+/// Register footprint: fp32 accumulator O (BM × VDim), score tile S
+/// (BM × BN), softmax stats (2 × BM), spread across the block's threads.
+fn reg_bytes(spec: &OpSpec, bm: usize, bn: usize) -> usize {
+    4 * (bm * spec.v_head_dim + bm * bn + 2 * bm)
+}
+
+fn occupancy(arch: &GpuArch, smem: usize, regs: usize) -> usize {
+    if smem == 0 {
+        return 1;
+    }
+    let by_smem = arch.smem_per_sm / smem.max(1);
+    let by_regs = arch.regfile_per_sm / regs.max(1);
+    by_smem.min(by_regs).max(1).min(8)
+}
+
+/// Score a candidate (higher is better): occupancy for latency hiding,
+/// large BM×BN for mma efficiency and amortized softmax, mild penalty for
+/// very wide BN at small sequence lengths (tail effects).
+fn score(arch: &GpuArch, spec: &OpSpec, bm: usize, bn: usize, db: bool) -> f64 {
+    let smem = smem_bytes(spec, bm, bn, db);
+    if smem > arch.smem_per_block {
+        return f64::NEG_INFINITY;
+    }
+    if bm > spec.seq_len || bn > spec.kv_len {
+        return f64::NEG_INFINITY;
+    }
+    let occ = occupancy(arch, smem, reg_bytes(spec, bm, bn)) as f64;
+    // MXU/TensorCore efficiency grows with tile area but saturates.
+    let tile_eff = ((bm * bn) as f64 / (128.0 * 64.0)).min(1.5);
+    // Occupancy beyond ~4 blocks/SM stops helping.
+    let occ_eff = (occ / 2.0).min(2.0);
+    // Softmax (CUDA-core) work amortizes over BN columns per max/sum pass.
+    let softmax_amort = (bn as f64 / 64.0).sqrt().min(1.3);
+    // Tail waste when the q-block count doesn't fill the grid.
+    let q_blocks = spec.seq_len.div_ceil(bm) * spec.num_q_heads * spec.batch;
+    let waves = q_blocks as f64 / (arch.sm_count as f64 * occ);
+    let tail = if waves < 1.0 { waves } else { (waves / waves.ceil()).max(0.7) };
+    tile_eff * occ_eff * softmax_amort * tail * if db { 1.08 } else { 1.0 }
+}
+
+/// Choose tile sizes for `spec` on `arch`.
+pub fn choose(
+    strategy: TilingStrategy,
+    spec: &OpSpec,
+    arch: &GpuArch,
+    double_buffer: bool,
+) -> Tiling {
+    let (bm, bn) = match strategy {
+        TilingStrategy::Heuristic => {
+            let mut bm: usize = if spec.qk_dim() <= 64 { 128 } else { 64 };
+            let mut bn: usize = 64;
+            // Shrink until the tile fits shared memory.
+            while smem_bytes(spec, bm, bn, double_buffer) > arch.smem_per_block && bn > 16 {
+                bn /= 2;
+            }
+            while smem_bytes(spec, bm, bn, double_buffer) > arch.smem_per_block && bm > 16 {
+                bm /= 2;
+            }
+            bm = bm.min(spec.seq_len.next_power_of_two());
+            bn = bn.min(spec.kv_len.next_power_of_two());
+            (bm, bn)
+        }
+        TilingStrategy::CostSearch => {
+            let mut best = (128usize, 64usize, f64::NEG_INFINITY);
+            for bm in [32usize, 64, 128, 256] {
+                for bn in [32usize, 64, 128] {
+                    let s = score(arch, spec, bm, bn, double_buffer);
+                    if s > best.2 {
+                        best = (bm, bn, s);
+                    }
+                }
+            }
+            (best.0, best.1)
+        }
+    };
+    let smem = smem_bytes(spec, bm, bn, double_buffer);
+    let regs = reg_bytes(spec, bm, bn);
+    Tiling {
+        bm,
+        bn,
+        double_buffer,
+        smem_bytes: smem,
+        reg_bytes: regs,
+        blocks_per_sm: occupancy(arch, smem, regs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::AttnVariant;
+
+    fn spec64() -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true)
+    }
+
+    fn spec128() -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, 4096, 128, true)
+    }
+
+    #[test]
+    fn heuristic_fits_smem_everywhere() {
+        for arch in GpuArch::all() {
+            for spec in [spec64(), spec128(), OpSpec::mla(4096, true)] {
+                for db in [false, true] {
+                    let t = choose(TilingStrategy::Heuristic, &spec, &arch, db);
+                    assert!(
+                        t.smem_bytes <= arch.smem_per_block,
+                        "{} {:?} overflows: {} > {}",
+                        arch.name,
+                        (t.bm, t.bn, db),
+                        t.smem_bytes,
+                        arch.smem_per_block
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn search_fits_smem_everywhere() {
+        for arch in GpuArch::all() {
+            for spec in [spec64(), spec128(), OpSpec::mla(4096, true)] {
+                let t = choose(TilingStrategy::CostSearch, &spec, &arch, true);
+                assert!(t.smem_bytes <= arch.smem_per_block);
+            }
+        }
+    }
+
+    #[test]
+    fn search_at_least_as_good_as_heuristic() {
+        for arch in [GpuArch::a100(), GpuArch::rtx8000(), GpuArch::t4()] {
+            for spec in [spec64(), spec128()] {
+                let h = choose(TilingStrategy::Heuristic, &spec, &arch, true);
+                let s = choose(TilingStrategy::CostSearch, &spec, &arch, true);
+                assert!(
+                    score(&arch, &spec, s.bm, s.bn, true)
+                        >= score(&arch, &spec, h.bm, h.bn, true),
+                    "search worse than heuristic on {}",
+                    arch.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn turing_head128_shrinks_tiles() {
+        // 64 KB shared memory cannot hold BM=128 tiles at head-dim 128
+        // with double buffering; the heuristic must shrink.
+        let t = choose(TilingStrategy::Heuristic, &spec128(), &GpuArch::t4(), true);
+        assert!(t.smem_bytes <= GpuArch::t4().smem_per_block);
+        assert!(t.bm <= 64 || t.bn <= 32);
+    }
+
+    #[test]
+    fn tiles_never_exceed_sequence() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 512, 64, true);
+        let t = choose(TilingStrategy::CostSearch, &spec, &GpuArch::a100(), true);
+        assert!(t.bm <= 512 && t.bn <= 512);
+    }
+
+    #[test]
+    fn occupancy_positive() {
+        let t = choose(TilingStrategy::Heuristic, &spec64(), &GpuArch::a100(), false);
+        assert!(t.blocks_per_sm >= 1);
+    }
+}

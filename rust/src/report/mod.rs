@@ -1,0 +1,258 @@
+//! Report layer: regenerates every table and figure of the paper's
+//! evaluation from the performance model ([`tables`]) and holds the
+//! paper's own measurements for side-by-side printing and shape testing
+//! ([`paper`]).
+
+pub mod paper;
+pub mod tables;
+
+use crate::util::cli::Args;
+
+/// `tlc tables`: print the requested table(s)/figure(s).
+pub fn cli_tables(args: &Args) -> Result<(), String> {
+    let table = args.get("table").map(String::from);
+    let figure = args.get("figure").map(String::from);
+    let all = args.get_bool("all");
+    args.finish()?;
+
+    let mut printed = false;
+    let want = |id: &str| -> bool { all || table.as_deref() == Some(id) };
+
+    if want("1") {
+        println!("{}", tables::table1());
+        printed = true;
+    }
+    if want("2") {
+        println!("{}", tables::table2());
+        printed = true;
+    }
+    if want("3") {
+        println!("{}", tables::table3());
+        printed = true;
+    }
+    if want("4") {
+        // Measure the pipeline wall-clock live for the Time column.
+        let spec = crate::sketch::spec::OpSpec::benchmark(
+            crate::sketch::spec::AttnVariant::Mha,
+            1024,
+            64,
+            false,
+        );
+        let t0 = std::time::Instant::now();
+        let _ = crate::pipeline::run(
+            &spec,
+            &crate::perfmodel::gpu::GpuArch::a100(),
+            &crate::reasoner::profiles::LlmProfile::deepseek_v3(),
+            crate::pipeline::Target::Pallas,
+        )
+        .map_err(|e| e.to_string())?;
+        println!("{}", tables::table4(t0.elapsed().as_secs_f64() * 1e3));
+        printed = true;
+    }
+    if want("5") {
+        println!("{}", tables::table5());
+        printed = true;
+    }
+    if want("6") {
+        println!("{}", tables::table6());
+        printed = true;
+    }
+    if want("7") {
+        println!("{}", tables::table7());
+        printed = true;
+    }
+    if want("8") {
+        println!("{}", tables::table8());
+        printed = true;
+    }
+    if want("9") {
+        println!("{}", tables::table9());
+        printed = true;
+    }
+    if all || figure.as_deref() == Some("1") {
+        println!("{}", tables::figure1());
+        printed = true;
+    }
+    if !printed {
+        return Err("nothing selected: use --table N, --figure 1 or --all".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod shape_tests {
+    //! The reproduction contract (system prompt: "the *shape* — who wins,
+    //! by roughly what factor, where crossovers fall — should hold"):
+    //! per anchor series we assert correlation with the paper's numbers,
+    //! bounded mean relative error, and winner preservation.
+
+    use super::paper::{self, correlation, mean_rel_err};
+    use super::tables::model_block;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::sketch::spec::AttnVariant;
+
+    fn check_block(
+        rows: &[(String, [f64; 6])],
+        paper_rows: &[paper::PaperRow],
+        max_err: f64,
+        label: &str,
+    ) {
+        for prow in paper_rows {
+            let (_, model) = rows
+                .iter()
+                .find(|(n, _)| n == prow.name)
+                .unwrap_or_else(|| panic!("{label}: row {} missing", prow.name));
+            let corr = correlation(model, &prow.tflops);
+            let err = mean_rel_err(model, &prow.tflops);
+            // Correlation is only meaningful for rows with real dynamic
+            // range; the vanilla rows are flat (bandwidth-bound) and
+            // dominated by measurement noise.
+            let finite: Vec<f64> =
+                prow.tflops.iter().copied().filter(|x| x.is_finite()).collect();
+            let range = finite.iter().cloned().fold(0.0, f64::max)
+                / finite.iter().cloned().fold(f64::INFINITY, f64::min);
+            let min_corr = if range >= 2.0 {
+                0.85
+            } else if range >= 1.5 {
+                0.55 // noisy low-dynamic-range rows (e.g. torch-MLA's 2k dip)
+            } else {
+                -1.0 // flat rows: correlation is meaningless
+            };
+            assert!(
+                corr > min_corr,
+                "{label}/{}: correlation {corr:.3} < {min_corr} (model {model:?} vs {:?})",
+                prow.name,
+                prow.tflops
+            );
+            assert!(
+                err < max_err,
+                "{label}/{}: mean rel err {err:.3} > {max_err} (model {model:?} vs {:?})",
+                prow.name,
+                prow.tflops
+            );
+            // OOM cells must agree exactly.
+            for (m, p) in model.iter().zip(&prow.tflops) {
+                assert_eq!(
+                    m.is_nan(),
+                    p.is_nan(),
+                    "{label}/{}: OOM mismatch",
+                    prow.name
+                );
+            }
+        }
+        // Winner preservation at 16k: ours beats every baseline wherever
+        // the paper says it does (by a >5% margin).
+        let at16k = |rows: &[(String, [f64; 6])], name: &str| {
+            rows.iter().find(|(n, _)| n.contains(name)).map(|(_, r)| r[5])
+        };
+        let paper16k = |name: &str| {
+            paper_rows
+                .iter()
+                .find(|p| p.name.contains(name))
+                .map(|p| p.tflops[5])
+        };
+        if let (Some(mo), Some(po)) = (at16k(rows, "Ours"), paper16k("Ours")) {
+            for prow in paper_rows {
+                if prow.name.contains("Ours") {
+                    continue;
+                }
+                let pb = prow.tflops[5];
+                if let Some((_, mrow)) = rows.iter().find(|(n, _)| *n == prow.name) {
+                    let mb = mrow[5];
+                    if pb.is_finite() && po > pb * 1.05 {
+                        assert!(
+                            mo > mb,
+                            "{label}: paper has Ours ({po}) > {} ({pb}) at 16k but model \
+                             says {mo} vs {mb}",
+                            prow.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table1_a100_mha_causal_hd64_shape() {
+        let rows = model_block(&GpuArch::a100(), AttnVariant::Mha, 64, true);
+        check_block(&rows, &paper::a100_mha_causal_hd64(), 0.15, "A100 hd64 causal");
+    }
+
+    #[test]
+    fn table1_a100_mha_causal_hd128_shape() {
+        let rows = model_block(&GpuArch::a100(), AttnVariant::Mha, 128, true);
+        check_block(&rows, &paper::a100_mha_causal_hd128(), 0.15, "A100 hd128 causal");
+    }
+
+    #[test]
+    fn table1_a100_mha_full_hd64_shape() {
+        // Non-causal cells are pure prediction (calibration used causal
+        // anchors) — allow a wider band.
+        let rows = model_block(&GpuArch::a100(), AttnVariant::Mha, 64, false);
+        check_block(&rows, &paper::a100_mha_full_hd64(), 0.30, "A100 hd64 full");
+    }
+
+    #[test]
+    fn table1_rtx8000_mha_causal_hd64_shape() {
+        let rows = model_block(&GpuArch::rtx8000(), AttnVariant::Mha, 64, true);
+        check_block(&rows, &paper::rtx8000_mha_causal_hd64(), 0.20, "RTX8000 hd64 causal");
+    }
+
+    #[test]
+    fn table7_t4_mha_causal_hd64_shape() {
+        let rows = model_block(&GpuArch::t4(), AttnVariant::Mha, 64, true);
+        check_block(&rows, &paper::t4_mha_causal_hd64(), 0.20, "T4 hd64 causal");
+    }
+
+    #[test]
+    fn table2_mla_shape() {
+        use crate::perfmodel::cost::estimate;
+        use crate::perfmodel::schedules;
+        use crate::sketch::spec::OpSpec;
+        let arch = GpuArch::a100();
+        let scheds = vec![
+            schedules::torch_mla(),
+            schedules::cudnn_mla(&arch),
+            schedules::torch_naive(),
+            schedules::ours_mla(&arch),
+        ];
+        let rows: Vec<(String, [f64; 6])> = scheds
+            .into_iter()
+            .map(|sched| {
+                let mut row = [0.0f64; 6];
+                for (i, &seq) in crate::workload::SEQ_SWEEP.iter().enumerate() {
+                    let est = estimate(&OpSpec::mla(seq, true), &arch, &sched);
+                    row[i] = if est.oom { f64::NAN } else { est.tflops };
+                }
+                (sched.name, row)
+            })
+            .collect();
+        check_block(&rows, &paper::table2_mla(), 0.30, "Table 2 MLA");
+        // Headline claim: ~2.15x over cuDNN at 16k.
+        let ours = rows.iter().find(|(n, _)| n.contains("Ours")).unwrap().1[5];
+        let cudnn = rows.iter().find(|(n, _)| n.contains("cuDNN")).unwrap().1[5];
+        let ratio = ours / cudnn;
+        assert!(
+            (1.7..2.6).contains(&ratio),
+            "MLA speedup over cuDNN {ratio:.2} outside the paper's ~2.15x band"
+        );
+    }
+
+    #[test]
+    fn headline_speedups_in_band() {
+        // Peak speedup over vanilla: paper reports up to 35.16x (GQA hd64
+        // 2k causal A100). Our model's peak over the same grid must land
+        // in the tens.
+        let arch = GpuArch::a100();
+        let rows = model_block(&arch, AttnVariant::Gqa, 64, true);
+        let ours = &rows.iter().find(|(n, _)| n.contains("Ours")).unwrap().1;
+        let van = &rows.iter().find(|(n, _)| n.contains("vanilla")).unwrap().1;
+        let peak = ours
+            .iter()
+            .zip(van)
+            .filter(|(_, v)| v.is_finite())
+            .map(|(o, v)| o / v)
+            .fold(0.0f64, f64::max);
+        assert!((15.0..60.0).contains(&peak), "peak speedup {peak:.1} out of band");
+    }
+}

@@ -1,0 +1,192 @@
+//! The paper's reported measurements (anchor data).
+//!
+//! Used two ways: (1) printed beside our model's numbers by the table
+//! renderers so paper-vs-reproduced is visible in every cell; (2) shape
+//! tests assert agreement — correlation, bounded relative error, and
+//! winner preservation (who beats whom, which is the claim the tables
+//! exist to make). `NAN` marks the paper's OOM cells.
+
+pub const SEQS: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+pub const OOM: f64 = f64::NAN;
+
+/// One implementation row of a paper table.
+#[derive(Debug, Clone)]
+pub struct PaperRow {
+    pub name: &'static str,
+    pub tflops: [f64; 6],
+}
+
+/// Table 1, A100, MHA with causal mask, head-dim 64.
+pub fn a100_mha_causal_hd64() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [95.3, 124.4, 143.7, 152.4, 162.8, 172.5] },
+        PaperRow { name: "FlexAttention", tflops: [84.4, 107.4, 123.7, 134.7, 145.8, 153.3] },
+        PaperRow { name: "flash-attn v2", tflops: [101.2, 127.3, 146.5, 158.5, 172.4, 180.8] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [7.6, 7.7, 5.5, 6.7, 7.5, 7.7] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [107.4, 134.6, 154.7, 163.4, 177.6, 184.3] },
+    ]
+}
+
+/// Table 1, A100, MHA causal, head-dim 128.
+pub fn a100_mha_causal_hd128() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [106.1, 135.4, 153.3, 165.5, 177.8, 186.3] },
+        PaperRow { name: "FlexAttention", tflops: [80.5, 105.3, 124.7, 137.4, 150.7, 160.3] },
+        PaperRow { name: "flash-attn v2", tflops: [115.3, 143.6, 163.8, 176.9, 183.3, 195.1] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [14.3, 14.9, 10.7, 12.9, 14.5, 14.9] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [132.2, 155.6, 168.7, 176.2, 184.9, 194.7] },
+    ]
+}
+
+/// Table 1, A100, MHA without causal mask, head-dim 64.
+pub fn a100_mha_full_hd64() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [153.0, 158.8, 172.4, 175.5, 184.7, 186.2] },
+        PaperRow { name: "FlexAttention", tflops: [145.8, 155.9, 162.5, 168.4, 177.2, 179.9] },
+        PaperRow { name: "flash-attn v2", tflops: [147.5, 161.6, 171.1, 176.8, 185.8, 190.6] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [28.9, 29.6, 28.2, 28.5, 28.5, 29.6] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [164.0, 175.6, 181.8, 191.0, 200.6, 201.8] },
+    ]
+}
+
+/// Table 1, RTX 8000, MHA causal, head-dim 64.
+pub fn rtx8000_mha_causal_hd64() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [21.4, 25.7, 28.7, 31.2, 32.7, 33.5] },
+        PaperRow { name: "FlexAttention", tflops: [30.4, 34.5, 39.7, 43.9, 46.6, 47.7] },
+        PaperRow { name: "flash-attn v1", tflops: [18.1, 17.9, 24.3, 26.8, 31.1, 33.7] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [2.6, 2.5, 1.9, 2.4, 2.6, OOM] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [21.6, 29.6, 37.9, 43.5, 47.8, 49.9] },
+    ]
+}
+
+/// Table 7, T4, masked MHA, head-dim 64.
+pub fn t4_mha_causal_hd64() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [8.11, 10.84, 12.13, 13.22, 13.69, 13.83] },
+        PaperRow { name: "FlexAttention", tflops: [10.82, 13.45, 16.31, 18.52, 19.84, 20.47] },
+        PaperRow { name: "flash-attn v1", tflops: [8.68, 9.85, 12.81, 12.81, 13.83, 13.25] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [1.33, 1.35, 0.99, 1.21, OOM, OOM] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [9.83, 13.48, 16.62, 19.11, 20.72, 21.43] },
+    ]
+}
+
+/// Table 2: MLA, causal, head-dim 128, A100.
+pub fn table2_mla() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "torch (DeepSeek MLA)", tflops: [22.9, 28.7, 21.7, 26.7, 32.9, 35.1] },
+        PaperRow { name: "cuDNN", tflops: [35.5, 48.6, 61.1, 70.3, 77.3, 81.7] },
+        PaperRow { name: "DeepSeek-V3 (vanilla)", tflops: [17.7, 18.5, 13.5, 16.1, 18.2, 18.7] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [50.6, 78.6, 108.2, 138.6, 164.3, 175.9] },
+    ]
+}
+
+/// Table 3: per-LLM TFLOPS (MHA causal hd128, A100) at seq 4k/8k/16k.
+pub fn table3() -> Vec<(&'static str, [f64; 3])> {
+    vec![
+        ("GPT-4o", [OOM, OOM, OOM]), // "-" rows: translation fails
+        ("GPT-4o+DeepSeek-V3", [165.5, 171.9, 178.5]),
+        ("Claude-3.5", [175.2, 179.4, 181.3]),
+        ("DeepSeek-V3", [175.5, 179.3, 185.5]),
+        ("DeepSeek-R1", [176.2, 184.9, 194.7]),
+    ]
+}
+
+/// Table 4: development cost (MHA hd64, seq 1024, A100, non-causal).
+pub struct Table4 {
+    pub expert_tflops: f64,
+    pub lmtl_tflops: f64,
+}
+
+pub fn table4() -> Table4 {
+    Table4 { expert_tflops: 162.7, lmtl_tflops: 175.6 }
+}
+
+/// Table 5: CoT-CUDA vs LLM-TL (MHA causal hd64, A100), seq 512/1k/2k.
+pub fn table5() -> Vec<(&'static str, [f64; 3])> {
+    vec![
+        ("DeepSeek-V3 (raw CUDA)", [0.02, 0.004, OOM]),
+        ("+ CoT", [0.12, 0.27, 0.52]),
+        ("+ LLM-TL", [107.4, 134.6, 154.7]),
+    ]
+}
+
+/// Table 6: FP8 MHA causal hd128 on L40S.
+pub fn table6_fp8() -> [f64; 6] {
+    [224.8, 241.1, 248.3, 254.6, 255.1, 257.9]
+}
+
+/// Table 8: Llama2-7B config (32/32 heads, hd128, causal, A100) — the
+/// cuDNN / flash2 / ours rows.
+pub fn table8_llama2() -> Vec<PaperRow> {
+    vec![
+        PaperRow { name: "cuDNN", tflops: [112.4, 142.6, 164.1, 176.8, 197.2, 201.7] },
+        PaperRow { name: "flash-attn v2", tflops: [122.5, 152.5, 173.4, 186.3, 201.5, 207.3] },
+        PaperRow { name: "DeepSeek-V3 + Ours", tflops: [137.1, 160.6, 180.3, 186.7, 198.3, 202.7] },
+    ]
+}
+
+/// Table 9: NSA latency seconds, naive vs ours (A100, hd128).
+pub fn table9_nsa() -> (PaperRow, PaperRow) {
+    (
+        PaperRow { name: "Naive NSA", tflops: [0.84, 1.68, 3.35, 6.61, 13.34, 26.29] },
+        PaperRow { name: "ours", tflops: [0.67, 1.26, 2.59, 5.25, 10.59, 21.27] },
+    )
+}
+
+/// Pearson correlation of two series, ignoring NaN cells.
+pub fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    let pairs: Vec<(f64, f64)> = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .map(|(x, y)| (*x, *y))
+        .collect();
+    let n = pairs.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let mx = pairs.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pairs.iter().map(|p| p.1).sum::<f64>() / n;
+    let cov: f64 = pairs.iter().map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = pairs.iter().map(|(x, _)| (x - mx) * (x - mx)).sum();
+    let vy: f64 = pairs.iter().map(|(_, y)| (y - my) * (y - my)).sum();
+    if vx <= 0.0 || vy <= 0.0 {
+        return 1.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Mean relative error over finite cells.
+pub fn mean_rel_err(model: &[f64], paper: &[f64]) -> f64 {
+    let pairs: Vec<(f64, f64)> = model
+        .iter()
+        .zip(paper)
+        .filter(|(m, p)| m.is_finite() && p.is_finite())
+        .map(|(m, p)| (*m, *p))
+        .collect();
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().map(|(m, p)| (m - p).abs() / p).sum::<f64>() / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlation_basics() {
+        assert!((correlation(&[1.0, 2.0, 3.0], &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!(correlation(&[1.0, 2.0, 3.0], &[3.0, 2.0, 1.0]) < -0.99);
+        // NaN cells ignored.
+        let c = correlation(&[1.0, f64::NAN, 3.0], &[2.0, 5.0, 6.0]);
+        assert!((c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert!((mean_rel_err(&[110.0], &[100.0]) - 0.1).abs() < 1e-12);
+        assert_eq!(mean_rel_err(&[f64::NAN], &[100.0]), 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust request path (Python is build-time only).
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md for the 64-bit-proto-id gotcha).
+
+pub mod registry;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A loaded-and-compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human id (manifest artifact id).
+    pub id: String,
+}
+
+/// Owns the PJRT client and compiles artifacts. One per process (the CPU
+/// client spins up its own thread pool).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path`, compile, return an executable.
+    pub fn load_hlo_text(&self, path: &Path, id: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {id}"))?;
+        Ok(Executable { exe, id: id.to_string() })
+    }
+
+    /// Execute with f32 inputs; returns the flattened f32 output of the
+    /// single tuple element (our AOT functions return 1-tuples).
+    pub fn execute_f32(
+        &self,
+        exe: &Executable,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .with_context(|| format!("reshaping input to {shape:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", exe.id))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple output")?;
+        out.to_vec::<f32>().context("output to f32 vec")
+    }
+
+    /// Execute with one i32 input (the tiny-LM token batch).
+    pub fn execute_i32_to_f32(
+        &self,
+        exe: &Executable,
+        tokens: &[i32],
+        shape: &[i64],
+    ) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(tokens).reshape(shape)?;
+        let result = exe.exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        out.to_vec::<f32>().context("lm output to f32 vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn skip_if_no_artifacts() -> bool {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_attention_artifact() {
+        if skip_if_no_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let path = artifacts_dir().join("mha_hd64_causal_f16__b1_h4kv4_s256.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifact missing");
+            return;
+        }
+        let exe = rt.load_hlo_text(&path, "mha_test").unwrap();
+        let (b, h, s, d) = (1usize, 4usize, 256usize, 64usize);
+        let n = b * h * s * d;
+        let mut rng = crate::util::prng::Rng::new(42);
+        let q: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+        let k: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+        let shape = [b as i64, h as i64, s as i64, d as i64];
+        let out = rt
+            .execute_f32(&exe, &[(&q, &shape), (&k, &shape), (&v, &shape)])
+            .unwrap();
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|x| x.is_finite()));
+
+        // Cross-layer correctness: PJRT execution must match the rust-side
+        // reference oracle per (batch, head) slice.
+        use crate::verify::tensor::{reference_attention, Tensor2};
+        let scale = 1.0 / (d as f32).sqrt();
+        for head in 0..h {
+            let off = head * s * d;
+            let qt = Tensor2 { rows: s, cols: d, data: q[off..off + s * d].to_vec() };
+            let kt = Tensor2 { rows: s, cols: d, data: k[off..off + s * d].to_vec() };
+            let vt = Tensor2 { rows: s, cols: d, data: v[off..off + s * d].to_vec() };
+            let want = reference_attention(&qt, &kt, &vt, scale, true);
+            let got = Tensor2 { rows: s, cols: d, data: out[off..off + s * d].to_vec() };
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 5e-4, "head {head}: max diff {diff}");
+        }
+    }
+}

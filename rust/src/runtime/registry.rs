@@ -1,0 +1,224 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (written by
+//! python/compile/aot.py), lazily compiles artifacts on first use, and
+//! serves executables by attention signature.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Executable, Runtime};
+use crate::sketch::spec::AttnVariant;
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub id: String,
+    pub file: String,
+    pub kind: String,
+    pub fields: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn usize_field(&self, key: &str) -> Result<usize> {
+        self.fields
+            .get(key)
+            .with_context(|| format!("artifact {} missing field {key}", self.id))?
+            .parse()
+            .with_context(|| format!("artifact {}: field {key} not a number", self.id))
+    }
+
+    pub fn variant(&self) -> Option<AttnVariant> {
+        self.fields.get("variant").and_then(|v| AttnVariant::parse(v))
+    }
+
+    pub fn causal(&self) -> bool {
+        self.fields.get("causal").map(|v| v == "1").unwrap_or(false)
+    }
+}
+
+/// Parse the manifest text format: `artifact <id> key=value ...` lines,
+/// `#` comments.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let tag = parts.next().unwrap_or_default();
+        if tag != "artifact" {
+            bail!("manifest line {}: expected `artifact`, got `{tag}`", lineno + 1);
+        }
+        let id = parts
+            .next()
+            .with_context(|| format!("manifest line {}: missing id", lineno + 1))?
+            .to_string();
+        let mut fields = BTreeMap::new();
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: bad kv `{kv}`", lineno + 1))?;
+            fields.insert(k.to_string(), v.to_string());
+        }
+        let file = fields
+            .get("file")
+            .with_context(|| format!("artifact {id}: missing file="))?
+            .clone();
+        let kind = fields.get("kind").cloned().unwrap_or_else(|| "unknown".into());
+        out.push(ArtifactMeta { id, file, kind, fields });
+    }
+    Ok(out)
+}
+
+/// The signature the coordinator routes on: one compiled executable serves
+/// exactly one of these.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AttnSignature {
+    pub variant: AttnVariant,
+    pub causal: bool,
+    pub qk_dim: usize,
+    pub v_dim: usize,
+    pub batch: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub seq: usize,
+    pub kv: usize,
+}
+
+impl AttnSignature {
+    pub fn from_meta(m: &ArtifactMeta) -> Result<Self> {
+        Ok(AttnSignature {
+            variant: m.variant().context("artifact missing variant")?,
+            causal: m.causal(),
+            qk_dim: m.usize_field("qk")?,
+            v_dim: m.usize_field("vd")?,
+            batch: m.usize_field("batch")?,
+            q_heads: m.usize_field("q_heads")?,
+            kv_heads: m.usize_field("kv_heads")?,
+            seq: m.usize_field("seq")?,
+            kv: m.usize_field("kv")?,
+        })
+    }
+}
+
+/// Loads the manifest, compiles artifacts lazily, caches executables.
+pub struct Registry {
+    dir: PathBuf,
+    pub runtime: Runtime,
+    metas: Vec<ArtifactMeta>,
+    cache: std::sync::Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt", dir.display()))?;
+        let metas = parse_manifest(&manifest)?;
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            runtime: Runtime::cpu()?,
+            metas,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    pub fn attention_metas(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.metas.iter().filter(|m| m.kind == "attention")
+    }
+
+    /// Find the attention artifact matching a signature.
+    pub fn find(&self, sig: &AttnSignature) -> Option<&ArtifactMeta> {
+        self.attention_metas()
+            .find(|m| AttnSignature::from_meta(m).map(|s| s == *sig).unwrap_or(false))
+    }
+
+    /// Compile (or fetch cached) executable for an artifact id.
+    pub fn executable(&self, id: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(id) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .metas
+            .iter()
+            .find(|m| m.id == id)
+            .with_context(|| format!("unknown artifact `{id}`"))?;
+        let exe =
+            Arc::new(self.runtime.load_hlo_text(&self.dir.join(&meta.file), &meta.id)?);
+        self.cache.lock().unwrap().insert(id.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled (cached) executables — used by metrics.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_roundtrip() {
+        let text = "# comment\n\
+                    artifact a1 file=a1.hlo.txt kind=attention variant=mha causal=1 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64\n\
+                    artifact lm file=lm.hlo.txt kind=lm vocab=512\n";
+        let metas = parse_manifest(text).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].id, "a1");
+        assert_eq!(metas[0].kind, "attention");
+        assert!(metas[0].causal());
+        assert_eq!(metas[0].usize_field("qk").unwrap(), 64);
+        let sig = AttnSignature::from_meta(&metas[0]).unwrap();
+        assert_eq!(sig.variant, AttnVariant::Mha);
+        assert_eq!(sig.seq, 256);
+        assert_eq!(metas[1].kind, "lm");
+    }
+
+    #[test]
+    fn parse_manifest_rejects_garbage() {
+        assert!(parse_manifest("not_artifact x file=y").is_err());
+        assert!(parse_manifest("artifact x nofields_novalue").is_err());
+        assert!(parse_manifest("artifact onlyid").is_err()); // no file=
+    }
+
+    #[test]
+    fn registry_opens_and_finds_signatures() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        assert!(reg.attention_metas().count() >= 12, "expected full kernel set");
+        // Every attention artifact yields a valid signature.
+        for m in reg.attention_metas() {
+            AttnSignature::from_meta(m).unwrap();
+        }
+    }
+
+    #[test]
+    fn registry_caches_compiled_executables() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        let id = reg.attention_metas().next().unwrap().id.clone();
+        assert_eq!(reg.compiled_count(), 0);
+        let a = reg.executable(&id).unwrap();
+        assert_eq!(reg.compiled_count(), 1);
+        let b = reg.executable(&id).unwrap();
+        assert_eq!(reg.compiled_count(), 1, "second fetch must hit the cache");
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,295 @@
+//! Operator specifications: the "user requirement" input to the pipeline.
+//!
+//! An [`OpSpec`] describes one attention-operator instance exactly the way
+//! the paper's evaluation parameterizes them (§4.1): variant ∈
+//! {MHA, GQA, MQA, MLA, NSA}, causal or not, head dimension 64/128,
+//! sequence length 512..16k with batch adjusted so the total token count
+//! stays 16k, hidden dimension 2048.
+
+use std::fmt;
+
+use crate::tl::types::DType;
+
+/// Attention variants evaluated in the paper (§2.2, §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AttnVariant {
+    /// Multi-Head Attention (GPT-style).
+    Mha,
+    /// Group-Query Attention (Llama 3.1, Qwen2.5).
+    Gqa,
+    /// Multi-Query Attention (Falcon, StarCoder).
+    Mqa,
+    /// Multi-head Latent Attention (DeepSeek-V2/V3): low-rank KV
+    /// compression, separate nope/rope halves of the query-key dot.
+    Mla,
+    /// Native Sparse Attention (Appendix A, Table 9): compression +
+    /// block-selection + sliding-window branches.
+    Nsa,
+}
+
+impl AttnVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AttnVariant::Mha => "mha",
+            AttnVariant::Gqa => "gqa",
+            AttnVariant::Mqa => "mqa",
+            AttnVariant::Mla => "mla",
+            AttnVariant::Nsa => "nsa",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mha" => Some(AttnVariant::Mha),
+            "gqa" => Some(AttnVariant::Gqa),
+            "mqa" => Some(AttnVariant::Mqa),
+            "mla" => Some(AttnVariant::Mla),
+            "nsa" => Some(AttnVariant::Nsa),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AttnVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One attention-operator instance: the input to sketch generation and to
+/// the performance model, and the cache key for compiled artifacts.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct OpSpec {
+    pub variant: AttnVariant,
+    pub causal: bool,
+    /// Q/K head dimension. For MLA this is the *nope* part (128); the rope
+    /// part is [`OpSpec::rope_dim`], so the QK dot runs over
+    /// `head_dim + rope_dim`.
+    pub head_dim: usize,
+    /// V head dimension (== `head_dim` except for MLA where V stays 128
+    /// while QK runs over 192).
+    pub v_head_dim: usize,
+    pub num_q_heads: usize,
+    pub num_kv_heads: usize,
+    pub seq_len: usize,
+    pub kv_len: usize,
+    pub batch: usize,
+    pub dtype: DType,
+    /// RoPE sub-dimension (MLA only; 64 in DeepSeek-V3).
+    pub rope_dim: usize,
+    /// MLA latent (compressed KV) dimension; 512 in DeepSeek-V3.
+    pub latent_dim: usize,
+    /// NSA: compression/selection block size (64 in the NSA paper).
+    pub nsa_block: usize,
+    /// NSA: number of selected blocks per query.
+    pub nsa_topk: usize,
+    /// NSA: sliding-window size.
+    pub nsa_window: usize,
+}
+
+/// Paper benchmark constants (§4.1): hidden dim 2048, total tokens 16k.
+pub const HIDDEN_DIM: usize = 2048;
+pub const TOTAL_TOKENS: usize = 16 * 1024;
+
+impl OpSpec {
+    /// Benchmark-style spec following §4.1: `batch = 16k / seq_len`,
+    /// `heads = 2048 / head_dim`. GQA uses 4 KV-head groups, MQA a single
+    /// KV head (the paper follows FlashAttention's benchmark setup).
+    pub fn benchmark(variant: AttnVariant, seq_len: usize, head_dim: usize, causal: bool) -> Self {
+        let num_q_heads = HIDDEN_DIM / head_dim;
+        let num_kv_heads = match variant {
+            AttnVariant::Mha => num_q_heads,
+            AttnVariant::Gqa => (num_q_heads / 4).max(1),
+            AttnVariant::Mqa => 1,
+            // MLA/NSA keep per-variant defaults; see `mla`/`nsa`.
+            AttnVariant::Mla | AttnVariant::Nsa => num_q_heads,
+        };
+        OpSpec {
+            variant,
+            causal,
+            head_dim,
+            v_head_dim: head_dim,
+            num_q_heads,
+            num_kv_heads,
+            seq_len,
+            kv_len: seq_len,
+            batch: (TOTAL_TOKENS / seq_len).max(1),
+            dtype: DType::F16,
+            rope_dim: 0,
+            latent_dim: 0,
+            nsa_block: 0,
+            nsa_topk: 0,
+            nsa_window: 0,
+        }
+    }
+
+    /// MLA spec with the DeepSeek-V3 dimensions used in Table 2:
+    /// head (nope) dim 128, rope dim 64, latent dim 512.
+    pub fn mla(seq_len: usize, causal: bool) -> Self {
+        let mut s = OpSpec::benchmark(AttnVariant::Mla, seq_len, 128, causal);
+        s.rope_dim = 64;
+        s.latent_dim = 512;
+        s.num_q_heads = 16; // hidden 2048 / head 128, benchmark scheme
+        s.num_kv_heads = 16; // decompressed per-head K/V
+        s
+    }
+
+    /// NSA spec (Table 9): head dim 128, block 64, top-16 selected blocks,
+    /// 512-token sliding window (NSA paper defaults).
+    pub fn nsa(seq_len: usize) -> Self {
+        let mut s = OpSpec::benchmark(AttnVariant::Nsa, seq_len, 128, true);
+        s.nsa_block = 64;
+        s.nsa_topk = 16;
+        s.nsa_window = 512;
+        s.num_kv_heads = s.num_q_heads / 4; // NSA uses GQA-style grouping
+        s
+    }
+
+    /// Real-model configuration (Appendix C / Table 8): explicit head
+    /// counts, head dim 128, causal.
+    pub fn real_model(
+        name: &str,
+        num_q_heads: usize,
+        num_kv_heads: usize,
+        seq_len: usize,
+    ) -> (String, Self) {
+        let mut s = OpSpec::benchmark(
+            if num_q_heads == num_kv_heads { AttnVariant::Mha } else { AttnVariant::Gqa },
+            seq_len,
+            128,
+            true,
+        );
+        s.num_q_heads = num_q_heads;
+        s.num_kv_heads = num_kv_heads;
+        (name.to_string(), s)
+    }
+
+    /// Q-heads per KV head (1 for MHA, >1 for GQA, all for MQA).
+    pub fn group_size(&self) -> usize {
+        (self.num_q_heads / self.num_kv_heads.max(1)).max(1)
+    }
+
+    /// QK dot-product dimensionality (head_dim + rope part for MLA).
+    pub fn qk_dim(&self) -> usize {
+        self.head_dim + self.rope_dim
+    }
+
+    /// FLOP count following the paper's formula (§4.1):
+    /// `4 * seqlen^2 * head_dim * num_heads` (per batch element), with the
+    /// FlashAttention convention of halving for causal masks. For MLA the
+    /// two GEMMs have different inner dimensions (qk_dim vs v_head_dim).
+    pub fn flops(&self) -> f64 {
+        let s = self.seq_len as f64;
+        let k = self.kv_len as f64;
+        let h = self.num_q_heads as f64;
+        let b = self.batch as f64;
+        let gemm_dims = (self.qk_dim() + self.v_head_dim) as f64;
+        let full = 2.0 * b * s * k * h * gemm_dims;
+        if self.causal {
+            full / 2.0
+        } else {
+            full
+        }
+    }
+
+    /// Bytes of Q + K + V + O in global memory (per forward call).
+    pub fn io_bytes(&self) -> usize {
+        let e = self.dtype.bytes();
+        let q = self.batch * self.num_q_heads * self.seq_len * self.qk_dim();
+        let k = self.batch * self.num_kv_heads * self.kv_len * self.qk_dim();
+        let v = self.batch * self.num_kv_heads * self.kv_len * self.v_head_dim;
+        let o = self.batch * self.num_q_heads * self.seq_len * self.v_head_dim;
+        (q + k + v + o) * e
+    }
+
+    /// Stable identifier: artifact filename stem, registry key, kernel
+    /// module name. Shape-free so one compiled kernel serves one
+    /// (variant, head-dim, causal, dtype) family; shapes are burned in at
+    /// AOT time and recorded separately in the manifest.
+    pub fn kernel_name(&self) -> String {
+        format!(
+            "{}_hd{}_{}_{}",
+            self.variant,
+            self.head_dim,
+            if self.causal { "causal" } else { "full" },
+            self.dtype
+        )
+    }
+
+    /// Fully-shaped artifact identifier (one HLO module per shape).
+    pub fn artifact_name(&self) -> String {
+        format!(
+            "{}_b{}_h{}kv{}_s{}",
+            self.kernel_name(),
+            self.batch,
+            self.num_q_heads,
+            self.num_kv_heads,
+            self.seq_len
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_batch_keeps_total_tokens() {
+        for seq in [512, 1024, 2048, 4096, 8192, 16384] {
+            let s = OpSpec::benchmark(AttnVariant::Mha, seq, 64, true);
+            assert_eq!(s.batch * s.seq_len, TOTAL_TOKENS);
+        }
+    }
+
+    #[test]
+    fn benchmark_heads_from_hidden() {
+        let s64 = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        assert_eq!(s64.num_q_heads, 32);
+        let s128 = OpSpec::benchmark(AttnVariant::Mha, 1024, 128, true);
+        assert_eq!(s128.num_q_heads, 16);
+    }
+
+    #[test]
+    fn variant_kv_heads() {
+        assert_eq!(OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true).group_size(), 1);
+        assert_eq!(OpSpec::benchmark(AttnVariant::Gqa, 1024, 64, true).group_size(), 4);
+        let mqa = OpSpec::benchmark(AttnVariant::Mqa, 1024, 64, true);
+        assert_eq!(mqa.num_kv_heads, 1);
+        assert_eq!(mqa.group_size(), 32);
+    }
+
+    #[test]
+    fn causal_halves_flops() {
+        let c = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let f = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, false);
+        assert!((f.flops() / c.flops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flops_matches_paper_formula() {
+        // Paper: 4 * seqlen^2 * head_dim * num_heads (non-causal, per batch).
+        let s = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false);
+        let expected = 4.0 * 1024f64 * 1024.0 * 64.0 * 32.0 * s.batch as f64;
+        assert!((s.flops() - expected).abs() / expected < 1e-12);
+    }
+
+    #[test]
+    fn mla_dims() {
+        let s = OpSpec::mla(4096, true);
+        assert_eq!(s.qk_dim(), 192);
+        assert_eq!(s.v_head_dim, 128);
+        assert_eq!(s.latent_dim, 512);
+    }
+
+    #[test]
+    fn kernel_name_stable() {
+        let s = OpSpec::benchmark(AttnVariant::Gqa, 1024, 128, true);
+        assert_eq!(s.kernel_name(), "gqa_hd128_causal_f16");
+    }
+
+    #[test]
+    fn parse_variant() {
+        assert_eq!(AttnVariant::parse("MLA"), Some(AttnVariant::Mla));
+        assert_eq!(AttnVariant::parse("bogus"), None);
+    }
+}

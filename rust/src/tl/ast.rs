@@ -1,0 +1,303 @@
+//! AST for LLM-TL.
+//!
+//! The statement set follows §3 and Appendix D of the paper: `Copy` and
+//! `Compute` are the two fundamental statement families of the TL Sketch;
+//! `Allocate`, coordinate clauses and `Reshape` are added by the stage-1b
+//! parameter-reasoning step; `for` / `if` structure the execution flow;
+//! `param` records the concrete tile sizes the reasoner chose so a fully
+//! specified TL Code round-trips through text.
+
+use std::collections::BTreeMap;
+
+use super::expr::Expr;
+use super::types::{DType, Layout, MemSpace};
+
+/// A tensor operand, optionally transposed (`K_shared.T`). The paper's
+/// Appendix-B "GEMM error" failure class is precisely dropping this formal
+/// transpose marker: physically K keeps its layout (the mma instruction
+/// handles it), but TL must carry `.T` so translation stays correct.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorRef {
+    pub name: String,
+    pub transposed: bool,
+}
+
+impl TensorRef {
+    pub fn new(name: impl Into<String>) -> Self {
+        TensorRef { name: name.into(), transposed: false }
+    }
+
+    pub fn t(name: impl Into<String>) -> Self {
+        TensorRef { name: name.into(), transposed: true }
+    }
+}
+
+/// Computation kinds. `Gemm`, `Softmax` and "regular computation"
+/// (arithmetic) come straight from the paper's prompt (Listing 3);
+/// `CausalMask`, `RowMax`, `RowSum`, `Exp` are the finer-grained ops the
+/// reasoner uses when it expands the online-softmax recurrence; `Other`
+/// carries user-defined ops through the pipeline untouched.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ComputeOp {
+    Gemm,
+    /// Online softmax over a score tile. With a 2-element `with` list
+    /// `[m, l]` it is the FlashAttention running update; with a 3-element
+    /// list `[m, l, O]` the accumulator-rescale step is explicit.
+    Softmax,
+    CausalMask,
+    Multiply,
+    Add,
+    Subtract,
+    Divide,
+    Exp,
+    RowMax,
+    RowSum,
+    Max,
+    Other(String),
+}
+
+impl ComputeOp {
+    pub fn parse(s: &str) -> Self {
+        match s.to_ascii_lowercase().as_str() {
+            "gemm" => ComputeOp::Gemm,
+            "softmax" => ComputeOp::Softmax,
+            "causalmask" | "mask" => ComputeOp::CausalMask,
+            "multiply" | "mul" => ComputeOp::Multiply,
+            "add" => ComputeOp::Add,
+            "subtract" | "sub" => ComputeOp::Subtract,
+            "divide" | "div" => ComputeOp::Divide,
+            "exp" => ComputeOp::Exp,
+            "rowmax" => ComputeOp::RowMax,
+            "rowsum" => ComputeOp::RowSum,
+            "max" => ComputeOp::Max,
+            _ => ComputeOp::Other(s.to_string()),
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            ComputeOp::Gemm => "GEMM",
+            ComputeOp::Softmax => "Softmax",
+            ComputeOp::CausalMask => "CausalMask",
+            ComputeOp::Multiply => "Multiply",
+            ComputeOp::Add => "Add",
+            ComputeOp::Subtract => "Subtract",
+            ComputeOp::Divide => "Divide",
+            ComputeOp::Exp => "Exp",
+            ComputeOp::RowMax => "RowMax",
+            ComputeOp::RowSum => "RowSum",
+            ComputeOp::Max => "Max",
+            ComputeOp::Other(s) => s,
+        }
+    }
+}
+
+/// Comparison operators in `if` guards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
+        }
+    }
+
+    pub fn eval(&self, a: i64, b: i64) -> bool {
+        match self {
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+        }
+    }
+}
+
+/// A TL statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `param BM = 64` — a concrete binding chosen by the reasoner.
+    Param { name: String, value: i64 },
+    /// `Allocate A in global (M, K) with offset batch_offset [as f16]`
+    Allocate {
+        name: String,
+        space: MemSpace,
+        shape: Vec<Expr>,
+        offset: Option<Expr>,
+        dtype: Option<DType>,
+    },
+    /// `Copy A [(BM, BK)] [in coordinate [L = i]] from global to shared`
+    Copy {
+        tensor: String,
+        shape: Option<Vec<Expr>>,
+        coord: Vec<(String, Expr)>,
+        src: MemSpace,
+        dst: MemSpace,
+    },
+    /// `Compute <Op> in1[, in2...] [in coordinate [...]] [with a and b]
+    ///  [and get [new] X | and accumulate X]`
+    Compute {
+        op: ComputeOp,
+        inputs: Vec<TensorRef>,
+        coord: Vec<(String, Expr)>,
+        with: Vec<String>,
+        output: Option<String>,
+        accumulate: bool,
+        new_var: bool,
+    },
+    /// `Reshape G from (MMA_C, MMA_M, MMA_N) to (MMA_A, MMA_M, MMA_N_new)`
+    Reshape { tensor: String, from: Layout, to: Layout },
+    /// `for i = 0:N ... end`
+    For { var: String, start: Expr, end: Expr, body: Vec<Stmt> },
+    /// `if i < (kv_len/BN) - 1 ... end`
+    If { lhs: Expr, op: CmpOp, rhs: Expr, body: Vec<Stmt> },
+}
+
+impl Stmt {
+    /// Recursively visit this statement and all nested statements.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        f(self);
+        match self {
+            Stmt::For { body, .. } | Stmt::If { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A complete TL program: either a TL *Sketch* (execution flow only — no
+/// `Allocate`/`param`/coordinates yet) or a fully-reasoned TL *Code*.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TlProgram {
+    /// Human-readable kernel name (not part of the surface syntax).
+    pub name: String,
+    pub stmts: Vec<Stmt>,
+}
+
+impl TlProgram {
+    pub fn new(name: impl Into<String>, stmts: Vec<Stmt>) -> Self {
+        TlProgram { name: name.into(), stmts }
+    }
+
+    /// Collect `param` bindings into an environment.
+    pub fn params(&self) -> BTreeMap<String, i64> {
+        let mut env = BTreeMap::new();
+        for s in &self.stmts {
+            if let Stmt::Param { name, value } = s {
+                env.insert(name.clone(), *value);
+            }
+        }
+        env
+    }
+
+    /// Visit every statement (depth-first).
+    pub fn walk<'a>(&'a self, mut f: impl FnMut(&'a Stmt)) {
+        for s in &self.stmts {
+            s.walk(&mut f);
+        }
+    }
+
+    /// Total statement count including nested bodies — the paper's
+    /// "a mere dozen lines of TL" metric.
+    pub fn stmt_count(&self) -> usize {
+        let mut n = 0;
+        self.walk(|_| n += 1);
+        n
+    }
+
+    /// True if the program contains stage-1b artifacts (`Allocate`,
+    /// coordinates, `param`) — i.e. it is TL Code rather than a TL Sketch.
+    pub fn is_reasoned(&self) -> bool {
+        let mut reasoned = false;
+        self.walk(|s| match s {
+            Stmt::Param { .. } | Stmt::Allocate { .. } => reasoned = true,
+            Stmt::Copy { coord, .. } if !coord.is_empty() => reasoned = true,
+            _ => {}
+        });
+        reasoned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_op_parse_roundtrip() {
+        for op in [
+            ComputeOp::Gemm,
+            ComputeOp::Softmax,
+            ComputeOp::CausalMask,
+            ComputeOp::Multiply,
+            ComputeOp::Divide,
+            ComputeOp::Exp,
+            ComputeOp::RowMax,
+            ComputeOp::RowSum,
+        ] {
+            assert_eq!(ComputeOp::parse(op.as_str()), op);
+        }
+        assert_eq!(ComputeOp::parse("RoPE"), ComputeOp::Other("RoPE".into()));
+    }
+
+    #[test]
+    fn cmp_op_eval() {
+        assert!(CmpOp::Lt.eval(1, 2));
+        assert!(!CmpOp::Lt.eval(2, 2));
+        assert!(CmpOp::Le.eval(2, 2));
+        assert!(CmpOp::Ne.eval(1, 2));
+    }
+
+    #[test]
+    fn program_params() {
+        let p = TlProgram::new(
+            "t",
+            vec![
+                Stmt::Param { name: "BM".into(), value: 64 },
+                Stmt::Param { name: "BN".into(), value: 32 },
+            ],
+        );
+        let env = p.params();
+        assert_eq!(env["BM"], 64);
+        assert_eq!(env["BN"], 32);
+    }
+
+    #[test]
+    fn walk_counts_nested() {
+        let p = TlProgram::new(
+            "t",
+            vec![Stmt::For {
+                var: "i".into(),
+                start: Expr::int(0),
+                end: Expr::int(4),
+                body: vec![Stmt::Compute {
+                    op: ComputeOp::Softmax,
+                    inputs: vec![TensorRef::new("S")],
+                    coord: vec![],
+                    with: vec![],
+                    output: None,
+                    accumulate: false,
+                    new_var: false,
+                }],
+            }],
+        );
+        assert_eq!(p.stmt_count(), 2);
+        assert!(!p.is_reasoned());
+    }
+}

@@ -1,0 +1,24 @@
+//! Error types for the TL language layer.
+
+use std::fmt;
+
+/// Lexing/parsing error with line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl TlError {
+    pub fn new(line: usize, message: impl Into<String>) -> Self {
+        TlError { line, message: message.into() }
+    }
+}
+
+impl fmt::Display for TlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TL error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TlError {}

@@ -1,0 +1,194 @@
+//! Symbolic integer expressions used for TL dimensions, coordinates and
+//! loop bounds: `BM`, `HeadDim`, `kv_len/BN`, `(kv_len/BN) - 1`, `i + 1`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+        }
+    }
+}
+
+/// A symbolic integer expression over named parameters and loop variables.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    Int(i64),
+    Sym(String),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn sym(s: impl Into<String>) -> Self {
+        Expr::Sym(s.into())
+    }
+
+    pub fn int(v: i64) -> Self {
+        Expr::Int(v)
+    }
+
+    pub fn add(a: Expr, b: Expr) -> Self {
+        Expr::Bin(BinOp::Add, Box::new(a), Box::new(b))
+    }
+
+    pub fn sub(a: Expr, b: Expr) -> Self {
+        Expr::Bin(BinOp::Sub, Box::new(a), Box::new(b))
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Self {
+        Expr::Bin(BinOp::Mul, Box::new(a), Box::new(b))
+    }
+
+    pub fn div(a: Expr, b: Expr) -> Self {
+        Expr::Bin(BinOp::Div, Box::new(a), Box::new(b))
+    }
+
+    /// Evaluate under a binding environment. `Div` is exact integer
+    /// division in TL (dimensions are chosen to divide evenly; the
+    /// verifier checks this); evaluation uses floor division and flags
+    /// division by zero.
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        match self {
+            Expr::Int(v) => Ok(*v),
+            Expr::Sym(s) => env
+                .get(s)
+                .copied()
+                .ok_or_else(|| format!("unbound symbol `{s}`")),
+            Expr::Bin(op, a, b) => {
+                let a = a.eval(env)?;
+                let b = b.eval(env)?;
+                match op {
+                    BinOp::Add => Ok(a + b),
+                    BinOp::Sub => Ok(a - b),
+                    BinOp::Mul => Ok(a * b),
+                    BinOp::Div => {
+                        if b == 0 {
+                            Err("division by zero".to_string())
+                        } else {
+                            Ok(a.div_euclid(b))
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// All symbols referenced by this expression.
+    pub fn symbols(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Int(_) => {}
+            Expr::Sym(s) => {
+                if !out.contains(s) {
+                    out.push(s.clone());
+                }
+            }
+            Expr::Bin(_, a, b) => {
+                a.symbols(out);
+                b.symbols(out);
+            }
+        }
+    }
+
+    fn precedence(&self) -> u8 {
+        match self {
+            Expr::Int(_) | Expr::Sym(_) => 3,
+            Expr::Bin(BinOp::Mul | BinOp::Div, _, _) => 2,
+            Expr::Bin(BinOp::Add | BinOp::Sub, _, _) => 1,
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Int(v) => write!(f, "{v}"),
+            Expr::Sym(s) => write!(f, "{s}"),
+            Expr::Bin(op, a, b) => {
+                let my_prec = self.precedence();
+                // Parenthesize sub-expressions of lower precedence; for the
+                // non-associative ops (- /) also parenthesize an equal-
+                // precedence right operand so printing is unambiguous.
+                let left_needs = a.precedence() < my_prec;
+                let right_needs = match op {
+                    BinOp::Add | BinOp::Mul => b.precedence() < my_prec,
+                    BinOp::Sub | BinOp::Div => b.precedence() <= my_prec,
+                };
+                if left_needs {
+                    write!(f, "({a})")?;
+                } else {
+                    write!(f, "{a}")?;
+                }
+                write!(f, " {} ", op.as_str())?;
+                if right_needs {
+                    write!(f, "({b})")
+                } else {
+                    write!(f, "{b}")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn eval_basic() {
+        let e = Expr::sub(Expr::div(Expr::sym("kv_len"), Expr::sym("BN")), Expr::int(1));
+        assert_eq!(e.eval(&env(&[("kv_len", 1024), ("BN", 64)])).unwrap(), 15);
+    }
+
+    #[test]
+    fn eval_unbound_symbol() {
+        let e = Expr::sym("BM");
+        assert!(e.eval(&env(&[])).unwrap_err().contains("BM"));
+    }
+
+    #[test]
+    fn eval_division_by_zero() {
+        let e = Expr::div(Expr::int(4), Expr::sym("z"));
+        assert!(e.eval(&env(&[("z", 0)])).is_err());
+    }
+
+    #[test]
+    fn display_precedence() {
+        // (a + b) * c needs parens; a * b + c does not.
+        let e1 = Expr::mul(Expr::add(Expr::sym("a"), Expr::sym("b")), Expr::sym("c"));
+        assert_eq!(e1.to_string(), "(a + b) * c");
+        let e2 = Expr::add(Expr::mul(Expr::sym("a"), Expr::sym("b")), Expr::sym("c"));
+        assert_eq!(e2.to_string(), "a * b + c");
+    }
+
+    #[test]
+    fn display_right_assoc_parens() {
+        // a - (b - c) must keep parens.
+        let e = Expr::sub(Expr::sym("a"), Expr::sub(Expr::sym("b"), Expr::sym("c")));
+        assert_eq!(e.to_string(), "a - (b - c)");
+    }
+
+    #[test]
+    fn symbols_dedup() {
+        let e = Expr::add(Expr::sym("BM"), Expr::mul(Expr::sym("BM"), Expr::sym("BN")));
+        let mut syms = Vec::new();
+        e.symbols(&mut syms);
+        assert_eq!(syms, vec!["BM".to_string(), "BN".to_string()]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Line-oriented lexer for TL text.
+//!
+//! `//` and `#` start comments running to end of line. Blank lines produce
+//! no tokens; each non-blank line ends with a single `Newline` token.
+
+use super::error::TlError;
+use super::token::{SpannedTok, Tok};
+
+pub fn lex(input: &str) -> Result<Vec<SpannedTok>, TlError> {
+    let mut out = Vec::new();
+    for (lineno0, raw_line) in input.lines().enumerate() {
+        let line_no = lineno0 + 1;
+        // Strip comments.
+        let mut line = raw_line;
+        if let Some(pos) = find_comment(line) {
+            line = &line[..pos];
+        }
+        let mut chars = line.char_indices().peekable();
+        let start_len = out.len();
+        while let Some(&(i, c)) = chars.peek() {
+            match c {
+                ' ' | '\t' | '\r' => {
+                    chars.next();
+                }
+                '(' => push1(&mut out, &mut chars, Tok::LParen, line_no),
+                ')' => push1(&mut out, &mut chars, Tok::RParen, line_no),
+                '[' => push1(&mut out, &mut chars, Tok::LBracket, line_no),
+                ']' => push1(&mut out, &mut chars, Tok::RBracket, line_no),
+                ',' => push1(&mut out, &mut chars, Tok::Comma, line_no),
+                ':' => push1(&mut out, &mut chars, Tok::Colon, line_no),
+                '+' => push1(&mut out, &mut chars, Tok::Plus, line_no),
+                '*' => push1(&mut out, &mut chars, Tok::Star, line_no),
+                '/' => push1(&mut out, &mut chars, Tok::Slash, line_no),
+                '.' => push1(&mut out, &mut chars, Tok::Dot, line_no),
+                '-' => push1(&mut out, &mut chars, Tok::Minus, line_no),
+                '=' => {
+                    chars.next();
+                    if matches!(chars.peek(), Some(&(_, '='))) {
+                        chars.next();
+                        out.push(SpannedTok { tok: Tok::EqEq, line: line_no });
+                    } else {
+                        out.push(SpannedTok { tok: Tok::Eq, line: line_no });
+                    }
+                }
+                '!' => {
+                    chars.next();
+                    if matches!(chars.peek(), Some(&(_, '='))) {
+                        chars.next();
+                        out.push(SpannedTok { tok: Tok::Ne, line: line_no });
+                    } else {
+                        return Err(TlError::new(line_no, "unexpected '!'"));
+                    }
+                }
+                '<' => {
+                    chars.next();
+                    if matches!(chars.peek(), Some(&(_, '='))) {
+                        chars.next();
+                        out.push(SpannedTok { tok: Tok::Le, line: line_no });
+                    } else {
+                        out.push(SpannedTok { tok: Tok::Lt, line: line_no });
+                    }
+                }
+                '>' => {
+                    chars.next();
+                    if matches!(chars.peek(), Some(&(_, '='))) {
+                        chars.next();
+                        out.push(SpannedTok { tok: Tok::Ge, line: line_no });
+                    } else {
+                        out.push(SpannedTok { tok: Tok::Gt, line: line_no });
+                    }
+                }
+                '0'..='9' => {
+                    let mut j = i;
+                    while let Some(&(k, d)) = chars.peek() {
+                        if d.is_ascii_digit() {
+                            j = k;
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    let text = &line[i..=j];
+                    let v: i64 = text
+                        .parse()
+                        .map_err(|_| TlError::new(line_no, format!("bad integer `{text}`")))?;
+                    out.push(SpannedTok { tok: Tok::Int(v), line: line_no });
+                }
+                c if c.is_alphabetic() || c == '_' => {
+                    let mut j = i;
+                    while let Some(&(k, d)) = chars.peek() {
+                        if d.is_alphanumeric() || d == '_' {
+                            j = k;
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    out.push(SpannedTok { tok: Tok::Ident(line[i..=j].to_string()), line: line_no });
+                }
+                other => {
+                    return Err(TlError::new(line_no, format!("unexpected character `{other}`")));
+                }
+            }
+        }
+        if out.len() > start_len {
+            out.push(SpannedTok { tok: Tok::Newline, line: line_no });
+        }
+    }
+    let last_line = input.lines().count();
+    out.push(SpannedTok { tok: Tok::Eof, line: last_line + 1 });
+    Ok(out)
+}
+
+fn push1(
+    out: &mut Vec<SpannedTok>,
+    chars: &mut std::iter::Peekable<std::str::CharIndices<'_>>,
+    tok: Tok,
+    line: usize,
+) {
+    chars.next();
+    out.push(SpannedTok { tok, line });
+}
+
+/// Find the byte offset where a `//` or `#` comment begins, if any.
+fn find_comment(line: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    for i in 0..bytes.len() {
+        if bytes[i] == b'#' {
+            return Some(i);
+        }
+        if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(input: &str) -> Vec<Tok> {
+        lex(input).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lex_copy_statement() {
+        let t = toks("Copy Q from global to shared");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("Copy".into()),
+                Tok::Ident("Q".into()),
+                Tok::Ident("from".into()),
+                Tok::Ident("global".into()),
+                Tok::Ident("to".into()),
+                Tok::Ident("shared".into()),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_coordinate_clause() {
+        let t = toks("Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared");
+        assert!(t.contains(&Tok::LBracket));
+        assert!(t.contains(&Tok::Eq));
+        assert!(t.contains(&Tok::Ident("block_idx".into())));
+    }
+
+    #[test]
+    fn lex_comments_stripped() {
+        let t = toks("Compute Softmax S // online softmax\n# whole-line comment\nCompute Exp S");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("Compute".into()),
+                Tok::Ident("Softmax".into()),
+                Tok::Ident("S".into()),
+                Tok::Newline,
+                Tok::Ident("Compute".into()),
+                Tok::Ident("Exp".into()),
+                Tok::Ident("S".into()),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_expression_tokens() {
+        let t = toks("if i < (kv_len/BN) - 1");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("if".into()),
+                Tok::Ident("i".into()),
+                Tok::Lt,
+                Tok::LParen,
+                Tok::Ident("kv_len".into()),
+                Tok::Slash,
+                Tok::Ident("BN".into()),
+                Tok::RParen,
+                Tok::Minus,
+                Tok::Int(1),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_transpose_dot() {
+        let t = toks("Compute GEMM Q_shared, K_shared.T and get S");
+        assert!(t.contains(&Tok::Dot));
+        assert!(t.contains(&Tok::Ident("T".into())));
+    }
+
+    #[test]
+    fn lex_comparison_ops() {
+        assert_eq!(toks("a <= b")[1], Tok::Le);
+        assert_eq!(toks("a >= b")[1], Tok::Ge);
+        assert_eq!(toks("a == b")[1], Tok::EqEq);
+        assert_eq!(toks("a != b")[1], Tok::Ne);
+    }
+
+    #[test]
+    fn lex_bad_char_errors() {
+        assert!(lex("Copy Q @ global").is_err());
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let t = toks("\n\nCopy Q from global to shared\n\n");
+        assert_eq!(t.iter().filter(|t| **t == Tok::Newline).count(), 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! LLM-TL: the paper's "LLM-friendly Thinking Language".
+//!
+//! TL abstracts the execution of an operator on a GPU into two statement
+//! families — `Copy` (data movement between global / shared / register
+//! memory) and `Compute` (GEMM, softmax, elementwise) — plus the support
+//! statements the paper's stage-2 reasoning adds: `Allocate` (tensor
+//! declaration at a memory level), `Reshape` (mma fragment-layout change
+//! required to fuse consecutive GEMMs), `for` loops and `if` guards.
+//!
+//! This module is the language core: token stream ([`lexer`]), symbolic
+//! dimension expressions ([`expr`]), AST ([`ast`]), recursive-descent
+//! parser ([`parser`]) and pretty-printer ([`printer`]). The printer and
+//! parser round-trip: `parse(print(p)) == p` (property-tested).
+
+pub mod ast;
+pub mod error;
+pub mod expr;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+pub mod token;
+pub mod types;
+
+pub use ast::{ComputeOp, Stmt, TensorRef, TlProgram};
+pub use error::TlError;
+pub use expr::Expr;
+pub use parser::parse_program;
+pub use printer::print_program;
+pub use types::{DType, Frag, Layout, MemSpace};

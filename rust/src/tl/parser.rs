@@ -1,0 +1,675 @@
+//! Recursive-descent parser for TL text.
+//!
+//! Grammar (line-oriented; keywords case-insensitive; `end` closes `for`
+//! and `if` blocks):
+//!
+//! ```text
+//! stmt     := param | allocate | copy | compute | reshape | for | if
+//! param    := "param" IDENT "=" INT
+//! allocate := "Allocate" IDENT "in" memspace shape ["with" "offset" expr] ["as" dtype]
+//! copy     := "Copy" IDENT [shape] [coord] "from" memspace "to" memspace
+//! compute  := "Compute" OP operands [coord] [with] ["and" ("get" ["new"] IDENT | "accumulate" IDENT)]
+//! reshape  := "Reshape" IDENT "from" layout "to" layout
+//! for      := "for" IDENT "=" expr ":" expr NL stmt* "end"
+//! if       := "if" expr CMP expr NL stmt* "end"
+//! coord    := "in" ("coordinate" | "coor") "[" IDENT "=" expr ("," IDENT "=" expr)* "]"
+//! with     := "with" IDENT (("and" | ",") IDENT)*
+//! ```
+
+use super::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
+use super::error::TlError;
+use super::expr::{BinOp, Expr};
+use super::lexer::lex;
+use super::token::{SpannedTok, Tok};
+use super::types::{DType, Frag, Layout, MemSpace};
+
+pub fn parse_program(input: &str) -> Result<TlProgram, TlError> {
+    let toks = lex(input)?;
+    let mut p = Parser { toks, pos: 0 };
+    let stmts = p.parse_block(/*top_level=*/ true)?;
+    Ok(TlProgram::new("tl_program", stmts))
+}
+
+struct Parser {
+    toks: Vec<SpannedTok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> TlError {
+        TlError::new(self.line(), msg)
+    }
+
+    fn expect(&mut self, tok: &Tok) -> Result<(), TlError> {
+        if self.peek() == tok {
+            self.next();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{tok}`, found `{}`", self.peek())))
+        }
+    }
+
+    /// Consume a keyword (case-insensitive identifier match).
+    fn expect_kw(&mut self, kw: &str) -> Result<(), TlError> {
+        if self.peek_kw(kw) {
+            self.next();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{kw}`, found `{}`", self.peek())))
+        }
+    }
+
+    fn peek_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if s.eq_ignore_ascii_case(kw))
+    }
+
+    fn ident(&mut self) -> Result<String, TlError> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(self.err(format!("expected identifier, found `{other}`"))),
+        }
+    }
+
+    fn newline(&mut self) -> Result<(), TlError> {
+        match self.peek() {
+            Tok::Newline => {
+                self.next();
+                Ok(())
+            }
+            Tok::Eof => Ok(()),
+            other => Err(self.err(format!("expected end of line, found `{other}`"))),
+        }
+    }
+
+    fn parse_block(&mut self, top_level: bool) -> Result<Vec<Stmt>, TlError> {
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Eof => {
+                    if top_level {
+                        return Ok(stmts);
+                    }
+                    return Err(self.err("unexpected end of input inside block (missing `end`)"));
+                }
+                Tok::Newline => {
+                    self.next();
+                }
+                Tok::Ident(s) if s.eq_ignore_ascii_case("end") => {
+                    if top_level {
+                        return Err(self.err("`end` without matching `for`/`if`"));
+                    }
+                    self.next();
+                    self.newline()?;
+                    return Ok(stmts);
+                }
+                _ => stmts.push(self.parse_stmt()?),
+            }
+        }
+    }
+
+    fn parse_stmt(&mut self) -> Result<Stmt, TlError> {
+        let kw = match self.peek() {
+            Tok::Ident(s) => s.to_ascii_lowercase(),
+            other => return Err(self.err(format!("expected statement, found `{other}`"))),
+        };
+        match kw.as_str() {
+            "param" => self.parse_param(),
+            "allocate" => self.parse_allocate(),
+            "copy" => self.parse_copy(),
+            "compute" => self.parse_compute(),
+            "reshape" => self.parse_reshape(),
+            "for" => self.parse_for(),
+            "if" => self.parse_if(),
+            other => Err(self.err(format!("unknown statement `{other}`"))),
+        }
+    }
+
+    fn parse_param(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("param")?;
+        let name = self.ident()?;
+        self.expect(&Tok::Eq)?;
+        let value = match self.next() {
+            Tok::Int(v) => v,
+            Tok::Minus => match self.next() {
+                Tok::Int(v) => -v,
+                other => return Err(self.err(format!("expected integer, found `{other}`"))),
+            },
+            other => return Err(self.err(format!("expected integer, found `{other}`"))),
+        };
+        self.newline()?;
+        Ok(Stmt::Param { name, value })
+    }
+
+    fn parse_allocate(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("allocate")?;
+        let name = self.ident()?;
+        self.expect_kw("in")?;
+        let space = self.memspace()?;
+        let shape = self.parse_shape()?;
+        let mut offset = None;
+        if self.peek_kw("with") {
+            self.next();
+            self.expect_kw("offset")?;
+            offset = Some(self.parse_expr()?);
+        }
+        let mut dtype = None;
+        if self.peek_kw("as") {
+            self.next();
+            let d = self.ident()?;
+            dtype = Some(
+                DType::parse(&d).ok_or_else(|| self.err(format!("unknown dtype `{d}`")))?,
+            );
+        }
+        self.newline()?;
+        Ok(Stmt::Allocate { name, space, shape, offset, dtype })
+    }
+
+    fn parse_copy(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("copy")?;
+        let tensor = self.ident()?;
+        let shape = if matches!(self.peek(), Tok::LParen) {
+            Some(self.parse_shape()?)
+        } else {
+            None
+        };
+        let mut coord = Vec::new();
+        if self.peek_kw("in") {
+            coord = self.parse_coord()?;
+        }
+        self.expect_kw("from")?;
+        let src = self.memspace()?;
+        self.expect_kw("to")?;
+        let dst = self.memspace()?;
+        self.newline()?;
+        Ok(Stmt::Copy { tensor, shape, coord, src, dst })
+    }
+
+    fn parse_compute(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("compute")?;
+        let op_name = self.ident()?;
+        let op = ComputeOp::parse(&op_name);
+        // Operand list: tensor refs until `and` / `with` / `in` / newline.
+        let mut inputs = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Ident(s)
+                    if s.eq_ignore_ascii_case("and")
+                        || s.eq_ignore_ascii_case("with")
+                        || s.eq_ignore_ascii_case("in") =>
+                {
+                    break
+                }
+                Tok::Ident(_) => {
+                    inputs.push(self.parse_tensor_ref()?);
+                    if matches!(self.peek(), Tok::Comma) {
+                        self.next();
+                    }
+                }
+                _ => break,
+            }
+        }
+        let mut coord = Vec::new();
+        if self.peek_kw("in") {
+            coord = self.parse_coord()?;
+        }
+        let mut with = Vec::new();
+        if self.peek_kw("with") {
+            self.next();
+            with.push(self.ident()?);
+            loop {
+                if matches!(self.peek(), Tok::Comma) {
+                    self.next();
+                    with.push(self.ident()?);
+                } else if self.peek_kw("and") {
+                    // `and` either continues the with-list or starts the
+                    // output tail (`and get` / `and accumulate`).
+                    let save = self.pos;
+                    self.next();
+                    if self.peek_kw("get") || self.peek_kw("accumulate") {
+                        self.pos = save;
+                        break;
+                    }
+                    with.push(self.ident()?);
+                } else {
+                    break;
+                }
+            }
+        }
+        let mut output = None;
+        let mut accumulate = false;
+        let mut new_var = false;
+        if self.peek_kw("and") {
+            self.next();
+            if self.peek_kw("get") {
+                self.next();
+                if self.peek_kw("new") {
+                    self.next();
+                    new_var = true;
+                }
+                output = Some(self.ident()?);
+            } else if self.peek_kw("accumulate") {
+                self.next();
+                accumulate = true;
+                output = Some(self.ident()?);
+            } else {
+                return Err(self.err("expected `get` or `accumulate` after `and`"));
+            }
+        }
+        self.newline()?;
+        Ok(Stmt::Compute { op, inputs, coord, with, output, accumulate, new_var })
+    }
+
+    fn parse_reshape(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("reshape")?;
+        let tensor = self.ident()?;
+        self.expect_kw("from")?;
+        let from = self.parse_layout()?;
+        self.expect_kw("to")?;
+        let to = self.parse_layout()?;
+        self.newline()?;
+        Ok(Stmt::Reshape { tensor, from, to })
+    }
+
+    fn parse_for(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("for")?;
+        let var = self.ident()?;
+        self.expect(&Tok::Eq)?;
+        let start = self.parse_expr()?;
+        self.expect(&Tok::Colon)?;
+        let end = self.parse_expr()?;
+        self.newline()?;
+        let body = self.parse_block(false)?;
+        Ok(Stmt::For { var, start, end, body })
+    }
+
+    fn parse_if(&mut self) -> Result<Stmt, TlError> {
+        self.expect_kw("if")?;
+        let lhs = self.parse_expr()?;
+        let op = match self.next() {
+            Tok::Lt => CmpOp::Lt,
+            Tok::Le => CmpOp::Le,
+            Tok::Gt => CmpOp::Gt,
+            Tok::Ge => CmpOp::Ge,
+            Tok::EqEq => CmpOp::Eq,
+            Tok::Ne => CmpOp::Ne,
+            other => return Err(self.err(format!("expected comparison, found `{other}`"))),
+        };
+        let rhs = self.parse_expr()?;
+        self.newline()?;
+        let body = self.parse_block(false)?;
+        Ok(Stmt::If { lhs, op, rhs, body })
+    }
+
+    fn parse_tensor_ref(&mut self) -> Result<TensorRef, TlError> {
+        let name = self.ident()?;
+        let mut transposed = false;
+        if matches!(self.peek(), Tok::Dot) {
+            self.next();
+            let t = self.ident()?;
+            if !t.eq_ignore_ascii_case("t") {
+                return Err(self.err(format!("expected `.T` transpose marker, found `.{t}`")));
+            }
+            transposed = true;
+        }
+        Ok(TensorRef { name, transposed })
+    }
+
+    fn memspace(&mut self) -> Result<MemSpace, TlError> {
+        let s = self.ident()?;
+        MemSpace::parse(&s).ok_or_else(|| self.err(format!("unknown memory space `{s}`")))
+    }
+
+    fn parse_shape(&mut self) -> Result<Vec<Expr>, TlError> {
+        self.expect(&Tok::LParen)?;
+        let mut dims = vec![self.parse_expr()?];
+        while matches!(self.peek(), Tok::Comma) {
+            self.next();
+            dims.push(self.parse_expr()?);
+        }
+        self.expect(&Tok::RParen)?;
+        Ok(dims)
+    }
+
+    fn parse_coord(&mut self) -> Result<Vec<(String, Expr)>, TlError> {
+        self.expect_kw("in")?;
+        if self.peek_kw("coordinate") || self.peek_kw("coor") {
+            self.next();
+        } else {
+            return Err(self.err("expected `coordinate` after `in`"));
+        }
+        self.expect(&Tok::LBracket)?;
+        let mut coords = Vec::new();
+        loop {
+            let name = self.ident()?;
+            self.expect(&Tok::Eq)?;
+            let e = self.parse_expr()?;
+            coords.push((name, e));
+            if matches!(self.peek(), Tok::Comma) {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        self.expect(&Tok::RBracket)?;
+        Ok(coords)
+    }
+
+    fn parse_layout(&mut self) -> Result<Layout, TlError> {
+        if matches!(self.peek(), Tok::LParen) {
+            self.next();
+            let first = self.ident()?;
+            let frag = Frag::parse(&first)
+                .ok_or_else(|| self.err(format!("unknown mma fragment `{first}`")))?;
+            let mut dims = Vec::new();
+            while matches!(self.peek(), Tok::Comma) {
+                self.next();
+                dims.push(self.ident()?);
+            }
+            self.expect(&Tok::RParen)?;
+            Ok(Layout { frag, dims })
+        } else {
+            let s = self.ident()?;
+            let frag =
+                Frag::parse(&s).ok_or_else(|| self.err(format!("unknown mma fragment `{s}`")))?;
+            Ok(Layout::frag_only(frag))
+        }
+    }
+
+    // Expression parsing: precedence climbing.
+    fn parse_expr(&mut self) -> Result<Expr, TlError> {
+        let mut lhs = self.parse_term()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.parse_term()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_term(&mut self) -> Result<Expr, TlError> {
+        let mut lhs = self.parse_factor()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.parse_factor()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_factor(&mut self) -> Result<Expr, TlError> {
+        match self.next() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Ident(s) => Ok(Expr::Sym(s)),
+            Tok::Minus => {
+                let inner = self.parse_factor()?;
+                Ok(Expr::Bin(BinOp::Sub, Box::new(Expr::Int(0)), Box::new(inner)))
+            }
+            Tok::LParen => {
+                let e = self.parse_expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            other => Err(self.err(format!("expected expression, found `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sketch_copy() {
+        let p = parse_program("Copy Q from global to shared").unwrap();
+        assert_eq!(
+            p.stmts,
+            vec![Stmt::Copy {
+                tensor: "Q".into(),
+                shape: None,
+                coord: vec![],
+                src: MemSpace::Global,
+                dst: MemSpace::Shared,
+            }]
+        );
+    }
+
+    #[test]
+    fn parse_full_copy_with_coordinate() {
+        let p = parse_program(
+            "Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared",
+        )
+        .unwrap();
+        match &p.stmts[0] {
+            Stmt::Copy { tensor, shape, coord, src, dst } => {
+                assert_eq!(tensor, "Q");
+                assert_eq!(
+                    shape.as_ref().unwrap(),
+                    &vec![Expr::sym("BM"), Expr::sym("HeadDim")]
+                );
+                assert_eq!(coord, &vec![("L".to_string(), Expr::sym("block_idx"))]);
+                assert_eq!(*src, MemSpace::Global);
+                assert_eq!(*dst, MemSpace::Shared);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_gemm_with_transpose() {
+        let p = parse_program("Compute GEMM Q_shared, K_shared.T and get S").unwrap();
+        match &p.stmts[0] {
+            Stmt::Compute { op, inputs, output, accumulate, .. } => {
+                assert_eq!(*op, ComputeOp::Gemm);
+                assert_eq!(inputs, &vec![TensorRef::new("Q_shared"), TensorRef::t("K_shared")]);
+                assert_eq!(output.as_deref(), Some("S"));
+                assert!(!accumulate);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_gemm_accumulate() {
+        let p = parse_program("Compute GEMM S, V_shared and accumulate O_register").unwrap();
+        match &p.stmts[0] {
+            Stmt::Compute { accumulate, output, .. } => {
+                assert!(accumulate);
+                assert_eq!(output.as_deref(), Some("O_register"));
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_softmax_with_running_stats() {
+        let p = parse_program("Compute Softmax S with Smax and Ssum").unwrap();
+        match &p.stmts[0] {
+            Stmt::Compute { op, inputs, with, .. } => {
+                assert_eq!(*op, ComputeOp::Softmax);
+                assert_eq!(inputs, &vec![TensorRef::new("S")]);
+                assert_eq!(with, &vec!["Smax".to_string(), "Ssum".to_string()]);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_with_list_then_output_tail() {
+        let p = parse_program("Compute Softmax S with m and l and get P").unwrap();
+        match &p.stmts[0] {
+            Stmt::Compute { with, output, .. } => {
+                assert_eq!(with, &vec!["m".to_string(), "l".to_string()]);
+                assert_eq!(output.as_deref(), Some("P"));
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_multiply_get_new() {
+        let p = parse_program("Compute Multiply A, x and get new A").unwrap();
+        match &p.stmts[0] {
+            Stmt::Compute { op, new_var, output, .. } => {
+                assert_eq!(*op, ComputeOp::Multiply);
+                assert!(*new_var);
+                assert_eq!(output.as_deref(), Some("A"));
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_allocate_with_offset() {
+        let p = parse_program("Allocate A in global (M, K) with offset batch_offset").unwrap();
+        match &p.stmts[0] {
+            Stmt::Allocate { name, space, shape, offset, dtype } => {
+                assert_eq!(name, "A");
+                assert_eq!(*space, MemSpace::Global);
+                assert_eq!(shape.len(), 2);
+                assert_eq!(offset.as_ref().unwrap(), &Expr::sym("batch_offset"));
+                assert!(dtype.is_none());
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_allocate_register_with_dtype() {
+        let p = parse_program("Allocate C in register (BM, BN) as f32").unwrap();
+        match &p.stmts[0] {
+            Stmt::Allocate { space, dtype, .. } => {
+                assert_eq!(*space, MemSpace::Register);
+                assert_eq!(*dtype, Some(DType::F32));
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_reshape_layouts() {
+        let p = parse_program(
+            "Reshape G from (MMA_C, MMA_M, MMA_N) to (MMA_A, MMA_M, MMA_N_new)",
+        )
+        .unwrap();
+        match &p.stmts[0] {
+            Stmt::Reshape { tensor, from, to } => {
+                assert_eq!(tensor, "G");
+                assert_eq!(from.frag, Frag::C);
+                assert_eq!(to.frag, Frag::A);
+                assert_eq!(to.dims, vec!["MMA_M".to_string(), "MMA_N_new".to_string()]);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_reshape_shorthand() {
+        let p = parse_program("reshape rS from mma_C to mma_A").unwrap();
+        match &p.stmts[0] {
+            Stmt::Reshape { from, to, .. } => {
+                assert_eq!(from.frag, Frag::C);
+                assert_eq!(to.frag, Frag::A);
+                assert!(from.dims.is_empty());
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_for_loop_with_body() {
+        let src = "for i = 0:kv_len/BN\n  Copy K from global to shared\n  Compute Softmax S\nend";
+        let p = parse_program(src).unwrap();
+        match &p.stmts[0] {
+            Stmt::For { var, start, end, body } => {
+                assert_eq!(var, "i");
+                assert_eq!(*start, Expr::int(0));
+                assert_eq!(*end, Expr::div(Expr::sym("kv_len"), Expr::sym("BN")));
+                assert_eq!(body.len(), 2);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_if_guard() {
+        let src = "if i < (kv_len/BN) - 1\n  Copy K (BN, HeadDim) in coordinate [L = i+1] from global to shared\nend";
+        let p = parse_program(src).unwrap();
+        match &p.stmts[0] {
+            Stmt::If { op, body, .. } => {
+                assert_eq!(*op, CmpOp::Lt);
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_listing1_from_paper() {
+        // Appendix B, Listing 1 (the reshape-omission failure case) must
+        // parse — the *verifier*, not the parser, rejects it.
+        let src = "\
+Compute GEMM Q_shared, K_shared.T and get S
+if i < (kv_len/BN) - 1
+  Copy K (BN, HeadDim) in coordinate [L = i+1] from global to shared
+end
+Compute Softmax S
+Compute GEMM S, V_shared and accumulate O_register
+";
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.stmts.len(), 4);
+    }
+
+    #[test]
+    fn parse_param() {
+        let p = parse_program("param BM = 64\nparam BN = 32").unwrap();
+        assert_eq!(p.params()["BM"], 64);
+        assert_eq!(p.params()["BN"], 32);
+    }
+
+    #[test]
+    fn missing_end_errors() {
+        assert!(parse_program("for i = 0:4\nCompute Softmax S").is_err());
+    }
+
+    #[test]
+    fn stray_end_errors() {
+        assert!(parse_program("end").is_err());
+    }
+
+    #[test]
+    fn unknown_statement_errors() {
+        let e = parse_program("Transmogrify Q").unwrap_err();
+        assert!(e.message.contains("unknown statement"));
+    }
+
+    #[test]
+    fn unknown_memspace_errors() {
+        assert!(parse_program("Copy Q from vmem to shared").is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Pretty-printer for TL programs. `parse_program(print_program(p))`
+//! round-trips (property-tested in `rust/tests/tl_roundtrip.rs`).
+
+use super::ast::{Stmt, TensorRef, TlProgram};
+use std::fmt::Write;
+
+pub fn print_program(p: &TlProgram) -> String {
+    let mut out = String::new();
+    for s in &p.stmts {
+        print_stmt(&mut out, s, 0);
+    }
+    out
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn tensor_ref(t: &TensorRef) -> String {
+    if t.transposed {
+        format!("{}.T", t.name)
+    } else {
+        t.name.clone()
+    }
+}
+
+fn print_stmt(out: &mut String, s: &Stmt, depth: usize) {
+    indent(out, depth);
+    match s {
+        Stmt::Param { name, value } => {
+            writeln!(out, "param {name} = {value}").unwrap();
+        }
+        Stmt::Allocate { name, space, shape, offset, dtype } => {
+            let dims: Vec<String> = shape.iter().map(|e| e.to_string()).collect();
+            write!(out, "Allocate {name} in {space} ({})", dims.join(", ")).unwrap();
+            if let Some(off) = offset {
+                write!(out, " with offset {off}").unwrap();
+            }
+            if let Some(d) = dtype {
+                write!(out, " as {d}").unwrap();
+            }
+            out.push('\n');
+        }
+        Stmt::Copy { tensor, shape, coord, src, dst } => {
+            write!(out, "Copy {tensor}").unwrap();
+            if let Some(shape) = shape {
+                let dims: Vec<String> = shape.iter().map(|e| e.to_string()).collect();
+                write!(out, " ({})", dims.join(", ")).unwrap();
+            }
+            if !coord.is_empty() {
+                let cs: Vec<String> =
+                    coord.iter().map(|(n, e)| format!("{n} = {e}")).collect();
+                write!(out, " in coordinate [{}]", cs.join(", ")).unwrap();
+            }
+            writeln!(out, " from {src} to {dst}").unwrap();
+        }
+        Stmt::Compute { op, inputs, coord, with, output, accumulate, new_var } => {
+            write!(out, "Compute {}", op.as_str()).unwrap();
+            let ins: Vec<String> = inputs.iter().map(tensor_ref).collect();
+            if !ins.is_empty() {
+                write!(out, " {}", ins.join(", ")).unwrap();
+            }
+            if !coord.is_empty() {
+                let cs: Vec<String> =
+                    coord.iter().map(|(n, e)| format!("{n} = {e}")).collect();
+                write!(out, " in coordinate [{}]", cs.join(", ")).unwrap();
+            }
+            if !with.is_empty() {
+                // Paper style: `with a and b` for two names, commas before
+                // the final `and` for longer lists.
+                if with.len() == 1 {
+                    write!(out, " with {}", with[0]).unwrap();
+                } else {
+                    let head = &with[..with.len() - 1];
+                    write!(out, " with {} and {}", head.join(", "), with.last().unwrap())
+                        .unwrap();
+                }
+            }
+            if let Some(o) = output {
+                if *accumulate {
+                    write!(out, " and accumulate {o}").unwrap();
+                } else if *new_var {
+                    write!(out, " and get new {o}").unwrap();
+                } else {
+                    write!(out, " and get {o}").unwrap();
+                }
+            }
+            out.push('\n');
+        }
+        Stmt::Reshape { tensor, from, to } => {
+            writeln!(out, "Reshape {tensor} from {from} to {to}").unwrap();
+        }
+        Stmt::For { var, start, end, body } => {
+            writeln!(out, "for {var} = {start}:{end}").unwrap();
+            for s in body {
+                print_stmt(out, s, depth + 1);
+            }
+            indent(out, depth);
+            out.push_str("end\n");
+        }
+        Stmt::If { lhs, op, rhs, body } => {
+            writeln!(out, "if {lhs} {} {rhs}", op.as_str()).unwrap();
+            for s in body {
+                print_stmt(out, s, depth + 1);
+            }
+            indent(out, depth);
+            out.push_str("end\n");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tl::parser::parse_program;
+
+    fn roundtrip(src: &str) {
+        let p1 = parse_program(src).unwrap();
+        let printed = print_program(&p1);
+        let p2 = parse_program(&printed).unwrap();
+        assert_eq!(p1.stmts, p2.stmts, "roundtrip failed for:\n{src}\nprinted:\n{printed}");
+    }
+
+    #[test]
+    fn roundtrip_copy_variants() {
+        roundtrip("Copy Q from global to shared");
+        roundtrip("Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared");
+        roundtrip("Copy O from register to global");
+    }
+
+    #[test]
+    fn roundtrip_compute_variants() {
+        roundtrip("Compute GEMM Q, K.T and get S");
+        roundtrip("Compute GEMM S, V and accumulate O");
+        roundtrip("Compute Softmax S with m and l");
+        roundtrip("Compute Softmax S with m, l and acc");
+        roundtrip("Compute Multiply A, x and get new A");
+        roundtrip("Compute CausalMask S in coordinate [Lq = bi, Lk = i]");
+    }
+
+    #[test]
+    fn roundtrip_structured() {
+        roundtrip(
+            "param BM = 64\nAllocate O in register (BM, HeadDim)\nfor i = 0:kv_len/BN\n  if i < kv_len/BN - 1\n    Copy K (BN, HeadDim) in coordinate [L = i + 1] from global to shared\n  end\n  Compute Softmax S with m and l\nend\n",
+        );
+    }
+
+    #[test]
+    fn roundtrip_reshape() {
+        roundtrip("Reshape G from (MMA_C, MMA_M, MMA_N) to (MMA_A, MMA_M, MMA_N_new)");
+        roundtrip("Reshape rS from mma_C to mma_A");
+    }
+
+    #[test]
+    fn print_indented_blocks() {
+        let src = "for i = 0:4\n  Compute Softmax S\nend\n";
+        let p = parse_program(src).unwrap();
+        assert_eq!(print_program(&p), "for i = 0:4\n  Compute Softmax S\nend\n");
+    }
+}

@@ -1,0 +1,230 @@
+//! Core semantic types of TL: memory spaces, datatypes, mma fragment layouts.
+
+use std::fmt;
+
+/// GPU memory hierarchy level a tensor lives at (§2.1.1 of the paper).
+///
+/// In the TPU/Pallas adaptation these map to HBM (`Global`), VMEM
+/// (`Shared`) and kernel-local loop-carried values (`Register`) — see
+/// DESIGN.md §Hardware-Adaptation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemSpace {
+    Global,
+    Shared,
+    Register,
+}
+
+impl MemSpace {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MemSpace::Global => "global",
+            MemSpace::Shared => "shared",
+            MemSpace::Register => "register",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "global" => Some(MemSpace::Global),
+            "shared" => Some(MemSpace::Shared),
+            "register" | "reg" => Some(MemSpace::Register),
+            _ => None,
+        }
+    }
+
+    /// Distance from the compute units; used by the verifier to check that
+    /// `Copy` statements move data one direction at a time and by the cost
+    /// model to price the transfer.
+    pub fn level(&self) -> u8 {
+        match self {
+            MemSpace::Global => 2,
+            MemSpace::Shared => 1,
+            MemSpace::Register => 0,
+        }
+    }
+}
+
+impl fmt::Display for MemSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Element datatype. FP8 (e4m3) appears in the paper's L40S case study
+/// (Table 6); the paper's main tables use FP16 accumulating in FP32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    F8E4M3,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::F8E4M3 => 1,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F8E4M3 => "f8e4m3",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(DType::F32),
+            "f16" | "fp16" | "float16" | "half" => Some(DType::F16),
+            "bf16" | "bfloat16" => Some(DType::BF16),
+            "f8e4m3" | "fp8" | "f8" | "e4m3" => Some(DType::F8E4M3),
+            _ => None,
+        }
+    }
+
+    /// jnp dtype name used by the Pallas backend.
+    pub fn jnp_name(&self) -> &'static str {
+        match self {
+            DType::F32 => "jnp.float32",
+            DType::F16 => "jnp.float16",
+            DType::BF16 => "jnp.bfloat16",
+            DType::F8E4M3 => "jnp.float8_e4m3fn",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Tensor-Core mma fragment role (§3.2.2, footnote 1 of the paper): tiles
+/// feeding an `mma` must follow hardware-defined layouts for the A, B and
+/// C operands. The output of GEMM-I is produced in the `C` layout; to feed
+/// it to GEMM-II as the left operand it must be *reshaped* to the `A`
+/// layout — the `Reshape` statement whose omission is the paper's
+/// Appendix-B "Reshape omission" failure class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Frag {
+    A,
+    B,
+    C,
+}
+
+impl Frag {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Frag::A => "mma_A",
+            Frag::B => "mma_B",
+            Frag::C => "mma_C",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mma_a" | "a" => Some(Frag::A),
+            "mma_b" | "b" => Some(Frag::B),
+            "mma_c" | "c" => Some(Frag::C),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Frag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// An mma-level layout `(MMA_C, MMA_M, MMA_N)`: the fragment role plus the
+/// named repetition dimensions along M/N (§3.2.2). `Reshape G from
+/// (MMA_C, MMA_M, MMA_N) to (MMA_A, MMA_M, MMA_N_new)` changes the
+/// fragment role and renames the inner repetition count.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layout {
+    pub frag: Frag,
+    /// Repetition-dimension names, e.g. `["MMA_M", "MMA_N"]`. Empty for the
+    /// shorthand form `reshape rS from mma_C to mma_A`.
+    pub dims: Vec<String>,
+}
+
+impl Layout {
+    pub fn frag_only(frag: Frag) -> Self {
+        Layout { frag, dims: Vec::new() }
+    }
+
+    pub fn new(frag: Frag, dims: &[&str]) -> Self {
+        Layout { frag, dims: dims.iter().map(|s| s.to_string()).collect() }
+    }
+}
+
+impl fmt::Display for Layout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.dims.is_empty() {
+            write!(f, "{}", self.frag)
+        } else {
+            write!(f, "({}", self.frag)?;
+            for d in &self.dims {
+                write!(f, ", {d}")?;
+            }
+            write!(f, ")")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memspace_roundtrip() {
+        for m in [MemSpace::Global, MemSpace::Shared, MemSpace::Register] {
+            assert_eq!(MemSpace::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(MemSpace::parse("REGISTER"), Some(MemSpace::Register));
+        assert_eq!(MemSpace::parse("vmem"), None);
+    }
+
+    #[test]
+    fn memspace_levels_ordered() {
+        assert!(MemSpace::Global.level() > MemSpace::Shared.level());
+        assert!(MemSpace::Shared.level() > MemSpace::Register.level());
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::F8E4M3.bytes(), 1);
+    }
+
+    #[test]
+    fn dtype_parse_aliases() {
+        assert_eq!(DType::parse("fp16"), Some(DType::F16));
+        assert_eq!(DType::parse("fp8"), Some(DType::F8E4M3));
+        assert_eq!(DType::parse("bfloat16"), Some(DType::BF16));
+        assert_eq!(DType::parse("int8"), None);
+    }
+
+    #[test]
+    fn frag_parse() {
+        assert_eq!(Frag::parse("mma_C"), Some(Frag::C));
+        assert_eq!(Frag::parse("MMA_A"), Some(Frag::A));
+        assert_eq!(Frag::parse("mma_d"), None);
+    }
+
+    #[test]
+    fn layout_display() {
+        let l = Layout::new(Frag::C, &["MMA_M", "MMA_N"]);
+        assert_eq!(l.to_string(), "(mma_C, MMA_M, MMA_N)");
+        assert_eq!(Layout::frag_only(Frag::A).to_string(), "mma_A");
+    }
+}

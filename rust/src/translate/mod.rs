@@ -1,0 +1,51 @@
+//! Stage 2 — **TL Code translation** (§3.3).
+//!
+//! Each TL statement is translated to backend code for the target
+//! hardware. Two backends:
+//!
+//! * [`pallas`] — the TPU adaptation: emits a *runnable* Pallas kernel
+//!   (Python source) that `python/compile/aot.py` lowers to an HLO
+//!   artifact; the hardware mapping (VMEM ≙ shared memory, MXU ≙ Tensor
+//!   Core, BlockSpec ≙ threadblock schedule) is documented in DESIGN.md
+//!   §Hardware-Adaptation.
+//! * [`cute`] — the paper's actual target: CuTe/CUDA C++ text with
+//!   per-generation MMA atoms. Emitted for inspection and the
+//!   lines-of-code / development-cost comparisons (no nvcc in this
+//!   environment; see DESIGN.md §2).
+//!
+//! Translation is *total* on verified TL Code: every statement maps to
+//! concrete code (the paper's "each statement can be fully and precisely
+//! translated"), and the emitters interleave the original TL statement as
+//! a comment above its translation so the correspondence is auditable.
+
+pub mod cute;
+pub mod pallas;
+
+use crate::perfmodel::gpu::GpuArch;
+use crate::reasoner::Reasoned;
+use crate::sketch::spec::OpSpec;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct TranslateError(pub String);
+
+impl fmt::Display for TranslateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "translation error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TranslateError {}
+
+/// A translation backend: verified TL Code in, backend source text out.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// File extension of the emitted source (`py`, `cu`).
+    fn extension(&self) -> &'static str;
+    fn emit(
+        &self,
+        reasoned: &Reasoned,
+        spec: &OpSpec,
+        arch: &GpuArch,
+    ) -> Result<String, TranslateError>;
+}

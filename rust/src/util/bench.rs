@@ -1,0 +1,117 @@
+//! Measurement harness for `cargo bench` targets (criterion is
+//! unavailable offline). Criterion-style protocol: warmup, then timed
+//! samples, then a report line with mean / p50 / p95 and derived
+//! throughput. Each `[[bench]]` target is a plain `main()` that calls
+//! [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub samples: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub iters: usize,
+}
+
+impl Report {
+    /// Items/sec given items-per-iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench { name: name.into(), warmup_iters: 10, samples: 50 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f` over `samples` iterations (after warmup) and print a
+    /// criterion-like report line. Returns the report for programmatic use.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Report {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let report = Report {
+            name: self.name.clone(),
+            mean: total / self.samples as u32,
+            p50: times[self.samples / 2],
+            p95: times[(self.samples * 95 / 100).min(self.samples - 1)],
+            min: times[0],
+            iters: self.samples,
+        };
+        println!(
+            "bench {:<48} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}  (n={})",
+            report.name, report.mean, report.p50, report.p95, report.min, report.iters
+        );
+        report
+    }
+}
+
+/// Format a rate with engineering suffixes, e.g. `1.23 M/s`.
+pub fn fmt_rate(rate: f64) -> String {
+    if rate >= 1e9 {
+        format!("{:.2} G/s", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.2} M/s", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.2} k/s", rate / 1e3)
+    } else {
+        format!("{rate:.2} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordering() {
+        let r = Bench::new("noop").warmup(2).samples(10).run(|| 1 + 1);
+        assert!(r.min <= r.p50);
+        assert!(r.p50 <= r.p95);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let r = Bench::new("spin").warmup(1).samples(5).run(|| {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(r.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(1.5e9), "1.50 G/s");
+        assert_eq!(fmt_rate(2.5e6), "2.50 M/s");
+        assert_eq!(fmt_rate(3.5e3), "3.50 k/s");
+        assert_eq!(fmt_rate(12.0), "12.00 /s");
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny command-line flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown-flag detection is the caller's job via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        if let Some(v) = self.flags.get(key) {
+            self.consumed.borrow_mut().push(key.to_string());
+            Some(v.as_str())
+        } else {
+            None
+        }
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: `{v}` is not a number")),
+        }
+    }
+
+    /// Error on any flag that was never read (typo protection).
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flag(s): {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = parse("generate --variant mha --seq=1024 --causal");
+        assert_eq!(a.positional, vec!["generate"]);
+        assert_eq!(a.get("variant"), Some("mha"));
+        assert_eq!(a.get("seq"), Some("1024"));
+        assert!(a.get_bool("causal"));
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn usize_parsing() {
+        let a = parse("--n 42");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        let b = parse("--n abc");
+        assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+        let b = parse("--known 1");
+        let _ = b.get("known");
+        assert!(b.finish().is_ok());
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // `--causal generate` treats `generate` as the flag value; callers
+        // put positionals first (documented behaviour).
+        let a = parse("gen --causal");
+        assert_eq!(a.positional, vec!["gen"]);
+        assert!(a.get_bool("causal"));
+    }
+}

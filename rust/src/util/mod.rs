@@ -1,0 +1,10 @@
+//! In-tree substrates replacing crates unavailable in this offline build:
+//! a deterministic PRNG ([`prng`]), a property-testing harness
+//! ([`proptest`] — shrinking generator loop in the spirit of the proptest
+//! crate), and a measurement harness for `cargo bench` targets
+//! ([`bench`] — criterion-style warmup/sample/report).
+
+pub mod bench;
+pub mod cli;
+pub mod prng;
+pub mod proptest;

@@ -1,0 +1,118 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline). Runs a property over many seeded random cases; on failure it
+//! greedily *shrinks* the case via a user-supplied shrinker before
+//! reporting, so failures are minimal and reproducible (the seed is
+//! printed).
+
+use super::prng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5EED, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `prop` on `cases` values drawn by `gen`. On failure, repeatedly ask
+/// `shrink` for smaller candidates that still fail, then panic with the
+/// minimal counterexample.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let value = generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed {}, case {case}, {steps} shrink steps):\n  value: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with no shrinking.
+pub fn check_no_shrink<T: Clone + std::fmt::Debug>(
+    cases: usize,
+    generate: impl FnMut(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check(Config { cases, ..Config::default() }, generate, |_| Vec::new(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_no_shrink(64, |r| r.range(0, 100), |v| {
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(64, |r| r.range(0, 100), |v| {
+            if *v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_minimal() {
+        // Property fails for v >= 10; shrinker halves. The panic message
+        // must contain a value close to 10, not the original large one.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config { cases: 8, seed: 1, max_shrink_steps: 200 },
+                |r| r.range(500, 1000),
+                |v| {
+                    let mut cands = vec![v / 2, v - 1];
+                    cands.retain(|c| *c >= 0);
+                    cands
+                },
+                |v| if *v < 10 { Ok(()) } else { Err("too big".into()) },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("value: 10"), "did not shrink to 10: {msg}");
+    }
+}

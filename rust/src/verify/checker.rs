@@ -1,0 +1,428 @@
+//! Static semantic verifier for TL Code.
+//!
+//! Catches exactly the failure classes the paper's Appendix B reports for
+//! single-stage generation — plus the bread-and-butter well-formedness
+//! rules a translation backend relies on:
+//!
+//! * **E001 ReshapeOmission** — the output of GEMM-I (mma_C fragment
+//!   layout) feeds GEMM-II as the A operand without an interleaving
+//!   `Reshape ... from mma_C to mma_A` (Listing 1).
+//! * **E002 GemmLayoutError** — the score GEMM contracts over mismatched
+//!   symbolic dimensions, i.e. the formal `.T` was dropped (Listing 2).
+//! * **E003 MissingAllocation** — a `Copy`/`Compute` touches a tensor with
+//!   no `Allocate` at that memory level.
+//! * **E004 MissingCoordinate** — a global-memory `Copy` carries no block
+//!   coordinate / shape (stage-1b incomplete).
+//! * **E005 BadDivisibility** — bound params don't tile evenly
+//!   (`seq_len % BM`, `kv_len % BN`).
+//! * **E006 SoftmaxStats** — online softmax running stats not allocated
+//!   in registers, or the accumulator missing from the 3-name form.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
+use crate::tl::expr::Expr;
+use crate::tl::types::{Frag, MemSpace};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Code {
+    ReshapeOmission,
+    GemmLayoutError,
+    MissingAllocation,
+    MissingCoordinate,
+    BadDivisibility,
+    SoftmaxStats,
+}
+
+impl Code {
+    pub fn id(&self) -> &'static str {
+        match self {
+            Code::ReshapeOmission => "E001",
+            Code::GemmLayoutError => "E002",
+            Code::MissingAllocation => "E003",
+            Code::MissingCoordinate => "E004",
+            Code::BadDivisibility => "E005",
+            Code::SoftmaxStats => "E006",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.code.id(), self.message)
+    }
+}
+
+/// Check a reasoned TL program; returns all diagnostics (empty = clean).
+pub fn check(program: &TlProgram) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let params = program.params();
+
+    // Collect allocations per memory space.
+    let mut allocs: BTreeMap<MemSpace, BTreeSet<String>> = BTreeMap::new();
+    program.walk(|s| {
+        if let Stmt::Allocate { name, space, .. } = s {
+            allocs.entry(*space).or_default().insert(name.clone());
+        }
+    });
+    let allocated = |space: MemSpace, name: &str| {
+        allocs.get(&space).map(|s| s.contains(name)).unwrap_or(false)
+    };
+
+    // E005: divisibility of bound dims.
+    for (whole, block) in [("seq_len", "BM"), ("kv_len", "BN")] {
+        if let (Some(w), Some(b)) = (params.get(whole), params.get(block)) {
+            if *b == 0 || w % b != 0 {
+                diags.push(Diagnostic {
+                    code: Code::BadDivisibility,
+                    message: format!("{whole} = {w} is not divisible by {block} = {b}"),
+                });
+            }
+        }
+    }
+
+    // Tile shapes are collected once over the whole program (allocations
+    // are hoisted to the top by stage 1b; GEMMs sit inside loop bodies).
+    let mut tile_shapes: BTreeMap<String, Vec<Expr>> = BTreeMap::new();
+    collect_tile_shapes(&program.stmts, &mut tile_shapes);
+
+    // Statement-level checks with fragment-layout tracking.
+    // frag_layout[name] = current mma fragment of a register tensor.
+    let mut frag: BTreeMap<String, Frag> = BTreeMap::new();
+    check_block(&program.stmts, &params, &allocated, &tile_shapes, &mut frag, &mut diags);
+    diags
+}
+
+fn symbolic_dim_eq(a: &Expr, b: &Expr, params: &BTreeMap<String, i64>) -> bool {
+    if a == b {
+        return true;
+    }
+    // Two *different named symbols* are formally distinct dimensions even
+    // when their bound values coincide (e.g. BN = HeadDim = 64) — exactly
+    // the paper's point that TL must preserve formal layout notation
+    // independent of physical coincidence (Appendix B, "GEMM error").
+    if let (Expr::Sym(x), Expr::Sym(y)) = (a, b) {
+        return x == y;
+    }
+    match (a.eval(params), b.eval(params)) {
+        (Ok(x), Ok(y)) => x == y,
+        _ => false,
+    }
+}
+
+fn check_block(
+    stmts: &[Stmt],
+    params: &BTreeMap<String, i64>,
+    allocated: &dyn Fn(MemSpace, &str) -> bool,
+    tile_shapes: &BTreeMap<String, Vec<Expr>>,
+    frag: &mut BTreeMap<String, Frag>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for s in stmts {
+        match s {
+            Stmt::Copy { tensor, shape, coord, src, dst } => {
+                if (*src == MemSpace::Global || *dst == MemSpace::Global)
+                    && (shape.is_none() || coord.is_empty())
+                {
+                    diags.push(Diagnostic {
+                        code: Code::MissingCoordinate,
+                        message: format!(
+                            "global copy of `{tensor}` lacks {}",
+                            if shape.is_none() { "a shape" } else { "a coordinate" }
+                        ),
+                    });
+                }
+                for space in [*src, *dst] {
+                    if !allocated(space, tensor) {
+                        diags.push(Diagnostic {
+                            code: Code::MissingAllocation,
+                            message: format!("`{tensor}` copied at {space} without Allocate"),
+                        });
+                    }
+                }
+            }
+            Stmt::Compute { op: ComputeOp::Gemm, inputs, output, accumulate, .. } => {
+                if inputs.len() == 2 {
+                    // E002: contraction dims must agree symbolically.
+                    let a_shape = tile_shapes.get(&inputs[0].name);
+                    let b_shape = tile_shapes.get(&inputs[1].name);
+                    if let (Some(a), Some(b)) = (a_shape, b_shape) {
+                        if a.len() == 2 && b.len() == 2 {
+                            let ak = if inputs[0].transposed { &a[0] } else { &a[1] };
+                            let bk = if inputs[1].transposed { &b[1] } else { &b[0] };
+                            if !symbolic_dim_eq(ak, bk, params) {
+                                diags.push(Diagnostic {
+                                    code: Code::GemmLayoutError,
+                                    message: format!(
+                                        "GEMM {} x {} contracts `{ak}` against `{bk}` — \
+                                         formal transpose likely dropped (Appendix-B Listing 2)",
+                                        inputs[0].name, inputs[1].name
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                    // E001: A operand produced by a previous GEMM must have
+                    // been reshaped from mma_C to mma_A.
+                    if let Some(f) = frag.get(&inputs[0].name) {
+                        if *f != Frag::A {
+                            diags.push(Diagnostic {
+                                code: Code::ReshapeOmission,
+                                message: format!(
+                                    "`{}` feeds a GEMM as the A operand while in {} layout; \
+                                     insert `Reshape {} from mma_C to mma_A` \
+                                     (Appendix-B Listing 1)",
+                                    inputs[0].name,
+                                    f,
+                                    inputs[0].name
+                                ),
+                            });
+                        }
+                    }
+                    if let Some(f) = frag.get(&inputs[1].name) {
+                        if *f == Frag::C {
+                            diags.push(Diagnostic {
+                                code: Code::ReshapeOmission,
+                                message: format!(
+                                    "`{}` feeds a GEMM as the B operand while in mma_C layout",
+                                    inputs[1].name
+                                ),
+                            });
+                        }
+                    }
+                }
+                if let Some(out) = output {
+                    // GEMM output materializes in the mma_C fragment.
+                    frag.insert(out.clone(), Frag::C);
+                    if *accumulate && !allocated(MemSpace::Register, out) {
+                        diags.push(Diagnostic {
+                            code: Code::MissingAllocation,
+                            message: format!("accumulator `{out}` never allocated in registers"),
+                        });
+                    }
+                }
+            }
+            Stmt::Compute { op: ComputeOp::Softmax, with, .. } => {
+                if !with.is_empty() {
+                    for stat in with.iter().take(2) {
+                        if !allocated(MemSpace::Register, stat) {
+                            diags.push(Diagnostic {
+                                code: Code::SoftmaxStats,
+                                message: format!(
+                                    "online-softmax stat `{stat}` not allocated in registers"
+                                ),
+                            });
+                        }
+                    }
+                    if with.len() == 2 {
+                        diags.push(Diagnostic {
+                            code: Code::SoftmaxStats,
+                            message: "online softmax carries m/l but no accumulator to \
+                                      rescale; fused GEMM-II output will be stale"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+            Stmt::Reshape { tensor, from, to } => {
+                if let Some(current) = frag.get(tensor) {
+                    if *current != from.frag {
+                        diags.push(Diagnostic {
+                            code: Code::GemmLayoutError,
+                            message: format!(
+                                "Reshape of `{tensor}` claims {} but tensor is in {}",
+                                from.frag, current
+                            ),
+                        });
+                    }
+                }
+                frag.insert(tensor.clone(), to.frag);
+            }
+            Stmt::For { body, .. } | Stmt::If { body, .. } => {
+                check_block(body, params, allocated, tile_shapes, frag, diags);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn collect_tile_shapes(stmts: &[Stmt], out: &mut BTreeMap<String, Vec<Expr>>) {
+    for s in stmts {
+        match s {
+            Stmt::Allocate { name, space, shape, .. }
+                if *space != MemSpace::Global && !out.contains_key(name) =>
+            {
+                out.insert(name.clone(), shape.clone());
+            }
+            Stmt::Compute { op: ComputeOp::Gemm, inputs, output: Some(out_name), .. }
+                if inputs.len() == 2 =>
+            {
+                // Derive the GEMM output tile shape for chained checks.
+                if let (Some(a), Some(b)) =
+                    (out.get(&inputs[0].name).cloned(), out.get(&inputs[1].name).cloned())
+                {
+                    if a.len() == 2 && b.len() == 2 && !out.contains_key(out_name) {
+                        let m = if inputs[0].transposed { a[1].clone() } else { a[0].clone() };
+                        let n = if inputs[1].transposed { b[0].clone() } else { b[1].clone() };
+                        out.insert(out_name.clone(), vec![m, n]);
+                    }
+                }
+            }
+            Stmt::For { body, .. } | Stmt::If { body, .. } => collect_tile_shapes(body, out),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::reasoner::generate_tl_code;
+    use crate::reasoner::profiles::{FailureMode, LlmProfile};
+    use crate::sketch::spec::{AttnVariant, OpSpec};
+
+    fn spec() -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+    }
+
+    #[test]
+    fn clean_generation_has_no_diagnostics() {
+        for profile in [LlmProfile::deepseek_r1(), LlmProfile::deepseek_v3(), LlmProfile::claude35()]
+        {
+            let r = generate_tl_code(&spec(), &GpuArch::a100(), &profile);
+            let diags = check(&r.program);
+            assert!(diags.is_empty(), "{}: {:?}", profile.name, diags);
+        }
+    }
+
+    #[test]
+    fn reshape_omission_detected() {
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::ReshapeOmission,
+        );
+        let r = generate_tl_code(&spec(), &GpuArch::a100(), &p);
+        let diags = check(&r.program);
+        assert!(
+            diags.iter().any(|d| d.code == Code::ReshapeOmission),
+            "E001 not raised: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn gemm_layout_error_detected() {
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::GemmLayoutError,
+        );
+        let r = generate_tl_code(&spec(), &GpuArch::a100(), &p);
+        let diags = check(&r.program);
+        assert!(
+            diags.iter().any(|d| d.code == Code::GemmLayoutError),
+            "E002 not raised: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn paper_listing1_rejected() {
+        // Appendix B Listing 1 verbatim (plus minimal allocations): the
+        // missing Reshape must be caught.
+        let src = "\
+param BM = 64
+param BN = 64
+Allocate Q_shared in shared (BM, HeadDim)
+Allocate K_shared in shared (BN, HeadDim)
+Allocate V_shared in shared (BN, BN)
+Allocate S in register (BM, BN)
+Allocate O_register in register (BM, BN)
+Compute GEMM Q_shared, K_shared.T and get S
+Compute Softmax S
+Compute GEMM S, V_shared and accumulate O_register
+";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::ReshapeOmission), "{diags:?}");
+    }
+
+    #[test]
+    fn paper_listing2_rejected() {
+        // Appendix B Listing 2: K not transposed -> symbolic contraction
+        // of HeadDim against BM-row dimension.
+        let src = "\
+param BM = 64
+param BN = 32
+Allocate Q_shared in shared (BM, HeadDim)
+Allocate K_shared in shared (BN, HeadDim)
+Allocate S in register (BM, BN)
+Compute GEMM Q_shared, K_shared and get S
+";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::GemmLayoutError), "{diags:?}");
+    }
+
+    #[test]
+    fn missing_allocation_detected() {
+        let src = "Copy Q (4, 4) in coordinate [L = 0] from global to shared";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::MissingAllocation));
+    }
+
+    #[test]
+    fn sketch_copy_flagged_as_incomplete() {
+        let src = "Allocate Q in global (64, 64)\nAllocate Q in shared (64, 64)\nCopy Q from global to shared";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::MissingCoordinate));
+    }
+
+    #[test]
+    fn bad_divisibility_detected() {
+        let src = "param BM = 48\nparam seq_len = 1024";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::BadDivisibility));
+    }
+
+    #[test]
+    fn softmax_two_name_form_warns_about_accumulator() {
+        let src = "\
+Allocate S in register (64, 64)
+Allocate m in register (64, 1)
+Allocate l in register (64, 1)
+Compute Softmax S with m and l
+";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(diags.iter().any(|d| d.code == Code::SoftmaxStats));
+    }
+
+    #[test]
+    fn reshape_fixes_fragment_chain() {
+        let src = "\
+Allocate A in shared (BM, K)
+Allocate B in shared (BN, K)
+Allocate V in shared (BN, VD)
+Allocate S in register (BM, BN)
+Allocate O in register (BM, VD)
+Compute GEMM A, B.T and get S
+Reshape S from mma_C to mma_A
+Compute GEMM S, V and accumulate O
+";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(
+            !diags.iter().any(|d| d.code == Code::ReshapeOmission),
+            "false positive: {diags:?}"
+        );
+    }
+}

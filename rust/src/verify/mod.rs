@@ -1,0 +1,145 @@
+//! Verification layer: the static semantic checker ([`checker`]) that
+//! rejects the paper's Appendix-B failure classes, the numeric TL
+//! interpreter ([`interp`]) that executes TL Code on host tensors, and the
+//! reference attention oracle ([`tensor`]).
+//!
+//! [`verify_program`] is the gate the pipeline runs between stage 1b and
+//! translation: static checks first, then numeric equivalence against the
+//! direct softmax(QKᵀ)V reference on a reduced shape.
+
+pub mod checker;
+pub mod interp;
+pub mod tensor;
+
+use crate::tl::ast::TlProgram;
+use checker::Diagnostic;
+use tensor::{reference_attention, Tensor2};
+
+/// Outcome of the verification gate.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Max |generated - reference| over the numeric probe, if it ran.
+    pub max_abs_diff: Option<f32>,
+    pub passed: bool,
+}
+
+/// Numeric probe tolerance (f32 accumulation over ≤ a few hundred terms).
+pub const NUMERIC_TOL: f32 = 2e-4;
+
+/// Full verification: static checks, then (if clean and the program binds
+/// the standard attention params) a numeric probe on a reduced copy of the
+/// problem — `probe_seq` rows of Q/K/V with the program's own tiling.
+pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyReport {
+    let diagnostics = checker::check(program);
+    if !diagnostics.is_empty() {
+        return VerifyReport { diagnostics, max_abs_diff: None, passed: false };
+    }
+
+    let params = program.params();
+    let (Some(&bm), Some(&bn), Some(&hd), Some(&vd)) = (
+        params.get("BM"),
+        params.get("BN"),
+        params.get("HeadDim"),
+        params.get("VDim"),
+    ) else {
+        // Static-only verification for non-attention TL programs.
+        return VerifyReport { diagnostics, max_abs_diff: None, passed: true };
+    };
+
+    // Reduced shape: 2 q-blocks, keeps the causal block-skipping path hot.
+    let probe_seq = (2 * bm.max(bn)) as usize;
+    let mut probe = program.clone();
+    for s in &mut probe.stmts {
+        if let crate::tl::ast::Stmt::Param { name, value } = s {
+            if name == "seq_len" || name == "kv_len" {
+                *value = probe_seq as i64;
+            }
+        }
+    }
+    let q = Tensor2::randn(probe_seq, hd as usize, seed);
+    let k = Tensor2::randn(probe_seq, hd as usize, seed + 1);
+    let v = Tensor2::randn(probe_seq, vd as usize, seed + 2);
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    match interp::run_attention(&probe, &q, &k, &v, scale) {
+        Ok(got) => {
+            let want = reference_attention(&q, &k, &v, scale, causal);
+            let diff = got.max_abs_diff(&want);
+            VerifyReport {
+                diagnostics,
+                max_abs_diff: Some(diff),
+                passed: diff < NUMERIC_TOL,
+            }
+        }
+        Err(e) => VerifyReport {
+            diagnostics: vec![Diagnostic {
+                code: checker::Code::GemmLayoutError,
+                message: format!("numeric probe failed to execute: {e}"),
+            }],
+            max_abs_diff: None,
+            passed: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::reasoner::generate_tl_code;
+    use crate::reasoner::profiles::{FailureMode, LlmProfile};
+    use crate::sketch::spec::{AttnVariant, OpSpec};
+
+    #[test]
+    fn verify_gate_passes_clean_generation() {
+        for causal in [false, true] {
+            let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, causal);
+            let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let report = verify_program(&r.program, causal, 7);
+            assert!(report.passed, "{report:?}");
+            assert!(report.max_abs_diff.unwrap() < NUMERIC_TOL);
+        }
+    }
+
+    #[test]
+    fn verify_gate_rejects_reshape_omission_statically() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::ReshapeOmission,
+        );
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &p);
+        let report = verify_program(&r.program, true, 7);
+        assert!(!report.passed);
+        assert!(report.max_abs_diff.is_none(), "must fail before the numeric probe");
+    }
+
+    #[test]
+    fn verify_gate_rejects_gemm_layout_error() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 128, true);
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::GemmLayoutError,
+        );
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &p);
+        let report = verify_program(&r.program, true, 7);
+        assert!(!report.passed);
+    }
+
+    #[test]
+    fn verify_probe_runs_mla() {
+        let spec = OpSpec::mla(4096, true);
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_r1());
+        let report = verify_program(&r.program, true, 9);
+        assert!(report.passed, "{report:?}");
+    }
+
+    #[test]
+    fn static_only_for_non_attention_programs() {
+        let p = crate::tl::parser::parse_program("param X = 3").unwrap();
+        let report = verify_program(&p, false, 1);
+        assert!(report.passed);
+        assert!(report.max_abs_diff.is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! Minimal dense 2-D f32 tensor used by the TL interpreter and the
+//! host-side reference attention. Row-major storage.
+
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Tensor2 { rows, cols, data }
+    }
+
+    /// Standard-normalish random tensor (deterministic per seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Copy rows `[r0, r0+n)` into a new tensor.
+    pub fn slice_rows(&self, r0: usize, n: usize) -> Tensor2 {
+        assert!(
+            r0 + n <= self.rows,
+            "row slice [{r0}, {}) out of bounds (rows={})",
+            r0 + n,
+            self.rows
+        );
+        Tensor2 {
+            rows: n,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..(r0 + n) * self.cols].to_vec(),
+        }
+    }
+
+    /// Write `src` into rows `[r0, r0+src.rows)`.
+    pub fn write_rows(&mut self, r0: usize, src: &Tensor2) {
+        assert_eq!(self.cols, src.cols, "column mismatch in write_rows");
+        assert!(r0 + src.rows <= self.rows, "write_rows out of bounds");
+        self.data[r0 * self.cols..(r0 + src.rows) * self.cols].copy_from_slice(&src.data);
+    }
+
+    /// `self @ other`, with optional transposes. f32 accumulation.
+    ///
+    /// Hot path of the verification gate (§Perf): the non-transposed
+    /// cases run cache-friendly slice kernels (ikj ordering for `A@B`,
+    /// row-dot for `A@Bᵀ`) that the compiler auto-vectorizes; the rare
+    /// `ta` cases fall back to a scalar loop.
+    pub fn matmul(&self, other: &Tensor2, ta: bool, tb: bool) -> Result<Tensor2, String> {
+        let (m, k1) = if ta { (self.cols, self.rows) } else { (self.rows, self.cols) };
+        let (k2, n) = if tb { (other.cols, other.rows) } else { (other.rows, other.cols) };
+        if k1 != k2 {
+            return Err(format!(
+                "GEMM contraction mismatch: ({m}x{k1}) @ ({k2}x{n}) [ta={ta} tb={tb}]"
+            ));
+        }
+        let mut out = Tensor2::zeros(m, n);
+        match (ta, tb) {
+            (false, true) => {
+                // A @ B^T: rows of A dotted with rows of B — both
+                // contiguous. 4 independent accumulators break the
+                // sequential-reduction dependence so LLVM vectorizes.
+                for i in 0..m {
+                    let a_row = &self.data[i * k1..(i + 1) * k1];
+                    let out_row = &mut out.data[i * n..(i + 1) * n];
+                    for (j, o) in out_row.iter_mut().enumerate() {
+                        let b_row = &other.data[j * k1..(j + 1) * k1];
+                        let mut acc = [0.0f32; 4];
+                        let chunks = k1 / 4;
+                        for c in 0..chunks {
+                            let a4 = &a_row[c * 4..c * 4 + 4];
+                            let b4 = &b_row[c * 4..c * 4 + 4];
+                            acc[0] += a4[0] * b4[0];
+                            acc[1] += a4[1] * b4[1];
+                            acc[2] += a4[2] * b4[2];
+                            acc[3] += a4[3] * b4[3];
+                        }
+                        let mut sum = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                        for p in chunks * 4..k1 {
+                            sum += a_row[p] * b_row[p];
+                        }
+                        *o = sum;
+                    }
+                }
+            }
+            (false, false) => {
+                // A @ B: ikj ordering, streaming B's rows.
+                for i in 0..m {
+                    let a_row = &self.data[i * k1..(i + 1) * k1];
+                    let out_row = &mut out.data[i * n..(i + 1) * n];
+                    for (p, &a) in a_row.iter().enumerate() {
+                        let b_row = &other.data[p * n..(p + 1) * n];
+                        for (o, &b) in out_row.iter_mut().zip(b_row) {
+                            *o += a * b;
+                        }
+                    }
+                }
+            }
+            _ => {
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for p in 0..k1 {
+                            let a = if ta { self.at(p, i) } else { self.at(i, p) };
+                            let b = if tb { other.at(j, p) } else { other.at(p, j) };
+                            acc += a * b;
+                        }
+                        *out.at_mut(i, j) = acc;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Row-wise max.
+    pub fn row_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| (0..self.cols).map(|c| self.at(r, c)).fold(f32::NEG_INFINITY, f32::max))
+            .collect()
+    }
+
+    /// Row-wise sum.
+    pub fn row_sum(&self) -> Vec<f32> {
+        (0..self.rows).map(|r| (0..self.cols).map(|c| self.at(r, c)).sum()).collect()
+    }
+
+    /// Max |a - b| between two tensors.
+    pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Finite stand-in for -inf in masking: keeps the online-softmax update
+/// NaN-free for transiently fully-masked rows (matches the Pallas kernel
+/// and jnp reference, which use the same constant).
+pub const MASK_VALUE: f32 = -1e30;
+
+/// Host-side reference: softmax(scale * Q K^T + causal mask) V computed
+/// directly in f32 — the oracle the interpreter is validated against.
+pub fn reference_attention(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    causal: bool,
+) -> Tensor2 {
+    let mut s = q.matmul(k, false, true).expect("ref qk");
+    // Row-sliced mask + softmax (hot in the verification gate, §Perf).
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        for x in row.iter_mut() {
+            *x *= scale;
+        }
+        if causal && r + 1 < cols {
+            for x in &mut row[r + 1..] {
+                *x = MASK_VALUE;
+            }
+        }
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    s.matmul(v, false, false).expect("ref pv")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor2::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        let b = Tensor2::randn(3, 3, 1);
+        let c = a.matmul(&b, false, false).unwrap();
+        assert!(c.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_transpose_b() {
+        // (2x3) @ (4x3)^T = 2x4
+        let a = Tensor2::randn(2, 3, 1);
+        let b = Tensor2::randn(4, 3, 2);
+        let c = a.matmul(&b, false, true).unwrap();
+        assert_eq!((c.rows, c.cols), (2, 4));
+        // Spot check one element.
+        let manual: f32 = (0..3).map(|p| a.at(1, p) * b.at(2, p)).sum();
+        assert!((c.at(1, 2) - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch_errors() {
+        let a = Tensor2::randn(2, 3, 1);
+        let b = Tensor2::randn(4, 5, 2);
+        assert!(a.matmul(&b, false, false).is_err());
+    }
+
+    #[test]
+    fn slice_and_write_roundtrip() {
+        let a = Tensor2::randn(8, 4, 3);
+        let s = a.slice_rows(2, 3);
+        let mut b = Tensor2::zeros(8, 4);
+        b.write_rows(2, &s);
+        assert!(b.slice_rows(2, 3).max_abs_diff(&s) < 1e-9);
+    }
+
+    #[test]
+    fn reference_rows_sum_to_one_through_v_ones() {
+        // With V = all-ones, attention output must be exactly 1 per entry
+        // (softmax rows sum to 1).
+        let q = Tensor2::randn(16, 8, 1);
+        let k = Tensor2::randn(16, 8, 2);
+        let v = Tensor2::from_fn(16, 8, |_, _| 1.0);
+        let o = reference_attention(&q, &k, &v, 0.35, false);
+        for val in &o.data {
+            assert!((val - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_first_row_attends_only_self() {
+        let q = Tensor2::randn(4, 8, 1);
+        let k = Tensor2::randn(4, 8, 2);
+        let v = Tensor2::randn(4, 8, 3);
+        let o = reference_attention(&q, &k, &v, 0.35, true);
+        // Row 0 can only attend position 0 -> output row 0 == v row 0.
+        for c in 0..8 {
+            assert!((o.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+}

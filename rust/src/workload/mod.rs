@@ -1,0 +1,182 @@
+//! Workload generation: the paper's benchmark grids (§4.1) for the
+//! performance model, the real-model configurations of Appendix C, and
+//! synthetic request streams for the serving coordinator.
+
+use crate::coordinator::request::FamilyKey;
+use crate::sketch::spec::{AttnVariant, OpSpec};
+use crate::util::prng::Rng;
+
+/// The paper's sequence-length sweep: 512, 1k, ..., 16k.
+pub const SEQ_SWEEP: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// Table-1 grid: {MHA, GQA, MQA} × {64, 128} × sweep × {causal, full}.
+pub fn table1_grid(causal: bool) -> Vec<OpSpec> {
+    let mut specs = Vec::new();
+    for variant in [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa] {
+        for head_dim in [64usize, 128] {
+            for seq in SEQ_SWEEP {
+                specs.push(OpSpec::benchmark(variant, seq, head_dim, causal));
+            }
+        }
+    }
+    specs
+}
+
+/// Table-2 grid: MLA with causal mask across the sweep.
+pub fn table2_grid() -> Vec<OpSpec> {
+    SEQ_SWEEP.iter().map(|&s| OpSpec::mla(s, true)).collect()
+}
+
+/// Appendix C / Table 8: production model configurations (all head-dim
+/// 128, causal).
+pub fn real_models() -> Vec<(String, Vec<OpSpec>)> {
+    let configs = [
+        ("Llama2 7B", 32usize, 32usize),
+        ("Qwen2.5 72B", 64, 8),
+        ("Llama3.1 405B", 128, 8),
+    ];
+    configs
+        .iter()
+        .map(|(name, hq, hk)| {
+            let specs = SEQ_SWEEP
+                .iter()
+                .map(|&s| OpSpec::real_model(name, *hq, *hk, s).1)
+                .collect();
+            (name.to_string(), specs)
+        })
+        .collect()
+}
+
+/// Table-9 grid: NSA latency sweep.
+pub fn nsa_grid() -> Vec<OpSpec> {
+    SEQ_SWEEP.iter().map(|&s| OpSpec::nsa(s)).collect()
+}
+
+/// A synthetic request for the serving coordinator: family + seeded
+/// payload (materialized lazily to keep generation cheap).
+#[derive(Debug, Clone)]
+pub struct SyntheticRequest {
+    pub family: FamilyKey,
+    pub seed: u64,
+    /// Offset from stream start (exponential inter-arrival).
+    pub arrival: std::time::Duration,
+}
+
+impl SyntheticRequest {
+    /// Materialize Q/K/V payloads.
+    pub fn payload(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(self.seed);
+        let gen = |n: usize, rng: &mut Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+        };
+        let q = gen(self.family.q_len(), &mut rng);
+        let k = gen(self.family.k_len(), &mut rng);
+        let v = gen(self.family.v_len(), &mut rng);
+        (q, k, v)
+    }
+}
+
+/// Generate a Poisson-ish request stream over the servable families.
+///
+/// `rate_hz` is the target aggregate arrival rate; families are drawn
+/// with a skew where the first families get more traffic (realistic
+/// serving mixes are head-heavy).
+pub fn request_stream(
+    families: &[FamilyKey],
+    n: usize,
+    rate_hz: f64,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    assert!(!families.is_empty(), "no servable families");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // Exponential inter-arrival: -ln(U)/rate.
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / rate_hz;
+        // Zipf-ish family choice: squash the uniform draw.
+        let idx = ((rng.f64().powi(2)) * families.len() as f64) as usize;
+        let family = families[idx.min(families.len() - 1)].clone();
+        out.push(SyntheticRequest {
+            family,
+            seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            arrival: std::time::Duration::from_secs_f64(t),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_grid_size() {
+        // 3 variants x 2 head dims x 6 seq lens.
+        assert_eq!(table1_grid(true).len(), 36);
+    }
+
+    #[test]
+    fn grids_keep_total_tokens() {
+        for spec in table1_grid(true) {
+            assert_eq!(spec.batch * spec.seq_len, 16 * 1024);
+        }
+    }
+
+    #[test]
+    fn real_models_match_paper_configs() {
+        let models = real_models();
+        assert_eq!(models.len(), 3);
+        let (name, specs) = &models[1];
+        assert_eq!(name, "Qwen2.5 72B");
+        assert_eq!(specs[0].num_q_heads, 64);
+        assert_eq!(specs[0].num_kv_heads, 8);
+        assert_eq!(specs[0].head_dim, 128);
+        assert!(specs[0].causal);
+    }
+
+    #[test]
+    fn request_stream_is_sorted_and_deterministic() {
+        let fam = FamilyKey {
+            variant: AttnVariant::Mha,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq: 256,
+            kv: 256,
+        };
+        let a = request_stream(&[fam.clone()], 50, 100.0, 7);
+        let b = request_stream(&[fam], 50, 100.0, 7);
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert_eq!(a[10].seed, b[10].seed);
+    }
+
+    #[test]
+    fn payload_sizes_match_family() {
+        let fam = FamilyKey {
+            variant: AttnVariant::Gqa,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 8,
+            kv_heads: 2,
+            seq: 128,
+            kv: 128,
+        };
+        let r = SyntheticRequest {
+            family: fam.clone(),
+            seed: 1,
+            arrival: std::time::Duration::ZERO,
+        };
+        let (q, k, v) = r.payload();
+        assert_eq!(q.len(), fam.q_len());
+        assert_eq!(k.len(), fam.k_len());
+        assert_eq!(v.len(), fam.v_len());
+    }
+}

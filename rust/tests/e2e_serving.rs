@@ -1,0 +1,124 @@
+//! Integration test over the full serving stack: generated kernels →
+//! AOT artifacts → PJRT runtime → coordinator → verified responses.
+//! Skipped (with a notice) when `make artifacts` hasn't run.
+
+use std::path::Path;
+use std::time::Duration;
+
+use qimeng::coordinator::{run_stream, Coordinator, ServeConfig};
+use qimeng::verify::tensor::{reference_attention, Tensor2};
+use qimeng::workload::{request_stream, SyntheticRequest};
+
+fn artifacts_ready() -> bool {
+    if Path::new("artifacts/manifest.txt").exists() {
+        true
+    } else {
+        eprintln!("skipping e2e serving test: run `make artifacts` first");
+        false
+    }
+}
+
+fn start() -> Coordinator {
+    Coordinator::start(ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        batch_window: Duration::from_millis(2),
+    })
+    .expect("coordinator start")
+}
+
+#[test]
+fn served_outputs_match_reference_for_every_family() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coordinator = start();
+    assert!(coordinator.families.len() >= 12, "expected the full kernel set");
+    for (i, fam) in coordinator.families.iter().enumerate() {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed: 1000 + i as u64,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let rx = coordinator.submit(fam.clone(), q.clone(), k.clone(), v.clone());
+        let resp = rx.recv().expect("response");
+        let out = resp.result.expect("serve error");
+        assert_eq!(out.len(), fam.out_len());
+
+        // Verify the *last* q-head (exercises the GQA/MQA head mapping:
+        // q-head h reads kv-head h / group).
+        let (s, kvl, d, vd) = (fam.seq, fam.kv, fam.qk_dim, fam.v_dim);
+        let group = fam.q_heads / fam.kv_heads;
+        let qh = fam.q_heads - 1;
+        let kh = qh / group;
+        let q_off = qh * s * d;
+        let k_off = kh * kvl * d;
+        let v_off = kh * kvl * vd;
+        let qt = Tensor2 { rows: s, cols: d, data: q[q_off..q_off + s * d].to_vec() };
+        let kt = Tensor2 { rows: kvl, cols: d, data: k[k_off..k_off + kvl * d].to_vec() };
+        let vt = Tensor2 { rows: kvl, cols: vd, data: v[v_off..v_off + kvl * vd].to_vec() };
+        let want = reference_attention(&qt, &kt, &vt, 1.0 / (d as f32).sqrt(), fam.causal);
+        let o_off = qh * s * vd;
+        let got = Tensor2 { rows: s, cols: vd, data: out[o_off..o_off + s * vd].to_vec() };
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 5e-4, "family {fam:?}: served vs reference diff {diff}");
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn batched_and_unbatched_paths_agree() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coordinator = start();
+    let fam = coordinator.families[0].clone();
+    // Submit 4 identical-family requests at once: served via the batch-4
+    // artifact. Then one alone: served via the batch-1 artifact (after
+    // the window expires). Outputs for the same payload must agree.
+    let reqs: Vec<SyntheticRequest> = (0..4)
+        .map(|i| SyntheticRequest {
+            family: fam.clone(),
+            seed: 42 + i,
+            arrival: Duration::ZERO,
+        })
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let (q, k, v) = r.payload();
+            coordinator.submit(fam.clone(), q, k, v)
+        })
+        .collect();
+    let batched: Vec<Vec<f32>> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().result.unwrap()).collect();
+
+    let (q, k, v) = reqs[2].payload();
+    let solo = coordinator
+        .submit(fam.clone(), q, k, v)
+        .recv()
+        .unwrap()
+        .result
+        .unwrap();
+    let max_diff = batched[2]
+        .iter()
+        .zip(&solo)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "batched vs solo diff {max_diff}");
+    coordinator.shutdown();
+}
+
+#[test]
+fn open_loop_stream_serves_everything() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coordinator = start();
+    let stream = request_stream(&coordinator.families, 32, 1e6, 99);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    assert_eq!(report.ok, 32, "errors: {}", report.errors);
+    assert!(report.mean_occupancy >= 1.0);
+    assert!(report.throughput_rps > 0.0);
+    coordinator.shutdown();
+}

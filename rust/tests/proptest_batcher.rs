@@ -1,0 +1,139 @@
+//! Property tests on the coordinator's batch planner invariants:
+//! every expired request is served, no request is double-assigned, no
+//! batch exceeds its executable's capacity, and families never mix.
+
+use std::collections::BTreeMap;
+
+use qimeng::coordinator::batcher::plan_batches;
+use qimeng::coordinator::FamilyKey;
+use qimeng::sketch::spec::AttnVariant;
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest::{check, Config};
+
+fn family(i: u64) -> FamilyKey {
+    let variants = [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa, AttnVariant::Mla];
+    FamilyKey {
+        variant: variants[(i % 4) as usize],
+        causal: i % 2 == 0,
+        qk_dim: if i % 3 == 0 { 64 } else { 128 },
+        v_dim: 64,
+        q_heads: 4,
+        kv_heads: 4,
+        seq: 256,
+        kv: 256,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    pending: Vec<(usize, FamilyKey, bool)>,
+    capacities: BTreeMap<FamilyKey, Vec<usize>>,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let n_fams = 1 + rng.below(4);
+    let mut capacities = BTreeMap::new();
+    for i in 0..n_fams {
+        let caps: Vec<usize> = match rng.below(3) {
+            0 => vec![1],
+            1 => vec![1, 4],
+            _ => vec![2, 8],
+        };
+        capacities.insert(family(i), caps);
+    }
+    let n = rng.below(40) as usize;
+    let pending: Vec<(usize, FamilyKey, bool)> = (0..n)
+        .map(|idx| {
+            // Sometimes reference a family with no executable.
+            let fam_i = rng.below(n_fams + 1);
+            (idx, family(fam_i), rng.bool())
+        })
+        .collect();
+    Case { pending, capacities }
+}
+
+#[test]
+fn batcher_invariants_hold() {
+    check(
+        Config { cases: 500, ..Config::default() },
+        gen_case,
+        |case| {
+            // Shrink: halve the pending queue.
+            if case.pending.len() > 1 {
+                let mut c = case.clone();
+                c.pending.truncate(case.pending.len() / 2);
+                vec![c]
+            } else {
+                vec![]
+            }
+        },
+        |case| {
+            let plans = plan_batches(&case.pending, &case.capacities);
+            let mut assigned = std::collections::BTreeSet::new();
+            for plan in &plans {
+                // capacity respected and known
+                let caps = case
+                    .capacities
+                    .get(&plan.family)
+                    .ok_or("plan for family with no executable")?;
+                if !caps.contains(&plan.capacity) {
+                    return Err(format!(
+                        "plan capacity {} not a compiled size {caps:?}",
+                        plan.capacity
+                    ));
+                }
+                if plan.members.is_empty() || plan.members.len() > plan.capacity {
+                    return Err(format!(
+                        "bad member count {} for capacity {}",
+                        plan.members.len(),
+                        plan.capacity
+                    ));
+                }
+                for &m in &plan.members {
+                    // no double assignment
+                    if !assigned.insert(m) {
+                        return Err(format!("request {m} assigned twice"));
+                    }
+                    // family purity
+                    let fam = &case.pending.iter().find(|(i, _, _)| *i == m).unwrap().1;
+                    if fam != &plan.family {
+                        return Err(format!("request {m} in foreign-family batch"));
+                    }
+                }
+            }
+            // every expired request of a *servable* family is served
+            for (idx, fam, expired) in &case.pending {
+                if *expired && case.capacities.contains_key(fam) && !assigned.contains(idx)
+                {
+                    return Err(format!("expired request {idx} left unserved"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_prefers_full_batches() {
+    // With >= max-capacity same-family fresh requests queued, the planner
+    // must produce at least one full batch (no starvation by waiting).
+    check(
+        Config { cases: 200, ..Config::default() },
+        |rng| 4 + rng.below(28) as usize,
+        |_| vec![],
+        |&n| {
+            let fam = family(0);
+            let caps: BTreeMap<FamilyKey, Vec<usize>> =
+                [(fam.clone(), vec![1, 4])].into();
+            let pending: Vec<(usize, FamilyKey, bool)> =
+                (0..n).map(|i| (i, fam.clone(), false)).collect();
+            let plans = plan_batches(&pending, &caps);
+            let full = plans.iter().filter(|p| p.members.len() == 4).count();
+            if full == n / 4 {
+                Ok(())
+            } else {
+                Err(format!("expected {} full batches, got {full}", n / 4))
+            }
+        },
+    );
+}

@@ -1,0 +1,125 @@
+//! Failure-injection tests on the runtime/coordinator substrate: corrupt
+//! artifacts, missing files, wrong shapes, bad manifests — the error
+//! paths a deployment actually hits. Plus the tiny-LM artifact executing
+//! end to end through PJRT (the L2 transformer whose attention runs the
+//! flash kernel).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use qimeng::coordinator::{Coordinator, ServeConfig};
+use qimeng::runtime::registry::{parse_manifest, Registry};
+use qimeng::runtime::Runtime;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+fn ready() -> bool {
+    artifacts().join("manifest.txt").exists()
+}
+
+#[test]
+fn corrupt_hlo_text_fails_to_load() {
+    let dir = std::env::temp_dir().join("qimeng_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.hlo.txt");
+    std::fs::write(&path, "HloModule bad\n\nENTRY main { this is not hlo }").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.load_hlo_text(&path, "bad").is_err());
+}
+
+#[test]
+fn missing_artifact_file_errors_cleanly() {
+    if !ready() {
+        return;
+    }
+    // Registry over a manifest that references a nonexistent file.
+    let dir = std::env::temp_dir().join("qimeng_missing_file_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "artifact ghost file=ghost.hlo.txt kind=attention variant=mha causal=1 \
+         batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64\n",
+    )
+    .unwrap();
+    let reg = Registry::open(&dir).unwrap();
+    let err = match reg.executable("ghost") {
+        Err(e) => e,
+        Ok(_) => panic!("ghost artifact unexpectedly compiled"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ghost"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn unknown_artifact_id_is_an_error() {
+    if !ready() {
+        return;
+    }
+    let reg = Registry::open(&artifacts()).unwrap();
+    assert!(reg.executable("no_such_artifact").is_err());
+}
+
+#[test]
+fn wrong_input_shape_rejected_by_execute() {
+    if !ready() {
+        return;
+    }
+    let reg = Registry::open(&artifacts()).unwrap();
+    let meta = reg.attention_metas().next().unwrap();
+    let exe = reg.executable(&meta.id).unwrap();
+    // One scalar instead of the expected tensors.
+    let tiny = [1.0f32];
+    let shape = [1i64];
+    assert!(reg.runtime.execute_f32(&exe, &[(&tiny, &shape)]).is_err());
+}
+
+#[test]
+fn coordinator_fails_fast_on_missing_dir() {
+    let err = Coordinator::start(ServeConfig {
+        artifacts_dir: Path::new("/nonexistent/artifacts").to_path_buf(),
+        batch_window: Duration::from_millis(1),
+    })
+    .err()
+    .expect("must fail");
+    assert!(format!("{err:#}").contains("nonexistent"));
+}
+
+#[test]
+fn manifest_parser_rejects_malformed_lines() {
+    assert!(parse_manifest("artifact a file=x kind=y\nbogus line here").is_err());
+    assert!(parse_manifest("artifact a keynovalue").is_err());
+}
+
+#[test]
+fn tiny_lm_artifact_executes_and_produces_logits() {
+    if !ready() {
+        return;
+    }
+    let reg = Registry::open(&artifacts()).unwrap();
+    let lm = match reg.metas().iter().find(|m| m.kind == "lm") {
+        Some(m) => m.clone(),
+        None => {
+            eprintln!("skipping: no lm artifact");
+            return;
+        }
+    };
+    let batch = lm.usize_field("batch").unwrap();
+    let seq = lm.usize_field("seq").unwrap();
+    let vocab = lm.usize_field("vocab").unwrap();
+    let exe = reg.executable(&lm.id).unwrap();
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % vocab) as i32).collect();
+    let logits = reg
+        .runtime
+        .execute_i32_to_f32(&exe, &tokens, &[batch as i64, seq as i64])
+        .unwrap();
+    assert_eq!(logits.len(), batch * seq * vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // Deterministic weights -> deterministic logits across calls.
+    let logits2 = reg
+        .runtime
+        .execute_i32_to_f32(&exe, &tokens, &[batch as i64, seq as i64])
+        .unwrap();
+    assert_eq!(logits, logits2);
+}

@@ -1,0 +1,221 @@
+//! Property tests on the TL language: random ASTs round-trip through
+//! print → parse, and random reasoned programs are self-consistent.
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::reasoner::generate_tl_code;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::tl::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
+use qimeng::tl::expr::Expr;
+use qimeng::tl::types::{Frag, Layout, MemSpace};
+use qimeng::tl::{parse_program, print_program};
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest::{check, Config};
+
+fn rand_ident(rng: &mut Rng) -> String {
+    let names = ["Q", "K", "V", "S", "O", "m", "l", "acc", "rS", "K_sel", "tmp1"];
+    (*rng.choice(&names)).to_string()
+}
+
+fn rand_expr(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 || rng.below(3) == 0 {
+        if rng.bool() {
+            Expr::Int(rng.range(0, 4096))
+        } else {
+            let syms = ["BM", "BN", "kv_len", "seq_len", "i", "block_idx", "HeadDim"];
+            Expr::sym(*rng.choice(&syms))
+        }
+    } else {
+        let a = rand_expr(rng, depth - 1);
+        let b = rand_expr(rng, depth - 1);
+        match rng.below(4) {
+            0 => Expr::add(a, b),
+            1 => Expr::sub(a, b),
+            2 => Expr::mul(a, b),
+            _ => Expr::div(a, b),
+        }
+    }
+}
+
+fn rand_memspace(rng: &mut Rng) -> MemSpace {
+    *rng.choice(&[MemSpace::Global, MemSpace::Shared, MemSpace::Register])
+}
+
+fn rand_stmt(rng: &mut Rng, depth: usize) -> Stmt {
+    match rng.below(if depth > 0 { 7 } else { 5 }) {
+        0 => Stmt::Param { name: rand_ident(rng), value: rng.range(1, 512) },
+        1 => {
+            let src = rand_memspace(rng);
+            let mut dst = rand_memspace(rng);
+            while dst == src {
+                dst = rand_memspace(rng);
+            }
+            Stmt::Copy {
+                tensor: rand_ident(rng),
+                shape: if rng.bool() {
+                    Some(vec![rand_expr(rng, 1), rand_expr(rng, 1)])
+                } else {
+                    None
+                },
+                coord: if rng.bool() {
+                    vec![("L".into(), rand_expr(rng, 1))]
+                } else {
+                    vec![]
+                },
+                src,
+                dst,
+            }
+        }
+        2 => Stmt::Allocate {
+            name: rand_ident(rng),
+            space: rand_memspace(rng),
+            shape: vec![rand_expr(rng, 1), rand_expr(rng, 1)],
+            offset: if rng.bool() { Some(rand_expr(rng, 1)) } else { None },
+            dtype: None,
+        },
+        3 => {
+            let ops = [
+                ComputeOp::Gemm,
+                ComputeOp::Softmax,
+                ComputeOp::Multiply,
+                ComputeOp::Divide,
+                ComputeOp::CausalMask,
+            ];
+            let op = rng.choice(&ops).clone();
+            let n_inputs = if op == ComputeOp::Gemm { 2 } else { 1 + rng.below(2) as usize };
+            let inputs = (0..n_inputs)
+                .map(|_| TensorRef { name: rand_ident(rng), transposed: rng.below(4) == 0 })
+                .collect();
+            let output = if rng.bool() { Some(rand_ident(rng)) } else { None };
+            // `accumulate` is only representable with an output
+            // (`and accumulate X`); the printer/parser pair cannot carry
+            // it otherwise, matching the paper's surface syntax.
+            let accumulate = output.is_some() && rng.below(4) == 0;
+            Stmt::Compute {
+                op,
+                inputs,
+                coord: vec![],
+                with: if rng.below(3) == 0 {
+                    vec!["m".into(), "l".into()]
+                } else {
+                    vec![]
+                },
+                output,
+                accumulate,
+                new_var: false,
+            }
+        }
+        4 => Stmt::Reshape {
+            tensor: rand_ident(rng),
+            from: Layout::new(Frag::C, &["MMA_M", "MMA_N"]),
+            to: Layout::new(Frag::A, &["MMA_M", "MMA_N_new"]),
+        },
+        5 => Stmt::For {
+            var: "i".into(),
+            start: Expr::int(0),
+            end: rand_expr(rng, 1),
+            body: (0..1 + rng.below(3)).map(|_| rand_stmt(rng, depth - 1)).collect(),
+        },
+        _ => Stmt::If {
+            lhs: rand_expr(rng, 1),
+            op: *rng.choice(&[CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ne]),
+            rhs: rand_expr(rng, 1),
+            body: (0..1 + rng.below(2)).map(|_| rand_stmt(rng, depth - 1)).collect(),
+        },
+    }
+}
+
+fn rand_program(rng: &mut Rng) -> TlProgram {
+    let n = 1 + rng.below(10) as usize;
+    TlProgram::new("prop", (0..n).map(|_| rand_stmt(rng, 2)).collect())
+}
+
+#[test]
+fn print_parse_roundtrip_random_programs() {
+    check(
+        Config { cases: 300, ..Config::default() },
+        rand_program,
+        |p| {
+            // Shrink: drop statements from the end.
+            if p.stmts.len() > 1 {
+                vec![TlProgram::new("prop", p.stmts[..p.stmts.len() - 1].to_vec())]
+            } else {
+                vec![]
+            }
+        },
+        |p| {
+            let text = print_program(p);
+            let back = parse_program(&text)
+                .map_err(|e| format!("parse failed: {e}\n{text}"))?;
+            if back.stmts == p.stmts {
+                Ok(())
+            } else {
+                Err(format!("AST mismatch after roundtrip:\n{text}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn reasoned_programs_roundtrip_for_random_specs() {
+    check(
+        Config { cases: 60, ..Config::default() },
+        |rng| {
+            let variant = *rng.choice(&[AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa]);
+            let seq = *rng.choice(&[512usize, 1024, 4096, 16384]);
+            let hd = *rng.choice(&[64usize, 128]);
+            let causal = rng.bool();
+            let arch_i = rng.below(4);
+            (variant, seq, hd, causal, arch_i)
+        },
+        |_| vec![],
+        |&(variant, seq, hd, causal, arch_i)| {
+            let spec = OpSpec::benchmark(variant, seq, hd, causal);
+            let arch = &GpuArch::all()[arch_i as usize];
+            let r = generate_tl_code(&spec, arch, &LlmProfile::deepseek_r1());
+            let text = print_program(&r.program);
+            let back = parse_program(&text).map_err(|e| e.to_string())?;
+            if back.stmts == r.program.stmts {
+                Ok(())
+            } else {
+                Err("reasoned TL failed text roundtrip".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn interpreter_matches_reference_for_random_shapes() {
+    // Cross-check of the full stage-1 pipeline numerics over random
+    // specs/tilings (slowest property test; fewer cases).
+    use qimeng::verify::interp::run_attention;
+    use qimeng::verify::tensor::{reference_attention, Tensor2};
+    check(
+        Config { cases: 12, ..Config::default() },
+        |rng| {
+            let variant = *rng.choice(&[AttnVariant::Mha, AttnVariant::Gqa]);
+            let hd = *rng.choice(&[64usize, 128]);
+            let causal = rng.bool();
+            let seed = rng.next_u64();
+            (variant, hd, causal, seed)
+        },
+        |_| vec![],
+        |&(variant, hd, causal, seed)| {
+            let mut spec = OpSpec::benchmark(variant, 256, hd, causal);
+            spec.batch = 1;
+            let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let q = Tensor2::randn(spec.seq_len, spec.qk_dim(), seed);
+            let k = Tensor2::randn(spec.kv_len, spec.qk_dim(), seed ^ 1);
+            let v = Tensor2::randn(spec.kv_len, spec.v_head_dim, seed ^ 2);
+            let scale = 1.0 / (spec.qk_dim() as f32).sqrt();
+            let got = run_attention(&r.program, &q, &k, &v, scale)?;
+            let want = reference_attention(&q, &k, &v, scale, causal);
+            let diff = got.max_abs_diff(&want);
+            if diff < 2e-4 {
+                Ok(())
+            } else {
+                Err(format!("diff {diff}"))
+            }
+        },
+    );
+}
