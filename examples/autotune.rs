@@ -1,0 +1,103 @@
+//! Autotuner demo: the paper's self-optimizing loop end to end.
+//!
+//! 1. Search the schedule space for a few operators on every GPU the
+//!    paper evaluates, comparing the winner against the legacy
+//!    heuristic / cost-search tilings on the shared cost model.
+//! 2. Persist the winners in a tuning cache and run the whole sweep
+//!    again to show the zero-cost cached path.
+//! 3. Feed the tuned schedule through the full pipeline
+//!    (`pipeline::run_tuned`) so the searched BM/BN land in verified,
+//!    translated kernel code.
+//!
+//! ```sh
+//! cargo run --release --example autotune
+//! ```
+
+use std::time::Instant;
+
+use qimeng::autotune::space::{self, Candidate};
+use qimeng::autotune::{AutotuneConfig, Autotuner};
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::pipeline::{run_tuned, Target};
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::reasoner::tiling::{choose, TilingStrategy};
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+
+fn main() {
+    let cache_path = std::env::temp_dir().join("qimeng_autotune_demo").join("tune.txt");
+    let _ = std::fs::remove_file(&cache_path);
+    let config = AutotuneConfig { cache_path: Some(cache_path.clone()), ..Default::default() };
+
+    let specs: Vec<(&str, OpSpec)> = vec![
+        ("mha hd64 @4k causal", OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true)),
+        ("gqa hd128 @16k causal", OpSpec::benchmark(AttnVariant::Gqa, 16384, 128, true)),
+        ("mla @8k causal", OpSpec::mla(8192, true)),
+    ];
+
+    println!("== autotune vs legacy strategies (modeled us, lower is better) ==");
+    let mut tuner = Autotuner::new(config.clone()).expect("tuner");
+    for arch in GpuArch::all() {
+        for (label, spec) in &specs {
+            let r = tuner.tune(spec, &arch, Target::Pallas);
+            let legacy_us = |strategy: TilingStrategy| {
+                let c = Candidate::from_tiling(&choose(strategy, spec, &arch, true));
+                space::model_seconds(spec, &arch, &c) * 1e6
+            };
+            println!(
+                "{:<8} {:<24} heuristic {:>9.1}  cost-search {:>9.1}  autotune {:>9.1}  [{}]",
+                arch.name,
+                label,
+                legacy_us(TilingStrategy::Heuristic),
+                legacy_us(TilingStrategy::CostSearch),
+                r.seconds * 1e6,
+                r.candidate,
+            );
+        }
+    }
+    tuner.save().expect("save cache");
+    println!(
+        "\nsearched {} configurations -> {}",
+        tuner.cache().len(),
+        cache_path.display()
+    );
+
+    println!("\n== second sweep: persistent cache ==");
+    let mut warm = Autotuner::new(config).expect("tuner reload");
+    let t0 = Instant::now();
+    for arch in GpuArch::all() {
+        for (_, spec) in &specs {
+            let r = warm.tune(spec, &arch, Target::Pallas);
+            assert!(r.cached, "warm sweep must hit the cache");
+        }
+    }
+    println!(
+        "{} lookups in {:.2?} — {} hits, {} misses",
+        GpuArch::all().len() * specs.len(),
+        t0.elapsed(),
+        warm.cache().hits(),
+        warm.cache().misses()
+    );
+
+    println!("\n== tuned schedule through the full pipeline ==");
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+    let result = run_tuned(
+        &spec,
+        &GpuArch::a100(),
+        &LlmProfile::deepseek_v3(),
+        Target::Pallas,
+        &mut warm,
+    )
+    .expect("tuned pipeline");
+    let tune = result.tune.as_ref().unwrap();
+    println!(
+        "verified {} with searched tiling BM={} BN={} (diff {:.2e}); \
+         search {:.2?} ({}), pipeline total {:.2?}",
+        spec.kernel_name(),
+        result.reasoned.tiling.bm,
+        result.reasoned.tiling.bn,
+        result.verify.max_abs_diff.unwrap_or(f32::NAN),
+        result.timings.search,
+        if tune.cached { "cache hit" } else { tune.strategy },
+        result.timings.total(),
+    );
+}

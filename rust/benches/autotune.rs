@@ -1,0 +1,73 @@
+//! Autotuner benches: cost of one exhaustive schedule search, the beam
+//! variant, and the cache hot path that repeat pipeline runs and the
+//! serving registry pay. §Perf targets: exhaustive search per spec well
+//! under the 50 ms pipeline budget; cache hit effectively free (< 10 us).
+
+use qimeng::autotune::search::{run_search, SearchStrategy};
+use qimeng::autotune::{cache, space, Autotuner};
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::pipeline::Target;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::util::bench::Bench;
+
+fn main() {
+    let arch = GpuArch::a100();
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 16384, 128, true);
+
+    let candidates = space::enumerate(&spec, &arch);
+    println!(
+        "schedule space: {} feasible candidates (mha hd128 @16k causal on {})",
+        candidates.len(),
+        arch.name
+    );
+
+    Bench::new("space_enumeration").samples(100).run(|| space::enumerate(&spec, &arch));
+
+    Bench::new("exhaustive_search_one_spec").samples(50).run(|| {
+        run_search(&candidates, SearchStrategy::Exhaustive, |c| {
+            space::model_seconds(&spec, &arch, c)
+        })
+    });
+
+    Bench::new("beam_search_one_spec").samples(50).run(|| {
+        run_search(
+            &candidates,
+            SearchStrategy::Beam { width: 16, rounds: 12, seed: 0x5EED },
+            |c| space::model_seconds(&spec, &arch, c),
+        )
+    });
+
+    // Cache hot path: what a repeat pipeline run / serving lookup costs.
+    let mut tuner = Autotuner::in_memory();
+    tuner.tune(&spec, &arch, Target::Pallas); // populate
+    let rep = Bench::new("tune_cache_hit").samples(200).run(|| {
+        tuner.tune(&spec, &arch, Target::Pallas)
+    });
+    println!(
+        "cache hit mean {:?} — 10 us target: {}",
+        rep.mean,
+        if rep.mean < std::time::Duration::from_micros(10) { "MET" } else { "MISSED" }
+    );
+
+    // Full-grid tuning cost (what `tlc tune --grid` pays cold).
+    let grid: Vec<OpSpec> = qimeng::workload::table1_grid(true);
+    Bench::new("exhaustive_grid_36_specs").samples(5).warmup(1).run(|| {
+        let mut t = Autotuner::in_memory();
+        for s in &grid {
+            t.tune(s, &arch, Target::Pallas);
+        }
+        t.cache().len()
+    });
+
+    // Serialization round-trip (startup cost of a warm cache).
+    let text = {
+        let mut t = Autotuner::in_memory();
+        for s in &grid {
+            t.tune(s, &arch, Target::Pallas);
+        }
+        t.cache().render()
+    };
+    Bench::new("cache_parse_36_entries").samples(200).run(|| {
+        cache::TuneCache::parse(&text).unwrap().len()
+    });
+}

@@ -1,0 +1,442 @@
+//! Persistent tuning cache: winners of past searches keyed by
+//! `(operator spec, GPU arch, backend)`, stored in a line-oriented text
+//! format in the spirit of `artifacts/manifest.txt`:
+//!
+//! ```text
+//! # qimeng autotune cache v1
+//! tune mha_causal_qk64_v64_b4_h32kv32_s4096_kv4096_f16|A100|pallas bm=128 bn=64 stages=2 warps=4 split_k=1 us=161.238 strategy=exhaustive evaluated=210
+//! ```
+//!
+//! Repeated pipeline runs and the serving path read this file so the
+//! search cost is paid once per `(spec, arch, backend)`; hit/miss
+//! counters make cache behaviour observable (and testable).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::space::Candidate;
+use crate::pipeline::Target;
+use crate::runtime::registry::AttnSignature;
+use crate::sketch::spec::OpSpec;
+
+/// One cached winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    /// Full cache key: `<spec>|<arch>|<backend>`.
+    pub key: String,
+    pub cand: Candidate,
+    /// Modeled runtime of the winner, microseconds.
+    pub micros: f64,
+    /// Strategy that produced it (`exhaustive`, `beam`, ...).
+    pub strategy: String,
+    /// Candidates scored by that search.
+    pub evaluated: usize,
+}
+
+/// The spec half of a cache key (shape + dtype, no arch/backend). All
+/// fields are derivable both from an [`OpSpec`] (tuning time) and from an
+/// [`AttnSignature`] (serving time), so the two sides agree.
+#[allow(clippy::too_many_arguments)]
+fn key_fields(
+    variant: &str,
+    causal: bool,
+    qk: usize,
+    vd: usize,
+    batch: usize,
+    qh: usize,
+    kvh: usize,
+    seq: usize,
+    kv: usize,
+    dtype: &str,
+) -> String {
+    format!(
+        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}",
+        if causal { "causal" } else { "full" },
+    )
+}
+
+/// Spec half of the key for an [`OpSpec`].
+pub fn spec_part(spec: &OpSpec) -> String {
+    key_fields(
+        spec.variant.as_str(),
+        spec.causal,
+        spec.qk_dim(),
+        spec.v_head_dim,
+        spec.batch,
+        spec.num_q_heads,
+        spec.num_kv_heads,
+        spec.seq_len,
+        spec.kv_len,
+        spec.dtype.as_str(),
+    )
+}
+
+/// Spec half of the key for a serving [`AttnSignature`]. The AOT
+/// artifact pipeline emits f16 kernels, so the dtype slot is fixed.
+pub fn sig_part(sig: &AttnSignature) -> String {
+    key_fields(
+        sig.variant.as_str(),
+        sig.causal,
+        sig.qk_dim,
+        sig.v_dim,
+        sig.batch,
+        sig.q_heads,
+        sig.kv_heads,
+        sig.seq,
+        sig.kv,
+        "f16",
+    )
+}
+
+/// Full cache key for a tuning run.
+pub fn spec_key(spec: &OpSpec, arch_name: &str, target: Target) -> String {
+    let backend = match target {
+        Target::Pallas => "pallas",
+        Target::Cute => "cute",
+    };
+    format!("{}|{arch_name}|{backend}", spec_part(spec))
+}
+
+/// The cache: key → entry, plus hit/miss counters (atomic so `&self`
+/// lookups from the serving path can count).
+#[derive(Debug, Default)]
+pub struct TuneCache {
+    entries: BTreeMap<String, TuneEntry>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TuneCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse the text format; `#` comments and blank lines are skipped.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cache = TuneCache::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap_or_default();
+            if tag != "tune" {
+                bail!("tune cache line {}: expected `tune`, got `{tag}`", lineno + 1);
+            }
+            let key = parts
+                .next()
+                .with_context(|| format!("tune cache line {}: missing key", lineno + 1))?
+                .to_string();
+            let mut fields: BTreeMap<&str, &str> = BTreeMap::new();
+            for kv in parts {
+                let (k, v) = kv.split_once('=').with_context(|| {
+                    format!("tune cache line {}: bad kv `{kv}`", lineno + 1)
+                })?;
+                fields.insert(k, v);
+            }
+            let usize_field = |name: &str| -> Result<usize> {
+                fields
+                    .get(name)
+                    .with_context(|| format!("tune cache key {key}: missing {name}="))?
+                    .parse()
+                    .with_context(|| format!("tune cache key {key}: {name} not a number"))
+            };
+            let entry = TuneEntry {
+                key: key.clone(),
+                cand: Candidate {
+                    bm: usize_field("bm")?,
+                    bn: usize_field("bn")?,
+                    stages: usize_field("stages")?,
+                    warps: usize_field("warps")?,
+                    split_k: usize_field("split_k")?,
+                },
+                micros: {
+                    let us: f64 = fields
+                        .get("us")
+                        .with_context(|| format!("tune cache key {key}: missing us="))?
+                        .parse()
+                        .with_context(|| format!("tune cache key {key}: us not a number"))?;
+                    // `"nan".parse::<f64>()` succeeds; a non-finite score
+                    // would poison every ordering consumer downstream.
+                    if !us.is_finite() {
+                        bail!("tune cache key {key}: us must be finite, got {us}");
+                    }
+                    us
+                },
+                strategy: fields.get("strategy").unwrap_or(&"unknown").to_string(),
+                evaluated: usize_field("evaluated").unwrap_or(0),
+            };
+            cache.entries.insert(key, entry);
+        }
+        Ok(cache)
+    }
+
+    /// Serialize back to the text format (stable order: BTreeMap keys).
+    pub fn render(&self) -> String {
+        let mut out = String::from("# qimeng autotune cache v1\n");
+        for e in self.entries.values() {
+            out.push_str(&format!(
+                "tune {} bm={} bn={} stages={} warps={} split_k={} us={:.6} strategy={} evaluated={}\n",
+                e.key,
+                e.cand.bm,
+                e.cand.bn,
+                e.cand.stages,
+                e.cand.warps,
+                e.cand.split_k,
+                e.micros,
+                e.strategy,
+                e.evaluated,
+            ));
+        }
+        out
+    }
+
+    /// Load from disk; a missing file is an empty cache (first run).
+    pub fn load(path: &Path) -> Result<Self> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text)
+                .map_err(|e| e.context(format!("parsing {}", path.display()))),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(TuneCache::new()),
+            Err(e) => {
+                Err(anyhow::Error::from(e).context(format!("reading {}", path.display())))
+            }
+        }
+    }
+
+    /// Write to disk (parent directories created as needed).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Exact-key lookup, counted as a hit or miss.
+    pub fn get(&self, key: &str) -> Option<&TuneEntry> {
+        match self.entries.get(key) {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Serving-path lookup: any entry tuned for this spec shape on any
+    /// arch/backend, best (lowest modeled time) first. Counted.
+    pub fn lookup_spec(&self, spec_part: &str) -> Option<&TuneEntry> {
+        let prefix = format!("{spec_part}|");
+        let best = self
+            .entries
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, e)| e)
+            .min_by(|a, b| a.micros.total_cmp(&b.micros));
+        match best {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Serving-path membership test: does *any* entry tuned for this
+    /// spec shape — on any arch/backend — name the `(bm, bn)` schedule?
+    /// The serving side does not know which card it stands in for, so it
+    /// treats the cache as a set of endorsed schedules rather than
+    /// ranking entries tuned for different hardware against each other.
+    /// This is the one predicate both [`crate::runtime::registry`] and
+    /// the coordinator use to pick among artifact variants.
+    pub fn names_schedule(&self, spec_part: &str, bm: usize, bn: usize) -> bool {
+        let prefix = format!("{spec_part}|");
+        self.entries
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .any(|(_, e)| e.cand.bm == bm && e.cand.bn == bn)
+    }
+
+    pub fn insert(&mut self, entry: TuneEntry) {
+        self.entries.insert(entry.key.clone(), entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &TuneEntry> {
+        self.entries.values()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::sketch::spec::AttnVariant;
+
+    fn entry(key: &str, bm: usize) -> TuneEntry {
+        TuneEntry {
+            key: key.to_string(),
+            cand: Candidate { bm, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            micros: 123.456,
+            strategy: "exhaustive".to_string(),
+            evaluated: 210,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let mut c = TuneCache::new();
+        c.insert(entry("a|A100|pallas", 128));
+        c.insert(entry("b|T4|cute", 64));
+        let parsed = TuneCache::parse(&c.render()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        for (a, b) in parsed.entries().zip(c.entries()) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.cand, b.cand);
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.evaluated, b.evaluated);
+            assert!((a.micros - b.micros).abs() < 1e-3);
+        }
+        // Render is a fixed point after one parse (exact text equality).
+        assert_eq!(parsed.render(), c.render());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TuneCache::parse("nottune x bm=1").is_err());
+        assert!(TuneCache::parse("tune onlykey bm=notanumber bn=64 stages=2 warps=4 split_k=1 us=1").is_err());
+        assert!(TuneCache::parse("tune k keynovalue").is_err());
+        assert!(TuneCache::parse("# just a comment\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let mut c = TuneCache::new();
+        c.insert(entry("k|A100|pallas", 128));
+        assert!(c.get("k|A100|pallas").is_some());
+        assert!(c.get("absent").is_none());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn load_missing_file_is_empty() {
+        let c = TuneCache::load(Path::new("/nonexistent/tune.txt")).unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join("qimeng_tunecache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune.txt");
+        let mut c = TuneCache::new();
+        c.insert(entry("k|A100|pallas", 256));
+        c.save(&path).unwrap();
+        let loaded = TuneCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.get("k|A100|pallas").unwrap().cand.bm, 256);
+    }
+
+    #[test]
+    fn spec_and_sig_parts_agree() {
+        use crate::runtime::registry::AttnSignature;
+        let spec = OpSpec::benchmark(AttnVariant::Gqa, 1024, 64, true);
+        let sig = AttnSignature {
+            variant: spec.variant,
+            causal: spec.causal,
+            qk_dim: spec.qk_dim(),
+            v_dim: spec.v_head_dim,
+            batch: spec.batch,
+            q_heads: spec.num_q_heads,
+            kv_heads: spec.num_kv_heads,
+            seq: spec.seq_len,
+            kv: spec.kv_len,
+        };
+        assert_eq!(spec_part(&spec), sig_part(&sig));
+    }
+
+    #[test]
+    fn lookup_spec_prefers_fastest_arch_entry() {
+        let mut c = TuneCache::new();
+        let mut slow = entry("shape|T4|pallas", 64);
+        slow.micros = 900.0;
+        let mut fast = entry("shape|A100|pallas", 128);
+        fast.micros = 100.0;
+        c.insert(slow);
+        c.insert(fast);
+        // Prefix must not match a different shape.
+        c.insert(entry("shapeother|A100|pallas", 32));
+        let e = c.lookup_spec("shape").unwrap();
+        assert_eq!(e.cand.bm, 128);
+        assert!(c.lookup_spec("nothere").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_scores() {
+        // `"nan".parse::<f64>()` succeeds, so this needs an explicit
+        // guard or a poisoned cache would panic ordering consumers.
+        let bad =
+            "tune k|A100|pallas bm=64 bn=64 stages=2 warps=4 split_k=1 us=nan strategy=beam evaluated=1";
+        assert!(TuneCache::parse(bad).is_err());
+        let inf =
+            "tune k|A100|pallas bm=64 bn=64 stages=2 warps=4 split_k=1 us=inf strategy=beam evaluated=1";
+        assert!(TuneCache::parse(inf).is_err());
+    }
+
+    #[test]
+    fn names_schedule_is_arch_agnostic_membership() {
+        let mut c = TuneCache::new();
+        let mut t4 = entry("shape|T4|pallas", 128);
+        t4.micros = 900.0;
+        let mut a100 = entry("shape|A100|pallas", 256);
+        a100.micros = 100.0;
+        c.insert(t4);
+        c.insert(a100);
+        // Both cards' winners are endorsed — the serving side must not
+        // rank entries tuned for different hardware against each other.
+        assert!(c.names_schedule("shape", 128, 64));
+        assert!(c.names_schedule("shape", 256, 64));
+        assert!(!c.names_schedule("shape", 32, 64));
+        assert!(!c.names_schedule("othershape", 128, 64));
+    }
+
+    #[test]
+    fn spec_key_distinguishes_arch_and_backend() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        let a = spec_key(&spec, GpuArch::a100().name, Target::Pallas);
+        let b = spec_key(&spec, GpuArch::t4().name, Target::Pallas);
+        let c = spec_key(&spec, GpuArch::a100().name, Target::Cute);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert!(a.ends_with("|A100|pallas"));
+    }
+}

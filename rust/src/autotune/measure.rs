@@ -1,0 +1,106 @@
+//! Measured refinement: execute the TL code a candidate induces through
+//! the numeric interpreter ([`crate::verify::interp`]) on a reduced
+//! probe and time it on the host.
+//!
+//! This is the reproduction's stand-in for the paper's on-device
+//! benchmarking step (§3.2): the analytical model ranks the space, and —
+//! when [`super::AutotuneConfig::measure`] is on — candidates the model
+//! cannot separate are re-ranked by an actual execution. Wall-clock is
+//! inherently noisy, so measurement only ever breaks exact model ties;
+//! determinism-sensitive callers leave it off (the default).
+
+use std::time::{Duration, Instant};
+
+use super::space::{self, Candidate};
+use crate::perfmodel::gpu::GpuArch;
+use crate::reasoner::{self, profiles::LlmProfile};
+use crate::sketch::{self, spec::OpSpec};
+use crate::tl::ast::Stmt;
+use crate::verify::interp::run_attention;
+use crate::verify::tensor::Tensor2;
+
+/// Interpret the candidate's kernel on a reduced probe and return the
+/// host wall-clock. Probe rows = `2 * max(BM, BN)` — the same reduction
+/// rule the verification gate uses, which keeps the causal
+/// block-skipping path exercised while staying O(ms) on the host.
+pub fn probe_wallclock(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    cand: &Candidate,
+    seed: u64,
+) -> Result<Duration, String> {
+    let tiling = space::tiling_of(cand, spec, arch);
+    let probe_rows = 2 * tiling.bm.max(tiling.bn);
+
+    let sketch = sketch::generate_sketch(spec);
+    let reasoned =
+        reasoner::reason_with_tiling(&sketch, spec, &LlmProfile::default_profile(), tiling);
+    let mut program = reasoned.program;
+    for s in &mut program.stmts {
+        if let Stmt::Param { name, value } = s {
+            if name == "seq_len" || name == "kv_len" {
+                *value = probe_rows as i64;
+            }
+        }
+    }
+
+    let qk = spec.qk_dim();
+    let q = Tensor2::randn(probe_rows, qk, seed);
+    let k = Tensor2::randn(probe_rows, qk, seed + 1);
+    let v = Tensor2::randn(probe_rows, spec.v_head_dim, seed + 2);
+    let scale = 1.0 / (qk as f32).sqrt();
+
+    let t0 = Instant::now();
+    run_attention(&program, &q, &k, &v, scale)?;
+    Ok(t0.elapsed())
+}
+
+/// Among model-score ties, pick the candidate with the fastest measured
+/// probe; candidates whose probe fails to execute (e.g. indirect NSA
+/// addressing the interpreter's reduced probe cannot follow) keep their
+/// model ranking. Returns the winner (the first tie when nothing
+/// measures).
+pub fn refine_ties(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    ties: &[Candidate],
+    seed: u64,
+) -> Candidate {
+    debug_assert!(!ties.is_empty());
+    let mut best: Option<(Candidate, Duration)> = None;
+    for c in ties {
+        if let Ok(d) = probe_wallclock(spec, arch, c, seed) {
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((*c, d));
+            }
+        }
+    }
+    best.map(|(c, _)| c).unwrap_or(ties[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::AttnVariant;
+
+    #[test]
+    fn probe_measures_finite_positive_time() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+        let arch = GpuArch::a100();
+        let c = Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 };
+        let d = probe_wallclock(&spec, &arch, &c, 0xC0FFEE).expect("probe runs");
+        assert!(d > Duration::ZERO);
+    }
+
+    #[test]
+    fn refine_ties_returns_a_member() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+        let arch = GpuArch::a100();
+        let ties = [
+            Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 },
+            Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 1 },
+        ];
+        let winner = refine_ties(&spec, &arch, &ties, 7);
+        assert!(ties.contains(&winner));
+    }
+}

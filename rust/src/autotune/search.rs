@@ -1,0 +1,318 @@
+//! Pluggable search over a candidate slice: exhaustive scan for the
+//! spaces this repo actually produces (a few hundred points), and
+//! deterministic beam / greedy hill-climbing for larger spaces, seeded
+//! through [`crate::util::prng`] so every run of the same search on the
+//! same space returns the same winner.
+
+use super::space::Candidate;
+use crate::util::prng::Rng;
+
+/// Which search to run. `Auto` picks exhaustive below
+/// [`EXHAUSTIVE_LIMIT`] candidates and beam search above it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    Auto,
+    Exhaustive,
+    Beam { width: usize, rounds: usize, seed: u64 },
+    Greedy { restarts: usize, seed: u64 },
+}
+
+/// Space size up to which `Auto` scans exhaustively.
+pub const EXHAUSTIVE_LIMIT: usize = 1024;
+
+/// Default beam parameters used by `Auto` on oversized spaces.
+pub const DEFAULT_BEAM: SearchStrategy = SearchStrategy::Beam { width: 16, rounds: 12, seed: 0x5EED };
+
+impl SearchStrategy {
+    /// Parse a CLI name; `seed` feeds the stochastic strategies.
+    pub fn parse(s: &str, seed: u64) -> Option<SearchStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(SearchStrategy::Auto),
+            "exhaustive" | "full" => Some(SearchStrategy::Exhaustive),
+            "beam" => Some(SearchStrategy::Beam { width: 16, rounds: 12, seed }),
+            "greedy" => Some(SearchStrategy::Greedy { restarts: 4, seed }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::Auto => "auto",
+            SearchStrategy::Exhaustive => "exhaustive",
+            SearchStrategy::Beam { .. } => "beam",
+            SearchStrategy::Greedy { .. } => "greedy",
+        }
+    }
+}
+
+/// Result of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub best: Candidate,
+    /// Objective value (modeled seconds) of `best`.
+    pub seconds: f64,
+    /// Distinct candidates scored.
+    pub evaluated: usize,
+    /// Strategy that actually ran (Auto resolves to a concrete one).
+    pub strategy: &'static str,
+}
+
+/// Run `strategy` over `space`, minimizing `score`. `space` must be
+/// non-empty; ties keep the earliest candidate so results are fully
+/// deterministic. The stochastic strategies always evaluate the tail of
+/// the slice (where [`super::space::enumerate`] appends the legacy
+/// warm-start configurations) before exploring.
+pub fn run_search(
+    space: &[Candidate],
+    strategy: SearchStrategy,
+    mut score: impl FnMut(&Candidate) -> f64,
+) -> SearchOutcome {
+    assert!(!space.is_empty(), "empty schedule space");
+    match strategy {
+        SearchStrategy::Auto => {
+            if space.len() <= EXHAUSTIVE_LIMIT {
+                run_search(space, SearchStrategy::Exhaustive, score)
+            } else {
+                run_search(space, DEFAULT_BEAM, score)
+            }
+        }
+        SearchStrategy::Exhaustive => {
+            let mut best_idx = 0usize;
+            let mut best = f64::INFINITY;
+            for (i, c) in space.iter().enumerate() {
+                let s = score(c);
+                if s < best {
+                    best = s;
+                    best_idx = i;
+                }
+            }
+            SearchOutcome {
+                best: space[best_idx],
+                seconds: best,
+                evaluated: space.len(),
+                strategy: "exhaustive",
+            }
+        }
+        SearchStrategy::Beam { width, rounds, seed } => {
+            beam(space, width.max(2), rounds.max(1), seed, &mut score)
+        }
+        SearchStrategy::Greedy { restarts, seed } => {
+            greedy(space, restarts.max(1), seed, &mut score)
+        }
+    }
+}
+
+/// Seed points every stochastic search starts from: a coarse stride
+/// sample plus the warm-start tail.
+fn seed_points(space: &[Candidate], width: usize) -> Vec<usize> {
+    let n = space.len();
+    let mut idxs: Vec<usize> = (0..width).map(|i| i * n / width).collect();
+    idxs.push(n - 1);
+    if n >= 2 {
+        idxs.push(n - 2);
+    }
+    idxs.sort_unstable();
+    idxs.dedup();
+    idxs
+}
+
+struct Evaluator<'a, F> {
+    space: &'a [Candidate],
+    scores: Vec<Option<f64>>,
+    evaluated: usize,
+    score: F,
+}
+
+impl<'a, F: FnMut(&Candidate) -> f64> Evaluator<'a, F> {
+    fn new(space: &'a [Candidate], score: F) -> Self {
+        Evaluator { space, scores: vec![None; space.len()], evaluated: 0, score }
+    }
+
+    fn get(&mut self, idx: usize) -> f64 {
+        if let Some(s) = self.scores[idx] {
+            return s;
+        }
+        let s = (self.score)(&self.space[idx]);
+        self.scores[idx] = Some(s);
+        self.evaluated += 1;
+        s
+    }
+}
+
+fn beam(
+    space: &[Candidate],
+    width: usize,
+    rounds: usize,
+    seed: u64,
+    score: &mut impl FnMut(&Candidate) -> f64,
+) -> SearchOutcome {
+    let mut ev = Evaluator::new(space, score);
+    let mut rng = Rng::new(seed);
+
+    // (score, index) frontier, kept sorted ascending; index tie-breaks.
+    let mut frontier: Vec<(f64, usize)> =
+        seed_points(space, width).into_iter().map(|i| (ev.get(i), i)).collect();
+    frontier.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    frontier.truncate(width);
+
+    for _ in 0..rounds {
+        let mut next = frontier.clone();
+        // Expand the knob-distance-1 neighborhood of every beam member.
+        for &(_, i) in &frontier {
+            for (j, c) in space.iter().enumerate() {
+                if space[i].knob_distance(c) == 1 {
+                    next.push((ev.get(j), j));
+                }
+            }
+        }
+        // Exploration: a few random probes per round.
+        for _ in 0..width / 2 {
+            let j = rng.below(space.len() as u64) as usize;
+            next.push((ev.get(j), j));
+        }
+        next.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        next.dedup_by_key(|(_, i)| *i);
+        next.truncate(width);
+        if next == frontier {
+            break; // converged
+        }
+        frontier = next;
+    }
+    let (seconds, idx) = frontier[0];
+    SearchOutcome { best: space[idx], seconds, evaluated: ev.evaluated, strategy: "beam" }
+}
+
+fn greedy(
+    space: &[Candidate],
+    restarts: usize,
+    seed: u64,
+    score: &mut impl FnMut(&Candidate) -> f64,
+) -> SearchOutcome {
+    let mut ev = Evaluator::new(space, score);
+    let mut rng = Rng::new(seed);
+    let mut best = (f64::INFINITY, 0usize);
+
+    let mut starts = seed_points(space, 2);
+    for _ in 0..restarts {
+        starts.push(rng.below(space.len() as u64) as usize);
+    }
+
+    for start in starts {
+        let mut cur = (ev.get(start), start);
+        loop {
+            let mut improved = false;
+            for (j, c) in space.iter().enumerate() {
+                if space[cur.1].knob_distance(c) == 1 {
+                    let s = ev.get(j);
+                    if s < cur.0 {
+                        cur = (s, j);
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        if cur.0 < best.0 {
+            best = cur;
+        }
+    }
+    SearchOutcome {
+        best: space[best.1],
+        seconds: best.0,
+        evaluated: ev.evaluated,
+        strategy: "greedy",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small synthetic space: objective = |bm - 128| + |bn - 64| scaled,
+    /// minimum at (128, 64).
+    fn toy_space() -> Vec<Candidate> {
+        let mut v = Vec::new();
+        for bm in [32usize, 64, 128, 256] {
+            for bn in [32usize, 64, 128] {
+                for stages in [1usize, 2] {
+                    v.push(Candidate { bm, bn, stages, warps: 4, split_k: 1 });
+                }
+            }
+        }
+        v
+    }
+
+    fn toy_score(c: &Candidate) -> f64 {
+        (c.bm as f64 - 128.0).abs() + (c.bn as f64 - 64.0).abs() + (c.stages != 2) as u8 as f64
+    }
+
+    #[test]
+    fn exhaustive_finds_global_minimum() {
+        let space = toy_space();
+        let out = run_search(&space, SearchStrategy::Exhaustive, toy_score);
+        assert_eq!((out.best.bm, out.best.bn, out.best.stages), (128, 64, 2));
+        assert_eq!(out.evaluated, space.len());
+    }
+
+    #[test]
+    fn auto_resolves_to_exhaustive_for_small_spaces() {
+        let out = run_search(&toy_space(), SearchStrategy::Auto, toy_score);
+        assert_eq!(out.strategy, "exhaustive");
+    }
+
+    #[test]
+    fn beam_is_deterministic_and_finds_minimum_on_toy_space() {
+        let space = toy_space();
+        let strat = SearchStrategy::Beam { width: 4, rounds: 8, seed: 42 };
+        let a = run_search(&space, strat, toy_score);
+        let b = run_search(&space, strat, toy_score);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!((a.best.bm, a.best.bn), (128, 64));
+    }
+
+    #[test]
+    fn greedy_deterministic_per_seed() {
+        let space = toy_space();
+        let strat = SearchStrategy::Greedy { restarts: 3, seed: 7 };
+        let a = run_search(&space, strat, toy_score);
+        let b = run_search(&space, strat, toy_score);
+        assert_eq!(a.best, b.best);
+        // The toy objective is unimodal in the knob graph, so greedy
+        // hill-climbing reaches the global minimum too.
+        assert_eq!((a.best.bm, a.best.bn, a.best.stages), (128, 64, 2));
+    }
+
+    #[test]
+    fn stochastic_searches_never_miss_the_warm_start_tail() {
+        // Objective that makes the LAST element the unique minimum —
+        // the warm-start guarantee must find it without exploration luck.
+        let space = toy_space();
+        let last = *space.last().unwrap();
+        let score = |c: &Candidate| if *c == last { 0.0 } else { 1.0 };
+        for strat in [
+            SearchStrategy::Beam { width: 2, rounds: 1, seed: 1 },
+            SearchStrategy::Greedy { restarts: 1, seed: 1 },
+        ] {
+            let out = run_search(&space, strat, score);
+            assert_eq!(out.best, last, "{} missed the warm start", out.strategy);
+        }
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(SearchStrategy::parse("auto", 1), Some(SearchStrategy::Auto));
+        assert_eq!(SearchStrategy::parse("EXHAUSTIVE", 1), Some(SearchStrategy::Exhaustive));
+        assert!(matches!(
+            SearchStrategy::parse("beam", 9),
+            Some(SearchStrategy::Beam { seed: 9, .. })
+        ));
+        assert!(matches!(
+            SearchStrategy::parse("greedy", 9),
+            Some(SearchStrategy::Greedy { seed: 9, .. })
+        ));
+        assert_eq!(SearchStrategy::parse("bogus", 1), None);
+    }
+}

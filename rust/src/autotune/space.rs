@@ -1,0 +1,334 @@
+//! The schedule search space: every knob the translated kernel exposes,
+//! pruned by the same shared-memory / register / occupancy arithmetic
+//! the stage-1b reasoner applies ([`crate::reasoner::tiling`]).
+//!
+//! A [`Candidate`] goes far beyond the reasoner's (BM, BN) pair: staging
+//! depth (single / double / triple buffering), warp count, and split-K
+//! for short-grid (decode-style) problems. [`schedule_of`] maps a
+//! candidate onto the analytical cost model's [`Schedule`] so the search
+//! objective ([`model_seconds`]) is priced by `perfmodel::cost` — the
+//! paper's "score candidates against the hardware" loop (§3.2) with the
+//! machine model standing in for the physical cards (DESIGN.md §2).
+
+use crate::perfmodel::cost::{self, Schedule};
+use crate::perfmodel::gpu::GpuArch;
+use crate::perfmodel::schedules;
+use crate::reasoner::tiling::{self, Tiling, TilingStrategy};
+use crate::sketch::spec::OpSpec;
+
+/// One point in the schedule space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Q-tile rows per thread block.
+    pub bm: usize,
+    /// K/V-tile rows streamed per iteration.
+    pub bn: usize,
+    /// Staging depth: 1 = single buffer, 2 = double buffer (the
+    /// reasoner's prefetch), 3 = triple-buffered pipeline.
+    pub stages: usize,
+    /// Warps per thread block.
+    pub warps: usize,
+    /// Split-K factor: KV tiles divided across `split_k` cooperating
+    /// blocks whose partial outputs are merged through HBM. 1 = off.
+    pub split_k: usize,
+}
+
+impl Candidate {
+    /// The candidate equivalent to a reasoner [`Tiling`] (warp count and
+    /// split-K at their classic defaults). Used to warm-start searches
+    /// and as the comparison baseline in the regression tests.
+    pub fn from_tiling(t: &Tiling) -> Candidate {
+        Candidate {
+            bm: t.bm,
+            bn: t.bn,
+            stages: if t.double_buffer { 2 } else { 1 },
+            warps: 4,
+            split_k: 1,
+        }
+    }
+
+    /// Number of knobs on which two candidates differ (neighborhood
+    /// metric for the beam / greedy searches).
+    pub fn knob_distance(&self, other: &Candidate) -> usize {
+        (self.bm != other.bm) as usize
+            + (self.bn != other.bn) as usize
+            + (self.stages != other.stages) as usize
+            + (self.warps != other.warps) as usize
+            + (self.split_k != other.split_k) as usize
+    }
+}
+
+impl std::fmt::Display for Candidate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bm{} bn{} stages{} warps{} splitk{}",
+            self.bm, self.bn, self.stages, self.warps, self.split_k
+        )
+    }
+}
+
+/// Stage-aware shared-memory footprint: the Q tile plus `stages` copies
+/// of the streamed K/V tiles (generalizes `tiling::smem_bytes`, which
+/// models exactly stages ∈ {1, 2}).
+pub fn smem_bytes_staged(spec: &OpSpec, bm: usize, bn: usize, stages: usize) -> usize {
+    let e = spec.dtype.bytes();
+    let q = bm * spec.qk_dim() * e;
+    let kv = bn * spec.qk_dim() * e + bn * spec.v_head_dim * e;
+    q + stages.max(1) * kv
+}
+
+/// Architectural register cap per thread (Volta onward: 255).
+const MAX_REGS_PER_THREAD: usize = 255;
+
+/// Hard feasibility constraints — the same limits the stage-1b prompt
+/// walks the LLM through, extended with the per-thread register ceiling
+/// that the warp-count knob trades against.
+pub fn fits(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> bool {
+    if smem_bytes_staged(spec, cand.bm, cand.bn, cand.stages) > arch.smem_per_block {
+        return false;
+    }
+    // Tiles larger than the (padded) problem waste the whole block.
+    if cand.bm > spec.seq_len.next_power_of_two().max(32)
+        || cand.bn > spec.kv_len.next_power_of_two().max(32)
+    {
+        return false;
+    }
+    let regs = tiling::reg_bytes(spec, cand.bm, cand.bn);
+    if regs > arch.regfile_per_sm {
+        return false;
+    }
+    // reg_bytes is fp32 state; / 4 = registers, spread over the threads.
+    let regs_per_thread = regs / 4 / (cand.warps * 32);
+    if regs_per_thread > MAX_REGS_PER_THREAD {
+        return false;
+    }
+    // Split-K needs enough KV tiles that each split still streams a few.
+    if cand.split_k > 1 && spec.kv_len / cand.bn.max(1) < 2 * cand.split_k {
+        return false;
+    }
+    true
+}
+
+/// Enumerate the feasible space in a deterministic order. The two
+/// reasoner-equivalent configurations (heuristic and cost-search) are
+/// always appended as warm starts — searches that evaluate the tail of
+/// the slice are therefore never worse than either legacy strategy.
+pub fn enumerate(spec: &OpSpec, arch: &GpuArch) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for bm in [32usize, 64, 128, 256] {
+        for bn in [32usize, 64, 128] {
+            for stages in [1usize, 2, 3] {
+                for warps in [4usize, 8] {
+                    for split_k in [1usize, 2, 4, 8] {
+                        let c = Candidate { bm, bn, stages, warps, split_k };
+                        if fits(spec, arch, &c) {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for strategy in [TilingStrategy::Heuristic, TilingStrategy::CostSearch] {
+        let t = tiling::choose(strategy, spec, arch, true);
+        let c = Candidate::from_tiling(&t);
+        // Move (not just append) to the tail so the stochastic searches'
+        // seed points always cover the legacy configurations.
+        out.retain(|x| *x != c);
+        out.push(c);
+    }
+    out
+}
+
+/// Derive the reasoner-facing [`Tiling`] facts for a candidate.
+pub fn tiling_of(cand: &Candidate, spec: &OpSpec, arch: &GpuArch) -> Tiling {
+    let smem = smem_bytes_staged(spec, cand.bm, cand.bn, cand.stages);
+    let regs = tiling::reg_bytes(spec, cand.bm, cand.bn);
+    Tiling {
+        bm: cand.bm,
+        bn: cand.bn,
+        double_buffer: cand.stages >= 2,
+        smem_bytes: smem,
+        reg_bytes: regs,
+        blocks_per_sm: tiling::occupancy(arch, smem, regs),
+    }
+}
+
+/// Map a candidate onto the cost model's [`Schedule`]. The canonical
+/// point (stages 2, warps 4, split-K off) reproduces `schedules::ours`
+/// exactly except for the tile sizes, so scores are directly comparable
+/// with the legacy strategies and the paper-table calibration.
+pub fn schedule_of(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> Schedule {
+    let mut s = schedules::ours(arch, spec.head_dim, spec.dtype);
+    s.name = format!("autotune[{cand}]");
+    s.bm = cand.bm;
+    s.bn = cand.bn;
+    match cand.stages {
+        1 => {
+            // No prefetch: staging latency exposed (the Claude-3.5 profile
+            // pays the same penalty in schedules::ours_with_profile).
+            s.softmax_overlap = (s.softmax_overlap - 0.25).max(0.0);
+            s.mma_eff *= 0.99;
+        }
+        2 => {}
+        _ => {
+            // Deeper pipeline hides a little more pointwise work, at the
+            // shared-memory cost `fits` already charged.
+            s.softmax_overlap = (s.softmax_overlap + 0.04).min(0.92);
+            s.mma_eff *= 1.01;
+        }
+    }
+    if cand.warps == 8 {
+        if cand.bm * cand.bn >= 128 * 64 {
+            s.mma_eff *= 1.005; // more ILP feeding the tensor cores
+        } else {
+            s.mma_eff *= 0.98; // sync overhead dominates small tiles
+        }
+    }
+    if cand.split_k > 1 {
+        // Each split pays its own prologue/epilogue.
+        s.c_epi += 1.5 * (cand.split_k - 1) as f64;
+    }
+    s
+}
+
+/// The search objective: modeled seconds for `cand` on `(spec, arch)`.
+///
+/// `cost::estimate` assumes the grid saturates the GPU (true for the
+/// paper's benchmark shapes); for short grids we scale by the idle
+/// fraction — the situation split-K exists to fix — and charge split-K's
+/// partial-output merge traffic. Both corrections are ≥ 0 and vanish on
+/// saturated single-split schedules, so on the paper grids this equals
+/// `cost::estimate(..).seconds` exactly.
+pub fn model_seconds(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> f64 {
+    let sched = schedule_of(spec, arch, cand);
+    let est = cost::estimate(spec, arch, &sched);
+    if est.oom || !est.seconds.is_finite() {
+        return f64::INFINITY;
+    }
+    let t = tiling_of(cand, spec, arch);
+    let nqb = spec.seq_len.div_ceil(t.bm.min(spec.seq_len).max(1)).max(1);
+    let blocks = spec.batch * spec.num_q_heads * nqb * cand.split_k;
+    let concurrency = (arch.sm_count * t.blocks_per_sm).max(1);
+    let idle = (concurrency as f64 / blocks as f64).max(1.0);
+    let merge_bytes = cand.split_k.saturating_sub(1) as f64
+        * (spec.batch * spec.num_q_heads * spec.seq_len * spec.v_head_dim) as f64
+        * 4.0  // f32 partials
+        * 2.0; // written then re-read by the merge pass
+    est.seconds * idle + merge_bytes / (arch.mem_bw_gbs * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::AttnVariant;
+
+    fn mha(seq: usize, hd: usize) -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, seq, hd, true)
+    }
+
+    #[test]
+    fn enumeration_is_nonempty_and_feasible_everywhere() {
+        for arch in GpuArch::all() {
+            for spec in [mha(4096, 64), mha(512, 128), OpSpec::mla(4096, true)] {
+                let space = enumerate(&spec, &arch);
+                assert!(!space.is_empty(), "{}: empty space", arch.name);
+                // All but the appended warm starts satisfy the hard limits.
+                for c in &space[..space.len().saturating_sub(2)] {
+                    assert!(fits(&spec, &arch, c), "{}: {c} infeasible", arch.name);
+                    assert!(
+                        smem_bytes_staged(&spec, c.bm, c.bn, c.stages)
+                            <= arch.smem_per_block
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_contains_both_legacy_strategies() {
+        let spec = mha(4096, 64);
+        for arch in GpuArch::all() {
+            let space = enumerate(&spec, &arch);
+            for strategy in [TilingStrategy::Heuristic, TilingStrategy::CostSearch] {
+                let c = Candidate::from_tiling(&tiling::choose(strategy, &spec, &arch, true));
+                assert!(space.contains(&c), "{}: missing warm start {c}", arch.name);
+            }
+        }
+    }
+
+    #[test]
+    fn staged_smem_generalizes_double_buffer() {
+        let spec = mha(4096, 64);
+        assert_eq!(
+            smem_bytes_staged(&spec, 128, 64, 1),
+            tiling::smem_bytes(&spec, 128, 64, false)
+        );
+        assert_eq!(
+            smem_bytes_staged(&spec, 128, 64, 2),
+            tiling::smem_bytes(&spec, 128, 64, true)
+        );
+        assert!(smem_bytes_staged(&spec, 128, 64, 3) > smem_bytes_staged(&spec, 128, 64, 2));
+    }
+
+    #[test]
+    fn register_cap_forces_wide_tiles_onto_more_warps() {
+        let spec = mha(16384, 64);
+        let arch = GpuArch::a100();
+        let big4 = Candidate { bm: 256, bn: 128, stages: 2, warps: 4, split_k: 1 };
+        let big8 = Candidate { warps: 8, ..big4 };
+        assert!(!fits(&spec, &arch, &big4), "388 regs/thread must be rejected");
+        assert!(fits(&spec, &arch, &big8));
+    }
+
+    #[test]
+    fn canonical_candidate_matches_ours_schedule() {
+        let spec = mha(16384, 64);
+        let arch = GpuArch::a100();
+        let base = schedules::ours(&arch, 64, spec.dtype);
+        let c = Candidate { bm: base.bm, bn: base.bn, stages: 2, warps: 4, split_k: 1 };
+        let s = schedule_of(&spec, &arch, &c);
+        assert_eq!(s.mma_eff, base.mma_eff);
+        assert_eq!(s.softmax_overlap, base.softmax_overlap);
+        assert_eq!(s.c_epi, base.c_epi);
+        assert_eq!((s.bm, s.bn), (base.bm, base.bn));
+    }
+
+    #[test]
+    fn model_seconds_equals_estimate_on_saturated_grids() {
+        let spec = mha(4096, 64); // batch 4 x 32 heads: thousands of blocks
+        let arch = GpuArch::a100();
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let raw = cost::estimate(&spec, &arch, &schedule_of(&spec, &arch, &c)).seconds;
+        assert_eq!(model_seconds(&spec, &arch, &c), raw);
+    }
+
+    #[test]
+    fn idle_correction_penalizes_short_grids() {
+        // Decode-style: one 16-token q chunk against a 16k KV cache.
+        let mut spec = mha(16384, 128);
+        spec.seq_len = 16;
+        spec.batch = 1;
+        let arch = GpuArch::a100();
+        let single = Candidate { bm: 32, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let split = Candidate { split_k: 8, ..single };
+        assert!(fits(&spec, &arch, &split));
+        assert!(
+            model_seconds(&spec, &arch, &split) < model_seconds(&spec, &arch, &single),
+            "split-K must win on a starved grid"
+        );
+    }
+
+    #[test]
+    fn tiling_of_reports_consistent_facts() {
+        let spec = mha(4096, 64);
+        let arch = GpuArch::a100();
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let t = tiling_of(&c, &spec, &arch);
+        assert_eq!((t.bm, t.bn), (128, 64));
+        assert!(t.double_buffer);
+        assert!(t.blocks_per_sm >= 1);
+        assert_eq!(t.smem_bytes, tiling::smem_bytes(&spec, 128, 64, true));
+    }
+}

@@ -104,6 +104,12 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         "coordinator up: {} servable attention families",
         coordinator.families.len()
     );
+    if coordinator.tuned_selections > 0 {
+        println!(
+            "tune cache selected {} artifact variant(s) (artifacts/tune.txt)",
+            coordinator.tuned_selections
+        );
+    }
     let stream = crate::workload::request_stream(&coordinator.families, n, rate, seed);
     let report = run_stream(&coordinator, &stream, 1.0);
     println!(

@@ -18,7 +18,8 @@ use anyhow::{Context, Result};
 use super::batcher::{plan_batches, BatchPlan};
 use super::metrics::Metrics;
 use super::request::{AttnRequest, AttnResponse, FamilyKey};
-use crate::runtime::registry::{AttnSignature, Registry};
+use crate::autotune::cache::{self as tune_cache, TuneCache};
+use crate::runtime::registry::{ArtifactMeta, AttnSignature, Registry};
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -45,6 +46,9 @@ pub struct Coordinator {
     next_id: std::sync::atomic::AtomicU64,
     /// Families servable by the loaded artifact set.
     pub families: Vec<FamilyKey>,
+    /// Routing slots where the autotune cache picked among multiple
+    /// artifact variants for the same (family, capacity).
+    pub tuned_selections: usize,
 }
 
 impl Coordinator {
@@ -58,15 +62,49 @@ impl Coordinator {
                 .with_context(|| format!("opening {}", config.artifacts_dir.display()))?;
         let metas = crate::runtime::registry::parse_manifest(&manifest_text)?;
 
+        // Tuning winners shipped with the artifacts (empty when absent):
+        // used to pick among artifact variants compiled for the same
+        // (family, capacity) slot with different schedules.
+        let tune = TuneCache::load(&config.artifacts_dir.join("tune.txt"))
+            .unwrap_or_else(|_| TuneCache::new());
+        // Same endorsement predicate Registry::find_best applies.
+        let tuned_pick = |meta: &ArtifactMeta, sig: &AttnSignature| -> bool {
+            match (meta.usize_field("bm").ok(), meta.usize_field("bn").ok()) {
+                (Some(bm), Some(bn)) => {
+                    tune.names_schedule(&tune_cache::sig_part(sig), bm, bn)
+                }
+                _ => false,
+            }
+        };
+
         // family -> sorted capacities, (family, capacity) -> artifact id.
+        // Duplicate (family, capacity) slots keep the pre-existing
+        // last-wins behaviour unless the tuning cache endorses a variant,
+        // in which case the endorsed one is pinned.
         let mut capacities: BTreeMap<FamilyKey, Vec<usize>> = BTreeMap::new();
         let mut artifact_of: BTreeMap<(FamilyKey, usize), String> = BTreeMap::new();
+        let mut tuned_slots: std::collections::BTreeSet<(FamilyKey, usize)> =
+            std::collections::BTreeSet::new();
+        let mut slot_rows: BTreeMap<(FamilyKey, usize), usize> = BTreeMap::new();
         for meta in metas.iter().filter(|m| m.kind == "attention") {
             let sig = AttnSignature::from_meta(meta)?;
             let fam = family_of(&sig);
             capacities.entry(fam.clone()).or_default().push(sig.batch);
-            artifact_of.insert((fam, sig.batch), meta.id.clone());
+            let slot = (fam, sig.batch);
+            *slot_rows.entry(slot.clone()).or_insert(0) += 1;
+            if tuned_pick(meta, &sig) {
+                artifact_of.insert(slot.clone(), meta.id.clone());
+                tuned_slots.insert(slot);
+            } else if !tuned_slots.contains(&slot) {
+                artifact_of.insert(slot, meta.id.clone());
+            }
         }
+        // A slot counts as a tuned selection only when the cache actually
+        // decided among multiple variants competing for it.
+        let tuned_selections = tuned_slots
+            .iter()
+            .filter(|slot| slot_rows.get(*slot).copied().unwrap_or(0) > 1)
+            .count();
         for caps in capacities.values_mut() {
             caps.sort_unstable();
             caps.dedup();
@@ -106,6 +144,7 @@ impl Coordinator {
             handle: Some(handle),
             next_id: std::sync::atomic::AtomicU64::new(0),
             families,
+            tuned_selections,
         })
     }
 

@@ -21,9 +21,19 @@
 //! loads AOT-compiled artifacts ([`runtime`]), and the serving coordinator
 //! ([`coordinator`]).
 //!
+//! The paper's *self-optimizing* loop — candidate schedules searched and
+//! scored until the generated operator wins (§3.2) — is the [`autotune`]
+//! subsystem: a schedule space (tiles, staging depth, warps, split-K)
+//! pruned by the reasoner's resource limits, pluggable deterministic
+//! searches scored by [`perfmodel::cost`], and a persistent
+//! [`autotune::cache::TuneCache`] keyed by `(OpSpec, GpuArch, backend)`
+//! that the pipeline ([`pipeline::run_tuned`]), the `tlc tune` CLI, and
+//! the serving registry/coordinator all consult.
+//!
 //! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in this
 //! environment) and the experiment index.
 
+pub mod autotune;
 pub mod coordinator;
 pub mod perfmodel;
 pub mod pipeline;

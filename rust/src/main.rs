@@ -6,6 +6,7 @@
 //!   verify        run stage 1a+1b and the verification gate, print report
 //!   ablate        single-stage ablation (Appendix B): show rejected TL
 //!   tables        regenerate a paper table/figure from the perf model
+//!   tune          schedule-space autotuning with a persistent cache
 //!   serve         start the attention-serving coordinator (PJRT runtime)
 
 use qimeng::perfmodel::gpu::GpuArch;
@@ -35,6 +36,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("verify") => cmd_verify(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("tables") => cmd_tables(&args),
+        Some("tune") => qimeng::autotune::cli_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some(other) => Err(format!("unknown subcommand `{other}`")),
         None => {
@@ -47,35 +49,29 @@ fn run(argv: Vec<String>) -> Result<(), String> {
 const USAGE: &str = "\
 tlc — QiMeng-Attention (ACL 2025) reproduction pipeline
 
-USAGE: tlc <generate|generate-all|verify|ablate|tables|serve> [flags]
+USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
 
   generate     --variant mha|gqa|mqa|mla [--seq N] [--head-dim 64|128]
                [--causal] [--target a100|rtx8000|t4|l40s]
                [--llm deepseek-v3|deepseek-r1|claude-3.5|gpt-4o|gpt-4o+v3]
                [--backend pallas|cute] [--out FILE] [--show sketch|tl|all]
+               [--autotune] [--cache FILE]
   generate-all [--out-dir python/compile/kernels/generated]
   verify       same operator flags as generate
   ablate       --failure reshape|gemm [operator flags]
   tables       --table 1|2|3|4|5|6|7|8|9 | --figure 1 | --all
+  tune         [operator flags] [--target ...] [--backend pallas|cute]
+               [--grid] [--strategy auto|exhaustive|beam|greedy] [--seed N]
+               [--measure] [--cache tune_cache.txt]
   serve        [--artifacts artifacts] [--requests N] [--batch N]
 ";
 
 fn spec_from(args: &Args) -> Result<OpSpec, String> {
-    let variant = AttnVariant::parse(args.get_or("variant", "mha"))
-        .ok_or("bad --variant (mha|gqa|mqa|mla|nsa)")?;
-    let seq = args.get_usize("seq", 1024)?;
-    let head_dim = args.get_usize("head-dim", 64)?;
-    let causal = args.get_bool("causal");
-    Ok(match variant {
-        AttnVariant::Mla => OpSpec::mla(seq, true),
-        AttnVariant::Nsa => OpSpec::nsa(seq),
-        _ => OpSpec::benchmark(variant, seq, head_dim, causal),
-    })
+    OpSpec::from_cli(args)
 }
 
 fn arch_from(args: &Args) -> Result<GpuArch, String> {
-    let name = args.get_or("target", "a100");
-    GpuArch::by_name(name).ok_or_else(|| format!("unknown --target `{name}`"))
+    GpuArch::from_cli(args)
 }
 
 fn profile_from(args: &Args) -> Result<LlmProfile, String> {
@@ -93,17 +89,37 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let spec = spec_from(args)?;
     let arch = arch_from(args)?;
     let profile = profile_from(args)?;
-    let backend = match args.get_or("backend", "pallas") {
-        "pallas" => Target::Pallas,
-        "cute" => Target::Cute,
-        other => return Err(format!("unknown --backend `{other}`")),
-    };
+    let backend = Target::from_cli(args)?;
     let show = args.get_or("show", "code").to_string();
     let out = args.get("out").map(String::from);
+    let autotune = args.get_bool("autotune");
+    let cache = args.get("cache").map(String::from);
     args.finish()?;
 
-    let result =
-        pipeline::run(&spec, &arch, &profile, backend).map_err(|e| e.to_string())?;
+    let result = if autotune {
+        let mut tuner = qimeng::autotune::Autotuner::new(qimeng::autotune::AutotuneConfig {
+            cache_path: cache.map(std::path::PathBuf::from),
+            ..Default::default()
+        })
+        .map_err(|e| format!("{e:#}"))?;
+        let r = pipeline::run_tuned(&spec, &arch, &profile, backend, &mut tuner)
+            .map_err(|e| e.to_string())?;
+        tuner.save().map_err(|e| format!("{e:#}"))?;
+        if let Some(t) = &r.tune {
+            eprintln!(
+                "autotune: {} via {}{} — modeled {:.1} us ({:.1} TFLOPS), search {:.2?}",
+                t.candidate,
+                t.strategy,
+                if t.cached { " (cache hit)" } else { "" },
+                t.seconds * 1e6,
+                t.estimate.tflops,
+                r.timings.search,
+            );
+        }
+        r
+    } else {
+        pipeline::run(&spec, &arch, &profile, backend).map_err(|e| e.to_string())?
+    };
     if show == "sketch" || show == "all" {
         println!("==== TL Sketch ({} stmts) ====", result.sketch.stmt_count());
         println!("{}", print_program(&result.sketch));

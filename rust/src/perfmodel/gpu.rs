@@ -149,6 +149,12 @@ impl GpuArch {
         vec![Self::a100(), Self::rtx8000(), Self::t4(), Self::l40s()]
     }
 
+    /// Parse the `--target` CLI flag (shared by the `tlc` subcommands).
+    pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self, String> {
+        let name = args.get_or("target", "a100");
+        Self::by_name(name).ok_or_else(|| format!("unknown --target `{name}`"))
+    }
+
     /// Peak Tensor-Core TFLOPS for a given element width (bytes).
     pub fn tc_tflops(&self, dtype_bytes: usize) -> f64 {
         match dtype_bytes {

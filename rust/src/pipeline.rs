@@ -26,6 +26,17 @@ pub enum Target {
     Cute,
 }
 
+impl Target {
+    /// Parse the `--backend` CLI flag (shared by the `tlc` subcommands).
+    pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self, String> {
+        match args.get_or("backend", "pallas") {
+            "pallas" => Ok(Target::Pallas),
+            "cute" => Ok(Target::Cute),
+            other => Err(format!("unknown --backend `{other}`")),
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct PipelineResult {
     pub sketch: TlProgram,
@@ -35,10 +46,15 @@ pub struct PipelineResult {
     /// cannot translate — the GPT-4o row of Table 3).
     pub source: Option<String>,
     pub timings: Timings,
+    /// Autotuner outcome when the run went through [`run_tuned`].
+    pub tune: Option<crate::autotune::TuneResult>,
 }
 
 #[derive(Debug, Default, Clone)]
 pub struct Timings {
+    /// Schedule search (zero unless the run went through [`run_tuned`];
+    /// cache hits keep it near-zero on repeat runs).
+    pub search: Duration,
     pub sketch: Duration,
     pub reason: Duration,
     pub verify: Duration,
@@ -47,7 +63,7 @@ pub struct Timings {
 
 impl Timings {
     pub fn total(&self) -> Duration {
-        self.sketch + self.reason + self.verify + self.translate
+        self.search + self.sketch + self.reason + self.verify + self.translate
     }
 }
 
@@ -92,12 +108,49 @@ pub fn run(
     profile: &LlmProfile,
     target: Target,
 ) -> Result<PipelineResult, PipelineError> {
+    run_inner(spec, arch, profile, target, None)
+}
+
+/// Run the pipeline with the schedule chosen by the autotuner instead of
+/// the profile's tiling strategy. The search (or cache hit) time is
+/// recorded in [`Timings::search`], and the winning candidate travels in
+/// [`PipelineResult::tune`].
+pub fn run_tuned(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    profile: &LlmProfile,
+    target: Target,
+    tuner: &mut crate::autotune::Autotuner,
+) -> Result<PipelineResult, PipelineError> {
+    let t0 = Instant::now();
+    let tune = tuner.tune(spec, arch, target);
+    let search = t0.elapsed();
+    run_inner(spec, arch, profile, target, Some((tune, search)))
+}
+
+fn run_inner(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    profile: &LlmProfile,
+    target: Target,
+    tuned: Option<(crate::autotune::TuneResult, Duration)>,
+) -> Result<PipelineResult, PipelineError> {
     let t0 = Instant::now();
     let sketch = sketch::generate_sketch(spec);
     let t_sketch = t0.elapsed();
 
     let t0 = Instant::now();
-    let reasoned = reasoner::reason(&sketch, spec, arch, profile);
+    let (tune, t_search) = match tuned {
+        Some((tune, search)) => (Some(tune), search),
+        None => (None, Duration::ZERO),
+    };
+    let reasoned = match &tune {
+        Some(t) => {
+            let tiling = crate::autotune::space::tiling_of(&t.candidate, spec, arch);
+            reasoner::reason_with_tiling(&sketch, spec, profile, tiling)
+        }
+        None => reasoner::reason(&sketch, spec, arch, profile),
+    };
     let t_reason = t0.elapsed();
 
     let t0 = Instant::now();
@@ -125,11 +178,13 @@ pub fn run(
         verify: report,
         source: Some(source),
         timings: Timings {
+            search: t_search,
             sketch: t_sketch,
             reason: t_reason,
             verify: t_verify,
             translate: t_translate,
         },
+        tune,
     })
 }
 
@@ -168,6 +223,35 @@ mod tests {
             Err(PipelineError::CannotTranslate(name)) => assert_eq!(name, "GPT-4o"),
             other => panic!("expected CannotTranslate, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn tuned_pipeline_verifies_and_hits_cache_on_rerun() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let arch = GpuArch::a100();
+        let mut tuner = crate::autotune::Autotuner::in_memory();
+
+        let r = run_tuned(&spec, &arch, &LlmProfile::deepseek_v3(), Target::Pallas, &mut tuner)
+            .expect("tuned pipeline");
+        assert!(r.verify.passed, "autotuned schedule must still verify");
+        let tune = r.tune.as_ref().expect("tune outcome recorded");
+        assert!(!tune.cached);
+        assert_eq!(r.reasoned.tiling.bm, tune.candidate.bm, "searched BM must reach the TL code");
+        assert_eq!(r.reasoned.tiling.bn, tune.candidate.bn);
+
+        let r2 = run_tuned(&spec, &arch, &LlmProfile::deepseek_v3(), Target::Pallas, &mut tuner)
+            .expect("tuned pipeline rerun");
+        assert!(r2.tune.unwrap().cached, "second run must hit the tuning cache");
+        assert_eq!(tuner.cache().hits(), 1);
+    }
+
+    #[test]
+    fn untuned_run_records_no_search_time() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+            .expect("pipeline");
+        assert!(r.tune.is_none());
+        assert_eq!(r.timings.search, Duration::ZERO);
     }
 
     #[test]

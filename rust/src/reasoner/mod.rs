@@ -61,8 +61,23 @@ pub fn reason(
     profile: &LlmProfile,
 ) -> Reasoned {
     let tiling = tiling::choose(profile.tiling, spec, arch, profile.prefetch);
+    reason_with_tiling(sketch, spec, profile, tiling)
+}
+
+/// Stage 1b with an externally chosen tiling — the entry point the
+/// autotuner uses ([`crate::pipeline::run_tuned`]) to inject a searched
+/// schedule instead of the profile's strategy. Prefetch is emitted only
+/// when both the profile asks for it and the tiling actually budgets the
+/// double buffer (a single-staged autotune candidate disables it).
+pub fn reason_with_tiling(
+    sketch: &TlProgram,
+    spec: &OpSpec,
+    profile: &LlmProfile,
+    tiling: Tiling,
+) -> Reasoned {
     let roles = infer_roles(sketch);
-    let ctx = Ctx { spec, profile, roles: &roles };
+    let prefetch = profile.prefetch && tiling.double_buffer;
+    let ctx = Ctx { spec, profile, prefetch, roles: &roles };
 
     let mut stmts: Vec<Stmt> = Vec::new();
     // 1. Concrete parameters.
@@ -136,6 +151,9 @@ pub(crate) fn infer_roles(sketch: &TlProgram) -> BTreeMap<String, Role> {
 struct Ctx<'a> {
     spec: &'a OpSpec,
     profile: &'a LlmProfile,
+    /// Emit the guarded double-buffer prefetch (profile knob gated by the
+    /// tiling's staging budget).
+    prefetch: bool,
     roles: &'a BTreeMap<String, Role>,
 }
 
@@ -401,7 +419,7 @@ impl<'a> Ctx<'a> {
                         Stmt::Compute { op: ComputeOp::Gemm, accumulate: true, .. }
                     );
                     new_body.extend(rewritten);
-                    if self.profile.prefetch && is_kv_loop && (was_score_gemm || was_acc_gemm)
+                    if self.prefetch && is_kv_loop && (was_score_gemm || was_acc_gemm)
                     {
                         let role = if was_score_gemm { Role::KLike } else { Role::VLike };
                         if let Some(p) = self.prefetch_stmt(var, &end, body, role) {
@@ -643,6 +661,41 @@ mod tests {
             }
         });
         assert!(found_guard, "prefetch guard missing");
+    }
+
+    #[test]
+    fn injected_single_stage_tiling_disables_prefetch() {
+        // An autotuned candidate without a double buffer must suppress
+        // the prefetch even for a prefetch-happy profile.
+        let spec = mha();
+        let sketch = generate_sketch(&spec);
+        let mut tiling =
+            super::tiling::choose(super::tiling::TilingStrategy::Heuristic, &spec, &GpuArch::a100(), false);
+        tiling.double_buffer = false;
+        let r = reason_with_tiling(&sketch, &spec, &LlmProfile::deepseek_v3(), tiling);
+        r.program.walk(|s| {
+            if let Stmt::If { body, .. } = s {
+                assert!(
+                    !body.iter().any(|b| matches!(b, Stmt::Copy { .. })),
+                    "prefetch emitted despite single-stage tiling"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn injected_tiling_lands_in_params() {
+        let spec = mha();
+        let sketch = generate_sketch(&spec);
+        let tiling = crate::autotune::space::tiling_of(
+            &crate::autotune::space::Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 },
+            &spec,
+            &GpuArch::a100(),
+        );
+        let r = reason_with_tiling(&sketch, &spec, &LlmProfile::deepseek_v3(), tiling);
+        let params = r.program.params();
+        assert_eq!(params["BM"], 64);
+        assert_eq!(params["BN"], 32);
     }
 
     #[test]

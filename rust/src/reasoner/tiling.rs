@@ -20,6 +20,11 @@ pub enum TilingStrategy {
     /// Enumerate candidates, score with an occupancy × pipeline model,
     /// keep the best.
     CostSearch,
+    /// Delegate to the [`crate::autotune`] subsystem: full schedule-space
+    /// search scored by the analytical cost model (`perfmodel::cost`).
+    /// Ignores the `double_buffer` argument of [`choose`] — the winning
+    /// candidate decides its own staging depth.
+    Autotune,
 }
 
 /// A chosen tiling plus the derived footprint/occupancy facts that the
@@ -40,7 +45,9 @@ pub struct Tiling {
 
 /// Shared-memory footprint of one thread block: Q tile + K/V tiles
 /// (x2 when double-buffered), in the operator's element type.
-fn smem_bytes(spec: &OpSpec, bm: usize, bn: usize, double_buffer: bool) -> usize {
+/// Public so the [`crate::autotune`] space pruner reuses the same
+/// arithmetic (it generalizes the x2 to an arbitrary stage count).
+pub fn smem_bytes(spec: &OpSpec, bm: usize, bn: usize, double_buffer: bool) -> usize {
     let e = spec.dtype.bytes();
     let q = bm * spec.qk_dim() * e;
     let kv = bn * spec.qk_dim() * e + bn * spec.v_head_dim * e;
@@ -49,11 +56,13 @@ fn smem_bytes(spec: &OpSpec, bm: usize, bn: usize, double_buffer: bool) -> usize
 
 /// Register footprint: fp32 accumulator O (BM × VDim), score tile S
 /// (BM × BN), softmax stats (2 × BM), spread across the block's threads.
-fn reg_bytes(spec: &OpSpec, bm: usize, bn: usize) -> usize {
+pub fn reg_bytes(spec: &OpSpec, bm: usize, bn: usize) -> usize {
     4 * (bm * spec.v_head_dim + bm * bn + 2 * bm)
 }
 
-fn occupancy(arch: &GpuArch, smem: usize, regs: usize) -> usize {
+/// Thread blocks resident per SM under the smem + register limits
+/// (clamped to the hardware cap of 8 we assume throughout).
+pub fn occupancy(arch: &GpuArch, smem: usize, regs: usize) -> usize {
     if smem == 0 {
         return 1;
     }
@@ -95,6 +104,12 @@ pub fn choose(
     double_buffer: bool,
 ) -> Tiling {
     let (bm, bn) = match strategy {
+        TilingStrategy::Autotune => {
+            // Full schedule-space search; the candidate carries its own
+            // staging depth, so the `double_buffer` argument is ignored.
+            let cand = crate::autotune::best_candidate(spec, arch);
+            return crate::autotune::space::tiling_of(&cand, spec, arch);
+        }
         TilingStrategy::Heuristic => {
             let mut bm: usize = if spec.qk_dim() <= 64 { 128 } else { 64 };
             let mut bn: usize = 64;

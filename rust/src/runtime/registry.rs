@@ -1,6 +1,9 @@
 //! Artifact registry: parses `artifacts/manifest.txt` (written by
 //! python/compile/aot.py), lazily compiles artifacts on first use, and
-//! serves executables by attention signature.
+//! serves executables by attention signature. When the artifacts dir
+//! also carries a `tune.txt` tuning cache (written by `tlc tune`), the
+//! registry uses it to break ties between artifact variants compiled
+//! for the same signature with different schedules.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -9,6 +12,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::{Executable, Runtime};
+use crate::autotune::cache::{self as tune_cache, TuneCache};
 use crate::sketch::spec::AttnVariant;
 
 /// One manifest entry.
@@ -110,6 +114,8 @@ pub struct Registry {
     pub runtime: Runtime,
     metas: Vec<ArtifactMeta>,
     cache: std::sync::Mutex<BTreeMap<String, Arc<Executable>>>,
+    /// Tuning winners from `<dir>/tune.txt` (empty when absent).
+    tune: TuneCache,
 }
 
 impl Registry {
@@ -117,12 +123,22 @@ impl Registry {
         let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
             .with_context(|| format!("reading {}/manifest.txt", dir.display()))?;
         let metas = parse_manifest(&manifest)?;
+        // A malformed tuning cache must not take serving down: it is an
+        // optimization hint, so fall back to empty.
+        let tune =
+            TuneCache::load(&dir.join("tune.txt")).unwrap_or_else(|_| TuneCache::new());
         Ok(Registry {
             dir: dir.to_path_buf(),
             runtime: Runtime::cpu()?,
             metas,
             cache: std::sync::Mutex::new(BTreeMap::new()),
+            tune,
         })
+    }
+
+    /// The tuning cache shipped alongside the artifacts.
+    pub fn tune_cache(&self) -> &TuneCache {
+        &self.tune
     }
 
     pub fn metas(&self) -> &[ArtifactMeta] {
@@ -137,6 +153,31 @@ impl Registry {
     pub fn find(&self, sig: &AttnSignature) -> Option<&ArtifactMeta> {
         self.attention_metas()
             .find(|m| AttnSignature::from_meta(m).map(|s| s == *sig).unwrap_or(false))
+    }
+
+    /// Find the *best* artifact for a signature: when several variants
+    /// were compiled for the same signature (different schedules), pick
+    /// the first whose `bm`/`bn` manifest fields are endorsed by the
+    /// tuning cache (`TuneCache::names_schedule` — the same predicate
+    /// the coordinator applies); otherwise fall back to the first match
+    /// like [`find`].
+    pub fn find_best(&self, sig: &AttnSignature) -> Option<&ArtifactMeta> {
+        let matches: Vec<&ArtifactMeta> = self
+            .attention_metas()
+            .filter(|m| AttnSignature::from_meta(m).map(|s| s == *sig).unwrap_or(false))
+            .collect();
+        if matches.len() > 1 {
+            let key = tune_cache::sig_part(sig);
+            if let Some(m) = matches.iter().find(|m| {
+                match (m.usize_field("bm").ok(), m.usize_field("bn").ok()) {
+                    (Some(bm), Some(bn)) => self.tune.names_schedule(&key, bm, bn),
+                    _ => false,
+                }
+            }) {
+                return Some(*m);
+            }
+        }
+        matches.first().copied()
     }
 
     /// Compile (or fetch cached) executable for an artifact id.
@@ -188,6 +229,74 @@ mod tests {
         assert!(parse_manifest("not_artifact x file=y").is_err());
         assert!(parse_manifest("artifact x nofields_novalue").is_err());
         assert!(parse_manifest("artifact onlyid").is_err()); // no file=
+    }
+
+    #[test]
+    fn find_best_prefers_tuned_variant() {
+        use crate::autotune::cache::TuneEntry;
+        use crate::autotune::space::Candidate;
+        use crate::sketch::spec::OpSpec;
+
+        let dir = std::env::temp_dir().join("qimeng_find_best_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two artifact variants for the same signature, different schedules.
+        let manifest = "artifact v1 file=v1.hlo.txt kind=attention variant=mha causal=1 \
+                        batch=4 q_heads=32 kv_heads=32 seq=4096 kv=4096 qk=64 vd=64 bm=128 bn=64\n\
+                        artifact v2 file=v2.hlo.txt kind=attention variant=mha causal=1 \
+                        batch=4 q_heads=32 kv_heads=32 seq=4096 kv=4096 qk=64 vd=64 bm=256 bn=128\n";
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+        let mut cache = TuneCache::new();
+        cache.insert(TuneEntry {
+            key: format!("{}|A100|pallas", tune_cache::spec_part(&spec)),
+            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 },
+            micros: 100.0,
+            strategy: "exhaustive".into(),
+            evaluated: 10,
+        });
+        cache.save(&dir.join("tune.txt")).unwrap();
+
+        let reg = Registry::open(&dir).unwrap();
+        let sig = AttnSignature {
+            variant: AttnVariant::Mha,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            batch: 4,
+            q_heads: 32,
+            kv_heads: 32,
+            seq: 4096,
+            kv: 4096,
+        };
+        assert_eq!(reg.find(&sig).unwrap().id, "v1", "find keeps first-match semantics");
+        assert_eq!(reg.find_best(&sig).unwrap().id, "v2", "find_best follows the tune cache");
+    }
+
+    #[test]
+    fn find_best_without_cache_matches_find() {
+        let dir = std::env::temp_dir().join("qimeng_find_best_nocache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("tune.txt"));
+        let manifest = "artifact a1 file=a1.hlo.txt kind=attention variant=gqa causal=1 \
+                        batch=1 q_heads=8 kv_heads=2 seq=256 kv=256 qk=64 vd=64\n";
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let sig = AttnSignature {
+            variant: AttnVariant::Gqa,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            batch: 1,
+            q_heads: 8,
+            kv_heads: 2,
+            seq: 256,
+            kv: 256,
+        };
+        assert_eq!(
+            reg.find(&sig).map(|m| &m.id),
+            reg.find_best(&sig).map(|m| &m.id)
+        );
     }
 
     #[test]

@@ -164,6 +164,22 @@ impl OpSpec {
         (name.to_string(), s)
     }
 
+    /// Build a spec from the CLI operator flags (`--variant`, `--seq`,
+    /// `--head-dim`, `--causal`) — the one parser shared by the
+    /// `tlc generate|verify|ablate|tune` subcommands.
+    pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self, String> {
+        let variant = AttnVariant::parse(args.get_or("variant", "mha"))
+            .ok_or("bad --variant (mha|gqa|mqa|mla|nsa)")?;
+        let seq = args.get_usize("seq", 1024)?;
+        let head_dim = args.get_usize("head-dim", 64)?;
+        let causal = args.get_bool("causal");
+        Ok(match variant {
+            AttnVariant::Mla => OpSpec::mla(seq, true),
+            AttnVariant::Nsa => OpSpec::nsa(seq),
+            _ => OpSpec::benchmark(variant, seq, head_dim, causal),
+        })
+    }
+
     /// Q-heads per KV head (1 for MHA, >1 for GQA, all for MQA).
     pub fn group_size(&self) -> usize {
         (self.num_q_heads / self.num_kv_heads.max(1)).max(1)
