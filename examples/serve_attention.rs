@@ -22,6 +22,7 @@ fn main() {
     let config = ServeConfig {
         artifacts_dir: "artifacts".into(),
         batch_window: Duration::from_millis(5),
+        ..ServeConfig::default()
     };
     let coordinator = match Coordinator::start(config) {
         Ok(c) => c,

@@ -1,19 +1,58 @@
-//! Coordinator benches: serving throughput/latency under open-loop load,
-//! batching on vs off (window = 0), plus the pure batcher-planning hot
-//! path. §Perf target: coordinator overhead ≤ 5% of kernel execute time
-//! at batch 8. Requires `make artifacts`.
+//! Coordinator benches: serving throughput/latency under open-loop load
+//! across executor-shard counts, batching on vs off (window = 0), plus
+//! the pure batcher-planning hot path. §Perf target: coordinator
+//! overhead ≤ 5% of kernel execute time at batch 8.
+//!
+//! Modes:
+//!   cargo bench --bench coordinator              full run
+//!   cargo bench --bench coordinator -- --smoke   tiny request counts
+//!       (CI smoke: fails on any serve error or a planning-time
+//!       regression, and records results to BENCH_serve.json)
+//!
+//! Serving sections use the PJRT executor when `artifacts/manifest.txt`
+//! exists, and fall back to the in-process reference executor otherwise
+//! (so the scheduler path is exercised on machines without `make
+//! artifacts` — including CI).
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 use qimeng::coordinator::batcher::plan_batches;
-use qimeng::coordinator::{run_stream, Coordinator, FamilyKey, ServeConfig};
+use qimeng::coordinator::{
+    run_stream, Coordinator, ExecutorSpec, FamilyKey, ServeConfig, ServeReport,
+};
 use qimeng::sketch::spec::AttnVariant;
 use qimeng::util::bench::Bench;
-use qimeng::workload::request_stream;
+use qimeng::workload::request_stream_mixed;
+
+fn start(shards: usize, window_ms: u64, executor: ExecutorSpec) -> Coordinator {
+    Coordinator::start(ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        batch_window: Duration::from_millis(window_ms),
+        shards,
+        executor,
+        ..ServeConfig::default()
+    })
+    .expect("coordinator start")
+}
+
+fn serve(shards: usize, window_ms: u64, executor: ExecutorSpec, n: usize) -> ServeReport {
+    let coordinator = start(shards, window_ms, executor.clone());
+    // Warm every family once (compiles executables / primes caches).
+    let warm =
+        request_stream_mixed(&coordinator.families, coordinator.families.len() * 2, 1e6, 0.5, 3);
+    let _ = run_stream(&coordinator, &warm, 1e9);
+    let stream = request_stream_mixed(&coordinator.families, n, 1e6, 0.5, 11);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    coordinator.shutdown();
+    report
+}
 
 fn main() {
-    // -- pure planning hot path (no PJRT) --
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut failures: Vec<String> = Vec::new();
+
+    // -- pure planning hot path (no execution) --
     let fam = FamilyKey {
         variant: AttnVariant::Mha,
         causal: true,
@@ -27,37 +66,87 @@ fn main() {
     let caps: BTreeMap<FamilyKey, Vec<usize>> = [(fam.clone(), vec![1, 4])].into();
     let pending: Vec<(usize, FamilyKey, bool)> =
         (0..256).map(|i| (i, fam.clone(), i % 7 == 0)).collect();
-    let rep = Bench::new("batch_planning_256_pending").samples(200).run(|| {
-        plan_batches(&pending, &caps)
-    });
+    let samples = if smoke { 40 } else { 200 };
+    let rep = Bench::new("batch_planning_256_pending")
+        .samples(samples)
+        .run(|| plan_batches(&pending, &caps));
     println!("  -> {:.1} plans/ms", 1e-3 / (rep.mean.as_secs_f64() / 64.0));
-
-    // -- end-to-end serving --
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("skipping serving benches: run `make artifacts` first");
-        return;
+    // Scheduler-overhead guard: planning 256 pending requests must stay
+    // far below any real execute time (ms-scale); 5 ms is a regression.
+    let planning_us = rep.mean.as_secs_f64() * 1e6;
+    if planning_us > 5_000.0 {
+        failures.push(format!("batch planning took {planning_us:.0} us for 256 pending"));
     }
-    for (label, window_ms) in [("batched_w5ms", 5u64), ("unbatched_w0", 0)] {
-        let coordinator = Coordinator::start(ServeConfig {
-            artifacts_dir: "artifacts".into(),
-            batch_window: Duration::from_millis(window_ms),
-        })
-        .expect("coordinator");
-        // Warm all executables once.
-        let warm = request_stream(&coordinator.families, coordinator.families.len() * 4, 1e6, 3);
-        let _ = run_stream(&coordinator, &warm, 1e9);
-        let stream = request_stream(&coordinator.families, 64, 1e6, 11);
-        let t0 = std::time::Instant::now();
-        let report = run_stream(&coordinator, &stream, 1e9);
+
+    // -- end-to-end serving across shard counts --
+    let executor = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        ExecutorSpec::Pjrt
+    } else {
+        eprintln!("artifacts/manifest.txt absent: serving via the reference executor");
+        ExecutorSpec::Reference
+    };
+    let n = if smoke { 24 } else { 96 };
+    let mut results: Vec<(String, f64, usize)> = Vec::new();
+    for shards in [1usize, 4] {
+        let report = serve(shards, 5, executor.clone(), n);
         println!(
-            "serve_{label}: {} ok in {:.2?} -> {:.1} req/s, occupancy {:.2}, p50 {:.1?}, p95 {:.1?}",
+            "serve_shards{shards}: {} ok in {:.2?} -> {:.1} req/s, occupancy {:.2}, \
+             p50 {:.1?}, p95 {:.1?}",
             report.ok,
-            t0.elapsed(),
+            report.wall,
             report.throughput_rps,
             report.mean_occupancy,
             report.p50,
             report.p95
         );
-        coordinator.shutdown();
+        if report.errors > 0 {
+            failures.push(format!("{} serve errors at --shards {shards}", report.errors));
+        }
+        results.push((format!("shards{shards}"), report.throughput_rps, report.ok));
+    }
+    let speedup = if results.len() == 2 && results[0].1 > 0.0 {
+        results[1].1 / results[0].1
+    } else {
+        0.0
+    };
+    println!("shards4 / shards1 throughput = {speedup:.2}x");
+
+    // Batched vs unbatched (window 0) at 1 shard.
+    for (label, window_ms) in [("batched_w5ms", 5u64), ("unbatched_w0", 0)] {
+        let report = serve(1, window_ms, executor.clone(), n);
+        println!(
+            "serve_{label}: {} ok -> {:.1} req/s, occupancy {:.2}",
+            report.ok, report.throughput_rps, report.mean_occupancy
+        );
+        if report.errors > 0 {
+            failures.push(format!("{} serve errors in {label}", report.errors));
+        }
+    }
+
+    // Record results where CI can diff them.
+    let json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"executor\": \"{}\",\n  \"requests\": {n},\n  \
+         \"planning_us_256_pending\": {planning_us:.1},\n  \
+         \"shards1_rps\": {:.2},\n  \"shards4_rps\": {:.2},\n  \"speedup\": {speedup:.3}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        match executor {
+            ExecutorSpec::Pjrt => "pjrt",
+            _ => "reference",
+        },
+        results.first().map(|r| r.1).unwrap_or(0.0),
+        results.get(1).map(|r| r.1).unwrap_or(0.0),
+    );
+    if let Err(e) = std::fs::write("BENCH_serve.json", &json) {
+        eprintln!("warning: could not write BENCH_serve.json: {e}");
+    } else {
+        println!("recorded BENCH_serve.json:\n{json}");
+    }
+
+    if !failures.is_empty() {
+        eprintln!("coordinator bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
     }
 }

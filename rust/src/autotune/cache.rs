@@ -91,6 +91,22 @@ pub fn sig_part(sig: &AttnSignature) -> String {
     )
 }
 
+/// Strategy tag marking entries produced by serving-side latency
+/// observation rather than model-guided search. Observed entries carry
+/// *measured host microseconds* — a different unit of account from the
+/// modeled GPU microseconds of tuned entries — so ranking consumers
+/// never compare across the two groups.
+pub const OBSERVED_STRATEGY: &str = "observed";
+
+/// Cache key for a serving observation: the schedule identity is folded
+/// into the key so each artifact variant accumulates its own entry.
+pub fn observed_key(spec_part: &str, cand: &Candidate) -> String {
+    format!(
+        "{spec_part}|{OBSERVED_STRATEGY}|bm{}bn{}sk{}",
+        cand.bm, cand.bn, cand.split_k
+    )
+}
+
 /// Full cache key for a tuning run.
 pub fn spec_key(spec: &OpSpec, arch_name: &str, target: Target) -> String {
     let backend = match target {
@@ -107,6 +123,16 @@ pub struct TuneCache {
     entries: BTreeMap<String, TuneEntry>,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Clone for TuneCache {
+    fn clone(&self) -> Self {
+        TuneCache {
+            entries: self.entries.clone(),
+            hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
+            misses: AtomicU64::new(self.misses.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl TuneCache {
@@ -233,8 +259,16 @@ impl TuneCache {
         }
     }
 
+    /// Is this entry a serving-side latency observation (measured host
+    /// time) rather than a search winner (modeled GPU time)?
+    pub fn is_observed(entry: &TuneEntry) -> bool {
+        entry.strategy == OBSERVED_STRATEGY
+    }
+
     /// Serving-path lookup: any entry tuned for this spec shape on any
-    /// arch/backend, best (lowest modeled time) first. Counted.
+    /// arch/backend, best (lowest modeled time) first. Observed entries
+    /// are excluded — their measured micros are not comparable with
+    /// modeled scores. Counted.
     pub fn lookup_spec(&self, spec_part: &str) -> Option<&TuneEntry> {
         let prefix = format!("{spec_part}|");
         let best = self
@@ -242,6 +276,7 @@ impl TuneCache {
             .range(prefix.clone()..)
             .take_while(|(k, _)| k.starts_with(&prefix))
             .map(|(_, e)| e)
+            .filter(|e| !Self::is_observed(e))
             .min_by(|a, b| a.micros.total_cmp(&b.micros));
         match best {
             Some(e) => {
@@ -267,7 +302,48 @@ impl TuneCache {
         self.entries
             .range(prefix.clone()..)
             .take_while(|(k, _)| k.starts_with(&prefix))
+            .filter(|(_, e)| !Self::is_observed(e))
             .any(|(_, e)| e.cand.bm == bm && e.cand.bn == bn)
+    }
+
+    /// Fold one measured serving latency into the cache: the executor
+    /// pool calls this after every executed batch, so re-ranking evidence
+    /// accumulates while serving. Entries keep a running mean in `micros`
+    /// and the sample count in `evaluated`; non-finite samples are
+    /// dropped at the door (they would poison every ordering consumer).
+    pub fn observe(&mut self, spec_part: &str, cand: Candidate, micros: f64) {
+        if !micros.is_finite() || micros < 0.0 {
+            return;
+        }
+        let key = observed_key(spec_part, &cand);
+        let entry = self.entries.entry(key.clone()).or_insert_with(|| TuneEntry {
+            key,
+            cand,
+            micros: 0.0,
+            strategy: OBSERVED_STRATEGY.to_string(),
+            evaluated: 0,
+        });
+        let n = entry.evaluated as f64;
+        entry.micros = (entry.micros * n + micros) / (n + 1.0);
+        entry.evaluated += 1;
+    }
+
+    /// The variant that measured fastest while serving this spec shape,
+    /// if any observations were recorded. Unlike tuned entries (modeled
+    /// for a target card), observations all come from the serving host,
+    /// so ranking them against each other is sound.
+    pub fn observed_best(&self, spec_part: &str) -> Option<&TuneEntry> {
+        let prefix = format!("{spec_part}|{OBSERVED_STRATEGY}|");
+        self.entries
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, e)| e)
+            .min_by(|a, b| a.micros.total_cmp(&b.micros))
+    }
+
+    /// Number of observation entries (serving evidence) in the cache.
+    pub fn observed_count(&self) -> usize {
+        self.entries.values().filter(|e| Self::is_observed(e)).count()
     }
 
     pub fn insert(&mut self, entry: TuneEntry) {
@@ -427,6 +503,43 @@ mod tests {
         assert!(c.names_schedule("shape", 256, 64));
         assert!(!c.names_schedule("shape", 32, 64));
         assert!(!c.names_schedule("othershape", 128, 64));
+    }
+
+    #[test]
+    fn observe_keeps_running_mean_per_variant() {
+        let mut c = TuneCache::new();
+        let a = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let b = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4 };
+        c.observe("shape", a, 100.0);
+        c.observe("shape", a, 300.0);
+        c.observe("shape", b, 150.0);
+        c.observe("shape", b, f64::NAN); // dropped
+        assert_eq!(c.observed_count(), 2);
+        let best = c.observed_best("shape").unwrap();
+        assert_eq!(best.cand, b, "150us split-K variant beats the 200us mean");
+        assert!((best.micros - 150.0).abs() < 1e-9);
+        assert_eq!(best.evaluated, 1);
+        let slower = c.get(&observed_key("shape", &a)).unwrap();
+        assert!((slower.micros - 200.0).abs() < 1e-9, "running mean of 100,300");
+        assert_eq!(slower.evaluated, 2);
+    }
+
+    #[test]
+    fn observations_roundtrip_and_stay_out_of_model_ranking() {
+        let mut c = TuneCache::new();
+        let tuned = entry("shape|A100|pallas", 128);
+        c.insert(tuned);
+        let fast = Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 4 };
+        c.observe("shape", fast, 1.0); // measured host time, absurdly fast
+        // Modeled ranking and endorsement ignore observed entries...
+        assert_eq!(c.lookup_spec("shape").unwrap().cand.bm, 128);
+        assert!(!c.names_schedule("shape", 32, 32));
+        assert!(c.names_schedule("shape", 128, 64));
+        // ...but observed_best sees them, and they survive a disk roundtrip.
+        let parsed = TuneCache::parse(&c.render()).unwrap();
+        assert_eq!(parsed.observed_count(), 1);
+        assert_eq!(parsed.observed_best("shape").unwrap().cand, fast);
+        assert_eq!(parsed.lookup_spec("shape").unwrap().cand.bm, 128);
     }
 
     #[test]

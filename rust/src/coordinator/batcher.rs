@@ -1,24 +1,52 @@
 //! Dynamic signature batcher (vLLM-style, specialized to fixed-shape AOT
-//! executables).
+//! executables) with prefill/decode lanes.
 //!
 //! Requests are grouped by [`FamilyKey`]; each family has a set of
-//! compiled batch capacities (the artifact batch sizes from the AOT
-//! manifest, e.g. {1, 4}). The planner packs queued requests into batches
-//! that (a) never mix families, (b) never exceed a compiled capacity, and
-//! (c) prefer the largest capacity that can be filled, falling back to
-//! padded execution for stragglers once their deadline expires.
+//! compiled batch capacities per [`LaneKey`] (the artifact batch sizes
+//! from the AOT manifest, e.g. {1, 4}; the decode lane's set is clamped
+//! by the KV-cache budget and backed by split-K artifact variants). The
+//! planner packs queued requests into batches that (a) never mix
+//! families, (b) never exceed a compiled capacity, and (c) prefer the
+//! largest capacity that can be filled, falling back to padded execution
+//! for stragglers once their deadline expires.
 //!
 //! The planning logic is pure (no PJRT, no channels) so its invariants
 //! are property-tested in `rust/tests/proptest_batcher.rs`.
 
 use std::collections::BTreeMap;
 
-use super::request::FamilyKey;
+use super::request::{FamilyKey, LaneKey};
+
+/// Compiled batch capacities for one family, split by ingress lane.
+/// Prefill keeps the raw artifact capacities; the decode lane's set may
+/// differ (KV-budget clamping, split-K-variant availability).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneCaps {
+    pub prefill: Vec<usize>,
+    pub decode: Vec<usize>,
+}
+
+impl LaneCaps {
+    /// Same capacities on both lanes (the pre-lane behaviour).
+    pub fn uniform(caps: Vec<usize>) -> Self {
+        LaneCaps { prefill: caps.clone(), decode: caps }
+    }
+
+    pub fn for_lane(&self, lane: LaneKey) -> &[usize] {
+        match lane {
+            LaneKey::Prefill => &self.prefill,
+            LaneKey::Decode => &self.decode,
+        }
+    }
+}
 
 /// A planned execution batch: indices into the pending queue.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPlan {
     pub family: FamilyKey,
+    /// Lane this batch belongs to (decides which artifact variant the
+    /// executor picks — decode prefers split-K).
+    pub lane: LaneKey,
     /// Capacity of the executable to use (compiled batch size).
     pub capacity: usize,
     /// Queue indices of the requests packed into this batch
@@ -27,22 +55,33 @@ pub struct BatchPlan {
 }
 
 impl BatchPlan {
+    /// Padded slots in this batch. A plan whose members exceed its
+    /// capacity is malformed — [`plan_batches_lanes`] never emits one —
+    /// so this saturates (returning 0) instead of panicking on underflow.
     pub fn padding(&self) -> usize {
-        self.capacity - self.members.len()
+        debug_assert!(
+            self.members.len() <= self.capacity,
+            "BatchPlan with {} members over capacity {}",
+            self.members.len(),
+            self.capacity
+        );
+        self.capacity.saturating_sub(self.members.len())
     }
 }
 
-/// Plan batches over the pending queue.
+/// Plan batches over the pending queue, one lane dimension per family
+/// (the lane is a pure function of the family shape).
 ///
 /// * `pending`: (queue index, family, waited-past-deadline) per request.
-/// * `capacities`: compiled batch sizes per family (sorted ascending).
+/// * `capacities`: compiled batch sizes per family and lane (sorted
+///   ascending).
 ///
 /// Full batches (filling the largest capacity) are always emitted.
 /// Partial batches are emitted only when at least one member is past its
 /// batching deadline — otherwise requests keep waiting for peers.
-pub fn plan_batches(
+pub fn plan_batches_lanes(
     pending: &[(usize, FamilyKey, bool)],
-    capacities: &BTreeMap<FamilyKey, Vec<usize>>,
+    capacities: &BTreeMap<FamilyKey, LaneCaps>,
 ) -> Vec<BatchPlan> {
     let mut by_family: BTreeMap<&FamilyKey, Vec<(usize, bool)>> = BTreeMap::new();
     for (idx, fam, expired) in pending {
@@ -51,9 +90,14 @@ pub fn plan_batches(
 
     let mut plans = Vec::new();
     for (fam, mut reqs) in by_family {
-        let Some(caps) = capacities.get(fam) else {
-            continue; // no executable for this family; router rejects upstream
+        let lane = LaneKey::of(fam);
+        let caps = match capacities.get(fam) {
+            Some(lc) => lc.for_lane(lane),
+            None => continue, // no executable; router rejects upstream
         };
+        if caps.is_empty() {
+            continue;
+        }
         let max_cap = *caps.iter().max().unwrap_or(&1);
         // FIFO order.
         reqs.sort_by_key(|(idx, _)| *idx);
@@ -64,6 +108,7 @@ pub fn plan_batches(
                 // Full batch at max capacity.
                 plans.push(BatchPlan {
                     family: fam.clone(),
+                    lane,
                     capacity: max_cap,
                     members: reqs[cursor..cursor + max_cap].iter().map(|r| r.0).collect(),
                 });
@@ -84,13 +129,35 @@ pub fn plan_batches(
             let take = remaining.min(cap);
             plans.push(BatchPlan {
                 family: fam.clone(),
+                lane,
                 capacity: cap,
                 members: reqs[cursor..cursor + take].iter().map(|r| r.0).collect(),
             });
             cursor += take;
         }
     }
+    // Construction above cannot overfill a batch, but a malformed plan
+    // must never reach the executor (it would corrupt the packed input
+    // buffers), so reject defensively rather than trusting the loop.
+    plans.retain(|p| {
+        debug_assert!(p.members.len() <= p.capacity, "planner emitted overfull batch");
+        p.members.len() <= p.capacity
+    });
     plans
+}
+
+/// Lane-less compatibility entry: every family gets the same capacity
+/// set on both lanes. Existing callers (and the planning bench) route
+/// through here.
+pub fn plan_batches(
+    pending: &[(usize, FamilyKey, bool)],
+    capacities: &BTreeMap<FamilyKey, Vec<usize>>,
+) -> Vec<BatchPlan> {
+    let lane_caps: BTreeMap<FamilyKey, LaneCaps> = capacities
+        .iter()
+        .map(|(f, c)| (f.clone(), LaneCaps::uniform(c.clone())))
+        .collect();
+    plan_batches_lanes(pending, &lane_caps)
 }
 
 #[cfg(test)]
@@ -111,6 +178,19 @@ mod tests {
         }
     }
 
+    fn decode_fam(variant: AttnVariant, kv: usize) -> FamilyKey {
+        FamilyKey {
+            variant,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq: 1,
+            kv,
+        }
+    }
+
     fn caps(fams: &[&FamilyKey]) -> BTreeMap<FamilyKey, Vec<usize>> {
         fams.iter().map(|f| ((*f).clone(), vec![1, 4])).collect()
     }
@@ -122,6 +202,7 @@ mod tests {
         let plans = plan_batches(&pending, &caps(&[&f]));
         assert_eq!(plans.len(), 2);
         assert!(plans.iter().all(|p| p.capacity == 4 && p.members.len() == 4));
+        assert!(plans.iter().all(|p| p.lane == LaneKey::Prefill));
     }
 
     #[test]
@@ -185,5 +266,48 @@ mod tests {
         assert_eq!(plans.len(), 2);
         assert_eq!(plans[0].members, vec![0, 1, 2, 3]);
         assert_eq!(plans[1].members, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn decode_lane_uses_decode_capacities() {
+        let d = decode_fam(AttnVariant::Mha, 1024);
+        assert_eq!(LaneKey::of(&d), LaneKey::Decode);
+        let mut capacities = BTreeMap::new();
+        // Decode lane packs into larger capacities than prefill offers.
+        capacities.insert(
+            d.clone(),
+            LaneCaps { prefill: vec![1, 4], decode: vec![1, 8] },
+        );
+        let pending: Vec<_> = (0..8).map(|i| (i, d.clone(), false)).collect();
+        let plans = plan_batches_lanes(&pending, &capacities);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].capacity, 8);
+        assert_eq!(plans[0].lane, LaneKey::Decode);
+    }
+
+    #[test]
+    fn empty_lane_capacity_set_parks_requests() {
+        // A decode family whose decode capacities were fully clamped away
+        // by the KV budget produces no plans (requests rejected upstream).
+        let d = decode_fam(AttnVariant::Mha, 2048);
+        let mut capacities = BTreeMap::new();
+        capacities.insert(d.clone(), LaneCaps { prefill: vec![1, 4], decode: vec![] });
+        let pending = vec![(0, d.clone(), true)];
+        assert!(plan_batches_lanes(&pending, &capacities).is_empty());
+    }
+
+    #[test]
+    fn padding_saturates_on_malformed_plan() {
+        // Release builds must not panic on capacity underflow; debug
+        // builds assert (so construct only where debug_assertions is off).
+        if cfg!(not(debug_assertions)) {
+            let p = BatchPlan {
+                family: fam(AttnVariant::Mha, 256),
+                lane: LaneKey::Prefill,
+                capacity: 1,
+                members: vec![0, 1, 2],
+            };
+            assert_eq!(p.padding(), 0);
+        }
     }
 }

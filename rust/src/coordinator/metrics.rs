@@ -1,8 +1,97 @@
-//! Serving metrics: request counts, batch occupancy, latency histogram.
+//! Serving metrics: request counts, batch occupancy, per-shard load, and
+//! a lock-free log-scale latency histogram.
+//!
+//! The histogram replaced a `Mutex<Vec<u64>>` that cloned and sorted the
+//! whole latency record on every percentile query (O(n log n) under the
+//! lock, unbounded memory, and a poisoned-lock panic path in the serve
+//! loop). Buckets are log2-spaced with 4 linear sub-buckets per octave,
+//! so any percentile is answered in O(buckets) from atomics with a
+//! worst-case relative error of one sub-bucket width (< 25%); the mean
+//! stays exact via sum/count atomics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
+
+/// 64 octaves x 4 sub-buckets covers the full u64 microsecond range.
+const SUBS: usize = 4;
+const BUCKETS: usize = 64 * SUBS;
+
+/// Lock-free latency histogram over microseconds.
+pub struct LatencyHistogram {
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn index(us: u64) -> usize {
+        let us = us.max(1);
+        let octave = 63 - us.leading_zeros() as usize;
+        let sub = if octave >= 2 { ((us >> (octave - 2)) & 0b11) as usize } else { 0 };
+        (octave * SUBS + sub).min(BUCKETS - 1)
+    }
+
+    /// Upper bound of a bucket — percentile answers round *up* so SLO
+    /// checks against them stay conservative.
+    fn upper_bound(idx: usize) -> u64 {
+        let octave = idx / SUBS;
+        let sub = (idx % SUBS) as u64;
+        if octave < 2 {
+            return 1u64 << (octave + 1).min(63);
+        }
+        let width = 1u64 << (octave - 2);
+        (1u64 << octave).saturating_add((sub + 1).saturating_mul(width))
+    }
+
+    pub fn record(&self, us: u64) {
+        self.counts[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n))
+    }
+
+    /// p in [0, 1]; answers the upper bound of the bucket holding the
+    /// rank-`p` sample (concurrent recording makes this approximate in
+    /// the same way any snapshot would be).
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = (((total - 1) as f64) * p.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen > rank {
+                return Some(Duration::from_micros(Self::upper_bound(idx)));
+            }
+        }
+        // Counters raced upward mid-scan; report the largest occupied bucket.
+        let last = self.counts.iter().rposition(|c| c.load(Ordering::Relaxed) > 0)?;
+        Some(Duration::from_micros(Self::upper_bound(last)))
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -11,34 +100,46 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// Router reassignments of a family to a different shard.
+    pub rebalances: AtomicU64,
+    /// Latencies recorded per-variant into the tune cache as well.
+    latencies: LatencyHistogram,
+    /// Batches executed per shard (sized by [`Metrics::with_shards`]).
+    shard_batches: Vec<AtomicU64>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_shards(1)
+    }
+
+    pub fn with_shards(shards: usize) -> Self {
+        Metrics {
+            shard_batches: (0..shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            ..Metrics::default()
+        }
     }
 
     pub fn record_latency(&self, d: Duration) {
-        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+        self.latencies.record(d.as_micros() as u64);
+    }
+
+    pub fn record_shard_batch(&self, shard: usize) {
+        if let Some(c) = self.shard_batches.get(shard) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn shard_batches(&self) -> Vec<u64> {
+        self.shard_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     pub fn latency_percentile(&self, p: f64) -> Option<Duration> {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return None;
-        }
-        v.sort_unstable();
-        let idx = ((v.len() - 1) as f64 * p).round() as usize;
-        Some(Duration::from_micros(v[idx]))
+        self.latencies.percentile(p)
     }
 
     pub fn mean_latency(&self) -> Option<Duration> {
-        let v = self.latencies_us.lock().unwrap();
-        if v.is_empty() {
-            return None;
-        }
-        Some(Duration::from_micros(v.iter().sum::<u64>() / v.len() as u64))
+        self.latencies.mean()
     }
 
     /// Mean requests per executed batch.
@@ -51,15 +152,18 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let shards = self.shard_batches();
         format!(
             "requests={} responses={} batches={} occupancy={:.2} padded={} errors={} \
-             latency mean={:?} p50={:?} p95={:?}",
+             rebalances={} shard_batches={:?} latency mean={:?} p50={:?} p95={:?}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.rebalances.load(Ordering::Relaxed),
+            shards,
             self.mean_latency().unwrap_or_default(),
             self.latency_percentile(0.5).unwrap_or_default(),
             self.latency_percentile(0.95).unwrap_or_default(),
@@ -72,15 +176,58 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles_ordered() {
+    fn percentiles_bracket_true_values() {
         let m = Metrics::new();
         for us in [100u64, 200, 300, 400, 500] {
             m.record_latency(Duration::from_micros(us));
         }
-        assert_eq!(m.latency_percentile(0.0).unwrap(), Duration::from_micros(100));
-        assert_eq!(m.latency_percentile(1.0).unwrap(), Duration::from_micros(500));
-        assert_eq!(m.latency_percentile(0.5).unwrap(), Duration::from_micros(300));
+        // Log buckets answer within one sub-bucket (<25% relative error),
+        // always rounding up.
+        for (p, want) in [(0.0, 100u64), (0.5, 300), (1.0, 500)] {
+            let got = m.latency_percentile(p).unwrap().as_micros() as u64;
+            assert!(got >= want, "p{p}: {got} < true {want}");
+            assert!(got <= want + want / 4 + 1, "p{p}: {got} overshoots {want}");
+        }
+        // The mean is exact (sum/count, not bucketed).
         assert_eq!(m.mean_latency().unwrap(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn percentiles_monotone_over_wide_range() {
+        let m = Metrics::new();
+        let mut us = 1u64;
+        for _ in 0..40 {
+            m.record_latency(Duration::from_micros(us));
+            us = us.saturating_mul(2).max(us + 1);
+        }
+        let mut prev = Duration::ZERO;
+        for i in 0..=20 {
+            let p = i as f64 / 20.0;
+            let v = m.latency_percentile(p).unwrap();
+            assert!(v >= prev, "p{p} went backwards: {v:?} < {prev:?}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn histogram_is_shared_across_threads_without_locks() {
+        let m = std::sync::Arc::new(Metrics::with_shards(4));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    m.record_latency(Duration::from_micros(i + 1));
+                    m.record_shard_batch(t);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.latencies.count(), 4000);
+        assert_eq!(m.shard_batches(), vec![1000, 1000, 1000, 1000]);
+        assert!(m.latency_percentile(0.5).is_some());
     }
 
     #[test]
@@ -95,7 +242,19 @@ mod tests {
     fn empty_metrics_safe() {
         let m = Metrics::new();
         assert!(m.latency_percentile(0.5).is_none());
+        assert!(m.mean_latency().is_none());
         assert_eq!(m.mean_occupancy(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn bucket_bounds_cover_input() {
+        for us in [1u64, 2, 3, 7, 100, 1023, 1024, 1025, u64::MAX / 2] {
+            let idx = LatencyHistogram::index(us);
+            assert!(
+                LatencyHistogram::upper_bound(idx) >= us,
+                "bucket {idx} upper bound below recorded {us}"
+            );
+        }
     }
 }

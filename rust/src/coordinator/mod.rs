@@ -1,19 +1,23 @@
-//! L3 serving coordinator: request router + dynamic signature batcher +
-//! PJRT execution loop.
+//! L3 serving coordinator: request router + sharded executor pool +
+//! lane-aware dynamic signature batcher.
 //!
 //! The paper's contribution lives in the generation pipeline (L2/L1), so
 //! per DESIGN.md the coordinator is the serving shell around the compiled
-//! operators: it routes attention requests to the right AOT artifact,
-//! packs same-signature requests into batched executions (vLLM-style,
-//! specialized to fixed-shape executables), and reports latency /
-//! throughput / occupancy metrics.
+//! operators: it routes attention requests across executor shards
+//! (family→shard affinity with load-aware rebalancing), packs
+//! same-signature requests into batched executions per prefill/decode
+//! lane (vLLM-style, specialized to fixed-shape executables), reports
+//! latency / throughput / occupancy metrics, and feeds measured
+//! per-variant latencies back into the autotuner's `TuneCache`.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod service;
 
-pub use request::{AttnRequest, AttnResponse, FamilyKey};
+pub use request::{AttnRequest, AttnResponse, FamilyKey, LaneKey};
+pub use scheduler::{Executor, ExecutorSpec, Router, ServeTopology};
 pub use service::{Coordinator, ServeConfig};
 
 use std::path::PathBuf;
@@ -81,8 +85,8 @@ pub fn run_stream(
     }
 }
 
-/// `tlc serve`: stand up the coordinator on the AOT artifacts and push a
-/// synthetic stream through it.
+/// `tlc serve`: stand up the coordinator on the AOT artifacts (or the
+/// reference executor) and push a synthetic stream through it.
 pub fn cli_serve(args: &Args) -> Result<(), String> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let n = args.get_usize("requests", 64)?;
@@ -93,15 +97,35 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         .unwrap_or(200.0);
     let window_ms = args.get_usize("window-ms", 5)?;
     let seed = args.get_usize("seed", 42)? as u64;
+    let shards = args.get_usize("shards", 1)?;
+    let decode_frac = args
+        .get("decode-frac")
+        .map(|v| v.parse::<f64>().map_err(|_| "bad --decode-frac".to_string()))
+        .transpose()?
+        .unwrap_or(0.0);
+    if !(0.0..=1.0).contains(&decode_frac) {
+        return Err("--decode-frac must be in [0, 1]".into());
+    }
+    let executor = match args.get_or("executor", "pjrt") {
+        "pjrt" => ExecutorSpec::Pjrt,
+        "reference" | "ref" => ExecutorSpec::Reference,
+        other => return Err(format!("unknown --executor `{other}` (pjrt|reference)")),
+    };
+    let kv_budget_mb = args.get_usize("kv-budget-mb", 0)?;
     args.finish()?;
 
     let coordinator = Coordinator::start(ServeConfig {
         artifacts_dir: artifacts,
         batch_window: Duration::from_millis(window_ms as u64),
+        shards,
+        executor,
+        kv_budget_bytes: if kv_budget_mb == 0 { usize::MAX } else { kv_budget_mb << 20 },
+        ..ServeConfig::default()
     })
     .map_err(|e| format!("{e:#}"))?;
     println!(
-        "coordinator up: {} servable attention families",
+        "coordinator up: {} shard(s), {} servable attention families",
+        coordinator.shards(),
         coordinator.families.len()
     );
     if coordinator.tuned_selections > 0 {
@@ -110,7 +134,13 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
             coordinator.tuned_selections
         );
     }
-    let stream = crate::workload::request_stream(&coordinator.families, n, rate, seed);
+    let stream = crate::workload::request_stream_mixed(
+        &coordinator.families,
+        n,
+        rate,
+        decode_frac,
+        seed,
+    );
     let report = run_stream(&coordinator, &stream, 1.0);
     println!(
         "served {} requests in {:.2?}: {} ok, {} errors",
@@ -125,6 +155,15 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         report.p95,
         report.mean_occupancy
     );
+    println!("{}", report.metrics_summary);
+    if let Some(snapshot) = coordinator.tune_snapshot() {
+        if snapshot.observed_count() > 0 {
+            println!(
+                "tune cache: {} observed-latency entries folded in from serving",
+                snapshot.observed_count()
+            );
+        }
+    }
     coordinator.shutdown();
     Ok(())
 }

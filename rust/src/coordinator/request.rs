@@ -19,6 +19,38 @@ pub struct FamilyKey {
     pub kv: usize,
 }
 
+/// Ingress lane: decode-shaped traffic (short query against a long KV
+/// cache — the autoregressive inner loop) is batched and routed apart
+/// from prefill so it can pack into split-K artifact variants with
+/// KV-cache-aware capacities. The lane is a pure function of the family
+/// shape, so batcher and router agree without extra request state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LaneKey {
+    Prefill,
+    Decode,
+}
+
+impl LaneKey {
+    /// Decode-shaped: a handful of query rows attending over a KV cache
+    /// at least 4x longer. Everything else is prefill.
+    pub fn of(f: &FamilyKey) -> LaneKey {
+        if f.seq <= 16 && f.kv >= 4 * f.seq {
+            LaneKey::Decode
+        } else {
+            LaneKey::Prefill
+        }
+    }
+}
+
+impl std::fmt::Display for LaneKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LaneKey::Prefill => "prefill",
+            LaneKey::Decode => "decode",
+        })
+    }
+}
+
 impl FamilyKey {
     /// Element counts per single request.
     pub fn q_len(&self) -> usize {
@@ -35,6 +67,13 @@ impl FamilyKey {
 
     pub fn out_len(&self) -> usize {
         self.q_heads * self.seq * self.v_dim
+    }
+
+    /// Host bytes of K+V one batch slot pins (f32). The decode lane
+    /// clamps its batch capacities so `capacity * kv_bytes` stays inside
+    /// the configured KV-cache budget.
+    pub fn kv_bytes(&self) -> usize {
+        (self.k_len() + self.v_len()) * std::mem::size_of::<f32>()
     }
 }
 
@@ -78,5 +117,32 @@ mod tests {
         assert_eq!(f.q_len(), 8 * 256 * 64);
         assert_eq!(f.k_len(), 2 * 256 * 64);
         assert_eq!(f.out_len(), 8 * 256 * 64);
+        assert_eq!(f.kv_bytes(), 2 * (2 * 256 * 64) * 4);
+    }
+
+    #[test]
+    fn lane_classification() {
+        let mut f = FamilyKey {
+            variant: AttnVariant::Mha,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq: 256,
+            kv: 256,
+        };
+        assert_eq!(LaneKey::of(&f), LaneKey::Prefill);
+        // One query row over a long cache: decode.
+        f.seq = 1;
+        f.kv = 1024;
+        assert_eq!(LaneKey::of(&f), LaneKey::Decode);
+        // Short query but short cache too: still prefill.
+        f.seq = 16;
+        f.kv = 16;
+        assert_eq!(LaneKey::of(&f), LaneKey::Prefill);
+        // Boundary: seq 16 against >= 64 cache rows is decode.
+        f.kv = 64;
+        assert_eq!(LaneKey::of(&f), LaneKey::Decode);
     }
 }

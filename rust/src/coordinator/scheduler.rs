@@ -1,0 +1,1212 @@
+//! Sharded executor-pool scheduler: router → N executor shards →
+//! prefill/decode lanes.
+//!
+//! The single-thread serve loop of PR 0 became a pool:
+//!
+//! ```text
+//!   submit() ──► Router (family → shard, load-aware rebalancing)
+//!                  │
+//!        ┌─────────┼─────────┐
+//!        ▼         ▼         ▼
+//!     shard 0   shard 1   shard N-1     each: lane-aware batcher +
+//!        │         │         │          its own Executor (Registry slice)
+//!        └────► TuneCache::observe ◄────┘  measured per-variant latency
+//! ```
+//!
+//! Each shard owns one [`Executor`] — for PJRT that means its own
+//! `Registry` which lazily compiles only the artifacts the router sends
+//! it (its slice of the registry). The [`Router`] keeps family→shard
+//! affinity (so executable caches stay warm) and reassigns a family to
+//! the least-loaded shard only when its shard's queue depth runs ahead
+//! of the minimum by more than a hysteresis slack. Executed batches are
+//! timed and folded into the shared [`TuneCache`] via
+//! [`crate::autotune::cache::observe`][TuneCache::observe], closing the
+//! loop to the L1 autotuner: `Registry::find_best` and future `tlc tune`
+//! runs re-rank variants from serving evidence instead of the cost model
+//! alone.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{plan_batches_lanes, BatchPlan, LaneCaps};
+use super::metrics::Metrics;
+use super::request::{AttnRequest, AttnResponse, FamilyKey, LaneKey};
+use crate::autotune::cache::{self as tune_cache, TuneCache};
+use crate::autotune::space::Candidate;
+use crate::runtime::registry::{ArtifactMeta, AttnSignature, Registry};
+
+/// Lock without the poisoned-lock panic path: a shard that panicked must
+/// not take the rest of the pool down with `.unwrap()` cascades.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The routing family a compiled signature belongs to (everything but
+/// the batch dimension, which the batcher chooses).
+pub fn family_of(sig: &AttnSignature) -> FamilyKey {
+    FamilyKey {
+        variant: sig.variant,
+        causal: sig.causal,
+        qk_dim: sig.qk_dim,
+        v_dim: sig.v_dim,
+        q_heads: sig.q_heads,
+        kv_heads: sig.kv_heads,
+        seq: sig.seq,
+        kv: sig.kv,
+    }
+}
+
+/// The signature a `(family, capacity)` slot executes under.
+pub fn sig_of(fam: &FamilyKey, batch: usize) -> AttnSignature {
+    AttnSignature {
+        variant: fam.variant,
+        causal: fam.causal,
+        qk_dim: fam.qk_dim,
+        v_dim: fam.v_dim,
+        batch,
+        q_heads: fam.q_heads,
+        kv_heads: fam.kv_heads,
+        seq: fam.seq,
+        kv: fam.kv,
+    }
+}
+
+/// One executable slot in the topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    /// Artifact id ([`Registry::executable`] key) or a synthetic label
+    /// for non-PJRT executors.
+    pub id: String,
+    /// Schedule of the compiled variant (from manifest `bm`/`bn`/
+    /// `split_k` fields) — `None` when the manifest doesn't carry one,
+    /// in which case no latency observations are recorded for the slot.
+    pub cand: Option<Candidate>,
+    /// Observation key: `tune_cache::sig_part` of the slot's signature.
+    pub obs_key: String,
+}
+
+fn cand_of_meta(meta: &ArtifactMeta) -> Option<Candidate> {
+    let bm = meta.usize_field("bm").ok()?;
+    let bn = meta.usize_field("bn").ok()?;
+    Some(Candidate {
+        bm,
+        bn,
+        stages: meta.usize_field("stages").unwrap_or(2),
+        warps: meta.usize_field("warps").unwrap_or(4),
+        split_k: meta.usize_field("split_k").unwrap_or(1),
+    })
+}
+
+/// Do a compiled variant's schedule and an observed winner name the same
+/// artifact? Compared on everything the manifest can distinguish —
+/// `bm`/`bn` *and* `split_k` (decode variants often differ only in
+/// split-K, so matching on tiles alone would pin the wrong artifact).
+pub fn same_variant(c: &Candidate, o: &Candidate) -> bool {
+    c.bm == o.bm && c.bn == o.bn && c.split_k == o.split_k
+}
+
+/// Batches between exploration probes of a competing variant: the pool
+/// serves the primary variant, and every `EXPLORE_EVERY`-th batch of a
+/// slot executes one of its alternates instead so *measured* evidence
+/// accumulates for every compiled variant — without it, only the
+/// incumbent would ever be observed and serving evidence could never
+/// re-rank the slot.
+pub const EXPLORE_EVERY: u64 = 8;
+
+/// The compiled variants competing for one `(family, lane, capacity)`
+/// slot: the chosen primary plus the alternates kept for exploration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSlot {
+    pub primary: ArtifactInfo,
+    /// Competing variants (same signature, different schedule) that
+    /// exploration probes round-robin. Only variants with a parseable
+    /// schedule are kept — an unidentifiable variant can't accumulate
+    /// observations.
+    pub alts: Vec<ArtifactInfo>,
+}
+
+impl ArtifactSlot {
+    fn solo(primary: ArtifactInfo) -> Self {
+        ArtifactSlot { primary, alts: Vec::new() }
+    }
+
+    /// Variant to execute for the `seq_no`-th batch of this slot
+    /// (1-based): mostly the primary, with every `EXPLORE_EVERY`-th
+    /// batch probing an alternate round-robin.
+    pub fn pick(&self, seq_no: u64) -> &ArtifactInfo {
+        if !self.alts.is_empty() && seq_no % EXPLORE_EVERY == 0 {
+            let idx = ((seq_no / EXPLORE_EVERY).saturating_sub(1)) as usize;
+            &self.alts[idx % self.alts.len()]
+        } else {
+            &self.primary
+        }
+    }
+}
+
+/// Everything the shards need to route, batch and execute: servable
+/// families with per-lane capacities, and the artifact variants chosen
+/// for each `(family, lane, capacity)` slot.
+#[derive(Debug, Clone, Default)]
+pub struct ServeTopology {
+    pub capacities: BTreeMap<FamilyKey, LaneCaps>,
+    pub artifacts: BTreeMap<(FamilyKey, LaneKey, usize), ArtifactSlot>,
+    /// Slots where tuning evidence (observed or searched) decided among
+    /// multiple artifact variants competing for the same signature.
+    pub tuned_selections: usize,
+}
+
+impl ServeTopology {
+    /// Build from the AOT manifest. Variant precedence per slot mirrors
+    /// [`Registry::find_best`]: measured-fastest (observed) → search
+    /// endorsement → (decode lane only) split-K variant → first row.
+    /// Decode-lane capacities are clamped so `capacity * kv_bytes` stays
+    /// within `kv_budget_bytes` (KV-cache-aware batching).
+    pub fn from_manifest(
+        metas: &[ArtifactMeta],
+        tune: &TuneCache,
+        kv_budget_bytes: usize,
+    ) -> Result<Self> {
+        // Group manifest rows by (family, capacity) slot.
+        let mut rows: BTreeMap<(FamilyKey, usize), Vec<&ArtifactMeta>> = BTreeMap::new();
+        for meta in metas.iter().filter(|m| m.kind == "attention") {
+            let sig = AttnSignature::from_meta(meta)?;
+            rows.entry((family_of(&sig), sig.batch)).or_default().push(meta);
+        }
+
+        let mut topo = ServeTopology::default();
+        for ((fam, cap), variants) in rows {
+            let lane = LaneKey::of(&fam);
+            if lane == LaneKey::Decode && cap.saturating_mul(fam.kv_bytes()) > kv_budget_bytes
+            {
+                continue; // over the KV budget: slot unusable on the decode lane
+            }
+            let obs_key = tune_cache::sig_part(&sig_of(&fam, cap));
+            let observed = tune.observed_best(&obs_key).map(|e| e.cand);
+            // Observed winner first (exact bm/bn), then search endorsement.
+            let mut tuned: Option<&ArtifactMeta> = None;
+            if let Some(o) = observed {
+                tuned = variants.iter().copied().find(|m| {
+                    cand_of_meta(m).map(|c| same_variant(&c, &o)).unwrap_or(false)
+                });
+            }
+            if tuned.is_none() {
+                tuned = variants.iter().copied().find(|m| {
+                    cand_of_meta(m)
+                        .map(|c| tune.names_schedule(&obs_key, c.bm, c.bn))
+                        .unwrap_or(false)
+                });
+            }
+            // Decode lane prefers a split-K variant when nothing is tuned:
+            // split-K is what keeps the grid busy on one-row queries.
+            let lane_default: Option<&ArtifactMeta> = if lane == LaneKey::Decode {
+                variants
+                    .iter()
+                    .copied()
+                    .find(|m| cand_of_meta(m).map(|c| c.split_k > 1).unwrap_or(false))
+            } else {
+                None
+            };
+            // Untouched slots keep the seed's last-row-wins behaviour.
+            let chosen = match tuned.or(lane_default) {
+                Some(m) => m,
+                None => *variants.last().expect("slot grouped from at least one row"),
+            };
+            if tuned.is_some() && variants.len() > 1 {
+                topo.tuned_selections += 1;
+            }
+            let entry = topo.capacities.entry(fam.clone()).or_default();
+            match lane {
+                LaneKey::Prefill => entry.prefill.push(cap),
+                LaneKey::Decode => entry.decode.push(cap),
+            }
+            // Losing variants stay in the slot as exploration alternates
+            // (identified-schedule ones only), so serving keeps measuring
+            // them and the evidence can overturn the pick later.
+            let alts: Vec<ArtifactInfo> = variants
+                .iter()
+                .copied()
+                .filter(|m| m.id != chosen.id)
+                .filter_map(|m| {
+                    cand_of_meta(m).map(|c| ArtifactInfo {
+                        id: m.id.clone(),
+                        cand: Some(c),
+                        obs_key: obs_key.clone(),
+                    })
+                })
+                .collect();
+            topo.artifacts.insert(
+                (fam, lane, cap),
+                ArtifactSlot {
+                    primary: ArtifactInfo {
+                        id: chosen.id.clone(),
+                        cand: cand_of_meta(chosen),
+                        obs_key,
+                    },
+                    alts,
+                },
+            );
+        }
+        for caps in topo.capacities.values_mut() {
+            caps.prefill.sort_unstable();
+            caps.prefill.dedup();
+            caps.decode.sort_unstable();
+            caps.decode.dedup();
+        }
+        topo.capacities.retain(|_, c| !c.prefill.is_empty() || !c.decode.is_empty());
+        Ok(topo)
+    }
+
+    /// Synthetic topology for executors that need no compiled artifacts
+    /// (reference executor, tests): every family gets the same capacity
+    /// set on its own lane, with a fabricated schedule so the latency
+    /// feedback path is exercised end to end (decode slots get a split-K
+    /// variant, matching what the autotuner emits for such shapes).
+    pub fn synthetic(families: &[FamilyKey], caps: &[usize]) -> Self {
+        let mut topo = ServeTopology::default();
+        for fam in families {
+            let lane = LaneKey::of(fam);
+            let lane_caps = topo.capacities.entry(fam.clone()).or_default();
+            for &cap in caps {
+                match lane {
+                    LaneKey::Prefill => lane_caps.prefill.push(cap),
+                    LaneKey::Decode => lane_caps.decode.push(cap),
+                }
+                let obs_key = tune_cache::sig_part(&sig_of(fam, cap));
+                let split_k = if lane == LaneKey::Decode { 4 } else { 1 };
+                topo.artifacts.insert(
+                    (fam.clone(), lane, cap),
+                    ArtifactSlot::solo(ArtifactInfo {
+                        id: format!("ref:{obs_key}"),
+                        cand: Some(Candidate {
+                            bm: 64,
+                            bn: 64,
+                            stages: 2,
+                            warps: 4,
+                            split_k,
+                        }),
+                        obs_key,
+                    }),
+                );
+            }
+        }
+        topo
+    }
+
+    pub fn families(&self) -> Vec<FamilyKey> {
+        self.capacities.keys().cloned().collect()
+    }
+
+    /// Can this family be executed at all (an artifact exists on its lane)?
+    pub fn servable(&self, fam: &FamilyKey) -> bool {
+        self.capacities
+            .get(fam)
+            .map(|c| !c.for_lane(LaneKey::of(fam)).is_empty())
+            .unwrap_or(false)
+    }
+}
+
+/// One shard's execution backend. Implementations own whatever runtime
+/// state they need (the PJRT executor owns a full `Registry`); a box is
+/// constructed *inside* its shard thread, so implementations need not be
+/// `Send` (the PJRT wrapper types are not).
+pub trait Executor {
+    /// Execute one packed batch: `q`/`k`/`v` are zero-padded host
+    /// buffers of `capacity` slots; returns the flattened outputs
+    /// (`capacity * family.out_len()` elements).
+    fn execute_batch(
+        &mut self,
+        family: &FamilyKey,
+        info: &ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String>;
+
+    fn kind(&self) -> &'static str;
+
+    /// Does the first execution of a variant pay a one-off cost (lazy
+    /// compilation, cold caches)? When true, the pool discards each
+    /// variant's first timing sample instead of folding it into the
+    /// observed-latency mean — otherwise exploration probes would charge
+    /// compile time to exactly the variants they exist to measure fairly.
+    fn cold_start(&self) -> bool {
+        false
+    }
+}
+
+/// Per-shard executor factory: called once per shard with the shard
+/// index, inside that shard's thread.
+pub type ExecutorFactory =
+    Arc<dyn Fn(usize) -> std::result::Result<Box<dyn Executor>, String> + Send + Sync>;
+
+/// How each shard builds its [`Executor`].
+#[derive(Clone)]
+pub enum ExecutorSpec {
+    /// PJRT runtime over the AOT artifacts: each shard opens its own
+    /// `Registry` and lazily compiles only the artifacts routed to it.
+    Pjrt,
+    /// In-process reference oracle (CPU): runs everywhere, used by the
+    /// smoke bench, the scheduler tests, and `tlc serve --executor
+    /// reference` when no artifacts are compiled.
+    Reference,
+    /// Custom factory, called once per shard with the shard index.
+    Custom(ExecutorFactory),
+}
+
+impl std::fmt::Debug for ExecutorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecutorSpec::Pjrt => "Pjrt",
+            ExecutorSpec::Reference => "Reference",
+            ExecutorSpec::Custom(_) => "Custom(..)",
+        })
+    }
+}
+
+/// PJRT-backed executor: one `Registry` per shard (its slice of the
+/// artifact set — executables compile lazily on first routed request).
+pub struct PjrtExecutor {
+    registry: Registry,
+}
+
+impl PjrtExecutor {
+    pub fn open(dir: &Path) -> std::result::Result<Self, String> {
+        Registry::open(dir).map(|registry| PjrtExecutor { registry }).map_err(|e| format!("{e:#}"))
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute_batch(
+        &mut self,
+        fam: &FamilyKey,
+        info: &ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> std::result::Result<Vec<f32>, String> {
+        let cap = capacity as i64;
+        let qshape = [cap, fam.q_heads as i64, fam.seq as i64, fam.qk_dim as i64];
+        let kshape = [cap, fam.kv_heads as i64, fam.kv as i64, fam.qk_dim as i64];
+        let vshape = [cap, fam.kv_heads as i64, fam.kv as i64, fam.v_dim as i64];
+        self.registry
+            .executable(&info.id)
+            .and_then(|exe| {
+                self.registry
+                    .runtime
+                    .execute_f32(&exe, &[(q, &qshape), (k, &kshape), (v, &vshape)])
+            })
+            .map_err(|e| format!("{e:#}"))
+    }
+
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cold_start(&self) -> bool {
+        true // Registry::executable compiles lazily on first use
+    }
+}
+
+/// CPU reference executor: computes `softmax(QK^T)V` per (slot, q-head)
+/// with the repo's oracle ([`crate::verify::tensor::reference_attention`]),
+/// including the GQA/MQA head mapping (q-head `h` reads kv-head
+/// `h / group`). Padded slots are computed too — real executables pay
+/// for padding, so the reference must as well.
+#[derive(Default)]
+pub struct ReferenceExecutor;
+
+/// Bottom-right-aligned causal attention for rectangular (decode) shapes:
+/// query row `r` sits at absolute position `kv - seq + r` and attends
+/// keys `0..=kv-seq+r`. The repo's square oracle aligns its mask
+/// top-left, which for `seq < kv` would wrongly blind a decode query to
+/// almost the whole cache; this agrees with it exactly when `seq == kv`.
+fn causal_rect_attention(
+    qt: &crate::verify::tensor::Tensor2,
+    kt: &crate::verify::tensor::Tensor2,
+    vt: &crate::verify::tensor::Tensor2,
+    scale: f32,
+) -> crate::verify::tensor::Tensor2 {
+    use crate::verify::tensor::{reference_attention, Tensor2};
+    let (s, kvl, d, vd) = (qt.rows, kt.rows, qt.cols, vt.cols);
+    debug_assert!(kvl >= s);
+    let offset = kvl - s;
+    let mut out = Tensor2 { rows: s, cols: vd, data: vec![0.0; s * vd] };
+    for r in 0..s {
+        let visible = offset + r + 1;
+        let qrow = Tensor2 { rows: 1, cols: d, data: qt.data[r * d..(r + 1) * d].to_vec() };
+        let ks = Tensor2 { rows: visible, cols: d, data: kt.data[..visible * d].to_vec() };
+        let vs =
+            Tensor2 { rows: visible, cols: vd, data: vt.data[..visible * vd].to_vec() };
+        let o = reference_attention(&qrow, &ks, &vs, scale, false);
+        out.data[r * vd..(r + 1) * vd].copy_from_slice(&o.data);
+    }
+    out
+}
+
+impl Executor for ReferenceExecutor {
+    fn execute_batch(
+        &mut self,
+        fam: &FamilyKey,
+        _info: &ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> std::result::Result<Vec<f32>, String> {
+        use crate::verify::tensor::{reference_attention, Tensor2};
+        let (s, kvl, d, vd) = (fam.seq, fam.kv, fam.qk_dim, fam.v_dim);
+        if fam.kv_heads == 0 || fam.q_heads % fam.kv_heads != 0 {
+            return Err(format!(
+                "bad head grouping {}/{}",
+                fam.q_heads, fam.kv_heads
+            ));
+        }
+        let group = fam.q_heads / fam.kv_heads;
+        let scale = 1.0 / (d as f32).sqrt();
+        let (qn, kn, vn, on) = (fam.q_len(), fam.k_len(), fam.v_len(), fam.out_len());
+        if q.len() != capacity * qn || k.len() != capacity * kn || v.len() != capacity * vn
+        {
+            return Err("packed buffer size mismatch".to_string());
+        }
+        let mut out = vec![0.0f32; capacity * on];
+        for slot in 0..capacity {
+            for qh in 0..fam.q_heads {
+                let kh = qh / group;
+                let q_off = slot * qn + qh * s * d;
+                let k_off = slot * kn + kh * kvl * d;
+                let v_off = slot * vn + kh * kvl * vd;
+                let qt =
+                    Tensor2 { rows: s, cols: d, data: q[q_off..q_off + s * d].to_vec() };
+                let kt = Tensor2 {
+                    rows: kvl,
+                    cols: d,
+                    data: k[k_off..k_off + kvl * d].to_vec(),
+                };
+                let vt = Tensor2 {
+                    rows: kvl,
+                    cols: vd,
+                    data: v[v_off..v_off + kvl * vd].to_vec(),
+                };
+                let o = if fam.causal && s < kvl {
+                    causal_rect_attention(&qt, &kt, &vt, scale)
+                } else {
+                    reference_attention(&qt, &kt, &vt, scale, fam.causal)
+                };
+                let o_off = slot * on + qh * s * vd;
+                out[o_off..o_off + s * vd].copy_from_slice(&o.data);
+            }
+        }
+        Ok(out)
+    }
+
+    fn kind(&self) -> &'static str {
+        "reference"
+    }
+}
+
+/// Family→shard assignment with load-aware rebalancing. Pure (no
+/// channels, no clock) so its invariants are property-tested in
+/// `rust/tests/proptest_router.rs`.
+///
+/// Affinity keeps a family on its shard (warm executable caches); a
+/// family is reassigned to the least-loaded shard only when its shard's
+/// in-flight depth exceeds the minimum by more than `slack` (hysteresis,
+/// so balanced pools never churn assignments).
+#[derive(Debug)]
+pub struct Router {
+    assignment: BTreeMap<FamilyKey, usize>,
+    depth: Vec<usize>,
+    slack: usize,
+    rebalances: u64,
+    /// Rotating start for new-family placement, so an idle pool spreads
+    /// families round-robin instead of piling ties onto shard 0.
+    next: usize,
+}
+
+impl Router {
+    pub const DEFAULT_SLACK: usize = 8;
+
+    pub fn new(shards: usize) -> Self {
+        Self::with_slack(shards, Self::DEFAULT_SLACK)
+    }
+
+    pub fn with_slack(shards: usize, slack: usize) -> Self {
+        Router {
+            assignment: BTreeMap::new(),
+            depth: vec![0; shards.max(1)],
+            slack,
+            rebalances: 0,
+            next: 0,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.depth.len()
+    }
+
+    pub fn depths(&self) -> &[usize] {
+        &self.depth
+    }
+
+    /// Rebalance events this router instance performed. The pool mirrors
+    /// the per-route `rebalanced` flag into `Metrics::rebalances`; this
+    /// counter exists so the pure router is testable without a pool.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    pub fn assignment_of(&self, fam: &FamilyKey) -> Option<usize> {
+        self.assignment.get(fam).copied()
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for (i, d) in self.depth.iter().enumerate() {
+            if *d < self.depth[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Placement for a family seen for the first time: the least-loaded
+    /// shard, with ties broken round-robin from a rotating cursor (an
+    /// idle pool must spread families, not stack them on shard 0).
+    fn place_new(&mut self) -> usize {
+        let min = *self.depth.iter().min().unwrap_or(&0);
+        let n = self.depth.len();
+        for off in 0..n {
+            let i = (self.next + off) % n;
+            if self.depth[i] == min {
+                self.next = (i + 1) % n;
+                return i;
+            }
+        }
+        0
+    }
+
+    /// Pick the shard for one request and count it in-flight there.
+    /// Returns `(shard, rebalanced)`.
+    pub fn route(&mut self, fam: &FamilyKey) -> (usize, bool) {
+        let (shard, rebalanced) = match self.assignment.get(fam).copied() {
+            Some(s) if self.depth[s] <= self.depth[self.least_loaded()] + self.slack => {
+                (s, false)
+            }
+            Some(_) => {
+                let least = self.least_loaded();
+                self.rebalances += 1;
+                self.assignment.insert(fam.clone(), least);
+                (least, true)
+            }
+            None => {
+                let shard = self.place_new();
+                self.assignment.insert(fam.clone(), shard);
+                (shard, false)
+            }
+        };
+        self.depth[shard] += 1;
+        (shard, rebalanced)
+    }
+
+    /// A request routed to `shard` finished (replied or rejected).
+    pub fn complete(&mut self, shard: usize) {
+        if let Some(d) = self.depth.get_mut(shard) {
+            *d = d.saturating_sub(1);
+        }
+    }
+}
+
+/// The running pool: router + N shard threads + the shared tune cache.
+pub struct ExecutorPool {
+    txs: Vec<Option<mpsc::Sender<AttnRequest>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    router: Arc<Mutex<Router>>,
+    pub topology: Arc<ServeTopology>,
+    metrics: Arc<Metrics>,
+    tune: Arc<Mutex<TuneCache>>,
+    tune_path: Option<PathBuf>,
+}
+
+impl ExecutorPool {
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        shards: usize,
+        spec: ExecutorSpec,
+        artifacts_dir: PathBuf,
+        topology: ServeTopology,
+        window: Duration,
+        metrics: Arc<Metrics>,
+        tune: TuneCache,
+        tune_path: Option<PathBuf>,
+    ) -> Result<Self> {
+        let shards = shards.max(1);
+        let topology = Arc::new(topology);
+        let router = Arc::new(Mutex::new(Router::new(shards)));
+        let tune = Arc::new(Mutex::new(tune));
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::channel::<AttnRequest>();
+            let spec = spec.clone();
+            let dir = artifacts_dir.clone();
+            let topo = topology.clone();
+            let m = metrics.clone();
+            let r = router.clone();
+            let t = tune.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("qimeng-shard-{shard}"))
+                .spawn(move || {
+                    let exec: Box<dyn Executor> = match &spec {
+                        ExecutorSpec::Pjrt => match PjrtExecutor::open(&dir) {
+                            Ok(e) => Box::new(e),
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        },
+                        ExecutorSpec::Reference => Box::<ReferenceExecutor>::default(),
+                        ExecutorSpec::Custom(f) => match f(shard) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        },
+                    };
+                    let _ = ready.send(Ok(()));
+                    shard_loop(shard, exec, rx, topo, window, m, r, t);
+                })
+                .with_context(|| format!("spawning shard {shard}"))?;
+            txs.push(Some(tx));
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..shards {
+            ready_rx
+                .recv()
+                .context("shard died during startup")?
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+        Ok(ExecutorPool { txs, handles, router, topology, metrics, tune, tune_path })
+    }
+
+    /// Route one request to its shard. A send failure means the shard
+    /// died; the reply channel disconnects, which callers observe as
+    /// `RecvError` (same contract as the single-thread loop).
+    pub fn submit(&self, req: AttnRequest) {
+        let (shard, rebalanced) = lock(&self.router).route(&req.family);
+        if rebalanced {
+            self.metrics.rebalances.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(Some(tx)) = self.txs.get(shard) {
+            let _ = tx.send(req);
+        }
+    }
+
+    /// Snapshot of the shared tune cache (serving evidence included).
+    pub fn tune_snapshot(&self) -> TuneCache {
+        lock(&self.tune).clone()
+    }
+
+    fn finish(&mut self) {
+        for tx in &mut self.txs {
+            tx.take(); // disconnect → shard flushes pending and exits
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // take() keeps finish() idempotent (shutdown consumes self, and
+        // Drop runs right after).
+        if let Some(path) = self.tune_path.take() {
+            if let Err(e) = lock(&self.tune).save(&path) {
+                eprintln!("warning: failed to persist tune cache: {e:#}");
+            }
+        }
+    }
+
+    /// Drain all shards, stop them, and persist the tune cache.
+    pub fn shutdown(mut self) {
+        self.finish();
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// One shard's serve loop: ingest → lane-aware batch planning → execute
+/// → reply, with per-variant latency observation.
+#[allow(clippy::too_many_arguments)]
+fn shard_loop(
+    shard: usize,
+    mut exec: Box<dyn Executor>,
+    rx: mpsc::Receiver<AttnRequest>,
+    topo: Arc<ServeTopology>,
+    window: Duration,
+    metrics: Arc<Metrics>,
+    router: Arc<Mutex<Router>>,
+    tune: Arc<Mutex<TuneCache>>,
+) {
+    let mut pending: Vec<AttnRequest> = Vec::new();
+    // Per-slot batch sequence numbers driving exploration probes.
+    let mut slot_seq: BTreeMap<(FamilyKey, LaneKey, usize), u64> = BTreeMap::new();
+    // Variants that have executed at least once: their first sample is a
+    // warm-up (lazy compilation, cold caches) and is not observed.
+    let mut warmed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut disconnected = false;
+    loop {
+        // Ingest: block briefly so idle spinning stays cheap. Pending
+        // decode work shortens the poll to window/8 so the decode lane's
+        // quarter-window flush deadline is actually honoured — a
+        // half-window sleep would double latency for exactly the
+        // traffic the lane exists to serve quickly.
+        let poll = if pending
+            .iter()
+            .any(|r| LaneKey::of(&r.family) == LaneKey::Decode)
+        {
+            window / 8
+        } else {
+            window / 2
+        };
+        match rx.recv_timeout(poll.max(Duration::from_micros(100))) {
+            Ok(req) => {
+                pending.push(req);
+                // Opportunistically drain whatever else is queued.
+                while let Ok(r) = rx.try_recv() {
+                    pending.push(r);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+        }
+
+        let now = Instant::now();
+        let view: Vec<(usize, FamilyKey, bool)> = pending
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                // Decode requests are cheap and latency-critical: they
+                // flush at a quarter of the prefill batching window.
+                let lane_window = match LaneKey::of(&r.family) {
+                    LaneKey::Decode => window / 4,
+                    LaneKey::Prefill => window,
+                };
+                let expired = disconnected || now.duration_since(r.enqueued) >= lane_window;
+                (i, r.family.clone(), expired)
+            })
+            .collect();
+        let plans = plan_batches_lanes(&view, &topo.capacities);
+
+        if !plans.is_empty() {
+            execute_plans(
+                shard,
+                exec.as_mut(),
+                &mut pending,
+                plans,
+                &topo,
+                &mut slot_seq,
+                &mut warmed,
+                &metrics,
+                &router,
+                &tune,
+            );
+        }
+
+        // Reject requests no executable can serve (router error).
+        let mut i = 0;
+        while i < pending.len() {
+            if !topo.servable(&pending[i].family) {
+                let req = pending.swap_remove(i);
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                lock(&router).complete(shard);
+                let _ = req.reply.send(AttnResponse {
+                    id: req.id,
+                    result: Err(format!("no compiled artifact for family {:?}", req.family)),
+                    latency: req.enqueued.elapsed(),
+                    batch_size: 0,
+                });
+            } else {
+                i += 1;
+            }
+        }
+
+        if disconnected && pending.is_empty() {
+            return;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_plans(
+    shard: usize,
+    exec: &mut dyn Executor,
+    pending: &mut Vec<AttnRequest>,
+    plans: Vec<BatchPlan>,
+    topo: &ServeTopology,
+    slot_seq: &mut BTreeMap<(FamilyKey, LaneKey, usize), u64>,
+    warmed: &mut std::collections::BTreeSet<String>,
+    metrics: &Metrics,
+    router: &Mutex<Router>,
+    tune: &Mutex<TuneCache>,
+) {
+    // Execute plans in order; collect consumed indices, then compact.
+    let mut consumed: Vec<usize> = Vec::new();
+    for plan in plans {
+        let fam = plan.family.clone();
+        let slot_key = (fam.clone(), plan.lane, plan.capacity);
+        let info = match topo.artifacts.get(&slot_key) {
+            Some(slot) => {
+                let seq_no = slot_seq.entry(slot_key).or_insert(0);
+                *seq_no += 1;
+                slot.pick(*seq_no).clone()
+            }
+            None => {
+                // A capacity with no artifact slot (hand-built topology
+                // gone inconsistent): fail the batch rather than leave
+                // its members pending forever — that would hang shutdown.
+                for &idx in &plan.members {
+                    let r = &pending[idx];
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(AttnResponse {
+                        id: r.id,
+                        result: Err(format!(
+                            "no artifact for slot ({:?}, {}, {})",
+                            fam, plan.lane, plan.capacity
+                        )),
+                        latency: r.enqueued.elapsed(),
+                        batch_size: plan.members.len(),
+                    });
+                }
+                let mut rt = lock(router);
+                for _ in &plan.members {
+                    rt.complete(shard);
+                }
+                drop(rt);
+                consumed.extend(plan.members.iter().copied());
+                continue;
+            }
+        };
+        let cap = plan.capacity;
+        let (qn, kn, vn, on) = (fam.q_len(), fam.k_len(), fam.v_len(), fam.out_len());
+        let mut q = vec![0.0f32; cap * qn];
+        let mut k = vec![0.0f32; cap * kn];
+        let mut v = vec![0.0f32; cap * vn];
+        for (slot, &idx) in plan.members.iter().enumerate() {
+            let r = &pending[idx];
+            q[slot * qn..(slot + 1) * qn].copy_from_slice(&r.q);
+            k[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
+            v[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
+        }
+
+        let t0 = Instant::now();
+        let result = exec.execute_batch(&fam, &info, cap, &q, &k, &v);
+        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.record_shard_batch(shard);
+        metrics.padded_slots.fetch_add(plan.padding() as u64, Ordering::Relaxed);
+
+        // An executor returning the wrong output size must fail the batch,
+        // not panic the shard on the per-slot slicing below.
+        let result = result.and_then(|out| {
+            if out.len() == cap * on {
+                Ok(out)
+            } else {
+                Err(format!(
+                    "executor returned {} elements for a {}-slot batch (want {})",
+                    out.len(),
+                    cap,
+                    cap * on
+                ))
+            }
+        });
+
+        match result {
+            Ok(out) => {
+                // Close the loop to L1: fold this variant's measured
+                // latency into the shared tune cache. For cold-start
+                // executors the variant's first sample is a warm-up
+                // (lazy compile) and is discarded.
+                if let Some(cand) = info.cand {
+                    let vkey = tune_cache::observed_key(&info.obs_key, &cand);
+                    if !exec.cold_start() || !warmed.insert(vkey) {
+                        lock(tune).observe(&info.obs_key, cand, exec_us);
+                    }
+                }
+                for (slot, &idx) in plan.members.iter().enumerate() {
+                    let r = &pending[idx];
+                    let piece = out[slot * on..(slot + 1) * on].to_vec();
+                    let latency = r.enqueued.elapsed();
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency(latency);
+                    let _ = r.reply.send(AttnResponse {
+                        id: r.id,
+                        result: Ok(piece),
+                        latency,
+                        batch_size: plan.members.len(),
+                    });
+                }
+            }
+            Err(e) => {
+                for &idx in &plan.members {
+                    let r = &pending[idx];
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(AttnResponse {
+                        id: r.id,
+                        result: Err(e.clone()),
+                        latency: r.enqueued.elapsed(),
+                        batch_size: plan.members.len(),
+                    });
+                }
+            }
+        }
+        {
+            let mut rt = lock(router);
+            for _ in &plan.members {
+                rt.complete(shard);
+            }
+        }
+        consumed.extend(plan.members.iter().copied());
+    }
+    // Remove consumed requests (descending index order keeps indices valid).
+    consumed.sort_unstable_by(|a, b| b.cmp(a));
+    consumed.dedup();
+    for idx in consumed {
+        pending.swap_remove(idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::AttnVariant;
+
+    fn fam(seq: usize, kv: usize) -> FamilyKey {
+        FamilyKey {
+            variant: AttnVariant::Mha,
+            causal: seq == kv, // decode twins are non-causal
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 2,
+            seq,
+            kv,
+        }
+    }
+
+    #[test]
+    fn router_keeps_affinity_when_balanced() {
+        let mut r = Router::new(4);
+        let f = fam(256, 256);
+        let (first, _) = r.route(&f);
+        for _ in 0..Router::DEFAULT_SLACK {
+            let (s, rebalanced) = r.route(&f);
+            assert_eq!(s, first);
+            assert!(!rebalanced);
+        }
+        assert_eq!(r.rebalances(), 0);
+    }
+
+    #[test]
+    fn router_rebalances_overloaded_family() {
+        let mut r = Router::with_slack(2, 2);
+        let f = fam(256, 256);
+        let (s0, first) = r.route(&f);
+        assert!(!first, "first placement is not a rebalance");
+        // Keep routing without completions: once the family's shard runs
+        // `slack` past the idle shard, the family must move there.
+        let mut moved_to = None;
+        for _ in 0..6 {
+            let (s, rebalanced) = r.route(&f);
+            if rebalanced {
+                moved_to = Some(s);
+                break;
+            }
+        }
+        let s1 = moved_to.expect("family never rebalanced off the overloaded shard");
+        assert_ne!(s1, s0);
+        assert_eq!(r.rebalances(), 1);
+        assert_eq!(r.assignment_of(&f), Some(s1));
+    }
+
+    #[test]
+    fn router_complete_never_underflows() {
+        let mut r = Router::new(2);
+        r.complete(0);
+        r.complete(99); // out-of-range shard ignored
+        assert_eq!(r.depths(), &[0, 0]);
+    }
+
+    #[test]
+    fn synthetic_topology_splits_lanes() {
+        let prefill = fam(256, 256);
+        let decode = fam(1, 1024);
+        let topo = ServeTopology::synthetic(&[prefill.clone(), decode.clone()], &[1, 4]);
+        assert!(topo.servable(&prefill));
+        assert!(topo.servable(&decode));
+        let pc = &topo.capacities[&prefill];
+        assert_eq!(pc.prefill, vec![1, 4]);
+        assert!(pc.decode.is_empty());
+        let dc = &topo.capacities[&decode];
+        assert_eq!(dc.decode, vec![1, 4]);
+        let slot = &topo.artifacts[&(decode.clone(), LaneKey::Decode, 4)];
+        assert_eq!(
+            slot.primary.cand.unwrap().split_k,
+            4,
+            "decode slots carry split-K variants"
+        );
+        assert!(slot.alts.is_empty(), "synthetic slots have no competitors");
+    }
+
+    #[test]
+    fn manifest_topology_prefers_split_k_on_decode_lane() {
+        use crate::runtime::registry::parse_manifest;
+        let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=64 bn=64 split_k=1\n\
+             artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+        let metas = parse_manifest(manifest).unwrap();
+        let topo =
+            ServeTopology::from_manifest(&metas, &TuneCache::new(), usize::MAX).unwrap();
+        let decode_fam = family_of(&AttnSignature::from_meta(&metas[0]).unwrap());
+        assert_eq!(LaneKey::of(&decode_fam), LaneKey::Decode);
+        let slot = &topo.artifacts[&(decode_fam, LaneKey::Decode, 4)];
+        assert_eq!(slot.primary.id, "splitk", "decode lane must pick the split-K variant");
+        // The losing variant stays as an exploration alternate.
+        assert_eq!(slot.alts.len(), 1);
+        assert_eq!(slot.alts[0].id, "plain");
+    }
+
+    #[test]
+    fn slot_pick_probes_alternates_round_robin() {
+        let mk = |id: &str, sk: usize| ArtifactInfo {
+            id: id.into(),
+            cand: Some(Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: sk }),
+            obs_key: "k".into(),
+        };
+        let slot =
+            ArtifactSlot { primary: mk("p", 1), alts: vec![mk("a", 4), mk("b", 8)] };
+        for seq in 1..EXPLORE_EVERY {
+            assert_eq!(slot.pick(seq).id, "p");
+        }
+        assert_eq!(slot.pick(EXPLORE_EVERY).id, "a");
+        assert_eq!(slot.pick(EXPLORE_EVERY + 1).id, "p");
+        assert_eq!(slot.pick(2 * EXPLORE_EVERY).id, "b");
+        assert_eq!(slot.pick(3 * EXPLORE_EVERY).id, "a", "round-robin wraps");
+        // A solo slot never explores.
+        let solo = ArtifactSlot::solo(mk("only", 1));
+        assert_eq!(solo.pick(EXPLORE_EVERY).id, "only");
+    }
+
+    #[test]
+    fn observed_match_distinguishes_split_k_only_variants() {
+        use crate::runtime::registry::parse_manifest;
+        // Both variants share bm/bn and differ ONLY in split_k.
+        let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=64 bn=64 split_k=1\n\
+             artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+        let metas = parse_manifest(manifest).unwrap();
+        let decode_fam = family_of(&AttnSignature::from_meta(&metas[0]).unwrap());
+        let obs_key = tune_cache::sig_part(&sig_of(&decode_fam, 4));
+        let mut tune = TuneCache::new();
+        tune.observe(
+            &obs_key,
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8 },
+            50.0,
+        );
+        tune.observe(
+            &obs_key,
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            400.0,
+        );
+        let topo = ServeTopology::from_manifest(&metas, &tune, usize::MAX).unwrap();
+        let slot = &topo.artifacts[&(decode_fam, LaneKey::Decode, 4)];
+        assert_eq!(
+            slot.primary.id, "splitk",
+            "must match the observed winner on split_k, not just tiles"
+        );
+    }
+
+    #[test]
+    fn causal_rect_attention_attends_whole_cache_for_one_row() {
+        use crate::verify::tensor::{reference_attention, Tensor2};
+        let d = 8;
+        let kvl = 16;
+        let q = Tensor2::randn(1, d, 1);
+        let k = Tensor2::randn(kvl, d, 2);
+        let v = Tensor2::randn(kvl, d, 3);
+        let scale = 1.0 / (d as f32).sqrt();
+        // One causal decode row = full attention over the entire cache.
+        let got = causal_rect_attention(&q, &k, &v, scale);
+        let want = reference_attention(&q, &k, &v, scale, false);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+        // Square case agrees with the repo oracle's causal mask exactly.
+        let qs = Tensor2::randn(kvl, d, 4);
+        let got = causal_rect_attention(&qs, &k, &v, scale);
+        let want = reference_attention(&qs, &k, &v, scale, true);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn manifest_topology_clamps_decode_caps_by_kv_budget() {
+        use crate::runtime::registry::parse_manifest;
+        let manifest = "artifact a file=a.hlo.txt kind=attention variant=mha causal=0 \
+             batch=1 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64\n\
+             artifact b file=b.hlo.txt kind=attention variant=mha causal=0 \
+             batch=8 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64\n";
+        let metas = parse_manifest(manifest).unwrap();
+        let decode_fam = family_of(&AttnSignature::from_meta(&metas[0]).unwrap());
+        // One slot's KV footprint: 2 tensors * 4 heads * 1024 rows * 64 * 4B.
+        let one = decode_fam.kv_bytes();
+        let topo = ServeTopology::from_manifest(&metas, &TuneCache::new(), 4 * one).unwrap();
+        let caps = &topo.capacities[&decode_fam];
+        assert_eq!(caps.decode, vec![1], "batch-8 slot exceeds the 4-slot KV budget");
+        // A roomy budget keeps both capacities.
+        let topo = ServeTopology::from_manifest(&metas, &TuneCache::new(), usize::MAX).unwrap();
+        assert_eq!(topo.capacities[&decode_fam].decode, vec![1, 8]);
+    }
+
+    #[test]
+    fn manifest_topology_observed_evidence_beats_split_k_default() {
+        use crate::runtime::registry::parse_manifest;
+        let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=128 bn=64 split_k=1\n\
+             artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+             batch=4 q_heads=4 kv_heads=4 seq=1 kv=1024 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+        let metas = parse_manifest(manifest).unwrap();
+        let decode_fam = family_of(&AttnSignature::from_meta(&metas[0]).unwrap());
+        let obs_key = tune_cache::sig_part(&sig_of(&decode_fam, 4));
+        let mut tune = TuneCache::new();
+        // Serving measured the plain variant faster than split-K here.
+        tune.observe(
+            &obs_key,
+            Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            50.0,
+        );
+        tune.observe(
+            &obs_key,
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8 },
+            400.0,
+        );
+        let topo = ServeTopology::from_manifest(&metas, &tune, usize::MAX).unwrap();
+        let slot = &topo.artifacts[&(decode_fam, LaneKey::Decode, 4)];
+        assert_eq!(
+            slot.primary.id, "plain",
+            "measured evidence outranks the split-K default"
+        );
+        assert_eq!(slot.alts.len(), 1, "the split-K variant stays explorable");
+        assert_eq!(topo.tuned_selections, 1);
+    }
+}

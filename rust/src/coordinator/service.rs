@@ -1,13 +1,13 @@
-//! The serving loop: ingress channel → signature batcher → PJRT execution
-//! → per-request replies.
+//! The serving front door: ingress → router → sharded executor pool →
+//! per-request replies.
 //!
-//! Threading model: PJRT wrapper types are kept on a single executor
-//! thread that owns the [`Registry`]; submitters communicate over
-//! channels. The CPU PJRT client parallelizes execution internally, so
-//! one executor thread saturates the machine for our shapes while keeping
-//! the unsafe-FFI surface single-threaded.
+//! Threading model: PJRT wrapper types are `!Send` (Rc + raw pointers
+//! inside the xla crate), so each shard thread constructs its own
+//! [`crate::coordinator::scheduler::Executor`] — for PJRT that is a
+//! per-shard `Registry` which lazily compiles only the artifacts the
+//! router sends that shard. Submitters communicate over channels; the
+//! [`Coordinator`] is a thin handle around the pool.
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -15,18 +15,30 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{plan_batches, BatchPlan};
 use super::metrics::Metrics;
 use super::request::{AttnRequest, AttnResponse, FamilyKey};
-use crate::autotune::cache::{self as tune_cache, TuneCache};
-use crate::runtime::registry::{ArtifactMeta, AttnSignature, Registry};
+use super::scheduler::{ExecutorPool, ExecutorSpec, ServeTopology};
+use crate::autotune::cache::TuneCache;
+
+pub use super::scheduler::family_of;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
-    /// How long a request may wait for batch peers before it is flushed
-    /// in a padded batch.
+    /// How long a prefill request may wait for batch peers before it is
+    /// flushed in a padded batch (decode flushes at a quarter of this).
     pub batch_window: Duration,
+    /// Executor shards (threads, each owning a Registry slice).
+    pub shards: usize,
+    /// How each shard executes batches (PJRT artifacts by default).
+    pub executor: ExecutorSpec,
+    /// KV-cache budget clamping decode-lane batch capacities:
+    /// a capacity is servable only while `capacity * kv_bytes` fits.
+    pub kv_budget_bytes: usize,
+    /// Where measured per-variant latencies are persisted on shutdown.
+    /// `None` derives `<artifacts_dir>/tune.txt` when serving from a
+    /// manifest, and disables persistence for synthetic topologies.
+    pub tune_path: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -34,118 +46,102 @@ impl Default for ServeConfig {
         ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             batch_window: Duration::from_millis(5),
+            shards: 1,
+            executor: ExecutorSpec::Pjrt,
+            kv_budget_bytes: usize::MAX,
+            tune_path: None,
         }
     }
 }
 
 /// Handle to the running coordinator.
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<AttnRequest>>,
+    pool: Option<ExecutorPool>,
     pub metrics: Arc<Metrics>,
-    handle: Option<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     /// Families servable by the loaded artifact set.
     pub families: Vec<FamilyKey>,
-    /// Routing slots where the autotune cache picked among multiple
-    /// artifact variants for the same (family, capacity).
+    /// Routing slots where tuning evidence (searched or observed) picked
+    /// among multiple artifact variants for the same signature.
     pub tuned_selections: usize,
+    shards: usize,
 }
 
 impl Coordinator {
     pub fn start(config: ServeConfig) -> Result<Self> {
-        // Parse the manifest on the caller's thread (pure text) to learn
-        // the servable families; the PJRT client and executables are !Send
-        // (Rc + raw pointers inside the xla crate), so the Registry itself
-        // is constructed *inside* the executor thread and never crosses it.
-        let manifest_text =
-            std::fs::read_to_string(config.artifacts_dir.join("manifest.txt"))
-                .with_context(|| format!("opening {}", config.artifacts_dir.display()))?;
-        let metas = crate::runtime::registry::parse_manifest(&manifest_text)?;
-
-        // Tuning winners shipped with the artifacts (empty when absent):
-        // used to pick among artifact variants compiled for the same
-        // (family, capacity) slot with different schedules.
+        // Build the topology on the caller's thread (pure text): parse
+        // the manifest when one exists; otherwise executors that need no
+        // compiled artifacts serve the synthetic benchmark families.
+        let manifest_path = config.artifacts_dir.join("manifest.txt");
         let tune = TuneCache::load(&config.artifacts_dir.join("tune.txt"))
             .unwrap_or_else(|_| TuneCache::new());
-        // Same endorsement predicate Registry::find_best applies.
-        let tuned_pick = |meta: &ArtifactMeta, sig: &AttnSignature| -> bool {
-            match (meta.usize_field("bm").ok(), meta.usize_field("bn").ok()) {
-                (Some(bm), Some(bn)) => {
-                    tune.names_schedule(&tune_cache::sig_part(sig), bm, bn)
-                }
-                _ => false,
-            }
+        let (topology, have_manifest) = if manifest_path.exists()
+            || matches!(config.executor, ExecutorSpec::Pjrt)
+        {
+            let manifest_text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("opening {}", config.artifacts_dir.display()))?;
+            let metas = crate::runtime::registry::parse_manifest(&manifest_text)?;
+            (ServeTopology::from_manifest(&metas, &tune, config.kv_budget_bytes)?, true)
+        } else {
+            (
+                ServeTopology::synthetic(
+                    &crate::workload::reference_serving_families(),
+                    &[1, 2, 4, 8],
+                ),
+                false,
+            )
         };
+        Self::start_with_topology(config, topology, tune, have_manifest)
+    }
 
-        // family -> sorted capacities, (family, capacity) -> artifact id.
-        // Duplicate (family, capacity) slots keep the pre-existing
-        // last-wins behaviour unless the tuning cache endorses a variant,
-        // in which case the endorsed one is pinned.
-        let mut capacities: BTreeMap<FamilyKey, Vec<usize>> = BTreeMap::new();
-        let mut artifact_of: BTreeMap<(FamilyKey, usize), String> = BTreeMap::new();
-        let mut tuned_slots: std::collections::BTreeSet<(FamilyKey, usize)> =
-            std::collections::BTreeSet::new();
-        let mut slot_rows: BTreeMap<(FamilyKey, usize), usize> = BTreeMap::new();
-        for meta in metas.iter().filter(|m| m.kind == "attention") {
-            let sig = AttnSignature::from_meta(meta)?;
-            let fam = family_of(&sig);
-            capacities.entry(fam.clone()).or_default().push(sig.batch);
-            let slot = (fam, sig.batch);
-            *slot_rows.entry(slot.clone()).or_insert(0) += 1;
-            if tuned_pick(meta, &sig) {
-                artifact_of.insert(slot.clone(), meta.id.clone());
-                tuned_slots.insert(slot);
-            } else if !tuned_slots.contains(&slot) {
-                artifact_of.insert(slot, meta.id.clone());
-            }
-        }
-        // A slot counts as a tuned selection only when the cache actually
-        // decided among multiple variants competing for it.
-        let tuned_selections = tuned_slots
-            .iter()
-            .filter(|slot| slot_rows.get(*slot).copied().unwrap_or(0) > 1)
-            .count();
-        for caps in capacities.values_mut() {
-            caps.sort_unstable();
-            caps.dedup();
-        }
-        let families: Vec<FamilyKey> = capacities.keys().cloned().collect();
-
-        let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<AttnRequest>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let m = metrics.clone();
-        let window = config.batch_window;
-        let dir = config.artifacts_dir.clone();
-        let handle = std::thread::Builder::new()
-            .name("qimeng-executor".into())
-            .spawn(move || {
-                let registry = match Registry::open(&dir) {
-                    Ok(r) => {
-                        let _ = ready_tx.send(Ok(()));
-                        r
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                executor_loop(registry, rx, capacities, artifact_of, window, m);
-            })
-            .context("spawning executor thread")?;
-        ready_rx
-            .recv()
-            .context("executor thread died during startup")?
-            .map_err(|e| anyhow::anyhow!(e))?;
-
+    /// Start on an explicit topology (tests and custom executors).
+    pub fn start_with_topology(
+        config: ServeConfig,
+        topology: ServeTopology,
+        tune: TuneCache,
+        have_manifest: bool,
+    ) -> Result<Self> {
+        let shards = config.shards.max(1);
+        let families = topology.families();
+        let tuned_selections = topology.tuned_selections;
+        let metrics = Arc::new(Metrics::with_shards(shards));
+        // Persist observations next to the artifacts only when they were
+        // actually measured on those artifacts (PJRT). Reference/custom
+        // executors produce timings for *their* backend — writing them
+        // into artifacts/tune.txt would outrank genuine search winners on
+        // the next PJRT serve. An explicit tune_path always wins.
+        let tune_path = config.tune_path.clone().or_else(|| {
+            (have_manifest && matches!(config.executor, ExecutorSpec::Pjrt))
+                .then(|| config.artifacts_dir.join("tune.txt"))
+        });
+        let pool = ExecutorPool::start(
+            shards,
+            config.executor.clone(),
+            config.artifacts_dir.clone(),
+            topology,
+            config.batch_window,
+            metrics.clone(),
+            tune,
+            tune_path,
+        )?;
         Ok(Coordinator {
-            tx: Some(tx),
+            pool: Some(pool),
             metrics,
-            handle: Some(handle),
             next_id: std::sync::atomic::AtomicU64::new(0),
             families,
             tuned_selections,
+            shards,
         })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Snapshot of the tuning cache including serving evidence folded in
+    /// so far (None after shutdown).
+    pub fn tune_snapshot(&self) -> Option<TuneCache> {
+        self.pool.as_ref().map(|p| p.tune_snapshot())
     }
 
     /// Submit one request; returns the reply channel.
@@ -160,183 +156,26 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let req = AttnRequest { id, family, q, k, v, enqueued: Instant::now(), reply };
-        // Send failure means the executor died; the reply channel will
-        // simply disconnect, which callers observe as RecvError.
-        if let Some(tx) = &self.tx {
-            let _ = tx.send(req);
+        // Routing failure means a shard died; the reply channel simply
+        // disconnects, which callers observe as RecvError.
+        if let Some(pool) = &self.pool {
+            pool.submit(req);
         }
         rx
     }
 
-    /// Drain and stop the executor.
+    /// Drain and stop every shard, persisting measured latencies.
     pub fn shutdown(mut self) {
-        self.tx.take(); // disconnect -> executor flushes and exits
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
         }
-    }
-}
-
-pub(crate) fn family_of(sig: &AttnSignature) -> FamilyKey {
-    FamilyKey {
-        variant: sig.variant,
-        causal: sig.causal,
-        qk_dim: sig.qk_dim,
-        v_dim: sig.v_dim,
-        q_heads: sig.q_heads,
-        kv_heads: sig.kv_heads,
-        seq: sig.seq,
-        kv: sig.kv,
-    }
-}
-
-fn executor_loop(
-    registry: Registry,
-    rx: mpsc::Receiver<AttnRequest>,
-    capacities: BTreeMap<FamilyKey, Vec<usize>>,
-    artifact_of: BTreeMap<(FamilyKey, usize), String>,
-    window: Duration,
-    metrics: Arc<Metrics>,
-) {
-    let mut pending: Vec<AttnRequest> = Vec::new();
-    let mut disconnected = false;
-    loop {
-        // Ingest: block briefly so idle spinning stays cheap.
-        match rx.recv_timeout(window.max(Duration::from_micros(200)) / 2) {
-            Ok(req) => {
-                pending.push(req);
-                // Opportunistically drain whatever else is queued.
-                while let Ok(r) = rx.try_recv() {
-                    pending.push(r);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
-        }
-
-        let now = Instant::now();
-        let view: Vec<(usize, FamilyKey, bool)> = pending
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let expired = disconnected || now.duration_since(r.enqueued) >= window;
-                (i, r.family.clone(), expired)
-            })
-            .collect();
-        let plans = plan_batches(&view, &capacities);
-
-        if !plans.is_empty() {
-            execute_plans(&registry, &mut pending, plans, &artifact_of, &metrics);
-        }
-
-        // Reject requests for families with no artifact (router error).
-        let mut i = 0;
-        while i < pending.len() {
-            if !capacities.contains_key(&pending[i].family) {
-                let req = pending.swap_remove(i);
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = req.reply.send(AttnResponse {
-                    id: req.id,
-                    result: Err(format!("no compiled artifact for family {:?}", req.family)),
-                    latency: req.enqueued.elapsed(),
-                    batch_size: 0,
-                });
-            } else {
-                i += 1;
-            }
-        }
-
-        if disconnected && pending.is_empty() {
-            return;
-        }
-    }
-}
-
-fn execute_plans(
-    registry: &Registry,
-    pending: &mut Vec<AttnRequest>,
-    plans: Vec<BatchPlan>,
-    artifact_of: &BTreeMap<(FamilyKey, usize), String>,
-    metrics: &Metrics,
-) {
-    // Execute plans in order; collect consumed indices, then compact.
-    let mut consumed: Vec<usize> = Vec::new();
-    for plan in plans {
-        let fam = plan.family.clone();
-        let artifact = match artifact_of.get(&(fam.clone(), plan.capacity)) {
-            Some(a) => a.clone(),
-            None => continue,
-        };
-        let cap = plan.capacity;
-        let (qn, kn, vn, on) = (fam.q_len(), fam.k_len(), fam.v_len(), fam.out_len());
-        let mut q = vec![0.0f32; cap * qn];
-        let mut k = vec![0.0f32; cap * kn];
-        let mut v = vec![0.0f32; cap * vn];
-        for (slot, &idx) in plan.members.iter().enumerate() {
-            let r = &pending[idx];
-            q[slot * qn..(slot + 1) * qn].copy_from_slice(&r.q);
-            k[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
-            v[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
-        }
-        let qshape =
-            [cap as i64, fam.q_heads as i64, fam.seq as i64, fam.qk_dim as i64];
-        let kshape =
-            [cap as i64, fam.kv_heads as i64, fam.kv as i64, fam.qk_dim as i64];
-        let vshape = [cap as i64, fam.kv_heads as i64, fam.kv as i64, fam.v_dim as i64];
-
-        let result = registry.executable(&artifact).and_then(|exe| {
-            registry
-                .runtime
-                .execute_f32(&exe, &[(&q, &qshape), (&k, &kshape), (&v, &vshape)])
-        });
-
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.padded_slots.fetch_add(plan.padding() as u64, Ordering::Relaxed);
-
-        match result {
-            Ok(out) => {
-                for (slot, &idx) in plan.members.iter().enumerate() {
-                    let r = &pending[idx];
-                    let piece = out[slot * on..(slot + 1) * on].to_vec();
-                    let latency = r.enqueued.elapsed();
-                    metrics.responses.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_latency(latency);
-                    let _ = r.reply.send(AttnResponse {
-                        id: r.id,
-                        result: Ok(piece),
-                        latency,
-                        batch_size: plan.members.len(),
-                    });
-                }
-            }
-            Err(e) => {
-                for &idx in &plan.members {
-                    let r = &pending[idx];
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(AttnResponse {
-                        id: r.id,
-                        result: Err(format!("{e:#}")),
-                        latency: r.enqueued.elapsed(),
-                        batch_size: plan.members.len(),
-                    });
-                }
-            }
-        }
-        consumed.extend(plan.members.iter().copied());
-    }
-    // Remove consumed requests (descending index order keeps indices valid).
-    consumed.sort_unstable_by(|a, b| b.cmp(a));
-    consumed.dedup();
-    for idx in consumed {
-        pending.swap_remove(idx);
     }
 }

@@ -63,7 +63,14 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
   tune         [operator flags] [--target ...] [--backend pallas|cute]
                [--grid] [--strategy auto|exhaustive|beam|greedy] [--seed N]
                [--measure] [--cache tune_cache.txt]
-  serve        [--artifacts artifacts] [--requests N] [--batch N]
+  serve        [--artifacts artifacts] [--requests N] [--rate-hz F]
+               [--window-ms N] [--seed N] [--shards N] [--decode-frac F]
+               [--executor pjrt|reference] [--kv-budget-mb N]
+               --shards N spreads execution over N router-fed executor
+               shards; --decode-frac F sends that fraction of traffic as
+               decode-shaped requests (packed on the decode lane into
+               split-K variants, KV-budget-aware). Measured per-variant
+               latencies are folded back into artifacts/tune.txt.
 ";
 
 fn spec_from(args: &Args) -> Result<OpSpec, String> {

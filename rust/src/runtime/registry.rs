@@ -155,12 +155,17 @@ impl Registry {
             .find(|m| AttnSignature::from_meta(m).map(|s| s == *sig).unwrap_or(false))
     }
 
-    /// Find the *best* artifact for a signature: when several variants
-    /// were compiled for the same signature (different schedules), pick
-    /// the first whose `bm`/`bn` manifest fields are endorsed by the
-    /// tuning cache (`TuneCache::names_schedule` — the same predicate
-    /// the coordinator applies); otherwise fall back to the first match
-    /// like [`find`].
+    /// Find the *best* artifact for a signature. When several variants
+    /// were compiled for the same signature (different schedules), the
+    /// precedence is:
+    ///
+    /// 1. the variant that *measured* fastest while serving
+    ///    (`TuneCache::observed_best` — evidence folded in by the
+    ///    executor pool via `autotune::cache::observe`);
+    /// 2. the first variant whose `bm`/`bn` manifest fields are endorsed
+    ///    by a search winner (`TuneCache::names_schedule` — the same
+    ///    predicate the coordinator applies);
+    /// 3. first match, like [`Registry::find`].
     pub fn find_best(&self, sig: &AttnSignature) -> Option<&ArtifactMeta> {
         let matches: Vec<&ArtifactMeta> = self
             .attention_metas()
@@ -168,6 +173,22 @@ impl Registry {
             .collect();
         if matches.len() > 1 {
             let key = tune_cache::sig_part(sig);
+            if let Some(obs) = self.tune.observed_best(&key) {
+                // Match on bm/bn *and* split_k: decode-lane variants often
+                // share tiles and differ only in the split-K factor.
+                if let Some(m) = matches.iter().find(|m| {
+                    match (m.usize_field("bm").ok(), m.usize_field("bn").ok()) {
+                        (Some(bm), Some(bn)) => {
+                            bm == obs.cand.bm
+                                && bn == obs.cand.bn
+                                && m.usize_field("split_k").unwrap_or(1) == obs.cand.split_k
+                        }
+                        _ => false,
+                    }
+                }) {
+                    return Some(*m);
+                }
+            }
             if let Some(m) = matches.iter().find(|m| {
                 match (m.usize_field("bm").ok(), m.usize_field("bn").ok()) {
                     (Some(bm), Some(bn)) => self.tune.names_schedule(&key, bm, bn),
@@ -271,6 +292,57 @@ mod tests {
         };
         assert_eq!(reg.find(&sig).unwrap().id, "v1", "find keeps first-match semantics");
         assert_eq!(reg.find_best(&sig).unwrap().id, "v2", "find_best follows the tune cache");
+    }
+
+    #[test]
+    fn find_best_prefers_measured_fastest_over_model_endorsement() {
+        use crate::autotune::cache::TuneEntry;
+        use crate::autotune::space::Candidate;
+        use crate::sketch::spec::OpSpec;
+
+        let dir = std::env::temp_dir().join("qimeng_find_best_observed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = "artifact v1 file=v1.hlo.txt kind=attention variant=mha causal=1 \
+                        batch=4 q_heads=32 kv_heads=32 seq=4096 kv=4096 qk=64 vd=64 bm=128 bn=64\n\
+                        artifact v2 file=v2.hlo.txt kind=attention variant=mha causal=1 \
+                        batch=4 q_heads=32 kv_heads=32 seq=4096 kv=4096 qk=64 vd=64 bm=256 bn=128\n";
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+
+        // The model-guided search endorses v2, but serving measured v1
+        // faster: measured evidence wins.
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
+        let part = tune_cache::spec_part(&spec);
+        let mut cache = TuneCache::new();
+        cache.insert(TuneEntry {
+            key: format!("{part}|A100|pallas"),
+            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 },
+            micros: 100.0,
+            strategy: "exhaustive".into(),
+            evaluated: 10,
+        });
+        let v1 = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let v2 = Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 };
+        cache.observe(&part, v1, 90.0);
+        cache.observe(&part, v2, 450.0);
+        cache.save(&dir.join("tune.txt")).unwrap();
+
+        let reg = Registry::open(&dir).unwrap();
+        let sig = AttnSignature {
+            variant: AttnVariant::Mha,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            batch: 4,
+            q_heads: 32,
+            kv_heads: 32,
+            seq: 4096,
+            kv: 4096,
+        };
+        assert_eq!(
+            reg.find_best(&sig).unwrap().id,
+            "v1",
+            "measured-fastest variant must outrank the modeled endorsement"
+        );
     }
 
     #[test]

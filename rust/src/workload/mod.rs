@@ -1,8 +1,9 @@
 //! Workload generation: the paper's benchmark grids (§4.1) for the
 //! performance model, the real-model configurations of Appendix C, and
-//! synthetic request streams for the serving coordinator.
+//! synthetic request streams (prefill, decode, and seeded mixes) for the
+//! serving coordinator.
 
-use crate::coordinator::request::FamilyKey;
+use crate::coordinator::request::{FamilyKey, LaneKey};
 use crate::sketch::spec::{AttnVariant, OpSpec};
 use crate::util::prng::Rng;
 
@@ -107,6 +108,119 @@ pub fn request_stream(
     out
 }
 
+/// The decode-shaped twin of a prefill family: one query row attending
+/// the whole KV cache. Non-causal — in autoregressive decode the entire
+/// cache *is* the past, so the mask is trivially all-visible (and the
+/// repo's reference oracle aligns its causal mask top-left, which would
+/// be wrong for a bottom-row query).
+pub fn decode_twin(f: &FamilyKey) -> FamilyKey {
+    FamilyKey {
+        causal: false,
+        seq: 1,
+        kv: f.kv.max(f.seq).max(4), // LaneKey::of needs kv >= 4*seq
+        ..f.clone()
+    }
+}
+
+/// Families served by the reference executor when no AOT manifest is
+/// compiled: a small cross-variant prefill set plus decode twins. Kept
+/// at seq 64 so the CPU oracle stays O(ms) per request even in debug
+/// builds (the scheduler tests serve dozens of these).
+pub fn reference_serving_families() -> Vec<FamilyKey> {
+    let mut fams = Vec::new();
+    for (variant, q_heads, kv_heads) in
+        [(AttnVariant::Mha, 4, 4), (AttnVariant::Gqa, 8, 2), (AttnVariant::Mqa, 4, 1)]
+    {
+        let f = FamilyKey {
+            variant,
+            causal: true,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads,
+            kv_heads,
+            seq: 64,
+            kv: 64,
+        };
+        fams.push(decode_twin(&f));
+        fams.push(f);
+    }
+    fams
+}
+
+/// Generate a Poisson-ish stream with a seeded prefill/decode mix:
+/// each arrival is a decode-lane request with probability `decode_frac`
+/// (drawn from the decode-shaped members of `families`), otherwise a
+/// prefill request. Falls back gracefully when a lane has no families.
+pub fn request_stream_mixed(
+    families: &[FamilyKey],
+    n: usize,
+    rate_hz: f64,
+    decode_frac: f64,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    assert!(!families.is_empty(), "no servable families");
+    let decode: Vec<&FamilyKey> =
+        families.iter().filter(|f| LaneKey::of(f) == LaneKey::Decode).collect();
+    let prefill: Vec<&FamilyKey> =
+        families.iter().filter(|f| LaneKey::of(f) == LaneKey::Prefill).collect();
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / rate_hz;
+        let lane_pool: &[&FamilyKey] = if !decode.is_empty()
+            && (prefill.is_empty() || rng.f64() < decode_frac)
+        {
+            &decode
+        } else {
+            &prefill
+        };
+        // Zipf-ish family choice within the lane (head-heavy mixes).
+        let idx = ((rng.f64().powi(2)) * lane_pool.len() as f64) as usize;
+        let family = lane_pool[idx.min(lane_pool.len() - 1)].clone();
+        out.push(SyntheticRequest {
+            family,
+            seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            arrival: std::time::Duration::from_secs_f64(t),
+        });
+    }
+    out
+}
+
+/// Decode-only stream over the Appendix-C / Table-8 production configs:
+/// each model contributes decode families (one query row over a KV cache
+/// drawn from the paper's sweep, clamped to `max_kv` so host payloads
+/// stay bounded). This is what points the decode lane at real-model
+/// shapes.
+pub fn real_model_decode_stream(
+    n: usize,
+    rate_hz: f64,
+    max_kv: usize,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    let mut fams = Vec::new();
+    for (_, specs) in real_models() {
+        for spec in specs {
+            if spec.kv_len > max_kv {
+                continue;
+            }
+            fams.push(FamilyKey {
+                variant: spec.variant,
+                causal: false,
+                qk_dim: spec.qk_dim(),
+                v_dim: spec.v_head_dim,
+                q_heads: spec.num_q_heads,
+                kv_heads: spec.num_kv_heads,
+                seq: 1,
+                kv: spec.kv_len,
+            });
+        }
+    }
+    assert!(!fams.is_empty(), "max_kv clamps away every Table-8 config");
+    request_stream_mixed(&fams, n, rate_hz, 1.0, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +269,53 @@ mod tests {
             assert!(w[0].arrival <= w[1].arrival);
         }
         assert_eq!(a[10].seed, b[10].seed);
+    }
+
+    #[test]
+    fn mixed_stream_respects_decode_frac_and_seed() {
+        let fams = reference_serving_families();
+        assert!(fams.iter().any(|f| LaneKey::of(f) == LaneKey::Decode));
+        assert!(fams.iter().any(|f| LaneKey::of(f) == LaneKey::Prefill));
+        let a = request_stream_mixed(&fams, 200, 500.0, 0.5, 9);
+        let b = request_stream_mixed(&fams, 200, 500.0, 0.5, 9);
+        assert_eq!(
+            a.iter().map(|r| r.family.clone()).collect::<Vec<_>>(),
+            b.iter().map(|r| r.family.clone()).collect::<Vec<_>>(),
+            "same seed, same mix"
+        );
+        let decode = a.iter().filter(|r| LaneKey::of(&r.family) == LaneKey::Decode).count();
+        assert!((40..=160).contains(&decode), "≈50% decode, got {decode}/200");
+        // Extremes collapse to a single lane.
+        let none = request_stream_mixed(&fams, 50, 500.0, 0.0, 9);
+        assert!(none.iter().all(|r| LaneKey::of(&r.family) == LaneKey::Prefill));
+        let all = request_stream_mixed(&fams, 50, 500.0, 1.0, 9);
+        assert!(all.iter().all(|r| LaneKey::of(&r.family) == LaneKey::Decode));
+    }
+
+    #[test]
+    fn decode_twin_is_decode_shaped() {
+        for f in reference_serving_families() {
+            let d = decode_twin(&f);
+            assert_eq!(LaneKey::of(&d), LaneKey::Decode);
+            assert_eq!(d.q_len(), f.q_heads * f.qk_dim, "one query row");
+        }
+    }
+
+    #[test]
+    fn real_model_decode_stream_matches_table8_heads() {
+        let stream = real_model_decode_stream(40, 1000.0, 2048, 3);
+        assert_eq!(stream.len(), 40);
+        for r in &stream {
+            assert_eq!(LaneKey::of(&r.family), LaneKey::Decode);
+            assert_eq!(r.family.qk_dim, 128, "Appendix C is head-dim 128");
+            assert!(r.family.kv <= 2048);
+            assert!(
+                [(32, 32), (64, 8), (128, 8)]
+                    .contains(&(r.family.q_heads, r.family.kv_heads)),
+                "unexpected head config {:?}",
+                (r.family.q_heads, r.family.kv_heads)
+            );
+        }
     }
 
     #[test]

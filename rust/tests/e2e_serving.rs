@@ -22,6 +22,7 @@ fn start() -> Coordinator {
     Coordinator::start(ServeConfig {
         artifacts_dir: "artifacts".into(),
         batch_window: Duration::from_millis(2),
+        ..ServeConfig::default()
     })
     .expect("coordinator start")
 }

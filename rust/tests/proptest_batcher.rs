@@ -1,11 +1,12 @@
 //! Property tests on the coordinator's batch planner invariants:
 //! every expired request is served, no request is double-assigned, no
-//! batch exceeds its executable's capacity, and families never mix.
+//! batch exceeds its executable's capacity, families never mix, and the
+//! lane-aware planner only uses its lane's compiled capacity set.
 
 use std::collections::BTreeMap;
 
-use qimeng::coordinator::batcher::plan_batches;
-use qimeng::coordinator::FamilyKey;
+use qimeng::coordinator::batcher::{plan_batches, plan_batches_lanes, LaneCaps};
+use qimeng::coordinator::{FamilyKey, LaneKey};
 use qimeng::sketch::spec::AttnVariant;
 use qimeng::util::prng::Rng;
 use qimeng::util::proptest::{check, Config};
@@ -105,6 +106,122 @@ fn batcher_invariants_hold() {
             for (idx, fam, expired) in &case.pending {
                 if *expired && case.capacities.contains_key(fam) && !assigned.contains(idx)
                 {
+                    return Err(format!("expired request {idx} left unserved"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A lane-aware scenario mixing prefill and decode-shaped families with
+/// distinct per-lane capacity sets.
+#[derive(Debug, Clone)]
+struct LaneCase {
+    pending: Vec<(usize, FamilyKey, bool)>,
+    capacities: BTreeMap<FamilyKey, LaneCaps>,
+}
+
+fn decode_family(i: u64) -> FamilyKey {
+    FamilyKey { causal: false, seq: 1, kv: 1024, ..family(i) }
+}
+
+fn gen_lane_case(rng: &mut Rng) -> LaneCase {
+    let n_fams = 1 + rng.below(3);
+    let mut capacities = BTreeMap::new();
+    let mut fams = Vec::new();
+    for i in 0..n_fams {
+        let prefill_caps: Vec<usize> =
+            if rng.bool() { vec![1, 4] } else { vec![2, 8] };
+        let decode_caps: Vec<usize> = match rng.below(3) {
+            0 => vec![1, 8],
+            1 => vec![4],
+            _ => vec![], // KV budget clamped the lane away entirely
+        };
+        let p = family(i);
+        let d = decode_family(i);
+        capacities
+            .insert(p.clone(), LaneCaps { prefill: prefill_caps, decode: vec![] });
+        capacities.insert(d.clone(), LaneCaps { prefill: vec![], decode: decode_caps });
+        fams.push(p);
+        fams.push(d);
+    }
+    let n = rng.below(40) as usize;
+    let pending: Vec<(usize, FamilyKey, bool)> = (0..n)
+        .map(|idx| {
+            let fam = fams[rng.below(fams.len() as u64) as usize].clone();
+            (idx, fam, rng.bool())
+        })
+        .collect();
+    LaneCase { pending, capacities }
+}
+
+#[test]
+fn lane_batcher_invariants_hold() {
+    check(
+        Config { cases: 300, ..Config::default() },
+        gen_lane_case,
+        |case| {
+            if case.pending.len() > 1 {
+                let mut c = case.clone();
+                c.pending.truncate(case.pending.len() / 2);
+                vec![c]
+            } else {
+                vec![]
+            }
+        },
+        |case| {
+            let plans = plan_batches_lanes(&case.pending, &case.capacities);
+            let mut assigned = std::collections::BTreeSet::new();
+            for plan in &plans {
+                // The plan's lane is the family's lane...
+                if plan.lane != LaneKey::of(&plan.family) {
+                    return Err(format!(
+                        "plan lane {:?} disagrees with family lane",
+                        plan.lane
+                    ));
+                }
+                // ...and its capacity comes from that lane's compiled set.
+                let caps = case
+                    .capacities
+                    .get(&plan.family)
+                    .ok_or("plan for family with no executable")?
+                    .for_lane(plan.lane);
+                if !caps.contains(&plan.capacity) {
+                    return Err(format!(
+                        "capacity {} not in lane set {caps:?}",
+                        plan.capacity
+                    ));
+                }
+                if plan.members.is_empty() || plan.members.len() > plan.capacity {
+                    return Err(format!(
+                        "bad member count {} for capacity {}",
+                        plan.members.len(),
+                        plan.capacity
+                    ));
+                }
+                // padding() must never panic and must be consistent.
+                if plan.padding() != plan.capacity - plan.members.len() {
+                    return Err("padding arithmetic broken".into());
+                }
+                for &m in &plan.members {
+                    if !assigned.insert(m) {
+                        return Err(format!("request {m} assigned twice"));
+                    }
+                    let fam = &case.pending.iter().find(|(i, _, _)| *i == m).unwrap().1;
+                    if fam != &plan.family {
+                        return Err(format!("request {m} in foreign-family batch"));
+                    }
+                }
+            }
+            // Every expired request whose lane has capacities is served.
+            for (idx, fam, expired) in &case.pending {
+                let servable = case
+                    .capacities
+                    .get(fam)
+                    .map(|c| !c.for_lane(LaneKey::of(fam)).is_empty())
+                    .unwrap_or(false);
+                if *expired && servable && !assigned.contains(idx) {
                     return Err(format!("expired request {idx} left unserved"));
                 }
             }

@@ -1,0 +1,163 @@
+//! Property tests on the shard router invariants: every request is
+//! assigned exactly one in-range shard, in-flight depth accounting is
+//! conserved, family→shard affinity is stable while the pool is
+//! balanced, and rebalancing only fires past the hysteresis slack.
+
+use qimeng::coordinator::{FamilyKey, Router};
+use qimeng::sketch::spec::AttnVariant;
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest::{check, Config};
+
+fn family(i: u64) -> FamilyKey {
+    let variants = [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa, AttnVariant::Mla];
+    FamilyKey {
+        variant: variants[(i % 4) as usize],
+        causal: i % 2 == 0,
+        qk_dim: if i % 3 == 0 { 64 } else { 128 },
+        v_dim: 64,
+        q_heads: 4,
+        kv_heads: 4,
+        seq: 256,
+        kv: 256,
+    }
+}
+
+/// A routing scenario: route/complete ops over a pool.
+#[derive(Debug, Clone)]
+struct Case {
+    shards: usize,
+    slack: usize,
+    /// (family index, completions to apply after routing this request)
+    ops: Vec<(u64, usize)>,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let shards = 1 + rng.below(6) as usize;
+    let slack = rng.below(6) as usize;
+    let n = rng.below(120) as usize;
+    let ops = (0..n)
+        .map(|_| (rng.below(5), rng.below(3) as usize))
+        .collect();
+    Case { shards, slack, ops }
+}
+
+#[test]
+fn router_invariants_hold() {
+    check(
+        Config { cases: 300, ..Config::default() },
+        gen_case,
+        |case| {
+            if case.ops.len() > 1 {
+                let mut c = case.clone();
+                c.ops.truncate(case.ops.len() / 2);
+                vec![c]
+            } else {
+                vec![]
+            }
+        },
+        |case| {
+            let mut router = Router::with_slack(case.shards, case.slack);
+            // In-flight per shard, tracked independently of the router.
+            let mut inflight = vec![0usize; router.shards()];
+            // Shard assignment per family for affinity checks (keyed by
+            // the FamilyKey itself — distinct indices can collide).
+            let mut last_assignment: std::collections::BTreeMap<FamilyKey, usize> =
+                std::collections::BTreeMap::new();
+            let mut routes = 0usize;
+            let mut completes = 0usize;
+            for &(fam_i, complete_after) in &case.ops {
+                let fam = family(fam_i);
+                let depths_before = router.depths().to_vec();
+                let min_before = *depths_before.iter().min().unwrap();
+                let rebalances_before = router.rebalances();
+                let (shard, rebalanced) = router.route(&fam);
+                routes += 1;
+                // 1. shard in range; never dropped, never double-assigned
+                //    (route returns exactly one shard).
+                if shard >= case.shards.max(1) {
+                    return Err(format!("shard {shard} out of range"));
+                }
+                inflight[shard] += 1;
+                // 2. affinity stability: while the family's shard is within
+                //    slack of the least-loaded, it must not move.
+                if let Some(&prev) = last_assignment.get(&fam) {
+                    let balanced = depths_before[prev] <= min_before + case.slack;
+                    if balanced && shard != prev {
+                        return Err(format!(
+                            "family {fam_i} moved {prev}->{shard} while balanced \
+                             (depths {depths_before:?}, slack {})",
+                            case.slack
+                        ));
+                    }
+                    // 3. rebalance accounting: a move is counted, a stay isn't.
+                    let moved = shard != prev;
+                    if moved != rebalanced
+                        || router.rebalances() - rebalances_before != moved as u64
+                    {
+                        return Err(format!(
+                            "rebalance flag/counter mismatch (moved={moved}, \
+                             flag={rebalanced})"
+                        ));
+                    }
+                    // 4. a rebalance must land on a strictly less-loaded shard.
+                    if moved && depths_before[shard] >= depths_before[prev] {
+                        return Err(format!(
+                            "rebalance moved family {fam_i} to a no-less-loaded \
+                             shard ({depths_before:?}: {prev} -> {shard})"
+                        ));
+                    }
+                } else if rebalanced {
+                    return Err("first route of a family counted as rebalance".into());
+                }
+                last_assignment.insert(fam.clone(), shard);
+                // 5. depth accounting matches our shadow copy.
+                if router.depths() != inflight.as_slice() {
+                    return Err(format!(
+                        "depth drift: router {:?} vs shadow {:?}",
+                        router.depths(),
+                        inflight
+                    ));
+                }
+                // Apply completions on this family's shard.
+                for _ in 0..complete_after.min(inflight[shard]) {
+                    router.complete(shard);
+                    inflight[shard] -= 1;
+                    completes += 1;
+                }
+            }
+            // 6. conservation: total depth == routes - completes.
+            let total: usize = router.depths().iter().sum();
+            if total != routes - completes {
+                return Err(format!(
+                    "conservation violated: {total} in flight vs {} expected",
+                    routes - completes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn router_spreads_distinct_families() {
+    // With as many families as shards and no load, each family gets its
+    // own shard (least-loaded assignment spreads the start state).
+    check(
+        Config { cases: 100, ..Config::default() },
+        |rng| 1 + rng.below(5) as usize,
+        |_| vec![],
+        |&shards| {
+            let mut router = Router::new(shards);
+            let mut used = std::collections::BTreeSet::new();
+            for i in 0..shards as u64 {
+                let (s, _) = router.route(&family(i));
+                used.insert(s);
+            }
+            if used.len() == shards {
+                Ok(())
+            } else {
+                Err(format!("{} families packed onto {} shards", shards, used.len()))
+            }
+        },
+    );
+}

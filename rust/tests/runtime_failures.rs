@@ -80,6 +80,7 @@ fn coordinator_fails_fast_on_missing_dir() {
     let err = Coordinator::start(ServeConfig {
         artifacts_dir: Path::new("/nonexistent/artifacts").to_path_buf(),
         batch_window: Duration::from_millis(1),
+        ..ServeConfig::default()
     })
     .err()
     .expect("must fail");

@@ -1,0 +1,264 @@
+//! Integration tests over the sharded executor pool with the reference
+//! (CPU-oracle) executor: multi-shard serving correctness, shutdown
+//! drain, lane routing, and the measured-latency feedback loop into the
+//! persisted `TuneCache`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qimeng::autotune::cache::TuneCache;
+use qimeng::coordinator::{
+    run_stream, Coordinator, Executor, ExecutorSpec, LaneKey, ServeConfig, ServeTopology,
+};
+use qimeng::verify::tensor::{reference_attention, Tensor2};
+use qimeng::workload::{request_stream_mixed, SyntheticRequest};
+
+fn reference_config(shards: usize) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: "definitely-not-compiled-artifacts".into(),
+        batch_window: Duration::from_millis(2),
+        shards,
+        executor: ExecutorSpec::Reference,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn reference_pool_serves_mixed_stream_without_errors() {
+    let coordinator = Coordinator::start(reference_config(3)).expect("start");
+    assert_eq!(coordinator.shards(), 3);
+    let fams = coordinator.families.clone();
+    assert!(fams.iter().any(|f| LaneKey::of(f) == LaneKey::Decode));
+    assert!(fams.iter().any(|f| LaneKey::of(f) == LaneKey::Prefill));
+
+    let stream = request_stream_mixed(&fams, 48, 1e6, 0.5, 7);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    assert_eq!(report.ok, 48, "errors: {} ({})", report.errors, report.metrics_summary);
+    assert!(report.mean_occupancy >= 1.0);
+
+    // Work actually spread across shards (6 families, 3 shards, and the
+    // batching window keeps early requests in flight during submission).
+    let shard_batches = coordinator.metrics.shard_batches();
+    let busy = shard_batches.iter().filter(|&&b| b > 0).count();
+    assert!(busy >= 2, "one shard served everything: {shard_batches:?}");
+    let total: u64 = shard_batches.iter().sum();
+    assert_eq!(
+        total,
+        coordinator.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        "per-shard batch counters must sum to the pool total"
+    );
+
+    // The feedback loop recorded per-variant evidence while serving.
+    let snapshot = coordinator.tune_snapshot().expect("pool alive");
+    assert!(snapshot.observed_count() > 0, "no observations folded into the cache");
+    coordinator.shutdown();
+}
+
+#[test]
+fn shutdown_drains_every_submitted_request() {
+    let coordinator = Coordinator::start(reference_config(4)).expect("start");
+    let fams = coordinator.families.clone();
+    let mut rxs = Vec::new();
+    for i in 0..32u64 {
+        let req = SyntheticRequest {
+            family: fams[(i as usize) % fams.len()].clone(),
+            seed: 100 + i,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        rxs.push(coordinator.submit(req.family.clone(), q, k, v));
+    }
+    // Shut down immediately: every in-flight request must still get a
+    // reply (shards flush pending work before exiting).
+    coordinator.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped on shutdown"));
+        assert!(resp.result.is_ok(), "request {i} failed: {:?}", resp.result);
+    }
+}
+
+#[test]
+fn served_outputs_match_oracle_for_every_family_and_lane() {
+    let coordinator = Coordinator::start(reference_config(2)).expect("start");
+    for (i, fam) in coordinator.families.clone().iter().enumerate() {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed: 2000 + i as u64,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let resp = coordinator
+            .submit(fam.clone(), q.clone(), k.clone(), v.clone())
+            .recv()
+            .expect("response");
+        let out = resp.result.expect("serve error");
+        assert_eq!(out.len(), fam.out_len());
+
+        // Verify the *last* q-head (exercises the GQA/MQA head mapping
+        // and the packed-slot offsets through the shard executor).
+        let (s, kvl, d, vd) = (fam.seq, fam.kv, fam.qk_dim, fam.v_dim);
+        let group = fam.q_heads / fam.kv_heads;
+        let qh = fam.q_heads - 1;
+        let kh = qh / group;
+        let q_off = qh * s * d;
+        let k_off = kh * kvl * d;
+        let v_off = kh * kvl * vd;
+        let qt = Tensor2 { rows: s, cols: d, data: q[q_off..q_off + s * d].to_vec() };
+        let kt = Tensor2 { rows: kvl, cols: d, data: k[k_off..k_off + kvl * d].to_vec() };
+        let vt = Tensor2 { rows: kvl, cols: vd, data: v[v_off..v_off + kvl * vd].to_vec() };
+        let want = reference_attention(&qt, &kt, &vt, 1.0 / (d as f32).sqrt(), fam.causal);
+        let o_off = qh * s * vd;
+        let got = Tensor2 { rows: s, cols: vd, data: out[o_off..o_off + s * vd].to_vec() };
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-5, "family {fam:?}: served vs oracle diff {diff}");
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn unknown_family_is_rejected_not_dropped() {
+    let coordinator = Coordinator::start(reference_config(2)).expect("start");
+    let mut alien = coordinator.families[0].clone();
+    alien.seq = 512;
+    alien.kv = 512;
+    let resp = coordinator
+        .submit(
+            alien.clone(),
+            vec![0.0; alien.q_len()],
+            vec![0.0; alien.k_len()],
+            vec![0.0; alien.v_len()],
+        )
+        .recv()
+        .expect("reply must arrive");
+    let err = resp.result.expect_err("alien family must be rejected");
+    assert!(err.contains("no compiled artifact"), "unexpected error: {err}");
+    coordinator.shutdown();
+}
+
+/// Trivial executor for exploration accounting: returns zeros of the
+/// right size, so batch identity (which variant ran) is the only thing
+/// under test.
+struct ZeroExecutor;
+
+impl Executor for ZeroExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &qimeng::coordinator::FamilyKey,
+        _info: &qimeng::coordinator::scheduler::ArtifactInfo,
+        capacity: usize,
+        _q: &[f32],
+        _k: &[f32],
+        _v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        Ok(vec![0.0; capacity * family.out_len()])
+    }
+
+    fn kind(&self) -> &'static str {
+        "zero"
+    }
+}
+
+#[test]
+fn exploration_measures_competing_variants() {
+    use qimeng::coordinator::scheduler::EXPLORE_EVERY;
+    use qimeng::runtime::registry::parse_manifest;
+
+    // Two compiled variants for one decode slot, differing only in split_k.
+    let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=1\n\
+         artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+    let metas = parse_manifest(manifest).unwrap();
+    let topo = ServeTopology::from_manifest(&metas, &TuneCache::new(), usize::MAX).unwrap();
+
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 1,
+        executor: ExecutorSpec::Custom(Arc::new(|_shard| {
+            Ok(Box::new(ZeroExecutor) as Box<dyn Executor>)
+        })),
+        ..ServeConfig::default()
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, topo, TuneCache::new(), false)
+            .expect("start");
+    let fam = coordinator.families[0].clone();
+    assert_eq!(LaneKey::of(&fam), LaneKey::Decode);
+
+    // Sequential submit→recv with capacity {1}: one batch per request,
+    // so slot sequence numbers are deterministic.
+    let n = 2 * EXPLORE_EVERY;
+    for _ in 0..n {
+        let rx = coordinator.submit(
+            fam.clone(),
+            vec![0.0; fam.q_len()],
+            vec![0.0; fam.k_len()],
+            vec![0.0; fam.v_len()],
+        );
+        let resp = rx.recv().expect("reply");
+        assert!(resp.result.is_ok());
+    }
+
+    let snapshot = coordinator.tune_snapshot().expect("pool alive");
+    let observed: Vec<_> = snapshot
+        .entries()
+        .filter(|e| TuneCache::is_observed(e))
+        .collect();
+    assert_eq!(
+        observed.len(),
+        2,
+        "both variants must accumulate evidence: {observed:?}"
+    );
+    let mut split_ks: Vec<usize> = observed.iter().map(|e| e.cand.split_k).collect();
+    split_ks.sort_unstable();
+    assert_eq!(split_ks, vec![1, 8]);
+    // Probes fire every EXPLORE_EVERY-th batch: the alternate (the plain
+    // split_k=1 variant here — split-K wins the decode slot) ran twice.
+    let alt_samples =
+        observed.iter().find(|e| e.cand.split_k == 1).map(|e| e.evaluated).unwrap();
+    assert_eq!(alt_samples, 2);
+    coordinator.shutdown();
+}
+
+#[test]
+fn observed_latencies_survive_shutdown_and_name_decode_specs() {
+    let dir = std::env::temp_dir().join("qimeng_scheduler_observe_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tune_path = dir.join("tune.txt");
+    let _ = std::fs::remove_file(&tune_path);
+
+    let config = ServeConfig {
+        tune_path: Some(tune_path.clone()),
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let fams = coordinator.families.clone();
+    // A decode-heavy stream: Table-8-style traffic for the decode lane.
+    let stream = request_stream_mixed(&fams, 40, 1e6, 0.8, 11);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    assert_eq!(report.errors, 0, "{}", report.metrics_summary);
+    coordinator.shutdown();
+
+    // The persisted cache carries observed-latency entries, including
+    // decode-shaped specs (seq = 1 in the key).
+    let cache = TuneCache::load(&tune_path).expect("persisted tune cache parses");
+    assert!(cache.observed_count() > 0, "no observed entries persisted");
+    let decode_observed = cache
+        .entries()
+        .filter(|e| TuneCache::is_observed(e) && e.key.contains("_s1_"))
+        .count();
+    assert!(decode_observed > 0, "decode lane produced no observations");
+    // Sample counts accumulated (running means, not single samples).
+    let total_samples: usize = cache
+        .entries()
+        .filter(|e| TuneCache::is_observed(e))
+        .map(|e| e.evaluated)
+        .sum();
+    assert!(total_samples >= cache.observed_count());
+    // And every observed mean is a sane, finite latency (sub-µs batches
+    // can legitimately round to 0 on coarse clocks, so >= 0).
+    for e in cache.entries().filter(|e| TuneCache::is_observed(e)) {
+        assert!(e.micros.is_finite() && e.micros >= 0.0, "bad mean in {}", e.key);
+    }
+}
