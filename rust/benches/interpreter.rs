@@ -1,32 +1,142 @@
-//! Numeric TL interpreter benches: the verification gate's hot path
-//! (O(n^3) host matmuls). §Perf tracks the per-probe cost since every
-//! `tlc generate` pays it.
+//! Numeric TL engine benches: legacy statement walker vs the compiled
+//! block engine, single-thread and parallel. §Perf tracks the per-probe
+//! cost since every `tlc generate` pays it (and the serving oracle pays
+//! it per batch).
+//!
+//! Modes:
+//!   cargo bench --bench interpreter              full run
+//!   cargo bench --bench interpreter -- --smoke   fewer samples (CI):
+//!       verifies walker/compiled bit-identity on every sweep point,
+//!       fails on any mismatch, and records BENCH_interp.json with the
+//!       walker-vs-compiled and 1-vs-N-thread speedups.
 
 use qimeng::perfmodel::gpu::GpuArch;
 use qimeng::reasoner::generate_tl_code;
 use qimeng::reasoner::profiles::LlmProfile;
 use qimeng::sketch::spec::{AttnVariant, OpSpec};
 use qimeng::util::bench::Bench;
-use qimeng::verify::interp::run_attention;
+use qimeng::verify::exec::{default_threads, run_attention_threads};
+use qimeng::verify::interp::run_attention as run_walker;
 use qimeng::verify::tensor::{reference_attention, Tensor2};
 
+struct Row {
+    label: &'static str,
+    walker_us: f64,
+    compiled_1t_us: f64,
+    compiled_nt_us: f64,
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke { 5 } else { 20 };
+    let threads = default_threads().max(2);
     let arch = GpuArch::a100();
-    for (label, seq, hd) in
-        [("probe_256_hd64", 256usize, 64usize), ("probe_512_hd128", 512, 128)]
-    {
-        let mut spec = OpSpec::benchmark(AttnVariant::Mha, seq, hd, true);
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    for (label, seq, hd, causal) in [
+        ("sweep_256_hd64_causal", 256usize, 64usize, true),
+        ("sweep_512_hd128_causal", 512, 128, true),
+        ("sweep_1024_hd64_full", 1024, 64, false),
+    ] {
+        let mut spec = OpSpec::benchmark(AttnVariant::Mha, seq, hd, causal);
         spec.batch = 1;
         let r = generate_tl_code(&spec, &arch, &LlmProfile::deepseek_v3());
         let q = Tensor2::randn(seq, spec.qk_dim(), 1);
         let k = Tensor2::randn(seq, spec.qk_dim(), 2);
         let v = Tensor2::randn(seq, spec.v_head_dim, 3);
         let scale = 1.0 / (spec.qk_dim() as f32).sqrt();
-        Bench::new(format!("tl_interpreter_{label}")).samples(10).run(|| {
-            run_attention(&r.program, &q, &k, &v, scale).unwrap()
-        });
-        Bench::new(format!("host_reference_{label}")).samples(10).run(|| {
-            reference_attention(&q, &k, &v, scale, true)
-        });
+
+        // Bit-identity gate before timing anything: a fast wrong engine
+        // is worse than a slow right one.
+        let want = run_walker(&r.program, &q, &k, &v, scale).unwrap();
+        for t in [1usize, threads] {
+            let got = run_attention_threads(&r.program, &q, &k, &v, scale, t).unwrap();
+            if got.data != want.data {
+                failures.push(format!(
+                    "{label}: compiled engine ({t} threads) diverged from the walker"
+                ));
+            }
+        }
+
+        let walker = Bench::new(format!("tl_walker_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_walker(&r.program, &q, &k, &v, scale).unwrap());
+        let compiled_1t = Bench::new(format!("tl_compiled_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&r.program, &q, &k, &v, scale, 1).unwrap());
+        let compiled_nt = Bench::new(format!("tl_compiled_{threads}t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&r.program, &q, &k, &v, scale, threads).unwrap());
+        Bench::new(format!("host_reference_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| reference_attention(&q, &k, &v, scale, causal));
+
+        let row = Row {
+            label,
+            walker_us: walker.mean.as_secs_f64() * 1e6,
+            compiled_1t_us: compiled_1t.mean.as_secs_f64() * 1e6,
+            compiled_nt_us: compiled_nt.mean.as_secs_f64() * 1e6,
+        };
+        println!(
+            "  -> {label}: walker/compiled(1t) = {:.2}x, 1t/{threads}t = {:.2}x",
+            row.walker_us / row.compiled_1t_us,
+            row.compiled_1t_us / row.compiled_nt_us,
+        );
+        rows.push(row);
+    }
+
+    // Record results where CI can diff them (perf trajectory file).
+    let mut json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"threads\": {threads},\n  \"sweeps\": [\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    for (i, row) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"walker_us\": {:.1}, \"compiled_1t_us\": {:.1}, \
+             \"compiled_nt_us\": {:.1}, \"speedup_1t\": {:.2}, \"speedup_nt\": {:.2}}}{}\n",
+            row.label,
+            row.walker_us,
+            row.compiled_1t_us,
+            row.compiled_nt_us,
+            row.walker_us / row.compiled_1t_us,
+            row.walker_us / row.compiled_nt_us,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    let min_1t = rows
+        .iter()
+        .map(|r| r.walker_us / r.compiled_1t_us)
+        .fold(f64::INFINITY, f64::min);
+    let min_nt = rows
+        .iter()
+        .map(|r| r.walker_us / r.compiled_nt_us)
+        .fold(f64::INFINITY, f64::min);
+    json.push_str(&format!(
+        "  ],\n  \"min_speedup_1t\": {min_1t:.2},\n  \"min_speedup_nt\": {min_nt:.2}\n}}\n"
+    ));
+    if let Err(e) = std::fs::write("BENCH_interp.json", &json) {
+        eprintln!("warning: could not write BENCH_interp.json: {e}");
+    } else {
+        println!("recorded BENCH_interp.json:\n{json}");
+    }
+
+    // Regressions that fail the bench: numeric divergence always; the
+    // compiled engine falling behind the walker it replaces.
+    if min_1t < 1.0 {
+        failures.push(format!(
+            "compiled engine slower than the legacy walker (min speedup {min_1t:.2}x)"
+        ));
+    }
+    if !failures.is_empty() {
+        eprintln!("interpreter bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
     }
 }

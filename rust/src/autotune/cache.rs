@@ -333,17 +333,38 @@ impl TuneCache {
     /// for a target card), observations all come from the serving host,
     /// so ranking them against each other is sound.
     pub fn observed_best(&self, spec_part: &str) -> Option<&TuneEntry> {
-        let prefix = format!("{spec_part}|{OBSERVED_STRATEGY}|");
-        self.entries
-            .range(prefix.clone()..)
-            .take_while(|(k, _)| k.starts_with(&prefix))
-            .map(|(_, e)| e)
-            .min_by(|a, b| a.micros.total_cmp(&b.micros))
+        self.observed_for(spec_part).into_iter().next()
     }
 
     /// Number of observation entries (serving evidence) in the cache.
     pub fn observed_count(&self) -> usize {
         self.entries.values().filter(|e| Self::is_observed(e)).count()
+    }
+
+    /// All observation entries for one spec shape, fastest first. The
+    /// `tlc tune --report` disagreement report walks this per shape.
+    pub fn observed_for(&self, spec_part: &str) -> Vec<&TuneEntry> {
+        let prefix = format!("{spec_part}|{OBSERVED_STRATEGY}|");
+        let mut v: Vec<&TuneEntry> = self
+            .entries
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, e)| e)
+            .collect();
+        v.sort_by(|a, b| a.micros.total_cmp(&b.micros));
+        v
+    }
+
+    /// Spec shapes (key prefixes) that have at least one observation.
+    pub fn observed_spec_parts(&self) -> Vec<String> {
+        let mut parts: Vec<String> = self
+            .entries
+            .values()
+            .filter(|e| Self::is_observed(e))
+            .filter_map(|e| e.key.split('|').next().map(str::to_string))
+            .collect();
+        parts.dedup(); // entries is a BTreeMap: same-shape keys are adjacent
+        parts
     }
 
     pub fn insert(&mut self, entry: TuneEntry) {
@@ -540,6 +561,24 @@ mod tests {
         assert_eq!(parsed.observed_count(), 1);
         assert_eq!(parsed.observed_best("shape").unwrap().cand, fast);
         assert_eq!(parsed.lookup_spec("shape").unwrap().cand.bm, 128);
+    }
+
+    #[test]
+    fn observed_for_ranks_fastest_first_per_shape() {
+        let mut c = TuneCache::new();
+        let slow = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let fast = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4 };
+        c.observe("shapeA", slow, 300.0);
+        c.observe("shapeA", fast, 100.0);
+        c.observe("shapeB", slow, 50.0);
+        c.insert(entry("shapeA|A100|pallas", 128)); // tuned entries excluded
+        let parts = c.observed_spec_parts();
+        assert_eq!(parts, vec!["shapeA".to_string(), "shapeB".to_string()]);
+        let ranked = c.observed_for("shapeA");
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].cand, fast);
+        assert_eq!(ranked[1].cand, slow);
+        assert!(c.observed_for("shapeC").is_empty());
     }
 
     #[test]

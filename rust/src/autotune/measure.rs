@@ -1,13 +1,20 @@
 //! Measured refinement: execute the TL code a candidate induces through
-//! the numeric interpreter ([`crate::verify::interp`]) on a reduced
+//! the compiled block engine ([`crate::verify::exec`]) on a reduced
 //! probe and time it on the host.
 //!
 //! This is the reproduction's stand-in for the paper's on-device
 //! benchmarking step (§3.2): the analytical model ranks the space, and —
 //! when [`super::AutotuneConfig::measure`] is on — candidates the model
 //! cannot separate are re-ranked by an actual execution. Wall-clock is
-//! inherently noisy, so measurement only ever breaks exact model ties;
+//! inherently noisy, so each probe takes a warm-up pass (caches, page
+//! faults, compile) followed by three timed runs and reports the
+//! **median**; measurement still only ever breaks exact model ties, and
 //! determinism-sensitive callers leave it off (the default).
+//!
+//! The probe runs `PROBE_BLOCKS` q-blocks (the pre-compiled-engine gate
+//! used 2 — the fast engine affords full-size tiles at 4 blocks, which
+//! separates schedules far better than a two-block sliver while staying
+//! O(ms) on the host) and keeps the causal block-skipping path hot.
 
 use std::time::{Duration, Instant};
 
@@ -16,13 +23,18 @@ use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::{self, profiles::LlmProfile};
 use crate::sketch::{self, spec::OpSpec};
 use crate::tl::ast::Stmt;
-use crate::verify::interp::run_attention;
+use crate::verify::exec::run_attention_threads;
 use crate::verify::tensor::Tensor2;
 
+/// Q-blocks per measured probe: `probe_rows = PROBE_BLOCKS * max(BM,
+/// BN)`.
+pub const PROBE_BLOCKS: usize = 4;
+
+/// Timed runs per probe (after one warm-up); the median is reported.
+pub const PROBE_SAMPLES: usize = 3;
+
 /// Interpret the candidate's kernel on a reduced probe and return the
-/// host wall-clock. Probe rows = `2 * max(BM, BN)` — the same reduction
-/// rule the verification gate uses, which keeps the causal
-/// block-skipping path exercised while staying O(ms) on the host.
+/// median host wall-clock of [`PROBE_SAMPLES`] runs after a warm-up.
 pub fn probe_wallclock(
     spec: &OpSpec,
     arch: &GpuArch,
@@ -30,7 +42,7 @@ pub fn probe_wallclock(
     seed: u64,
 ) -> Result<Duration, String> {
     let tiling = space::tiling_of(cand, spec, arch);
-    let probe_rows = 2 * tiling.bm.max(tiling.bn);
+    let probe_rows = PROBE_BLOCKS * tiling.bm.max(tiling.bn);
 
     let sketch = sketch::generate_sketch(spec);
     let reasoned =
@@ -50,16 +62,26 @@ pub fn probe_wallclock(
     let v = Tensor2::randn(probe_rows, spec.v_head_dim, seed + 2);
     let scale = 1.0 / (qk as f32).sqrt();
 
-    let t0 = Instant::now();
-    run_attention(&program, &q, &k, &v, scale)?;
-    Ok(t0.elapsed())
+    // Single-worker sweeps: candidates compare on serial execute cost,
+    // free of thread-spawn and scheduling jitter. The warm-up run pays
+    // the remaining one-off costs (cold caches, page faults) that must
+    // not decide tie-breaks; program lowering recurs per run but is
+    // AST-walk-cheap (µs) against the ms-scale probe.
+    run_attention_threads(&program, &q, &k, &v, scale, 1)?;
+    let mut times = [Duration::ZERO; PROBE_SAMPLES];
+    for t in &mut times {
+        let t0 = Instant::now();
+        run_attention_threads(&program, &q, &k, &v, scale, 1)?;
+        *t = t0.elapsed();
+    }
+    times.sort_unstable();
+    Ok(times[PROBE_SAMPLES / 2])
 }
 
 /// Among model-score ties, pick the candidate with the fastest measured
 /// probe; candidates whose probe fails to execute (e.g. indirect NSA
-/// addressing the interpreter's reduced probe cannot follow) keep their
-/// model ranking. Returns the winner (the first tie when nothing
-/// measures).
+/// addressing the reduced probe cannot follow) keep their model
+/// ranking. Returns the winner (the first tie when nothing measures).
 pub fn refine_ties(
     spec: &OpSpec,
     arch: &GpuArch,

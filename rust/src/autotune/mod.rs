@@ -190,7 +190,8 @@ pub fn best_candidate(spec: &OpSpec, arch: &GpuArch) -> Candidate {
 }
 
 /// `tlc tune`: search one operator (or the paper grids with `--grid`),
-/// persist winners, report cache behaviour.
+/// persist winners, report cache behaviour. `--report` instead prints
+/// the observed-vs-modeled disagreement per cached shape.
 pub fn cli_tune(args: &Args) -> Result<(), String> {
     let arch = GpuArch::from_cli(args)?;
     let target = Target::from_cli(args)?;
@@ -201,6 +202,11 @@ pub fn cli_tune(args: &Args) -> Result<(), String> {
     let strategy = SearchStrategy::parse(&strategy_name, seed)
         .ok_or_else(|| format!("unknown --strategy `{strategy_name}`"))?;
     let measure = args.get_bool("measure");
+    if args.get_bool("report") {
+        args.finish()?;
+        let cache = TuneCache::load(&cache_path).map_err(|e| format!("{e:#}"))?;
+        return cli_report(&cache, &cache_path, &arch, target);
+    }
 
     let specs: Vec<OpSpec> = if grid {
         let mut v = crate::workload::table1_grid(true);
@@ -242,6 +248,96 @@ pub fn cli_tune(args: &Args) -> Result<(), String> {
         tuner.cache().misses(),
         cache_path.display(),
     );
+    Ok(())
+}
+
+/// `tlc tune --report`: for every shape with serving observations,
+/// compare the measured-fastest variant (running-mean host latency from
+/// `TuneCache::observe`) against the `perfmodel::cost`-ranked search
+/// winner, and flag disagreements — the signal that the analytical model
+/// mis-ranks that shape and its calibration needs a look (ROADMAP PR-2
+/// follow-up).
+fn cli_report(
+    cache: &TuneCache,
+    path: &std::path::Path,
+    arch: &GpuArch,
+    target: Target,
+) -> Result<(), String> {
+    let backend = match target {
+        Target::Pallas => "pallas",
+        Target::Cute => "cute",
+    };
+    println!(
+        "observed-vs-modeled report over {} ({} entries, {} observed; model entries \
+         for {}|{backend}, any-arch fallback)",
+        path.display(),
+        cache.len(),
+        cache.observed_count(),
+        arch.name,
+    );
+    let parts = cache.observed_spec_parts();
+    if parts.is_empty() {
+        println!("no serving observations recorded yet — run `tlc serve` first");
+        return Ok(());
+    }
+    let (mut agree, mut disagree, mut unmodeled) = (0usize, 0usize, 0usize);
+    for part in &parts {
+        let observed = cache.observed_for(part);
+        // Compare against the entry tuned for the requested card when
+        // one exists; only fall back to the best any-arch entry.
+        let modeled = cache
+            .get(&format!("{part}|{}|{backend}", arch.name))
+            .or_else(|| cache.lookup_spec(part));
+        let winner = observed.first().expect("shape has at least one observation");
+        let status = match modeled {
+            Some(m)
+                if m.cand.bm == winner.cand.bm
+                    && m.cand.bn == winner.cand.bn
+                    && m.cand.split_k == winner.cand.split_k =>
+            {
+                agree += 1;
+                "AGREE   "
+            }
+            Some(_) => {
+                disagree += 1;
+                "DISAGREE"
+            }
+            None => {
+                unmodeled += 1;
+                "NO-MODEL"
+            }
+        };
+        println!("{status} {part}");
+        for (rank, e) in observed.iter().enumerate() {
+            println!(
+                "    observed #{:<2} {:<36} mean {:>9.1} us over {} batches",
+                rank + 1,
+                e.cand.to_string(),
+                e.micros,
+                e.evaluated,
+            );
+        }
+        match modeled {
+            Some(m) => println!(
+                "    modeled      {:<36} {:>14.1} us ({}, {} evaluated)",
+                m.cand.to_string(),
+                m.micros,
+                m.strategy,
+                m.evaluated,
+            ),
+            None => println!("    modeled      (no search entry for this shape)"),
+        }
+    }
+    println!(
+        "{} shapes: {agree} agree, {disagree} disagree, {unmodeled} without a model entry",
+        parts.len(),
+    );
+    if disagree > 0 {
+        println!(
+            "disagreements mean serving evidence overturned the cost model — \
+             `Registry::find_best` and the coordinator already prefer the observed winner"
+        );
+    }
     Ok(())
 }
 

@@ -419,8 +419,27 @@ impl Executor for PjrtExecutor {
 /// including the GQA/MQA head mapping (q-head `h` reads kv-head
 /// `h / group`). Padded slots are computed too — real executables pay
 /// for padding, so the reference must as well.
+///
+/// The `(slot, q-head)` sweep is embarrassingly parallel — every task
+/// reads shared Q/K/V slices and writes its own `seq * v_dim` output
+/// chunk — so it fans out over scoped threads
+/// ([`crate::verify::exec::par_chunks`]), bit-identical to the serial
+/// loop for any worker count. `threads` is the per-batch worker budget:
+/// the pool hands each shard `default_threads() / shards` so N
+/// concurrent shards never oversubscribe the host N-fold (0 = resolve
+/// the full machine budget, for standalone use).
 #[derive(Default)]
-pub struct ReferenceExecutor;
+pub struct ReferenceExecutor {
+    threads: usize,
+}
+
+impl ReferenceExecutor {
+    /// Executor with an explicit per-batch worker budget; 0 resolves
+    /// the full machine budget at execute time (same as `Default`).
+    pub fn with_threads(threads: usize) -> Self {
+        ReferenceExecutor { threads }
+    }
+}
 
 /// Bottom-right-aligned causal attention for rectangular (decode) shapes:
 /// query row `r` sits at absolute position `kv - seq + r` and attends
@@ -440,12 +459,12 @@ fn causal_rect_attention(
     let mut out = Tensor2 { rows: s, cols: vd, data: vec![0.0; s * vd] };
     for r in 0..s {
         let visible = offset + r + 1;
-        let qrow = Tensor2 { rows: 1, cols: d, data: qt.data[r * d..(r + 1) * d].to_vec() };
+        let qrow = Tensor2 { rows: 1, cols: d, data: qt.row(r).to_vec() };
         let ks = Tensor2 { rows: visible, cols: d, data: kt.data[..visible * d].to_vec() };
         let vs =
             Tensor2 { rows: visible, cols: vd, data: vt.data[..visible * vd].to_vec() };
         let o = reference_attention(&qrow, &ks, &vs, scale, false);
-        out.data[r * vd..(r + 1) * vd].copy_from_slice(&o.data);
+        out.row_mut(r).copy_from_slice(&o.data);
     }
     out
 }
@@ -475,34 +494,39 @@ impl Executor for ReferenceExecutor {
         {
             return Err("packed buffer size mismatch".to_string());
         }
+        debug_assert_eq!(on, fam.q_heads * s * vd, "out_len is (q_heads, seq, vd)");
         let mut out = vec![0.0f32; capacity * on];
-        for slot in 0..capacity {
-            for qh in 0..fam.q_heads {
-                let kh = qh / group;
-                let q_off = slot * qn + qh * s * d;
-                let k_off = slot * kn + kh * kvl * d;
-                let v_off = slot * vn + kh * kvl * vd;
-                let qt =
-                    Tensor2 { rows: s, cols: d, data: q[q_off..q_off + s * d].to_vec() };
-                let kt = Tensor2 {
-                    rows: kvl,
-                    cols: d,
-                    data: k[k_off..k_off + kvl * d].to_vec(),
-                };
-                let vt = Tensor2 {
-                    rows: kvl,
-                    cols: vd,
-                    data: v[v_off..v_off + kvl * vd].to_vec(),
-                };
-                let o = if fam.causal && s < kvl {
-                    causal_rect_attention(&qt, &kt, &vt, scale)
-                } else {
-                    reference_attention(&qt, &kt, &vt, scale, fam.causal)
-                };
-                let o_off = slot * on + qh * s * vd;
-                out[o_off..o_off + s * vd].copy_from_slice(&o.data);
-            }
-        }
+        // One task per (slot, q-head); task t writes out chunk t — the
+        // chunks are contiguous because out is laid out slot-major,
+        // head-minor. Fanned out over scoped workers within this
+        // shard's thread budget.
+        let threads = if self.threads > 0 {
+            self.threads
+        } else {
+            crate::verify::exec::default_threads()
+        };
+        crate::verify::exec::par_chunks(&mut out, s * vd, threads, |task, chunk| {
+            let (slot, qh) = (task / fam.q_heads, task % fam.q_heads);
+            let kh = qh / group;
+            let q_off = slot * qn + qh * s * d;
+            let k_off = slot * kn + kh * kvl * d;
+            let v_off = slot * vn + kh * kvl * vd;
+            let qt = Tensor2 { rows: s, cols: d, data: q[q_off..q_off + s * d].to_vec() };
+            let kt =
+                Tensor2 { rows: kvl, cols: d, data: k[k_off..k_off + kvl * d].to_vec() };
+            let vt = Tensor2 {
+                rows: kvl,
+                cols: vd,
+                data: v[v_off..v_off + kvl * vd].to_vec(),
+            };
+            let o = if fam.causal && s < kvl {
+                causal_rect_attention(&qt, &kt, &vt, scale)
+            } else {
+                reference_attention(&qt, &kt, &vt, scale, fam.causal)
+            };
+            chunk.copy_from_slice(&o.data);
+            Ok(())
+        })?;
         Ok(out)
     }
 
@@ -647,6 +671,9 @@ impl ExecutorPool {
         tune_path: Option<PathBuf>,
     ) -> Result<Self> {
         let shards = shards.max(1);
+        // Reference shards split the machine's compute-thread budget so
+        // N concurrent shards don't oversubscribe the host N-fold.
+        let ref_threads = (crate::verify::exec::default_threads() / shards).max(1);
         let topology = Arc::new(topology);
         let router = Arc::new(Mutex::new(Router::new(shards)));
         let tune = Arc::new(Mutex::new(tune));
@@ -673,7 +700,9 @@ impl ExecutorPool {
                                 return;
                             }
                         },
-                        ExecutorSpec::Reference => Box::<ReferenceExecutor>::default(),
+                        ExecutorSpec::Reference => {
+                            Box::new(ReferenceExecutor::with_threads(ref_threads))
+                        }
                         ExecutorSpec::Custom(f) => match f(shard) {
                             Ok(e) => e,
                             Err(e) => {

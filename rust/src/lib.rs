@@ -15,10 +15,13 @@
 //!    ([`translate`]): a runnable Pallas kernel (TPU adaptation) or a
 //!    CuTe-like CUDA rendering (as in the paper).
 //!
-//! Around the pipeline this crate provides the verifier and numeric TL
-//! interpreter ([`verify`]), the analytical GPU performance model used to
-//! regenerate the paper's tables ([`perfmodel`]), the PJRT runtime that
-//! loads AOT-compiled artifacts ([`runtime`]), and the serving coordinator
+//! Around the pipeline this crate provides the verifier and the
+//! compiled, parallel numeric TL engine ([`verify`] — TL lowers once to
+//! a slot-indexed block program and sweeps q-blocks across scoped
+//! threads, bit-identical to the legacy statement walker it replaced),
+//! the analytical GPU performance model used to regenerate the paper's
+//! tables ([`perfmodel`]), the PJRT runtime that loads AOT-compiled
+//! artifacts ([`runtime`]), and the serving coordinator
 //! ([`coordinator`]).
 //!
 //! The paper's *self-optimizing* loop — candidate schedules searched and

@@ -63,6 +63,9 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
   tune         [operator flags] [--target ...] [--backend pallas|cute]
                [--grid] [--strategy auto|exhaustive|beam|greedy] [--seed N]
                [--measure] [--cache tune_cache.txt]
+               --report prints observed-vs-modeled disagreement per
+               cached shape (serving-mean latency vs cost-model rank)
+               instead of tuning
   serve        [--artifacts artifacts] [--requests N] [--rate-hz F]
                [--window-ms N] [--seed N] [--shards N] [--decode-frac F]
                [--executor pjrt|reference] [--kv-budget-mb N]

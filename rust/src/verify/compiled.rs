@@ -1,0 +1,1294 @@
+//! Compile-once execution engine for TL block programs.
+//!
+//! The legacy walker ([`super::interp`]) re-interprets the TL AST for
+//! every thread block: `BTreeMap` name lookups on every tensor access,
+//! per-statement `Expr::eval` over a string-keyed environment, and a
+//! fresh allocation for every tile it touches. This module lowers a
+//! [`TlProgram`] **once** into a [`CompiledBlockProgram`]:
+//!
+//! * tensor names resolve to dense slot indices ([`SlotId`]) at compile
+//!   time, following the same register → shared → global lookup order
+//!   the hardware (and the walker) uses *at the program point of each
+//!   read*;
+//! * shapes are pre-evaluated against the program's `param` bindings, so
+//!   every op carries concrete `m`/`n`/`k`/`rows`/`cols`;
+//! * integer expressions constant-fold; only genuinely runtime values
+//!   (`block_idx`, loop counters) survive as [`CExpr::Var`] slots in a
+//!   dense `i64` array;
+//! * copy / compute / online-softmax statements specialize into the
+//!   [`Op`] list executed against a reusable [`TileArena`] — pre-sized
+//!   buffers, zero allocations in the steady state.
+//!
+//! Every FLOP routes through the kernels in [`super::tensor`]
+//! ([`tensor::matmul_into`], [`tensor::row_max_into`], ...), which the
+//! legacy walker shares via [`super::tensor::Tensor2`]'s methods — that
+//! is what makes the two engines **bit-identical** (enforced by
+//! `tests/compiled_interp.rs`).
+//!
+//! Thread-safety: executing a block needs only `&CompiledBlockProgram`,
+//! read-only input globals, a `&mut` window of the output global, and a
+//! worker-private [`TileArena`]. When every `Store` targets the block's
+//! own rows (`[L = block_idx]`, see
+//! [`CompiledBlockProgram::block_local_store`]) the host can hand each
+//! worker a disjoint output chunk — [`super::exec`] builds the parallel
+//! sweep on exactly that property.
+
+use std::collections::BTreeMap;
+
+use crate::tl::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
+use crate::tl::expr::{BinOp, Expr};
+use crate::tl::types::MemSpace;
+
+use super::tensor::{self, MASK_VALUE};
+
+/// Dense index of a tile buffer in the [`TileArena`].
+pub type SlotId = usize;
+/// Dense index of a read-only input global.
+pub type GlobalId = usize;
+
+/// Runtime-variable slot reserved for `block_idx`.
+const VAR_BLOCK_IDX: usize = 0;
+
+/// A full-size global tensor the block program reads or writes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GlobalMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Compiled integer expression: constants folded at compile time,
+/// runtime symbols resolved to dense indices into [`TileArena`]'s `vars`.
+#[derive(Debug, Clone)]
+enum CExpr {
+    Const(i64),
+    Var(usize),
+    Bin(BinOp, Box<CExpr>, Box<CExpr>),
+}
+
+fn fold(op: BinOp, a: i64, b: i64) -> Result<i64, String> {
+    Ok(match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => {
+            if b == 0 {
+                return Err("division by zero".to_string());
+            }
+            a.div_euclid(b)
+        }
+    })
+}
+
+impl CExpr {
+    fn eval(&self, vars: &[i64]) -> Result<i64, String> {
+        match self {
+            CExpr::Const(v) => Ok(*v),
+            CExpr::Var(i) => Ok(vars[*i]),
+            CExpr::Bin(op, a, b) => fold(*op, a.eval(vars)?, b.eval(vars)?),
+        }
+    }
+}
+
+/// Elementwise arithmetic kinds (the compiled form of the TL arithmetic
+/// `Compute` ops plus `Max`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Arith {
+    Mul,
+    Add,
+    Sub,
+    Div,
+    Max,
+}
+
+impl Arith {
+    #[inline]
+    fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            Arith::Mul => a * b,
+            Arith::Add => a + b,
+            Arith::Sub => a - b,
+            Arith::Div => a / b,
+            Arith::Max => a.max(b),
+        }
+    }
+
+    fn of(op: &ComputeOp) -> Option<Arith> {
+        match op {
+            ComputeOp::Multiply => Some(Arith::Mul),
+            ComputeOp::Add => Some(Arith::Add),
+            ComputeOp::Subtract => Some(Arith::Sub),
+            ComputeOp::Divide => Some(Arith::Div),
+            _ => None,
+        }
+    }
+}
+
+/// One specialized instruction of the compiled block program. Slot
+/// operands are direct indices; all shapes are concrete.
+#[derive(Debug, Clone)]
+enum Op {
+    /// Zero-initialize a tile (`Allocate` in shared/register space).
+    Zero { slot: SlotId, len: usize },
+    /// Global → tile: `rows` rows at block coordinate `l`.
+    Load { global: GlobalId, slot: SlotId, rows: usize, cols: usize, l: CExpr },
+    /// Tile → the (single) output global at block coordinate `l`.
+    Store { slot: SlotId, rows: usize, cols: usize, l: CExpr },
+    /// Whole-tile shared ↔ register move.
+    Move { src: SlotId, dst: SlotId, len: usize },
+    /// GEMM through [`tensor::matmul_into`]. `scratch` holds the product
+    /// when accumulating (or when `out` aliases an input), so the
+    /// accumulate add runs in the walker's exact order: full product
+    /// first, then one elementwise `+=`.
+    Gemm {
+        a: SlotId,
+        b: SlotId,
+        out: SlotId,
+        scratch: Option<SlotId>,
+        m: usize,
+        n: usize,
+        k: usize,
+        ta: bool,
+        tb: bool,
+        accumulate: bool,
+    },
+    /// `out[i] = op(a[i], scalar)`.
+    MapScalar { op: Arith, a: SlotId, scalar: usize, out: SlotId, len: usize },
+    /// `out[r][c] = op(a[r][c], b[r])` — `b` is a `(rows, 1)` stat tile.
+    MapBroadcast { op: Arith, a: SlotId, b: SlotId, out: SlotId, rows: usize, cols: usize },
+    /// `out[i] = op(a[i], b[i])`.
+    MapElem { op: Arith, a: SlotId, b: SlotId, out: SlotId, len: usize },
+    /// `out[i] = exp(a[i])`.
+    Exp { a: SlotId, out: SlotId, len: usize },
+    RowMax { a: SlotId, out: SlotId, rows: usize, cols: usize },
+    RowSum { a: SlotId, out: SlotId, rows: usize, cols: usize },
+    /// Mask `kpos > qpos` entries to [`MASK_VALUE`], with `qpos = lq *
+    /// rows + r`, `kpos = lk * cols + c` (row-sliced: the mask boundary
+    /// is computed per row instead of comparing per element).
+    CausalMask { s: SlotId, rows: usize, cols: usize, lq: CExpr, lk: CExpr },
+    /// FlashAttention online-softmax block update (see
+    /// [`super::interp::Interp`]'s `exec_online_softmax` for the
+    /// recurrence); `acc` carries the 3-name form's rescaled accumulator.
+    OnlineSoftmax {
+        s: SlotId,
+        rows: usize,
+        cols: usize,
+        m: SlotId,
+        l: SlotId,
+        l_rows: usize,
+        /// 3-name form accumulator: `(slot, rows, cols)`.
+        acc: Option<(SlotId, usize, usize)>,
+    },
+    /// Plain per-block softmax (no running stats).
+    LocalSoftmax { s: SlotId, rows: usize, cols: usize },
+    For { var: usize, start: CExpr, end: CExpr, body: Vec<Op> },
+    If { lhs: CExpr, cmp: CmpOp, rhs: CExpr, body: Vec<Op> },
+}
+
+/// Reusable per-worker execution state: one pre-sized buffer per slot,
+/// four row-stat scratch vectors, and the runtime integer variables.
+/// Created once per worker ([`CompiledBlockProgram::new_arena`]) and
+/// reused across blocks — the steady state performs no allocations.
+pub struct TileArena {
+    bufs: Vec<Vec<f32>>,
+    scratch: Vec<Vec<f32>>,
+    vars: Vec<i64>,
+}
+
+/// A [`TlProgram`] lowered to slot-indexed ops (see module docs).
+#[derive(Debug, Clone)]
+pub struct CompiledBlockProgram {
+    pub name: String,
+    inputs: Vec<GlobalMeta>,
+    output: Option<GlobalMeta>,
+    /// Buffer capacity (elements) per slot.
+    slots: Vec<usize>,
+    ops: Vec<Op>,
+    n_vars: usize,
+    max_rows: usize,
+    n_scalars: usize,
+    block_local_store: bool,
+    store_rows: Option<usize>,
+}
+
+/// Compile with the standard host bindings of the attention drivers
+/// (`head_idx`/`q_offset`/`kv_offset` = 0; `block_idx` runtime; the one
+/// scalar symbol `softmax_scale`).
+pub fn compile(program: &TlProgram) -> Result<CompiledBlockProgram, String> {
+    let mut statics = BTreeMap::new();
+    for name in ["head_idx", "q_offset", "kv_offset"] {
+        statics.insert(name.to_string(), 0i64);
+    }
+    compile_with(program, statics, &["softmax_scale"])
+}
+
+/// Compile against explicit static bindings and scalar symbol names.
+/// `block_idx` is always the runtime block coordinate; names in
+/// `scalar_names` become indices into the `scalars` argument of
+/// [`CompiledBlockProgram::execute_block`].
+pub fn compile_with(
+    program: &TlProgram,
+    statics: BTreeMap<String, i64>,
+    scalar_names: &[&str],
+) -> Result<CompiledBlockProgram, String> {
+    let mut c = Compiler {
+        statics,
+        vars: BTreeMap::new(),
+        n_vars: 1,
+        slots: Vec::new(),
+        shapes: Vec::new(),
+        regs: BTreeMap::new(),
+        shared: BTreeMap::new(),
+        globals_decl: BTreeMap::new(),
+        inputs: Vec::new(),
+        input_ids: BTreeMap::new(),
+        output: None,
+        scalars: BTreeMap::new(),
+        max_rows: 1,
+        block_local_store: true,
+        store_rows: None,
+    };
+    c.vars.insert("block_idx".to_string(), VAR_BLOCK_IDX);
+    for (i, s) in scalar_names.iter().enumerate() {
+        c.scalars.insert(s.to_string(), i);
+    }
+    let ops = c.block(&program.stmts)?;
+    Ok(CompiledBlockProgram {
+        name: program.name.clone(),
+        block_local_store: c.block_local_store && c.output.is_some(),
+        inputs: c.inputs,
+        output: c.output,
+        slots: c.slots,
+        ops,
+        n_vars: c.n_vars,
+        max_rows: c.max_rows,
+        n_scalars: scalar_names.len(),
+        store_rows: c.store_rows,
+    })
+}
+
+struct Compiler {
+    /// Compile-time integer environment: `param` bindings + host statics.
+    statics: BTreeMap<String, i64>,
+    /// Runtime integer variables (block_idx, loop counters) → var index.
+    vars: BTreeMap<String, usize>,
+    n_vars: usize,
+    slots: Vec<usize>,
+    /// Logical shape of each slot at the current program point.
+    shapes: Vec<(usize, usize)>,
+    regs: BTreeMap<String, SlotId>,
+    shared: BTreeMap<String, SlotId>,
+    /// `Allocate ... in global` declarations: name → (rows, cols).
+    globals_decl: BTreeMap<String, (usize, usize)>,
+    inputs: Vec<GlobalMeta>,
+    input_ids: BTreeMap<String, GlobalId>,
+    output: Option<GlobalMeta>,
+    scalars: BTreeMap<String, usize>,
+    max_rows: usize,
+    block_local_store: bool,
+    store_rows: Option<usize>,
+}
+
+impl Compiler {
+    fn cexpr(&self, e: &Expr) -> Result<CExpr, String> {
+        Ok(match e {
+            Expr::Int(v) => CExpr::Const(*v),
+            Expr::Sym(s) => {
+                if let Some(&i) = self.vars.get(s) {
+                    CExpr::Var(i)
+                } else if let Some(&v) = self.statics.get(s) {
+                    CExpr::Const(v)
+                } else {
+                    return Err(format!("unbound symbol `{s}`"));
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                let a = self.cexpr(a)?;
+                let b = self.cexpr(b)?;
+                if let (CExpr::Const(x), CExpr::Const(y)) = (&a, &b) {
+                    CExpr::Const(fold(*op, *x, *y)?)
+                } else {
+                    CExpr::Bin(*op, Box::new(a), Box::new(b))
+                }
+            }
+        })
+    }
+
+    fn eval_shape(&self, shape: &[Expr]) -> Result<(usize, usize), String> {
+        match shape {
+            [r] => Ok((r.eval(&self.statics)? as usize, 1)),
+            [r, c] => {
+                Ok((r.eval(&self.statics)? as usize, c.eval(&self.statics)? as usize))
+            }
+            other => Err(format!("unsupported rank-{} shape", other.len())),
+        }
+    }
+
+    /// Define (or redefine) the tile slot for `name` at `space`.
+    fn def_slot(
+        &mut self,
+        name: &str,
+        space: MemSpace,
+        rows: usize,
+        cols: usize,
+    ) -> Result<SlotId, String> {
+        self.max_rows = self.max_rows.max(rows);
+        let map = match space {
+            MemSpace::Register => &mut self.regs,
+            MemSpace::Shared => &mut self.shared,
+            MemSpace::Global => {
+                return Err(format!("`{name}` cannot be defined as a tile in global memory"))
+            }
+        };
+        match map.get(name).copied() {
+            Some(id) => {
+                self.slots[id] = self.slots[id].max(rows * cols);
+                self.shapes[id] = (rows, cols);
+                Ok(id)
+            }
+            None => {
+                let id = self.slots.len();
+                map.insert(name.to_string(), id);
+                self.slots.push(rows * cols);
+                self.shapes.push((rows, cols));
+                Ok(id)
+            }
+        }
+    }
+
+    /// Fresh unnamed slot (GEMM product scratch).
+    fn anon_slot(&mut self, rows: usize, cols: usize) -> SlotId {
+        self.max_rows = self.max_rows.max(rows);
+        let id = self.slots.len();
+        self.slots.push(rows * cols);
+        self.shapes.push((rows, cols));
+        id
+    }
+
+    /// Operand lookup in the walker's order: registers, then shared.
+    /// (Compute on a tensor that only exists in global memory is not
+    /// supported by the compiled engine; generated TL always copies into
+    /// a tile first.)
+    fn read_slot(&self, name: &str) -> Result<SlotId, String> {
+        self.regs.get(name).or_else(|| self.shared.get(name)).copied().ok_or_else(|| {
+            if self.globals_decl.contains_key(name) {
+                format!("`{name}` is only materialized in global memory; the compiled engine computes on tiles")
+            } else {
+                format!("tensor `{name}` not materialized at any level")
+            }
+        })
+    }
+
+    fn space_slot(&self, name: &str, space: MemSpace) -> Option<SlotId> {
+        match space {
+            MemSpace::Register => self.regs.get(name).copied(),
+            MemSpace::Shared => self.shared.get(name).copied(),
+            MemSpace::Global => None,
+        }
+    }
+
+    fn shape(&self, id: SlotId) -> (usize, usize) {
+        self.shapes[id]
+    }
+
+    fn coord_cexpr(&self, coord: &[(String, Expr)], name: &str) -> Result<CExpr, String> {
+        match coord.iter().find(|(n, _)| n == name) {
+            Some((_, e)) => self.cexpr(e),
+            None => Err(format!("missing coordinate `{name}`")),
+        }
+    }
+
+    fn block(&mut self, stmts: &[Stmt]) -> Result<Vec<Op>, String> {
+        let mut ops = Vec::new();
+        for s in stmts {
+            self.stmt(s, &mut ops)?;
+        }
+        Ok(ops)
+    }
+
+    fn stmt(&mut self, s: &Stmt, ops: &mut Vec<Op>) -> Result<(), String> {
+        match s {
+            Stmt::Param { name, value } => {
+                self.statics.insert(name.clone(), *value);
+                Ok(())
+            }
+            Stmt::Allocate { name, space, shape, .. } => {
+                let (r, c) = self.eval_shape(shape)?;
+                if *space == MemSpace::Global {
+                    self.globals_decl.insert(name.clone(), (r, c));
+                } else {
+                    let id = self.def_slot(name, *space, r, c)?;
+                    ops.push(Op::Zero { slot: id, len: r * c });
+                }
+                Ok(())
+            }
+            Stmt::Copy { tensor, shape, coord, src, dst } => {
+                self.copy(tensor, shape.as_deref(), coord, *src, *dst, ops)
+            }
+            Stmt::Compute { op, inputs, coord, with, output, accumulate, .. } => {
+                self.compute(op, inputs, coord, with, output.as_deref(), *accumulate, ops)
+            }
+            // Fragment-layout change: identity on values (as in the walker).
+            Stmt::Reshape { .. } => Ok(()),
+            Stmt::For { var, start, end, body } => {
+                let start = self.cexpr(start)?;
+                let end = self.cexpr(end)?;
+                let idx = self.n_vars;
+                self.n_vars += 1;
+                let prev = self.vars.insert(var.clone(), idx);
+                let body_ops = self.block(body)?;
+                match prev {
+                    Some(p) => {
+                        self.vars.insert(var.clone(), p);
+                    }
+                    None => {
+                        self.vars.remove(var);
+                    }
+                }
+                ops.push(Op::For { var: idx, start, end, body: body_ops });
+                Ok(())
+            }
+            Stmt::If { lhs, op, rhs, body } => {
+                let lhs = self.cexpr(lhs)?;
+                let rhs = self.cexpr(rhs)?;
+                let body_ops = self.block(body)?;
+                ops.push(Op::If { lhs, cmp: *op, rhs, body: body_ops });
+                Ok(())
+            }
+        }
+    }
+
+    fn copy(
+        &mut self,
+        tensor: &str,
+        shape: Option<&[Expr]>,
+        coord: &[(String, Expr)],
+        src: MemSpace,
+        dst: MemSpace,
+        ops: &mut Vec<Op>,
+    ) -> Result<(), String> {
+        if src == dst {
+            return Err(format!("copy of `{tensor}` with identical src/dst"));
+        }
+        let l = match coord.iter().find(|(n, _)| n == "L") {
+            Some((_, e)) => Some(self.cexpr(e)?),
+            None => None,
+        };
+        match (src, dst) {
+            (MemSpace::Global, _) => {
+                let rows = match shape {
+                    Some(sh) => self.eval_shape(sh)?.0,
+                    None => return Err(format!("global copy of `{tensor}` missing shape")),
+                };
+                let l = l.ok_or_else(|| format!("global copy of `{tensor}` missing L"))?;
+                let &(grows, gcols) = self
+                    .globals_decl
+                    .get(tensor)
+                    .ok_or_else(|| format!("global tensor `{tensor}` missing"))?;
+                if self.output.as_ref().is_some_and(|o| o.name == tensor) {
+                    return Err(format!(
+                        "global `{tensor}` is both loaded and stored; the compiled \
+                         engine needs a write-only output"
+                    ));
+                }
+                let gid = match self.input_ids.get(tensor).copied() {
+                    Some(g) => g,
+                    None => {
+                        let g = self.inputs.len();
+                        self.inputs.push(GlobalMeta {
+                            name: tensor.to_string(),
+                            rows: grows,
+                            cols: gcols,
+                        });
+                        self.input_ids.insert(tensor.to_string(), g);
+                        g
+                    }
+                };
+                let slot = self.def_slot(tensor, dst, rows, gcols)?;
+                ops.push(Op::Load { global: gid, slot, rows, cols: gcols, l });
+                Ok(())
+            }
+            (_, MemSpace::Global) => {
+                let sid = self
+                    .space_slot(tensor, src)
+                    .ok_or_else(|| format!("`{tensor}` not in {src} for store to global"))?;
+                let l = l.ok_or_else(|| format!("store of `{tensor}` missing L"))?;
+                let &(grows, gcols) = self
+                    .globals_decl
+                    .get(tensor)
+                    .ok_or_else(|| format!("global tensor `{tensor}` missing"))?;
+                if self.input_ids.contains_key(tensor) {
+                    return Err(format!(
+                        "global `{tensor}` is both loaded and stored; the compiled \
+                         engine needs a write-only output"
+                    ));
+                }
+                match &self.output {
+                    Some(o) if o.name != tensor => {
+                        return Err(format!(
+                            "compiled engine supports a single global output \
+                             (`{}` and `{tensor}` both stored)",
+                            o.name
+                        ))
+                    }
+                    Some(_) => {}
+                    None => {
+                        self.output = Some(GlobalMeta {
+                            name: tensor.to_string(),
+                            rows: grows,
+                            cols: gcols,
+                        });
+                    }
+                }
+                let (trows, tcols) = self.shape(sid);
+                if tcols != gcols {
+                    return Err(format!(
+                        "store of `{tensor}`: tile has {tcols} cols but global has {gcols}"
+                    ));
+                }
+                // Parallel-sweep eligibility: every store must target the
+                // block's own rows with a consistent tile height.
+                if !matches!(l, CExpr::Var(VAR_BLOCK_IDX)) {
+                    self.block_local_store = false;
+                }
+                match self.store_rows {
+                    None => self.store_rows = Some(trows),
+                    Some(r) if r != trows => self.block_local_store = false,
+                    _ => {}
+                }
+                ops.push(Op::Store { slot: sid, rows: trows, cols: tcols, l });
+                Ok(())
+            }
+            _ => {
+                let sid = self
+                    .space_slot(tensor, src)
+                    .ok_or_else(|| format!("`{tensor}` not in {src}"))?;
+                let (r, c) = self.shape(sid);
+                let did = self.def_slot(tensor, dst, r, c)?;
+                ops.push(Op::Move { src: sid, dst: did, len: r * c });
+                Ok(())
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn compute(
+        &mut self,
+        op: &ComputeOp,
+        inputs: &[TensorRef],
+        coord: &[(String, Expr)],
+        with: &[String],
+        output: Option<&str>,
+        accumulate: bool,
+        ops: &mut Vec<Op>,
+    ) -> Result<(), String> {
+        match op {
+            ComputeOp::Gemm => {
+                if inputs.len() != 2 {
+                    return Err("GEMM needs exactly two inputs".to_string());
+                }
+                let a = self.read_slot(&inputs[0].name)?;
+                let b = self.read_slot(&inputs[1].name)?;
+                let (ar, ac) = self.shape(a);
+                let (br, bc) = self.shape(b);
+                let (ta, tb) = (inputs[0].transposed, inputs[1].transposed);
+                let (m, k1) = if ta { (ac, ar) } else { (ar, ac) };
+                let (k2, n) = if tb { (bc, br) } else { (br, bc) };
+                if k1 != k2 {
+                    return Err(format!(
+                        "GEMM contraction mismatch: ({m}x{k1}) @ ({k2}x{n}) [ta={ta} tb={tb}]"
+                    ));
+                }
+                let out_name = output.ok_or("GEMM without output")?;
+                if accumulate {
+                    let out = self
+                        .regs
+                        .get(out_name)
+                        .copied()
+                        .ok_or_else(|| format!("accumulator `{out_name}` not allocated"))?;
+                    let (orows, ocols) = self.shape(out);
+                    if (orows, ocols) != (m, n) {
+                        return Err(format!(
+                            "accumulate shape mismatch: `{out_name}` is {orows}x{ocols}, \
+                             GEMM produced {m}x{n}"
+                        ));
+                    }
+                    let scratch = self.anon_slot(m, n);
+                    ops.push(Op::Gemm {
+                        a,
+                        b,
+                        out,
+                        scratch: Some(scratch),
+                        m,
+                        n,
+                        k: k1,
+                        ta,
+                        tb,
+                        accumulate: true,
+                    });
+                } else {
+                    let out = self.def_slot(out_name, MemSpace::Register, m, n)?;
+                    let scratch =
+                        if out == a || out == b { Some(self.anon_slot(m, n)) } else { None };
+                    ops.push(Op::Gemm {
+                        a,
+                        b,
+                        out,
+                        scratch,
+                        m,
+                        n,
+                        k: k1,
+                        ta,
+                        tb,
+                        accumulate: false,
+                    });
+                }
+                Ok(())
+            }
+            ComputeOp::Softmax => {
+                let s0 = inputs.first().ok_or("Softmax without input")?;
+                self.softmax(&s0.name, with, ops)
+            }
+            ComputeOp::CausalMask => {
+                let s0 = inputs.first().ok_or("CausalMask without input")?;
+                let lq = self.coord_cexpr(coord, "Lq")?;
+                let lk = self.coord_cexpr(coord, "Lk")?;
+                let s = self
+                    .regs
+                    .get(&s0.name)
+                    .copied()
+                    .ok_or_else(|| format!("`{}` not in registers for mask", s0.name))?;
+                let (rows, cols) = self.shape(s);
+                ops.push(Op::CausalMask { s, rows, cols, lq, lk });
+                Ok(())
+            }
+            ComputeOp::Multiply | ComputeOp::Add | ComputeOp::Subtract | ComputeOp::Divide => {
+                let arith = Arith::of(op).expect("arithmetic op");
+                let a0 = inputs.first().ok_or("arithmetic op without input")?;
+                let b0 = inputs.get(1).ok_or("arithmetic op without second operand")?;
+                let a = self.read_slot(&a0.name)?;
+                let (rows, cols) = self.shape(a);
+                let out_name = output.unwrap_or(&a0.name);
+                if let Some(&scalar) = self.scalars.get(&b0.name) {
+                    let out = self.def_slot(out_name, MemSpace::Register, rows, cols)?;
+                    ops.push(Op::MapScalar { op: arith, a, scalar, out, len: rows * cols });
+                    return Ok(());
+                }
+                let b = self.read_slot(&b0.name)?;
+                let (brows, bcols) = self.shape(b);
+                if bcols == 1 && brows == rows {
+                    // Row-broadcast (rows, 1) operand.
+                    let out = self.def_slot(out_name, MemSpace::Register, rows, cols)?;
+                    ops.push(Op::MapBroadcast { op: arith, a, b, out, rows, cols });
+                } else if (brows, bcols) == (rows, cols) {
+                    let out = self.def_slot(out_name, MemSpace::Register, rows, cols)?;
+                    ops.push(Op::MapElem { op: arith, a, b, out, len: rows * cols });
+                } else {
+                    return Err(format!(
+                        "elementwise shape mismatch: {rows}x{cols} vs {brows}x{bcols}"
+                    ));
+                }
+                Ok(())
+            }
+            ComputeOp::Exp => {
+                let a0 = inputs.first().ok_or("Exp without input")?;
+                let a = self.read_slot(&a0.name)?;
+                let (rows, cols) = self.shape(a);
+                let out =
+                    self.def_slot(output.unwrap_or(&a0.name), MemSpace::Register, rows, cols)?;
+                ops.push(Op::Exp { a, out, len: rows * cols });
+                Ok(())
+            }
+            ComputeOp::RowMax | ComputeOp::RowSum => {
+                let is_max = matches!(op, ComputeOp::RowMax);
+                let a0 = inputs.first().ok_or("row reduction without input")?;
+                let a = self.read_slot(&a0.name)?;
+                let (rows, cols) = self.shape(a);
+                let out_name =
+                    output.ok_or(if is_max { "RowMax without output" } else { "RowSum without output" })?;
+                let out = self.def_slot(out_name, MemSpace::Register, rows, 1)?;
+                if out == a {
+                    return Err(format!("row reduction output `{out_name}` aliases its input"));
+                }
+                ops.push(if is_max {
+                    Op::RowMax { a, out, rows, cols }
+                } else {
+                    Op::RowSum { a, out, rows, cols }
+                });
+                Ok(())
+            }
+            ComputeOp::Max => {
+                let a0 = inputs.first().ok_or("Max without input")?;
+                let b0 = inputs.get(1).ok_or("Max without second operand")?;
+                let a = self.read_slot(&a0.name)?;
+                let b = self.read_slot(&b0.name)?;
+                let (rows, cols) = self.shape(a);
+                if self.shape(b) != (rows, cols) {
+                    return Err("Max shape mismatch".to_string());
+                }
+                let out =
+                    self.def_slot(output.unwrap_or(&a0.name), MemSpace::Register, rows, cols)?;
+                ops.push(Op::MapElem { op: Arith::Max, a, b, out, len: rows * cols });
+                Ok(())
+            }
+            ComputeOp::Other(name) => Err(format!("unknown custom compute op `{name}`")),
+        }
+    }
+
+    fn softmax(&mut self, s_name: &str, with: &[String], ops: &mut Vec<Op>) -> Result<(), String> {
+        let s = self
+            .regs
+            .get(s_name)
+            .copied()
+            .ok_or_else(|| format!("`{s_name}` not in registers for softmax"))?;
+        let (rows, cols) = self.shape(s);
+        if with.len() < 2 {
+            ops.push(Op::LocalSoftmax { s, rows, cols });
+            return Ok(());
+        }
+        let (m_name, l_name) = (&with[0], &with[1]);
+        let m = self
+            .regs
+            .get(m_name.as_str())
+            .copied()
+            .ok_or_else(|| format!("running max `{m_name}` not allocated"))?;
+        let (mrows, _) = self.shape(m);
+        if mrows != rows {
+            return Err(format!("running max rows {mrows} != S rows {rows}"));
+        }
+        let l = self
+            .regs
+            .get(l_name.as_str())
+            .copied()
+            .ok_or_else(|| format!("running sum `{l_name}` not allocated"))?;
+        let (l_rows, _) = self.shape(l);
+        if l_rows > rows {
+            return Err(format!("running sum rows {l_rows} exceed S rows {rows}"));
+        }
+        let acc = match with.get(2) {
+            Some(acc_name) => {
+                let a = self
+                    .regs
+                    .get(acc_name.as_str())
+                    .copied()
+                    .ok_or_else(|| format!("accumulator `{acc_name}` not allocated"))?;
+                let (arows, acols) = self.shape(a);
+                if arows > rows {
+                    return Err(format!("accumulator rows {arows} exceed S rows {rows}"));
+                }
+                Some((a, arows, acols))
+            }
+            None => None,
+        };
+        ops.push(Op::OnlineSoftmax { s, rows, cols, m, l, l_rows, acc });
+        Ok(())
+    }
+}
+
+/// Validate `0 <= l` and `(l + 1) * rows <= total`; returns `l * rows`.
+fn block_start(l: i64, rows: usize, total: usize) -> Option<usize> {
+    if l < 0 {
+        return None;
+    }
+    let l = l as usize;
+    match l.checked_add(1).and_then(|x| x.checked_mul(rows)) {
+        Some(end) if end <= total => Some(l * rows),
+        _ => None,
+    }
+}
+
+impl CompiledBlockProgram {
+    /// Read-only input globals, in first-load order.
+    pub fn inputs(&self) -> &[GlobalMeta] {
+        &self.inputs
+    }
+
+    /// The single written global, if the program stores one.
+    pub fn output(&self) -> Option<&GlobalMeta> {
+        self.output.as_ref()
+    }
+
+    /// True when every `Store` targets `[L = block_idx]` with one
+    /// consistent tile height — the property that lets the host hand
+    /// each block a disjoint `&mut` window of the output.
+    pub fn block_local_store(&self) -> bool {
+        self.block_local_store
+    }
+
+    /// The common store-tile height (output rows owned by one block).
+    pub fn store_rows(&self) -> Option<usize> {
+        self.store_rows
+    }
+
+    /// Fresh per-worker execution state sized for this program.
+    pub fn new_arena(&self) -> TileArena {
+        TileArena {
+            bufs: self.slots.iter().map(|&n| vec![0.0; n]).collect(),
+            scratch: (0..4).map(|_| vec![0.0; self.max_rows]).collect(),
+            vars: vec![0; self.n_vars],
+        }
+    }
+
+    /// Execute one thread block. `inputs` must match [`Self::inputs`]
+    /// (full row-major buffers); `out` is a row window of the output
+    /// global starting at absolute row `out_row0` (pass the whole buffer
+    /// with `out_row0 = 0` for a serial sweep); `scalars` matches the
+    /// `scalar_names` of [`compile_with`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_block(
+        &self,
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        out_row0: usize,
+        block_idx: i64,
+        scalars: &[f32],
+        arena: &mut TileArena,
+    ) -> Result<(), String> {
+        if inputs.len() != self.inputs.len() {
+            return Err(format!(
+                "expected {} input globals, got {}",
+                self.inputs.len(),
+                inputs.len()
+            ));
+        }
+        if scalars.len() != self.n_scalars {
+            return Err(format!("expected {} scalars, got {}", self.n_scalars, scalars.len()));
+        }
+        debug_assert_eq!(arena.bufs.len(), self.slots.len());
+        arena.vars[VAR_BLOCK_IDX] = block_idx;
+        self.run(&self.ops, inputs, out, out_row0, scalars, arena)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &self,
+        ops: &[Op],
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        out_row0: usize,
+        scalars: &[f32],
+        arena: &mut TileArena,
+    ) -> Result<(), String> {
+        for op in ops {
+            match op {
+                Op::Zero { slot, len } => arena.bufs[*slot][..*len].fill(0.0),
+                Op::Load { global, slot, rows, cols, l } => {
+                    let l = l.eval(&arena.vars)?;
+                    let meta = &self.inputs[*global];
+                    let r0 = block_start(l, *rows, meta.rows).ok_or_else(|| {
+                        format!(
+                            "copy of `{}` block {l} ({} rows) exceeds global {} rows",
+                            meta.name, rows, meta.rows
+                        )
+                    })?;
+                    let len = rows * cols;
+                    arena.bufs[*slot][..len]
+                        .copy_from_slice(&inputs[*global][r0 * cols..r0 * cols + len]);
+                }
+                Op::Store { slot, rows, cols, l } => {
+                    let meta = self.output.as_ref().expect("store without output meta");
+                    let l = l.eval(&arena.vars)?;
+                    let r0 = block_start(l, *rows, meta.rows).ok_or_else(|| {
+                        format!("store of `{}` block {l} out of bounds", meta.name)
+                    })?;
+                    let len = rows * cols;
+                    let dst = r0
+                        .checked_sub(out_row0)
+                        .and_then(|rel| out.get_mut(rel * cols..rel * cols + len))
+                        .ok_or_else(|| {
+                            format!(
+                                "store of `{}` block {l} outside this worker's output window",
+                                meta.name
+                            )
+                        })?;
+                    dst.copy_from_slice(&arena.bufs[*slot][..len]);
+                }
+                Op::Move { src, dst, len } => {
+                    let mut d = std::mem::take(&mut arena.bufs[*dst]);
+                    d[..*len].copy_from_slice(&arena.bufs[*src][..*len]);
+                    arena.bufs[*dst] = d;
+                }
+                Op::Gemm { a, b, out: o, scratch, m, n, k, ta, tb, accumulate } => {
+                    let (m, n, k) = (*m, *n, *k);
+                    match scratch {
+                        None => {
+                            let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                            tensor::matmul_into(
+                                &arena.bufs[*a][..m * k],
+                                &arena.bufs[*b][..k * n],
+                                &mut obuf[..m * n],
+                                m,
+                                n,
+                                k,
+                                *ta,
+                                *tb,
+                            );
+                            arena.bufs[*o] = obuf;
+                        }
+                        Some(t) => {
+                            let mut prod = std::mem::take(&mut arena.bufs[*t]);
+                            tensor::matmul_into(
+                                &arena.bufs[*a][..m * k],
+                                &arena.bufs[*b][..k * n],
+                                &mut prod[..m * n],
+                                m,
+                                n,
+                                k,
+                                *ta,
+                                *tb,
+                            );
+                            let obuf = &mut arena.bufs[*o];
+                            if *accumulate {
+                                for (dst, src) in obuf[..m * n].iter_mut().zip(&prod[..m * n]) {
+                                    *dst += *src;
+                                }
+                            } else {
+                                obuf[..m * n].copy_from_slice(&prod[..m * n]);
+                            }
+                            arena.bufs[*t] = prod;
+                        }
+                    }
+                }
+                Op::MapScalar { op, a, scalar, out: o, len } => {
+                    let v = scalars[*scalar];
+                    if a == o {
+                        for x in &mut arena.bufs[*o][..*len] {
+                            *x = op.apply(*x, v);
+                        }
+                    } else {
+                        let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                        for (dst, x) in obuf[..*len].iter_mut().zip(&arena.bufs[*a][..*len]) {
+                            *dst = op.apply(*x, v);
+                        }
+                        arena.bufs[*o] = obuf;
+                    }
+                }
+                Op::MapBroadcast { op, a, b, out: o, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                    if a == o && b == o {
+                        // (rows,1) operand aliasing a (rows,cols) output
+                        // forces cols == 1: o[r] = op(o[r], o[r]).
+                        for x in &mut obuf[..rows] {
+                            *x = op.apply(*x, *x);
+                        }
+                    } else if a == o {
+                        let bb = &arena.bufs[*b];
+                        for r in 0..rows {
+                            let bv = bb[r];
+                            for x in &mut obuf[r * cols..(r + 1) * cols] {
+                                *x = op.apply(*x, bv);
+                            }
+                        }
+                    } else if b == o {
+                        // The stat column must be read before the output
+                        // rows overwrite it: stage it in row scratch.
+                        let mut bvals = std::mem::take(&mut arena.scratch[0]);
+                        bvals[..rows].copy_from_slice(&obuf[..rows]);
+                        let ab = &arena.bufs[*a];
+                        for r in 0..rows {
+                            let bv = bvals[r];
+                            for (x, av) in obuf[r * cols..(r + 1) * cols]
+                                .iter_mut()
+                                .zip(&ab[r * cols..(r + 1) * cols])
+                            {
+                                *x = op.apply(*av, bv);
+                            }
+                        }
+                        arena.scratch[0] = bvals;
+                    } else {
+                        let ab = &arena.bufs[*a];
+                        let bb = &arena.bufs[*b];
+                        for r in 0..rows {
+                            let bv = bb[r];
+                            for (x, av) in obuf[r * cols..(r + 1) * cols]
+                                .iter_mut()
+                                .zip(&ab[r * cols..(r + 1) * cols])
+                            {
+                                *x = op.apply(*av, bv);
+                            }
+                        }
+                    }
+                    arena.bufs[*o] = obuf;
+                }
+                Op::MapElem { op, a, b, out: o, len } => {
+                    let len = *len;
+                    if a == o {
+                        if b == o {
+                            let buf = &mut arena.bufs[*o];
+                            for x in &mut buf[..len] {
+                                *x = op.apply(*x, *x);
+                            }
+                        } else {
+                            let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                            for (x, y) in obuf[..len].iter_mut().zip(&arena.bufs[*b][..len]) {
+                                *x = op.apply(*x, *y);
+                            }
+                            arena.bufs[*o] = obuf;
+                        }
+                    } else if b == o {
+                        let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                        for (x, av) in obuf[..len].iter_mut().zip(&arena.bufs[*a][..len]) {
+                            *x = op.apply(*av, *x);
+                        }
+                        arena.bufs[*o] = obuf;
+                    } else {
+                        let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                        {
+                            let ab = &arena.bufs[*a][..len];
+                            let bb = &arena.bufs[*b][..len];
+                            for ((x, av), bv) in obuf[..len].iter_mut().zip(ab).zip(bb) {
+                                *x = op.apply(*av, *bv);
+                            }
+                        }
+                        arena.bufs[*o] = obuf;
+                    }
+                }
+                Op::Exp { a, out: o, len } => {
+                    if a == o {
+                        for x in &mut arena.bufs[*o][..*len] {
+                            *x = x.exp();
+                        }
+                    } else {
+                        let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                        for (dst, x) in obuf[..*len].iter_mut().zip(&arena.bufs[*a][..*len]) {
+                            *dst = x.exp();
+                        }
+                        arena.bufs[*o] = obuf;
+                    }
+                }
+                Op::RowMax { a, out: o, rows, cols } => {
+                    let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                    tensor::row_max_into(
+                        &arena.bufs[*a][..rows * cols],
+                        *rows,
+                        *cols,
+                        &mut obuf[..*rows],
+                    );
+                    arena.bufs[*o] = obuf;
+                }
+                Op::RowSum { a, out: o, rows, cols } => {
+                    let mut obuf = std::mem::take(&mut arena.bufs[*o]);
+                    tensor::row_sum_into(
+                        &arena.bufs[*a][..rows * cols],
+                        *rows,
+                        *cols,
+                        &mut obuf[..*rows],
+                    );
+                    arena.bufs[*o] = obuf;
+                }
+                Op::CausalMask { s, rows, cols, lq, lk } => {
+                    let lq = lq.eval(&arena.vars)? as usize;
+                    let lk = lk.eval(&arena.vars)? as usize;
+                    let (rows, cols) = (*rows, *cols);
+                    let sbuf = &mut arena.bufs[*s];
+                    for r in 0..rows {
+                        let qpos = lq * rows + r;
+                        let kpos0 = lk * cols;
+                        let row = &mut sbuf[r * cols..(r + 1) * cols];
+                        if kpos0 > qpos {
+                            row.fill(MASK_VALUE);
+                        } else {
+                            let keep = qpos - kpos0 + 1;
+                            if keep < cols {
+                                row[keep..].fill(MASK_VALUE);
+                            }
+                        }
+                    }
+                }
+                Op::OnlineSoftmax { s, rows, cols, m, l, l_rows, acc } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let mut rmax = std::mem::take(&mut arena.scratch[0]);
+                    let mut mnew = std::mem::take(&mut arena.scratch[1]);
+                    let mut corr = std::mem::take(&mut arena.scratch[2]);
+                    let mut rsum = std::mem::take(&mut arena.scratch[3]);
+                    tensor::row_max_into(
+                        &arena.bufs[*s][..rows * cols],
+                        rows,
+                        cols,
+                        &mut rmax[..rows],
+                    );
+                    {
+                        let mbuf = &arena.bufs[*m];
+                        for r in 0..rows {
+                            let mn = mbuf[r].max(rmax[r]);
+                            mnew[r] = mn;
+                            corr[r] = (mbuf[r] - mn).exp();
+                        }
+                    }
+                    {
+                        // P = exp(S - m_new), row-sliced, fusing the row sum.
+                        let sbuf = &mut arena.bufs[*s];
+                        for r in 0..rows {
+                            let mn = mnew[r];
+                            let mut acc_r = 0.0f32;
+                            for x in &mut sbuf[r * cols..(r + 1) * cols] {
+                                *x = (*x - mn).exp();
+                                acc_r += *x;
+                            }
+                            rsum[r] = acc_r;
+                        }
+                    }
+                    {
+                        let lbuf = &mut arena.bufs[*l];
+                        for r in 0..*l_rows {
+                            lbuf[r] = lbuf[r] * corr[r] + rsum[r];
+                        }
+                    }
+                    if let Some((aid, arows, acols)) = acc {
+                        // Rescale over the accumulator's own rows, as the
+                        // walker does.
+                        let abuf = &mut arena.bufs[*aid];
+                        for (r, c) in corr[..*arows].iter().enumerate() {
+                            for x in &mut abuf[r * acols..(r + 1) * acols] {
+                                *x *= c;
+                            }
+                        }
+                    }
+                    arena.bufs[*m][..rows].copy_from_slice(&mnew[..rows]);
+                    arena.scratch[0] = rmax;
+                    arena.scratch[1] = mnew;
+                    arena.scratch[2] = corr;
+                    arena.scratch[3] = rsum;
+                }
+                Op::LocalSoftmax { s, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let mut rmax = std::mem::take(&mut arena.scratch[0]);
+                    let mut rsum = std::mem::take(&mut arena.scratch[1]);
+                    {
+                        let sbuf = &mut arena.bufs[*s];
+                        tensor::row_max_into(&sbuf[..rows * cols], rows, cols, &mut rmax[..rows]);
+                        for r in 0..rows {
+                            let mx = rmax[r];
+                            for x in &mut sbuf[r * cols..(r + 1) * cols] {
+                                *x = (*x - mx).exp();
+                            }
+                        }
+                        tensor::row_sum_into(&sbuf[..rows * cols], rows, cols, &mut rsum[..rows]);
+                        for r in 0..rows {
+                            let d = rsum[r].max(f32::MIN_POSITIVE);
+                            for x in &mut sbuf[r * cols..(r + 1) * cols] {
+                                *x /= d;
+                            }
+                        }
+                    }
+                    arena.scratch[0] = rmax;
+                    arena.scratch[1] = rsum;
+                }
+                Op::For { var, start, end, body } => {
+                    let lo = start.eval(&arena.vars)?;
+                    let hi = end.eval(&arena.vars)?;
+                    for i in lo..hi {
+                        arena.vars[*var] = i;
+                        self.run(body, inputs, out, out_row0, scalars, arena)?;
+                    }
+                }
+                Op::If { lhs, cmp, rhs, body } => {
+                    if cmp.eval(lhs.eval(&arena.vars)?, rhs.eval(&arena.vars)?) {
+                        self.run(body, inputs, out, out_row0, scalars, arena)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::reasoner::generate_tl_code;
+    use crate::reasoner::profiles::LlmProfile;
+    use crate::sketch::spec::{AttnVariant, OpSpec};
+
+    fn generated_program() -> TlProgram {
+        let mut spec = OpSpec::benchmark(AttnVariant::Mha, 256, 64, true);
+        spec.batch = 1;
+        generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3()).program
+    }
+
+    #[test]
+    fn generated_program_compiles_block_local() {
+        let p = generated_program();
+        let c = compile(&p).expect("compile");
+        let names: Vec<&str> = c.inputs().iter().map(|g| g.name.as_str()).collect();
+        assert!(names.contains(&"Q") && names.contains(&"K") && names.contains(&"V"));
+        let out = c.output().expect("output global");
+        assert_eq!(out.name, "O");
+        assert_eq!(out.rows, 256);
+        assert!(c.block_local_store(), "final store is [L = block_idx]");
+        assert_eq!(c.store_rows(), Some(p.params()["BM"] as usize));
+    }
+
+    #[test]
+    fn compile_rejects_unallocated_accumulator() {
+        let src = "param BM = 4\nparam BN = 4\nparam seq_len = 4\nparam kv_len = 4\n\
+                   param HeadDim = 4\nparam VDim = 4\n\
+                   Allocate Q in global (seq_len, HeadDim)\n\
+                   Allocate K in global (kv_len, HeadDim)\n\
+                   Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared\n\
+                   Copy K (BN, HeadDim) in coordinate [L = 0] from global to shared\n\
+                   Compute GEMM Q, K.T and accumulate S\n";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let err = compile(&p).unwrap_err();
+        assert!(err.contains("not allocated"), "got: {err}");
+    }
+
+    #[test]
+    fn compile_rejects_unbound_symbols() {
+        let p = crate::tl::parser::parse_program(
+            "Allocate Q in global (8, 8)\n\
+             Copy Q (mystery, 8) in coordinate [L = 0] from global to shared\n",
+        )
+        .unwrap();
+        let err = compile(&p).unwrap_err();
+        assert!(err.contains("unbound symbol"), "got: {err}");
+    }
+
+    #[test]
+    fn compile_detects_gemm_contraction_mismatch() {
+        // K not transposed: contracts HeadDim against the BN row dim.
+        let src = "param BM = 8\nparam BN = 4\nparam HeadDim = 16\n\
+                   Allocate Qs in shared (BM, HeadDim)\n\
+                   Allocate Ks in shared (BN, HeadDim)\n\
+                   Compute GEMM Qs, Ks and get S\n";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let err = compile(&p).unwrap_err();
+        assert!(err.contains("GEMM contraction mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn arena_reuse_is_deterministic() {
+        // Two sweeps through the same arena must agree exactly: no state
+        // leaks between blocks.
+        let p = generated_program();
+        let c = compile(&p).expect("compile");
+        let params = p.params();
+        let (bm, seq) = (params["BM"] as usize, params["seq_len"] as usize);
+        let hd = params["HeadDim"] as usize;
+        let vd = params["VDim"] as usize;
+        let q = crate::verify::tensor::Tensor2::randn(seq, hd, 1);
+        let k = crate::verify::tensor::Tensor2::randn(seq, hd, 2);
+        let v = crate::verify::tensor::Tensor2::randn(seq, vd, 3);
+        let ins: Vec<&[f32]> = c
+            .inputs()
+            .iter()
+            .map(|g| match g.name.as_str() {
+                "Q" => q.data.as_slice(),
+                "K" => k.data.as_slice(),
+                _ => v.data.as_slice(),
+            })
+            .collect();
+        let mut arena = c.new_arena();
+        let mut o1 = vec![0.0f32; seq * vd];
+        let mut o2 = vec![0.0f32; seq * vd];
+        for b in 0..seq / bm {
+            c.execute_block(&ins, &mut o1, 0, b as i64, &[0.125], &mut arena).unwrap();
+        }
+        for b in 0..seq / bm {
+            c.execute_block(&ins, &mut o2, 0, b as i64, &[0.125], &mut arena).unwrap();
+        }
+        assert_eq!(o1, o2, "arena reuse must not change results");
+    }
+}

@@ -1,0 +1,321 @@
+//! Host drivers for the compiled TL block engine: compile once, sweep
+//! `block_idx` — serially or across `std::thread::scope` workers.
+//!
+//! [`run_attention`] is the drop-in replacement for the legacy walker's
+//! driver ([`super::interp::run_attention`]): same signature, same
+//! errors for malformed programs, **bit-identical** numerics (both
+//! engines share the kernels in [`super::tensor`]), one to two orders
+//! of magnitude faster. The verification gate, the autotuner's measured
+//! probes and the serving oracle all route through here; the walker
+//! survives only as the differential baseline
+//! (`tests/compiled_interp.rs`) and the bench comparator
+//! (`benches/interpreter.rs`).
+//!
+//! Parallel safety: the sweep is embarrassingly parallel — each block
+//! reads shared immutable Q/K/V and writes its own `BM` output rows
+//! (guaranteed by
+//! [`block_local_store`](super::compiled::CompiledBlockProgram::block_local_store)),
+//! so the output buffer is split into disjoint `&mut` chunks before the
+//! workers start. No locks, no atomics, and the result cannot depend on
+//! scheduling: worker count 1 and N produce the same bits.
+
+use super::compiled;
+use super::tensor::Tensor2;
+use crate::tl::ast::TlProgram;
+
+/// Worker count for the parallel sweeps: the `QIMENG_THREADS`
+/// environment variable when set (≥ 1), else the machine's available
+/// parallelism. Exposed so benches and tests can pin it explicitly via
+/// the `threads` arguments instead.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("QIMENG_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Compiled + parallel host driver: run a reasoned TL program over a
+/// full per-head problem. `q: (seq, qk_dim)`, `k/v: (kv, qk/v_dim)` —
+/// returns `O: (seq, v_dim)`. The TL program must carry `param`
+/// bindings for `BM`, `BN`, `seq_len`, `kv_len`, `HeadDim`, `VDim`
+/// (i.e. be stage-1b output).
+pub fn run_attention(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+) -> Result<Tensor2, String> {
+    run_attention_threads(program, q, k, v, scale, default_threads())
+}
+
+/// [`run_attention`] with an explicit worker count (1 = serial sweep).
+/// Results are identical for every `threads` value.
+pub fn run_attention_threads(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    threads: usize,
+) -> Result<Tensor2, String> {
+    let params = program.params();
+    let need = |n: &str| -> Result<i64, String> {
+        params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
+    };
+    let bm = need("BM")? as usize;
+    let bn = need("BN")? as usize;
+    let seq = need("seq_len")? as usize;
+    let kv = need("kv_len")? as usize;
+    need("VDim")?;
+    if q.rows != seq || k.rows != kv || v.rows != kv {
+        return Err(format!(
+            "input shapes ({}, {}, {}) disagree with params (seq {seq}, kv {kv})",
+            q.rows, k.rows, v.rows
+        ));
+    }
+    if seq % bm != 0 || kv % bn != 0 {
+        return Err(format!("BM={bm}/BN={bn} must divide seq={seq}/kv={kv}"));
+    }
+
+    let compiled = compiled::compile(program)?;
+    let out_meta = compiled
+        .output()
+        .ok_or_else(|| format!("program `{}` never stores a global output", program.name))?
+        .clone();
+    let mut ins: Vec<&[f32]> = Vec::with_capacity(compiled.inputs().len());
+    for g in compiled.inputs() {
+        let t = match g.name.as_str() {
+            "Q" => q,
+            "K" => k,
+            "V" => v,
+            other => return Err(format!("global tensor `{other}` missing")),
+        };
+        if (t.rows, t.cols) != (g.rows, g.cols) {
+            return Err(format!(
+                "input `{}` is {}x{} but the program declares {}x{}",
+                g.name, t.rows, t.cols, g.rows, g.cols
+            ));
+        }
+        ins.push(&t.data);
+    }
+
+    let mut o = Tensor2::zeros(out_meta.rows, out_meta.cols);
+    let nblocks = seq / bm;
+    let parallel = threads > 1
+        && nblocks > 1
+        && out_meta.cols > 0
+        && compiled.block_local_store()
+        && compiled.store_rows() == Some(bm)
+        && out_meta.rows == nblocks * bm;
+
+    if !parallel {
+        let mut arena = compiled.new_arena();
+        for b in 0..nblocks {
+            compiled.execute_block(&ins, &mut o.data, 0, b as i64, &[scale], &mut arena)?;
+        }
+        return Ok(o);
+    }
+
+    // Parallel sweep: split O into one disjoint `bm`-row chunk per
+    // block and deal blocks to workers round-robin (worker w takes
+    // blocks w, w+workers, ...). Causal programs do linearly more work
+    // for later q-blocks, so striding balances the triangular load where
+    // contiguous runs would leave the last worker with ~2x the mean.
+    let chunk = bm * out_meta.cols;
+    let workers = threads.min(nblocks);
+    let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+        (0..workers).map(|_| Vec::with_capacity(nblocks.div_ceil(workers))).collect();
+    for (b, rows) in o.data.chunks_mut(chunk).enumerate() {
+        buckets[b % workers].push((b, rows));
+    }
+    let compiled_ref = &compiled;
+    let ins_ref = &ins;
+    std::thread::scope(|scope| -> Result<(), String> {
+        let mut handles = Vec::with_capacity(workers);
+        for group in &mut buckets {
+            handles.push(scope.spawn(move || -> Result<(), String> {
+                let mut arena = compiled_ref.new_arena();
+                for (b, rows) in group.iter_mut() {
+                    compiled_ref.execute_block(
+                        ins_ref,
+                        rows,
+                        *b * bm,
+                        *b as i64,
+                        &[scale],
+                        &mut arena,
+                    )?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
+        }
+        Ok(())
+    })?;
+    Ok(o)
+}
+
+/// Run a closure over `tasks` indices on up to `threads` scoped
+/// workers, writing into disjoint equal-size chunks of `out`. Shared
+/// helper for hosts that sweep flat index spaces (the serving oracle's
+/// `(slot, head)` loop). `f(task, chunk)` must fully define its chunk.
+pub fn par_chunks<F>(
+    out: &mut [f32],
+    chunk: usize,
+    threads: usize,
+    f: F,
+) -> Result<(), String>
+where
+    F: Fn(usize, &mut [f32]) -> Result<(), String> + Sync,
+{
+    debug_assert!(chunk > 0 && out.len() % chunk == 0);
+    let ntasks = out.len() / chunk;
+    let workers = threads.clamp(1, ntasks.max(1));
+    if workers <= 1 {
+        for (t, c) in out.chunks_mut(chunk).enumerate() {
+            f(t, c)?;
+        }
+        return Ok(());
+    }
+    let mut tasks: Vec<(usize, &mut [f32])> = out.chunks_mut(chunk).enumerate().collect();
+    let per = tasks.len().div_ceil(workers);
+    let f_ref = &f;
+    std::thread::scope(|scope| -> Result<(), String> {
+        let mut handles = Vec::with_capacity(workers);
+        for group in tasks.chunks_mut(per) {
+            handles.push(scope.spawn(move || -> Result<(), String> {
+                for (t, c) in group.iter_mut() {
+                    f_ref(*t, c)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| "parallel worker panicked".to_string())??;
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::reasoner::generate_tl_code;
+    use crate::reasoner::profiles::LlmProfile;
+    use crate::sketch::spec::{AttnVariant, OpSpec};
+    use crate::verify::interp;
+    use crate::verify::tensor::reference_attention;
+
+    fn small_spec(causal: bool) -> OpSpec {
+        let mut s = OpSpec::benchmark(AttnVariant::Mha, 256, 64, causal);
+        s.batch = 1;
+        s
+    }
+
+    #[test]
+    fn compiled_engine_matches_reference() {
+        for causal in [false, true] {
+            let spec = small_spec(causal);
+            let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let qk = spec.qk_dim();
+            let q = Tensor2::randn(spec.seq_len, qk, 10);
+            let k = Tensor2::randn(spec.kv_len, qk, 11);
+            let v = Tensor2::randn(spec.kv_len, spec.v_head_dim, 12);
+            let scale = 1.0 / (qk as f32).sqrt();
+            let got = run_attention(&r.program, &q, &k, &v, scale).expect("compiled run");
+            let want = reference_attention(&q, &k, &v, scale, causal);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 2e-5, "causal={causal}: max diff {diff}");
+        }
+    }
+
+    #[test]
+    fn compiled_engine_is_bit_identical_to_walker() {
+        let spec = small_spec(true);
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let q = Tensor2::randn(spec.seq_len, 64, 20);
+        let k = Tensor2::randn(spec.kv_len, 64, 21);
+        let v = Tensor2::randn(spec.kv_len, 64, 22);
+        let legacy = interp::run_attention(&r.program, &q, &k, &v, 0.125).unwrap();
+        for threads in [1, 2, 5] {
+            let got =
+                run_attention_threads(&r.program, &q, &k, &v, 0.125, threads).unwrap();
+            assert_eq!(got.data, legacy.data, "threads={threads} diverged from walker");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let spec = small_spec(false);
+        let r = generate_tl_code(&spec, &GpuArch::t4(), &LlmProfile::deepseek_r1());
+        let q = Tensor2::randn(spec.seq_len, 64, 30);
+        let k = Tensor2::randn(spec.kv_len, 64, 31);
+        let v = Tensor2::randn(spec.kv_len, 64, 32);
+        let serial = run_attention_threads(&r.program, &q, &k, &v, 0.125, 1).unwrap();
+        let wide = run_attention_threads(&r.program, &q, &k, &v, 0.125, 7).unwrap();
+        assert_eq!(serial.data, wide.data);
+    }
+
+    #[test]
+    fn compiled_driver_rejects_unallocated_accumulator() {
+        let src = "param BM = 4\nparam BN = 4\nparam seq_len = 4\nparam kv_len = 4\n\
+                   param HeadDim = 4\nparam VDim = 4\n\
+                   Allocate Q in global (seq_len, HeadDim)\n\
+                   Allocate K in global (kv_len, HeadDim)\n\
+                   Allocate O in global (seq_len, VDim)\n\
+                   Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared\n\
+                   Copy K (BN, HeadDim) in coordinate [L = 0] from global to shared\n\
+                   Compute GEMM Q, K.T and accumulate S\n";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let q = Tensor2::randn(4, 4, 1);
+        let k = Tensor2::randn(4, 4, 2);
+        let v = Tensor2::randn(4, 4, 3);
+        let err = run_attention(&p, &q, &k, &v, 0.5).unwrap_err();
+        assert!(err.contains("not allocated"), "got: {err}");
+    }
+
+    #[test]
+    fn par_chunks_covers_all_chunks_once() {
+        let mut out = vec![0.0f32; 24];
+        par_chunks(&mut out, 4, 3, |t, c| {
+            for x in c.iter_mut() {
+                *x += 1.0 + t as f32;
+            }
+            Ok(())
+        })
+        .unwrap();
+        for (t, c) in out.chunks(4).enumerate() {
+            assert!(c.iter().all(|&x| x == 1.0 + t as f32), "chunk {t} wrong: {c:?}");
+        }
+        // Error propagation.
+        let err = par_chunks(&mut out, 4, 2, |t, _| {
+            if t == 3 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err, "boom");
+    }
+
+    #[test]
+    fn online_softmax_shift_invariant_to_large_scores() {
+        let mut spec = small_spec(false);
+        spec.seq_len = 128;
+        spec.kv_len = 128;
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let q = Tensor2::from_fn(128, 64, |_, _| 10.0);
+        let k = Tensor2::from_fn(128, 64, |_, _| 10.0);
+        let v = Tensor2::randn(128, 64, 80);
+        let got = run_attention(&r.program, &q, &k, &v, 0.125).unwrap();
+        assert!(got.data.iter().all(|x| x.is_finite()));
+        let want = reference_attention(&q, &k, &v, 0.125, false);
+        assert!(got.max_abs_diff(&want) < 2e-4);
+    }
+}

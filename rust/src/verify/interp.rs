@@ -1,13 +1,20 @@
-//! Numeric TL interpreter: executes a reasoned TL Code on host f32
-//! tensors, statement by statement, with the exact semantics the Pallas
-//! backend lowers to. This is the pipeline's internal correctness oracle:
-//! generated TL is interpreted and compared against
-//! [`super::tensor::reference_attention`] before any backend code is
-//! emitted (and again after, via pytest against the jnp reference).
+//! **Legacy** statement-walking TL interpreter, kept as the differential
+//! baseline for the compiled engine.
 //!
-//! The interpreter models exactly one *thread block* per invocation — the
-//! same per-(batch, head, q-block) view the TL describes — and a host loop
-//! ([`run_attention`]) sweeps `block_idx` to assemble the full output.
+//! Production callers (the verification gate, the autotuner's measured
+//! probes, the serving oracle) run TL through [`super::compiled`] +
+//! [`super::exec`], which lowers the program once and executes blocks
+//! against a reusable arena, in parallel. This walker re-interprets the
+//! AST per block with `BTreeMap` name lookups and per-tile allocations —
+//! slow, but direct enough to audit by eye, which is exactly what a
+//! baseline should be. `tests/compiled_interp.rs` holds the two engines
+//! bit-identical (they share every numeric kernel via
+//! [`super::tensor`]); `benches/interpreter.rs` records the speed gap.
+//!
+//! The walker models exactly one *thread block* per invocation — the
+//! same per-(batch, head, q-block) view the TL describes — and a host
+//! loop ([`run_attention`]) sweeps `block_idx` serially to assemble the
+//! full output.
 
 use std::collections::BTreeMap;
 

@@ -1,13 +1,19 @@
 //! Verification layer: the static semantic checker ([`checker`]) that
-//! rejects the paper's Appendix-B failure classes, the numeric TL
-//! interpreter ([`interp`]) that executes TL Code on host tensors, and the
-//! reference attention oracle ([`tensor`]).
+//! rejects the paper's Appendix-B failure classes, the compiled numeric
+//! TL engine ([`compiled`] + [`exec`]) that executes TL Code on host
+//! tensors, the legacy statement walker kept as its differential
+//! baseline ([`interp`]), and the reference attention oracle
+//! ([`tensor`]).
 //!
 //! [`verify_program`] is the gate the pipeline runs between stage 1b and
 //! translation: static checks first, then numeric equivalence against the
-//! direct softmax(QKᵀ)V reference on a reduced shape.
+//! direct softmax(QKᵀ)V reference on a reduced shape. The numeric probe
+//! executes through the compiled engine; `tests/compiled_interp.rs`
+//! holds it bit-identical to the walker across the profile grid.
 
 pub mod checker;
+pub mod compiled;
+pub mod exec;
 pub mod interp;
 pub mod tensor;
 
@@ -62,7 +68,7 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
     let v = Tensor2::randn(probe_seq, vd as usize, seed + 2);
     let scale = 1.0 / (hd as f32).sqrt();
 
-    match interp::run_attention(&probe, &q, &k, &v, scale) {
+    match exec::run_attention(&probe, &q, &k, &v, scale) {
         Ok(got) => {
             let want = reference_attention(&q, &k, &v, scale, causal);
             let diff = got.max_abs_diff(&want);

@@ -1,5 +1,12 @@
-//! Minimal dense 2-D f32 tensor used by the TL interpreter and the
+//! Minimal dense 2-D f32 tensor used by the TL interpreters and the
 //! host-side reference attention. Row-major storage.
+//!
+//! The numeric kernels at the bottom of this module ([`matmul_into`],
+//! [`row_max_into`], [`row_sum_into`], [`dot`]) are *shared* between
+//! [`Tensor2`]'s methods and the compiled block engine
+//! ([`super::compiled`]): both engines route every FLOP through the same
+//! code, which is what makes their outputs bit-identical by construction
+//! (the differential contract `tests/compiled_interp.rs` enforces).
 
 use crate::util::prng::Rng;
 
@@ -41,6 +48,21 @@ impl Tensor2 {
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a contiguous slice. Hot inner loops iterate this (or
+    /// [`Self::row_mut`]) instead of recomputing `r * cols + c` per
+    /// element through [`Self::at`] (§Perf).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
     /// Copy rows `[r0, r0+n)` into a new tensor.
     pub fn slice_rows(&self, r0: usize, n: usize) -> Tensor2 {
         assert!(
@@ -65,10 +87,9 @@ impl Tensor2 {
 
     /// `self @ other`, with optional transposes. f32 accumulation.
     ///
-    /// Hot path of the verification gate (§Perf): the non-transposed
-    /// cases run cache-friendly slice kernels (ikj ordering for `A@B`,
-    /// row-dot for `A@Bᵀ`) that the compiler auto-vectorizes; the rare
-    /// `ta` cases fall back to a scalar loop.
+    /// Hot path of the verification gate (§Perf): delegates to the
+    /// cache-blocked [`matmul_into`] micro-kernel shared with the
+    /// compiled block engine.
     pub fn matmul(&self, other: &Tensor2, ta: bool, tb: bool) -> Result<Tensor2, String> {
         let (m, k1) = if ta { (self.cols, self.rows) } else { (self.rows, self.cols) };
         let (k2, n) = if tb { (other.cols, other.rows) } else { (other.rows, other.cols) };
@@ -78,61 +99,7 @@ impl Tensor2 {
             ));
         }
         let mut out = Tensor2::zeros(m, n);
-        match (ta, tb) {
-            (false, true) => {
-                // A @ B^T: rows of A dotted with rows of B — both
-                // contiguous. 4 independent accumulators break the
-                // sequential-reduction dependence so LLVM vectorizes.
-                for i in 0..m {
-                    let a_row = &self.data[i * k1..(i + 1) * k1];
-                    let out_row = &mut out.data[i * n..(i + 1) * n];
-                    for (j, o) in out_row.iter_mut().enumerate() {
-                        let b_row = &other.data[j * k1..(j + 1) * k1];
-                        let mut acc = [0.0f32; 4];
-                        let chunks = k1 / 4;
-                        for c in 0..chunks {
-                            let a4 = &a_row[c * 4..c * 4 + 4];
-                            let b4 = &b_row[c * 4..c * 4 + 4];
-                            acc[0] += a4[0] * b4[0];
-                            acc[1] += a4[1] * b4[1];
-                            acc[2] += a4[2] * b4[2];
-                            acc[3] += a4[3] * b4[3];
-                        }
-                        let mut sum = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-                        for p in chunks * 4..k1 {
-                            sum += a_row[p] * b_row[p];
-                        }
-                        *o = sum;
-                    }
-                }
-            }
-            (false, false) => {
-                // A @ B: ikj ordering, streaming B's rows.
-                for i in 0..m {
-                    let a_row = &self.data[i * k1..(i + 1) * k1];
-                    let out_row = &mut out.data[i * n..(i + 1) * n];
-                    for (p, &a) in a_row.iter().enumerate() {
-                        let b_row = &other.data[p * n..(p + 1) * n];
-                        for (o, &b) in out_row.iter_mut().zip(b_row) {
-                            *o += a * b;
-                        }
-                    }
-                }
-            }
-            _ => {
-                for i in 0..m {
-                    for j in 0..n {
-                        let mut acc = 0.0f32;
-                        for p in 0..k1 {
-                            let a = if ta { self.at(p, i) } else { self.at(i, p) };
-                            let b = if tb { other.at(j, p) } else { other.at(p, j) };
-                            acc += a * b;
-                        }
-                        *out.at_mut(i, j) = acc;
-                    }
-                }
-            }
-        }
+        matmul_into(&self.data, &other.data, &mut out.data, m, n, k1, ta, tb);
         Ok(out)
     }
 
@@ -142,16 +109,20 @@ impl Tensor2 {
         }
     }
 
-    /// Row-wise max.
+    /// Row-wise max ([`row_max_into`]; zero-column tensors yield the
+    /// finite [`MASK_VALUE`] instead of `-inf`, so downstream
+    /// `exp(x - max)` stays NaN-free).
     pub fn row_max(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|r| (0..self.cols).map(|c| self.at(r, c)).fold(f32::NEG_INFINITY, f32::max))
-            .collect()
+        let mut out = vec![0.0f32; self.rows];
+        row_max_into(&self.data, self.rows, self.cols, &mut out);
+        out
     }
 
-    /// Row-wise sum.
+    /// Row-wise sum ([`row_sum_into`]).
     pub fn row_sum(&self) -> Vec<f32> {
-        (0..self.rows).map(|r| (0..self.cols).map(|c| self.at(r, c)).sum()).collect()
+        let mut out = vec![0.0f32; self.rows];
+        row_sum_into(&self.data, self.rows, self.cols, &mut out);
+        out
     }
 
     /// Max |a - b| between two tensors.
@@ -169,6 +140,135 @@ impl Tensor2 {
 /// NaN-free for transiently fully-masked rows (matches the Pallas kernel
 /// and jnp reference, which use the same constant).
 pub const MASK_VALUE: f32 = -1e30;
+
+/// Dot product with a 4-way accumulator split: the independent partial
+/// sums break the sequential-reduction dependence so LLVM vectorizes,
+/// and `chunks_exact` removes the inner-loop bounds checks. The final
+/// reduction order `(a0 + a1) + (a2 + a3)` is part of the numeric
+/// contract both execution engines share.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut acc = [0.0f32; 4];
+    for (x, y) in ca.zip(cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut sum = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        sum += x * y;
+    }
+    sum
+}
+
+/// Rows of the Bᵀ panel kept L1-resident per block of the `A @ Bᵀ`
+/// kernel (32 rows × ≤256-column tiles ≈ 32 KiB).
+const JB: usize = 32;
+/// A-row / contraction block sizes for the `A @ B` kernel.
+const MB: usize = 32;
+const KB: usize = 128;
+
+/// Cache-blocked GEMM micro-kernel over row slices: `out = op(A) @
+/// op(B)` with `op` the optional transpose, `A` row-major `m×k` (or
+/// `k×m` when `ta`), `B` row-major `k×n` (or `n×k` when `tb`), `out`
+/// exactly `m*n` elements (fully overwritten).
+///
+/// Blocking never changes the per-element accumulation order — each
+/// output element still sums its products in ascending `p` (for the ikj
+/// kernel) or through [`dot`] (for the row-dot kernel) — so any two
+/// call sites produce bit-identical results. The rare `ta` case packs
+/// `Aᵀ` once (one allocation) and reuses the row-major kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    ta: bool,
+    tb: bool,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    if ta {
+        // Pack Aᵀ (stored k×m) into a row-major m×k panel once, then run
+        // the fast kernels. Attention programs never hit this path; it
+        // exists for generality (and is regression-tested).
+        let mut packed = vec![0.0f32; m * k];
+        for r in 0..k {
+            let a_row = &a[r * m..(r + 1) * m];
+            for (c, &v) in a_row.iter().enumerate() {
+                packed[c * k + r] = v;
+            }
+        }
+        matmul_into(&packed, b, out, m, n, k, false, tb);
+    } else if tb {
+        // A @ Bᵀ: rows of A dotted with rows of B — both contiguous.
+        // j-blocking keeps a JB-row panel of B hot across the i sweep.
+        for j0 in (0..n).step_by(JB) {
+            let j1 = (j0 + JB).min(n);
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let out_row = &mut out[i * n..(i + 1) * n];
+                for (j, o) in out_row[j0..j1].iter_mut().enumerate() {
+                    let b_row = &b[(j0 + j) * k..(j0 + j + 1) * k];
+                    *o = dot(a_row, b_row);
+                }
+            }
+        }
+    } else {
+        // A @ B: ikj ordering streaming B's rows, blocked over (i, k) so
+        // the KB-row B slab is reused across MB rows of A.
+        out.fill(0.0);
+        for i0 in (0..m).step_by(MB) {
+            let i1 = (i0 + MB).min(m);
+            for p0 in (0..k).step_by(KB) {
+                let p1 = (p0 + KB).min(k);
+                for i in i0..i1 {
+                    let a_row = &a[i * k..(i + 1) * k];
+                    let out_row = &mut out[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let av = a_row[p];
+                        let b_row = &b[p * n..(p + 1) * n];
+                        for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row-wise max into a caller-provided buffer. Zero-column inputs yield
+/// [`MASK_VALUE`] (finite) rather than `-inf`: a degenerate tile must
+/// not poison the online-softmax recurrence with `exp(-inf + inf)` NaNs.
+pub fn row_max_into(data: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= rows);
+    if cols == 0 {
+        out[..rows].fill(MASK_VALUE);
+        return;
+    }
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        out[r] = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    }
+}
+
+/// Row-wise sum into a caller-provided buffer.
+pub fn row_sum_into(data: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= rows);
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        out[r] = row.iter().sum();
+    }
+}
 
 /// Host-side reference: softmax(scale * Q K^T + causal mask) V computed
 /// directly in f32 — the oracle the interpreter is validated against.
@@ -235,6 +335,76 @@ mod tests {
         let a = Tensor2::randn(2, 3, 1);
         let b = Tensor2::randn(4, 5, 2);
         assert!(a.matmul(&b, false, false).is_err());
+    }
+
+    /// Naive triple-loop oracle for the pack/transpose regression tests.
+    fn matmul_naive(a: &Tensor2, b: &Tensor2, ta: bool, tb: bool) -> Tensor2 {
+        let (m, k) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
+        let n = if tb { b.rows } else { b.cols };
+        Tensor2::from_fn(m, n, |i, j| {
+            (0..k)
+                .map(|p| {
+                    let av = if ta { a.at(p, i) } else { a.at(i, p) };
+                    let bv = if tb { b.at(j, p) } else { b.at(p, j) };
+                    av * bv
+                })
+                .sum()
+        })
+    }
+
+    #[test]
+    fn matmul_transpose_a_paths_match_naive() {
+        // The ta cases pack Aᵀ then reuse the row-major kernels; sizes
+        // straddle the JB/MB/KB block boundaries on purpose.
+        for (rows, cols, other_rows, seed) in
+            [(7, 5, 9, 1u64), (33, 40, 129, 2), (4, 64, 31, 3)]
+        {
+            // ta only: A is (rows x cols) -> op(A) is (cols x rows).
+            let a = Tensor2::randn(rows, cols, seed);
+            let b = Tensor2::randn(rows, other_rows, seed + 10);
+            let got = a.matmul(&b, true, false).unwrap();
+            assert_eq!((got.rows, got.cols), (cols, other_rows));
+            assert!(got.max_abs_diff(&matmul_naive(&a, &b, true, false)) < 1e-4);
+            // ta + tb.
+            let bt = Tensor2::randn(other_rows, rows, seed + 20);
+            let got = a.matmul(&bt, true, true).unwrap();
+            assert_eq!((got.rows, got.cols), (cols, other_rows));
+            assert!(got.max_abs_diff(&matmul_naive(&a, &bt, true, true)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_kernels_match_naive_across_block_edges() {
+        // Exercise sizes around the JB/MB/KB boundaries for the
+        // row-major kernels too.
+        for (m, n, k, seed) in [(31, 33, 127, 4u64), (64, 32, 130, 5), (1, 100, 3, 6)] {
+            let a = Tensor2::randn(m, k, seed);
+            let b = Tensor2::randn(k, n, seed + 1);
+            let got = a.matmul(&b, false, false).unwrap();
+            assert!(got.max_abs_diff(&matmul_naive(&a, &b, false, false)) < 1e-4);
+            let bt = Tensor2::randn(n, k, seed + 2);
+            let got = a.matmul(&bt, false, true).unwrap();
+            assert!(got.max_abs_diff(&matmul_naive(&a, &bt, false, true)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_max_of_zero_column_tensor_is_finite() {
+        let t = Tensor2::zeros(3, 0);
+        let m = t.row_max();
+        assert_eq!(m, vec![MASK_VALUE; 3], "zero-column rows must not yield -inf");
+        assert!(m.iter().all(|x| x.is_finite()));
+        assert_eq!(t.row_sum(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn row_accessors_match_at() {
+        let t = Tensor2::randn(5, 7, 9);
+        for r in 0..5 {
+            for c in 0..7 {
+                assert_eq!(t.row(r)[c], t.at(r, c));
+            }
+        }
     }
 
     #[test]

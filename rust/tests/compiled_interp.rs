@@ -1,0 +1,136 @@
+//! Differential contract between the compiled block engine
+//! (`verify::{compiled, exec}`) and the legacy statement walker
+//! (`verify::interp`): **bit-for-bit identical outputs** across
+//! profiles, variants, tilings and worker counts. The engines share
+//! every numeric kernel (`verify::tensor`), so any divergence is a
+//! lowering bug, not float noise — which is why these asserts use exact
+//! equality, not tolerances.
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::reasoner::{generate_tl_code, reason_with_tiling, tiling::Tiling};
+use qimeng::sketch::generate_sketch;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest;
+use qimeng::verify::exec::run_attention_threads;
+use qimeng::verify::interp::run_attention as run_walker;
+use qimeng::verify::tensor::Tensor2;
+
+fn spec_of(variant: AttnVariant, seq: usize, hd: usize, causal: bool) -> OpSpec {
+    let mut s = OpSpec::benchmark(variant, seq, hd, causal);
+    s.batch = 1;
+    s
+}
+
+/// Run both engines on the same program/inputs and demand equality.
+fn assert_engines_agree(
+    program: &qimeng::TlProgram,
+    seq: usize,
+    kv: usize,
+    qk: usize,
+    vd: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<(), String> {
+    let q = Tensor2::randn(seq, qk, seed);
+    let k = Tensor2::randn(kv, qk, seed + 1);
+    let v = Tensor2::randn(kv, vd, seed + 2);
+    let scale = 1.0 / (qk as f32).sqrt();
+    let want = run_walker(program, &q, &k, &v, scale)
+        .map_err(|e| format!("walker failed: {e}"))?;
+    let got = run_attention_threads(program, &q, &k, &v, scale, threads)
+        .map_err(|e| format!("compiled engine failed: {e}"))?;
+    if got.data != want.data {
+        let worst = got.max_abs_diff(&want);
+        return Err(format!(
+            "engines diverged (threads={threads}): max |diff| = {worst:e}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn full_profile_grid_is_bit_identical() {
+    // Every translating profile × causal × variant that the paper grid
+    // exercises, at a debug-friendly size.
+    for profile in [
+        LlmProfile::deepseek_r1(),
+        LlmProfile::deepseek_v3(),
+        LlmProfile::claude35(),
+        LlmProfile::gpt4o_plus_v3(),
+    ] {
+        for causal in [false, true] {
+            for variant in [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa] {
+                let spec = spec_of(variant, 128, 64, causal);
+                let r = generate_tl_code(&spec, &GpuArch::a100(), &profile);
+                assert_engines_agree(&r.program, 128, 128, 64, 64, 42, 4).unwrap_or_else(
+                    |e| panic!("{} {variant} causal={causal}: {e}", profile.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mla_asymmetric_dims_are_bit_identical() {
+    let mut spec = OpSpec::mla(256, true);
+    spec.batch = 1;
+    let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+    assert_engines_agree(
+        &r.program,
+        256,
+        256,
+        spec.qk_dim(),
+        spec.v_head_dim,
+        7,
+        3,
+    )
+    .unwrap();
+}
+
+#[test]
+fn proptest_random_tilings_profiles_and_thread_counts() {
+    // Property: for any valid (tiling, profile, causal, seed, threads),
+    // compiled+parallel == walker exactly. Tilings are drawn from the
+    // divisor sets so BM | seq and BN | kv always hold.
+    #[derive(Debug, Clone)]
+    struct Case {
+        bm: usize,
+        bn: usize,
+        double_buffer: bool,
+        causal: bool,
+        profile_idx: usize,
+        threads: usize,
+        seed: u64,
+    }
+    let profiles =
+        [LlmProfile::deepseek_r1(), LlmProfile::deepseek_v3(), LlmProfile::claude35()];
+    let seq = 128usize;
+    proptest::check_no_shrink(
+        24,
+        |rng: &mut Rng| Case {
+            bm: [16, 32, 64, 128][rng.range(0, 3) as usize],
+            bn: [16, 32, 64, 128][rng.range(0, 3) as usize],
+            double_buffer: rng.range(0, 1) == 1,
+            causal: rng.range(0, 1) == 1,
+            profile_idx: rng.range(0, 2) as usize,
+            threads: rng.range(1, 8) as usize,
+            seed: rng.range(0, 1 << 30) as u64,
+        },
+        |case| {
+            let spec = spec_of(AttnVariant::Mha, seq, 64, case.causal);
+            let sketch = generate_sketch(&spec);
+            let tiling = Tiling {
+                bm: case.bm,
+                bn: case.bn,
+                double_buffer: case.double_buffer,
+                smem_bytes: 0,
+                reg_bytes: 0,
+                blocks_per_sm: 1,
+            };
+            let r = reason_with_tiling(&sketch, &spec, &profiles[case.profile_idx], tiling);
+            assert_engines_agree(&r.program, seq, seq, 64, 64, case.seed, case.threads)
+        },
+    );
+}
