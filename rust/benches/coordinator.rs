@@ -21,7 +21,7 @@ use qimeng::coordinator::batcher::plan_batches;
 use qimeng::coordinator::{
     run_stream, Coordinator, ExecutorSpec, FamilyKey, ServeConfig, ServeReport,
 };
-use qimeng::sketch::spec::AttnVariant;
+use qimeng::sketch::spec::{AttnVariant, KvLayout};
 use qimeng::util::bench::Bench;
 use qimeng::workload::request_stream_mixed;
 
@@ -62,6 +62,7 @@ fn main() {
         kv_heads: 4,
         seq: 256,
         kv: 256,
+        kv_layout: KvLayout::Contiguous,
     };
     let caps: BTreeMap<FamilyKey, Vec<usize>> = [(fam.clone(), vec![1, 4])].into();
     let pending: Vec<(usize, FamilyKey, bool)> =

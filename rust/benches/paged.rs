@@ -1,0 +1,177 @@
+//! KV-layout benches: the same attention problem executed through the
+//! compiled engine under the contiguous, paged (identity and shuffled
+//! block tables) and sliding-window layouts, single-thread and parallel.
+//! §Perf tracks the gather overhead (paged vs contiguous) and the
+//! window win (sliding vs full causal sweep).
+//!
+//! Modes:
+//!   cargo bench --bench paged              full run
+//!   cargo bench --bench paged -- --smoke   fewer samples (CI):
+//!       gates on paged(identity) == contiguous bit-identity, fails on
+//!       pathological gather slowdowns, records BENCH_paged.json.
+
+use std::collections::BTreeMap;
+
+use qimeng::reasoner::generate_tl_code;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use qimeng::util::bench::Bench;
+use qimeng::verify::exec::{default_threads, run_attention_tables, run_attention_threads};
+use qimeng::verify::tensor::Tensor2;
+use qimeng::verify::{identity_table, paged_shuffle};
+
+struct Row {
+    label: &'static str,
+    contiguous_us: f64,
+    paged_us: f64,
+    sliding_us: f64,
+    contiguous_nt_us: f64,
+    paged_nt_us: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke { 5 } else { 20 };
+    let threads = default_threads().max(2);
+    let arch = GpuArch::a100();
+    let profile = LlmProfile::deepseek_v3();
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    for (label, seq, page, window) in [
+        ("sweep_256_page16_win64", 256usize, 16usize, 64usize),
+        ("sweep_512_page32_win128", 512, 32, 128),
+    ] {
+        let mut base = OpSpec::benchmark(AttnVariant::Mha, seq, 64, true);
+        base.batch = 1;
+        let paged_spec = base.with_layout(KvLayout::Paged { page_size: page });
+        let sliding_spec = base.with_layout(KvLayout::Sliding { window });
+
+        let contiguous = generate_tl_code(&base, &arch, &profile).program;
+        let paged = generate_tl_code(&paged_spec, &arch, &profile).program;
+        let sliding = generate_tl_code(&sliding_spec, &arch, &profile).program;
+
+        let q = Tensor2::randn(seq, 64, 1);
+        let k = Tensor2::randn(seq, 64, 2);
+        let v = Tensor2::randn(seq, 64, 3);
+        let scale = 1.0 / 8.0;
+
+        let mut tables = BTreeMap::new();
+        tables.insert("block_table".to_string(), identity_table(seq / page));
+        let (kp, vp, table) = paged_shuffle(&k, &v, page, 0xBEEF);
+
+        // Bit-identity gate before timing anything: paged over the
+        // identity table must reproduce the contiguous bits exactly.
+        let want = run_attention_threads(&contiguous, &q, &k, &v, scale, 1).unwrap();
+        for t in [1usize, threads] {
+            let got = run_attention_tables(&paged, &q, &k, &v, scale, &tables, t).unwrap();
+            if got.data != want.data {
+                failures.push(format!("{label}: paged(identity, {t}t) != contiguous"));
+            }
+        }
+        {
+            let mut shuffled_tables = tables.clone();
+            shuffled_tables.insert("block_table".to_string(), table.clone());
+            let got =
+                run_attention_tables(&paged, &q, &kp, &vp, scale, &shuffled_tables, 1)
+                    .unwrap();
+            if got.data != want.data {
+                failures.push(format!("{label}: paged(shuffle) != contiguous"));
+            }
+        }
+
+        let mut shuffled = BTreeMap::new();
+        shuffled.insert("block_table".to_string(), table);
+
+        let c1 = Bench::new(format!("layout_contiguous_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&contiguous, &q, &k, &v, scale, 1).unwrap());
+        let p1 = Bench::new(format!("layout_paged_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| {
+                run_attention_tables(&paged, &q, &kp, &vp, scale, &shuffled, 1).unwrap()
+            });
+        let s1 = Bench::new(format!("layout_sliding_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&sliding, &q, &k, &v, scale, 1).unwrap());
+        let cn = Bench::new(format!("layout_contiguous_{threads}t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&contiguous, &q, &k, &v, scale, threads).unwrap());
+        let pn = Bench::new(format!("layout_paged_{threads}t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| {
+                run_attention_tables(&paged, &q, &kp, &vp, scale, &shuffled, threads)
+                    .unwrap()
+            });
+
+        let row = Row {
+            label,
+            contiguous_us: c1.mean.as_secs_f64() * 1e6,
+            paged_us: p1.mean.as_secs_f64() * 1e6,
+            sliding_us: s1.mean.as_secs_f64() * 1e6,
+            contiguous_nt_us: cn.mean.as_secs_f64() * 1e6,
+            paged_nt_us: pn.mean.as_secs_f64() * 1e6,
+        };
+        println!(
+            "  -> {label}: paged/contiguous = {:.2}x, sliding/contiguous = {:.2}x, paged 1t/{threads}t = {:.2}x",
+            row.paged_us / row.contiguous_us,
+            row.sliding_us / row.contiguous_us,
+            row.paged_us / row.paged_nt_us,
+        );
+        rows.push(row);
+    }
+
+    let mut json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"threads\": {threads},\n  \"sweeps\": [\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"contiguous_us\": {:.1}, \"paged_us\": {:.1}, \
+             \"sliding_us\": {:.1}, \"contiguous_nt_us\": {:.1}, \"paged_nt_us\": {:.1}, \
+             \"gather_overhead\": {:.3}, \"window_speedup\": {:.2}}}{}\n",
+            r.label,
+            r.contiguous_us,
+            r.paged_us,
+            r.sliding_us,
+            r.contiguous_nt_us,
+            r.paged_nt_us,
+            r.paged_us / r.contiguous_us,
+            r.contiguous_us / r.sliding_us,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    let max_overhead = rows
+        .iter()
+        .map(|r| r.paged_us / r.contiguous_us)
+        .fold(0.0f64, f64::max);
+    json.push_str(&format!("  ],\n  \"max_gather_overhead\": {max_overhead:.3}\n}}\n"));
+    if let Err(e) = std::fs::write("BENCH_paged.json", &json) {
+        eprintln!("warning: could not write BENCH_paged.json: {e}");
+    } else {
+        println!("recorded BENCH_paged.json:\n{json}");
+    }
+
+    // Regressions: numeric divergence always fails; in CI (smoke mode) a
+    // host-side gather must also stay within a small constant factor of
+    // the dense load (generous bound — CI machines are noisy). Full
+    // local runs report the overhead without gating on it.
+    if smoke && max_overhead > 3.0 {
+        failures.push(format!(
+            "paged gather {max_overhead:.2}x slower than contiguous (cap 3.0x)"
+        ));
+    }
+    if !failures.is_empty() {
+        eprintln!("paged bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

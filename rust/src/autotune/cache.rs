@@ -36,9 +36,11 @@ pub struct TuneEntry {
     pub evaluated: usize,
 }
 
-/// The spec half of a cache key (shape + dtype, no arch/backend). All
-/// fields are derivable both from an [`OpSpec`] (tuning time) and from an
-/// [`AttnSignature`] (serving time), so the two sides agree.
+/// The spec half of a cache key (shape + dtype + KV layout, no
+/// arch/backend). All fields are derivable both from an [`OpSpec`]
+/// (tuning time) and from an [`AttnSignature`] (serving time), so the
+/// two sides agree. The contiguous layout contributes an empty suffix,
+/// keeping pre-layout cache files valid.
 #[allow(clippy::too_many_arguments)]
 fn key_fields(
     variant: &str,
@@ -51,10 +53,12 @@ fn key_fields(
     seq: usize,
     kv: usize,
     dtype: &str,
+    layout: crate::sketch::spec::KvLayout,
 ) -> String {
     format!(
-        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}",
+        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}{}",
         if causal { "causal" } else { "full" },
+        layout.suffix(),
     )
 }
 
@@ -71,6 +75,7 @@ pub fn spec_part(spec: &OpSpec) -> String {
         spec.seq_len,
         spec.kv_len,
         spec.dtype.as_str(),
+        spec.kv_layout,
     )
 }
 
@@ -88,6 +93,7 @@ pub fn sig_part(sig: &AttnSignature) -> String {
         sig.seq,
         sig.kv,
         "f16",
+        sig.kv_layout,
     )
 }
 
@@ -477,6 +483,7 @@ mod tests {
             kv_heads: spec.num_kv_heads,
             seq: spec.seq_len,
             kv: spec.kv_len,
+            kv_layout: spec.kv_layout,
         };
         assert_eq!(spec_part(&spec), sig_part(&sig));
     }

@@ -83,10 +83,19 @@ const MAX_REGS_PER_THREAD: usize = 255;
 
 /// Hard feasibility constraints — the same limits the stage-1b prompt
 /// walks the LLM through, extended with the per-thread register ceiling
-/// that the warp-count knob trades against.
+/// that the warp-count knob trades against, and the paged layout's
+/// page-granularity constraint (a KV tile gathers whole pages, so the
+/// page size is coupled into the BM/BN/split-K space: candidates whose
+/// BN does not tile into pages are infeasible, and the paged-IO cost
+/// term prices the survivors).
 pub fn fits(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> bool {
     if smem_bytes_staged(spec, cand.bm, cand.bn, cand.stages) > arch.smem_per_block {
         return false;
+    }
+    if let Some(page) = spec.kv_layout.page_size() {
+        if page == 0 || cand.bn % page != 0 {
+            return false;
+        }
     }
     // Tiles larger than the (padded) problem waste the whole block.
     if cand.bm > spec.seq_len.next_power_of_two().max(32)
@@ -318,6 +327,26 @@ mod tests {
             model_seconds(&spec, &arch, &split) < model_seconds(&spec, &arch, &single),
             "split-K must win on a starved grid"
         );
+    }
+
+    #[test]
+    fn paged_space_couples_page_size_into_bn() {
+        use crate::sketch::spec::KvLayout;
+        let arch = GpuArch::a100();
+        // page 48 rejects every power-of-two BN except multiples of 48
+        // (none in the grid), so only the page-aligned warm starts and
+        // multiples survive.
+        let spec48 = mha(4096, 64).with_layout(KvLayout::Paged { page_size: 48 });
+        for c in enumerate(&spec48, &arch) {
+            assert!(c.bn % 48 == 0 || !fits(&spec48, &arch, &c), "{c} not page-aligned");
+        }
+        // page 16 keeps the whole grid.
+        let spec16 = mha(4096, 64).with_layout(KvLayout::Paged { page_size: 16 });
+        let space = enumerate(&spec16, &arch);
+        assert!(!space.is_empty());
+        for c in &space[..space.len().saturating_sub(2)] {
+            assert_eq!(c.bn % 16, 0);
+        }
     }
 
     #[test]

@@ -175,6 +175,7 @@ mod tests {
             kv_heads: 4,
             seq,
             kv: seq,
+            kv_layout: crate::sketch::spec::KvLayout::Contiguous,
         }
     }
 
@@ -188,6 +189,7 @@ mod tests {
             kv_heads: 4,
             seq: 1,
             kv,
+            kv_layout: crate::sketch::spec::KvLayout::Contiguous,
         }
     }
 

@@ -112,6 +112,7 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown --executor `{other}` (pjrt|reference)")),
     };
     let kv_budget_mb = args.get_usize("kv-budget-mb", 0)?;
+    let decode_layout = crate::sketch::spec::kv_layout_from_cli(args)?;
     args.finish()?;
 
     let coordinator = Coordinator::start(ServeConfig {
@@ -120,6 +121,7 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         shards,
         executor,
         kv_budget_bytes: if kv_budget_mb == 0 { usize::MAX } else { kv_budget_mb << 20 },
+        decode_layout,
         ..ServeConfig::default()
     })
     .map_err(|e| format!("{e:#}"))?;
@@ -156,6 +158,14 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         report.mean_occupancy
     );
     println!("{}", report.metrics_summary);
+    if coordinator.kv_pool.peak_bytes() > 0 {
+        println!(
+            "kv pool ({}): peak {:.2} MiB resident, {} deferred batch(es)",
+            decode_layout,
+            coordinator.kv_pool.peak_bytes() as f64 / (1 << 20) as f64,
+            coordinator.kv_pool.waits(),
+        );
+    }
     if let Some(snapshot) = coordinator.tune_snapshot() {
         if snapshot.observed_count() > 0 {
             println!(

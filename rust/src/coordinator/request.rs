@@ -3,10 +3,12 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::sketch::spec::AttnVariant;
+use crate::sketch::spec::{AttnVariant, KvLayout};
 
 /// The routing key: everything that identifies a kernel family + problem
-/// shape except the batch dimension (which the batcher chooses).
+/// shape except the batch dimension (which the batcher chooses). The KV
+/// layout is part of the family — a paged kernel takes a block-table
+/// operand, so paged and contiguous traffic can never share a batch.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FamilyKey {
     pub variant: AttnVariant,
@@ -17,6 +19,7 @@ pub struct FamilyKey {
     pub kv_heads: usize,
     pub seq: usize,
     pub kv: usize,
+    pub kv_layout: KvLayout,
 }
 
 /// Ingress lane: decode-shaped traffic (short query against a long KV
@@ -69,12 +72,29 @@ impl FamilyKey {
         self.q_heads * self.seq * self.v_dim
     }
 
-    /// Host bytes of K+V one batch slot pins (f32). The decode lane
-    /// clamps its batch capacities so `capacity * kv_bytes` stays inside
-    /// the configured KV-cache budget.
+    /// Host bytes of K+V one batch slot pins (f32), **by layout**: the
+    /// decode lane clamps its batch capacities so `capacity * kv_bytes`
+    /// stays inside the configured KV-cache budget, counting pages
+    /// actually resident instead of worst-case contiguous bytes.
+    ///
+    /// * Contiguous: the full dense cache.
+    /// * Paged: `ceil(kv / page) pages` of K and V, plus the block table
+    ///   (8 bytes per page) — dense rounded up to page granularity.
+    /// * Sliding: only the trailing `window` rows stay resident; older
+    ///   pages are recycled by the pool.
     pub fn kv_bytes(&self) -> usize {
-        (self.k_len() + self.v_len()) * std::mem::size_of::<f32>()
+        let row = (self.qk_dim + self.v_dim) * self.kv_heads * std::mem::size_of::<f32>();
+        match self.kv_layout {
+            KvLayout::Contiguous => self.kv * row,
+            KvLayout::Paged { page_size } => {
+                let page = page_size.max(1);
+                let pages = self.kv.div_ceil(page);
+                pages * page * row + pages * std::mem::size_of::<i64>()
+            }
+            KvLayout::Sliding { window } => self.kv.min(window) * row,
+        }
     }
+
 }
 
 /// One attention request: per-request Q/K/V (batch dim 1).
@@ -113,11 +133,40 @@ mod tests {
             kv_heads: 2,
             seq: 256,
             kv: 256,
+            kv_layout: KvLayout::Contiguous,
         };
         assert_eq!(f.q_len(), 8 * 256 * 64);
         assert_eq!(f.k_len(), 2 * 256 * 64);
         assert_eq!(f.out_len(), 8 * 256 * 64);
         assert_eq!(f.kv_bytes(), 2 * (2 * 256 * 64) * 4);
+    }
+
+    #[test]
+    fn kv_bytes_counts_resident_pages_not_worst_case() {
+        let dense = FamilyKey {
+            variant: AttnVariant::Mha,
+            causal: false,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq: 1,
+            kv: 1000, // deliberately not page-aligned
+            kv_layout: KvLayout::Contiguous,
+        };
+        let row = (64 + 64) * 4 * 4;
+        assert_eq!(dense.kv_bytes(), 1000 * row);
+        let paged = FamilyKey {
+            kv_layout: KvLayout::Paged { page_size: 16 },
+            ..dense.clone()
+        };
+        // 63 pages of 16 rows + 8-byte table entries.
+        assert_eq!(paged.kv_bytes(), 63 * 16 * row + 63 * 8);
+        let sliding = FamilyKey {
+            kv_layout: KvLayout::Sliding { window: 128 },
+            ..dense.clone()
+        };
+        assert_eq!(sliding.kv_bytes(), 128 * row, "only the window stays resident");
     }
 
     #[test]
@@ -131,6 +180,7 @@ mod tests {
             kv_heads: 4,
             seq: 256,
             kv: 256,
+            kv_layout: KvLayout::Contiguous,
         };
         assert_eq!(LaneKey::of(&f), LaneKey::Prefill);
         // One query row over a long cache: decode.

@@ -58,6 +58,7 @@ pub fn family_of(sig: &AttnSignature) -> FamilyKey {
         kv_heads: sig.kv_heads,
         seq: sig.seq,
         kv: sig.kv,
+        kv_layout: sig.kv_layout,
     }
 }
 
@@ -73,6 +74,74 @@ pub fn sig_of(fam: &FamilyKey, batch: usize) -> AttnSignature {
         kv_heads: fam.kv_heads,
         seq: fam.seq,
         kv: fam.kv,
+        kv_layout: fam.kv_layout,
+    }
+}
+
+/// Shared KV pool for the decode lanes, accounted in bytes of resident
+/// cache (layout-aware via [`FamilyKey::kv_bytes`]: paged families pin
+/// whole pages plus their block table, sliding families only their
+/// window). Decode batches reserve all-or-nothing before executing and
+/// release afterwards, so concurrent shards cannot overshoot
+/// `kv_budget_bytes` — with one progress guarantee: an empty pool always
+/// admits one batch (a single oversized batch must not livelock).
+#[derive(Debug)]
+pub struct PagedKvPool {
+    capacity_bytes: usize,
+    in_use: std::sync::atomic::AtomicUsize,
+    peak: std::sync::atomic::AtomicUsize,
+    /// Batches deferred because the pool was full (they retry on the
+    /// shard's next planning tick).
+    waits: std::sync::atomic::AtomicU64,
+}
+
+impl PagedKvPool {
+    pub fn new(capacity_bytes: usize) -> Self {
+        PagedKvPool {
+            capacity_bytes,
+            in_use: std::sync::atomic::AtomicUsize::new(0),
+            peak: std::sync::atomic::AtomicUsize::new(0),
+            waits: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Reserve `bytes` if they fit (or the pool is idle); false defers.
+    pub fn try_alloc(&self, bytes: usize) -> bool {
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur != 0 && cur.saturating_add(bytes) > self.capacity_bytes {
+                self.waits.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + bytes,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + bytes, Ordering::Relaxed);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn free(&self, bytes: usize) {
+        self.in_use.fetch_sub(bytes, Ordering::AcqRel);
+    }
+
+    pub fn in_use_bytes(&self) -> usize {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
     }
 }
 
@@ -443,14 +512,17 @@ impl ReferenceExecutor {
 
 /// Bottom-right-aligned causal attention for rectangular (decode) shapes:
 /// query row `r` sits at absolute position `kv - seq + r` and attends
-/// keys `0..=kv-seq+r`. The repo's square oracle aligns its mask
-/// top-left, which for `seq < kv` would wrongly blind a decode query to
-/// almost the whole cache; this agrees with it exactly when `seq == kv`.
+/// keys `0..=kv-seq+r` — clipped from below to `window` trailing keys
+/// when one is given (the sliding KV layout). The repo's square oracle
+/// aligns its mask top-left, which for `seq < kv` would wrongly blind a
+/// decode query to almost the whole cache; this agrees with it exactly
+/// when `seq == kv` and `window` is `None`.
 fn causal_rect_attention(
     qt: &crate::verify::tensor::Tensor2,
     kt: &crate::verify::tensor::Tensor2,
     vt: &crate::verify::tensor::Tensor2,
     scale: f32,
+    window: Option<usize>,
 ) -> crate::verify::tensor::Tensor2 {
     use crate::verify::tensor::{reference_attention, Tensor2};
     let (s, kvl, d, vd) = (qt.rows, kt.rows, qt.cols, vt.cols);
@@ -458,11 +530,23 @@ fn causal_rect_attention(
     let offset = kvl - s;
     let mut out = Tensor2 { rows: s, cols: vd, data: vec![0.0; s * vd] };
     for r in 0..s {
-        let visible = offset + r + 1;
+        let pos = offset + r;
+        let lo = match window {
+            Some(w) => (pos + 1).saturating_sub(w.max(1)),
+            None => 0,
+        };
+        let visible = pos + 1 - lo;
         let qrow = Tensor2 { rows: 1, cols: d, data: qt.row(r).to_vec() };
-        let ks = Tensor2 { rows: visible, cols: d, data: kt.data[..visible * d].to_vec() };
-        let vs =
-            Tensor2 { rows: visible, cols: vd, data: vt.data[..visible * vd].to_vec() };
+        let ks = Tensor2 {
+            rows: visible,
+            cols: d,
+            data: kt.data[lo * d..(pos + 1) * d].to_vec(),
+        };
+        let vs = Tensor2 {
+            rows: visible,
+            cols: vd,
+            data: vt.data[lo * vd..(pos + 1) * vd].to_vec(),
+        };
         let o = reference_attention(&qrow, &ks, &vs, scale, false);
         out.row_mut(r).copy_from_slice(&o.data);
     }
@@ -519,8 +603,12 @@ impl Executor for ReferenceExecutor {
                 cols: vd,
                 data: v[v_off..v_off + kvl * vd].to_vec(),
             };
-            let o = if fam.causal && s < kvl {
-                causal_rect_attention(&qt, &kt, &vt, scale)
+            let window = fam.kv_layout.window();
+            let o = if window.is_some() || (fam.causal && s < kvl) {
+                // The rect path covers every windowed family too: a
+                // sliding request attends only its trailing window,
+                // whether it is a decode row or a square causal sweep.
+                causal_rect_attention(&qt, &kt, &vt, scale, window)
             } else {
                 reference_attention(&qt, &kt, &vt, scale, fam.causal)
             };
@@ -647,7 +735,8 @@ impl Router {
     }
 }
 
-/// The running pool: router + N shard threads + the shared tune cache.
+/// The running pool: router + N shard threads + the shared tune cache
+/// and decode-lane KV pool.
 pub struct ExecutorPool {
     txs: Vec<Option<mpsc::Sender<AttnRequest>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -656,6 +745,7 @@ pub struct ExecutorPool {
     metrics: Arc<Metrics>,
     tune: Arc<Mutex<TuneCache>>,
     tune_path: Option<PathBuf>,
+    pub kv_pool: Arc<PagedKvPool>,
 }
 
 impl ExecutorPool {
@@ -669,6 +759,7 @@ impl ExecutorPool {
         metrics: Arc<Metrics>,
         tune: TuneCache,
         tune_path: Option<PathBuf>,
+        kv_pool: Arc<PagedKvPool>,
     ) -> Result<Self> {
         let shards = shards.max(1);
         // Reference shards split the machine's compute-thread budget so
@@ -688,6 +779,7 @@ impl ExecutorPool {
             let m = metrics.clone();
             let r = router.clone();
             let t = tune.clone();
+            let pool_ref = kv_pool.clone();
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("qimeng-shard-{shard}"))
@@ -712,7 +804,7 @@ impl ExecutorPool {
                         },
                     };
                     let _ = ready.send(Ok(()));
-                    shard_loop(shard, exec, rx, topo, window, m, r, t);
+                    shard_loop(shard, exec, rx, topo, window, m, r, t, pool_ref);
                 })
                 .with_context(|| format!("spawning shard {shard}"))?;
             txs.push(Some(tx));
@@ -725,7 +817,7 @@ impl ExecutorPool {
                 .context("shard died during startup")?
                 .map_err(|e| anyhow::anyhow!(e))?;
         }
-        Ok(ExecutorPool { txs, handles, router, topology, metrics, tune, tune_path })
+        Ok(ExecutorPool { txs, handles, router, topology, metrics, tune, tune_path, kv_pool })
     }
 
     /// Route one request to its shard. A send failure means the shard
@@ -786,6 +878,7 @@ fn shard_loop(
     metrics: Arc<Metrics>,
     router: Arc<Mutex<Router>>,
     tune: Arc<Mutex<TuneCache>>,
+    kv_pool: Arc<PagedKvPool>,
 ) {
     let mut pending: Vec<AttnRequest> = Vec::new();
     // Per-slot batch sequence numbers driving exploration probes.
@@ -849,6 +942,7 @@ fn shard_loop(
                 &metrics,
                 &router,
                 &tune,
+                &kv_pool,
             );
         }
 
@@ -888,11 +982,25 @@ fn execute_plans(
     metrics: &Metrics,
     router: &Mutex<Router>,
     tune: &Mutex<TuneCache>,
+    kv_pool: &PagedKvPool,
 ) {
     // Execute plans in order; collect consumed indices, then compact.
     let mut consumed: Vec<usize> = Vec::new();
     for plan in plans {
         let fam = plan.family.clone();
+        // Decode batches draw their KV residency (pages actually
+        // resident, per the family's layout) from the shared pool before
+        // executing; a full pool defers the batch to the next planning
+        // tick — its members simply stay pending.
+        let kv_reserved = if plan.lane == LaneKey::Decode {
+            let bytes = plan.capacity.saturating_mul(fam.kv_bytes());
+            if !kv_pool.try_alloc(bytes) {
+                continue;
+            }
+            bytes
+        } else {
+            0
+        };
         let slot_key = (fam.clone(), plan.lane, plan.capacity);
         let info = match topo.artifacts.get(&slot_key) {
             Some(slot) => {
@@ -923,6 +1031,7 @@ fn execute_plans(
                 }
                 drop(rt);
                 consumed.extend(plan.members.iter().copied());
+                kv_pool.free(kv_reserved);
                 continue;
             }
         };
@@ -1007,6 +1116,7 @@ fn execute_plans(
             }
         }
         consumed.extend(plan.members.iter().copied());
+        kv_pool.free(kv_reserved);
     }
     // Remove consumed requests (descending index order keeps indices valid).
     consumed.sort_unstable_by(|a, b| b.cmp(a));
@@ -1031,6 +1141,7 @@ mod tests {
             kv_heads: 2,
             seq,
             kv,
+            kv_layout: crate::sketch::spec::KvLayout::Contiguous,
         }
     }
 
@@ -1178,14 +1289,46 @@ mod tests {
         let v = Tensor2::randn(kvl, d, 3);
         let scale = 1.0 / (d as f32).sqrt();
         // One causal decode row = full attention over the entire cache.
-        let got = causal_rect_attention(&q, &k, &v, scale);
+        let got = causal_rect_attention(&q, &k, &v, scale, None);
         let want = reference_attention(&q, &k, &v, scale, false);
         assert!(got.max_abs_diff(&want) < 1e-6);
         // Square case agrees with the repo oracle's causal mask exactly.
         let qs = Tensor2::randn(kvl, d, 4);
-        let got = causal_rect_attention(&qs, &k, &v, scale);
+        let got = causal_rect_attention(&qs, &k, &v, scale, None);
         let want = reference_attention(&qs, &k, &v, scale, true);
         assert!(got.max_abs_diff(&want) < 1e-6);
+        // Windowed square case agrees with the sliding oracle.
+        let got = causal_rect_attention(&qs, &k, &v, scale, Some(5));
+        let want = crate::verify::tensor::reference_attention_sliding(&qs, &k, &v, scale, 5);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn kv_pool_defers_then_admits() {
+        let pool = PagedKvPool::new(100);
+        assert!(pool.try_alloc(60));
+        assert!(!pool.try_alloc(60), "over budget must defer");
+        assert_eq!(pool.waits(), 1);
+        pool.free(60);
+        assert!(pool.try_alloc(60));
+        pool.free(60);
+        // Progress guarantee: an idle pool admits even an oversized batch.
+        assert!(pool.try_alloc(1000));
+        assert_eq!(pool.peak_bytes(), 1000);
+        pool.free(1000);
+        assert_eq!(pool.in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn sliding_family_clamps_on_resident_window_not_whole_cache() {
+        // A sliding decode family pins only its window, so the same KV
+        // budget admits more concurrent slots than the contiguous twin.
+        let dense = fam(1, 4096);
+        let sliding = FamilyKey {
+            kv_layout: crate::sketch::spec::KvLayout::Sliding { window: 512 },
+            ..dense.clone()
+        };
+        assert_eq!(sliding.kv_bytes() * 8, dense.kv_bytes());
     }
 
     #[test]

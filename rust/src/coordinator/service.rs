@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 
 use super::metrics::Metrics;
 use super::request::{AttnRequest, AttnResponse, FamilyKey};
-use super::scheduler::{ExecutorPool, ExecutorSpec, ServeTopology};
+use super::scheduler::{ExecutorPool, ExecutorSpec, PagedKvPool, ServeTopology};
 use crate::autotune::cache::TuneCache;
 
 pub use super::scheduler::family_of;
@@ -39,6 +39,10 @@ pub struct ServeConfig {
     /// `None` derives `<artifacts_dir>/tune.txt` when serving from a
     /// manifest, and disables persistence for synthetic topologies.
     pub tune_path: Option<PathBuf>,
+    /// KV layout of the decode-lane families when the topology is
+    /// synthetic (reference executor without a manifest); manifest
+    /// topologies carry the layout per artifact (`layout=` field).
+    pub decode_layout: crate::sketch::spec::KvLayout,
 }
 
 impl Default for ServeConfig {
@@ -50,6 +54,7 @@ impl Default for ServeConfig {
             executor: ExecutorSpec::Pjrt,
             kv_budget_bytes: usize::MAX,
             tune_path: None,
+            decode_layout: crate::sketch::spec::KvLayout::Contiguous,
         }
     }
 }
@@ -64,6 +69,8 @@ pub struct Coordinator {
     /// Routing slots where tuning evidence (searched or observed) picked
     /// among multiple artifact variants for the same signature.
     pub tuned_selections: usize,
+    /// Decode-lane KV residency pool (layout-aware byte accounting).
+    pub kv_pool: Arc<PagedKvPool>,
     shards: usize,
 }
 
@@ -85,7 +92,9 @@ impl Coordinator {
         } else {
             (
                 ServeTopology::synthetic(
-                    &crate::workload::reference_serving_families(),
+                    &crate::workload::reference_serving_families_layout(
+                        config.decode_layout,
+                    ),
                     &[1, 2, 4, 8],
                 ),
                 false,
@@ -114,6 +123,7 @@ impl Coordinator {
             (have_manifest && matches!(config.executor, ExecutorSpec::Pjrt))
                 .then(|| config.artifacts_dir.join("tune.txt"))
         });
+        let kv_pool = Arc::new(PagedKvPool::new(config.kv_budget_bytes));
         let pool = ExecutorPool::start(
             shards,
             config.executor.clone(),
@@ -123,6 +133,7 @@ impl Coordinator {
             metrics.clone(),
             tune,
             tune_path,
+            kv_pool.clone(),
         )?;
         Ok(Coordinator {
             pool: Some(pool),
@@ -130,6 +141,7 @@ impl Coordinator {
             next_id: std::sync::atomic::AtomicU64::new(0),
             families,
             tuned_selections,
+            kv_pool,
             shards,
         })
     }

@@ -33,6 +33,15 @@
 //! that the pipeline ([`pipeline::run_tuned`]), the `tlc tune` CLI, and
 //! the serving registry/coordinator all consult.
 //!
+//! Every layer is **KV-layout-polymorphic**
+//! ([`sketch::spec::KvLayout`]): the same TL execution flow lowers to
+//! contiguous streaming loads, block-table-indexed page gathers (paged
+//! KV caches, the coordinate-gather `Copy` form), or window-clipped
+//! sweeps (sliding-window attention) — with the layout threaded through
+//! the reasoner, both execution engines, the verification gate, both
+//! backends, the cost model, the tuning cache keys and the serving
+//! coordinator's decode-lane KV pool (DESIGN.md §9).
+//!
 //! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in this
 //! environment) and the experiment index.
 
@@ -50,5 +59,5 @@ pub mod util;
 pub mod verify;
 pub mod workload;
 
-pub use sketch::spec::{AttnVariant, OpSpec};
+pub use sketch::spec::{AttnVariant, KvLayout, OpSpec};
 pub use tl::ast::TlProgram;

@@ -56,11 +56,16 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
                [--llm deepseek-v3|deepseek-r1|claude-3.5|gpt-4o|gpt-4o+v3]
                [--backend pallas|cute] [--out FILE] [--show sketch|tl|all]
                [--autotune] [--cache FILE]
+               [--kv-layout contiguous|paged|sliding] [--page-size N]
+               [--window N] — paged emits block-table-gathered K/V loads
+               (verified bit-identical to contiguous under an identity
+               table); sliding clips the KV sweep to the trailing window
   generate-all [--out-dir python/compile/kernels/generated]
   verify       same operator flags as generate
   ablate       --failure reshape|gemm [operator flags]
   tables       --table 1|2|3|4|5|6|7|8|9 | --figure 1 | --all
-  tune         [operator flags] [--target ...] [--backend pallas|cute]
+  tune         [operator flags incl. --kv-layout/--page-size/--window]
+               [--target ...] [--backend pallas|cute]
                [--grid] [--strategy auto|exhaustive|beam|greedy] [--seed N]
                [--measure] [--cache tune_cache.txt]
                --report prints observed-vs-modeled disagreement per
@@ -69,6 +74,9 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
   serve        [--artifacts artifacts] [--requests N] [--rate-hz F]
                [--window-ms N] [--seed N] [--shards N] [--decode-frac F]
                [--executor pjrt|reference] [--kv-budget-mb N]
+               [--kv-layout contiguous|paged|sliding] [--page-size N]
+               [--window N] — decode-lane families take the layout; the
+               KV budget clamps on pages actually resident (paged pool)
                --shards N spreads execution over N router-fed executor
                shards; --decode-frac F sends that fraction of traffic as
                decode-shaped requests (packed on the decode lane into

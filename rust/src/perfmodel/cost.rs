@@ -24,7 +24,7 @@
 //! non-causal, crossovers, OOM) is *predicted* by the model.
 
 use super::gpu::GpuArch;
-use crate::sketch::spec::OpSpec;
+use crate::sketch::spec::{KvLayout, OpSpec};
 
 /// Schedule kind — determines the calibration row and structural path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -171,6 +171,12 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
     } else {
         kv / bn as f64
     };
+    // Sliding layout: whole tiles below the window are skipped, so each
+    // q-block visits at most the window's tiles (plus one boundary tile).
+    let nkv = match spec.kv_layout {
+        KvLayout::Sliding { window } => nkv.min((window as f64 / bn as f64).ceil() + 1.0),
+        _ => nkv,
+    };
 
     // Per-KV-tile mma work (both GEMMs). Times are aggregate: total tile
     // work over the whole-GPU peak (full occupancy assumed; the paper's
@@ -197,14 +203,33 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
     // reuse (working set vs L2 capacity).
     let q_bytes = b * h * s * spec.qk_dim() as f64 * e;
     let o_bytes = b * h * s * spec.v_head_dim as f64 * e;
-    let kv_bytes_head = kv * gemm_width * e;
+    // Paged-IO term: K/V reads are page-granular — boundary rows lose
+    // coalescing (~2 rows' worth per page) and every page costs one
+    // 8-byte block-table entry. Sliding caps the per-q-block stream at
+    // the trailing window (plus the boundary tile) — and those pages are
+    // all read at full rate, so the causal reread halving does NOT apply
+    // to pages past the sliding window.
+    let mut kv_bytes_head = kv * gemm_width * e;
+    let mut causal_reread_half = if spec.causal { 0.5 } else { 1.0 };
+    match spec.kv_layout {
+        KvLayout::Contiguous => {}
+        KvLayout::Paged { page_size } => {
+            let page = page_size.max(1) as f64;
+            kv_bytes_head = kv_bytes_head * (1.0 + 2.0 / page) + (kv / page) * 8.0;
+        }
+        KvLayout::Sliding { window } => {
+            kv_bytes_head =
+                kv_bytes_head.min((window as f64 + bn as f64) * gemm_width * e);
+            causal_reread_half = 1.0;
+        }
+    }
     let kv_heads = (spec.batch * spec.num_kv_heads) as f64;
     // Fraction of K/V rereads that miss L2: 0 when a head's K/V fits with
     // room for the concurrently-active heads, -> 1 as it overflows.
     let active = (arch.sm_count as f64 / nqb.max(1.0)).min(kv_heads).max(1.0);
     let l2_pressure = (kv_bytes_head * active) / arch.l2_bytes as f64;
     let miss = (l2_pressure / (1.0 + l2_pressure)).min(1.0);
-    let reread = 1.0 + (nqb - 1.0).max(0.0) * miss * if spec.causal { 0.5 } else { 1.0 };
+    let reread = 1.0 + (nqb - 1.0).max(0.0) * miss * causal_reread_half;
     let traffic = q_bytes + o_bytes + kv_bytes_head * kv_heads * reread;
     let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
 
@@ -307,6 +332,36 @@ mod tests {
             with.tflops,
             without.tflops
         );
+    }
+
+    #[test]
+    fn paged_io_term_charges_smaller_pages_more() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let base = mha(4096, 64, true);
+        let contiguous = estimate(&base, &arch, &sched).seconds;
+        let mut prev = contiguous;
+        for page in [64usize, 16, 4] {
+            let spec = base.with_layout(KvLayout::Paged { page_size: page });
+            let t = estimate(&spec, &arch, &sched).seconds;
+            assert!(t >= prev, "page {page}: paged must not get cheaper as pages shrink");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn sliding_window_wins_at_long_context_without_reread_halving() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let base = mha(16384, 64, true);
+        let win = base.with_layout(KvLayout::Sliding { window: 512 });
+        let full = estimate(&base, &arch, &sched);
+        let clipped = estimate(&win, &arch, &sched);
+        assert!(
+            clipped.seconds < full.seconds,
+            "a 512-window sweep of a 16k context must beat the full causal sweep"
+        );
+        assert!(clipped.dram_gb < full.dram_gb);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod tiling;
 use std::collections::BTreeMap;
 
 use crate::perfmodel::gpu::GpuArch;
-use crate::sketch::spec::{AttnVariant, OpSpec};
+use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use crate::tl::expr::Expr;
 use crate::tl::types::{DType, MemSpace};
@@ -93,6 +93,24 @@ pub fn reason_with_tiling(
     if spec.variant == AttnVariant::Nsa {
         stmts.push(param("num_selected", spec.nsa_topk as i64));
         stmts.push(param("window", spec.nsa_window as i64));
+    }
+    // Layout parameters: the engines and backends key gather granularity
+    // and window clipping off these bindings.
+    match spec.kv_layout {
+        KvLayout::Contiguous => {}
+        KvLayout::Paged { page_size } => {
+            // The gather assembles whole pages into a BN-row tile, so the
+            // effective page is the largest divisor of BN not exceeding
+            // the requested size (a no-op for the usual power-of-two
+            // page/tile pairs). This binding is authoritative: engines,
+            // backends and table builders all read it from the program.
+            let page = (1..=page_size.min(tiling.bn))
+                .rev()
+                .find(|p| tiling.bn % p == 0)
+                .unwrap_or(1);
+            stmts.push(param("page_size", page as i64));
+        }
+        KvLayout::Sliding { window } => stmts.push(param("window", window as i64)),
     }
 
     // 2. Allocations, in hierarchy order.
@@ -287,8 +305,16 @@ impl<'a> Ctx<'a> {
                     }
                     if coord.is_empty() {
                         let l = match (self.roles.get(tensor.as_str()), loop_var) {
-                            // K/V tiles stream with the loop variable.
-                            (Some(Role::KLike | Role::VLike), Some(v)) => Expr::sym(v),
+                            // K/V tiles stream with the loop variable —
+                            // through the block table under a paged layout
+                            // (the coordinate-gather form).
+                            (Some(Role::KLike | Role::VLike), Some(v)) => {
+                                if matches!(self.spec.kv_layout, KvLayout::Paged { .. }) {
+                                    Expr::idx("block_table", Expr::sym(v))
+                                } else {
+                                    Expr::sym(v)
+                                }
+                            }
                             _ => Expr::sym("block_idx"),
                         };
                         coord.push(("L".into(), l));
@@ -314,8 +340,8 @@ impl<'a> Ctx<'a> {
             }
             Stmt::Compute { op: ComputeOp::CausalMask, inputs, .. } => {
                 let lk = loop_var.unwrap_or("i");
-                vec![Stmt::Compute {
-                    op: ComputeOp::CausalMask,
+                let mask = |op: ComputeOp| Stmt::Compute {
+                    op,
                     inputs: inputs.clone(),
                     coord: vec![
                         ("Lq".into(), Expr::sym("block_idx")),
@@ -325,7 +351,14 @@ impl<'a> Ctx<'a> {
                     output: None,
                     accumulate: false,
                     new_var: false,
-                }]
+                };
+                let mut out = vec![mask(ComputeOp::CausalMask)];
+                // Sliding layout: also blind scores trailing the query by
+                // `window` or more (same Lq/Lk coordinates).
+                if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+                    out.push(mask(ComputeOp::WindowMask));
+                }
+                out
             }
             Stmt::Compute { op: ComputeOp::Gemm, inputs, output, accumulate, .. } => {
                 let mut inputs = inputs.clone();
@@ -427,6 +460,27 @@ impl<'a> Ctx<'a> {
                         }
                     }
                 }
+                // Sliding window: whole KV tiles strictly below the
+                // block's window are skipped. Tile `i` matters only if
+                // its last key row can still fall inside some query's
+                // window: `(i + 1) * BN + window > block_idx * BM`
+                // (conservative by one tile; WindowMask zeroes leftovers).
+                if is_kv_loop
+                    && matches!(self.spec.kv_layout, KvLayout::Sliding { .. })
+                {
+                    new_body = vec![Stmt::If {
+                        lhs: Expr::add(
+                            Expr::mul(
+                                Expr::add(Expr::sym(var.clone()), Expr::int(1)),
+                                Expr::sym("BN"),
+                            ),
+                            Expr::sym("window"),
+                        ),
+                        op: crate::tl::ast::CmpOp::Gt,
+                        rhs: Expr::mul(Expr::sym("block_idx"), Expr::sym("BM")),
+                        body: new_body,
+                    }];
+                }
                 vec![Stmt::For { var: var.clone(), start: start.clone(), end, body: new_body }]
             }
             Stmt::If { lhs, op, rhs, body } => {
@@ -451,10 +505,13 @@ impl<'a> Ctx<'a> {
                 // Only prefetch straight streamed tiles (not NSA's
                 // indirect selected blocks, whose next index is unknown).
                 if coord.is_empty() && self.roles.get(tensor.as_str()) == Some(&role) {
-                    let mut coord = vec![(
-                        "L".to_string(),
-                        Expr::add(Expr::sym(var), Expr::int(1)),
-                    )];
+                    let next = Expr::add(Expr::sym(var), Expr::int(1));
+                    let l = if matches!(self.spec.kv_layout, KvLayout::Paged { .. }) {
+                        Expr::idx("block_table", next)
+                    } else {
+                        next
+                    };
+                    let mut coord = vec![("L".to_string(), l)];
                     if self.spec.group_size() > 1 {
                         coord.insert(
                             0,
@@ -765,6 +822,84 @@ mod tests {
             }
         });
         assert!(saw_sel, "NSA selected-block indirection lost");
+    }
+
+    #[test]
+    fn paged_kv_copies_gather_through_block_table() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_layout(KvLayout::Paged { page_size: 16 });
+        let r = reasoned(&spec, &LlmProfile::deepseek_v3());
+        assert_eq!(r.program.params().get("page_size"), Some(&16));
+        let mut kv_gathers = 0;
+        let mut q_gathers = 0;
+        r.program.walk(|s| {
+            if let Stmt::Copy { tensor, coord, src: MemSpace::Global, .. } = s {
+                let gathered = coord.iter().any(|(_, e)| e.gather().is_some());
+                if tensor == "K" || tensor == "V" {
+                    assert!(gathered, "paged K/V copy must gather: {coord:?}");
+                    kv_gathers += 1;
+                } else {
+                    assert!(!gathered, "Q/O stay dense under a paged KV cache");
+                    q_gathers += 1;
+                }
+            }
+        });
+        assert!(kv_gathers >= 2, "K and V both gather");
+        assert!(q_gathers >= 1);
+        // Prefetch gathers the *next* tile through the table too.
+        let text = crate::tl::printer::print_program(&r.program);
+        assert!(text.contains("block_table[i]"), "{text}");
+        assert!(text.contains("block_table[i + 1]"), "prefetch must gather: {text}");
+        // And the gather form survives the text round trip.
+        let back = crate::tl::parser::parse_program(&text).unwrap();
+        assert_eq!(r.program.stmts, back.stmts);
+    }
+
+    #[test]
+    fn sliding_emits_window_guard_and_mask() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_layout(KvLayout::Sliding { window: 256 });
+        let r = reasoned(&spec, &LlmProfile::deepseek_v3());
+        assert_eq!(r.program.params().get("window"), Some(&256));
+        let mut saw_mask = false;
+        let mut saw_guard = false;
+        r.program.walk(|s| match s {
+            Stmt::Compute { op: ComputeOp::WindowMask, coord, .. } => {
+                assert!(coord.iter().any(|(n, _)| n == "Lq"));
+                saw_mask = true;
+            }
+            Stmt::If { lhs, body, .. } => {
+                let mut syms = Vec::new();
+                lhs.symbols(&mut syms);
+                if syms.contains(&"window".to_string()) {
+                    assert!(
+                        body.iter().any(|b| matches!(b, Stmt::Compute { .. })),
+                        "the tile-skip guard wraps the real loop body"
+                    );
+                    saw_guard = true;
+                }
+            }
+            _ => {}
+        });
+        assert!(saw_mask, "sliding layout must emit WindowMask");
+        assert!(saw_guard, "sliding layout must emit the tile-skip guard");
+    }
+
+    #[test]
+    fn contiguous_reasoning_is_unchanged_by_the_layout_refactor() {
+        // The layout-polymorphic rewrite must be a strict superset: a
+        // contiguous spec produces no gathers, no window params, no
+        // WindowMask.
+        let r = reasoned(&mha(), &LlmProfile::deepseek_v3());
+        assert!(!r.program.params().contains_key("page_size"));
+        assert!(!r.program.params().contains_key("window"));
+        r.program.walk(|s| match s {
+            Stmt::Copy { coord, .. } => {
+                assert!(coord.iter().all(|(_, e)| e.gather().is_none()))
+            }
+            Stmt::Compute { op, .. } => assert_ne!(*op, ComputeOp::WindowMask),
+            _ => {}
+        });
     }
 
     #[test]

@@ -96,6 +96,23 @@ fn score(arch: &GpuArch, spec: &OpSpec, bm: usize, bn: usize, db: bool) -> f64 {
     tile_eff * occ_eff * softmax_amort * tail * if db { 1.08 } else { 1.0 }
 }
 
+/// Round `bn` to a multiple of the paged layout's page size (no-op for
+/// other layouts): a KV tile must gather whole pages, so `BN % page == 0`
+/// is a hard constraint every tiling chooser applies.
+pub fn page_align_bn(spec: &OpSpec, bn: usize) -> usize {
+    match spec.kv_layout.page_size() {
+        Some(page) if page > 0 => {
+            if bn >= page {
+                bn - bn % page
+            } else {
+                // Tiles smaller than a page round up to one page.
+                page.min(spec.kv_len.max(1))
+            }
+        }
+        _ => bn,
+    }
+}
+
 /// Choose tile sizes for `spec` on `arch`.
 pub fn choose(
     strategy: TilingStrategy,
@@ -137,6 +154,7 @@ pub fn choose(
             (best.0, best.1)
         }
     };
+    let bn = page_align_bn(spec, bn);
     let smem = smem_bytes(spec, bm, bn, double_buffer);
     let regs = reg_bytes(spec, bm, bn);
     Tiling {

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{Executable, Runtime};
 use crate::autotune::cache::{self as tune_cache, TuneCache};
-use crate::sketch::spec::AttnVariant;
+use crate::sketch::spec::{AttnVariant, KvLayout};
 
 /// One manifest entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,6 +39,15 @@ impl ArtifactMeta {
 
     pub fn causal(&self) -> bool {
         self.fields.get("causal").map(|v| v == "1").unwrap_or(false)
+    }
+
+    /// KV layout from the optional `layout=` manifest field (absent or
+    /// unparseable means contiguous — pre-layout manifests stay valid).
+    pub fn kv_layout(&self) -> KvLayout {
+        self.fields
+            .get("layout")
+            .and_then(|v| KvLayout::parse_field(v))
+            .unwrap_or(KvLayout::Contiguous)
     }
 }
 
@@ -90,6 +99,10 @@ pub struct AttnSignature {
     pub kv_heads: usize,
     pub seq: usize,
     pub kv: usize,
+    /// Physical K/V layout this executable was compiled for: a paged
+    /// kernel takes a block-table operand and cannot serve contiguous
+    /// requests (or vice versa), so the layout is part of the signature.
+    pub kv_layout: KvLayout,
 }
 
 impl AttnSignature {
@@ -104,6 +117,7 @@ impl AttnSignature {
             kv_heads: m.usize_field("kv_heads")?,
             seq: m.usize_field("seq")?,
             kv: m.usize_field("kv")?,
+            kv_layout: m.kv_layout(),
         })
     }
 }
@@ -289,6 +303,7 @@ mod tests {
             kv_heads: 32,
             seq: 4096,
             kv: 4096,
+            kv_layout: KvLayout::Contiguous,
         };
         assert_eq!(reg.find(&sig).unwrap().id, "v1", "find keeps first-match semantics");
         assert_eq!(reg.find_best(&sig).unwrap().id, "v2", "find_best follows the tune cache");
@@ -337,6 +352,7 @@ mod tests {
             kv_heads: 32,
             seq: 4096,
             kv: 4096,
+            kv_layout: KvLayout::Contiguous,
         };
         assert_eq!(
             reg.find_best(&sig).unwrap().id,
@@ -364,10 +380,30 @@ mod tests {
             kv_heads: 2,
             seq: 256,
             kv: 256,
+            kv_layout: KvLayout::Contiguous,
         };
         assert_eq!(
             reg.find(&sig).map(|m| &m.id),
             reg.find_best(&sig).map(|m| &m.id)
+        );
+    }
+
+    #[test]
+    fn layout_field_distinguishes_signatures() {
+        let text = "artifact dense file=a.hlo.txt kind=attention variant=mha causal=1 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64\n\
+                    artifact paged file=b.hlo.txt kind=attention variant=mha causal=1 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64 layout=paged16\n";
+        let metas = parse_manifest(text).unwrap();
+        let dense = AttnSignature::from_meta(&metas[0]).unwrap();
+        let paged = AttnSignature::from_meta(&metas[1]).unwrap();
+        assert_eq!(dense.kv_layout, KvLayout::Contiguous);
+        assert_eq!(paged.kv_layout, KvLayout::Paged { page_size: 16 });
+        assert_ne!(dense, paged, "layout is part of the signature");
+        assert_ne!(
+            tune_cache::sig_part(&dense),
+            tune_cache::sig_part(&paged),
+            "tune cache keys grow the layout dimension"
         );
     }
 

@@ -56,6 +56,88 @@ impl fmt::Display for AttnVariant {
     }
 }
 
+/// Physical layout of the K/V operands. The generation pipeline is
+/// layout-*polymorphic*: the same TL execution flow lowers to contiguous
+/// streaming loads, block-table-indexed page gathers, or window-clipped
+/// streaming, and every layer from the reasoner to the serving
+/// coordinator keys on this dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum KvLayout {
+    /// K/V rows are dense in memory (the paper's benchmark layout).
+    #[default]
+    Contiguous,
+    /// Paged KV cache: physical storage is `page_size`-row pages located
+    /// through a block table (vLLM-style). A KV tile of `BN` rows gathers
+    /// `BN / page_size` pages; the identity table degenerates to
+    /// [`KvLayout::Contiguous`] bit-for-bit.
+    Paged { page_size: usize },
+    /// Sliding-window attention over a contiguous cache: only the last
+    /// `window` key positions of each query are attended (causal), so
+    /// whole KV tiles outside the window are skipped and only window
+    /// pages stay resident in the serving KV pool.
+    Sliding { window: usize },
+}
+
+impl KvLayout {
+    /// Stable identifier fragment. Contiguous is the empty suffix so
+    /// pre-layout artifact names, registry keys and tune caches keep
+    /// their exact historical spelling.
+    pub fn suffix(&self) -> String {
+        match self {
+            KvLayout::Contiguous => String::new(),
+            KvLayout::Paged { page_size } => format!("_paged{page_size}"),
+            KvLayout::Sliding { window } => format!("_win{window}"),
+        }
+    }
+
+    /// Parse the `layout=` manifest field / CLI spelling produced by
+    /// [`KvLayout::field`] (`contiguous`, `paged16`, `win512`).
+    pub fn parse_field(s: &str) -> Option<KvLayout> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "contiguous" {
+            return Some(KvLayout::Contiguous);
+        }
+        if let Some(n) = s.strip_prefix("paged") {
+            return n.parse().ok().map(|page_size| KvLayout::Paged { page_size });
+        }
+        if let Some(n) = s.strip_prefix("win") {
+            return n.parse().ok().map(|window| KvLayout::Sliding { window });
+        }
+        None
+    }
+
+    /// Manifest-field spelling (round-trips through [`Self::parse_field`]).
+    pub fn field(&self) -> String {
+        match self {
+            KvLayout::Contiguous => "contiguous".to_string(),
+            KvLayout::Paged { page_size } => format!("paged{page_size}"),
+            KvLayout::Sliding { window } => format!("win{window}"),
+        }
+    }
+
+    /// Rows per gather page (`None` for non-paged layouts).
+    pub fn page_size(&self) -> Option<usize> {
+        match self {
+            KvLayout::Paged { page_size } => Some(*page_size),
+            _ => None,
+        }
+    }
+
+    /// Sliding-window length (`None` for non-windowed layouts).
+    pub fn window(&self) -> Option<usize> {
+        match self {
+            KvLayout::Sliding { window } => Some(*window),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for KvLayout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.field())
+    }
+}
+
 /// One attention-operator instance: the input to sketch generation and to
 /// the performance model, and the cache key for compiled artifacts.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -85,6 +167,8 @@ pub struct OpSpec {
     pub nsa_topk: usize,
     /// NSA: sliding-window size.
     pub nsa_window: usize,
+    /// Physical K/V layout (contiguous, paged, sliding-window).
+    pub kv_layout: KvLayout,
 }
 
 /// Paper benchmark constants (§4.1): hidden dim 2048, total tokens 16k.
@@ -120,6 +204,7 @@ impl OpSpec {
             nsa_block: 0,
             nsa_topk: 0,
             nsa_window: 0,
+            kv_layout: KvLayout::Contiguous,
         }
     }
 
@@ -165,7 +250,8 @@ impl OpSpec {
     }
 
     /// Build a spec from the CLI operator flags (`--variant`, `--seq`,
-    /// `--head-dim`, `--causal`) — the one parser shared by the
+    /// `--head-dim`, `--causal`, `--kv-layout`, `--page-size`,
+    /// `--window`) — the one parser shared by the
     /// `tlc generate|verify|ablate|tune` subcommands.
     pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self, String> {
         let variant = AttnVariant::parse(args.get_or("variant", "mha"))
@@ -173,11 +259,31 @@ impl OpSpec {
         let seq = args.get_usize("seq", 1024)?;
         let head_dim = args.get_usize("head-dim", 64)?;
         let causal = args.get_bool("causal");
-        Ok(match variant {
+        let layout = kv_layout_from_cli(args)?;
+        let mut spec = match variant {
             AttnVariant::Mla => OpSpec::mla(seq, true),
             AttnVariant::Nsa => OpSpec::nsa(seq),
             _ => OpSpec::benchmark(variant, seq, head_dim, causal),
-        })
+        };
+        if layout != KvLayout::Contiguous && variant == AttnVariant::Nsa {
+            return Err("--kv-layout is not supported for NSA (its selection \
+                        branch is already an indirect layout)"
+                .into());
+        }
+        if matches!(layout, KvLayout::Sliding { .. }) && !spec.causal {
+            return Err("--kv-layout sliding requires --causal (the window \
+                        trails each query position)"
+                .into());
+        }
+        spec.kv_layout = layout;
+        Ok(spec)
+    }
+
+    /// Clone of this spec with a different K/V layout.
+    pub fn with_layout(&self, layout: KvLayout) -> Self {
+        let mut s = self.clone();
+        s.kv_layout = layout;
+        s
     }
 
     /// Q-heads per KV head (1 for MHA, >1 for GQA, all for MQA).
@@ -220,15 +326,17 @@ impl OpSpec {
 
     /// Stable identifier: artifact filename stem, registry key, kernel
     /// module name. Shape-free so one compiled kernel serves one
-    /// (variant, head-dim, causal, dtype) family; shapes are burned in at
-    /// AOT time and recorded separately in the manifest.
+    /// (variant, head-dim, causal, dtype, kv-layout) family; shapes are
+    /// burned in at AOT time and recorded separately in the manifest.
+    /// Contiguous layouts keep the historical (suffix-free) spelling.
     pub fn kernel_name(&self) -> String {
         format!(
-            "{}_hd{}_{}_{}",
+            "{}_hd{}_{}_{}{}",
             self.variant,
             self.head_dim,
             if self.causal { "causal" } else { "full" },
-            self.dtype
+            self.dtype,
+            self.kv_layout.suffix(),
         )
     }
 
@@ -242,6 +350,32 @@ impl OpSpec {
             self.num_kv_heads,
             self.seq_len
         )
+    }
+}
+
+/// Parse the shared `--kv-layout contiguous|paged|sliding` flag family
+/// (`--page-size N` for paged, `--window N` for sliding). Also accepts
+/// the compact manifest spellings (`paged16`, `win512`).
+pub fn kv_layout_from_cli(args: &crate::util::cli::Args) -> Result<KvLayout, String> {
+    let name = args.get_or("kv-layout", "contiguous").to_ascii_lowercase();
+    let page_size = args.get_usize("page-size", 16)?;
+    let window = args.get_usize("window", 512)?;
+    match name.as_str() {
+        "contiguous" | "dense" => Ok(KvLayout::Contiguous),
+        "paged" => {
+            if page_size == 0 {
+                return Err("--page-size must be positive".into());
+            }
+            Ok(KvLayout::Paged { page_size })
+        }
+        "sliding" | "window" => {
+            if window == 0 {
+                return Err("--window must be positive".into());
+            }
+            Ok(KvLayout::Sliding { window })
+        }
+        other => KvLayout::parse_field(other)
+            .ok_or_else(|| format!("unknown --kv-layout `{other}` (contiguous|paged|sliding)")),
     }
 }
 
@@ -307,5 +441,29 @@ mod tests {
     fn parse_variant() {
         assert_eq!(AttnVariant::parse("MLA"), Some(AttnVariant::Mla));
         assert_eq!(AttnVariant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn kv_layout_field_roundtrip() {
+        for l in [
+            KvLayout::Contiguous,
+            KvLayout::Paged { page_size: 16 },
+            KvLayout::Sliding { window: 512 },
+        ] {
+            assert_eq!(KvLayout::parse_field(&l.field()), Some(l));
+        }
+        assert_eq!(KvLayout::parse_field(""), Some(KvLayout::Contiguous));
+        assert_eq!(KvLayout::parse_field("pagedx"), None);
+    }
+
+    #[test]
+    fn kernel_name_grows_layout_dimension() {
+        let s = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        // Contiguous keeps the pre-layout spelling exactly.
+        assert_eq!(s.kernel_name(), "mha_hd64_causal_f16");
+        let p = s.with_layout(KvLayout::Paged { page_size: 16 });
+        assert_eq!(p.kernel_name(), "mha_hd64_causal_f16_paged16");
+        let w = s.with_layout(KvLayout::Sliding { window: 512 });
+        assert!(w.artifact_name().contains("_win512_"));
     }
 }

@@ -45,6 +45,13 @@ pub enum ComputeOp {
     /// list `[m, l, O]` the accumulator-rescale step is explicit.
     Softmax,
     CausalMask,
+    /// Sliding-window mask: scores whose key position trails the query by
+    /// `window` or more (`kpos <= qpos - window`, with `window` a `param`)
+    /// are masked. Emitted by the reasoner for [`KvLayout::Sliding`]
+    /// specs, always alongside `CausalMask`.
+    ///
+    /// [`KvLayout::Sliding`]: crate::sketch::spec::KvLayout::Sliding
+    WindowMask,
     Multiply,
     Add,
     Subtract,
@@ -62,6 +69,7 @@ impl ComputeOp {
             "gemm" => ComputeOp::Gemm,
             "softmax" => ComputeOp::Softmax,
             "causalmask" | "mask" => ComputeOp::CausalMask,
+            "windowmask" => ComputeOp::WindowMask,
             "multiply" | "mul" => ComputeOp::Multiply,
             "add" => ComputeOp::Add,
             "subtract" | "sub" => ComputeOp::Subtract,
@@ -79,6 +87,7 @@ impl ComputeOp {
             ComputeOp::Gemm => "GEMM",
             ComputeOp::Softmax => "Softmax",
             ComputeOp::CausalMask => "CausalMask",
+            ComputeOp::WindowMask => "WindowMask",
             ComputeOp::Multiply => "Multiply",
             ComputeOp::Add => "Add",
             ComputeOp::Subtract => "Subtract",

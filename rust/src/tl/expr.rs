@@ -29,6 +29,12 @@ pub enum Expr {
     Int(i64),
     Sym(String),
     Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Block-table gather: `block_table[i]` — the coordinate-gather form
+    /// used by paged-KV `Copy` statements. The named table is an integer
+    /// array supplied by the host at execution time (not an `i64`
+    /// binding), so plain [`Expr::eval`] rejects it; the TL engines
+    /// resolve it against their block tables.
+    Idx(String, Box<Expr>),
 }
 
 impl Expr {
@@ -54,6 +60,18 @@ impl Expr {
 
     pub fn div(a: Expr, b: Expr) -> Self {
         Expr::Bin(BinOp::Div, Box::new(a), Box::new(b))
+    }
+
+    pub fn idx(table: impl Into<String>, index: Expr) -> Self {
+        Expr::Idx(table.into(), Box::new(index))
+    }
+
+    /// The gather table this expression reads through, if any.
+    pub fn gather(&self) -> Option<(&str, &Expr)> {
+        match self {
+            Expr::Idx(t, e) => Some((t.as_str(), e)),
+            _ => None,
+        }
     }
 
     /// Evaluate under a binding environment. `Div` is exact integer
@@ -83,6 +101,9 @@ impl Expr {
                     }
                 }
             }
+            Expr::Idx(t, _) => Err(format!(
+                "gather `{t}[..]` needs a block table; only the TL engines evaluate it"
+            )),
         }
     }
 
@@ -99,12 +120,13 @@ impl Expr {
                 a.symbols(out);
                 b.symbols(out);
             }
+            Expr::Idx(_, e) => e.symbols(out),
         }
     }
 
     fn precedence(&self) -> u8 {
         match self {
-            Expr::Int(_) | Expr::Sym(_) => 3,
+            Expr::Int(_) | Expr::Sym(_) | Expr::Idx(_, _) => 3,
             Expr::Bin(BinOp::Mul | BinOp::Div, _, _) => 2,
             Expr::Bin(BinOp::Add | BinOp::Sub, _, _) => 1,
         }
@@ -116,6 +138,7 @@ impl fmt::Display for Expr {
         match self {
             Expr::Int(v) => write!(f, "{v}"),
             Expr::Sym(s) => write!(f, "{s}"),
+            Expr::Idx(t, e) => write!(f, "{t}[{e}]"),
             Expr::Bin(op, a, b) => {
                 let my_prec = self.precedence();
                 // Parenthesize sub-expressions of lower precedence; for the
@@ -182,6 +205,17 @@ mod tests {
         // a - (b - c) must keep parens.
         let e = Expr::sub(Expr::sym("a"), Expr::sub(Expr::sym("b"), Expr::sym("c")));
         assert_eq!(e.to_string(), "a - (b - c)");
+    }
+
+    #[test]
+    fn gather_display_and_eval() {
+        let e = Expr::idx("block_table", Expr::add(Expr::sym("i"), Expr::int(1)));
+        assert_eq!(e.to_string(), "block_table[i + 1]");
+        assert!(e.eval(&env(&[("i", 3)])).unwrap_err().contains("block table"));
+        let mut syms = Vec::new();
+        e.symbols(&mut syms);
+        assert_eq!(syms, vec!["i".to_string()]);
+        assert_eq!(e.gather().unwrap().0, "block_table");
     }
 
     #[test]

@@ -425,7 +425,16 @@ impl Parser {
     fn parse_factor(&mut self) -> Result<Expr, TlError> {
         match self.next() {
             Tok::Int(v) => Ok(Expr::Int(v)),
-            Tok::Ident(s) => Ok(Expr::Sym(s)),
+            Tok::Ident(s) => {
+                // Coordinate-gather form: `block_table[i]`.
+                if matches!(self.peek(), Tok::LBracket) {
+                    self.next();
+                    let idx = self.parse_expr()?;
+                    self.expect(&Tok::RBracket)?;
+                    return Ok(Expr::Idx(s, Box::new(idx)));
+                }
+                Ok(Expr::Sym(s))
+            }
             Tok::Minus => {
                 let inner = self.parse_factor()?;
                 Ok(Expr::Bin(BinOp::Sub, Box::new(Expr::Int(0)), Box::new(inner)))
@@ -643,6 +652,27 @@ Compute GEMM S, V_shared and accumulate O_register
 ";
         let p = parse_program(src).unwrap();
         assert_eq!(p.stmts.len(), 4);
+    }
+
+    #[test]
+    fn parse_gather_coordinate() {
+        let p = parse_program(
+            "Copy K (BN, HeadDim) in coordinate [H = h, L = block_table[i + 1]] from global to shared",
+        )
+        .unwrap();
+        match &p.stmts[0] {
+            Stmt::Copy { coord, .. } => {
+                assert_eq!(coord.len(), 2);
+                assert_eq!(
+                    coord[1],
+                    (
+                        "L".to_string(),
+                        Expr::idx("block_table", Expr::add(Expr::sym("i"), Expr::int(1)))
+                    )
+                );
+            }
+            other => panic!("wrong stmt {other:?}"),
+        }
     }
 
     #[test]

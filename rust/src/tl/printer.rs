@@ -131,6 +131,15 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_gather_coordinates() {
+        roundtrip("Copy K (BN, HeadDim) in coordinate [L = block_table[i]] from global to shared");
+        roundtrip(
+            "Copy V (BN, VDim) in coordinate [H = head_idx / group_size, L = block_table[i + 1]] from global to shared",
+        );
+        roundtrip("Compute WindowMask S in coordinate [Lq = block_idx, Lk = i]");
+    }
+
+    #[test]
     fn roundtrip_compute_variants() {
         roundtrip("Compute GEMM Q, K.T and get S");
         roundtrip("Compute GEMM S, V and accumulate O");

@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 use super::{Backend, TranslateError};
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::{infer_roles, Reasoned, Role};
-use crate::sketch::spec::{AttnVariant, OpSpec};
+use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use crate::tl::expr::{BinOp, Expr};
 use crate::tl::printer;
@@ -130,6 +130,10 @@ impl<'a> Emitter<'a> {
                 };
                 format!("({} {} {})", self.expr_py(a), sym, self.expr_py(b))
             }
+            Expr::Idx(t, e) => {
+                let table = if t == "block_table" { "bt_ref" } else { t.as_str() };
+                format!("{table}[{}]", self.expr_py(e))
+            }
         }
     }
 
@@ -174,6 +178,18 @@ impl<'a> Emitter<'a> {
         self.line(format!("GROUP_SIZE = {group}"));
         self.line(format!("SOFTMAX_SCALE = {:.17}", 1.0 / (qk as f64).sqrt()));
         self.line("MASK_VALUE = -1e30  # finite -inf: keeps online softmax NaN-free");
+        match self.spec.kv_layout {
+            KvLayout::Contiguous => {}
+            KvLayout::Paged { .. } => {
+                let page = params.get("page_size").copied().unwrap_or(bn);
+                self.line(format!("PAGE_SIZE = {page}  # rows per KV-cache page"));
+                self.line(format!("PAGES_PER_TILE = {}  # BN // PAGE_SIZE", bn / page.max(1)));
+            }
+            KvLayout::Sliding { .. } => {
+                let window = params.get("window").copied().unwrap_or(bn);
+                self.line(format!("WINDOW = {window}  # sliding-window length (keys per query)"));
+            }
+        }
         self.line("");
         self.line("META = {");
         self.line(format!("    \"name\": \"{name}\","));
@@ -182,12 +198,18 @@ impl<'a> Emitter<'a> {
         self.line(format!("    \"bm\": {bm}, \"bn\": {bn},"));
         self.line(format!("    \"qk_dim\": {qk}, \"v_dim\": {vd}, \"group_size\": {group},"));
         self.line(format!("    \"target\": \"{}\",", self.arch.name));
+        self.line(format!("    \"kv_layout\": \"{}\",", self.spec.kv_layout.field()));
         self.line("}");
         self.line("");
         self.line("");
 
         // ---- kernel ----
-        self.line("def _kernel(q_ref, k_ref, v_ref, o_ref):");
+        let paged = matches!(self.spec.kv_layout, KvLayout::Paged { .. });
+        if paged {
+            self.line("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref):");
+        } else {
+            self.line("def _kernel(q_ref, k_ref, v_ref, o_ref):");
+        }
         self.indent = 1;
         self.line("# One program instance per (batch, q-head, q-block) -- the TL");
         self.line("# \"thread block\". KV_LEN is burned in by the BlockSpecs below.");
@@ -223,7 +245,11 @@ impl<'a> Emitter<'a> {
         self.line("");
 
         // ---- host wrapper ----
-        self.line("def attention(q, k, v, interpret=True):");
+        if paged {
+            self.line("def attention(q, k, v, block_table, interpret=True):");
+        } else {
+            self.line("def attention(q, k, v, interpret=True):");
+        }
         self.indent = 1;
         self.line("\"\"\"Batched attention via the generated kernel.");
         self.line("");
@@ -231,6 +257,9 @@ impl<'a> Emitter<'a> {
         self.line("    q: (batch, num_q_heads, seq_len, QK_DIM)");
         self.line("    k: (batch, num_kv_heads, kv_len, QK_DIM)");
         self.line("    v: (batch, num_kv_heads, kv_len, V_DIM)");
+        if paged {
+            self.line("    block_table: (kv_len // PAGE_SIZE,) int32, logical -> physical page");
+        }
         self.line("Returns:");
         self.line("    (batch, num_q_heads, seq_len, V_DIM), dtype of q.");
         self.line("\"\"\"");
@@ -241,11 +270,21 @@ impl<'a> Emitter<'a> {
         self.line("assert kv_len % BN == 0, f\"kv_len {kv_len} % BN {BN} != 0\"");
         self.line("assert k.shape[1] * GROUP_SIZE == num_q_heads, \\");
         self.line("    f\"kv heads {k.shape[1]} * group {GROUP_SIZE} != q heads {num_q_heads}\"");
+        if paged {
+            self.line("assert kv_len % PAGE_SIZE == 0");
+            self.line("assert block_table.shape == (kv_len // PAGE_SIZE,)");
+        }
         self.line("grid = (batch, num_q_heads, seq_len // BM)");
         self.line("return pl.pallas_call(");
         self.line("    _kernel,");
         self.line("    grid=grid,");
         self.line("    in_specs=[");
+        if paged {
+            self.line("        # page-table operand: whole table visible to every program");
+            self.line(
+                "        pl.BlockSpec((kv_len // PAGE_SIZE,), lambda b, h, i: (0,)),",
+            );
+        }
         self.line("        # TL: Allocate Q in global (seq_len, HeadDim) with offset q_offset");
         self.line("        pl.BlockSpec((1, 1, BM, QK_DIM), lambda b, h, i: (b, h, i, 0)),");
         self.line("        # TL: Allocate K in global (kv_len, HeadDim) with offset kv_offset");
@@ -263,7 +302,11 @@ impl<'a> Emitter<'a> {
             "    out_shape=jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, V_DIM), q.dtype),",
         );
         self.line("    interpret=interpret,");
-        self.line(")(q, k, v)");
+        if paged {
+            self.line(")(block_table, q, k, v)");
+        } else {
+            self.line(")(q, k, v)");
+        }
         self.indent = 0;
         Ok(self.out.join("\n") + "\n")
     }
@@ -317,16 +360,33 @@ impl<'a> Emitter<'a> {
                         } else {
                             ("v_ref", "v")
                         };
-                        let l = coord
+                        let l_expr = coord
                             .iter()
                             .find(|(n, _)| n == "L")
-                            .map(|(_, e)| self.expr_py(e))
+                            .map(|(_, e)| e)
                             .ok_or_else(|| {
                                 TranslateError(format!("copy of `{tensor}` lacks L coord"))
                             })?;
-                        self.line(format!(
-                            "{pyname} = jax.lax.dynamic_slice_in_dim({refname}[0, 0], {l} * BN, BN, axis=0).astype(jnp.float32)"
-                        ));
+                        if let Some((_, idx)) = l_expr.gather() {
+                            // Gather load from the page-table operand:
+                            // assemble the BN-row tile page by page.
+                            let e = self.expr_py(idx);
+                            self.line(format!(
+                                "{pyname} = jnp.concatenate(["
+                            ));
+                            self.line(format!(
+                                "    jax.lax.dynamic_slice_in_dim({refname}[0, 0], bt_ref[({e}) * PAGES_PER_TILE + j] * PAGE_SIZE, PAGE_SIZE, axis=0)"
+                            ));
+                            self.line(
+                                "    for j in range(PAGES_PER_TILE)",
+                            );
+                            self.line("], axis=0).astype(jnp.float32)");
+                        } else {
+                            let l = self.expr_py(l_expr);
+                            self.line(format!(
+                                "{pyname} = jax.lax.dynamic_slice_in_dim({refname}[0, 0], {l} * BN, BN, axis=0).astype(jnp.float32)"
+                            ));
+                        }
                     }
                     other => {
                         return Err(TranslateError(format!(
@@ -385,14 +445,49 @@ impl<'a> Emitter<'a> {
         self.indent += 1;
         self.line(format!("{carry} = carry"));
         for s in body {
-            match s {
-                Stmt::Copy { .. } => self.emit_copy(s)?,
-                Stmt::Compute { .. } => self.emit_compute(s)?,
-                Stmt::Reshape { .. } => {
+            self.emit_loop_stmt(s)?;
+        }
+        self.line(format!("return ({carry})"));
+        self.indent -= 1;
+        let hi = self.expr_py(end);
+        self.line(format!("num_kv_blocks = {hi}"));
+        let lo = if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+            // Sliding window: tiles wholly below the block's window are
+            // never visited (the TL tile-skip guard, realized here as
+            // the loop lower bound).
+            self.line(
+                "lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)  # window clip",
+            );
+            "lo_kv".to_string()
+        } else {
+            self.expr_py(start)
+        };
+        self.line(format!(
+            "{carry} = jax.lax.fori_loop({lo}, num_kv_blocks, _body, ({carry}))"
+        ));
+        Ok(())
+    }
+
+    /// One statement of the KV loop body (recursing through the sliding
+    /// layout's tile-skip guard, whose body holds real compute).
+    fn emit_loop_stmt(&mut self, s: &Stmt) -> Result<(), TranslateError> {
+        match s {
+            Stmt::Copy { .. } => self.emit_copy(s)?,
+            Stmt::Compute { .. } => self.emit_compute(s)?,
+            Stmt::Reshape { .. } => {
+                self.tl_comment(s);
+                self.line("# (mma_C -> mma_A fragment relayout: in-register on the MXU)");
+            }
+            Stmt::If { body: inner, .. } => {
+                if inner.iter().any(|b| matches!(b, Stmt::Compute { .. })) {
+                    // Sliding tile-skip guard: correctness comes from the
+                    // WindowMask; the skip itself is the loop lower bound.
                     self.tl_comment(s);
-                    self.line("# (mma_C -> mma_A fragment relayout: in-register on the MXU)");
-                }
-                Stmt::If { body: inner, .. } => {
+                    self.line("# (tile-skip guard realized by the loop lower bound)");
+                    for b in inner {
+                        self.emit_loop_stmt(b)?;
+                    }
+                } else {
                     self.tl_comment(s);
                     self.line("# (double-buffer prefetch: realized by Mosaic software");
                     self.line("#  pipelining of the grid; no explicit code on TPU)");
@@ -402,20 +497,12 @@ impl<'a> Emitter<'a> {
                         self.line(format!("#   TL: {}", text.trim()));
                     }
                 }
-                Stmt::Allocate { .. } | Stmt::Param { .. } => {}
-                Stmt::For { .. } => {
-                    return Err(TranslateError("nested KV loops unsupported".into()))
-                }
+            }
+            Stmt::Allocate { .. } | Stmt::Param { .. } => {}
+            Stmt::For { .. } => {
+                return Err(TranslateError("nested KV loops unsupported".into()))
             }
         }
-        self.line(format!("return ({carry})"));
-        self.indent -= 1;
-        let lo = self.expr_py(start);
-        let hi = self.expr_py(end);
-        self.line(format!("num_kv_blocks = {hi}"));
-        self.line(format!(
-            "{carry} = jax.lax.fori_loop({lo}, num_kv_blocks, _body, ({carry}))"
-        ));
         Ok(())
     }
 
@@ -484,6 +571,29 @@ impl<'a> Emitter<'a> {
                 ));
                 self.line(format!(
                     "{sname} = jnp.where(k_pos <= q_pos, {sname}, MASK_VALUE)"
+                ));
+            }
+            ComputeOp::WindowMask => {
+                self.tl_comment(s);
+                let sname = self.py(&inputs[0].name);
+                let lq = coord
+                    .iter()
+                    .find(|(n, _)| n == "Lq")
+                    .map(|(_, e)| self.expr_py(e))
+                    .unwrap_or_else(|| "block_idx".into());
+                let lk = coord
+                    .iter()
+                    .find(|(n, _)| n == "Lk")
+                    .map(|(_, e)| self.expr_py(e))
+                    .unwrap_or_else(|| "i".into());
+                self.line(format!(
+                    "q_pos = {lq} * BM + jax.lax.broadcasted_iota(jnp.int32, (BM, BN), 0)"
+                ));
+                self.line(format!(
+                    "k_pos = {lk} * BN + jax.lax.broadcasted_iota(jnp.int32, (BM, BN), 1)"
+                ));
+                self.line(format!(
+                    "{sname} = jnp.where(k_pos + WINDOW > q_pos, {sname}, MASK_VALUE)"
                 ));
             }
             ComputeOp::Softmax => {
@@ -610,6 +720,31 @@ mod tests {
         ] {
             assert!(src.contains(needle), "missing `{needle}`:\n{src}");
         }
+    }
+
+    #[test]
+    fn paged_emits_gather_and_page_table_operand() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_layout(KvLayout::Paged { page_size: 16 });
+        let src = emit(&spec);
+        assert!(src.contains("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref):"));
+        assert!(src.contains("PAGE_SIZE = 16"));
+        assert!(src.contains("PAGES_PER_TILE"));
+        assert!(src.contains("bt_ref[(i) * PAGES_PER_TILE + j] * PAGE_SIZE"), "{src}");
+        assert!(src.contains(")(block_table, q, k, v)"));
+        assert!(src.contains("\"kv_layout\": \"paged16\""));
+    }
+
+    #[test]
+    fn sliding_emits_window_clip_and_mask() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_layout(KvLayout::Sliding { window: 256 });
+        let src = emit(&spec);
+        assert!(src.contains("WINDOW = 256"));
+        assert!(src.contains("jnp.where(k_pos + WINDOW > q_pos"), "{src}");
+        assert!(src.contains("lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)"));
+        // The contiguous K load survives (sliding keeps a dense cache).
+        assert!(src.contains("k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], i * BN, BN, axis=0)"));
     }
 
     #[test]

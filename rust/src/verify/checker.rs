@@ -87,6 +87,15 @@ pub fn check(program: &TlProgram) -> Vec<Diagnostic> {
             }
         }
     }
+    // E005 (paged layout): a KV tile gathers whole pages.
+    if let (Some(bn), Some(page)) = (params.get("BN"), params.get("page_size")) {
+        if *page <= 0 || bn % page != 0 {
+            diags.push(Diagnostic {
+                code: Code::BadDivisibility,
+                message: format!("BN = {bn} is not divisible by page_size = {page}"),
+            });
+        }
+    }
 
     // Tile shapes are collected once over the whole program (allocations
     // are hoisted to the top by stage 1b; GEMMs sit inside loop bodies).

@@ -45,6 +45,8 @@ use super::tensor::{self, MASK_VALUE};
 pub type SlotId = usize;
 /// Dense index of a read-only input global.
 pub type GlobalId = usize;
+/// Dense index of a host-supplied block table (coordinate gathers).
+pub type TableId = usize;
 
 /// Runtime-variable slot reserved for `block_idx`.
 const VAR_BLOCK_IDX: usize = 0;
@@ -124,6 +126,28 @@ impl Arith {
     }
 }
 
+/// Fused score-GEMM epilogue: the compiled op-list peephole collapses a
+/// `GEMM → scale (MapScalar·Mul, in place) → CausalMask → WindowMask`
+/// chain into one pass over the freshly produced tile. Per element the
+/// float ops and their order are exactly those of the separate ops, so
+/// fusion is bit-identical to the walker (enforced by
+/// `tests/compiled_interp.rs`).
+#[derive(Debug, Clone, Default)]
+struct GemmEpilogue {
+    /// `out[i] *= scalars[idx]`.
+    scale: Option<usize>,
+    /// Causal mask at `(lq, lk)` block coordinates.
+    causal: Option<(CExpr, CExpr)>,
+    /// Sliding-window mask at `(lq, lk)` with the compile-time window.
+    window: Option<(CExpr, CExpr, i64)>,
+}
+
+impl GemmEpilogue {
+    fn is_empty(&self) -> bool {
+        self.scale.is_none() && self.causal.is_none() && self.window.is_none()
+    }
+}
+
 /// One specialized instruction of the compiled block program. Slot
 /// operands are direct indices; all shapes are concrete.
 #[derive(Debug, Clone)]
@@ -132,6 +156,19 @@ enum Op {
     Zero { slot: SlotId, len: usize },
     /// Global → tile: `rows` rows at block coordinate `l`.
     Load { global: GlobalId, slot: SlotId, rows: usize, cols: usize, l: CExpr },
+    /// Global → tile through a block table (the coordinate-gather form
+    /// `[L = block_table[e]]`): the tile's page `j` comes from global
+    /// rows `table[e * (rows/page_rows) + j] * page_rows ..`. An identity
+    /// table copies exactly the bytes [`Op::Load`] would.
+    LoadGather {
+        global: GlobalId,
+        slot: SlotId,
+        rows: usize,
+        cols: usize,
+        table: TableId,
+        idx: CExpr,
+        page_rows: usize,
+    },
     /// Tile → the (single) output global at block coordinate `l`.
     Store { slot: SlotId, rows: usize, cols: usize, l: CExpr },
     /// Whole-tile shared ↔ register move.
@@ -151,6 +188,9 @@ enum Op {
         ta: bool,
         tb: bool,
         accumulate: bool,
+        /// Fused scale/mask application over the product (see
+        /// [`GemmEpilogue`]); empty unless the fusion pass fired.
+        epilogue: GemmEpilogue,
     },
     /// `out[i] = op(a[i], scalar)`.
     MapScalar { op: Arith, a: SlotId, scalar: usize, out: SlotId, len: usize },
@@ -166,6 +206,9 @@ enum Op {
     /// rows + r`, `kpos = lk * cols + c` (row-sliced: the mask boundary
     /// is computed per row instead of comparing per element).
     CausalMask { s: SlotId, rows: usize, cols: usize, lq: CExpr, lk: CExpr },
+    /// Sliding-window mask: `kpos <= qpos - window` entries become
+    /// [`MASK_VALUE`] (the lower-bound twin of [`Op::CausalMask`]).
+    WindowMask { s: SlotId, rows: usize, cols: usize, lq: CExpr, lk: CExpr, window: i64 },
     /// FlashAttention online-softmax block update (see
     /// [`super::interp::Interp`]'s `exec_online_softmax` for the
     /// recurrence); `acc` carries the 3-name form's rescaled accumulator.
@@ -209,6 +252,9 @@ pub struct CompiledBlockProgram {
     n_scalars: usize,
     block_local_store: bool,
     store_rows: Option<usize>,
+    /// Block-table names referenced by coordinate gathers, in first-use
+    /// order — the host supplies one `&[i64]` per name.
+    tables: Vec<String>,
 }
 
 /// Compile with the standard host bindings of the attention drivers
@@ -247,12 +293,17 @@ pub fn compile_with(
         max_rows: 1,
         block_local_store: true,
         store_rows: None,
+        tables: Vec::new(),
+        table_ids: BTreeMap::new(),
     };
     c.vars.insert("block_idx".to_string(), VAR_BLOCK_IDX);
     for (i, s) in scalar_names.iter().enumerate() {
         c.scalars.insert(s.to_string(), i);
     }
-    let ops = c.block(&program.stmts)?;
+    let mut ops = c.block(&program.stmts)?;
+    // Satellite of the paged-KV refactor, landed with it: fuse the
+    // scale + mask chain into the score-GEMM epilogue.
+    fuse_gemm_epilogues(&mut ops);
     Ok(CompiledBlockProgram {
         name: program.name.clone(),
         block_local_store: c.block_local_store && c.output.is_some(),
@@ -264,6 +315,7 @@ pub fn compile_with(
         max_rows: c.max_rows,
         n_scalars: scalar_names.len(),
         store_rows: c.store_rows,
+        tables: c.tables,
     })
 }
 
@@ -287,6 +339,8 @@ struct Compiler {
     max_rows: usize,
     block_local_store: bool,
     store_rows: Option<usize>,
+    tables: Vec<String>,
+    table_ids: BTreeMap<String, TableId>,
 }
 
 impl Compiler {
@@ -311,7 +365,23 @@ impl Compiler {
                     CExpr::Bin(*op, Box::new(a), Box::new(b))
                 }
             }
+            Expr::Idx(t, _) => {
+                return Err(format!(
+                    "gather `{t}[..]` is only supported as a Copy coordinate"
+                ))
+            }
         })
+    }
+
+    /// Table id for a gather coordinate's block table (first use defines).
+    fn table_id(&mut self, name: &str) -> TableId {
+        if let Some(&id) = self.table_ids.get(name) {
+            return id;
+        }
+        let id = self.tables.len();
+        self.tables.push(name.to_string());
+        self.table_ids.insert(name.to_string(), id);
+        id
     }
 
     fn eval_shape(&self, shape: &[Expr]) -> Result<(usize, usize), String> {
@@ -470,17 +540,15 @@ impl Compiler {
         if src == dst {
             return Err(format!("copy of `{tensor}` with identical src/dst"));
         }
-        let l = match coord.iter().find(|(n, _)| n == "L") {
-            Some((_, e)) => Some(self.cexpr(e)?),
-            None => None,
-        };
+        let l_expr = coord.iter().find(|(n, _)| n == "L").map(|(_, e)| e);
         match (src, dst) {
             (MemSpace::Global, _) => {
                 let rows = match shape {
                     Some(sh) => self.eval_shape(sh)?.0,
                     None => return Err(format!("global copy of `{tensor}` missing shape")),
                 };
-                let l = l.ok_or_else(|| format!("global copy of `{tensor}` missing L"))?;
+                let l_expr =
+                    l_expr.ok_or_else(|| format!("global copy of `{tensor}` missing L"))?;
                 let &(grows, gcols) = self
                     .globals_decl
                     .get(tensor)
@@ -505,14 +573,51 @@ impl Compiler {
                     }
                 };
                 let slot = self.def_slot(tensor, dst, rows, gcols)?;
-                ops.push(Op::Load { global: gid, slot, rows, cols: gcols, l });
+                match l_expr.gather() {
+                    Some((table, idx)) => {
+                        // Coordinate-gather form: assemble the tile from
+                        // `page_size`-row pages through the block table.
+                        let page_rows = match self.statics.get("page_size").copied() {
+                            Some(p) if p > 0 => p as usize,
+                            _ => rows, // one table entry per tile
+                        };
+                        if page_rows == 0 || rows % page_rows != 0 {
+                            return Err(format!(
+                                "gather of `{tensor}`: page_size {page_rows} does not \
+                                 divide the {rows}-row tile"
+                            ));
+                        }
+                        let table = self.table_id(table);
+                        let idx = self.cexpr(idx)?;
+                        ops.push(Op::LoadGather {
+                            global: gid,
+                            slot,
+                            rows,
+                            cols: gcols,
+                            table,
+                            idx,
+                            page_rows,
+                        });
+                    }
+                    None => {
+                        let l = self.cexpr(l_expr)?;
+                        ops.push(Op::Load { global: gid, slot, rows, cols: gcols, l });
+                    }
+                }
                 Ok(())
             }
             (_, MemSpace::Global) => {
                 let sid = self
                     .space_slot(tensor, src)
                     .ok_or_else(|| format!("`{tensor}` not in {src} for store to global"))?;
-                let l = l.ok_or_else(|| format!("store of `{tensor}` missing L"))?;
+                let l_expr =
+                    l_expr.ok_or_else(|| format!("store of `{tensor}` missing L"))?;
+                if l_expr.gather().is_some() {
+                    return Err(format!(
+                        "gather store of `{tensor}` unsupported: outputs are dense"
+                    ));
+                }
+                let l = self.cexpr(l_expr)?;
                 let &(grows, gcols) = self
                     .globals_decl
                     .get(tensor)
@@ -625,6 +730,7 @@ impl Compiler {
                         ta,
                         tb,
                         accumulate: true,
+                        epilogue: GemmEpilogue::default(),
                     });
                 } else {
                     let out = self.def_slot(out_name, MemSpace::Register, m, n)?;
@@ -641,6 +747,7 @@ impl Compiler {
                         ta,
                         tb,
                         accumulate: false,
+                        epilogue: GemmEpilogue::default(),
                     });
                 }
                 Ok(())
@@ -649,8 +756,8 @@ impl Compiler {
                 let s0 = inputs.first().ok_or("Softmax without input")?;
                 self.softmax(&s0.name, with, ops)
             }
-            ComputeOp::CausalMask => {
-                let s0 = inputs.first().ok_or("CausalMask without input")?;
+            ComputeOp::CausalMask | ComputeOp::WindowMask => {
+                let s0 = inputs.first().ok_or("mask without input")?;
                 let lq = self.coord_cexpr(coord, "Lq")?;
                 let lk = self.coord_cexpr(coord, "Lk")?;
                 let s = self
@@ -659,7 +766,16 @@ impl Compiler {
                     .copied()
                     .ok_or_else(|| format!("`{}` not in registers for mask", s0.name))?;
                 let (rows, cols) = self.shape(s);
-                ops.push(Op::CausalMask { s, rows, cols, lq, lk });
+                if matches!(op, ComputeOp::WindowMask) {
+                    let window = self
+                        .statics
+                        .get("window")
+                        .copied()
+                        .ok_or("WindowMask without a `window` param")?;
+                    ops.push(Op::WindowMask { s, rows, cols, lq, lk, window });
+                } else {
+                    ops.push(Op::CausalMask { s, rows, cols, lq, lk });
+                }
                 Ok(())
             }
             ComputeOp::Multiply | ComputeOp::Add | ComputeOp::Subtract | ComputeOp::Divide => {
@@ -785,6 +901,147 @@ impl Compiler {
     }
 }
 
+/// Shared causal-mask application: identical code runs for the
+/// standalone [`Op::CausalMask`] and the fused GEMM epilogue, so fusion
+/// cannot change a single bit.
+fn apply_causal_mask(buf: &mut [f32], rows: usize, cols: usize, lq: usize, lk: usize) {
+    for r in 0..rows {
+        let qpos = lq * rows + r;
+        let kpos0 = lk * cols;
+        let row = &mut buf[r * cols..(r + 1) * cols];
+        if kpos0 > qpos {
+            row.fill(MASK_VALUE);
+        } else {
+            let keep = qpos - kpos0 + 1;
+            if keep < cols {
+                row[keep..].fill(MASK_VALUE);
+            }
+        }
+    }
+}
+
+/// Sliding-window mask: entries with `kpos <= qpos - window` become
+/// [`MASK_VALUE`] (row-sliced like the causal mask).
+fn apply_window_mask(
+    buf: &mut [f32],
+    rows: usize,
+    cols: usize,
+    lq: usize,
+    lk: usize,
+    window: i64,
+) {
+    for r in 0..rows {
+        let qpos = (lq * rows + r) as i64;
+        let kpos0 = (lk * cols) as i64;
+        // Mask columns c with kpos0 + c + window <= qpos.
+        let dead = qpos - window - kpos0 + 1; // count of masked leading cols
+        if dead > 0 {
+            let dead = (dead as usize).min(cols);
+            buf[r * cols..r * cols + dead].fill(MASK_VALUE);
+        }
+    }
+}
+
+/// Does `op` read or write `slot`? Used by the epilogue-fusion scan to
+/// decide whether the scale/mask ops may commute past it (the reasoner
+/// interleaves the double-buffer prefetch between the score GEMM and
+/// its scale). Conservative: unknown op kinds are treated as touching.
+fn op_touches(op: &Op, slot: SlotId) -> bool {
+    match op {
+        Op::Load { slot: s, .. } | Op::LoadGather { slot: s, .. } => *s == slot,
+        Op::Move { src, dst, .. } => *src == slot || *dst == slot,
+        Op::If { body, .. } => body.iter().any(|o| op_touches(o, slot)),
+        _ => true,
+    }
+}
+
+/// One absorbable epilogue step, extracted from the op list before the
+/// GEMM is mutated (keeps the scan free of overlapping borrows).
+enum FuseStep {
+    Scale(usize),
+    Causal(CExpr, CExpr),
+    Window(CExpr, CExpr, i64),
+}
+
+/// Peephole pass over the op list (recursing into loop/guard bodies):
+/// `Gemm (fresh, unaliased) … MapScalar(Mul, in place) … CausalMask …
+/// WindowMask` over the same tile fuses into the GEMM's epilogue,
+/// skipping only intervening ops that provably don't touch the tile.
+fn fuse_gemm_epilogues(ops: &mut Vec<Op>) {
+    for op in ops.iter_mut() {
+        match op {
+            Op::For { body, .. } | Op::If { body, .. } => fuse_gemm_epilogues(body),
+            _ => {}
+        }
+    }
+    let mut i = 0;
+    while i < ops.len() {
+        let (out, len) = match &ops[i] {
+            Op::Gemm { accumulate: false, scratch: None, out, m, n, .. } => (*out, m * n),
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        // Repeatedly absorb the next op that touches `out` while it is a
+        // fusable epilogue step.
+        loop {
+            let mut j = i + 1;
+            while j < ops.len() && !op_touches(&ops[j], out) {
+                j += 1;
+            }
+            if j >= ops.len() {
+                break;
+            }
+            let step = match &ops[j] {
+                Op::MapScalar { op: Arith::Mul, a, out: o, scalar, len: l }
+                    if *a == out && *o == out && *l == len =>
+                {
+                    Some(FuseStep::Scale(*scalar))
+                }
+                Op::CausalMask { s, rows, cols, lq, lk }
+                    if *s == out && rows * cols == len =>
+                {
+                    Some(FuseStep::Causal(lq.clone(), lk.clone()))
+                }
+                Op::WindowMask { s, rows, cols, lq, lk, window }
+                    if *s == out && rows * cols == len =>
+                {
+                    Some(FuseStep::Window(lq.clone(), lk.clone(), *window))
+                }
+                _ => None,
+            };
+            let Some(step) = step else { break };
+            let Op::Gemm { epilogue, .. } = &mut ops[i] else { unreachable!() };
+            let accepted = match step {
+                // The epilogue applies scale → causal → window, so each
+                // step is only absorbable while that order holds.
+                FuseStep::Scale(scalar) if epilogue.is_empty() => {
+                    epilogue.scale = Some(scalar);
+                    true
+                }
+                FuseStep::Causal(lq, lk)
+                    if epilogue.causal.is_none() && epilogue.window.is_none() =>
+                {
+                    epilogue.causal = Some((lq, lk));
+                    true
+                }
+                FuseStep::Window(lq, lk, w) if epilogue.window.is_none() => {
+                    epilogue.window = Some((lq, lk, w));
+                    true
+                }
+                _ => false,
+            };
+            if accepted {
+                ops.remove(j);
+            } else {
+                break;
+            }
+        }
+        i += 1;
+    }
+}
+
 /// Validate `0 <= l` and `(l + 1) * rows <= total`; returns `l * rows`.
 fn block_start(l: i64, rows: usize, total: usize) -> Option<usize> {
     if l < 0 {
@@ -820,6 +1077,27 @@ impl CompiledBlockProgram {
         self.store_rows
     }
 
+    /// Block-table names referenced by coordinate gathers, in first-use
+    /// order; [`Self::execute_block_tables`] expects one `&[i64]` each.
+    pub fn tables(&self) -> &[String] {
+        &self.tables
+    }
+
+    /// Number of GEMM ops that absorbed a scale/mask epilogue (fusion
+    /// observability for tests and benches).
+    pub fn fused_epilogues(&self) -> usize {
+        fn count(ops: &[Op]) -> usize {
+            ops.iter()
+                .map(|op| match op {
+                    Op::Gemm { epilogue, .. } if !epilogue.is_empty() => 1,
+                    Op::For { body, .. } | Op::If { body, .. } => count(body),
+                    _ => 0,
+                })
+                .sum()
+        }
+        count(&self.ops)
+    }
+
     /// Fresh per-worker execution state sized for this program.
     pub fn new_arena(&self) -> TileArena {
         TileArena {
@@ -844,6 +1122,23 @@ impl CompiledBlockProgram {
         scalars: &[f32],
         arena: &mut TileArena,
     ) -> Result<(), String> {
+        self.execute_block_tables(inputs, out, out_row0, block_idx, scalars, &[], arena)
+    }
+
+    /// [`Self::execute_block`] with the block tables a gathering (paged)
+    /// program reads through: one `&[i64]` per name in [`Self::tables`].
+    /// Contiguous programs pass `&[]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_block_tables(
+        &self,
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        out_row0: usize,
+        block_idx: i64,
+        scalars: &[f32],
+        tables: &[&[i64]],
+        arena: &mut TileArena,
+    ) -> Result<(), String> {
         if inputs.len() != self.inputs.len() {
             return Err(format!(
                 "expected {} input globals, got {}",
@@ -854,9 +1149,17 @@ impl CompiledBlockProgram {
         if scalars.len() != self.n_scalars {
             return Err(format!("expected {} scalars, got {}", self.n_scalars, scalars.len()));
         }
+        if tables.len() != self.tables.len() {
+            return Err(format!(
+                "expected {} block table(s) ({:?}), got {}",
+                self.tables.len(),
+                self.tables,
+                tables.len()
+            ));
+        }
         debug_assert_eq!(arena.bufs.len(), self.slots.len());
         arena.vars[VAR_BLOCK_IDX] = block_idx;
-        self.run(&self.ops, inputs, out, out_row0, scalars, arena)
+        self.run(&self.ops, inputs, out, out_row0, scalars, tables, arena)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -867,6 +1170,7 @@ impl CompiledBlockProgram {
         out: &mut [f32],
         out_row0: usize,
         scalars: &[f32],
+        tables: &[&[i64]],
         arena: &mut TileArena,
     ) -> Result<(), String> {
         for op in ops {
@@ -884,6 +1188,43 @@ impl CompiledBlockProgram {
                     let len = rows * cols;
                     arena.bufs[*slot][..len]
                         .copy_from_slice(&inputs[*global][r0 * cols..r0 * cols + len]);
+                }
+                Op::LoadGather { global, slot, rows, cols, table, idx, page_rows } => {
+                    let meta = &self.inputs[*global];
+                    let e = idx.eval(&arena.vars)?;
+                    let t = tables[*table];
+                    let (rows, cols, page_rows) = (*rows, *cols, *page_rows);
+                    let ppt = rows / page_rows;
+                    if e < 0 {
+                        return Err(format!(
+                            "gather of `{}`: negative tile coordinate {e}",
+                            meta.name
+                        ));
+                    }
+                    let base = e as usize * ppt;
+                    if base + ppt > t.len() {
+                        return Err(format!(
+                            "gather of `{}`: tile {e} needs table entries [{base}, {}) \
+                             but the block table has {}",
+                            meta.name,
+                            base + ppt,
+                            t.len()
+                        ));
+                    }
+                    let buf = &mut arena.bufs[*slot];
+                    for j in 0..ppt {
+                        let phys = t[base + j];
+                        let r0 = block_start(phys, page_rows, meta.rows).ok_or_else(|| {
+                            format!(
+                                "gather of `{}`: physical page {phys} out of the \
+                                 {}-row global",
+                                meta.name, meta.rows
+                            )
+                        })?;
+                        let plen = page_rows * cols;
+                        buf[j * plen..(j + 1) * plen]
+                            .copy_from_slice(&inputs[*global][r0 * cols..r0 * cols + plen]);
+                    }
                 }
                 Op::Store { slot, rows, cols, l } => {
                     let meta = self.output.as_ref().expect("store without output meta");
@@ -908,7 +1249,7 @@ impl CompiledBlockProgram {
                     d[..*len].copy_from_slice(&arena.bufs[*src][..*len]);
                     arena.bufs[*dst] = d;
                 }
-                Op::Gemm { a, b, out: o, scratch, m, n, k, ta, tb, accumulate } => {
+                Op::Gemm { a, b, out: o, scratch, m, n, k, ta, tb, accumulate, epilogue } => {
                     let (m, n, k) = (*m, *n, *k);
                     match scratch {
                         None => {
@@ -923,6 +1264,25 @@ impl CompiledBlockProgram {
                                 *ta,
                                 *tb,
                             );
+                            // Fused scale + mask over the fresh product —
+                            // the exact float ops the separate op-list
+                            // performed, in the same order.
+                            if let Some(scalar) = epilogue.scale {
+                                let v = scalars[scalar];
+                                for x in &mut obuf[..m * n] {
+                                    *x = Arith::Mul.apply(*x, v);
+                                }
+                            }
+                            if let Some((lq, lk)) = &epilogue.causal {
+                                let lq = lq.eval(&arena.vars)? as usize;
+                                let lk = lk.eval(&arena.vars)? as usize;
+                                apply_causal_mask(&mut obuf[..m * n], m, n, lq, lk);
+                            }
+                            if let Some((lq, lk, w)) = &epilogue.window {
+                                let lq = lq.eval(&arena.vars)? as usize;
+                                let lk = lk.eval(&arena.vars)? as usize;
+                                apply_window_mask(&mut obuf[..m * n], m, n, lq, lk, *w);
+                            }
                             arena.bufs[*o] = obuf;
                         }
                         Some(t) => {
@@ -1081,20 +1441,20 @@ impl CompiledBlockProgram {
                     let lq = lq.eval(&arena.vars)? as usize;
                     let lk = lk.eval(&arena.vars)? as usize;
                     let (rows, cols) = (*rows, *cols);
-                    let sbuf = &mut arena.bufs[*s];
-                    for r in 0..rows {
-                        let qpos = lq * rows + r;
-                        let kpos0 = lk * cols;
-                        let row = &mut sbuf[r * cols..(r + 1) * cols];
-                        if kpos0 > qpos {
-                            row.fill(MASK_VALUE);
-                        } else {
-                            let keep = qpos - kpos0 + 1;
-                            if keep < cols {
-                                row[keep..].fill(MASK_VALUE);
-                            }
-                        }
-                    }
+                    apply_causal_mask(&mut arena.bufs[*s][..rows * cols], rows, cols, lq, lk);
+                }
+                Op::WindowMask { s, rows, cols, lq, lk, window } => {
+                    let lq = lq.eval(&arena.vars)? as usize;
+                    let lk = lk.eval(&arena.vars)? as usize;
+                    let (rows, cols) = (*rows, *cols);
+                    apply_window_mask(
+                        &mut arena.bufs[*s][..rows * cols],
+                        rows,
+                        cols,
+                        lq,
+                        lk,
+                        *window,
+                    );
                 }
                 Op::OnlineSoftmax { s, rows, cols, m, l, l_rows, acc } => {
                     let (rows, cols) = (*rows, *cols);
@@ -1180,12 +1540,12 @@ impl CompiledBlockProgram {
                     let hi = end.eval(&arena.vars)?;
                     for i in lo..hi {
                         arena.vars[*var] = i;
-                        self.run(body, inputs, out, out_row0, scalars, arena)?;
+                        self.run(body, inputs, out, out_row0, scalars, tables, arena)?;
                     }
                 }
                 Op::If { lhs, cmp, rhs, body } => {
                     if cmp.eval(lhs.eval(&arena.vars)?, rhs.eval(&arena.vars)?) {
-                        self.run(body, inputs, out, out_row0, scalars, arena)?;
+                        self.run(body, inputs, out, out_row0, scalars, tables, arena)?;
                     }
                 }
             }
@@ -1256,6 +1616,33 @@ mod tests {
         let p = crate::tl::parser::parse_program(src).unwrap();
         let err = compile(&p).unwrap_err();
         assert!(err.contains("GEMM contraction mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn scale_and_mask_fuse_into_score_gemm_epilogue() {
+        let p = generated_program();
+        let c = compile(&p).expect("compile");
+        assert_eq!(
+            c.fused_epilogues(),
+            1,
+            "the score GEMM must absorb the scale + causal-mask chain"
+        );
+    }
+
+    #[test]
+    fn gather_program_compiles_with_block_table() {
+        let src = "param BM = 4\nparam BN = 4\nparam seq_len = 8\nparam kv_len = 8\n\
+                   param HeadDim = 4\nparam VDim = 4\nparam page_size = 2\n\
+                   Allocate Q in global (seq_len, HeadDim)\n\
+                   Allocate K in global (kv_len, HeadDim)\n\
+                   Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared\n\
+                   Copy K (BN, HeadDim) in coordinate [L = block_table[0]] from global to shared\n\
+                   Compute GEMM Q, K.T and get S\n";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        match compile(&p) {
+            Ok(c) => assert_eq!(c.tables(), ["block_table".to_string()]),
+            Err(e) => panic!("gather program must compile: {e}"),
+        }
     }
 
     #[test]

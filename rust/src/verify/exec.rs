@@ -61,6 +61,23 @@ pub fn run_attention_threads(
     scale: f32,
     threads: usize,
 ) -> Result<Tensor2, String> {
+    run_attention_tables(program, q, k, v, scale, &std::collections::BTreeMap::new(), threads)
+}
+
+/// [`run_attention_threads`] with the block tables a paged (gathering)
+/// program reads through (`name → logical-page → physical-page`, at the
+/// program's `page_size` granularity). Contiguous programs pass an
+/// empty map. The sweep parallelizes exactly as the contiguous one —
+/// tables are shared read-only.
+pub fn run_attention_tables(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+) -> Result<Tensor2, String> {
     let params = program.params();
     let need = |n: &str| -> Result<i64, String> {
         params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
@@ -101,6 +118,13 @@ pub fn run_attention_threads(
         }
         ins.push(&t.data);
     }
+    let mut tbls: Vec<&[i64]> = Vec::with_capacity(compiled.tables().len());
+    for name in compiled.tables() {
+        let t = tables
+            .get(name)
+            .ok_or_else(|| format!("program gathers through `{name}` but no table was supplied"))?;
+        tbls.push(t.as_slice());
+    }
 
     let mut o = Tensor2::zeros(out_meta.rows, out_meta.cols);
     let nblocks = seq / bm;
@@ -114,7 +138,15 @@ pub fn run_attention_threads(
     if !parallel {
         let mut arena = compiled.new_arena();
         for b in 0..nblocks {
-            compiled.execute_block(&ins, &mut o.data, 0, b as i64, &[scale], &mut arena)?;
+            compiled.execute_block_tables(
+                &ins,
+                &mut o.data,
+                0,
+                b as i64,
+                &[scale],
+                &tbls,
+                &mut arena,
+            )?;
         }
         return Ok(o);
     }
@@ -133,18 +165,20 @@ pub fn run_attention_threads(
     }
     let compiled_ref = &compiled;
     let ins_ref = &ins;
+    let tbls_ref = &tbls;
     std::thread::scope(|scope| -> Result<(), String> {
         let mut handles = Vec::with_capacity(workers);
         for group in &mut buckets {
             handles.push(scope.spawn(move || -> Result<(), String> {
                 let mut arena = compiled_ref.new_arena();
                 for (b, rows) in group.iter_mut() {
-                    compiled_ref.execute_block(
+                    compiled_ref.execute_block_tables(
                         ins_ref,
                         rows,
                         *b * bm,
                         *b as i64,
                         &[scale],
+                        tbls_ref,
                         &mut arena,
                     )?;
                 }

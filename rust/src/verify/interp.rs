@@ -37,6 +37,9 @@ pub struct Interp<'g> {
     pub bindings: BTreeMap<String, i64>,
     /// Scalar float symbols (softmax_scale).
     pub scalars: BTreeMap<String, f32>,
+    /// Block tables for coordinate gathers (`[L = block_table[i]]`):
+    /// logical page → physical page, at `page_size`-row granularity.
+    pub tables: BTreeMap<String, Vec<i64>>,
 }
 
 impl<'g> Interp<'g> {
@@ -45,7 +48,14 @@ impl<'g> Interp<'g> {
         bindings: BTreeMap<String, i64>,
         scalars: BTreeMap<String, f32>,
     ) -> Self {
-        Interp { globals, shared: BTreeMap::new(), regs: BTreeMap::new(), bindings, scalars }
+        Interp {
+            globals,
+            shared: BTreeMap::new(),
+            regs: BTreeMap::new(),
+            bindings,
+            scalars,
+            tables: BTreeMap::new(),
+        }
     }
 
     fn eval(&self, e: &Expr) -> Result<i64, String> {
@@ -152,17 +162,60 @@ impl<'g> Interp<'g> {
         // Block coordinate along the row dimension ("L"); the head
         // coordinate ("H") is resolved by the host driver, which hands the
         // interpreter per-head tensors already.
-        let l = match coord.iter().find(|(n, _)| n == "L") {
-            Some((_, e)) => Some(self.eval(e)?),
-            None => None,
-        };
+        let l_expr = coord.iter().find(|(n, _)| n == "L").map(|(_, e)| e);
         match (src, dst) {
             (MemSpace::Global, _) => {
                 let rows = match shape {
                     Some(sh) => self.eval_shape(sh)?.0,
                     None => return Err(format!("global copy of `{tensor}` missing shape")),
                 };
-                let l = l.ok_or_else(|| format!("global copy of `{tensor}` missing L"))? as usize;
+                let l_expr =
+                    l_expr.ok_or_else(|| format!("global copy of `{tensor}` missing L"))?;
+                // Coordinate-gather form: assemble the tile from
+                // `page_size`-row pages through the block table (the
+                // same semantics as the compiled engine's LoadGather).
+                if let Some((table, idx)) = l_expr.gather() {
+                    let e = self.eval(idx)?;
+                    let page = self.bindings.get("page_size").copied().unwrap_or(rows as i64);
+                    if page <= 0 || rows as i64 % page != 0 {
+                        return Err(format!(
+                            "gather of `{tensor}`: page_size {page} does not divide \
+                             the {rows}-row tile"
+                        ));
+                    }
+                    let page = page as usize;
+                    let ppt = rows / page;
+                    let t = self
+                        .tables
+                        .get(table)
+                        .ok_or_else(|| format!("block table `{table}` missing"))?;
+                    let base = usize::try_from(e)
+                        .ok()
+                        .map(|e| e * ppt)
+                        .filter(|b| b + ppt <= t.len())
+                        .ok_or_else(|| {
+                            format!("gather of `{tensor}`: tile {e} outside the block table")
+                        })?;
+                    let g = self
+                        .globals
+                        .get(tensor)
+                        .ok_or_else(|| format!("global tensor `{tensor}` missing"))?;
+                    let mut tile = Tensor2::zeros(rows, g.cols);
+                    for j in 0..ppt {
+                        let phys = t[base + j];
+                        if phys < 0 || (phys as usize + 1) * page > g.rows {
+                            return Err(format!(
+                                "gather of `{tensor}`: physical page {phys} out of the \
+                                 {}-row global",
+                                g.rows
+                            ));
+                        }
+                        tile.write_rows(j * page, &g.slice_rows(phys as usize * page, page));
+                    }
+                    self.space_of_mut(dst).insert(tensor.to_string(), tile);
+                    return Ok(());
+                }
+                let l = self.eval(l_expr)? as usize;
                 let g = self
                     .globals
                     .get(tensor)
@@ -181,7 +234,14 @@ impl<'g> Interp<'g> {
                 let tile = self.space_of(src).get(tensor).cloned().ok_or_else(|| {
                     format!("`{tensor}` not in {src} for store to global")
                 })?;
-                let l = l.ok_or_else(|| format!("store of `{tensor}` missing L"))? as usize;
+                let l_expr =
+                    l_expr.ok_or_else(|| format!("store of `{tensor}` missing L"))?;
+                if l_expr.gather().is_some() {
+                    return Err(format!(
+                        "gather store of `{tensor}` unsupported: outputs are dense"
+                    ));
+                }
+                let l = self.eval(l_expr)? as usize;
                 let g = self
                     .globals
                     .get_mut(tensor)
@@ -253,6 +313,30 @@ impl<'g> Interp<'g> {
                     for c in 0..bn {
                         let kpos = lk as usize * bn + c;
                         if kpos > qpos {
+                            *s.at_mut(r, c) = MASK_VALUE;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            ComputeOp::WindowMask => {
+                let lq = self.coord_val(coord, "Lq")?;
+                let lk = self.coord_val(coord, "Lk")?;
+                let window = self
+                    .bindings
+                    .get("window")
+                    .copied()
+                    .ok_or("WindowMask without a `window` binding")?;
+                let s = self
+                    .regs
+                    .get_mut(&inputs[0].name)
+                    .ok_or_else(|| format!("`{}` not in registers for mask", inputs[0].name))?;
+                let (bm, bn) = (s.rows, s.cols);
+                for r in 0..bm {
+                    let qpos = (lq as usize * bm + r) as i64;
+                    for c in 0..bn {
+                        let kpos = (lk as usize * bn + c) as i64;
+                        if kpos + window <= qpos {
                             *s.at_mut(r, c) = MASK_VALUE;
                         }
                     }
@@ -483,6 +567,19 @@ pub fn run_attention(
     v: &Tensor2,
     scale: f32,
 ) -> Result<Tensor2, String> {
+    run_attention_tables(program, q, k, v, scale, &BTreeMap::new())
+}
+
+/// [`run_attention`] with the block tables a paged (gathering) program
+/// reads through. Contiguous programs pass an empty map.
+pub fn run_attention_tables(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    tables: &BTreeMap<String, Vec<i64>>,
+) -> Result<Tensor2, String> {
     let params = program.params();
     let need = |n: &str| -> Result<i64, String> {
         params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
@@ -517,6 +614,7 @@ pub fn run_attention(
         let mut scalars = BTreeMap::new();
         scalars.insert("softmax_scale".to_string(), scale);
         let mut interp = Interp::new(&mut globals, bindings, scalars);
+        interp.tables = tables.clone();
         interp.run(&program.stmts)?;
     }
     Ok(globals.remove("O").unwrap())

@@ -17,9 +17,9 @@ pub mod exec;
 pub mod interp;
 pub mod tensor;
 
-use crate::tl::ast::TlProgram;
+use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use checker::Diagnostic;
-use tensor::{reference_attention, Tensor2};
+use tensor::{reference_attention, reference_attention_sliding, Tensor2};
 
 /// Outcome of the verification gate.
 #[derive(Debug)]
@@ -33,9 +33,80 @@ pub struct VerifyReport {
 /// Numeric probe tolerance (f32 accumulation over ≤ a few hundred terms).
 pub const NUMERIC_TOL: f32 = 2e-4;
 
+/// Identity block table over `n` pages (paged layout ≡ contiguous).
+pub fn identity_table(n: usize) -> Vec<i64> {
+    (0..n as i64).collect()
+}
+
+/// Seeded physical page shuffle for paged-layout testing: returns the
+/// physically permuted twins of `k`/`v` plus the block table mapping
+/// logical page `p` to its physical slot (`table[p] = phys`), at
+/// `page`-row granularity. Gathering through the table from the
+/// permuted buffers reads exactly the bytes a contiguous load reads
+/// from the logical buffers.
+pub fn paged_shuffle(
+    k: &Tensor2,
+    v: &Tensor2,
+    page: usize,
+    seed: u64,
+) -> (Tensor2, Tensor2, Vec<i64>) {
+    assert!(page > 0 && k.rows % page == 0 && v.rows == k.rows, "bad page geometry");
+    let n = k.rows / page;
+    let mut table = identity_table(n);
+    // Fisher–Yates with the repo PRNG (deterministic per seed).
+    let mut rng = crate::util::prng::Rng::new(seed);
+    for i in (1..n).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        table.swap(i, j);
+    }
+    let mut kp = Tensor2::zeros(k.rows, k.cols);
+    let mut vp = Tensor2::zeros(v.rows, v.cols);
+    for (logical, &phys) in table.iter().enumerate() {
+        kp.write_rows(phys as usize * page, &k.slice_rows(logical * page, page));
+        vp.write_rows(phys as usize * page, &v.slice_rows(logical * page, page));
+    }
+    (kp, vp, table)
+}
+
+/// Does this program read K/V through a block table (coordinate-gather
+/// `Copy` statements)?
+pub fn uses_gather(program: &TlProgram) -> bool {
+    let mut found = false;
+    program.walk(|s| {
+        if let Stmt::Copy { coord, .. } = s {
+            if coord.iter().any(|(_, e)| e.gather().is_some()) {
+                found = true;
+            }
+        }
+    });
+    found
+}
+
+/// Does this program apply a sliding-window mask?
+pub fn uses_window(program: &TlProgram) -> bool {
+    let mut found = false;
+    program.walk(|s| {
+        if matches!(s, Stmt::Compute { op: ComputeOp::WindowMask, .. }) {
+            found = true;
+        }
+    });
+    found
+}
+
 /// Full verification: static checks, then (if clean and the program binds
-/// the standard attention params) a numeric probe on a reduced copy of the
-/// problem — `probe_seq` rows of Q/K/V with the program's own tiling.
+/// the standard attention params) a numeric probe on a reduced copy of
+/// the problem — `probe_seq` rows of Q/K/V with the program's own tiling.
+///
+/// The probe is **layout-polymorphic**, keyed off the program itself:
+///
+/// * a gathering (paged) program runs twice — once with the identity
+///   block table on the logical K/V, once with a seeded page shuffle on
+///   physically permuted K/V — and the two runs must agree **bit for
+///   bit** (the identity run is separately held bit-identical to the
+///   contiguous engine by `tests/paged.rs`);
+/// * a windowed (sliding) program is compared against the
+///   sliding-window reference oracle;
+/// * everything else follows the original contiguous path.
 pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyReport {
     let diagnostics = checker::check(program);
     if !diagnostics.is_empty() {
@@ -53,13 +124,36 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
         return VerifyReport { diagnostics, max_abs_diff: None, passed: true };
     };
 
-    // Reduced shape: 2 q-blocks, keeps the causal block-skipping path hot.
-    let probe_seq = (2 * bm.max(bn)) as usize;
+    // Reduced shape: 2 q-blocks, keeps the causal block-skipping path
+    // hot. The probe must tile by BM *and* BN (and, for paged programs,
+    // by the page size — which the reasoner keeps a divisor of BN), so
+    // size it on the lcm rather than the max: identical for the usual
+    // power-of-two pairs, correct for page-aligned tilings like BN=48.
+    fn gcd(a: usize, b: usize) -> usize {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+    let (bmu, bnu) = (bm.max(1) as usize, bn.max(1) as usize);
+    let probe_seq = 2 * (bmu * bnu / gcd(bmu, bnu));
+    let windowed = uses_window(program);
+    // Keep the window boundary inside the probe so the mask path is hot.
+    let probe_window = params
+        .get("window")
+        .map(|&w| (w as usize).clamp(1, probe_seq / 2))
+        .filter(|_| windowed);
     let mut probe = program.clone();
     for s in &mut probe.stmts {
-        if let crate::tl::ast::Stmt::Param { name, value } = s {
+        if let Stmt::Param { name, value } = s {
             if name == "seq_len" || name == "kv_len" {
                 *value = probe_seq as i64;
+            }
+            if name == "window" {
+                if let Some(w) = probe_window {
+                    *value = w as i64;
+                }
             }
         }
     }
@@ -68,25 +162,50 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
     let v = Tensor2::randn(probe_seq, vd as usize, seed + 2);
     let scale = 1.0 / (hd as f32).sqrt();
 
-    match exec::run_attention(&probe, &q, &k, &v, scale) {
-        Ok(got) => {
-            let want = reference_attention(&q, &k, &v, scale, causal);
-            let diff = got.max_abs_diff(&want);
-            VerifyReport {
-                diagnostics,
-                max_abs_diff: Some(diff),
-                passed: diff < NUMERIC_TOL,
-            }
+    let fail = |e: String| VerifyReport {
+        diagnostics: vec![Diagnostic {
+            code: checker::Code::GemmLayoutError,
+            message: format!("numeric probe failed to execute: {e}"),
+        }],
+        max_abs_diff: None,
+        passed: false,
+    };
+
+    let got = if uses_gather(&probe) {
+        // Paged probe: identity table on logical K/V, then a shuffled
+        // table on physically permuted K/V — bit-identical by contract.
+        let page = probe.params().get("page_size").copied().unwrap_or(bn) as usize;
+        if page == 0 || probe_seq % page != 0 {
+            return fail(format!("page_size {page} does not tile the {probe_seq}-row probe"));
         }
-        Err(e) => VerifyReport {
-            diagnostics: vec![Diagnostic {
-                code: checker::Code::GemmLayoutError,
-                message: format!("numeric probe failed to execute: {e}"),
-            }],
-            max_abs_diff: None,
-            passed: false,
-        },
-    }
+        let mut tables = std::collections::BTreeMap::new();
+        tables.insert("block_table".to_string(), identity_table(probe_seq / page));
+        let ident = match exec::run_attention_tables(&probe, &q, &k, &v, scale, &tables, exec::default_threads()) {
+            Ok(t) => t,
+            Err(e) => return fail(e),
+        };
+        let (kp, vp, table) = paged_shuffle(&k, &v, page, seed ^ 0x9A6ED);
+        tables.insert("block_table".to_string(), table);
+        match exec::run_attention_tables(&probe, &q, &kp, &vp, scale, &tables, exec::default_threads()) {
+            Ok(shuffled) if shuffled.data == ident.data => ident,
+            Ok(_) => {
+                return fail("paged gather diverged from the identity layout".to_string())
+            }
+            Err(e) => return fail(e),
+        }
+    } else {
+        match exec::run_attention(&probe, &q, &k, &v, scale) {
+            Ok(t) => t,
+            Err(e) => return fail(e),
+        }
+    };
+
+    let want = match probe_window {
+        Some(w) => reference_attention_sliding(&q, &k, &v, scale, w),
+        None => reference_attention(&q, &k, &v, scale, causal),
+    };
+    let diff = got.max_abs_diff(&want);
+    VerifyReport { diagnostics, max_abs_diff: Some(diff), passed: diff < NUMERIC_TOL }
 }
 
 #[cfg(test)]

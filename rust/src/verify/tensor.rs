@@ -306,6 +306,47 @@ pub fn reference_attention(
     s.matmul(v, false, false).expect("ref pv")
 }
 
+/// Host-side reference for causal sliding-window attention: query row
+/// `r` attends keys `(r - window, r]` — the oracle for
+/// [`crate::sketch::spec::KvLayout::Sliding`] programs.
+pub fn reference_attention_sliding(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    window: usize,
+) -> Tensor2 {
+    let mut s = q.matmul(k, false, true).expect("ref qk");
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        for x in row.iter_mut() {
+            *x *= scale;
+        }
+        if r + 1 < cols {
+            for x in &mut row[r + 1..] {
+                *x = MASK_VALUE;
+            }
+        }
+        // Window lower bound: keys at positions <= r - window are blind.
+        let lo = (r as i64 - window as i64 + 1).max(0) as usize;
+        for x in &mut row[..lo.min(cols)] {
+            *x = MASK_VALUE;
+        }
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    s.matmul(v, false, false).expect("ref pv")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,6 +468,19 @@ mod tests {
         for val in &o.data {
             assert!((val - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn sliding_reference_degenerates_to_causal_for_huge_windows() {
+        let q = Tensor2::randn(16, 8, 1);
+        let k = Tensor2::randn(16, 8, 2);
+        let v = Tensor2::randn(16, 8, 3);
+        let a = reference_attention(&q, &k, &v, 0.35, true);
+        let b = reference_attention_sliding(&q, &k, &v, 0.35, 1024);
+        assert_eq!(a.data, b.data, "window >= seq must equal plain causal");
+        // window = 1: each row attends only itself -> output == V.
+        let w1 = reference_attention_sliding(&q, &k, &v, 0.35, 1);
+        assert!(w1.max_abs_diff(&v) < 1e-5);
     }
 
     #[test]

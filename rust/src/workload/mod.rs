@@ -4,7 +4,7 @@
 //! serving coordinator.
 
 use crate::coordinator::request::{FamilyKey, LaneKey};
-use crate::sketch::spec::{AttnVariant, OpSpec};
+use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
 use crate::util::prng::Rng;
 
 /// The paper's sequence-length sweep: 512, 1k, ..., 16k.
@@ -127,6 +127,14 @@ pub fn decode_twin(f: &FamilyKey) -> FamilyKey {
 /// at seq 64 so the CPU oracle stays O(ms) per request even in debug
 /// builds (the scheduler tests serve dozens of these).
 pub fn reference_serving_families() -> Vec<FamilyKey> {
+    reference_serving_families_layout(KvLayout::Contiguous)
+}
+
+/// [`reference_serving_families`] with the decode twins carrying the
+/// given KV layout — `tlc serve --kv-layout paged` points the decode
+/// lane (and its KV pool accounting) at paged/sliding families while
+/// prefill stays contiguous.
+pub fn reference_serving_families_layout(decode_layout: KvLayout) -> Vec<FamilyKey> {
     let mut fams = Vec::new();
     for (variant, q_heads, kv_heads) in
         [(AttnVariant::Mha, 4, 4), (AttnVariant::Gqa, 8, 2), (AttnVariant::Mqa, 4, 1)]
@@ -140,11 +148,50 @@ pub fn reference_serving_families() -> Vec<FamilyKey> {
             kv_heads,
             seq: 64,
             kv: 64,
+            kv_layout: KvLayout::Contiguous,
         };
-        fams.push(decode_twin(&f));
+        let mut d = decode_twin(&f);
+        d.kv_layout = decode_layout;
+        fams.push(d);
         fams.push(f);
     }
     fams
+}
+
+/// Seeded paged-decode request stream: decode-shaped families over a
+/// paged KV cache (`page_size`-row pages), Poisson arrivals with a
+/// head-heavy family mix — the canonical traffic for the decode lane's
+/// paged KV pool. Deterministic per seed.
+pub fn paged_decode_stream(
+    n: usize,
+    rate_hz: f64,
+    page_size: usize,
+    max_kv: usize,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    let mut fams = Vec::new();
+    for (variant, q_heads, kv_heads) in
+        [(AttnVariant::Mha, 4, 4), (AttnVariant::Gqa, 8, 2), (AttnVariant::Mqa, 4, 1)]
+    {
+        for kv in [256usize, 1024, 4096] {
+            if kv > max_kv {
+                continue;
+            }
+            fams.push(FamilyKey {
+                variant,
+                causal: false, // one decode row attends the whole cache
+                qk_dim: 64,
+                v_dim: 64,
+                q_heads,
+                kv_heads,
+                seq: 1,
+                kv,
+                kv_layout: KvLayout::Paged { page_size },
+            });
+        }
+    }
+    assert!(!fams.is_empty(), "max_kv clamps away every paged decode shape");
+    request_stream_mixed(&fams, n, rate_hz, 1.0, seed)
 }
 
 /// Generate a Poisson-ish stream with a seeded prefill/decode mix:
@@ -214,6 +261,7 @@ pub fn real_model_decode_stream(
                 kv_heads: spec.num_kv_heads,
                 seq: 1,
                 kv: spec.kv_len,
+                kv_layout: spec.kv_layout,
             });
         }
     }
@@ -261,6 +309,7 @@ mod tests {
             kv_heads: 4,
             seq: 256,
             kv: 256,
+            kv_layout: KvLayout::Contiguous,
         };
         let a = request_stream(&[fam.clone()], 50, 100.0, 7);
         let b = request_stream(&[fam], 50, 100.0, 7);
@@ -302,6 +351,36 @@ mod tests {
     }
 
     #[test]
+    fn paged_decode_stream_is_decode_lane_paged_and_seeded() {
+        let a = paged_decode_stream(60, 1000.0, 16, 4096, 11);
+        let b = paged_decode_stream(60, 1000.0, 16, 4096, 11);
+        assert_eq!(a.len(), 60);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.family, y.family, "same seed, same stream");
+        }
+        for r in &a {
+            assert_eq!(LaneKey::of(&r.family), LaneKey::Decode);
+            assert_eq!(r.family.kv_layout, KvLayout::Paged { page_size: 16 });
+        }
+        // Clamp keeps only the small cache.
+        let small = paged_decode_stream(20, 1000.0, 16, 256, 11);
+        assert!(small.iter().all(|r| r.family.kv <= 256));
+    }
+
+    #[test]
+    fn layouted_reference_families_only_touch_decode_twins() {
+        let fams = reference_serving_families_layout(KvLayout::Sliding { window: 32 });
+        for f in &fams {
+            match LaneKey::of(f) {
+                LaneKey::Decode => {
+                    assert_eq!(f.kv_layout, KvLayout::Sliding { window: 32 })
+                }
+                LaneKey::Prefill => assert_eq!(f.kv_layout, KvLayout::Contiguous),
+            }
+        }
+    }
+
+    #[test]
     fn real_model_decode_stream_matches_table8_heads() {
         let stream = real_model_decode_stream(40, 1000.0, 2048, 3);
         assert_eq!(stream.len(), 40);
@@ -329,6 +408,7 @@ mod tests {
             kv_heads: 2,
             seq: 128,
             kv: 128,
+            kv_layout: KvLayout::Contiguous,
         };
         let r = SyntheticRequest {
             family: fam.clone(),

@@ -273,6 +273,7 @@ fn serving_sig_keys_resolve_tuned_specs() {
         kv_heads: spec.num_kv_heads,
         seq: spec.seq_len,
         kv: spec.kv_len,
+        kv_layout: spec.kv_layout,
     };
     let entry = tuner
         .cache()

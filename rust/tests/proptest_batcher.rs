@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use qimeng::coordinator::batcher::{plan_batches, plan_batches_lanes, LaneCaps};
 use qimeng::coordinator::{FamilyKey, LaneKey};
-use qimeng::sketch::spec::AttnVariant;
+use qimeng::sketch::spec::{AttnVariant, KvLayout};
 use qimeng::util::prng::Rng;
 use qimeng::util::proptest::{check, Config};
 
@@ -22,6 +22,7 @@ fn family(i: u64) -> FamilyKey {
         kv_heads: 4,
         seq: 256,
         kv: 256,
+        kv_layout: KvLayout::Contiguous,
     }
 }
 

@@ -4,7 +4,7 @@
 //! balanced, and rebalancing only fires past the hysteresis slack.
 
 use qimeng::coordinator::{FamilyKey, Router};
-use qimeng::sketch::spec::AttnVariant;
+use qimeng::sketch::spec::{AttnVariant, KvLayout};
 use qimeng::util::prng::Rng;
 use qimeng::util::proptest::{check, Config};
 
@@ -19,6 +19,7 @@ fn family(i: u64) -> FamilyKey {
         kv_heads: 4,
         seq: 256,
         kv: 256,
+        kv_layout: KvLayout::Contiguous,
     }
 }
 

@@ -116,6 +116,39 @@ fn served_outputs_match_oracle_for_every_family_and_lane() {
 }
 
 #[test]
+fn paged_decode_serves_against_the_kv_pool() {
+    use qimeng::sketch::spec::KvLayout;
+    // A modest KV budget: the pool must account every decode batch and
+    // (with concurrent shards) defer rather than overshoot.
+    let config = ServeConfig {
+        decode_layout: KvLayout::Paged { page_size: 16 },
+        kv_budget_bytes: 512 << 10,
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let fams = coordinator.families.clone();
+    let paged: Vec<_> = fams
+        .iter()
+        .filter(|f| matches!(f.kv_layout, KvLayout::Paged { .. }))
+        .collect();
+    assert!(!paged.is_empty(), "decode twins must carry the paged layout");
+    for f in &paged {
+        assert_eq!(LaneKey::of(f), LaneKey::Decode);
+    }
+
+    let kv_pool = coordinator.kv_pool.clone();
+    let stream = request_stream_mixed(&fams, 32, 1e6, 1.0, 13);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    assert_eq!(report.ok, 32, "errors: {} ({})", report.errors, report.metrics_summary);
+    assert!(
+        kv_pool.peak_bytes() > 0,
+        "decode batches must draw their residency from the pool"
+    );
+    coordinator.shutdown();
+    assert_eq!(kv_pool.in_use_bytes(), 0, "every reservation must be released");
+}
+
+#[test]
 fn unknown_family_is_rejected_not_dropped() {
     let coordinator = Coordinator::start(reference_config(2)).expect("start");
     let mut alien = coordinator.families[0].clone();

@@ -4,7 +4,7 @@
 use qimeng::perfmodel::gpu::GpuArch;
 use qimeng::reasoner::generate_tl_code;
 use qimeng::reasoner::profiles::LlmProfile;
-use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::sketch::spec::{AttnVariant, KvLayout, OpSpec};
 use qimeng::tl::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
 use qimeng::tl::expr::Expr;
 use qimeng::tl::types::{Frag, Layout, MemSpace};
@@ -41,6 +41,31 @@ fn rand_memspace(rng: &mut Rng) -> MemSpace {
     *rng.choice(&[MemSpace::Global, MemSpace::Shared, MemSpace::Register])
 }
 
+/// A coordinate value: plain expression or the coordinate-gather form
+/// (`block_table[expr]`) used by paged K/V copies.
+fn rand_coord_expr(rng: &mut Rng) -> Expr {
+    if rng.below(3) == 0 {
+        let tables = ["block_table", "sel_table", "bt"];
+        Expr::idx(*rng.choice(&tables), rand_expr(rng, 1))
+    } else {
+        rand_expr(rng, 1)
+    }
+}
+
+/// Coordinate list for a Copy: possibly empty, possibly multi-entry
+/// (`[H = ..., L = ...]`), with gather forms mixed in.
+fn rand_coords(rng: &mut Rng) -> Vec<(String, Expr)> {
+    match rng.below(4) {
+        0 => vec![],
+        1 => vec![("L".into(), rand_coord_expr(rng))],
+        2 => vec![("H".into(), rand_expr(rng, 1)), ("L".into(), rand_coord_expr(rng))],
+        _ => vec![
+            ("Lq".into(), rand_coord_expr(rng)),
+            ("Lk".into(), rand_coord_expr(rng)),
+        ],
+    }
+}
+
 fn rand_stmt(rng: &mut Rng, depth: usize) -> Stmt {
     match rng.below(if depth > 0 { 7 } else { 5 }) {
         0 => Stmt::Param { name: rand_ident(rng), value: rng.range(1, 512) },
@@ -57,11 +82,7 @@ fn rand_stmt(rng: &mut Rng, depth: usize) -> Stmt {
                 } else {
                     None
                 },
-                coord: if rng.bool() {
-                    vec![("L".into(), rand_expr(rng, 1))]
-                } else {
-                    vec![]
-                },
+                coord: rand_coords(rng),
                 src,
                 dst,
             }
@@ -80,6 +101,7 @@ fn rand_stmt(rng: &mut Rng, depth: usize) -> Stmt {
                 ComputeOp::Multiply,
                 ComputeOp::Divide,
                 ComputeOp::CausalMask,
+                ComputeOp::WindowMask,
             ];
             let op = rng.choice(&ops).clone();
             let n_inputs = if op == ComputeOp::Gemm { 2 } else { 1 + rng.below(2) as usize };
@@ -91,10 +113,19 @@ fn rand_stmt(rng: &mut Rng, depth: usize) -> Stmt {
             // (`and accumulate X`); the printer/parser pair cannot carry
             // it otherwise, matching the paper's surface syntax.
             let accumulate = output.is_some() && rng.below(4) == 0;
+            // Masks carry block coordinates (`in coordinate [...]`), as
+            // the reasoner emits them.
+            let coord = if matches!(op, ComputeOp::CausalMask | ComputeOp::WindowMask)
+                && rng.bool()
+            {
+                rand_coords(rng)
+            } else {
+                vec![]
+            };
             Stmt::Compute {
                 op,
                 inputs,
-                coord: vec![],
+                coord,
                 with: if rng.below(3) == 0 {
                     vec!["m".into(), "l".into()]
                 } else {
@@ -166,11 +197,20 @@ fn reasoned_programs_roundtrip_for_random_specs() {
             let hd = *rng.choice(&[64usize, 128]);
             let causal = rng.bool();
             let arch_i = rng.below(4);
-            (variant, seq, hd, causal, arch_i)
+            // Layout-polymorphic reasoning must round-trip too: the
+            // gather coordinates and window masks are part of the
+            // printable surface syntax.
+            let layout = match rng.below(3) {
+                0 => KvLayout::Contiguous,
+                1 => KvLayout::Paged { page_size: *rng.choice(&[8usize, 16, 32]) },
+                _ => KvLayout::Sliding { window: *rng.choice(&[128usize, 512]) },
+            };
+            (variant, seq, hd, causal, arch_i, layout)
         },
         |_| vec![],
-        |&(variant, seq, hd, causal, arch_i)| {
-            let spec = OpSpec::benchmark(variant, seq, hd, causal);
+        |&(variant, seq, hd, causal, arch_i, layout)| {
+            let causal = causal || matches!(layout, KvLayout::Sliding { .. });
+            let spec = OpSpec::benchmark(variant, seq, hd, causal).with_layout(layout);
             let arch = &GpuArch::all()[arch_i as usize];
             let r = generate_tl_code(&spec, arch, &LlmProfile::deepseek_r1());
             let text = print_program(&r.program);
