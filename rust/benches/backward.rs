@@ -1,0 +1,159 @@
+//! Backward-pass benches: the forward kernel vs the three-gradient
+//! backward bundle through the compiled engine, single-thread and
+//! parallel. §Perf tracks the backward/forward wall-clock ratio (the
+//! FlashAttention-2 accounting predicts ~2.5x from the 5-vs-2 GEMM
+//! count) and the parallel-sweep speedup of the KV-block-parallel dK/dV
+//! programs.
+//!
+//! Modes:
+//!   cargo bench --bench backward              full run
+//!   cargo bench --bench backward -- --smoke   fewer samples (CI):
+//!       gates on the gradient check (compiled engine vs the analytic
+//!       oracle within BACKWARD_NUMERIC_TOL) before timing anything,
+//!       records BENCH_backward.json.
+
+use std::collections::BTreeMap;
+
+use qimeng::reasoner::generate_tl_code;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::sketch::spec::{AttnVariant, Direction, OpSpec};
+use qimeng::sketch::{backward_sketches, GradTarget};
+use qimeng::tl::ast::TlProgram;
+use qimeng::util::bench::Bench;
+use qimeng::verify::exec::{default_threads, run_attention_threads, run_program_tables};
+use qimeng::verify::tensor::{reference_attention_grads, Tensor2};
+use qimeng::verify::BACKWARD_NUMERIC_TOL;
+
+struct Row {
+    label: &'static str,
+    forward_us: f64,
+    backward_us: f64,
+    forward_nt_us: f64,
+    backward_nt_us: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke { 5 } else { 20 };
+    let threads = default_threads().max(2);
+    let arch = GpuArch::a100();
+    let profile = LlmProfile::deepseek_v3();
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    for (label, seq) in [("sweep_128", 128usize), ("sweep_256", 256usize)] {
+        let mut fwd_spec = OpSpec::benchmark(AttnVariant::Mha, seq, 64, true);
+        fwd_spec.batch = 1;
+        let bwd_spec = fwd_spec.with_direction(Direction::Backward);
+
+        let forward = generate_tl_code(&fwd_spec, &arch, &profile).program;
+        let backward: Vec<(GradTarget, TlProgram)> = backward_sketches(&bwd_spec)
+            .into_iter()
+            .map(|(g, sk)| {
+                (g, qimeng::reasoner::reason(&sk, &bwd_spec, &arch, &profile).program)
+            })
+            .collect();
+
+        let q = Tensor2::randn(seq, 64, 1);
+        let k = Tensor2::randn(seq, 64, 2);
+        let v = Tensor2::randn(seq, 64, 3);
+        let dout = Tensor2::randn(seq, 64, 4);
+        let scale = 1.0 / 8.0;
+        let grads = reference_attention_grads(&q, &k, &v, &dout, scale, true, None);
+        let mut named: BTreeMap<&str, &Tensor2> = BTreeMap::new();
+        named.insert("Q", &q);
+        named.insert("K", &k);
+        named.insert("V", &v);
+        named.insert("dO", &dout);
+        named.insert("Lse", &grads.lse);
+        named.insert("Delta", &grads.delta);
+        let tables = BTreeMap::new();
+
+        // Gradient-check gate before timing anything.
+        for (grad, program) in &backward {
+            let got = run_program_tables(program, &named, scale, &tables, 1)
+                .unwrap_or_else(|e| panic!("{label}/{grad}: {e}"));
+            let want = match grad {
+                GradTarget::DQ => &grads.dq,
+                GradTarget::DK => &grads.dk,
+                GradTarget::DV => &grads.dv,
+            };
+            let diff = got.max_abs_diff(want);
+            if diff >= BACKWARD_NUMERIC_TOL {
+                failures.push(format!("{label}: {grad} gradient check failed ({diff})"));
+            }
+        }
+
+        let run_backward = |t: usize| {
+            for (_, program) in &backward {
+                run_program_tables(program, &named, scale, &tables, t).unwrap();
+            }
+        };
+
+        let f1 = Bench::new(format!("fwd_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&forward, &q, &k, &v, scale, 1).unwrap());
+        let b1 = Bench::new(format!("bwd_1t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_backward(1));
+        let fn_ = Bench::new(format!("fwd_{threads}t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_attention_threads(&forward, &q, &k, &v, scale, threads).unwrap());
+        let bn = Bench::new(format!("bwd_{threads}t_{label}"))
+            .warmup(1)
+            .samples(samples)
+            .run(|| run_backward(threads));
+
+        let row = Row {
+            label,
+            forward_us: f1.mean.as_secs_f64() * 1e6,
+            backward_us: b1.mean.as_secs_f64() * 1e6,
+            forward_nt_us: fn_.mean.as_secs_f64() * 1e6,
+            backward_nt_us: bn.mean.as_secs_f64() * 1e6,
+        };
+        println!(
+            "  -> {label}: backward/forward = {:.2}x (1t), backward 1t/{threads}t = {:.2}x",
+            row.backward_us / row.forward_us,
+            row.backward_us / row.backward_nt_us,
+        );
+        rows.push(row);
+    }
+
+    let mut json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"threads\": {threads},\n  \"sweeps\": [\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"forward_us\": {:.1}, \"backward_us\": {:.1}, \
+             \"forward_nt_us\": {:.1}, \"backward_nt_us\": {:.1}, \
+             \"bwd_over_fwd\": {:.2}, \"bwd_parallel_speedup\": {:.2}}}{}\n",
+            r.label,
+            r.forward_us,
+            r.backward_us,
+            r.forward_nt_us,
+            r.backward_nt_us,
+            r.backward_us / r.forward_us,
+            r.backward_us / r.backward_nt_us,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write("BENCH_backward.json", &json) {
+        eprintln!("warning: could not write BENCH_backward.json: {e}");
+    } else {
+        println!("recorded BENCH_backward.json:\n{json}");
+    }
+
+    if !failures.is_empty() {
+        eprintln!("backward bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

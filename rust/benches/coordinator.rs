@@ -63,6 +63,7 @@ fn main() {
         seq: 256,
         kv: 256,
         kv_layout: KvLayout::Contiguous,
+        direction: qimeng::sketch::spec::Direction::Forward,
     };
     let caps: BTreeMap<FamilyKey, Vec<usize>> = [(fam.clone(), vec![1, 4])].into();
     let pending: Vec<(usize, FamilyKey, bool)> =

@@ -4,8 +4,11 @@
 //!
 //! ```text
 //! # qimeng autotune cache v1
-//! tune mha_causal_qk64_v64_b4_h32kv32_s4096_kv4096_f16|A100|pallas bm=128 bn=64 stages=2 warps=4 split_k=1 us=161.238 strategy=exhaustive evaluated=210
+//! tune mha_causal_qk64_v64_b4_h32kv32_s4096_kv4096_f16|A100|pallas bm=128 bn=64 stages=2 warps=4 split_k=1 prefetch=1 us=161.238 strategy=exhaustive evaluated=210
 //! ```
+//!
+//! (`prefetch=` is the paged-layout page-ahead depth; files written
+//! before that dimension existed parse with the default of 1.)
 //!
 //! Repeated pipeline runs and the serving path read this file so the
 //! search cost is paid once per `(spec, arch, backend)`; hit/miss
@@ -36,11 +39,12 @@ pub struct TuneEntry {
     pub evaluated: usize,
 }
 
-/// The spec half of a cache key (shape + dtype + KV layout, no
-/// arch/backend). All fields are derivable both from an [`OpSpec`]
+/// The spec half of a cache key (shape + dtype + KV layout + direction,
+/// no arch/backend). All fields are derivable both from an [`OpSpec`]
 /// (tuning time) and from an [`AttnSignature`] (serving time), so the
-/// two sides agree. The contiguous layout contributes an empty suffix,
-/// keeping pre-layout cache files valid.
+/// two sides agree. The contiguous layout and the forward direction both
+/// contribute empty suffixes, keeping pre-layout/pre-direction cache
+/// files valid.
 #[allow(clippy::too_many_arguments)]
 fn key_fields(
     variant: &str,
@@ -54,11 +58,13 @@ fn key_fields(
     kv: usize,
     dtype: &str,
     layout: crate::sketch::spec::KvLayout,
+    direction: crate::sketch::spec::Direction,
 ) -> String {
     format!(
-        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}{}",
+        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}{}{}",
         if causal { "causal" } else { "full" },
         layout.suffix(),
+        direction.suffix(),
     )
 }
 
@@ -76,6 +82,7 @@ pub fn spec_part(spec: &OpSpec) -> String {
         spec.kv_len,
         spec.dtype.as_str(),
         spec.kv_layout,
+        spec.direction,
     )
 }
 
@@ -94,6 +101,7 @@ pub fn sig_part(sig: &AttnSignature) -> String {
         sig.kv,
         "f16",
         sig.kv_layout,
+        sig.direction,
     )
 }
 
@@ -185,6 +193,8 @@ impl TuneCache {
                     stages: usize_field("stages")?,
                     warps: usize_field("warps")?,
                     split_k: usize_field("split_k")?,
+                    // Pre-prefetch-dimension cache files default to 1.
+                    prefetch_pages: usize_field("prefetch").unwrap_or(1),
                 },
                 micros: {
                     let us: f64 = fields
@@ -212,13 +222,14 @@ impl TuneCache {
         let mut out = String::from("# qimeng autotune cache v1\n");
         for e in self.entries.values() {
             out.push_str(&format!(
-                "tune {} bm={} bn={} stages={} warps={} split_k={} us={:.6} strategy={} evaluated={}\n",
+                "tune {} bm={} bn={} stages={} warps={} split_k={} prefetch={} us={:.6} strategy={} evaluated={}\n",
                 e.key,
                 e.cand.bm,
                 e.cand.bn,
                 e.cand.stages,
                 e.cand.warps,
                 e.cand.split_k,
+                e.cand.prefetch_pages,
                 e.micros,
                 e.strategy,
                 e.evaluated,
@@ -407,7 +418,7 @@ mod tests {
     fn entry(key: &str, bm: usize) -> TuneEntry {
         TuneEntry {
             key: key.to_string(),
-            cand: Candidate { bm, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            cand: Candidate { bm, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
             micros: 123.456,
             strategy: "exhaustive".to_string(),
             evaluated: 210,
@@ -484,6 +495,7 @@ mod tests {
             seq: spec.seq_len,
             kv: spec.kv_len,
             kv_layout: spec.kv_layout,
+            direction: spec.direction,
         };
         assert_eq!(spec_part(&spec), sig_part(&sig));
     }
@@ -536,8 +548,8 @@ mod tests {
     #[test]
     fn observe_keeps_running_mean_per_variant() {
         let mut c = TuneCache::new();
-        let a = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
-        let b = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4 };
+        let a = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        let b = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4, prefetch_pages: 1 };
         c.observe("shape", a, 100.0);
         c.observe("shape", a, 300.0);
         c.observe("shape", b, 150.0);
@@ -557,7 +569,7 @@ mod tests {
         let mut c = TuneCache::new();
         let tuned = entry("shape|A100|pallas", 128);
         c.insert(tuned);
-        let fast = Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 4 };
+        let fast = Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 4, prefetch_pages: 1 };
         c.observe("shape", fast, 1.0); // measured host time, absurdly fast
         // Modeled ranking and endorsement ignore observed entries...
         assert_eq!(c.lookup_spec("shape").unwrap().cand.bm, 128);
@@ -573,8 +585,8 @@ mod tests {
     #[test]
     fn observed_for_ranks_fastest_first_per_shape() {
         let mut c = TuneCache::new();
-        let slow = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
-        let fast = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4 };
+        let slow = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        let fast = Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 4, prefetch_pages: 1 };
         c.observe("shapeA", slow, 300.0);
         c.observe("shapeA", fast, 100.0);
         c.observe("shapeB", slow, 50.0);
@@ -586,6 +598,32 @@ mod tests {
         assert_eq!(ranked[0].cand, fast);
         assert_eq!(ranked[1].cand, slow);
         assert!(c.observed_for("shapeC").is_empty());
+    }
+
+    #[test]
+    fn spec_part_grows_the_direction_dimension() {
+        use crate::sketch::spec::Direction;
+        let fwd = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        let bwd = fwd.with_direction(Direction::Backward);
+        // Forward keeps the exact pre-direction spelling; backward gets
+        // the suffix.
+        assert!(!spec_part(&fwd).ends_with("_bwd"));
+        assert_eq!(spec_part(&bwd), format!("{}_bwd", spec_part(&fwd)));
+    }
+
+    #[test]
+    fn prefetch_field_roundtrips_and_defaults_to_one() {
+        let mut c = TuneCache::new();
+        let mut e = entry("k|A100|pallas", 64);
+        e.cand.prefetch_pages = 2;
+        c.insert(e);
+        let parsed = TuneCache::parse(&c.render()).unwrap();
+        assert_eq!(parsed.get("k|A100|pallas").unwrap().cand.prefetch_pages, 2);
+        // Pre-prefetch cache lines (no prefetch= field) stay parseable.
+        let old = "tune k|A100|pallas bm=64 bn=64 stages=2 warps=4 split_k=1 \
+                   us=1.0 strategy=beam evaluated=1";
+        let parsed = TuneCache::parse(old).unwrap();
+        assert_eq!(parsed.get("k|A100|pallas").unwrap().cand.prefetch_pages, 1);
     }
 
     #[test]

@@ -80,8 +80,10 @@ pub fn probe_wallclock(
 
 /// Among model-score ties, pick the candidate with the fastest measured
 /// probe; candidates whose probe fails to execute (e.g. indirect NSA
-/// addressing the reduced probe cannot follow) keep their model
-/// ranking. Returns the winner (the first tie when nothing measures).
+/// addressing the reduced probe cannot follow, or backward specs —
+/// whose probes need the gradient operand set and today keep their
+/// analytical ranking) keep their model ranking. Returns the winner
+/// (the first tie when nothing measures).
 pub fn refine_ties(
     spec: &OpSpec,
     arch: &GpuArch,
@@ -109,7 +111,7 @@ mod tests {
     fn probe_measures_finite_positive_time() {
         let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
         let arch = GpuArch::a100();
-        let c = Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 };
+        let c = Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let d = probe_wallclock(&spec, &arch, &c, 0xC0FFEE).expect("probe runs");
         assert!(d > Duration::ZERO);
     }
@@ -119,8 +121,8 @@ mod tests {
         let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true);
         let arch = GpuArch::a100();
         let ties = [
-            Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 },
-            Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 1 },
+            Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
+            Candidate { bm: 32, bn: 32, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
         ];
         let winner = refine_ties(&spec, &arch, &ties, 7);
         assert!(ties.contains(&winner));

@@ -8,16 +8,25 @@
 //! schedule choice a first-class search problem:
 //!
 //! * [`space`] — the candidate space (BM/BN tiles, staging depth, warp
-//!   count, split-K) pruned by the reasoner's shared-memory / register /
-//!   occupancy limits, and its mapping onto [`crate::perfmodel::cost`]
-//!   schedules;
+//!   count, split-K, and — for paged KV layouts — the gather's
+//!   **prefetch depth**: one vs two pages ahead, scored against the
+//!   paged-IO term it hides and the extra staged page `fits` charges)
+//!   pruned by the reasoner's shared-memory / register / occupancy
+//!   limits, and its mapping onto [`crate::perfmodel::cost`] schedules;
 //! * [`search`] — pluggable exhaustive / beam / greedy searches, seeded
 //!   through [`crate::util::prng`] for reproducibility;
 //! * [`measure`] — optional refinement by timed execution through the
 //!   numeric TL interpreter (the no-GPU stand-in for on-device runs);
 //! * [`cache`] — the on-disk [`cache::TuneCache`], keyed by
-//!   `(OpSpec, GpuArch, backend)`, consulted by repeat pipeline runs,
-//!   the `tlc tune` CLI, and the serving registry/coordinator.
+//!   `(OpSpec, GpuArch, backend)` — the spec key carries the KV layout
+//!   *and* the pass direction (forward = empty suffix, so old caches
+//!   stay valid) — consulted by repeat pipeline runs, the `tlc tune`
+//!   CLI, and the serving registry/coordinator.
+//!
+//! Backward specs (`OpSpec::direction == Backward`) search the same
+//! space: `perfmodel::cost` prices their five-GEMM recompute and the
+//! extra gradient traffic, and the winning schedule is injected into all
+//! three backward block programs by [`crate::pipeline::run_tuned`].
 //!
 //! Entry points: [`Autotuner`] (stateful, cache-backed),
 //! [`best_candidate`] (one-shot, used by

@@ -237,7 +237,7 @@ mod tests {
         for bm in [32usize, 64, 128, 256] {
             for bn in [32usize, 64, 128] {
                 for stages in [1usize, 2] {
-                    v.push(Candidate { bm, bn, stages, warps: 4, split_k: 1 });
+                    v.push(Candidate { bm, bn, stages, warps: 4, split_k: 1, prefetch_pages: 1 });
                 }
             }
         }

@@ -31,6 +31,10 @@ pub struct Candidate {
     /// Split-K factor: KV tiles divided across `split_k` cooperating
     /// blocks whose partial outputs are merged through HBM. 1 = off.
     pub split_k: usize,
+    /// Paged layouts only: how many pages ahead the gather prefetches
+    /// (1 = next page, 2 = two pages ahead — hides page-table latency at
+    /// the cost of one extra staged page). Always 1 off the paged path.
+    pub prefetch_pages: usize,
 }
 
 impl Candidate {
@@ -44,6 +48,7 @@ impl Candidate {
             stages: if t.double_buffer { 2 } else { 1 },
             warps: 4,
             split_k: 1,
+            prefetch_pages: 1,
         }
     }
 
@@ -55,6 +60,7 @@ impl Candidate {
             + (self.stages != other.stages) as usize
             + (self.warps != other.warps) as usize
             + (self.split_k != other.split_k) as usize
+            + (self.prefetch_pages != other.prefetch_pages) as usize
     }
 }
 
@@ -64,7 +70,11 @@ impl std::fmt::Display for Candidate {
             f,
             "bm{} bn{} stages{} warps{} splitk{}",
             self.bm, self.bn, self.stages, self.warps, self.split_k
-        )
+        )?;
+        if self.prefetch_pages > 1 {
+            write!(f, " pf{}", self.prefetch_pages)?;
+        }
+        Ok(())
     }
 }
 
@@ -89,13 +99,29 @@ const MAX_REGS_PER_THREAD: usize = 255;
 /// BN does not tile into pages are infeasible, and the paged-IO cost
 /// term prices the survivors).
 pub fn fits(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> bool {
-    if smem_bytes_staged(spec, cand.bm, cand.bn, cand.stages) > arch.smem_per_block {
+    // Page-ahead prefetch stages one extra page of K+V per extra depth.
+    let page_stage = match spec.kv_layout.page_size() {
+        Some(page) if cand.prefetch_pages > 1 => {
+            (cand.prefetch_pages - 1)
+                * page
+                * (spec.qk_dim() + spec.v_head_dim)
+                * spec.dtype.bytes()
+        }
+        _ => 0,
+    };
+    if smem_bytes_staged(spec, cand.bm, cand.bn, cand.stages) + page_stage
+        > arch.smem_per_block
+    {
         return false;
     }
     if let Some(page) = spec.kv_layout.page_size() {
         if page == 0 || cand.bn % page != 0 {
             return false;
         }
+    }
+    // Prefetch depth is a paged-only dimension.
+    if cand.prefetch_pages > 1 && spec.kv_layout.page_size().is_none() {
+        return false;
     }
     // Tiles larger than the (padded) problem waste the whole block.
     if cand.bm > spec.seq_len.next_power_of_two().max(32)
@@ -125,14 +151,27 @@ pub fn fits(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> bool {
 /// the slice are therefore never worse than either legacy strategy.
 pub fn enumerate(spec: &OpSpec, arch: &GpuArch) -> Vec<Candidate> {
     let mut out = Vec::new();
+    // Prefetch depth only opens up for paged layouts (the gather's
+    // page-table indirection is what the deeper pipeline hides).
+    let prefetch_depths: &[usize] =
+        if spec.kv_layout.page_size().is_some() { &[1, 2] } else { &[1] };
     for bm in [32usize, 64, 128, 256] {
         for bn in [32usize, 64, 128] {
             for stages in [1usize, 2, 3] {
                 for warps in [4usize, 8] {
                     for split_k in [1usize, 2, 4, 8] {
-                        let c = Candidate { bm, bn, stages, warps, split_k };
-                        if fits(spec, arch, &c) {
-                            out.push(c);
+                        for &prefetch_pages in prefetch_depths {
+                            let c = Candidate {
+                                bm,
+                                bn,
+                                stages,
+                                warps,
+                                split_k,
+                                prefetch_pages,
+                            };
+                            if fits(spec, arch, &c) {
+                                out.push(c);
+                            }
                         }
                     }
                 }
@@ -198,6 +237,14 @@ pub fn schedule_of(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> Schedule 
     if cand.split_k > 1 {
         // Each split pays its own prologue/epilogue.
         s.c_epi += 1.5 * (cand.split_k - 1) as f64;
+    }
+    if cand.prefetch_pages > 1 {
+        // Two-page-ahead gather: the page-table lookup and the boundary
+        // rows' uncoalesced bytes overlap the mma pipeline, recovering a
+        // slice of the paged-IO penalty the cost model charges
+        // (scored against the extra staged page `fits` already budgeted).
+        s.softmax_overlap = (s.softmax_overlap + 0.02).min(0.94);
+        s.mma_eff *= 1.003;
     }
     s
 }
@@ -285,7 +332,7 @@ mod tests {
     fn register_cap_forces_wide_tiles_onto_more_warps() {
         let spec = mha(16384, 64);
         let arch = GpuArch::a100();
-        let big4 = Candidate { bm: 256, bn: 128, stages: 2, warps: 4, split_k: 1 };
+        let big4 = Candidate { bm: 256, bn: 128, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let big8 = Candidate { warps: 8, ..big4 };
         assert!(!fits(&spec, &arch, &big4), "388 regs/thread must be rejected");
         assert!(fits(&spec, &arch, &big8));
@@ -296,7 +343,7 @@ mod tests {
         let spec = mha(16384, 64);
         let arch = GpuArch::a100();
         let base = schedules::ours(&arch, 64, spec.dtype);
-        let c = Candidate { bm: base.bm, bn: base.bn, stages: 2, warps: 4, split_k: 1 };
+        let c = Candidate { bm: base.bm, bn: base.bn, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let s = schedule_of(&spec, &arch, &c);
         assert_eq!(s.mma_eff, base.mma_eff);
         assert_eq!(s.softmax_overlap, base.softmax_overlap);
@@ -308,7 +355,7 @@ mod tests {
     fn model_seconds_equals_estimate_on_saturated_grids() {
         let spec = mha(4096, 64); // batch 4 x 32 heads: thousands of blocks
         let arch = GpuArch::a100();
-        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let raw = cost::estimate(&spec, &arch, &schedule_of(&spec, &arch, &c)).seconds;
         assert_eq!(model_seconds(&spec, &arch, &c), raw);
     }
@@ -320,7 +367,7 @@ mod tests {
         spec.seq_len = 16;
         spec.batch = 1;
         let arch = GpuArch::a100();
-        let single = Candidate { bm: 32, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let single = Candidate { bm: 32, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let split = Candidate { split_k: 8, ..single };
         assert!(fits(&spec, &arch, &split));
         assert!(
@@ -350,10 +397,62 @@ mod tests {
     }
 
     #[test]
+    fn prefetch_depth_opens_only_for_paged_layouts() {
+        use crate::sketch::spec::KvLayout;
+        let arch = GpuArch::a100();
+        // Dense layouts never enumerate (or accept) a deeper prefetch.
+        let dense = mha(4096, 64);
+        assert!(enumerate(&dense, &arch).iter().all(|c| c.prefetch_pages == 1));
+        let deep = Candidate {
+            bm: 64,
+            bn: 64,
+            stages: 2,
+            warps: 4,
+            split_k: 1,
+            prefetch_pages: 2,
+        };
+        assert!(!fits(&dense, &arch, &deep), "prefetch depth is paged-only");
+        // Paged layouts search both depths.
+        let paged = dense.with_layout(KvLayout::Paged { page_size: 16 });
+        let space = enumerate(&paged, &arch);
+        assert!(space.iter().any(|c| c.prefetch_pages == 2), "paged space missing pf2");
+        assert!(space.iter().any(|c| c.prefetch_pages == 1));
+        assert!(fits(&paged, &arch, &deep));
+        // The deeper gather scores at least as well (it only hides
+        // latency; the smem cost is charged by `fits`).
+        let shallow = Candidate { prefetch_pages: 1, ..deep };
+        assert!(
+            model_seconds(&paged, &arch, &deep) <= model_seconds(&paged, &arch, &shallow),
+            "page-ahead prefetch must not score worse on a feasible point"
+        );
+    }
+
+    #[test]
+    fn backward_specs_search_the_same_space_with_higher_pressure() {
+        use crate::sketch::spec::Direction;
+        let arch = GpuArch::a100();
+        let fwd = mha(4096, 64);
+        let bwd = fwd.with_direction(Direction::Backward);
+        let fwd_space = enumerate(&fwd, &arch);
+        let bwd_space = enumerate(&bwd, &arch);
+        assert!(!bwd_space.is_empty());
+        // The backward's four score tiles raise register pressure, so its
+        // feasible set can only shrink (modulo the appended warm starts).
+        assert!(bwd_space.len() <= fwd_space.len() + 2);
+        for c in &bwd_space[..bwd_space.len().saturating_sub(2)] {
+            assert!(fits(&bwd, &arch, c));
+        }
+        // And the objective prices the 5-GEMM recompute: same candidate,
+        // strictly more modeled seconds.
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        assert!(model_seconds(&bwd, &arch, &c) > model_seconds(&fwd, &arch, &c));
+    }
+
+    #[test]
     fn tiling_of_reports_consistent_facts() {
         let spec = mha(4096, 64);
         let arch = GpuArch::a100();
-        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let t = tiling_of(&c, &spec, &arch);
         assert_eq!((t.bm, t.bn), (128, 64));
         assert!(t.double_buffer);

@@ -176,6 +176,7 @@ mod tests {
             seq,
             kv: seq,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
+            direction: crate::sketch::spec::Direction::Forward,
         }
     }
 
@@ -190,6 +191,7 @@ mod tests {
             seq: 1,
             kv,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
+            direction: crate::sketch::spec::Direction::Forward,
         }
     }
 

@@ -3,12 +3,14 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::sketch::spec::{AttnVariant, KvLayout};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
 
 /// The routing key: everything that identifies a kernel family + problem
 /// shape except the batch dimension (which the batcher chooses). The KV
 /// layout is part of the family — a paged kernel takes a block-table
-/// operand, so paged and contiguous traffic can never share a batch.
+/// operand, so paged and contiguous traffic can never share a batch —
+/// and so is the pass direction (a backward kernel consumes dO/lse/delta
+/// and produces gradients).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FamilyKey {
     pub variant: AttnVariant,
@@ -20,6 +22,7 @@ pub struct FamilyKey {
     pub seq: usize,
     pub kv: usize,
     pub kv_layout: KvLayout,
+    pub direction: Direction,
 }
 
 /// Ingress lane: decode-shaped traffic (short query against a long KV
@@ -134,6 +137,7 @@ mod tests {
             seq: 256,
             kv: 256,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         assert_eq!(f.q_len(), 8 * 256 * 64);
         assert_eq!(f.k_len(), 2 * 256 * 64);
@@ -153,17 +157,20 @@ mod tests {
             seq: 1,
             kv: 1000, // deliberately not page-aligned
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         let row = (64 + 64) * 4 * 4;
         assert_eq!(dense.kv_bytes(), 1000 * row);
         let paged = FamilyKey {
             kv_layout: KvLayout::Paged { page_size: 16 },
+            direction: Direction::Forward,
             ..dense.clone()
         };
         // 63 pages of 16 rows + 8-byte table entries.
         assert_eq!(paged.kv_bytes(), 63 * 16 * row + 63 * 8);
         let sliding = FamilyKey {
             kv_layout: KvLayout::Sliding { window: 128 },
+            direction: Direction::Forward,
             ..dense.clone()
         };
         assert_eq!(sliding.kv_bytes(), 128 * row, "only the window stays resident");
@@ -181,6 +188,7 @@ mod tests {
             seq: 256,
             kv: 256,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         assert_eq!(LaneKey::of(&f), LaneKey::Prefill);
         // One query row over a long cache: decode.

@@ -59,6 +59,7 @@ pub fn family_of(sig: &AttnSignature) -> FamilyKey {
         seq: sig.seq,
         kv: sig.kv,
         kv_layout: sig.kv_layout,
+        direction: sig.direction,
     }
 }
 
@@ -75,6 +76,7 @@ pub fn sig_of(fam: &FamilyKey, batch: usize) -> AttnSignature {
         seq: fam.seq,
         kv: fam.kv,
         kv_layout: fam.kv_layout,
+        direction: fam.direction,
     }
 }
 
@@ -168,6 +170,7 @@ fn cand_of_meta(meta: &ArtifactMeta) -> Option<Candidate> {
         stages: meta.usize_field("stages").unwrap_or(2),
         warps: meta.usize_field("warps").unwrap_or(4),
         split_k: meta.usize_field("split_k").unwrap_or(1),
+        prefetch_pages: meta.usize_field("prefetch").unwrap_or(1),
     })
 }
 
@@ -357,6 +360,7 @@ impl ServeTopology {
                             stages: 2,
                             warps: 4,
                             split_k,
+                            prefetch_pages: 1,
                         }),
                         obs_key,
                     }),
@@ -1142,6 +1146,7 @@ mod tests {
             seq,
             kv,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
+            direction: crate::sketch::spec::Direction::Forward,
         }
     }
 
@@ -1232,7 +1237,7 @@ mod tests {
     fn slot_pick_probes_alternates_round_robin() {
         let mk = |id: &str, sk: usize| ArtifactInfo {
             id: id.into(),
-            cand: Some(Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: sk }),
+            cand: Some(Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: sk, prefetch_pages: 1 }),
             obs_key: "k".into(),
         };
         let slot =
@@ -1263,12 +1268,12 @@ mod tests {
         let mut tune = TuneCache::new();
         tune.observe(
             &obs_key,
-            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8 },
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8, prefetch_pages: 1 },
             50.0,
         );
         tune.observe(
             &obs_key,
-            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
             400.0,
         );
         let topo = ServeTopology::from_manifest(&metas, &tune, usize::MAX).unwrap();
@@ -1326,6 +1331,7 @@ mod tests {
         let dense = fam(1, 4096);
         let sliding = FamilyKey {
             kv_layout: crate::sketch::spec::KvLayout::Sliding { window: 512 },
+            direction: crate::sketch::spec::Direction::Forward,
             ..dense.clone()
         };
         assert_eq!(sliding.kv_bytes() * 8, dense.kv_bytes());
@@ -1364,12 +1370,12 @@ mod tests {
         // Serving measured the plain variant faster than split-K here.
         tune.observe(
             &obs_key,
-            Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 },
+            Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
             50.0,
         );
         tune.observe(
             &obs_key,
-            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8 },
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8, prefetch_pages: 1 },
             400.0,
         );
         let topo = ServeTopology::from_manifest(&metas, &tune, usize::MAX).unwrap();

@@ -42,8 +42,20 @@
 //! backends, the cost model, the tuning cache keys and the serving
 //! coordinator's decode-lane KV pool (DESIGN.md §9).
 //!
-//! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in this
-//! environment) and the experiment index.
+//! The pipeline is also **direction-polymorphic**
+//! ([`sketch::spec::Direction`]): a backward spec generates the
+//! FlashAttention-2-style gradient bundle — three single-output block
+//! programs (dQ / dK / dV, [`sketch::backward_sketches`]) that
+//! recompute the probability tile from Q/K and the saved per-row
+//! logsumexp, verified against analytic gradients *and* central finite
+//! differences, and emitted as one module behind a custom-VJP-shaped
+//! host wrapper (DESIGN.md §10). Forward spells as the empty suffix
+//! everywhere, so pre-backward artifacts and caches stay valid.
+//!
+//! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in
+//! this environment) and the experiment index, `README.md` for the CLI
+//! walkthroughs, and `docs/TL_REFERENCE.md` for the TL language
+//! reference.
 
 pub mod autotune;
 pub mod coordinator;
@@ -59,5 +71,6 @@ pub mod util;
 pub mod verify;
 pub mod workload;
 
-pub use sketch::spec::{AttnVariant, KvLayout, OpSpec};
+pub use sketch::spec::{AttnVariant, Direction, KvLayout, OpSpec};
+pub use sketch::GradTarget;
 pub use tl::ast::TlProgram;

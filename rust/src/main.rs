@@ -60,6 +60,10 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
                [--window N] — paged emits block-table-gathered K/V loads
                (verified bit-identical to contiguous under an identity
                table); sliding clips the KV sweep to the trailing window
+               [--direction forward|backward] (or --backward) — backward
+               generates the FlashAttention-2 dQ/dK/dV bundle: three
+               verified block programs emitted as one module behind a
+               custom-VJP-shaped attention_backward host wrapper
   generate-all [--out-dir python/compile/kernels/generated]
   verify       same operator flags as generate
   ablate       --failure reshape|gemm [operator flags]
@@ -145,6 +149,18 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     if show == "tl" || show == "all" {
         println!("==== TL Code ({} stmts) ====", result.reasoned.program.stmt_count());
         println!("{}", print_program(&result.reasoned.program));
+        // Backward runs: the dQ program printed above is the primary;
+        // show the rest of the bundle too.
+        for (grad, part) in &result.backward {
+            if part.program.name == result.reasoned.program.name {
+                continue;
+            }
+            println!(
+                "==== TL Code [{grad}] ({} stmts) ====",
+                part.program.stmt_count()
+            );
+            println!("{}", print_program(&part.program));
+        }
     }
     let source = result.source.unwrap();
     match out {

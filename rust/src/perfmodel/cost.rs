@@ -24,7 +24,12 @@
 //! non-causal, crossovers, OOM) is *predicted* by the model.
 
 use super::gpu::GpuArch;
-use crate::sketch::spec::{KvLayout, OpSpec};
+use crate::sketch::spec::{Direction, KvLayout, OpSpec};
+
+/// Backward-over-forward GEMM ratio per score tile: the FlashAttention-2
+/// backward runs five GEMMs (S recompute, dP, dV, dK, dQ) where the
+/// forward runs two — the same 2.5x [`OpSpec::flops`] reports.
+const BWD_GEMM_RATIO: f64 = 2.5;
 
 /// Schedule kind — determines the calibration row and structural path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -124,11 +129,16 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
         // Bandwidth-bound unfused path. A causal mask in eager torch
         // materializes the mask tensor and runs `where`, nearly doubling
         // the S-matrix traffic (this reproduces the paper's ~4x gap
-        // between the causal and non-causal vanilla rows).
+        // between the causal and non-causal vanilla rows). The unfused
+        // backward materializes S, P, dP and dS, so its effective pass
+        // count scales with the 5-GEMM ratio.
         let mask_factor =
             if spec.causal && sched.kind == SchedKind::TorchNaive { 1.9 } else { 1.0 };
+        let bwd_passes =
+            if spec.direction == Direction::Backward { BWD_GEMM_RATIO } else { 1.0 };
         let s_bytes = b * h * s * kv * 4.0;
-        let traffic = spec.io_bytes() as f64 + sched.unfused_passes * mask_factor * s_bytes;
+        let traffic =
+            spec.io_bytes() as f64 + sched.unfused_passes * bwd_passes * mask_factor * s_bytes;
         let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
         // Compute floor (matmuls still run, on TC or CUDA cores).
         let peak = if sched.tensor_core {
@@ -137,7 +147,7 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
             arch.cuda_tflops_f32 * 1e12
         };
         // Unfused computes the full rectangle even under a causal mask.
-        let executed = 2.0 * b * s * kv * h * gemm_width;
+        let executed = 2.0 * b * s * kv * h * gemm_width * bwd_passes;
         let mut t_compute = executed / (peak * sched.mma_eff);
         // MLA: the latent KV decompression einsums are extra GEMM work
         // proportional to total tokens (constant across the sweep — this
@@ -178,10 +188,14 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
         _ => nkv,
     };
 
-    // Per-KV-tile mma work (both GEMMs). Times are aggregate: total tile
-    // work over the whole-GPU peak (full occupancy assumed; the paper's
-    // grids always have thousands of thread blocks for 108 SMs).
-    let tile_flops = 2.0 * (bm * bn) as f64 * gemm_width;
+    // Per-KV-tile mma work (both GEMMs; the backward's five-GEMM
+    // recompute scales it by [`BWD_GEMM_RATIO`]). Times are aggregate:
+    // total tile work over the whole-GPU peak (full occupancy assumed;
+    // the paper's grids always have thousands of thread blocks for 108
+    // SMs).
+    let backward = spec.direction == Direction::Backward;
+    let gemm_ratio = if backward { BWD_GEMM_RATIO } else { 1.0 };
+    let tile_flops = 2.0 * (bm * bn) as f64 * gemm_width * gemm_ratio;
     let peak_tc = if sched.tensor_core {
         arch.tc_tflops(spec.dtype.bytes()) * 1e12
     } else {
@@ -190,8 +204,13 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
     let t_tile_mma = tile_flops / (peak_tc * sched.mma_eff);
 
     // Softmax / mask / rescale on CUDA cores: ~5 f32 ops per score element
-    // (+2 for mask index math under causal).
-    let sm_ops_per_elem = if spec.causal { 7.0 } else { 5.0 };
+    // (+2 for mask index math under causal). The backward's pointwise
+    // chain (exp recompute, row-broadcast subtracts, the Jacobian
+    // Hadamard) roughly doubles it.
+    let mut sm_ops_per_elem = if spec.causal { 7.0 } else { 5.0 };
+    if backward {
+        sm_ops_per_elem += 5.0;
+    }
     let t_tile_sm = sm_ops_per_elem * (bm * bn) as f64
         / (arch.cuda_tflops_f32 * 1e12)
         * (1.0 - sched.softmax_overlap);
@@ -230,7 +249,16 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
     let l2_pressure = (kv_bytes_head * active) / arch.l2_bytes as f64;
     let miss = (l2_pressure / (1.0 + l2_pressure)).min(1.0);
     let reread = 1.0 + (nqb - 1.0).max(0.0) * miss * causal_reread_half;
-    let traffic = q_bytes + o_bytes + kv_bytes_head * kv_heads * reread;
+    let mut traffic = q_bytes + o_bytes + kv_bytes_head * kv_heads * reread;
+    if backward {
+        // Recompute traffic: the backward streams Q and dO a second time
+        // (the dK/dV kernels' q-sweep, subject to the same L2 model),
+        // reads the per-row lse/delta stats, and writes dQ/dK/dV — but
+        // never reads an O(n^2) intermediate back (the recompute trick).
+        let stats_bytes = 2.0 * b * h * s * 4.0;
+        let grads_out = q_bytes + kv_bytes_head * kv_heads;
+        traffic += (q_bytes + o_bytes) * (1.0 + miss) + stats_bytes + grads_out;
+    }
     let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
 
     let seconds = t_compute.max(t_mem) + KERNEL_LAUNCH_S;
@@ -362,6 +390,42 @@ mod tests {
             "a 512-window sweep of a 16k context must beat the full causal sweep"
         );
         assert!(clipped.dram_gb < full.dram_gb);
+    }
+
+    #[test]
+    fn backward_costs_more_wall_clock_than_forward() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        for seq in [1024usize, 4096, 16384] {
+            let fwd = mha(seq, 64, true);
+            let bwd = fwd.with_direction(Direction::Backward);
+            let f = estimate(&fwd, &arch, &sched);
+            let b = estimate(&bwd, &arch, &sched);
+            assert!(
+                b.seconds > 1.5 * f.seconds,
+                "seq {seq}: backward {} vs forward {}",
+                b.seconds,
+                f.seconds
+            );
+            assert!(b.seconds.is_finite() && b.tflops > 0.0);
+            assert!(b.dram_gb > f.dram_gb, "backward moves more bytes");
+        }
+    }
+
+    #[test]
+    fn backward_tflops_still_rise_with_sequence_length() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let mut prev = 0.0;
+        for seq in [512, 1024, 2048, 4096, 8192, 16384] {
+            let est = estimate(
+                &mha(seq, 64, true).with_direction(Direction::Backward),
+                &arch,
+                &sched,
+            );
+            assert!(est.tflops > prev, "backward TFLOPS must rise: {} at {seq}", est.tflops);
+            prev = est.tflops;
+        }
     }
 
     #[test]

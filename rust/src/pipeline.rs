@@ -14,7 +14,8 @@ use std::time::{Duration, Instant};
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::profiles::LlmProfile;
 use crate::reasoner::{self, Reasoned};
-use crate::sketch::{self, spec::OpSpec};
+use crate::sketch::spec::Direction;
+use crate::sketch::{self, spec::OpSpec, GradTarget};
 use crate::tl::ast::TlProgram;
 use crate::translate::{cute::CuteBackend, pallas::PallasBackend, Backend};
 use crate::verify::{self, VerifyReport};
@@ -40,14 +41,20 @@ impl Target {
 #[derive(Debug)]
 pub struct PipelineResult {
     pub sketch: TlProgram,
+    /// The primary reasoned program: the forward kernel, or the dQ
+    /// program of a backward run (its q-block sweep mirrors the forward).
     pub reasoned: Reasoned,
     pub verify: VerifyReport,
     /// Emitted backend source (None if verification failed or the profile
-    /// cannot translate — the GPT-4o row of Table 3).
+    /// cannot translate — the GPT-4o row of Table 3). A backward run
+    /// emits the whole bundle as one module.
     pub source: Option<String>,
     pub timings: Timings,
     /// Autotuner outcome when the run went through [`run_tuned`].
     pub tune: Option<crate::autotune::TuneResult>,
+    /// The full backward bundle (dQ, dK, dV), each verified; empty for
+    /// forward runs.
+    pub backward: Vec<(GradTarget, Reasoned)>,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -135,8 +142,11 @@ fn run_inner(
     target: Target,
     tuned: Option<(crate::autotune::TuneResult, Duration)>,
 ) -> Result<PipelineResult, PipelineError> {
+    let backward = spec.direction == Direction::Backward;
     let t0 = Instant::now();
     let sketch = sketch::generate_sketch(spec);
+    let bwd_sketches =
+        if backward { sketch::backward_sketches(spec) } else { Vec::new() };
     let t_sketch = t0.elapsed();
 
     let t0 = Instant::now();
@@ -144,17 +154,44 @@ fn run_inner(
         Some((tune, search)) => (Some(tune), search),
         None => (None, Duration::ZERO),
     };
-    let reasoned = match &tune {
-        Some(t) => {
-            let tiling = crate::autotune::space::tiling_of(&t.candidate, spec, arch);
-            reasoner::reason_with_tiling(&sketch, spec, profile, tiling)
+    let reason_one = |sk: &TlProgram| -> Reasoned {
+        match &tune {
+            Some(t) => {
+                let tiling = crate::autotune::space::tiling_of(&t.candidate, spec, arch);
+                reasoner::reason_with_tiling(sk, spec, profile, tiling)
+            }
+            None => reasoner::reason(sk, spec, arch, profile),
         }
-        None => reasoner::reason(&sketch, spec, arch, profile),
     };
+    let bwd_parts: Vec<(GradTarget, Reasoned)> =
+        bwd_sketches.iter().map(|(g, sk)| (*g, reason_one(sk))).collect();
+    // The primary program of a backward run is its dQ part (already
+    // reasoned above); forward runs reason the single sketch.
+    let reasoned = bwd_parts
+        .iter()
+        .find(|(g, _)| *g == GradTarget::DQ)
+        .map(|(_, r)| r.clone())
+        .unwrap_or_else(|| reason_one(&sketch));
     let t_reason = t0.elapsed();
 
+    // Verify: the forward program, or every program of the backward
+    // bundle (the report kept is the worst-diff one).
     let t0 = Instant::now();
-    let report = verify::verify_program(&reasoned.program, spec.causal, 0xC0FFEE);
+    let mut report = verify::verify_program(&reasoned.program, spec.causal, 0xC0FFEE);
+    for (g, r) in &bwd_parts {
+        if *g == GradTarget::DQ {
+            continue; // same program as `reasoned`, already verified
+        }
+        if !report.passed {
+            break;
+        }
+        let part_report = verify::verify_program(&r.program, spec.causal, 0xC0FFEE);
+        if !part_report.passed
+            || part_report.max_abs_diff.unwrap_or(0.0) > report.max_abs_diff.unwrap_or(0.0)
+        {
+            report = part_report;
+        }
+    }
     let t_verify = t0.elapsed();
 
     if !report.passed {
@@ -169,7 +206,11 @@ fn run_inner(
         Target::Pallas => &PallasBackend,
         Target::Cute => &CuteBackend,
     };
-    let source = backend.emit(&reasoned, spec, arch).map_err(PipelineError::Translate)?;
+    let source = if backward {
+        backend.emit_backward(&bwd_parts, spec, arch).map_err(PipelineError::Translate)?
+    } else {
+        backend.emit(&reasoned, spec, arch).map_err(PipelineError::Translate)?
+    };
     let t_translate = t0.elapsed();
 
     Ok(PipelineResult {
@@ -185,6 +226,7 @@ fn run_inner(
             translate: t_translate,
         },
         tune,
+        backward: bwd_parts,
     })
 }
 
@@ -252,6 +294,55 @@ mod tests {
             .expect("pipeline");
         assert!(r.tune.is_none());
         assert_eq!(r.timings.search, Duration::ZERO);
+    }
+
+    #[test]
+    fn backward_pipeline_produces_vjp_module() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true)
+            .with_direction(Direction::Backward);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+            .expect("backward pipeline");
+        assert!(r.verify.passed);
+        assert_eq!(r.backward.len(), 3, "the bundle carries dQ, dK and dV");
+        assert!(r.reasoned.program.name.ends_with("_bwd_dq"));
+        let src = r.source.unwrap();
+        assert!(src.contains("def attention_backward("), "{src}");
+        assert!(src.contains("_kernel_dq"));
+        assert!(src.contains("_kernel_dk"));
+        assert!(src.contains("_kernel_dv"));
+    }
+
+    #[test]
+    fn backward_pipeline_cute_renders_kernels() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true)
+            .with_direction(Direction::Backward);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Cute)
+            .expect("backward cute pipeline");
+        assert!(r.source.unwrap().contains("flash_bwd_dq"));
+    }
+
+    #[test]
+    fn tuned_backward_pipeline_threads_schedule_into_all_parts() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true)
+            .with_direction(Direction::Backward);
+        let arch = GpuArch::a100();
+        let mut tuner = crate::autotune::Autotuner::in_memory();
+        let r = run_tuned(&spec, &arch, &LlmProfile::deepseek_v3(), Target::Pallas, &mut tuner)
+            .expect("tuned backward pipeline");
+        let tune = r.tune.as_ref().expect("tune outcome");
+        for (g, part) in &r.backward {
+            let params = part.program.params();
+            assert_eq!(params["BM"] as usize, tune.candidate.bm, "{g}");
+            assert_eq!(params["BN"] as usize, tune.candidate.bn, "{g}");
+        }
+    }
+
+    #[test]
+    fn forward_runs_carry_no_backward_bundle() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+            .expect("pipeline");
+        assert!(r.backward.is_empty());
     }
 
     #[test]

@@ -1,0 +1,703 @@
+//! Stage 1b for the **backward pass**: parameter analysis & reasoning
+//! over the FlashAttention-2-style backward sketches
+//! ([`crate::sketch::backward_sketches`]).
+//!
+//! The forward reasoner infers tensor roles from the sketch's dataflow
+//! (the score GEMM is recognized by its formal transpose). The backward
+//! dataflow is not role-inferable the same way — `Q @ Kᵀ` and `dO @ Vᵀ`
+//! are structurally identical — so this module reasons from the backward
+//! family's *fixed tensor vocabulary* (`Q, K, V, dO, Lse, Delta, S, P,
+//! dP, dS, dQ/dK/dV`), exactly as the paper's Listing-4 prompt names its
+//! tensors. The steps are the forward ones re-oriented per gradient:
+//!
+//! 1. tile sizes come from the same [`super::tiling`] chooser (the
+//!    autotuner can inject a searched schedule through
+//!    [`super::reason_with_tiling`] exactly as for the forward);
+//! 2. `Allocate` statements at every level — the *block side* of a
+//!    program owns `BM` rows (q rows for dQ, KV rows for dK/dV), the
+//!    *stream side* flows through shared memory in `BN`-row tiles;
+//! 3. block coordinates: block-side copies pin `[L = block_idx]`,
+//!    stream-side copies ride the loop variable — through the block
+//!    table (`[L = block_table[i]]`) for paged K/V, in either position;
+//! 4. causal work skipping: the dQ program clips its KV loop *end* with
+//!    the forward's ceiling bound; dK/dV clip their q-loop *start* at
+//!    `block_idx * BM / BN` (tiles fully above the diagonal are exactly
+//!    masked — DESIGN.md §10);
+//! 5. the `mma_C → mma_A` fragment `Reshape` before each accumulate
+//!    GEMM (`dS` for dQ/dK, `P` for dV) — the same Appendix-B failure
+//!    class as the forward's fused GEMM-II;
+//! 6. the guarded double-buffer prefetch for the dQ program's streamed
+//!    K/V tiles (dK/dV stream four tensors per iteration, which would
+//!    double a much larger staging footprint, so they stay single-
+//!    buffered).
+//!
+//! Masking needs no transposed twin: the TL mask ops compute `qpos = Lq
+//! * rows + r` and `kpos = Lk * cols + c` from the *tile's own
+//! dimensions*, so the dK/dV orientation (q on rows-of-BN, KV on
+//! cols-of-BM) reuses the forward mask with swapped coordinates
+//! (`[Lq = i, Lk = block_idx]`).
+
+use crate::sketch::spec::{KvLayout, OpSpec};
+use crate::sketch::GradTarget;
+use crate::tl::ast::{CmpOp, ComputeOp, Stmt, TlProgram};
+use crate::tl::expr::Expr;
+use crate::tl::types::{DType, Frag, Layout, MemSpace};
+
+use super::profiles::{FailureMode, LlmProfile};
+use super::tiling::Tiling;
+use super::Reasoned;
+
+/// The grad target encoded in a backward sketch/program name
+/// (`..._bwd_dq[_sketch]`), if any. This is how [`super::reason_with_tiling`]
+/// routes backward sketches here.
+pub fn grad_of(name: &str) -> Option<GradTarget> {
+    for g in GradTarget::all() {
+        if name.contains(&format!("_bwd_{}", g.as_str())) {
+            return Some(g);
+        }
+    }
+    None
+}
+
+/// Stage 1b over a backward sketch (see module docs).
+pub fn reason_backward(
+    sketch: &TlProgram,
+    spec: &OpSpec,
+    profile: &LlmProfile,
+    tiling: Tiling,
+) -> Reasoned {
+    let grad = grad_of(&sketch.name).expect("backward sketch name must carry the grad target");
+    let prefetch = profile.prefetch && tiling.double_buffer && grad == GradTarget::DQ;
+    let ctx = Ctx { spec, profile, grad, prefetch };
+
+    let mut stmts: Vec<Stmt> = Vec::new();
+    stmts.push(param("BM", tiling.bm as i64));
+    stmts.push(param("BN", tiling.bn as i64));
+    stmts.push(param("HeadDim", spec.qk_dim() as i64));
+    stmts.push(param("VDim", spec.v_head_dim as i64));
+    stmts.push(param("seq_len", spec.seq_len as i64));
+    stmts.push(param("kv_len", spec.kv_len as i64));
+    if spec.group_size() > 1 {
+        stmts.push(param("group_size", spec.group_size() as i64));
+    }
+    match spec.kv_layout {
+        KvLayout::Contiguous => {}
+        KvLayout::Paged { page_size } => {
+            // The backward gathers K/V at both tile heights: `BN`-row
+            // stream tiles (dQ) and `BM`-row block tiles (dK/dV), so the
+            // effective page must divide both — the largest divisor of
+            // gcd(BM, BN) not exceeding the requested size (a no-op for
+            // the usual power-of-two page/tile pairs).
+            let g = gcd(tiling.bm, tiling.bn);
+            let page = (1..=page_size.min(g)).rev().find(|p| g % p == 0).unwrap_or(1);
+            stmts.push(param("page_size", page as i64));
+        }
+        KvLayout::Sliding { window } => stmts.push(param("window", window as i64)),
+    }
+
+    stmts.extend(ctx.global_allocs(sketch));
+    stmts.extend(ctx.shared_allocs(sketch));
+    stmts.extend(ctx.register_allocs(sketch));
+
+    for s in &sketch.stmts {
+        stmts.extend(ctx.rewrite(s, None));
+    }
+
+    let name = sketch.name.strip_suffix("_sketch").unwrap_or(&sketch.name).to_string();
+    Reasoned { program: TlProgram::new(name, stmts), tiling }
+}
+
+fn param(name: &str, value: i64) -> Stmt {
+    Stmt::Param { name: name.into(), value }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+struct Ctx<'a> {
+    spec: &'a OpSpec,
+    profile: &'a LlmProfile,
+    grad: GradTarget,
+    prefetch: bool,
+}
+
+impl<'a> Ctx<'a> {
+    /// Does this tensor belong to the block the program owns (BM rows),
+    /// as opposed to the streamed side (BN-row tiles)?
+    fn is_block_side(&self, name: &str) -> bool {
+        match self.grad {
+            GradTarget::DQ => matches!(name, "Q" | "dO" | "Lse" | "Delta" | "dQ"),
+            GradTarget::DK => matches!(name, "K" | "V" | "dK"),
+            GradTarget::DV => matches!(name, "K" | "dV"),
+        }
+    }
+
+    /// Column dimension of a named tensor tile.
+    fn cols(&self, name: &str) -> Expr {
+        match name {
+            "Q" | "K" | "dQ" | "dK" => Expr::sym("HeadDim"),
+            "V" | "dO" | "dV" => Expr::sym("VDim"),
+            "Lse" | "Delta" => Expr::int(1),
+            // Score-shaped tiles: columns span the *other* side's rows.
+            _ => {
+                if self.grad == GradTarget::DQ {
+                    Expr::sym("BN")
+                } else {
+                    Expr::sym("BM")
+                }
+            }
+        }
+    }
+
+    /// Block-tile shape of a named tensor.
+    fn tile_shape(&self, name: &str) -> Vec<Expr> {
+        match name {
+            "S" | "P" | "dP" | "dS" => {
+                // Score orientation: q rows x KV cols for dQ, streamed q
+                // rows x block KV cols for dK/dV.
+                if self.grad == GradTarget::DQ {
+                    vec![Expr::sym("BM"), Expr::sym("BN")]
+                } else {
+                    vec![Expr::sym("BN"), Expr::sym("BM")]
+                }
+            }
+            _ => {
+                let rows =
+                    if self.is_block_side(name) { Expr::sym("BM") } else { Expr::sym("BN") };
+                vec![rows, self.cols(name)]
+            }
+        }
+    }
+
+    /// Full global shape + offset symbol of a named tensor.
+    fn global_shape(&self, name: &str) -> (Vec<Expr>, &'static str) {
+        match name {
+            "K" | "V" | "dK" | "dV" => (vec![Expr::sym("kv_len"), self.cols(name)], "kv_offset"),
+            _ => (vec![Expr::sym("seq_len"), self.cols(name)], "q_offset"),
+        }
+    }
+
+    /// Element type of a named tensor: streamed operands keep the spec
+    /// dtype; per-row softmax stats and every gradient/score tile carry
+    /// f32 (the backward is numerically f32 end to end past the loads).
+    fn dtype_of(&self, name: &str) -> DType {
+        match name {
+            "Q" | "K" | "V" | "dO" => self.spec.dtype,
+            _ => DType::F32,
+        }
+    }
+
+    fn global_allocs(&self, sketch: &TlProgram) -> Vec<Stmt> {
+        let mut seen = Vec::new();
+        let mut out = Vec::new();
+        sketch.walk(|s| {
+            if let Stmt::Copy { tensor, src, dst, .. } = s {
+                let touches_global = *src == MemSpace::Global || *dst == MemSpace::Global;
+                if touches_global && !seen.contains(tensor) {
+                    seen.push(tensor.clone());
+                    let (shape, offset) = self.global_shape(tensor);
+                    out.push(Stmt::Allocate {
+                        name: tensor.clone(),
+                        space: MemSpace::Global,
+                        shape,
+                        offset: Some(Expr::sym(offset)),
+                        dtype: Some(self.dtype_of(tensor)),
+                    });
+                }
+            }
+        });
+        out
+    }
+
+    fn shared_allocs(&self, sketch: &TlProgram) -> Vec<Stmt> {
+        let mut seen = Vec::new();
+        let mut out = Vec::new();
+        sketch.walk(|s| {
+            if let Stmt::Copy { tensor, dst: MemSpace::Shared, .. } = s {
+                if !seen.contains(tensor) {
+                    seen.push(tensor.clone());
+                    out.push(Stmt::Allocate {
+                        name: tensor.clone(),
+                        space: MemSpace::Shared,
+                        shape: self.tile_shape(tensor),
+                        offset: None,
+                        dtype: Some(self.dtype_of(tensor)),
+                    });
+                }
+            }
+        });
+        out
+    }
+
+    fn register_allocs(&self, sketch: &TlProgram) -> Vec<Stmt> {
+        let mut seen: Vec<String> = Vec::new();
+        let mut out = Vec::new();
+        let mut push = |name: &str, shape: Vec<Expr>, dtype: DType, out: &mut Vec<Stmt>| {
+            if !seen.contains(&name.to_string()) {
+                seen.push(name.to_string());
+                out.push(Stmt::Allocate {
+                    name: name.into(),
+                    space: MemSpace::Register,
+                    shape,
+                    offset: None,
+                    dtype: Some(dtype),
+                });
+            }
+        };
+        // Tensors explicitly copied into registers (block-side operands
+        // and the streamed per-row stats).
+        sketch.walk(|s| {
+            if let Stmt::Copy { tensor, dst: MemSpace::Register, .. } = s {
+                push(tensor, self.tile_shape(tensor), self.dtype_of(tensor), &mut out);
+            }
+        });
+        // Score-shaped compute tiles and the gradient accumulator live in
+        // fp32 registers; allocate exactly the ones this program computes.
+        sketch.walk(|s| {
+            if let Stmt::Compute { output: Some(o), .. } = s {
+                if matches!(o.as_str(), "S" | "P" | "dP" | "dS" | "dQ" | "dK" | "dV") {
+                    push(o, self.tile_shape(o), DType::F32, &mut out);
+                }
+            }
+        });
+        out
+    }
+
+    /// Block coordinate expression for a global copy of `tensor` at the
+    /// streamed index `idx` (or the block's own row for block-side
+    /// tensors). Paged K/V go through the block table in either position.
+    fn l_coord(&self, tensor: &str, loop_var: Option<&str>) -> Expr {
+        let base = if self.is_block_side(tensor) {
+            Expr::sym("block_idx")
+        } else {
+            Expr::sym(loop_var.unwrap_or("i"))
+        };
+        if matches!(tensor, "K" | "V")
+            && matches!(self.spec.kv_layout, KvLayout::Paged { .. })
+        {
+            Expr::idx("block_table", base)
+        } else {
+            base
+        }
+    }
+
+    /// Mask coordinates in this program's score orientation.
+    fn mask_coords(&self, loop_var: Option<&str>) -> Vec<(String, Expr)> {
+        let lv = Expr::sym(loop_var.unwrap_or("i"));
+        match self.grad {
+            GradTarget::DQ => {
+                vec![("Lq".into(), Expr::sym("block_idx")), ("Lk".into(), lv)]
+            }
+            _ => vec![("Lq".into(), lv), ("Lk".into(), Expr::sym("block_idx"))],
+        }
+    }
+
+    /// Causal q-loop start for the dK/dV programs: q tiles strictly above
+    /// the diagonal (`(i+1) * BN <= block_idx * BM`) are fully masked, so
+    /// the sweep starts at `block_idx * BM / BN` (floor — the boundary
+    /// tile stays, the mask zeroes its upper corner).
+    fn causal_start(&self) -> Expr {
+        Expr::div(Expr::mul(Expr::sym("block_idx"), Expr::sym("BM")), Expr::sym("BN"))
+    }
+
+    /// Causal KV-loop end for the dQ program (the forward's ceiling
+    /// bound: `ceil((block_idx + 1) * BM / BN)`).
+    fn causal_end(&self) -> Expr {
+        Expr::div(
+            Expr::sub(
+                Expr::add(
+                    Expr::mul(Expr::add(Expr::sym("block_idx"), Expr::int(1)), Expr::sym("BM")),
+                    Expr::sym("BN"),
+                ),
+                Expr::int(1),
+            ),
+            Expr::sym("BN"),
+        )
+    }
+
+    fn rewrite(&self, s: &Stmt, loop_var: Option<&str>) -> Vec<Stmt> {
+        match s {
+            Stmt::Copy { tensor, shape, coord, src, dst } => {
+                let mut shape = shape.clone();
+                let mut coord = coord.clone();
+                if *src == MemSpace::Global || *dst == MemSpace::Global {
+                    if shape.is_none() {
+                        shape = Some(self.tile_shape(tensor));
+                    }
+                    if coord.is_empty() {
+                        coord.push(("L".into(), self.l_coord(tensor, loop_var)));
+                    }
+                    // GQA/MQA: K/V loads are indexed by the shared KV head.
+                    if self.spec.group_size() > 1
+                        && matches!(tensor.as_str(), "K" | "V")
+                        && *src == MemSpace::Global
+                        && !coord.iter().any(|(n, _)| n == "H")
+                    {
+                        coord.insert(
+                            0,
+                            (
+                                "H".into(),
+                                Expr::div(Expr::sym("head_idx"), Expr::sym("group_size")),
+                            ),
+                        );
+                    }
+                }
+                vec![Stmt::Copy { tensor: tensor.clone(), shape, coord, src: *src, dst: *dst }]
+            }
+            Stmt::Compute { op: ComputeOp::CausalMask, inputs, .. } => {
+                let mask = |op: ComputeOp| Stmt::Compute {
+                    op,
+                    inputs: inputs.clone(),
+                    coord: self.mask_coords(loop_var),
+                    with: vec![],
+                    output: None,
+                    accumulate: false,
+                    new_var: false,
+                };
+                let mut out = vec![mask(ComputeOp::CausalMask)];
+                if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+                    out.push(mask(ComputeOp::WindowMask));
+                }
+                out
+            }
+            Stmt::Compute { op: ComputeOp::Gemm, inputs, output, accumulate, .. } => {
+                let mut inputs = inputs.clone();
+                if self.profile.failure == Some(FailureMode::GemmLayoutError) {
+                    for t in &mut inputs {
+                        t.transposed = false;
+                    }
+                }
+                let mut out = Vec::new();
+                // The accumulate GEMM consumes a tile produced in the
+                // mma_C fragment (dS via the dP GEMM's layout, P via the
+                // recomputed S): the mma_C -> mma_A relayout is as
+                // mandatory as for the forward's fused GEMM-II.
+                if *accumulate && self.profile.failure != Some(FailureMode::ReshapeOmission) {
+                    if let Some(a) = inputs.first() {
+                        if matches!(a.name.as_str(), "S" | "P" | "dP" | "dS") {
+                            out.push(Stmt::Reshape {
+                                tensor: a.name.clone(),
+                                from: Layout::new(Frag::C, &["MMA_M", "MMA_N"]),
+                                to: Layout::new(Frag::A, &["MMA_M", "MMA_N_new"]),
+                            });
+                        }
+                    }
+                }
+                out.push(Stmt::Compute {
+                    op: ComputeOp::Gemm,
+                    inputs,
+                    coord: vec![],
+                    with: vec![],
+                    output: output.clone(),
+                    accumulate: *accumulate,
+                    new_var: false,
+                });
+                out
+            }
+            Stmt::For { var, start, end, body } => {
+                let (start, end) = if self.spec.causal {
+                    match self.grad {
+                        GradTarget::DQ => (start.clone(), self.causal_end()),
+                        _ => (self.causal_start(), end.clone()),
+                    }
+                } else {
+                    (start.clone(), end.clone())
+                };
+                let mut new_body: Vec<Stmt> = Vec::new();
+                for b in body {
+                    let was_acc_gemm = matches!(
+                        b,
+                        Stmt::Compute { op: ComputeOp::Gemm, accumulate: true, .. }
+                    );
+                    new_body.extend(self.rewrite(b, Some(var)));
+                    if self.prefetch && was_acc_gemm {
+                        if let Some(p) = self.prefetch_stmt(var, &end) {
+                            new_body.push(p);
+                        }
+                    }
+                }
+                // Sliding window: skip tiles that cannot intersect any
+                // query's trailing window (WindowMask zeroes leftovers).
+                if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+                    let guard = match self.grad {
+                        // KV tile i is alive while its last key row can
+                        // still fall inside some query's window.
+                        GradTarget::DQ => Stmt::If {
+                            lhs: Expr::add(
+                                Expr::mul(
+                                    Expr::add(Expr::sym(var.clone()), Expr::int(1)),
+                                    Expr::sym("BN"),
+                                ),
+                                Expr::sym("window"),
+                            ),
+                            op: CmpOp::Gt,
+                            rhs: Expr::mul(Expr::sym("block_idx"), Expr::sym("BM")),
+                            body: new_body,
+                        },
+                        // q tile i is alive while its first query row
+                        // still sees this KV block's window.
+                        _ => Stmt::If {
+                            lhs: Expr::mul(Expr::sym(var.clone()), Expr::sym("BN")),
+                            op: CmpOp::Lt,
+                            rhs: Expr::add(
+                                Expr::mul(
+                                    Expr::add(Expr::sym("block_idx"), Expr::int(1)),
+                                    Expr::sym("BM"),
+                                ),
+                                Expr::sym("window"),
+                            ),
+                            body: new_body,
+                        },
+                    };
+                    new_body = vec![guard];
+                }
+                vec![Stmt::For { var: var.clone(), start, end, body: new_body }]
+            }
+            Stmt::If { lhs, op, rhs, body } => {
+                let mut new_body = Vec::new();
+                for b in body {
+                    new_body.extend(self.rewrite(b, loop_var));
+                }
+                vec![Stmt::If { lhs: lhs.clone(), op: *op, rhs: rhs.clone(), body: new_body }]
+            }
+            other => vec![other.clone()],
+        }
+    }
+
+    /// `if i < end-1: Copy K/V tile i+1` — the dQ program's double-buffer
+    /// prefetch of the streamed K/V tiles (placed after the accumulate
+    /// GEMM, the last use of the current K tile).
+    fn prefetch_stmt(&self, var: &str, end: &Expr) -> Option<Stmt> {
+        let next = Expr::add(Expr::sym(var), Expr::int(1));
+        let mut copies = Vec::new();
+        for tensor in ["K", "V"] {
+            let l = if matches!(self.spec.kv_layout, KvLayout::Paged { .. }) {
+                Expr::idx("block_table", next.clone())
+            } else {
+                next.clone()
+            };
+            let mut coord = vec![("L".to_string(), l)];
+            if self.spec.group_size() > 1 {
+                coord.insert(
+                    0,
+                    ("H".into(), Expr::div(Expr::sym("head_idx"), Expr::sym("group_size"))),
+                );
+            }
+            copies.push(Stmt::Copy {
+                tensor: tensor.to_string(),
+                shape: Some(self.tile_shape(tensor)),
+                coord,
+                src: MemSpace::Global,
+                dst: MemSpace::Shared,
+            });
+        }
+        Some(Stmt::If {
+            lhs: Expr::sym(var.to_string()),
+            op: CmpOp::Lt,
+            rhs: Expr::sub(end.clone(), Expr::int(1)),
+            body: copies,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::GpuArch;
+    use crate::reasoner::reason;
+    use crate::sketch::spec::{AttnVariant, Direction};
+    use crate::sketch::{backward_sketches, generate_sketch};
+    use crate::tl::parser::parse_program;
+    use crate::tl::printer::print_program;
+
+    fn bwd_spec(causal: bool) -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, 1024, 64, causal)
+            .with_direction(Direction::Backward)
+    }
+
+    #[test]
+    fn backward_programs_reason_and_roundtrip() {
+        let spec = bwd_spec(true);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            assert!(r.program.is_reasoned(), "{grad}");
+            assert!(r.program.params().contains_key("BM"));
+            let text = print_program(&r.program);
+            let back = parse_program(&text).unwrap();
+            assert_eq!(r.program.stmts, back.stmts, "{grad} roundtrip:\n{text}");
+        }
+    }
+
+    #[test]
+    fn dq_clips_loop_end_dk_dv_clip_loop_start() {
+        let spec = bwd_spec(true);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            r.program.walk(|s| {
+                if let Stmt::For { start, end, .. } = s {
+                    let mut start_syms = Vec::new();
+                    start.symbols(&mut start_syms);
+                    let mut end_syms = Vec::new();
+                    end.symbols(&mut end_syms);
+                    match grad {
+                        GradTarget::DQ => {
+                            assert!(
+                                end_syms.contains(&"block_idx".to_string()),
+                                "dQ end must skip masked KV tiles: {end}"
+                            );
+                        }
+                        _ => {
+                            assert!(
+                                start_syms.contains(&"block_idx".to_string()),
+                                "{grad} start must skip masked q tiles: {start}"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn mask_coordinates_follow_the_score_orientation() {
+        let spec = bwd_spec(true);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let mut saw = false;
+            r.program.walk(|s| {
+                if let Stmt::Compute { op: ComputeOp::CausalMask, coord, .. } = s {
+                    saw = true;
+                    let lq = &coord.iter().find(|(n, _)| n == "Lq").unwrap().1;
+                    let mut syms = Vec::new();
+                    lq.symbols(&mut syms);
+                    match grad {
+                        GradTarget::DQ => {
+                            assert!(syms.contains(&"block_idx".to_string()), "{grad}: {lq}")
+                        }
+                        _ => assert!(syms.contains(&"i".to_string()), "{grad}: {lq}"),
+                    }
+                }
+            });
+            assert!(saw, "{grad}: causal backward must mask the recomputed scores");
+        }
+    }
+
+    #[test]
+    fn reshape_precedes_every_backward_accumulate_gemm() {
+        let spec = bwd_spec(true);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let mut found = false;
+            r.program.walk(|s| {
+                if let Stmt::For { body, .. } = s {
+                    for w in body.windows(2) {
+                        if let (
+                            Stmt::Reshape { from, to, .. },
+                            Stmt::Compute { op: ComputeOp::Gemm, accumulate: true, .. },
+                        ) = (&w[0], &w[1])
+                        {
+                            assert_eq!(from.frag, Frag::C);
+                            assert_eq!(to.frag, Frag::A);
+                            found = true;
+                        }
+                    }
+                }
+            });
+            assert!(found, "{grad}: missing mma_C -> mma_A relayout");
+        }
+    }
+
+    #[test]
+    fn paged_backward_gathers_kv_on_both_sides() {
+        let spec = bwd_spec(true).with_layout(KvLayout::Paged { page_size: 16 });
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            assert!(r.program.params().contains_key("page_size"), "{grad}");
+            let mut kv_gathers = 0;
+            r.program.walk(|s| {
+                if let Stmt::Copy { tensor, coord, src: MemSpace::Global, .. } = s {
+                    let gathered = coord.iter().any(|(_, e)| e.gather().is_some());
+                    if tensor == "K" || tensor == "V" {
+                        assert!(gathered, "{grad}: paged {tensor} copy must gather");
+                        kv_gathers += 1;
+                    } else {
+                        assert!(!gathered, "{grad}: {tensor} stays dense");
+                    }
+                }
+            });
+            assert!(kv_gathers >= 1, "{grad}");
+        }
+    }
+
+    #[test]
+    fn sliding_backward_emits_window_mask_and_guard() {
+        let spec = bwd_spec(true).with_layout(KvLayout::Sliding { window: 128 });
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            assert_eq!(r.program.params().get("window"), Some(&128), "{grad}");
+            let mut saw_mask = false;
+            let mut saw_guard = false;
+            r.program.walk(|s| match s {
+                Stmt::Compute { op: ComputeOp::WindowMask, .. } => saw_mask = true,
+                Stmt::If { lhs, rhs, body, .. } => {
+                    let mut syms = Vec::new();
+                    lhs.symbols(&mut syms);
+                    rhs.symbols(&mut syms);
+                    if syms.contains(&"window".to_string())
+                        && body.iter().any(|b| matches!(b, Stmt::Compute { .. }))
+                    {
+                        saw_guard = true;
+                    }
+                }
+                _ => {}
+            });
+            assert!(saw_mask, "{grad}: sliding backward must window-mask");
+            assert!(saw_guard, "{grad}: sliding backward must tile-skip");
+        }
+    }
+
+    #[test]
+    fn dq_prefetches_dk_dv_do_not() {
+        let spec = bwd_spec(true);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let mut prefetches = 0;
+            r.program.walk(|s| {
+                if let Stmt::If { body, .. } = s {
+                    if body.iter().any(|b| matches!(b, Stmt::Copy { .. })) {
+                        prefetches += 1;
+                    }
+                }
+            });
+            match grad {
+                GradTarget::DQ => assert!(prefetches >= 1, "dQ must double-buffer K/V"),
+                _ => assert_eq!(prefetches, 0, "{grad} stays single-buffered"),
+            }
+        }
+    }
+
+    #[test]
+    fn backward_passes_the_static_checker() {
+        for causal in [false, true] {
+            let spec = bwd_spec(causal);
+            for (grad, sk) in backward_sketches(&spec) {
+                let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+                let diags = crate::verify::checker::check(&r.program);
+                assert!(diags.is_empty(), "{grad} causal={causal}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_sketch_on_backward_spec_reasons_to_dq() {
+        let spec = bwd_spec(true);
+        let sk = generate_sketch(&spec);
+        let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        assert!(r.program.name.ends_with("_bwd_dq"), "{}", r.program.name);
+    }
+}

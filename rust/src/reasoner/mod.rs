@@ -19,7 +19,14 @@
 //!
 //! The [`profiles::LlmProfile`] selects which of these rules fire and can
 //! inject the Appendix-B defects for the single-stage ablation.
+//!
+//! Backward sketches (program names carrying `_bwd_dq|_bwd_dk|_bwd_dv`)
+//! route to the [`backward`] twin of this module, which applies the same
+//! six steps re-oriented per gradient (block side vs stream side, causal
+//! start/end clipping, the mma_C→mma_A relayout before the accumulate
+//! GEMM).
 
+pub mod backward;
 pub mod profiles;
 pub mod tiling;
 
@@ -75,6 +82,9 @@ pub fn reason_with_tiling(
     profile: &LlmProfile,
     tiling: Tiling,
 ) -> Reasoned {
+    if backward::grad_of(&sketch.name).is_some() {
+        return backward::reason_backward(sketch, spec, profile, tiling);
+    }
     let roles = infer_roles(sketch);
     let prefetch = profile.prefetch && tiling.double_buffer;
     let ctx = Ctx { spec, profile, prefetch, roles: &roles };
@@ -745,7 +755,7 @@ mod tests {
         let spec = mha();
         let sketch = generate_sketch(&spec);
         let tiling = crate::autotune::space::tiling_of(
-            &crate::autotune::space::Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1 },
+            &crate::autotune::space::Candidate { bm: 64, bn: 32, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
             &spec,
             &GpuArch::a100(),
         );

@@ -56,8 +56,18 @@ pub fn smem_bytes(spec: &OpSpec, bm: usize, bn: usize, double_buffer: bool) -> u
 
 /// Register footprint: fp32 accumulator O (BM × VDim), score tile S
 /// (BM × BN), softmax stats (2 × BM), spread across the block's threads.
+/// The backward holds four score-shaped tiles (S, P, dP, dS) plus the
+/// gradient accumulator and the lse/delta rows, so its pressure is
+/// correspondingly higher — the same arithmetic prunes the autotune
+/// space for backward specs.
 pub fn reg_bytes(spec: &OpSpec, bm: usize, bn: usize) -> usize {
-    4 * (bm * spec.v_head_dim + bm * bn + 2 * bm)
+    use crate::sketch::spec::Direction;
+    if spec.direction == Direction::Backward {
+        let acc = bm * spec.qk_dim().max(spec.v_head_dim);
+        4 * (acc + 4 * bm * bn + 2 * bm)
+    } else {
+        4 * (bm * spec.v_head_dim + bm * bn + 2 * bm)
+    }
 }
 
 /// Thread blocks resident per SM under the smem + register limits

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{Executable, Runtime};
 use crate::autotune::cache::{self as tune_cache, TuneCache};
-use crate::sketch::spec::{AttnVariant, KvLayout};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
 
 /// One manifest entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +48,15 @@ impl ArtifactMeta {
             .get("layout")
             .and_then(|v| KvLayout::parse_field(v))
             .unwrap_or(KvLayout::Contiguous)
+    }
+
+    /// Pass direction from the optional `dir=` manifest field (absent or
+    /// unparseable means forward — pre-direction manifests stay valid).
+    pub fn direction(&self) -> Direction {
+        self.fields
+            .get("dir")
+            .and_then(|v| Direction::parse_field(v))
+            .unwrap_or(Direction::Forward)
     }
 }
 
@@ -103,6 +112,9 @@ pub struct AttnSignature {
     /// kernel takes a block-table operand and cannot serve contiguous
     /// requests (or vice versa), so the layout is part of the signature.
     pub kv_layout: KvLayout,
+    /// Pass direction: a backward executable takes dO/lse/delta operands
+    /// and produces gradients, so forward traffic can never route to it.
+    pub direction: Direction,
 }
 
 impl AttnSignature {
@@ -118,6 +130,7 @@ impl AttnSignature {
             seq: m.usize_field("seq")?,
             kv: m.usize_field("kv")?,
             kv_layout: m.kv_layout(),
+            direction: m.direction(),
         })
     }
 }
@@ -285,7 +298,7 @@ mod tests {
         let mut cache = TuneCache::new();
         cache.insert(TuneEntry {
             key: format!("{}|A100|pallas", tune_cache::spec_part(&spec)),
-            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 },
+            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1, prefetch_pages: 1 },
             micros: 100.0,
             strategy: "exhaustive".into(),
             evaluated: 10,
@@ -304,6 +317,7 @@ mod tests {
             seq: 4096,
             kv: 4096,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         assert_eq!(reg.find(&sig).unwrap().id, "v1", "find keeps first-match semantics");
         assert_eq!(reg.find_best(&sig).unwrap().id, "v2", "find_best follows the tune cache");
@@ -330,13 +344,13 @@ mod tests {
         let mut cache = TuneCache::new();
         cache.insert(TuneEntry {
             key: format!("{part}|A100|pallas"),
-            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 },
+            cand: Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1, prefetch_pages: 1 },
             micros: 100.0,
             strategy: "exhaustive".into(),
             evaluated: 10,
         });
-        let v1 = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1 };
-        let v2 = Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1 };
+        let v1 = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        let v2 = Candidate { bm: 256, bn: 128, stages: 2, warps: 8, split_k: 1, prefetch_pages: 1 };
         cache.observe(&part, v1, 90.0);
         cache.observe(&part, v2, 450.0);
         cache.save(&dir.join("tune.txt")).unwrap();
@@ -353,6 +367,7 @@ mod tests {
             seq: 4096,
             kv: 4096,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         assert_eq!(
             reg.find_best(&sig).unwrap().id,
@@ -381,6 +396,7 @@ mod tests {
             seq: 256,
             kv: 256,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         assert_eq!(
             reg.find(&sig).map(|m| &m.id),

@@ -18,14 +18,78 @@ pub mod spec;
 use crate::tl::ast::{ComputeOp, Stmt, TensorRef, TlProgram};
 use crate::tl::expr::Expr;
 use crate::tl::types::MemSpace;
-use spec::{AttnVariant, OpSpec};
+use spec::{AttnVariant, Direction, OpSpec};
 
-/// Generate the TL Sketch for an operator.
+/// Which gradient a backward block program produces. The FlashAttention-2
+/// backward splits into three single-output block programs so each sweep
+/// writes disjoint output rows (no atomics): dQ parallelizes over
+/// q-blocks exactly like the forward; dK and dV parallelize over
+/// KV-blocks and stream q-tiles (see DESIGN.md §10 for the
+/// parallel-sweep safety argument).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GradTarget {
+    DQ,
+    DK,
+    DV,
+}
+
+impl GradTarget {
+    pub fn all() -> [GradTarget; 3] {
+        [GradTarget::DQ, GradTarget::DK, GradTarget::DV]
+    }
+
+    /// Lower-case name fragment (`dq`/`dk`/`dv`) used in program and
+    /// kernel names.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GradTarget::DQ => "dq",
+            GradTarget::DK => "dk",
+            GradTarget::DV => "dv",
+        }
+    }
+
+    /// The TL tensor this program stores (`dQ`/`dK`/`dV`).
+    pub fn output_name(&self) -> &'static str {
+        match self {
+            GradTarget::DQ => "dQ",
+            GradTarget::DK => "dK",
+            GradTarget::DV => "dV",
+        }
+    }
+
+    /// Parse the `dq`/`dk`/`dv` fragment (as embedded in program names).
+    pub fn parse(s: &str) -> Option<GradTarget> {
+        match s {
+            "dq" => Some(GradTarget::DQ),
+            "dk" => Some(GradTarget::DK),
+            "dv" => Some(GradTarget::DV),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GradTarget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Generate the TL Sketch for an operator. A backward spec yields the
+/// canonical dQ program (the q-block-parallel twin of the forward sweep);
+/// the full three-program bundle comes from [`backward_sketches`].
 pub fn generate_sketch(spec: &OpSpec) -> TlProgram {
+    if spec.direction == Direction::Backward {
+        return backward_sketch(spec, GradTarget::DQ);
+    }
     match spec.variant {
         AttnVariant::Nsa => nsa_sketch(spec),
         _ => flash_sketch(spec),
     }
+}
+
+/// The full backward bundle: one flow-only sketch per gradient.
+pub fn backward_sketches(spec: &OpSpec) -> Vec<(GradTarget, TlProgram)> {
+    GradTarget::all().iter().map(|&g| (g, backward_sketch(spec, g))).collect()
 }
 
 /// The FlashAttention execution flow common to MHA / GQA / MQA / MLA:
@@ -193,6 +257,160 @@ fn nsa_sketch(spec: &OpSpec) -> TlProgram {
     TlProgram::new(format!("{}_sketch", spec.kernel_name()), stmts)
 }
 
+/// FlashAttention-2-style backward sketches (one per gradient).
+///
+/// All three recompute the probability tile from Q, K and the saved
+/// per-row logsumexp `Lse` (`P = exp(S * scale - Lse)` — the recompute-
+/// vs-store trick: no O(n^2) tensor is ever read back), and fold the
+/// softmax Jacobian through the saved `Delta = rowsum(dO ∘ O)`:
+///
+/// ```text
+/// dV = Pᵀ dO
+/// dP = dO Vᵀ
+/// dS = P ∘ (dP − Delta) * scale
+/// dQ = dS K        (accumulated per q-block)
+/// dK = dSᵀ Q       (accumulated per KV-block)
+/// ```
+///
+/// The dQ program owns a `BM`-row q-block and streams KV tiles (the
+/// forward's loop structure); dK/dV own a `BM`-row KV-block and stream
+/// q-tiles, so every program stores only its own block's rows.
+fn backward_sketch(spec: &OpSpec, grad: GradTarget) -> TlProgram {
+    let scale = |t: &str| Stmt::Compute {
+        op: ComputeOp::Multiply,
+        inputs: vec![TensorRef::new(t), TensorRef::new("softmax_scale")],
+        coord: vec![],
+        with: vec![],
+        output: Some(t.into()),
+        accumulate: false,
+        new_var: true,
+    };
+    let mask = Stmt::Compute {
+        op: ComputeOp::CausalMask,
+        inputs: vec![TensorRef::new("S")],
+        coord: vec![],
+        with: vec![],
+        output: None,
+        accumulate: false,
+        new_var: false,
+    };
+    let sub = |t: &str, stat: &str| Stmt::Compute {
+        op: ComputeOp::Subtract,
+        inputs: vec![TensorRef::new(t), TensorRef::new(stat)],
+        coord: vec![],
+        with: vec![],
+        output: Some(t.into()),
+        accumulate: false,
+        new_var: false,
+    };
+    let exp = Stmt::Compute {
+        op: ComputeOp::Exp,
+        inputs: vec![TensorRef::new("S")],
+        coord: vec![],
+        with: vec![],
+        output: Some("P".into()),
+        accumulate: false,
+        new_var: false,
+    };
+    let mul = |a: &str, b: &str, out: &str| Stmt::Compute {
+        op: ComputeOp::Multiply,
+        inputs: vec![TensorRef::new(a), TensorRef::new(b)],
+        coord: vec![],
+        with: vec![],
+        output: Some(out.into()),
+        accumulate: false,
+        new_var: false,
+    };
+
+    // The recompute prologue shared by every loop body: S = QKᵀ * scale,
+    // masked, minus Lse, exponentiated into P.
+    let recompute = |body: &mut Vec<Stmt>| {
+        body.push(gemm(&[TensorRef::new("Q"), TensorRef::t("K")], "S", false));
+        body.push(scale("S"));
+        if spec.causal {
+            body.push(mask.clone());
+        }
+        body.push(sub("S", "Lse"));
+        body.push(exp.clone());
+    };
+    // dS = P ∘ (dP − Delta) * scale, from dP = dO Vᵀ.
+    let dscore = |body: &mut Vec<Stmt>| {
+        body.push(gemm(&[TensorRef::new("dO"), TensorRef::t("V")], "dP", false));
+        body.push(sub("dP", "Delta"));
+        body.push(mul("P", "dP", "dS"));
+        body.push(scale("dS"));
+    };
+
+    let mut stmts: Vec<Stmt> = Vec::new();
+    match grad {
+        GradTarget::DQ => {
+            // Block side: this q-block's Q, dO and row stats.
+            stmts.push(copy("Q", MemSpace::Global, MemSpace::Shared));
+            stmts.push(copy("Q", MemSpace::Shared, MemSpace::Register));
+            stmts.push(copy("dO", MemSpace::Global, MemSpace::Shared));
+            stmts.push(copy("dO", MemSpace::Shared, MemSpace::Register));
+            stmts.push(copy("Lse", MemSpace::Global, MemSpace::Register));
+            stmts.push(copy("Delta", MemSpace::Global, MemSpace::Register));
+            let mut body = vec![
+                copy("K", MemSpace::Global, MemSpace::Shared),
+                copy("V", MemSpace::Global, MemSpace::Shared),
+            ];
+            recompute(&mut body);
+            dscore(&mut body);
+            body.push(gemm(&[TensorRef::new("dS"), TensorRef::new("K")], "dQ", true));
+            stmts.push(Stmt::For {
+                var: "i".into(),
+                start: Expr::int(0),
+                end: Expr::div(Expr::sym("kv_len"), Expr::sym("BN")),
+                body,
+            });
+            stmts.push(copy("dQ", MemSpace::Register, MemSpace::Global));
+        }
+        GradTarget::DK => {
+            // Block side: this KV-block's K and V.
+            stmts.push(copy("K", MemSpace::Global, MemSpace::Shared));
+            stmts.push(copy("K", MemSpace::Shared, MemSpace::Register));
+            stmts.push(copy("V", MemSpace::Global, MemSpace::Shared));
+            stmts.push(copy("V", MemSpace::Shared, MemSpace::Register));
+            let mut body = vec![
+                copy("Q", MemSpace::Global, MemSpace::Shared),
+                copy("dO", MemSpace::Global, MemSpace::Shared),
+                copy("Lse", MemSpace::Global, MemSpace::Register),
+                copy("Delta", MemSpace::Global, MemSpace::Register),
+            ];
+            recompute(&mut body);
+            dscore(&mut body);
+            body.push(gemm(&[TensorRef::t("dS"), TensorRef::new("Q")], "dK", true));
+            stmts.push(Stmt::For {
+                var: "i".into(),
+                start: Expr::int(0),
+                end: Expr::div(Expr::sym("seq_len"), Expr::sym("BN")),
+                body,
+            });
+            stmts.push(copy("dK", MemSpace::Register, MemSpace::Global));
+        }
+        GradTarget::DV => {
+            stmts.push(copy("K", MemSpace::Global, MemSpace::Shared));
+            stmts.push(copy("K", MemSpace::Shared, MemSpace::Register));
+            let mut body = vec![
+                copy("Q", MemSpace::Global, MemSpace::Shared),
+                copy("dO", MemSpace::Global, MemSpace::Shared),
+                copy("Lse", MemSpace::Global, MemSpace::Register),
+            ];
+            recompute(&mut body);
+            body.push(gemm(&[TensorRef::t("P"), TensorRef::new("dO")], "dV", true));
+            stmts.push(Stmt::For {
+                var: "i".into(),
+                start: Expr::int(0),
+                end: Expr::div(Expr::sym("seq_len"), Expr::sym("BN")),
+                body,
+            });
+            stmts.push(copy("dV", MemSpace::Register, MemSpace::Global));
+        }
+    }
+    TlProgram::new(format!("{}_{}_sketch", spec.kernel_name(), grad.as_str()), stmts)
+}
+
 fn copy(tensor: &str, src: MemSpace, dst: MemSpace) -> Stmt {
     Stmt::Copy { tensor: tensor.into(), shape: None, coord: vec![], src, dst }
 }
@@ -291,6 +509,67 @@ mod tests {
         let sk = generate_sketch(&OpSpec::nsa(4096));
         let loops = sk.stmts.iter().filter(|s| matches!(s, Stmt::For { .. })).count();
         assert_eq!(loops, 2);
+    }
+
+    #[test]
+    fn backward_sketches_are_flow_only_and_roundtrip() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_direction(spec::Direction::Backward);
+        for (grad, sk) in backward_sketches(&spec) {
+            assert!(!sk.is_reasoned(), "{grad}: sketch must be flow-only");
+            assert!(sk.name.contains("_bwd_"), "{grad}: name {}", sk.name);
+            let text = print_program(&sk);
+            let re = parse_program(&text).unwrap();
+            assert_eq!(sk.stmts, re.stmts, "{grad} roundtrip");
+        }
+    }
+
+    #[test]
+    fn backward_dk_dv_use_transposed_accumulate() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_direction(spec::Direction::Backward);
+        for (grad, sk) in backward_sketches(&spec) {
+            let mut acc_gemms = 0;
+            let mut acc_transposed = 0;
+            sk.walk(|s| {
+                if let Stmt::Compute { op: ComputeOp::Gemm, inputs, accumulate: true, .. } =
+                    s
+                {
+                    acc_gemms += 1;
+                    if inputs[0].transposed {
+                        acc_transposed += 1;
+                    }
+                }
+            });
+            assert_eq!(acc_gemms, 1, "{grad}: one accumulate GEMM per program");
+            match grad {
+                GradTarget::DQ => assert_eq!(acc_transposed, 0, "dQ accumulates dS @ K"),
+                GradTarget::DK | GradTarget::DV => {
+                    assert_eq!(acc_transposed, 1, "{grad} needs the transposed accumulate")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_spec_generates_the_dq_sketch_by_default() {
+        let spec = OpSpec::benchmark(AttnVariant::Gqa, 1024, 128, true)
+            .with_direction(spec::Direction::Backward);
+        let sk = generate_sketch(&spec);
+        assert!(sk.name.ends_with("_bwd_dq_sketch"), "{}", sk.name);
+    }
+
+    #[test]
+    fn non_causal_backward_has_no_mask() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+            .with_direction(spec::Direction::Backward);
+        for (_, sk) in backward_sketches(&spec) {
+            sk.walk(|s| {
+                if let Stmt::Compute { op, .. } = s {
+                    assert_ne!(*op, ComputeOp::CausalMask);
+                }
+            });
+        }
     }
 
     #[test]

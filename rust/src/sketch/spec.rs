@@ -138,6 +138,52 @@ impl fmt::Display for KvLayout {
     }
 }
 
+/// Which pass of the operator is generated. The forward pass is the
+/// paper's benchmark workload; the backward pass (FlashAttention-2-style
+/// recompute from Q/K + the saved logsumexp) opens training workloads.
+/// Every naming and cache surface treats `Forward` as the empty suffix so
+/// pre-direction artifacts, registry keys and tune caches stay valid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Direction {
+    #[default]
+    Forward,
+    Backward,
+}
+
+impl Direction {
+    /// Stable identifier fragment (`""` for forward, `"_bwd"` for
+    /// backward) — the same empty-suffix convention as [`KvLayout`].
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Direction::Forward => "",
+            Direction::Backward => "_bwd",
+        }
+    }
+
+    /// Manifest / CLI spelling (round-trips through [`Self::parse_field`]).
+    pub fn field(&self) -> &'static str {
+        match self {
+            Direction::Forward => "forward",
+            Direction::Backward => "backward",
+        }
+    }
+
+    /// Parse the `dir=` manifest field / `--direction` CLI spelling.
+    pub fn parse_field(s: &str) -> Option<Direction> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "forward" | "fwd" => Some(Direction::Forward),
+            "backward" | "bwd" => Some(Direction::Backward),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Direction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.field())
+    }
+}
+
 /// One attention-operator instance: the input to sketch generation and to
 /// the performance model, and the cache key for compiled artifacts.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -169,6 +215,8 @@ pub struct OpSpec {
     pub nsa_window: usize,
     /// Physical K/V layout (contiguous, paged, sliding-window).
     pub kv_layout: KvLayout,
+    /// Forward or backward pass (forward = the paper's benchmark setup).
+    pub direction: Direction,
 }
 
 /// Paper benchmark constants (§4.1): hidden dim 2048, total tokens 16k.
@@ -205,6 +253,7 @@ impl OpSpec {
             nsa_topk: 0,
             nsa_window: 0,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         }
     }
 
@@ -260,6 +309,12 @@ impl OpSpec {
         let head_dim = args.get_usize("head-dim", 64)?;
         let causal = args.get_bool("causal");
         let layout = kv_layout_from_cli(args)?;
+        let direction = if args.get_bool("backward") {
+            Direction::Backward
+        } else {
+            Direction::parse_field(args.get_or("direction", "forward"))
+                .ok_or("bad --direction (forward|backward)")?
+        };
         let mut spec = match variant {
             AttnVariant::Mla => OpSpec::mla(seq, true),
             AttnVariant::Nsa => OpSpec::nsa(seq),
@@ -275,7 +330,13 @@ impl OpSpec {
                         trails each query position)"
                 .into());
         }
+        if direction == Direction::Backward && variant == AttnVariant::Nsa {
+            return Err("--direction backward is not supported for NSA (its \
+                        selection branch has no dense gradient path yet)"
+                .into());
+        }
         spec.kv_layout = layout;
+        spec.direction = direction;
         Ok(spec)
     }
 
@@ -283,6 +344,13 @@ impl OpSpec {
     pub fn with_layout(&self, layout: KvLayout) -> Self {
         let mut s = self.clone();
         s.kv_layout = layout;
+        s
+    }
+
+    /// Clone of this spec with a different pass direction.
+    pub fn with_direction(&self, direction: Direction) -> Self {
+        let mut s = self.clone();
+        s.direction = direction;
         s
     }
 
@@ -300,13 +368,20 @@ impl OpSpec {
     /// `4 * seqlen^2 * head_dim * num_heads` (per batch element), with the
     /// FlashAttention convention of halving for causal masks. For MLA the
     /// two GEMMs have different inner dimensions (qk_dim vs v_head_dim).
+    ///
+    /// The backward pass runs five GEMMs over the same score rectangle
+    /// where the forward runs two (S recompute, dP, dV, dK, dQ — the
+    /// FlashAttention-2 accounting), so it reports 2.5x the forward FLOPs.
     pub fn flops(&self) -> f64 {
         let s = self.seq_len as f64;
         let k = self.kv_len as f64;
         let h = self.num_q_heads as f64;
         let b = self.batch as f64;
         let gemm_dims = (self.qk_dim() + self.v_head_dim) as f64;
-        let full = 2.0 * b * s * k * h * gemm_dims;
+        let mut full = 2.0 * b * s * k * h * gemm_dims;
+        if self.direction == Direction::Backward {
+            full *= 2.5;
+        }
         if self.causal {
             full / 2.0
         } else {
@@ -314,29 +389,40 @@ impl OpSpec {
         }
     }
 
-    /// Bytes of Q + K + V + O in global memory (per forward call).
+    /// Bytes of Q + K + V + O in global memory (per forward call). The
+    /// backward pass additionally reads dO and the per-row logsumexp/delta
+    /// stats and writes dQ/dK/dV.
     pub fn io_bytes(&self) -> usize {
         let e = self.dtype.bytes();
         let q = self.batch * self.num_q_heads * self.seq_len * self.qk_dim();
         let k = self.batch * self.num_kv_heads * self.kv_len * self.qk_dim();
         let v = self.batch * self.num_kv_heads * self.kv_len * self.v_head_dim;
         let o = self.batch * self.num_q_heads * self.seq_len * self.v_head_dim;
-        (q + k + v + o) * e
+        let fwd = (q + k + v + o) * e;
+        if self.direction == Direction::Backward {
+            // dO read + dQ/dK/dV written + 2 f32 stat rows (Lse, Delta).
+            let stats = 2 * self.batch * self.num_q_heads * self.seq_len * 4;
+            fwd + (o + q + k + v) * e + stats
+        } else {
+            fwd
+        }
     }
 
     /// Stable identifier: artifact filename stem, registry key, kernel
     /// module name. Shape-free so one compiled kernel serves one
-    /// (variant, head-dim, causal, dtype, kv-layout) family; shapes are
-    /// burned in at AOT time and recorded separately in the manifest.
-    /// Contiguous layouts keep the historical (suffix-free) spelling.
+    /// (variant, head-dim, causal, dtype, kv-layout, direction) family;
+    /// shapes are burned in at AOT time and recorded separately in the
+    /// manifest. Contiguous forward kernels keep the historical
+    /// (suffix-free) spelling.
     pub fn kernel_name(&self) -> String {
         format!(
-            "{}_hd{}_{}_{}{}",
+            "{}_hd{}_{}_{}{}{}",
             self.variant,
             self.head_dim,
             if self.causal { "causal" } else { "full" },
             self.dtype,
             self.kv_layout.suffix(),
+            self.direction.suffix(),
         )
     }
 
@@ -454,6 +540,37 @@ mod tests {
         }
         assert_eq!(KvLayout::parse_field(""), Some(KvLayout::Contiguous));
         assert_eq!(KvLayout::parse_field("pagedx"), None);
+    }
+
+    #[test]
+    fn direction_field_roundtrip() {
+        for d in [Direction::Forward, Direction::Backward] {
+            assert_eq!(Direction::parse_field(d.field()), Some(d));
+        }
+        assert_eq!(Direction::parse_field(""), Some(Direction::Forward));
+        assert_eq!(Direction::parse_field("bwd"), Some(Direction::Backward));
+        assert_eq!(Direction::parse_field("sideways"), None);
+    }
+
+    #[test]
+    fn kernel_name_grows_direction_dimension() {
+        let s = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        // Forward keeps the pre-direction spelling exactly.
+        assert_eq!(s.kernel_name(), "mha_hd64_causal_f16");
+        let b = s.with_direction(Direction::Backward);
+        assert_eq!(b.kernel_name(), "mha_hd64_causal_f16_bwd");
+        let pb = s
+            .with_layout(KvLayout::Paged { page_size: 16 })
+            .with_direction(Direction::Backward);
+        assert_eq!(pb.kernel_name(), "mha_hd64_causal_f16_paged16_bwd");
+    }
+
+    #[test]
+    fn backward_counts_five_gemms_and_extra_io() {
+        let f = OpSpec::benchmark(AttnVariant::Mha, 2048, 64, true);
+        let b = f.with_direction(Direction::Backward);
+        assert!((b.flops() / f.flops() - 2.5).abs() < 1e-9);
+        assert!(b.io_bytes() > f.io_bytes());
     }
 
     #[test]

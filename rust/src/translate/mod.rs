@@ -17,6 +17,12 @@
 //! concrete code (the paper's "each statement can be fully and precisely
 //! translated"), and the emitters interleave the original TL statement as
 //! a comment above its translation so the correspondence is auditable.
+//!
+//! Backward specs translate through [`Backend::emit_backward`]: the three
+//! verified gradient programs (dQ/dK/dV) land in **one** source module —
+//! Pallas renders three kernels behind a custom-VJP-shaped
+//! `attention_backward(...)` host wrapper; CuTe renders the three
+//! `__global__` kernels with the dQ-accumulation loop.
 
 pub mod cute;
 pub mod pallas;
@@ -24,6 +30,7 @@ pub mod pallas;
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::Reasoned;
 use crate::sketch::spec::OpSpec;
+use crate::sketch::GradTarget;
 use std::fmt;
 
 #[derive(Debug, Clone)]
@@ -48,4 +55,20 @@ pub trait Backend {
         spec: &OpSpec,
         arch: &GpuArch,
     ) -> Result<String, TranslateError>;
+
+    /// Emit the backward bundle (the three verified gradient programs)
+    /// as one source module. Backends that cannot lower the backward
+    /// pass reject it, mirroring the forward's per-profile gating.
+    fn emit_backward(
+        &self,
+        parts: &[(GradTarget, Reasoned)],
+        spec: &OpSpec,
+        arch: &GpuArch,
+    ) -> Result<String, TranslateError> {
+        let _ = (parts, spec, arch);
+        Err(TranslateError(format!(
+            "backend `{}` cannot emit backward kernels",
+            self.name()
+        )))
+    }
 }

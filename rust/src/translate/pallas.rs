@@ -21,6 +21,7 @@ use super::{Backend, TranslateError};
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::{infer_roles, Reasoned, Role};
 use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use crate::sketch::GradTarget;
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use crate::tl::expr::{BinOp, Expr};
 use crate::tl::printer;
@@ -51,6 +52,18 @@ impl Backend for PallasBackend {
             ));
         }
         Emitter::new(reasoned, spec, arch).emit()
+    }
+
+    fn emit_backward(
+        &self,
+        parts: &[(GradTarget, Reasoned)],
+        spec: &OpSpec,
+        arch: &GpuArch,
+    ) -> Result<String, TranslateError> {
+        if spec.variant == AttnVariant::Nsa {
+            return Err(TranslateError("NSA has no dense backward path".into()));
+        }
+        BwdEmitter::new(parts, spec, arch).emit()
     }
 }
 
@@ -641,6 +654,610 @@ fn py_bool(b: bool) -> &'static str {
     }
 }
 
+/// Python spelling of a backward-program TL tensor (the backward family
+/// has a fixed vocabulary, so the mapping is by name, not role).
+fn bwd_py(name: &str) -> String {
+    match name {
+        "Q" => "q".into(),
+        "K" => "k".into(),
+        "V" => "v".into(),
+        "dO" => "do".into(),
+        "Lse" => "lse".into(),
+        "Delta" => "delta".into(),
+        "S" => "s".into(),
+        "P" => "p".into(),
+        "dP" => "dp".into(),
+        "dS" => "ds".into(),
+        "dQ" => "dq".into(),
+        "dK" => "dk".into(),
+        "dV" => "dv".into(),
+        other => format!("t_{}", other.to_ascii_lowercase()),
+    }
+}
+
+/// The `*_ref` kernel operand backing a backward global.
+fn bwd_ref(name: &str) -> String {
+    format!("{}_ref", bwd_py(name))
+}
+
+fn bwd_expr_py(e: &Expr) -> String {
+    match e {
+        Expr::Int(v) => v.to_string(),
+        Expr::Sym(s) => match s.as_str() {
+            "HeadDim" => "QK_DIM".into(),
+            "VDim" => "V_DIM".into(),
+            "seq_len" => "SEQ_LEN".into(),
+            "kv_len" => "KV_LEN".into(),
+            "group_size" => "GROUP_SIZE".into(),
+            "window" => "WINDOW".into(),
+            other => other.to_string(),
+        },
+        Expr::Bin(op, a, b) => {
+            let sym = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "//",
+            };
+            format!("({} {} {})", bwd_expr_py(a), sym, bwd_expr_py(b))
+        }
+        Expr::Idx(t, e) => {
+            let table = if t == "block_table" { "bt_ref" } else { t.as_str() };
+            format!("{table}[{}]", bwd_expr_py(e))
+        }
+    }
+}
+
+/// Backward-module emitter: three kernels (`_kernel_dq/_dk/_dv`) behind
+/// a custom-VJP-shaped `attention_backward(q, k, v, do, o, lse, ...)`
+/// host wrapper that computes `delta = rowsum(do ∘ o)`, recomputes
+/// `o`/`lse` with a jnp reference pass when the forward didn't save
+/// them, launches the three pallas_calls, and group-sums dK/dV for
+/// GQA/MQA. Every TL statement appears as a `# TL:` comment above its
+/// translation, exactly as in the forward emitter.
+struct BwdEmitter<'a> {
+    parts: &'a [(GradTarget, Reasoned)],
+    spec: &'a OpSpec,
+    arch: &'a GpuArch,
+    out: Vec<String>,
+    indent: usize,
+}
+
+impl<'a> BwdEmitter<'a> {
+    fn new(parts: &'a [(GradTarget, Reasoned)], spec: &'a OpSpec, arch: &'a GpuArch) -> Self {
+        BwdEmitter { parts, spec, arch, out: Vec::new(), indent: 0 }
+    }
+
+    fn line(&mut self, s: impl AsRef<str>) {
+        let pad = "    ".repeat(self.indent);
+        self.out.push(format!("{pad}{}", s.as_ref()));
+    }
+
+    fn tl_comment(&mut self, s: &Stmt) {
+        let text = printer::print_program(&TlProgram::new("c", vec![s.clone()]));
+        if let Some(first) = text.lines().find(|l| !l.trim().is_empty()) {
+            self.line(format!("# TL: {}", first.trim()));
+        }
+    }
+
+    fn paged(&self) -> bool {
+        matches!(self.spec.kv_layout, KvLayout::Paged { .. })
+    }
+
+    /// Score-tile dimensions in this gradient's orientation: `(rows,
+    /// cols)` as Python constant names.
+    fn score_dims(grad: GradTarget) -> (&'static str, &'static str) {
+        match grad {
+            GradTarget::DQ => ("BM", "BN"),
+            _ => ("BN", "BM"),
+        }
+    }
+
+    /// Is this tensor the program's BM-row block side (vs the streamed
+    /// BN-tile side)? Mirrors the reasoner's orientation table.
+    fn is_block_side(grad: GradTarget, name: &str) -> bool {
+        match grad {
+            GradTarget::DQ => matches!(name, "Q" | "dO" | "Lse" | "Delta" | "dQ"),
+            GradTarget::DK => matches!(name, "K" | "V" | "dK"),
+            GradTarget::DV => matches!(name, "K" | "dV"),
+        }
+    }
+
+    fn emit(mut self) -> Result<String, TranslateError> {
+        let (_, first) = self
+            .parts
+            .first()
+            .ok_or_else(|| TranslateError("backward bundle is empty".into()))?;
+        let params = first.program.params();
+        let get = |n: &str| -> Result<i64, TranslateError> {
+            params
+                .get(n)
+                .copied()
+                .ok_or_else(|| TranslateError(format!("TL code missing param `{n}`")))
+        };
+        let bm = get("BM")?;
+        let bn = get("BN")?;
+        let qk = get("HeadDim")?;
+        let vd = get("VDim")?;
+        let group = params.get("group_size").copied().unwrap_or(1);
+        let name = self.spec.kernel_name();
+
+        self.line(format!("\"\"\"{name}: FlashAttention-2-style backward pass (Pallas).\n"));
+        self.line("AUTO-GENERATED by `tlc` (QiMeng-Attention reproduction) -- DO NOT EDIT.");
+        self.line("Three single-output kernels (dQ / dK / dV) recompute the probability");
+        self.line("tile from Q, K and the saved per-row logsumexp, then fold the softmax");
+        self.line("Jacobian through delta = rowsum(dO * O) -- no O(n^2) tensor is ever");
+        self.line("read back from HBM (the recompute-vs-store trick, DESIGN.md S10).");
+        self.line(format!(
+            "Modeled GPU target: {} ({:?}); emitted for TPU/Pallas.",
+            self.arch.name, self.arch.generation
+        ));
+        self.line("TL statements appear as `# TL:` comments above their translation.");
+        self.line("\"\"\"");
+        self.line("");
+        self.line("import jax");
+        self.line("import jax.numpy as jnp");
+        self.line("from jax.experimental import pallas as pl");
+        self.line("");
+        self.line(format!("BM = {bm}"));
+        self.line(format!("BN = {bn}"));
+        self.line(format!("QK_DIM = {qk}"));
+        self.line(format!("V_DIM = {vd}"));
+        self.line(format!("GROUP_SIZE = {group}"));
+        self.line(format!("SOFTMAX_SCALE = {:.17}", 1.0 / (qk as f64).sqrt()));
+        self.line("MASK_VALUE = -1e30  # finite -inf: exp(MASK - lse) underflows to 0");
+        match self.spec.kv_layout {
+            KvLayout::Contiguous => {}
+            KvLayout::Paged { .. } => {
+                let page = params.get("page_size").copied().unwrap_or(bn);
+                self.line(format!("PAGE_SIZE = {page}  # rows per KV-cache page"));
+                self.line(format!(
+                    "PAGES_PER_TILE = {}  # BN // PAGE_SIZE (streamed K/V, dQ kernel)",
+                    bn / page.max(1)
+                ));
+                self.line(format!(
+                    "PAGES_PER_BLOCK = {}  # BM // PAGE_SIZE (block K/V, dK/dV kernels)",
+                    bm / page.max(1)
+                ));
+            }
+            KvLayout::Sliding { .. } => {
+                let window = params.get("window").copied().unwrap_or(bn);
+                self.line(format!("WINDOW = {window}  # sliding-window length"));
+            }
+        }
+        self.line("");
+        self.line("META = {");
+        self.line(format!("    \"name\": \"{name}\","));
+        self.line(format!("    \"variant\": \"{}\",", self.spec.variant));
+        self.line(format!("    \"causal\": {},", py_bool(self.spec.causal)));
+        self.line(format!("    \"bm\": {bm}, \"bn\": {bn},"));
+        self.line(format!("    \"qk_dim\": {qk}, \"v_dim\": {vd}, \"group_size\": {group},"));
+        self.line(format!("    \"target\": \"{}\",", self.arch.name));
+        self.line(format!("    \"kv_layout\": \"{}\",", self.spec.kv_layout.field()));
+        self.line("    \"direction\": \"backward\",");
+        self.line("}");
+        self.line("");
+
+        for i in 0..self.parts.len() {
+            self.line("");
+            self.emit_kernel(i)?;
+        }
+        self.line("");
+        self.emit_wrapper()?;
+        Ok(self.out.join("\n") + "\n")
+    }
+
+    fn emit_kernel(&mut self, part: usize) -> Result<(), TranslateError> {
+        let (grad, program) = {
+            let (g, r) = &self.parts[part];
+            (*g, r.program.clone())
+        };
+        let bt = if self.paged() { "bt_ref, " } else { "" };
+        self.line(format!(
+            "def _kernel_{g}({bt}q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, {g}_ref):",
+            g = grad.as_str()
+        ));
+        self.indent = 1;
+        match grad {
+            GradTarget::DQ => self.line(
+                "# One program per (batch, q-head, q-block): streams KV tiles, owns dQ rows.",
+            ),
+            GradTarget::DK => self.line(
+                "# One program per (batch, q-head, KV-block): streams q-tiles, owns dK rows.",
+            ),
+            GradTarget::DV => self.line(
+                "# One program per (batch, q-head, KV-block): streams q-tiles, owns dV rows.",
+            ),
+        }
+        self.line("block_idx = pl.program_id(2)");
+        // Bind only the length whose ref is full-size in this kernel: the
+        // other operand is delivered pre-blocked (shape[2] == BM), so a
+        // same-named binding would carry the wrong value.
+        match grad {
+            GradTarget::DQ => self.line("KV_LEN = k_ref.shape[2]  # k_ref is full-length here"),
+            _ => self.line("SEQ_LEN = q_ref.shape[2]  # q_ref is full-length here"),
+        }
+        for s in &program.stmts {
+            match s {
+                Stmt::Param { .. } => {}
+                Stmt::Allocate { name, space: MemSpace::Register, shape, .. }
+                    if *name == grad.output_name() =>
+                {
+                    self.tl_comment(s);
+                    let dims: Vec<String> = shape.iter().map(bwd_expr_py).collect();
+                    self.line(format!(
+                        "{} = jnp.zeros(({}), jnp.float32)",
+                        bwd_py(name),
+                        dims.join(", ")
+                    ));
+                }
+                Stmt::Allocate { .. } => {}
+                Stmt::Copy { .. } => self.emit_copy(grad, s)?,
+                Stmt::For { var, start, end, body } => {
+                    self.emit_loop(grad, var, start, end, body)?
+                }
+                Stmt::Compute { .. } => self.emit_compute(grad, s)?,
+                Stmt::Reshape { .. } => {
+                    self.tl_comment(s);
+                    self.line("# (fragment relayout: in-register on the MXU)");
+                }
+                Stmt::If { .. } => {
+                    self.tl_comment(s);
+                    self.line("# (guard handled by Mosaic pipelining)");
+                }
+            }
+        }
+        self.indent = 0;
+        self.line("");
+        Ok(())
+    }
+
+    fn emit_copy(&mut self, grad: GradTarget, s: &Stmt) -> Result<(), TranslateError> {
+        let Stmt::Copy { tensor, coord, src, dst, .. } = s else { unreachable!() };
+        match (src, dst) {
+            (MemSpace::Global, _) => {
+                self.tl_comment(s);
+                let py = bwd_py(tensor);
+                let r = bwd_ref(tensor);
+                let block_side = Self::is_block_side(grad, tensor);
+                let l_expr = coord
+                    .iter()
+                    .find(|(n, _)| n == "L")
+                    .map(|(_, e)| e)
+                    .ok_or_else(|| {
+                        TranslateError(format!("backward copy of `{tensor}` lacks L coord"))
+                    })?;
+                if let Some((_, idx)) = l_expr.gather() {
+                    // Page-table gather; the tile height decides how many
+                    // pages assemble it.
+                    let pages = if block_side { "PAGES_PER_BLOCK" } else { "PAGES_PER_TILE" };
+                    let e = bwd_expr_py(idx);
+                    self.line(format!("{py} = jnp.concatenate(["));
+                    self.line(format!(
+                        "    jax.lax.dynamic_slice_in_dim({r}[0, 0], bt_ref[({e}) * {pages} + j] * PAGE_SIZE, PAGE_SIZE, axis=0)"
+                    ));
+                    self.line(format!("    for j in range({pages})"));
+                    self.line("], axis=0).astype(jnp.float32)");
+                } else if block_side {
+                    // Delivered pre-blocked by the BlockSpec.
+                    self.line(format!("{py} = {r}[0, 0].astype(jnp.float32)"));
+                } else {
+                    let l = bwd_expr_py(l_expr);
+                    self.line(format!(
+                        "{py} = jax.lax.dynamic_slice_in_dim({r}[0, 0], {l} * BN, BN, axis=0).astype(jnp.float32)"
+                    ));
+                }
+                Ok(())
+            }
+            (MemSpace::Shared, MemSpace::Register) => {
+                self.tl_comment(s);
+                self.line(format!(
+                    "# ({}: VMEM tile feeds the MXU directly; register copy is implicit)",
+                    bwd_py(tensor)
+                ));
+                Ok(())
+            }
+            (MemSpace::Register, MemSpace::Global) => {
+                self.tl_comment(s);
+                self.line(format!(
+                    "{r}[0, 0] = {py}.astype({r}.dtype)",
+                    r = bwd_ref(tensor),
+                    py = bwd_py(tensor)
+                ));
+                Ok(())
+            }
+            (a, b) => Err(TranslateError(format!(
+                "unsupported backward copy direction {a} -> {b} for `{tensor}`"
+            ))),
+        }
+    }
+
+    fn emit_loop(
+        &mut self,
+        grad: GradTarget,
+        var: &str,
+        start: &Expr,
+        end: &Expr,
+        body: &[Stmt],
+    ) -> Result<(), TranslateError> {
+        let carry = bwd_py(grad.output_name());
+        self.line(format!("# TL: for {var} = {start}:{end}"));
+        self.line(format!("def _body({var}, {carry}):"));
+        self.indent += 1;
+        self.emit_loop_body(grad, body)?;
+        self.line(format!("return {carry}"));
+        self.indent -= 1;
+        let (mut lo, mut hi) = (bwd_expr_py(start), bwd_expr_py(end));
+        if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+            // The TL tile-skip guard becomes loop-bound clipping here
+            // (same transformation as the forward emitter).
+            match grad {
+                GradTarget::DQ => {
+                    self.line(
+                        "lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)  # window clip",
+                    );
+                    lo = "lo_kv".into();
+                }
+                _ => {
+                    self.line(format!(
+                        "hi_q = jnp.minimum({hi}, ((block_idx + 1) * BM + WINDOW + BN - 1) // BN)"
+                    ));
+                    hi = "hi_q".into();
+                }
+            }
+        }
+        self.line(format!("{carry} = jax.lax.fori_loop({lo}, {hi}, _body, {carry})"));
+        Ok(())
+    }
+
+    fn emit_loop_body(&mut self, grad: GradTarget, body: &[Stmt]) -> Result<(), TranslateError> {
+        for s in body {
+            match s {
+                Stmt::Copy { .. } => self.emit_copy(grad, s)?,
+                Stmt::Compute { .. } => self.emit_compute(grad, s)?,
+                Stmt::Reshape { .. } => {
+                    self.tl_comment(s);
+                    self.line("# (mma_C -> mma_A fragment relayout: in-register on the MXU)");
+                }
+                Stmt::If { body: inner, .. } => {
+                    if inner.iter().any(|b| matches!(b, Stmt::Compute { .. })) {
+                        self.tl_comment(s);
+                        self.line("# (tile-skip guard realized by the loop bounds)");
+                        self.emit_loop_body(grad, inner)?;
+                    } else {
+                        self.tl_comment(s);
+                        self.line("# (double-buffer prefetch: realized by Mosaic software");
+                        self.line("#  pipelining; no explicit code on TPU)");
+                    }
+                }
+                Stmt::Allocate { .. } | Stmt::Param { .. } => {}
+                Stmt::For { .. } => {
+                    return Err(TranslateError("nested backward loops unsupported".into()))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_compute(&mut self, grad: GradTarget, s: &Stmt) -> Result<(), TranslateError> {
+        let Stmt::Compute { op, inputs, coord, output, accumulate, .. } = s else {
+            unreachable!()
+        };
+        let (rdim, cdim) = Self::score_dims(grad);
+        match op {
+            ComputeOp::Gemm => {
+                self.tl_comment(s);
+                let a = bwd_py(&inputs[0].name);
+                let b = bwd_py(&inputs[1].name);
+                let at = if inputs[0].transposed { ".T" } else { "" };
+                let bt = if inputs[1].transposed { ".T" } else { "" };
+                let out = output
+                    .as_ref()
+                    .ok_or_else(|| TranslateError("GEMM without output".into()))?;
+                let out_py = bwd_py(out);
+                if *accumulate {
+                    self.line(format!(
+                        "{out_py} = {out_py} + jnp.dot({a}{at}, {b}{bt}, preferred_element_type=jnp.float32)"
+                    ));
+                } else {
+                    self.line(format!(
+                        "{out_py} = jnp.dot({a}{at}, {b}{bt}, preferred_element_type=jnp.float32)"
+                    ));
+                }
+            }
+            ComputeOp::Multiply => {
+                self.tl_comment(s);
+                let a = bwd_py(&inputs[0].name);
+                let b = if inputs[1].name == "softmax_scale" {
+                    "SOFTMAX_SCALE".to_string()
+                } else {
+                    bwd_py(&inputs[1].name)
+                };
+                let out = output.as_ref().map(|o| bwd_py(o)).unwrap_or_else(|| a.clone());
+                self.line(format!("{out} = {a} * {b}"));
+            }
+            ComputeOp::Subtract => {
+                self.tl_comment(s);
+                let a = bwd_py(&inputs[0].name);
+                let b = bwd_py(&inputs[1].name);
+                let out = output.as_ref().map(|o| bwd_py(o)).unwrap_or_else(|| a.clone());
+                // Row-broadcast (rows, 1) stat operand.
+                self.line(format!("{out} = {a} - {b}"));
+            }
+            ComputeOp::Exp => {
+                self.tl_comment(s);
+                let a = bwd_py(&inputs[0].name);
+                let out = output.as_ref().map(|o| bwd_py(o)).unwrap_or_else(|| a.clone());
+                self.line(format!("{out} = jnp.exp({a})"));
+            }
+            ComputeOp::CausalMask | ComputeOp::WindowMask => {
+                self.tl_comment(s);
+                let sname = bwd_py(&inputs[0].name);
+                let lq = coord
+                    .iter()
+                    .find(|(n, _)| n == "Lq")
+                    .map(|(_, e)| bwd_expr_py(e))
+                    .unwrap_or_else(|| "block_idx".into());
+                let lk = coord
+                    .iter()
+                    .find(|(n, _)| n == "Lk")
+                    .map(|(_, e)| bwd_expr_py(e))
+                    .unwrap_or_else(|| "i".into());
+                self.line(format!(
+                    "q_pos = {lq} * {rdim} + jax.lax.broadcasted_iota(jnp.int32, ({rdim}, {cdim}), 0)"
+                ));
+                self.line(format!(
+                    "k_pos = {lk} * {cdim} + jax.lax.broadcasted_iota(jnp.int32, ({rdim}, {cdim}), 1)"
+                ));
+                if matches!(op, ComputeOp::CausalMask) {
+                    self.line(format!(
+                        "{sname} = jnp.where(k_pos <= q_pos, {sname}, MASK_VALUE)"
+                    ));
+                } else {
+                    self.line(format!(
+                        "{sname} = jnp.where(k_pos + WINDOW > q_pos, {sname}, MASK_VALUE)"
+                    ));
+                }
+            }
+            other => {
+                return Err(TranslateError(format!(
+                    "compute op `{}` not supported by the pallas backward emitter",
+                    other.as_str()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_wrapper(&mut self) -> Result<(), TranslateError> {
+        let paged = self.paged();
+        if paged {
+            self.line(
+                "def attention_backward(q, k, v, do, o=None, lse=None, block_table=None, interpret=True):",
+            );
+        } else {
+            self.line("def attention_backward(q, k, v, do, o=None, lse=None, interpret=True):");
+        }
+        self.indent = 1;
+        self.line("\"\"\"Custom-VJP-shaped backward: returns (dq, dk, dv).");
+        self.line("");
+        self.line("Args:");
+        self.line("    q: (batch, num_q_heads, seq_len, QK_DIM)");
+        self.line("    k: (batch, num_kv_heads, kv_len, QK_DIM)");
+        self.line("    v: (batch, num_kv_heads, kv_len, V_DIM)");
+        self.line("    do: (batch, num_q_heads, seq_len, V_DIM) -- the cotangent of O");
+        self.line("    o, lse: forward outputs; recomputed by a jnp reference pass when");
+        self.line("        the forward kernel did not save them.");
+        if paged {
+            self.line("    block_table: (kv_len // PAGE_SIZE,) int32, logical -> physical page");
+        }
+        self.line("");
+        self.line("Pairs with the forward module as a jax.custom_vjp:");
+        self.line("    f.defvjp(lambda q, k, v: (attention(q, k, v), (q, k, v, o, lse)),");
+        self.line("             lambda res, do: attention_backward(*res[:3], do, *res[3:]))");
+        self.line("\"\"\"");
+        self.line("batch, num_q_heads, seq_len, qk_dim = q.shape");
+        self.line("kv_len = k.shape[2]");
+        self.line("assert qk_dim == QK_DIM, f\"qk_dim {qk_dim} != compiled {QK_DIM}\"");
+        self.line("assert seq_len % BM == 0 and seq_len % BN == 0");
+        self.line("assert kv_len % BM == 0 and kv_len % BN == 0");
+        self.line("assert k.shape[1] * GROUP_SIZE == num_q_heads");
+        if paged {
+            self.line("assert kv_len % PAGE_SIZE == 0");
+            self.line("assert block_table.shape == (kv_len // PAGE_SIZE,)");
+        }
+        self.line("kk = jnp.repeat(k, GROUP_SIZE, axis=1) if GROUP_SIZE > 1 else k");
+        self.line("vv = jnp.repeat(v, GROUP_SIZE, axis=1) if GROUP_SIZE > 1 else v");
+        self.line("if o is None or lse is None:");
+        self.line("    # Reference recompute of the forward stats (the fused forward");
+        self.line("    # kernel can be taught to emit lse; DESIGN.md S10).");
+        self.line("    s = jnp.einsum(\"bhqd,bhkd->bhqk\", q, kk).astype(jnp.float32) * SOFTMAX_SCALE");
+        if self.spec.causal {
+            self.line("    q_pos = jax.lax.broadcasted_iota(jnp.int32, (seq_len, kv_len), 0)");
+            self.line("    k_pos = jax.lax.broadcasted_iota(jnp.int32, (seq_len, kv_len), 1)");
+            self.line("    s = jnp.where(k_pos <= q_pos, s, MASK_VALUE)");
+            if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+                self.line("    s = jnp.where(k_pos + WINDOW > q_pos, s, MASK_VALUE)");
+            }
+        }
+        self.line("    lse = jax.scipy.special.logsumexp(s, axis=-1, keepdims=True)");
+        self.line("    p = jnp.exp(s - lse)");
+        self.line("    o = jnp.einsum(\"bhqk,bhkv->bhqv\", p, vv.astype(jnp.float32))");
+        self.line("delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1, keepdims=True)");
+        self.line("lse = lse.reshape(batch, num_q_heads, seq_len, 1)");
+        self.line("");
+        self.line("# Shared operand specs (the kernels take the same seven refs).");
+        self.line("full_q = pl.BlockSpec((1, 1, seq_len, QK_DIM), lambda b, h, i: (b, h, 0, 0))");
+        self.line("full_do = pl.BlockSpec((1, 1, seq_len, V_DIM), lambda b, h, i: (b, h, 0, 0))");
+        self.line("full_stat = pl.BlockSpec((1, 1, seq_len, 1), lambda b, h, i: (b, h, 0, 0))");
+        self.line(
+            "full_k = pl.BlockSpec((1, 1, kv_len, QK_DIM), lambda b, h, i: (b, h // GROUP_SIZE, 0, 0))",
+        );
+        self.line(
+            "full_v = pl.BlockSpec((1, 1, kv_len, V_DIM), lambda b, h, i: (b, h // GROUP_SIZE, 0, 0))",
+        );
+        self.line("blk_q = pl.BlockSpec((1, 1, BM, QK_DIM), lambda b, h, i: (b, h, i, 0))");
+        self.line("blk_do = pl.BlockSpec((1, 1, BM, V_DIM), lambda b, h, i: (b, h, i, 0))");
+        self.line("blk_stat = pl.BlockSpec((1, 1, BM, 1), lambda b, h, i: (b, h, i, 0))");
+        if !paged {
+            self.line(
+                "blk_k = pl.BlockSpec((1, 1, BM, QK_DIM), lambda b, h, i: (b, h // GROUP_SIZE, i, 0))",
+            );
+            self.line(
+                "blk_v = pl.BlockSpec((1, 1, BM, V_DIM), lambda b, h, i: (b, h // GROUP_SIZE, i, 0))",
+            );
+        }
+        if paged {
+            self.line("bt_spec = pl.BlockSpec((kv_len // PAGE_SIZE,), lambda b, h, i: (0,))");
+        }
+        self.line("");
+        // dQ call: block-side q/do/stats, full K/V.
+        let bt_in = if paged { "bt_spec, " } else { "" };
+        let bt_arg = if paged { "block_table, " } else { "" };
+        self.line("dq = pl.pallas_call(");
+        self.line("    _kernel_dq,");
+        self.line("    grid=(batch, num_q_heads, seq_len // BM),");
+        self.line(format!(
+            "    in_specs=[{bt_in}blk_q, full_k, full_v, blk_do, blk_stat, blk_stat],"
+        ));
+        self.line("    out_specs=pl.BlockSpec((1, 1, BM, QK_DIM), lambda b, h, i: (b, h, i, 0)),");
+        self.line(
+            "    out_shape=jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, QK_DIM), jnp.float32),",
+        );
+        self.line("    interpret=interpret,");
+        self.line(format!(")({bt_arg}q, k, v, do, lse, delta)"));
+        self.line("");
+        // dK / dV calls: block-side K/V (full when paged — the gather
+        // assembles the block), full q-side streams.
+        let kv_blk = if paged { ("full_k", "full_v") } else { ("blk_k", "blk_v") };
+        for (gname, out_dim) in [("dk", "QK_DIM"), ("dv", "V_DIM")] {
+            self.line(format!("{gname} = pl.pallas_call("));
+            self.line(format!("    _kernel_{gname},"));
+            self.line("    grid=(batch, num_q_heads, kv_len // BM),");
+            self.line(format!(
+                "    in_specs=[{bt_in}full_q, {}, {}, full_do, full_stat, full_stat],",
+                kv_blk.0, kv_blk.1
+            ));
+            self.line(format!(
+                "    out_specs=pl.BlockSpec((1, 1, BM, {out_dim}), lambda b, h, i: (b, h, i, 0)),"
+            ));
+            self.line(format!(
+                "    out_shape=jax.ShapeDtypeStruct((batch, num_q_heads, kv_len, {out_dim}), jnp.float32),"
+            ));
+            self.line("    interpret=interpret,");
+            self.line(format!(")({bt_arg}q, k, v, do, lse, delta)"));
+        }
+        self.line("");
+        self.line("if GROUP_SIZE > 1:");
+        self.line("    # GQA/MQA: per-q-head KV gradients reduce over the group.");
+        self.line("    dk = dk.reshape(batch, k.shape[1], GROUP_SIZE, kv_len, QK_DIM).sum(axis=2)");
+        self.line("    dv = dv.reshape(batch, v.shape[1], GROUP_SIZE, kv_len, V_DIM).sum(axis=2)");
+        self.line("return dq, dk, dv");
+        self.indent = 0;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -745,6 +1362,102 @@ mod tests {
         assert!(src.contains("lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)"));
         // The contiguous K load survives (sliding keeps a dense cache).
         assert!(src.contains("k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], i * BN, BN, axis=0)"));
+    }
+
+    fn emit_backward_src(spec: &OpSpec) -> String {
+        let parts: Vec<(GradTarget, crate::reasoner::Reasoned)> =
+            crate::sketch::backward_sketches(spec)
+                .into_iter()
+                .map(|(g, sk)| {
+                    (
+                        g,
+                        crate::reasoner::reason(
+                            &sk,
+                            spec,
+                            &GpuArch::a100(),
+                            &LlmProfile::deepseek_v3(),
+                        ),
+                    )
+                })
+                .collect();
+        PallasBackend.emit_backward(&parts, spec, &GpuArch::a100()).expect("backward emit")
+    }
+
+    fn bwd_spec() -> OpSpec {
+        OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_direction(crate::sketch::spec::Direction::Backward)
+    }
+
+    #[test]
+    fn backward_emits_three_kernels_and_vjp_wrapper() {
+        let src = emit_backward_src(&bwd_spec());
+        for needle in [
+            "def _kernel_dq(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref):",
+            "def _kernel_dk(",
+            "def _kernel_dv(",
+            "def attention_backward(q, k, v, do, o=None, lse=None, interpret=True):",
+            "delta = jnp.sum(do.astype(jnp.float32)",
+            "jax.scipy.special.logsumexp",
+            "return dq, dk, dv",
+            "custom_vjp",
+            "\"direction\": \"backward\",",
+        ] {
+            assert!(src.contains(needle), "missing `{needle}`:\n{src}");
+        }
+        assert!(!src.contains('\t'));
+    }
+
+    #[test]
+    fn backward_recompute_chain_is_rendered() {
+        let src = emit_backward_src(&bwd_spec());
+        // S recompute minus lse, exponentiation, Jacobian fold, dQ GEMM.
+        for needle in [
+            "s = s - lse",
+            "p = jnp.exp(s)",
+            "dp = dp - delta",
+            "ds = p * dp",
+            "dq = dq + jnp.dot(ds, k",
+            "dk = dk + jnp.dot(ds.T, q",
+            "dv = dv + jnp.dot(p.T, do",
+        ] {
+            assert!(src.contains(needle), "missing `{needle}`:\n{src}");
+        }
+    }
+
+    #[test]
+    fn backward_dk_dv_masks_use_transposed_orientation() {
+        let src = emit_backward_src(&bwd_spec());
+        // dK/dV kernels mask a (BN, BM) tile: q rows at BN granularity.
+        assert!(src.contains("q_pos = i * BN + jax.lax.broadcasted_iota(jnp.int32, (BN, BM), 0)"),
+            "{src}");
+        assert!(src.contains("k_pos = block_idx * BM + jax.lax.broadcasted_iota(jnp.int32, (BN, BM), 1)"),
+            "{src}");
+    }
+
+    #[test]
+    fn backward_gqa_group_sums_kv_grads() {
+        let spec = OpSpec::benchmark(AttnVariant::Gqa, 1024, 128, true)
+            .with_direction(crate::sketch::spec::Direction::Backward);
+        let src = emit_backward_src(&spec);
+        assert!(src.contains("GROUP_SIZE, kv_len, QK_DIM).sum(axis=2)"), "{src}");
+    }
+
+    #[test]
+    fn backward_paged_gathers_both_tile_heights() {
+        let spec = bwd_spec().with_layout(KvLayout::Paged { page_size: 16 });
+        let src = emit_backward_src(&spec);
+        assert!(src.contains("PAGES_PER_TILE"), "{src}");
+        assert!(src.contains("PAGES_PER_BLOCK"), "{src}");
+        assert!(src.contains("def attention_backward(q, k, v, do, o=None, lse=None, block_table=None, interpret=True):"));
+    }
+
+    #[test]
+    fn backward_sliding_clips_both_sweeps() {
+        let spec = bwd_spec().with_layout(KvLayout::Sliding { window: 256 });
+        let src = emit_backward_src(&spec);
+        assert!(src.contains("lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)"), "{src}");
+        assert!(src.contains("hi_q = jnp.minimum("), "{src}");
+        assert!(src.contains("jnp.where(k_pos + WINDOW > q_pos"), "{src}");
     }
 
     #[test]

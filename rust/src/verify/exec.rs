@@ -96,6 +96,32 @@ pub fn run_attention_tables(
     if seq % bm != 0 || kv % bn != 0 {
         return Err(format!("BM={bm}/BN={bn} must divide seq={seq}/kv={kv}"));
     }
+    let mut named = std::collections::BTreeMap::new();
+    named.insert("Q", q);
+    named.insert("K", k);
+    named.insert("V", v);
+    run_program_tables(program, &named, scale, tables, threads)
+}
+
+/// Fully generic compiled driver: run a reasoned TL program whose global
+/// inputs are supplied **by name** — the entry point the backward block
+/// programs use (`Q, K, V, dO, Lse, Delta → dQ/dK/dV`) and the engine
+/// behind [`run_attention_tables`]. The single stored global is the
+/// return value; the sweep length is `output rows / store-tile rows`
+/// (q-blocks for the forward and dQ programs, KV-blocks for dK/dV), and
+/// it parallelizes whenever every store is block-local.
+pub fn run_program_tables(
+    program: &TlProgram,
+    named: &std::collections::BTreeMap<&str, &Tensor2>,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+) -> Result<Tensor2, String> {
+    let params = program.params();
+    let need = |n: &str| -> Result<i64, String> {
+        params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
+    };
+    let bm = need("BM")? as usize;
 
     let compiled = compiled::compile(program)?;
     let out_meta = compiled
@@ -104,12 +130,9 @@ pub fn run_attention_tables(
         .clone();
     let mut ins: Vec<&[f32]> = Vec::with_capacity(compiled.inputs().len());
     for g in compiled.inputs() {
-        let t = match g.name.as_str() {
-            "Q" => q,
-            "K" => k,
-            "V" => v,
-            other => return Err(format!("global tensor `{other}` missing")),
-        };
+        let t = named
+            .get(g.name.as_str())
+            .ok_or_else(|| format!("global tensor `{}` missing", g.name))?;
         if (t.rows, t.cols) != (g.rows, g.cols) {
             return Err(format!(
                 "input `{}` is {}x{} but the program declares {}x{}",
@@ -126,14 +149,21 @@ pub fn run_attention_tables(
         tbls.push(t.as_slice());
     }
 
+    let rows_per_block = compiled.store_rows().unwrap_or(bm).max(1);
+    if out_meta.rows % rows_per_block != 0 {
+        return Err(format!(
+            "store tile of {rows_per_block} rows does not tile the {}-row output `{}`",
+            out_meta.rows, out_meta.name
+        ));
+    }
     let mut o = Tensor2::zeros(out_meta.rows, out_meta.cols);
-    let nblocks = seq / bm;
+    let nblocks = out_meta.rows / rows_per_block;
     let parallel = threads > 1
         && nblocks > 1
         && out_meta.cols > 0
         && compiled.block_local_store()
-        && compiled.store_rows() == Some(bm)
-        && out_meta.rows == nblocks * bm;
+        && compiled.store_rows() == Some(rows_per_block);
+    let bm = rows_per_block;
 
     if !parallel {
         let mut arena = compiled.new_arena();

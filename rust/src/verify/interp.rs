@@ -588,7 +588,7 @@ pub fn run_attention_tables(
     let bn = need("BN")? as usize;
     let seq = need("seq_len")? as usize;
     let kv = need("kv_len")? as usize;
-    let vdim = need("VDim")? as usize;
+    need("VDim")?;
     if q.rows != seq || k.rows != kv || v.rows != kv {
         return Err(format!(
             "input shapes ({}, {}, {}) disagree with params (seq {seq}, kv {kv})",
@@ -598,14 +598,90 @@ pub fn run_attention_tables(
     if seq % bm != 0 || kv % bn != 0 {
         return Err(format!("BM={bm}/BN={bn} must divide seq={seq}/kv={kv}"));
     }
+    let mut named = BTreeMap::new();
+    named.insert("Q", q);
+    named.insert("K", k);
+    named.insert("V", v);
+    run_program_tables(program, &named, scale, tables)
+}
+
+/// Fully generic walker driver: global inputs supplied **by name** (the
+/// backward programs read `Q, K, V, dO, Lse, Delta`), the single stored
+/// global returned. The serial `block_idx` sweep covers `output rows /
+/// store-tile rows` blocks — q-blocks for forward/dQ programs, KV-blocks
+/// for dK/dV — mirroring [`super::exec::run_program_tables`] exactly.
+pub fn run_program_tables(
+    program: &TlProgram,
+    named: &BTreeMap<&str, &Tensor2>,
+    scale: f32,
+    tables: &BTreeMap<String, Vec<i64>>,
+) -> Result<Tensor2, String> {
+    let params = program.params();
+    let need = |n: &str| -> Result<i64, String> {
+        params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
+    };
+    let bm = need("BM")? as usize;
+
+    // The stored global is the program's output; its declared shape
+    // (symbolic over the params) sizes the zero-initialized buffer and
+    // the block sweep. The sweep tile is the store's own row count
+    // (mirroring the compiled driver's `store_rows`), falling back to BM
+    // for shape-less stores.
+    let mut out_name: Option<String> = None;
+    let mut store_rows: Option<usize> = None;
+    program.walk(|s| {
+        if let Stmt::Copy { tensor, shape, dst: MemSpace::Global, .. } = s {
+            out_name = Some(tensor.clone());
+            store_rows = shape
+                .as_ref()
+                .and_then(|sh| sh.first())
+                .and_then(|e| e.eval(&params).ok())
+                .map(|r| r as usize);
+        }
+    });
+    let out_name = out_name
+        .ok_or_else(|| format!("program `{}` never stores a global output", program.name))?;
+    let bm = store_rows.unwrap_or(bm).max(1);
+    let mut out_shape: Option<(usize, usize)> = None;
+    let mut shape_err: Option<String> = None;
+    program.walk(|s| {
+        if let Stmt::Allocate { name, space: MemSpace::Global, shape, .. } = s {
+            if *name == out_name && out_shape.is_none() {
+                match shape.as_slice() {
+                    [r] => match r.eval(&params) {
+                        Ok(rv) => out_shape = Some((rv as usize, 1)),
+                        Err(e) => shape_err = Some(e),
+                    },
+                    [r, c] => match (r.eval(&params), c.eval(&params)) {
+                        (Ok(rv), Ok(cv)) => out_shape = Some((rv as usize, cv as usize)),
+                        (Err(e), _) | (_, Err(e)) => shape_err = Some(e),
+                    },
+                    other => {
+                        shape_err =
+                            Some(format!("unsupported rank-{} output shape", other.len()))
+                    }
+                }
+            }
+        }
+    });
+    if let Some(e) = shape_err {
+        return Err(e);
+    }
+    let (out_rows, out_cols) = out_shape
+        .ok_or_else(|| format!("output global `{out_name}` has no Allocate declaration"))?;
+    if out_rows % bm != 0 {
+        return Err(format!(
+            "store tile of {bm} rows does not tile the {out_rows}-row output `{out_name}`"
+        ));
+    }
 
     let mut globals: BTreeMap<String, Tensor2> = BTreeMap::new();
-    globals.insert("Q".into(), q.clone());
-    globals.insert("K".into(), k.clone());
-    globals.insert("V".into(), v.clone());
-    globals.insert("O".into(), Tensor2::zeros(seq, vdim));
+    for (name, t) in named {
+        globals.insert(name.to_string(), (*t).clone());
+    }
+    globals.insert(out_name.clone(), Tensor2::zeros(out_rows, out_cols));
 
-    for block_idx in 0..seq / bm {
+    for block_idx in 0..out_rows / bm {
         let mut bindings = params.clone();
         bindings.insert("block_idx".into(), block_idx as i64);
         bindings.insert("head_idx".into(), 0);
@@ -617,7 +693,7 @@ pub fn run_attention_tables(
         interp.tables = tables.clone();
         interp.run(&program.stmts)?;
     }
-    Ok(globals.remove("O").unwrap())
+    Ok(globals.remove(&out_name).unwrap())
 }
 
 #[cfg(test)]

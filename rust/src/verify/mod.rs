@@ -10,6 +10,14 @@
 //! direct softmax(QKᵀ)V reference on a reduced shape. The numeric probe
 //! executes through the compiled engine; `tests/compiled_interp.rs`
 //! holds it bit-identical to the walker across the profile grid.
+//!
+//! Backward block programs (detected by their stored gradient — see
+//! [`backward_target`]) get a gradient probe instead: the engine output
+//! is checked against the analytic oracle
+//! ([`tensor::reference_attention_grads`]) *and* spot-checked against
+//! central finite differences of the f64 loss `Σ (O ∘ dO)`
+//! ([`tensor::attention_loss_f64`]); `tests/backward.rs` extends both
+//! checks across profiles × tilings × thread counts × layouts.
 
 pub mod checker;
 pub mod compiled;
@@ -17,9 +25,14 @@ pub mod exec;
 pub mod interp;
 pub mod tensor;
 
+use crate::sketch::GradTarget;
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
+use crate::tl::types::MemSpace;
 use checker::Diagnostic;
-use tensor::{reference_attention, reference_attention_sliding, Tensor2};
+use tensor::{
+    attention_loss_f64, reference_attention, reference_attention_grads,
+    reference_attention_sliding, Tensor2,
+};
 
 /// Outcome of the verification gate.
 #[derive(Debug)]
@@ -32,6 +45,16 @@ pub struct VerifyReport {
 
 /// Numeric probe tolerance (f32 accumulation over ≤ a few hundred terms).
 pub const NUMERIC_TOL: f32 = 2e-4;
+
+/// Backward-probe tolerance: the gradients chain two more GEMMs and the
+/// softmax-Jacobian pointwise ops, so accumulated f32 error is a few
+/// times the forward's (still two orders below any real defect — a
+/// shifted mask or dropped transpose moves values by O(1)).
+pub const BACKWARD_NUMERIC_TOL: f32 = 2e-3;
+
+/// Relative tolerance of the central-finite-difference spot probe
+/// (f64 differences vs the engine's f32 gradients).
+pub const FD_REL_TOL: f64 = 1e-3;
 
 /// Identity block table over `n` pages (paged layout ≡ contiguous).
 pub fn identity_table(n: usize) -> Vec<i64> {
@@ -91,6 +114,37 @@ pub fn uses_window(program: &TlProgram) -> bool {
         }
     });
     found
+}
+
+/// Does this program apply a causal mask? (The backward probe keys its
+/// reference off the program's own masking rather than a caller flag —
+/// a reasoned backward program carries the mask it was generated with.)
+pub fn uses_causal(program: &TlProgram) -> bool {
+    let mut found = false;
+    program.walk(|s| {
+        if matches!(s, Stmt::Compute { op: ComputeOp::CausalMask, .. }) {
+            found = true;
+        }
+    });
+    found
+}
+
+/// The gradient a backward block program stores, if it is one (detected
+/// from the stored-global name `dQ`/`dK`/`dV` — robust to programs that
+/// round-tripped through text and lost their name).
+pub fn backward_target(program: &TlProgram) -> Option<GradTarget> {
+    let mut out = None;
+    program.walk(|s| {
+        if let Stmt::Copy { tensor, dst: MemSpace::Global, .. } = s {
+            out = match tensor.as_str() {
+                "dQ" => Some(GradTarget::DQ),
+                "dK" => Some(GradTarget::DK),
+                "dV" => Some(GradTarget::DV),
+                _ => out,
+            };
+        }
+    });
+    out
 }
 
 /// Full verification: static checks, then (if clean and the program binds
@@ -157,6 +211,22 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
             }
         }
     }
+    // Backward programs get their own probe: the compiled run is checked
+    // against the analytic gradient oracle *and* a central-finite-
+    // difference spot probe of the f64 loss Σ (O ∘ dO).
+    if let Some(grad) = backward_target(&probe) {
+        return verify_backward(
+            &probe,
+            grad,
+            diagnostics,
+            probe_seq,
+            hd as usize,
+            vd as usize,
+            probe_window,
+            seed,
+        );
+    }
+
     let q = Tensor2::randn(probe_seq, hd as usize, seed);
     let k = Tensor2::randn(probe_seq, hd as usize, seed + 1);
     let v = Tensor2::randn(probe_seq, vd as usize, seed + 2);
@@ -206,6 +276,140 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
     };
     let diff = got.max_abs_diff(&want);
     VerifyReport { diagnostics, max_abs_diff: Some(diff), passed: diff < NUMERIC_TOL }
+}
+
+/// Backward numeric probe (see [`verify_program`]): run the gradient
+/// program through the compiled engine on a reduced shape, compare
+/// against [`reference_attention_grads`], and spot-check two entries of
+/// the produced gradient against central finite differences of the f64
+/// loss. Gathering (paged) programs additionally run twice — identity
+/// table vs a seeded physical page shuffle — and must agree bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn verify_backward(
+    probe: &TlProgram,
+    grad: GradTarget,
+    diagnostics: Vec<Diagnostic>,
+    probe_seq: usize,
+    hd: usize,
+    vd: usize,
+    probe_window: Option<usize>,
+    seed: u64,
+) -> VerifyReport {
+    let causal = uses_causal(probe);
+    let q = Tensor2::randn(probe_seq, hd, seed);
+    let k = Tensor2::randn(probe_seq, hd, seed + 1);
+    let v = Tensor2::randn(probe_seq, vd, seed + 2);
+    let dout = Tensor2::randn(probe_seq, vd, seed + 3);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let grads = reference_attention_grads(&q, &k, &v, &dout, scale, causal, probe_window);
+
+    let fail = |msg: String| VerifyReport {
+        diagnostics: vec![Diagnostic {
+            code: checker::Code::GemmLayoutError,
+            message: format!("backward numeric probe failed: {msg}"),
+        }],
+        max_abs_diff: None,
+        passed: false,
+    };
+
+    let mut named: std::collections::BTreeMap<&str, &Tensor2> = std::collections::BTreeMap::new();
+    named.insert("Q", &q);
+    named.insert("K", &k);
+    named.insert("V", &v);
+    named.insert("dO", &dout);
+    named.insert("Lse", &grads.lse);
+    named.insert("Delta", &grads.delta);
+
+    let threads = exec::default_threads();
+    let empty = std::collections::BTreeMap::new();
+    let got = if uses_gather(probe) {
+        let page = probe.params().get("page_size").copied().unwrap_or(0) as usize;
+        if page == 0 || probe_seq % page != 0 {
+            return fail(format!("page_size {page} does not tile the {probe_seq}-row probe"));
+        }
+        let mut tables = std::collections::BTreeMap::new();
+        tables.insert("block_table".to_string(), identity_table(probe_seq / page));
+        let ident = match exec::run_program_tables(probe, &named, scale, &tables, threads) {
+            Ok(t) => t,
+            Err(e) => return fail(e),
+        };
+        let (kp, vp, table) = paged_shuffle(&k, &v, page, seed ^ 0x9A6ED);
+        let mut shuffled_named = named.clone();
+        shuffled_named.insert("K", &kp);
+        shuffled_named.insert("V", &vp);
+        tables.insert("block_table".to_string(), table);
+        match exec::run_program_tables(probe, &shuffled_named, scale, &tables, threads) {
+            Ok(shuffled) if shuffled.data == ident.data => ident,
+            Ok(_) => return fail("paged gather diverged from the identity layout".to_string()),
+            Err(e) => return fail(e),
+        }
+    } else {
+        match exec::run_program_tables(probe, &named, scale, &empty, threads) {
+            Ok(t) => t,
+            Err(e) => return fail(e),
+        }
+    };
+
+    let want = match grad {
+        GradTarget::DQ => &grads.dq,
+        GradTarget::DK => &grads.dk,
+        GradTarget::DV => &grads.dv,
+    };
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return fail(format!(
+            "gradient shape {}x{} != expected {}x{}",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    let diff = got.max_abs_diff(want);
+
+    // Central-finite-difference spot probe: the largest-magnitude entry
+    // of the reference gradient plus one mid-buffer entry.
+    let to64 = |t: &Tensor2| -> Vec<f64> { t.data.iter().map(|&x| x as f64).collect() };
+    let (q64, k64, v64, d64) = (to64(&q), to64(&k), to64(&v), to64(&dout));
+    let mut argmax = 0usize;
+    for (i, x) in want.data.iter().enumerate() {
+        if x.abs() > want.data[argmax].abs() {
+            argmax = i;
+        }
+    }
+    for idx in [argmax, want.data.len() / 2] {
+        let h = 1e-3f64;
+        let eval = |delta: f64| -> f64 {
+            let mut qa = q64.clone();
+            let mut ka = k64.clone();
+            let mut va = v64.clone();
+            match grad {
+                GradTarget::DQ => qa[idx] += delta,
+                GradTarget::DK => ka[idx] += delta,
+                GradTarget::DV => va[idx] += delta,
+            }
+            attention_loss_f64(
+                &qa,
+                &ka,
+                &va,
+                &d64,
+                probe_seq,
+                probe_seq,
+                hd,
+                vd,
+                scale as f64,
+                causal,
+                probe_window,
+            )
+        };
+        let fd = (eval(h) - eval(-h)) / (2.0 * h);
+        let engine = got.data[idx] as f64;
+        let denom = fd.abs().max(engine.abs()).max(1.0);
+        if (fd - engine).abs() / denom >= FD_REL_TOL {
+            return fail(format!(
+                "central finite difference at flat index {idx}: fd {fd:.6e} vs \
+                 engine {engine:.6e} (rel tol {FD_REL_TOL:.0e})"
+            ));
+        }
+    }
+
+    VerifyReport { diagnostics, max_abs_diff: Some(diff), passed: diff < BACKWARD_NUMERIC_TOL }
 }
 
 #[cfg(test)]
@@ -258,6 +462,57 @@ mod tests {
         let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_r1());
         let report = verify_program(&r.program, true, 9);
         assert!(report.passed, "{report:?}");
+    }
+
+    #[test]
+    fn verify_gate_passes_backward_generation() {
+        use crate::sketch::backward_sketches;
+        use crate::sketch::spec::Direction;
+        for causal in [false, true] {
+            let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, causal)
+                .with_direction(Direction::Backward);
+            for (grad, sk) in backward_sketches(&spec) {
+                let r = crate::reasoner::reason(
+                    &sk,
+                    &spec,
+                    &GpuArch::a100(),
+                    &LlmProfile::deepseek_v3(),
+                );
+                let report = verify_program(&r.program, causal, 7);
+                assert!(report.passed, "{grad} causal={causal}: {report:?}");
+                assert!(report.max_abs_diff.unwrap() < BACKWARD_NUMERIC_TOL);
+            }
+        }
+    }
+
+    #[test]
+    fn verify_gate_rejects_backward_gemm_layout_error() {
+        use crate::sketch::backward_sketches;
+        use crate::sketch::spec::Direction;
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_direction(Direction::Backward);
+        let p = LlmProfile::single_stage(
+            LlmProfile::deepseek_v3(),
+            FailureMode::GemmLayoutError,
+        );
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = crate::reasoner::reason(&sk, &spec, &GpuArch::a100(), &p);
+            let report = verify_program(&r.program, true, 7);
+            assert!(!report.passed, "{grad}: layout defect must be rejected");
+        }
+    }
+
+    #[test]
+    fn backward_target_detected_from_store() {
+        use crate::sketch::backward_sketches;
+        use crate::sketch::spec::Direction;
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 256, 64, true)
+            .with_direction(Direction::Backward);
+        for (grad, sk) in backward_sketches(&spec) {
+            assert_eq!(backward_target(&sk), Some(grad));
+        }
+        let fwd = OpSpec::benchmark(AttnVariant::Mha, 256, 64, true);
+        assert_eq!(backward_target(&crate::sketch::generate_sketch(&fwd)), None);
     }
 
     #[test]

@@ -347,6 +347,166 @@ pub fn reference_attention_sliding(
     s.matmul(v, false, false).expect("ref pv")
 }
 
+/// Everything the backward pass needs from one forward evaluation, plus
+/// the three analytic input gradients — the oracle the backward TL
+/// programs are verified against.
+///
+/// With `P = softmax(scale * QKᵀ + mask)` and the training loss probed as
+/// `L = Σ (O ∘ dO)` (the standard VJP pairing):
+///
+/// ```text
+/// lse   = rowmax(S) + ln Σ exp(S - rowmax(S))     (so P = exp(S - lse))
+/// delta = rowsum(dO ∘ O) = rowsum(P ∘ dP)
+/// dP    = dO Vᵀ
+/// dS    = P ∘ (dP - delta) * scale
+/// dQ    = dS K;   dK = dSᵀ Q;   dV = Pᵀ dO
+/// ```
+#[derive(Debug, Clone)]
+pub struct AttnGrads {
+    pub o: Tensor2,
+    /// Per-row logsumexp of the scaled masked scores, `(seq, 1)`.
+    pub lse: Tensor2,
+    /// Per-row `rowsum(dO ∘ O)`, `(seq, 1)`.
+    pub delta: Tensor2,
+    pub dq: Tensor2,
+    pub dk: Tensor2,
+    pub dv: Tensor2,
+}
+
+/// Apply the causal / sliding-window mask to a score matrix in place
+/// (row `r` attends keys `(r - window, r]`; `window = None` disables the
+/// lower bound, `causal = false` disables the upper one).
+fn mask_scores(s: &mut Tensor2, causal: bool, window: Option<usize>) {
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        if causal && r + 1 < cols {
+            for x in &mut row[r + 1..] {
+                *x = MASK_VALUE;
+            }
+        }
+        if let Some(w) = window {
+            let lo = (r as i64 - w as i64 + 1).max(0) as usize;
+            for x in &mut row[..lo.min(cols)] {
+                *x = MASK_VALUE;
+            }
+        }
+    }
+}
+
+/// Analytic attention gradients (see [`AttnGrads`]), computed with the
+/// full materialized S/P matrices in f32 — the direct (non-flash)
+/// counterpart of the backward TL programs.
+pub fn reference_attention_grads(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    dout: &Tensor2,
+    scale: f32,
+    causal: bool,
+    window: Option<usize>,
+) -> AttnGrads {
+    let mut s = q.matmul(k, false, true).expect("grads qk");
+    s.scale(scale);
+    mask_scores(&mut s, causal, window);
+
+    // lse and P = exp(S - lse): masked entries land at exp(-huge) = 0.
+    let mut lse = Tensor2::zeros(s.rows, 1);
+    let mut p = s;
+    let cols = p.cols;
+    for r in 0..p.rows {
+        let row = &mut p.data[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|x| (x - max).exp()).sum();
+        let l = max + sum.ln();
+        *lse.at_mut(r, 0) = l;
+        for x in row.iter_mut() {
+            *x = (*x - l).exp();
+        }
+    }
+
+    let o = p.matmul(v, false, false).expect("grads pv");
+    let mut delta = Tensor2::zeros(o.rows, 1);
+    for r in 0..o.rows {
+        let mut acc = 0.0f32;
+        for c in 0..o.cols {
+            acc += dout.at(r, c) * o.at(r, c);
+        }
+        *delta.at_mut(r, 0) = acc;
+    }
+
+    let dp = dout.matmul(v, false, true).expect("grads dp");
+    let mut ds = p.clone();
+    for r in 0..ds.rows {
+        let d = delta.at(r, 0);
+        for c in 0..ds.cols {
+            let val = ds.at(r, c) * (dp.at(r, c) - d) * scale;
+            *ds.at_mut(r, c) = val;
+        }
+    }
+
+    let dq = ds.matmul(k, false, false).expect("grads dq");
+    let dk = ds.matmul(q, true, false).expect("grads dk");
+    let dv = p.matmul(dout, true, false).expect("grads dv");
+    AttnGrads { o, lse, delta, dq, dk, dv }
+}
+
+/// The VJP probe loss `Σ (O ∘ dO)` evaluated in **f64** end to end —
+/// the oracle the central-finite-difference gradient checks differentiate
+/// (f32 rounding noise would swamp an `h = 1e-3` central difference).
+/// Shapes mirror [`reference_attention`]: `q (n, d)`, `k/v (m, d/dv)`,
+/// `dout (n, dv)`, all row-major slices.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    dout: &[f64],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    scale: f64,
+    causal: bool,
+    window: Option<usize>,
+) -> f64 {
+    debug_assert_eq!(q.len(), n * d);
+    debug_assert_eq!(k.len(), m * d);
+    debug_assert_eq!(v.len(), m * dv);
+    debug_assert_eq!(dout.len(), n * dv);
+    let mut loss = 0.0f64;
+    let mut row = vec![0.0f64; m];
+    for i in 0..n {
+        for (j, rj) in row.iter_mut().enumerate() {
+            let mut dot = 0.0f64;
+            for t in 0..d {
+                dot += q[i * d + t] * k[j * d + t];
+            }
+            let mut s = dot * scale;
+            let masked = (causal && j > i)
+                || window.map(|w| j as i64 <= i as i64 - w as i64).unwrap_or(false);
+            if masked {
+                s = f64::NEG_INFINITY;
+            }
+            *rj = s;
+        }
+        let max = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0f64;
+        for rj in row.iter_mut() {
+            *rj = (*rj - max).exp();
+            sum += *rj;
+        }
+        for c in 0..dv {
+            let mut o = 0.0f64;
+            for (j, rj) in row.iter().enumerate() {
+                o += rj * v[j * dv + c];
+            }
+            loss += o / sum * dout[i * dv + c];
+        }
+    }
+    loss
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +641,118 @@ mod tests {
         // window = 1: each row attends only itself -> output == V.
         let w1 = reference_attention_sliding(&q, &k, &v, 0.35, 1);
         assert!(w1.max_abs_diff(&v) < 1e-5);
+    }
+
+    /// Central-difference check of one input entry against the f64 loss.
+    #[allow(clippy::too_many_arguments)]
+    fn fd_entry(
+        q: &Tensor2,
+        k: &Tensor2,
+        v: &Tensor2,
+        dout: &Tensor2,
+        scale: f32,
+        causal: bool,
+        which: usize, // 0 = q, 1 = k, 2 = v
+        idx: usize,
+    ) -> f64 {
+        let to64 = |t: &Tensor2| -> Vec<f64> { t.data.iter().map(|&x| x as f64).collect() };
+        let (mut qa, ka, va, da) = (to64(q), to64(k), to64(v), to64(dout));
+        let mut kb = ka.clone();
+        let mut vb = va.clone();
+        let h = 1e-3f64;
+        let target = match which {
+            0 => &mut qa,
+            1 => &mut kb,
+            _ => &mut vb,
+        };
+        let orig = target[idx];
+        target[idx] = orig + h;
+        let (n, m, d, dv) = (q.rows, k.rows, q.cols, v.cols);
+        let up = attention_loss_f64(
+            if which == 0 { &qa } else { &to64(q) },
+            &kb,
+            &vb,
+            &da,
+            n,
+            m,
+            d,
+            dv,
+            scale as f64,
+            causal,
+            None,
+        );
+        let target = match which {
+            0 => &mut qa,
+            1 => &mut kb,
+            _ => &mut vb,
+        };
+        target[idx] = orig - h;
+        let down = attention_loss_f64(
+            if which == 0 { &qa } else { &to64(q) },
+            &kb,
+            &vb,
+            &da,
+            n,
+            m,
+            d,
+            dv,
+            scale as f64,
+            causal,
+            None,
+        );
+        (up - down) / (2.0 * h)
+    }
+
+    #[test]
+    fn analytic_grads_match_finite_differences() {
+        let q = Tensor2::randn(8, 4, 100);
+        let k = Tensor2::randn(8, 4, 101);
+        let v = Tensor2::randn(8, 4, 102);
+        let dout = Tensor2::randn(8, 4, 103);
+        for causal in [false, true] {
+            let g = reference_attention_grads(&q, &k, &v, &dout, 0.5, causal, None);
+            for (which, grad) in [(0usize, &g.dq), (1, &g.dk), (2, &g.dv)] {
+                for idx in [0usize, 5, 17, 31] {
+                    let fd = fd_entry(&q, &k, &v, &dout, 0.5, causal, which, idx);
+                    let got = grad.data[idx] as f64;
+                    let denom = fd.abs().max(got.abs()).max(1e-2);
+                    assert!(
+                        (fd - got).abs() / denom < 1e-3,
+                        "causal={causal} which={which} idx={idx}: fd {fd} vs analytic {got}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grads_forward_stats_match_reference_attention() {
+        let q = Tensor2::randn(16, 8, 1);
+        let k = Tensor2::randn(16, 8, 2);
+        let v = Tensor2::randn(16, 8, 3);
+        let dout = Tensor2::randn(16, 8, 4);
+        for causal in [false, true] {
+            let g = reference_attention_grads(&q, &k, &v, &dout, 0.35, causal, None);
+            let o = reference_attention(&q, &k, &v, 0.35, causal);
+            assert!(g.o.max_abs_diff(&o) < 1e-5, "O from the grads path must agree");
+            // P rows sum to 1 -> exp(S - lse) row sums are 1, so feeding
+            // dO = O recovers delta = rowsum(O∘O).
+            for r in 0..16 {
+                let manual: f32 = (0..8).map(|c| dout.at(r, c) * g.o.at(r, c)).sum();
+                assert!((g.delta.at(r, 0) - manual).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_grads_match_sliding_reference_forward() {
+        let q = Tensor2::randn(16, 8, 11);
+        let k = Tensor2::randn(16, 8, 12);
+        let v = Tensor2::randn(16, 8, 13);
+        let dout = Tensor2::randn(16, 8, 14);
+        let g = reference_attention_grads(&q, &k, &v, &dout, 0.35, true, Some(4));
+        let o = reference_attention_sliding(&q, &k, &v, 0.35, 4);
+        assert!(g.o.max_abs_diff(&o) < 1e-5);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! serving coordinator.
 
 use crate::coordinator::request::{FamilyKey, LaneKey};
-use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout, OpSpec};
 use crate::util::prng::Rng;
 
 /// The paper's sequence-length sweep: 512, 1k, ..., 16k.
@@ -26,6 +26,13 @@ pub fn table1_grid(causal: bool) -> Vec<OpSpec> {
 /// Table-2 grid: MLA with causal mask across the sweep.
 pub fn table2_grid() -> Vec<OpSpec> {
     SEQ_SWEEP.iter().map(|&s| OpSpec::mla(s, true)).collect()
+}
+
+/// Backward-pass (training) grid: the causal Table-1 sweep with
+/// `direction = Backward` — the specs `tlc tune` and `benches/backward`
+/// search/time for gradient kernels.
+pub fn backward_grid() -> Vec<OpSpec> {
+    table1_grid(true).into_iter().map(|s| s.with_direction(Direction::Backward)).collect()
 }
 
 /// Appendix C / Table 8: production model configurations (all head-dim
@@ -149,6 +156,7 @@ pub fn reference_serving_families_layout(decode_layout: KvLayout) -> Vec<FamilyK
             seq: 64,
             kv: 64,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         let mut d = decode_twin(&f);
         d.kv_layout = decode_layout;
@@ -187,6 +195,7 @@ pub fn paged_decode_stream(
                 seq: 1,
                 kv,
                 kv_layout: KvLayout::Paged { page_size },
+                direction: Direction::Forward,
             });
         }
     }
@@ -262,6 +271,7 @@ pub fn real_model_decode_stream(
                 seq: 1,
                 kv: spec.kv_len,
                 kv_layout: spec.kv_layout,
+                direction: spec.direction,
             });
         }
     }
@@ -310,6 +320,7 @@ mod tests {
             seq: 256,
             kv: 256,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         let a = request_stream(&[fam.clone()], 50, 100.0, 7);
         let b = request_stream(&[fam], 50, 100.0, 7);
@@ -409,6 +420,7 @@ mod tests {
             seq: 128,
             kv: 128,
             kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
         };
         let r = SyntheticRequest {
             family: fam.clone(),

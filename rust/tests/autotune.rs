@@ -213,6 +213,7 @@ fn proptest_cache_text_roundtrip() {
                         stages: 1 + rng.below(3) as usize,
                         warps: if rng.bool() { 4 } else { 8 },
                         split_k: 1 << rng.below(4),
+                        prefetch_pages: 1 + rng.below(2) as usize,
                     },
                     micros: (rng.below(1_000_000) as f64) / 7.0,
                     strategy: ["exhaustive", "beam", "greedy"][rng.below(3) as usize].into(),
@@ -274,6 +275,7 @@ fn serving_sig_keys_resolve_tuned_specs() {
         seq: spec.seq_len,
         kv: spec.kv_len,
         kv_layout: spec.kv_layout,
+        direction: spec.direction,
     };
     let entry = tuner
         .cache()
@@ -292,7 +294,7 @@ fn relative_cache_path_saves_in_cwd() {
     let mut cache = TuneCache::new();
     cache.insert(TuneEntry {
         key: "k|A100|pallas".into(),
-        cand: Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 1 },
+        cand: Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 },
         micros: 1.0,
         strategy: "exhaustive".into(),
         evaluated: 1,

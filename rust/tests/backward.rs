@@ -1,0 +1,376 @@
+//! Differential contract for the FlashAttention-2-style backward pass:
+//! for every gradient program (dQ / dK / dV), the compiled engine and
+//! the legacy walker are **bit-identical** across profiles × tilings ×
+//! thread counts × KV layouts (both engines share every numeric kernel),
+//! and both match the analytic gradient oracle within f32 accumulation
+//! tolerance. Central finite differences of the f64 loss `Σ (O ∘ dO)`
+//! pin the analytic oracle itself — and the verify gate runs the same
+//! FD spot probe for causal, sliding and paged specs.
+
+use std::collections::BTreeMap;
+
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::reasoner::{reason_with_tiling, tiling::Tiling};
+use qimeng::sketch::spec::{AttnVariant, Direction, KvLayout, OpSpec};
+use qimeng::sketch::{backward_sketches, GradTarget};
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest;
+use qimeng::verify::exec;
+use qimeng::verify::interp;
+use qimeng::verify::tensor::{attention_loss_f64, reference_attention_grads, Tensor2};
+use qimeng::verify::{
+    identity_table, paged_shuffle, uses_gather, verify_program, BACKWARD_NUMERIC_TOL,
+};
+
+const SEQ: usize = 128;
+const HD: usize = 64;
+const SCALE: f32 = 0.125; // 1/sqrt(64)
+
+fn spec_of(causal: bool, layout: KvLayout) -> OpSpec {
+    let mut s = OpSpec::benchmark(AttnVariant::Mha, SEQ, HD, causal)
+        .with_direction(Direction::Backward);
+    s.batch = 1;
+    s.kv_layout = layout;
+    s
+}
+
+fn tiling(bm: usize, bn: usize, double_buffer: bool) -> Tiling {
+    Tiling { bm, bn, double_buffer, smem_bytes: 0, reg_bytes: 0, blocks_per_sm: 1 }
+}
+
+struct Problem {
+    q: Tensor2,
+    k: Tensor2,
+    v: Tensor2,
+    dout: Tensor2,
+    grads: qimeng::verify::tensor::AttnGrads,
+}
+
+fn problem(seed: u64, causal: bool, window: Option<usize>) -> Problem {
+    let q = Tensor2::randn(SEQ, HD, seed);
+    let k = Tensor2::randn(SEQ, HD, seed + 1);
+    let v = Tensor2::randn(SEQ, HD, seed + 2);
+    let dout = Tensor2::randn(SEQ, HD, seed + 3);
+    let grads = reference_attention_grads(&q, &k, &v, &dout, SCALE, causal, window);
+    Problem { q, k, v, dout, grads }
+}
+
+fn named(p: &Problem) -> BTreeMap<&str, &Tensor2> {
+    let mut m = BTreeMap::new();
+    m.insert("Q", &p.q);
+    m.insert("K", &p.k);
+    m.insert("V", &p.v);
+    m.insert("dO", &p.dout);
+    m.insert("Lse", &p.grads.lse);
+    m.insert("Delta", &p.grads.delta);
+    m
+}
+
+fn want_of(p: &Problem, grad: GradTarget) -> &Tensor2 {
+    match grad {
+        GradTarget::DQ => &p.grads.dq,
+        GradTarget::DK => &p.grads.dk,
+        GradTarget::DV => &p.grads.dv,
+    }
+}
+
+/// Run one (spec, tiling, threads, seed) configuration through all three
+/// gradient programs and assert the full differential contract.
+#[allow(clippy::too_many_arguments)]
+fn assert_backward_contract(
+    causal: bool,
+    layout: KvLayout,
+    bm: usize,
+    bn: usize,
+    double_buffer: bool,
+    threads: usize,
+    seed: u64,
+    profile: &LlmProfile,
+) -> Result<(), String> {
+    let spec = spec_of(causal, layout);
+    let window = match layout {
+        KvLayout::Sliding { window } => Some(window),
+        _ => None,
+    };
+    let p = problem(seed, causal, window);
+    let inputs = named(&p);
+
+    for (grad, sk) in backward_sketches(&spec) {
+        let program =
+            reason_with_tiling(&sk, &spec, profile, tiling(bm, bn, double_buffer)).program;
+        let label = format!(
+            "{grad} causal={causal} layout={layout} bm={bm} bn={bn} db={double_buffer} \
+             threads={threads}"
+        );
+
+        let mut tables = BTreeMap::new();
+        if uses_gather(&program) {
+            let page = program.params()["page_size"] as usize;
+            tables.insert("block_table".to_string(), identity_table(SEQ / page));
+        }
+        let got = exec::run_program_tables(&program, &inputs, SCALE, &tables, threads)
+            .map_err(|e| format!("{label}: compiled run failed: {e}"))?;
+
+        // Engine twin: the legacy walker must agree bit for bit.
+        let walked = interp::run_program_tables(&program, &inputs, SCALE, &tables)
+            .map_err(|e| format!("{label}: walker run failed: {e}"))?;
+        if walked.data != got.data {
+            return Err(format!("{label}: walker != compiled"));
+        }
+        // Thread invariance: the serial sweep produces the same bits.
+        let serial = exec::run_program_tables(&program, &inputs, SCALE, &tables, 1)
+            .map_err(|e| format!("{label}: serial run failed: {e}"))?;
+        if serial.data != got.data {
+            return Err(format!("{label}: thread count changed the bits"));
+        }
+
+        // Paged: a physical page shuffle with the matching table reads the
+        // same logical bytes — identical output bits.
+        if uses_gather(&program) {
+            let page = program.params()["page_size"] as usize;
+            let (kp, vp, table) = paged_shuffle(&p.k, &p.v, page, seed ^ 0xFACE);
+            let mut shuffled_inputs = inputs.clone();
+            shuffled_inputs.insert("K", &kp);
+            shuffled_inputs.insert("V", &vp);
+            let mut shuffled_tables = tables.clone();
+            shuffled_tables.insert("block_table".to_string(), table);
+            let shuffled = exec::run_program_tables(
+                &program,
+                &shuffled_inputs,
+                SCALE,
+                &shuffled_tables,
+                threads,
+            )
+            .map_err(|e| format!("{label}: shuffled run failed: {e}"))?;
+            if shuffled.data != got.data {
+                return Err(format!("{label}: paged shuffle changed the bits"));
+            }
+        }
+
+        // Analytic oracle.
+        let want = want_of(&p, grad);
+        let diff = got.max_abs_diff(want);
+        if diff >= BACKWARD_NUMERIC_TOL {
+            return Err(format!("{label}: |engine - analytic| = {diff}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn backward_contract_smoke() {
+    for causal in [false, true] {
+        assert_backward_contract(
+            causal,
+            KvLayout::Contiguous,
+            64,
+            32,
+            true,
+            4,
+            42,
+            &LlmProfile::deepseek_v3(),
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn backward_contract_paged_and_sliding_smoke() {
+    assert_backward_contract(
+        true,
+        KvLayout::Paged { page_size: 16 },
+        64,
+        32,
+        true,
+        4,
+        7,
+        &LlmProfile::deepseek_v3(),
+    )
+    .unwrap_or_else(|e| panic!("{e}"));
+    assert_backward_contract(
+        true,
+        KvLayout::Sliding { window: 48 },
+        32,
+        32,
+        false,
+        2,
+        9,
+        &LlmProfile::claude35(),
+    )
+    .unwrap_or_else(|e| panic!("{e}"));
+}
+
+#[test]
+fn proptest_backward_across_profiles_tilings_threads_layouts() {
+    #[derive(Debug, Clone)]
+    struct Case {
+        bm: usize,
+        bn: usize,
+        double_buffer: bool,
+        causal: bool,
+        layout: usize,
+        threads: usize,
+        seed: u64,
+        profile: usize,
+    }
+    proptest::check_no_shrink(
+        10,
+        |rng: &mut Rng| Case {
+            bm: [16usize, 32, 64, 128][rng.range(0, 3) as usize],
+            bn: [16usize, 32, 64][rng.range(0, 2) as usize],
+            double_buffer: rng.range(0, 1) == 1,
+            causal: rng.range(0, 1) == 1,
+            layout: rng.range(0, 2) as usize,
+            threads: rng.range(1, 8) as usize,
+            seed: rng.range(0, 1 << 30) as u64,
+            profile: rng.range(0, 1) as usize,
+        },
+        |case| {
+            // Sliding requires causal; pages must divide gcd(bm, bn)
+            // (the reasoner clamps automatically — any request works).
+            let layout = match case.layout {
+                0 => KvLayout::Contiguous,
+                1 => KvLayout::Paged { page_size: [8usize, 16][case.seed as usize % 2] },
+                _ => KvLayout::Sliding { window: [32usize, 64][case.seed as usize % 2] },
+            };
+            let causal = case.causal || matches!(layout, KvLayout::Sliding { .. });
+            let profile = if case.profile == 0 {
+                LlmProfile::deepseek_v3()
+            } else {
+                LlmProfile::deepseek_r1()
+            };
+            assert_backward_contract(
+                causal,
+                layout,
+                case.bm,
+                case.bn,
+                case.double_buffer,
+                case.threads,
+                case.seed,
+                &profile,
+            )
+        },
+    );
+}
+
+/// Acceptance criterion: dQ/dK/dV match central finite differences of
+/// the f64 loss within rel 1e-3 — checked directly here on a handful of
+/// entries per gradient, for causal, sliding and paged specs (the verify
+/// gate runs the same spot probe on every backward generation).
+#[test]
+fn backward_gradients_match_central_finite_differences() {
+    for (layout, causal) in [
+        (KvLayout::Contiguous, true),
+        (KvLayout::Paged { page_size: 16 }, true),
+        (KvLayout::Sliding { window: 48 }, true),
+    ] {
+        let spec = spec_of(causal, layout);
+        let window = match layout {
+            KvLayout::Sliding { window } => Some(window),
+            _ => None,
+        };
+        let p = problem(33, causal, window);
+        let inputs = named(&p);
+        let to64 = |t: &Tensor2| -> Vec<f64> { t.data.iter().map(|&x| x as f64).collect() };
+        let (q64, k64, v64, d64) = (to64(&p.q), to64(&p.k), to64(&p.v), to64(&p.dout));
+
+        for (grad, sk) in backward_sketches(&spec) {
+            let program = reason_with_tiling(
+                &sk,
+                &spec,
+                &LlmProfile::deepseek_v3(),
+                tiling(32, 32, false),
+            )
+            .program;
+            let mut tables = BTreeMap::new();
+            if uses_gather(&program) {
+                let page = program.params()["page_size"] as usize;
+                tables.insert("block_table".to_string(), identity_table(SEQ / page));
+            }
+            let got =
+                exec::run_program_tables(&program, &inputs, SCALE, &tables, 2).unwrap();
+            // Probe the largest entry plus a few fixed ones.
+            let mut argmax = 0usize;
+            for (i, x) in got.data.iter().enumerate() {
+                if x.abs() > got.data[argmax].abs() {
+                    argmax = i;
+                }
+            }
+            for idx in [argmax, got.data.len() / 3] {
+                let h = 1e-3f64;
+                let eval = |delta: f64| -> f64 {
+                    let mut qa = q64.clone();
+                    let mut ka = k64.clone();
+                    let mut va = v64.clone();
+                    match grad {
+                        GradTarget::DQ => qa[idx] += delta,
+                        GradTarget::DK => ka[idx] += delta,
+                        GradTarget::DV => va[idx] += delta,
+                    }
+                    attention_loss_f64(
+                        &qa,
+                        &ka,
+                        &va,
+                        &d64,
+                        SEQ,
+                        SEQ,
+                        HD,
+                        HD,
+                        SCALE as f64,
+                        causal,
+                        window,
+                    )
+                };
+                let fd = (eval(h) - eval(-h)) / (2.0 * h);
+                let engine = got.data[idx] as f64;
+                let denom = fd.abs().max(engine.abs()).max(1.0);
+                assert!(
+                    (fd - engine).abs() / denom < 1e-3,
+                    "{grad} layout={layout} causal={causal} idx={idx}: \
+                     fd {fd:.6e} vs engine {engine:.6e}"
+                );
+            }
+        }
+    }
+}
+
+/// The verify gate accepts every backward generation across the layout
+/// grid (analytic + FD probes inside the gate).
+#[test]
+fn verify_gate_passes_backward_across_layouts() {
+    use qimeng::perfmodel::gpu::GpuArch;
+    for layout in [
+        KvLayout::Contiguous,
+        KvLayout::Paged { page_size: 16 },
+        KvLayout::Sliding { window: 64 },
+    ] {
+        let spec = spec_of(true, layout);
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = qimeng::reasoner::reason(
+                &sk,
+                &spec,
+                &GpuArch::a100(),
+                &LlmProfile::deepseek_v3(),
+            );
+            let report = verify_program(&r.program, true, 11);
+            assert!(report.passed, "{grad} layout={layout}: {report:?}");
+        }
+    }
+}
+
+/// Full CLI-shaped acceptance path: `tlc generate --backward` — spec →
+/// backward sketches → reason → verify → translate.
+#[test]
+fn full_cli_shaped_pipeline_roundtrips_backward() {
+    use qimeng::perfmodel::gpu::GpuArch;
+    use qimeng::pipeline::{run, Target};
+
+    let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+        .with_direction(Direction::Backward);
+    let r = run(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+        .expect("backward pipeline");
+    assert!(r.verify.passed);
+    assert_eq!(r.backward.len(), 3);
+    let src = r.source.unwrap();
+    assert!(src.contains("attention_backward"), "custom-VJP wrapper missing");
+}

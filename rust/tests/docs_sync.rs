@@ -1,0 +1,137 @@
+//! Doc-sync gate for `docs/TL_REFERENCE.md`: every operation and surface
+//! form the TL printer can emit must be documented in the language
+//! reference — adding a `ComputeOp` (or a new statement/coordinate form)
+//! without documenting it fails this test.
+
+use qimeng::tl::ast::ComputeOp;
+
+const REFERENCE: &str = include_str!("../../docs/TL_REFERENCE.md");
+
+/// Every compute op the printer can spell. Keep in sync with
+/// `ComputeOp::as_str` — the roundtrip below enforces that this list is
+/// exhaustive over the enum's printable spellings.
+fn printable_ops() -> Vec<ComputeOp> {
+    vec![
+        ComputeOp::Gemm,
+        ComputeOp::Softmax,
+        ComputeOp::CausalMask,
+        ComputeOp::WindowMask,
+        ComputeOp::Multiply,
+        ComputeOp::Add,
+        ComputeOp::Subtract,
+        ComputeOp::Divide,
+        ComputeOp::Exp,
+        ComputeOp::RowMax,
+        ComputeOp::RowSum,
+        ComputeOp::Max,
+    ]
+}
+
+#[test]
+fn every_printable_compute_op_is_documented() {
+    for op in printable_ops() {
+        let name = op.as_str();
+        assert!(
+            REFERENCE.contains(&format!("`{name}`")),
+            "TL op `{name}` is not documented in docs/TL_REFERENCE.md \
+             (add a per-op semantics entry)"
+        );
+        // And the documented spelling is the parseable one.
+        assert_eq!(ComputeOp::parse(name), op, "`{name}` must round-trip");
+    }
+}
+
+#[test]
+fn op_list_covers_the_enum() {
+    // A new ComputeOp variant must be added to `printable_ops` (and the
+    // reference). This canary breaks when the set of *parsed* spellings
+    // grows beyond the documented list.
+    let ops = printable_ops();
+    let documented: Vec<&str> = ops.iter().map(|o| o.as_str()).collect();
+    for spelling in [
+        "GEMM", "Softmax", "CausalMask", "WindowMask", "Multiply", "Add", "Subtract",
+        "Divide", "Exp", "RowMax", "RowSum", "Max",
+    ] {
+        assert!(
+            !matches!(ComputeOp::parse(spelling), ComputeOp::Other(_)),
+            "`{spelling}` should parse to a first-class op"
+        );
+        assert!(documented.contains(&spelling));
+    }
+}
+
+#[test]
+fn statement_and_surface_forms_are_documented() {
+    // Statement keywords of the grammar.
+    for kw in ["param", "Allocate", "Copy", "Compute", "Reshape", "for", "if", "end"] {
+        assert!(
+            REFERENCE.contains(&format!("`{kw}`")),
+            "statement keyword `{kw}` missing from the reference"
+        );
+    }
+    // Surface forms: transpose marker, coordinate clauses (including the
+    // PR-4 gather form), memory spaces, with-lists and output clauses.
+    for needle in [
+        ".T",
+        "in coordinate",
+        "block_table[i]",
+        "with offset",
+        "and get",
+        "and get new",
+        "and accumulate",
+        "mma_C",
+        "mma_A",
+        "global",
+        "shared",
+        "register",
+        "softmax_scale",
+        "block_idx",
+        "Lq",
+        "Lk",
+    ] {
+        assert!(
+            REFERENCE.contains(needle),
+            "surface form `{needle}` missing from the reference"
+        );
+    }
+    // The worked examples: one forward, one backward.
+    assert!(
+        REFERENCE.contains("Compute Softmax S with m, l and O"),
+        "forward worked example missing"
+    );
+    assert!(
+        REFERENCE.contains("Compute GEMM dS.T, Q and accumulate dK"),
+        "backward worked example missing"
+    );
+}
+
+#[test]
+fn reference_examples_actually_parse() {
+    // Every fenced ```tl block in the reference must parse (and
+    // round-trip through the printer).
+    let mut in_block = false;
+    let mut block = String::new();
+    let mut checked = 0;
+    for line in REFERENCE.lines() {
+        if line.trim() == "```tl" {
+            in_block = true;
+            block.clear();
+            continue;
+        }
+        if in_block && line.trim() == "```" {
+            in_block = false;
+            let parsed = qimeng::tl::parser::parse_program(&block)
+                .unwrap_or_else(|e| panic!("reference example does not parse: {e}\n{block}"));
+            let printed = qimeng::tl::printer::print_program(&parsed);
+            let reparsed = qimeng::tl::parser::parse_program(&printed).unwrap();
+            assert_eq!(parsed.stmts, reparsed.stmts, "reference example must round-trip");
+            checked += 1;
+            continue;
+        }
+        if in_block {
+            block.push_str(line);
+            block.push('\n');
+        }
+    }
+    assert!(checked >= 2, "the reference must carry parseable TL examples, found {checked}");
+}

@@ -23,6 +23,7 @@ fn family(i: u64) -> FamilyKey {
         seq: 256,
         kv: 256,
         kv_layout: KvLayout::Contiguous,
+        direction: qimeng::sketch::spec::Direction::Forward,
     }
 }
 
