@@ -212,9 +212,12 @@ pub fn cli_tune(args: &Args) -> Result<(), String> {
         .ok_or_else(|| format!("unknown --strategy `{strategy_name}`"))?;
     let measure = args.get_bool("measure");
     if args.get_bool("report") {
+        let spec = OpSpec::from_cli(args)?;
         args.finish()?;
         let cache = TuneCache::load(&cache_path).map_err(|e| format!("{e:#}"))?;
-        return cli_report(&cache, &cache_path, &arch, target);
+        cli_report(&cache, &cache_path, &arch, target)?;
+        println!();
+        return op_profile_report(&spec, &arch);
     }
 
     let specs: Vec<OpSpec> = if grid {
@@ -346,6 +349,67 @@ fn cli_report(
             "disagreements mean serving evidence overturned the cost model — \
              `Registry::find_best` and the coordinator already prefer the observed winner"
         );
+    }
+    Ok(())
+}
+
+/// Run the compiled engine's op-level profiling mode over one operator
+/// and print the observed-vs-modeled per-op-kind share table
+/// ([`crate::obs::profile::disagreement_table`], DESIGN.md §11) — the
+/// second half of `tlc tune --report` and the middle section of `tlc
+/// profile`. The probe clamps the spec to an engine-friendly shape
+/// (seq/kv ≤ 1024, batch 1, forward pass) so the CPU sweep stays fast;
+/// per-kind *shares* are what the comparison consumes and those are
+/// stable under the clamp. A probe the engine cannot run degrades to a
+/// printed note instead of an error — the report must never take down
+/// its caller.
+pub fn op_profile_report(spec: &OpSpec, arch: &GpuArch) -> Result<(), String> {
+    use crate::sketch::spec::{Direction, KvLayout};
+    use crate::verify::{exec, identity_table, tensor::Tensor2};
+
+    let mut probe = spec.clone();
+    probe.seq_len = probe.seq_len.min(1024);
+    probe.kv_len = probe.kv_len.min(1024);
+    probe.batch = 1;
+    probe.direction = Direction::Forward;
+
+    let r = crate::reasoner::generate_tl_code(
+        &probe,
+        arch,
+        &crate::reasoner::profiles::LlmProfile::deepseek_v3(),
+    );
+    let qk = probe.qk_dim();
+    let q = Tensor2::randn(probe.seq_len, qk, 0xA1);
+    let k = Tensor2::randn(probe.kv_len, qk, 0xA2);
+    let v = Tensor2::randn(probe.kv_len, probe.v_head_dim, 0xA3);
+    let scale = 1.0 / (qk as f32).sqrt();
+    let mut tables = std::collections::BTreeMap::new();
+    if let KvLayout::Paged { page_size } = probe.kv_layout {
+        // Identity table ≡ contiguous bytes, but the program still
+        // routes every KV load through the gather path — exactly what
+        // the profile should attribute to `gather`.
+        tables.insert(
+            "block_table".to_string(),
+            identity_table(probe.kv_len.div_ceil(page_size.max(1))),
+        );
+    }
+    let threads = exec::default_threads();
+    match exec::run_attention_profiled(&r.program, &q, &k, &v, scale, &tables, threads) {
+        Ok((_, prof)) => {
+            let cand = best_candidate(&probe, arch);
+            let sched = space::schedule_of(&probe, arch, &cand);
+            let modeled = crate::obs::profile::modeled_kinds(&probe, arch, &sched);
+            println!(
+                "op-level engine profile for {} on {} ({} blocks swept, {} threads):",
+                probe.kernel_name(),
+                arch.name,
+                prof.blocks(),
+                threads,
+            );
+            print!("{}", prof.table());
+            print!("{}", crate::obs::profile::disagreement_table(&prof, &modeled));
+        }
+        Err(e) => println!("op-level profile skipped: engine probe failed ({e})"),
     }
     Ok(())
 }

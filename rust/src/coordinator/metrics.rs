@@ -12,6 +12,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::obs::export::{Sample, SampleKind};
+
 /// 64 octaves x 4 sub-buckets covers the full u64 microsecond range.
 const SUBS: usize = 4;
 const BUCKETS: usize = 64 * SUBS;
@@ -121,7 +123,10 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        self.latencies.record(d.as_micros() as u64);
+        // `as u64` would silently wrap for durations past ~584000 years
+        // of microseconds; saturate so pathological clock readings land
+        // in the top bucket instead of a random low one.
+        self.latencies.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
     }
 
     pub fn record_shard_batch(&self, shard: usize) {
@@ -155,7 +160,7 @@ impl Metrics {
         let shards = self.shard_batches();
         format!(
             "requests={} responses={} batches={} occupancy={:.2} padded={} errors={} \
-             rebalances={} shard_batches={:?} latency mean={:?} p50={:?} p95={:?}",
+             rebalances={} shard_batches={:?} latency mean={:?} p50={:?} p95={:?} p99={:?}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -167,7 +172,43 @@ impl Metrics {
             self.mean_latency().unwrap_or_default(),
             self.latency_percentile(0.5).unwrap_or_default(),
             self.latency_percentile(0.95).unwrap_or_default(),
+            self.latency_percentile(0.99).unwrap_or_default(),
         )
+    }
+
+    /// Every metric as exporter samples, unified with the [`crate::obs`]
+    /// registry's naming: counters carry a `_total` suffix, latency
+    /// percentiles are gauges in microseconds, and per-shard batch
+    /// counts carry a `shard` label.
+    pub fn samples(&self) -> Vec<Sample> {
+        let counter = |name: &str, v: u64| Sample {
+            name: name.to_string(),
+            kind: SampleKind::Counter,
+            value: v as f64,
+        };
+        let gauge = |name: &str, v: f64| Sample {
+            name: name.to_string(),
+            kind: SampleKind::Gauge,
+            value: v,
+        };
+        let us = |d: Option<Duration>| d.unwrap_or_default().as_micros() as f64;
+        let mut out = vec![
+            counter("qimeng_requests_total", self.requests.load(Ordering::Relaxed)),
+            counter("qimeng_responses_total", self.responses.load(Ordering::Relaxed)),
+            counter("qimeng_batches_total", self.batches.load(Ordering::Relaxed)),
+            counter("qimeng_padded_slots_total", self.padded_slots.load(Ordering::Relaxed)),
+            counter("qimeng_errors_total", self.errors.load(Ordering::Relaxed)),
+            counter("qimeng_rebalances_total", self.rebalances.load(Ordering::Relaxed)),
+            gauge("qimeng_batch_occupancy", self.mean_occupancy()),
+            gauge("qimeng_latency_mean_us", us(self.mean_latency())),
+            gauge("qimeng_latency_p50_us", us(self.latency_percentile(0.5))),
+            gauge("qimeng_latency_p95_us", us(self.latency_percentile(0.95))),
+            gauge("qimeng_latency_p99_us", us(self.latency_percentile(0.99))),
+        ];
+        for (shard, batches) in self.shard_batches().into_iter().enumerate() {
+            out.push(counter(&format!("qimeng_shard_batches_total{{shard=\"{shard}\"}}"), batches));
+        }
+        out
     }
 }
 
@@ -245,6 +286,41 @@ mod tests {
         assert!(m.mean_latency().is_none());
         assert_eq!(m.mean_occupancy(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn pathological_latency_saturates_instead_of_wrapping() {
+        let m = Metrics::new();
+        // as_micros() of this duration exceeds u64::MAX; a wrapping cast
+        // would land it in a low bucket and drag every percentile down.
+        m.record_latency(Duration::MAX);
+        m.record_latency(Duration::from_micros(100));
+        let p99 = m.latency_percentile(0.99).unwrap();
+        assert!(
+            p99 >= Duration::from_micros(u64::MAX / 2),
+            "saturated sample must dominate the tail: {p99:?}"
+        );
+        assert!(m.summary().contains("p99="));
+    }
+
+    #[test]
+    fn samples_cover_every_counter_and_shard() {
+        let m = Metrics::with_shards(2);
+        m.requests.store(7, Ordering::Relaxed);
+        m.record_shard_batch(1);
+        m.record_latency(Duration::from_micros(50));
+        let samples = m.samples();
+        let find = |name: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing sample {name}"))
+        };
+        assert_eq!(find("qimeng_requests_total").value, 7.0);
+        assert_eq!(find("qimeng_shard_batches_total{shard=\"1\"}").value, 1.0);
+        assert!(find("qimeng_latency_p99_us").value >= 50.0);
+        assert_eq!(find("qimeng_errors_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_latency_p50_us").kind, SampleKind::Gauge);
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! lane (vLLM-style, specialized to fixed-shape executables), reports
 //! latency / throughput / occupancy metrics, and feeds measured
 //! per-variant latencies back into the autotuner's `TuneCache`.
+//!
+//! Observability (DESIGN.md §11): `tlc serve --trace-out <path>` turns
+//! span tracing on and writes a Chrome-trace JSON of the request
+//! lifecycle on shutdown, `--metrics-out <path>` writes the Prometheus
+//! exposition ([`metrics_exposition`]) and `--stats-every <n>` flushes
+//! a summary line (and refreshes the metrics file) every `n` executed
+//! batches while the stream is in flight.
 
 pub mod batcher;
 pub mod metrics;
@@ -21,9 +28,64 @@ pub use scheduler::{Executor, ExecutorSpec, Router, ServeTopology};
 pub use service::{Coordinator, ServeConfig};
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::cli::Args;
+
+/// Prometheus text exposition for a serving run: the coordinator's
+/// [`metrics::Metrics`] samples plus everything in the [`crate::obs`]
+/// registry (per-lane queue depths, KV-pool residency).
+pub fn metrics_exposition(metrics: &metrics::Metrics) -> String {
+    let mut samples = metrics.samples();
+    samples.extend(crate::obs::global().samples());
+    crate::obs::export::prometheus_text(&samples)
+}
+
+/// Background flusher for `tlc serve --stats-every N`: watches the batch
+/// counter and, each time it advances past another `N` batches, prints a
+/// one-line metrics summary and (when configured) rewrites the
+/// Prometheus exposition file in place — live visibility into a long
+/// stream without touching the serve hot path.
+struct StatsFlusher {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsFlusher {
+    fn start(
+        metrics: Arc<metrics::Metrics>,
+        every: usize,
+        path: Option<PathBuf>,
+    ) -> StatsFlusher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let watcher_stop = stop.clone();
+        let every = every.max(1) as u64;
+        let handle = std::thread::spawn(move || {
+            let mut flushed_bucket = 0u64;
+            while !watcher_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(20));
+                let batches = metrics.batches.load(Ordering::Relaxed);
+                if batches / every > flushed_bucket {
+                    flushed_bucket = batches / every;
+                    eprintln!("[stats @ {batches} batches] {}", metrics.summary());
+                    if let Some(p) = &path {
+                        let _ = std::fs::write(p, metrics_exposition(&metrics));
+                    }
+                }
+            }
+        });
+        StatsFlusher { stop, handle: Some(handle) }
+    }
+
+    fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
 
 /// Outcome of a serving run (used by `tlc serve`, the E2E example and the
 /// coordinator bench).
@@ -113,7 +175,14 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
     };
     let kv_budget_mb = args.get_usize("kv-budget-mb", 0)?;
     let decode_layout = crate::sketch::spec::kv_layout_from_cli(args)?;
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let stats_every = args.get_usize("stats-every", 0)?;
     args.finish()?;
+
+    if trace_out.is_some() {
+        crate::obs::set_enabled(true);
+    }
 
     let coordinator = Coordinator::start(ServeConfig {
         artifacts_dir: artifacts,
@@ -143,7 +212,13 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         decode_frac,
         seed,
     );
+    let flusher = (stats_every > 0).then(|| {
+        StatsFlusher::start(coordinator.metrics.clone(), stats_every, metrics_out.clone())
+    });
     let report = run_stream(&coordinator, &stream, 1.0);
+    if let Some(f) = flusher {
+        f.stop();
+    }
     println!(
         "served {} requests in {:.2?}: {} ok, {} errors",
         report.requests, report.wall, report.ok, report.errors
@@ -173,6 +248,16 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
                 snapshot.observed_count()
             );
         }
+    }
+    if let Some(p) = &metrics_out {
+        std::fs::write(p, metrics_exposition(&coordinator.metrics))
+            .map_err(|e| format!("write {}: {e}", p.display()))?;
+        println!("wrote Prometheus metrics -> {}", p.display());
+    }
+    if let Some(p) = &trace_out {
+        let trace = crate::obs::export::chrome_trace(&crate::obs::global().spans());
+        std::fs::write(p, trace).map_err(|e| format!("write {}: {e}", p.display()))?;
+        println!("wrote Chrome trace -> {}", p.display());
     }
     coordinator.shutdown();
     Ok(())

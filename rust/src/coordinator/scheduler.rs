@@ -24,6 +24,13 @@
 //! loop to the L1 autotuner: `Registry::find_best` and future `tlc tune`
 //! runs re-rank variants from serving evidence instead of the cost model
 //! alone.
+//!
+//! When tracing is enabled ([`crate::obs`]) each shard also emits the
+//! request lifecycle as spans — `serve.plan` → `serve.admit` (decode KV
+//! reservation) → `serve.execute` → `serve.respond`, plus one
+//! `serve.request` span per request covering its whole queue→reply
+//! lifetime — and keeps per-lane queue-depth and KV-pool residency
+//! gauges fresh for the Prometheus exposition (DESIGN.md §11).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -36,6 +43,7 @@ use anyhow::{Context, Result};
 use super::batcher::{plan_batches_lanes, BatchPlan, LaneCaps};
 use super::metrics::Metrics;
 use super::request::{AttnRequest, AttnResponse, FamilyKey, LaneKey};
+use crate::obs;
 use crate::autotune::cache::{self as tune_cache, TuneCache};
 use crate::autotune::space::Candidate;
 use crate::runtime::registry::{ArtifactMeta, AttnSignature, Registry};
@@ -885,6 +893,14 @@ fn shard_loop(
     kv_pool: Arc<PagedKvPool>,
 ) {
     let mut pending: Vec<AttnRequest> = Vec::new();
+    // Lane-depth and KV-residency gauges for the Prometheus exposition
+    // (`tlc serve --metrics-out`); handles are created once, updates are
+    // single relaxed stores per planning tick.
+    let g_prefill =
+        obs::gauge(&format!("qimeng_lane_queue_depth{{shard=\"{shard}\",lane=\"prefill\"}}"));
+    let g_decode =
+        obs::gauge(&format!("qimeng_lane_queue_depth{{shard=\"{shard}\",lane=\"decode\"}}"));
+    let g_kv = obs::gauge("qimeng_kv_pool_in_use_bytes");
     // Per-slot batch sequence numbers driving exploration probes.
     let mut slot_seq: BTreeMap<(FamilyKey, LaneKey, usize), u64> = BTreeMap::new();
     // Variants that have executed at least once: their first sample is a
@@ -897,14 +913,14 @@ fn shard_loop(
         // quarter-window flush deadline is actually honoured — a
         // half-window sleep would double latency for exactly the
         // traffic the lane exists to serve quickly.
-        let poll = if pending
+        let decode_depth = pending
             .iter()
-            .any(|r| LaneKey::of(&r.family) == LaneKey::Decode)
-        {
-            window / 8
-        } else {
-            window / 2
-        };
+            .filter(|r| LaneKey::of(&r.family) == LaneKey::Decode)
+            .count();
+        g_decode.set(decode_depth as i64);
+        g_prefill.set((pending.len() - decode_depth) as i64);
+        g_kv.set(kv_pool.in_use_bytes() as i64);
+        let poll = if decode_depth > 0 { window / 8 } else { window / 2 };
         match rx.recv_timeout(poll.max(Duration::from_micros(100))) {
             Ok(req) => {
                 pending.push(req);
@@ -932,7 +948,12 @@ fn shard_loop(
                 (i, r.family.clone(), expired)
             })
             .collect();
-        let plans = plan_batches_lanes(&view, &topo.capacities);
+        let plans = {
+            // Only time real planning work — an idle tick would spam
+            // the trace with empty spans at every poll timeout.
+            let _sp = (!pending.is_empty()).then(|| obs::span_cat("serve.plan", "serve"));
+            plan_batches_lanes(&view, &topo.capacities)
+        };
 
         if !plans.is_empty() {
             execute_plans(
@@ -997,8 +1018,11 @@ fn execute_plans(
         // executing; a full pool defers the batch to the next planning
         // tick — its members simply stay pending.
         let kv_reserved = if plan.lane == LaneKey::Decode {
+            let sp = obs::span_cat("serve.admit", "serve");
             let bytes = plan.capacity.saturating_mul(fam.kv_bytes());
-            if !kv_pool.try_alloc(bytes) {
+            let admitted = kv_pool.try_alloc(bytes);
+            sp.finish();
+            if !admitted {
                 continue;
             }
             bytes
@@ -1051,9 +1075,11 @@ fn execute_plans(
             v[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
         }
 
+        let sp_exec = obs::span_cat("serve.execute", "serve");
         let t0 = Instant::now();
         let result = exec.execute_batch(&fam, &info, cap, &q, &k, &v);
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        sp_exec.finish();
 
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.record_shard_batch(shard);
@@ -1086,12 +1112,17 @@ fn execute_plans(
                         lock(tune).observe(&info.obs_key, cand, exec_us);
                     }
                 }
+                let sp_respond = obs::span_cat("serve.respond", "serve");
                 for (slot, &idx) in plan.members.iter().enumerate() {
                     let r = &pending[idx];
                     let piece = out[slot * on..(slot + 1) * on].to_vec();
                     let latency = r.enqueued.elapsed();
                     metrics.responses.fetch_add(1, Ordering::Relaxed);
                     metrics.record_latency(latency);
+                    // The whole queue→reply lifetime as one closed span:
+                    // the request predates any guard, so it is recorded
+                    // out-of-band from its `enqueued` timestamp.
+                    obs::record_closed("serve.request", "serve", r.enqueued, latency);
                     let _ = r.reply.send(AttnResponse {
                         id: r.id,
                         result: Ok(piece),
@@ -1099,15 +1130,18 @@ fn execute_plans(
                         batch_size: plan.members.len(),
                     });
                 }
+                sp_respond.finish();
             }
             Err(e) => {
                 for &idx in &plan.members {
                     let r = &pending[idx];
                     metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let latency = r.enqueued.elapsed();
+                    obs::record_closed("serve.request", "serve", r.enqueued, latency);
                     let _ = r.reply.send(AttnResponse {
                         id: r.id,
                         result: Err(e.clone()),
-                        latency: r.enqueued.elapsed(),
+                        latency,
                         batch_size: plan.members.len(),
                     });
                 }

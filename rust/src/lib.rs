@@ -52,6 +52,14 @@
 //! host wrapper (DESIGN.md §10). Forward spells as the empty suffix
 //! everywhere, so pre-backward artifacts and caches stay valid.
 //!
+//! Cross-cutting the stack is the unified observability layer
+//! ([`obs`]): RAII span tracing with cross-thread nesting, a
+//! counter/gauge registry, opt-in per-op-kind profiling inside the
+//! compiled engine (surfaced as an observed-vs-modeled table against
+//! [`perfmodel::cost`]), and Chrome-trace / Prometheus exporters wired
+//! into `tlc profile`, `tlc tune --report` and `tlc serve`
+//! (DESIGN.md §11).
+//!
 //! See `DESIGN.md` for the substitution table (no GPUs / no LLM API in
 //! this environment) and the experiment index, `README.md` for the CLI
 //! walkthroughs, and `docs/TL_REFERENCE.md` for the TL language
@@ -59,6 +67,7 @@
 
 pub mod autotune;
 pub mod coordinator;
+pub mod obs;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod reasoner;

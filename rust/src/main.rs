@@ -8,6 +8,8 @@
 //!   tables        regenerate a paper table/figure from the perf model
 //!   tune          schedule-space autotuning with a persistent cache
 //!   serve         start the attention-serving coordinator (PJRT runtime)
+//!   profile       trace all three layers (pipeline, engine, serving) and
+//!                 export a Chrome trace + per-op breakdown
 
 use qimeng::perfmodel::gpu::GpuArch;
 use qimeng::pipeline::{self, Target};
@@ -38,6 +40,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("tables") => cmd_tables(&args),
         Some("tune") => qimeng::autotune::cli_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("profile") => cmd_profile(&args),
         Some(other) => Err(format!("unknown subcommand `{other}`")),
         None => {
             println!("{}", USAGE);
@@ -49,7 +52,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
 const USAGE: &str = "\
 tlc — QiMeng-Attention (ACL 2025) reproduction pipeline
 
-USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
+USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve|profile> [flags]
 
   generate     --variant mha|gqa|mqa|mla [--seq N] [--head-dim 64|128]
                [--causal] [--target a100|rtx8000|t4|l40s]
@@ -86,6 +89,16 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve> [flags]
                decode-shaped requests (packed on the decode lane into
                split-K variants, KV-budget-aware). Measured per-variant
                latencies are folded back into artifacts/tune.txt.
+               [--metrics-out FILE] writes the Prometheus text exposition
+               on shutdown; [--trace-out FILE] enables span tracing and
+               writes a Chrome trace (Perfetto / chrome://tracing);
+               [--stats-every N] prints a metrics summary (and refreshes
+               --metrics-out) every N executed batches
+  profile      [operator flags] [--requests N] [--artifacts DIR]
+               [--trace-out trace.json] [--metrics-out FILE]
+               traces one pipeline run, profiles the compiled engine per
+               op kind (observed vs modeled shares), smokes the serving
+               coordinator, prints a span rollup and writes the trace
 ";
 
 fn spec_from(args: &Args) -> Result<OpSpec, String> {
@@ -286,4 +299,86 @@ fn cmd_tables(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     qimeng::coordinator::cli_serve(args)
+}
+
+/// `tlc profile`: one traced pass over all three layers — a pipeline
+/// run (`pipeline.*` spans), the compiled engine's op-level profiling
+/// mode (observed-vs-modeled table), and a serving smoke through the
+/// reference executor (`serve.*` spans) — then a span rollup and a
+/// Chrome trace ready for Perfetto / `chrome://tracing`.
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    use qimeng::coordinator::{Coordinator, ExecutorSpec, ServeConfig};
+
+    let spec = spec_from(args)?;
+    let arch = arch_from(args)?;
+    let profile = profile_from(args)?;
+    let backend = Target::from_cli(args)?;
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n = args.get_usize("requests", 32)?;
+    let trace_out = args.get_or("trace-out", "trace.json").to_string();
+    let metrics_out = args.get("metrics-out").map(String::from);
+    args.finish()?;
+
+    qimeng::obs::set_enabled(true);
+
+    // Layer 1: the generation pipeline (sketch → reason → verify →
+    // translate), traced as pipeline.* spans.
+    let r = pipeline::run(&spec, &arch, &profile, backend).map_err(|e| e.to_string())?;
+    println!(
+        "pipeline: {} generated and verified in {:.2?} (probe max|diff| {:.2e})",
+        spec.kernel_name(),
+        r.timings.total(),
+        r.verify.max_abs_diff.unwrap_or(f32::NAN),
+    );
+    println!();
+
+    // Layer 2: the compiled engine's op-level profiling mode, compared
+    // against the analytical cost model's per-term attribution.
+    qimeng::autotune::op_profile_report(&spec, &arch)?;
+    println!();
+
+    // Layer 3: a short serving smoke (reference executor, synthetic
+    // stream) so the trace covers the request lifecycle too.
+    let coordinator = Coordinator::start(ServeConfig {
+        artifacts_dir: artifacts,
+        shards: 2,
+        executor: ExecutorSpec::Reference,
+        ..ServeConfig::default()
+    })
+    .map_err(|e| format!("{e:#}"))?;
+    let stream =
+        qimeng::workload::request_stream_mixed(&coordinator.families, n, 400.0, 0.5, 7);
+    let report = qimeng::coordinator::run_stream(&coordinator, &stream, 1.0);
+    println!(
+        "serve smoke: {} requests over {} shard(s): {} ok, {} errors, p95 {:.2?}",
+        report.requests,
+        coordinator.shards(),
+        report.ok,
+        report.errors,
+        report.p95,
+    );
+    let metrics_text = qimeng::coordinator::metrics_exposition(&coordinator.metrics);
+    coordinator.shutdown();
+
+    let spans = qimeng::obs::global().spans();
+    let rows = qimeng::obs::export::rollup(&spans);
+    println!();
+    println!("span rollup ({} spans):", spans.len());
+    println!("{:<20} {:>7} {:>12} {:>12}", "span", "count", "total us", "max us");
+    for row in &rows {
+        println!("{:<20} {:>7} {:>12} {:>12}", row.name, row.count, row.total_us, row.max_us);
+    }
+
+    std::fs::write(&trace_out, qimeng::obs::export::chrome_trace(&spans))
+        .map_err(|e| format!("write {trace_out}: {e}"))?;
+    println!();
+    println!(
+        "wrote Chrome trace ({} events) -> {trace_out} (open in Perfetto or chrome://tracing)",
+        spans.len()
+    );
+    if let Some(p) = metrics_out {
+        std::fs::write(&p, metrics_text).map_err(|e| format!("write {p}: {e}"))?;
+        println!("wrote Prometheus metrics -> {p}");
+    }
+    Ok(())
 }

@@ -1,0 +1,272 @@
+//! The collector: the process-wide sink for closed spans and the
+//! counter/gauge registry. One [`Collector`] lives for the process
+//! (lazily created by [`global`]); everything it holds is cheap enough
+//! to keep around whether or not tracing is enabled — a span is only
+//! *recorded* when a guard closes, and counters/gauges are plain
+//! relaxed atomics that cost one instruction to bump.
+//!
+//! Span timestamps are microseconds relative to the collector's origin
+//! `Instant` (captured at first touch), which is exactly the timebase
+//! Chrome `trace_event` JSON wants. Thread ids are small sequential
+//! integers handed out on first use per OS thread, so traces stay
+//! readable (`tid: 3`, not a 64-bit hash).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use super::export::{Sample, SampleKind};
+
+/// Poisoned-lock-tolerant lock: the collector only holds plain data, so
+/// a panicking recorder cannot leave it in a broken state.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One closed span, ready for export. Produced by the guards in
+/// [`super::span`]; timestamps are µs since the collector origin.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Span name, e.g. `pipeline.verify` or `serve.execute`.
+    pub name: String,
+    /// Coarse category (`pipeline`, `engine`, `serve`, ...) — becomes
+    /// the Chrome `cat` field so Perfetto can filter by layer.
+    pub cat: &'static str,
+    /// Unique id (per process, never reused).
+    pub id: u64,
+    /// Id of the enclosing span, if any.
+    pub parent: Option<u64>,
+    /// Small sequential id of the recording OS thread.
+    pub tid: u64,
+    /// Start, µs since the collector origin.
+    pub start_us: u64,
+    /// Wall duration in µs (saturating).
+    pub dur_us: u64,
+}
+
+/// Handle to a monotonically increasing counter in the registry.
+/// Cloning is cheap (an `Arc` bump); updates are relaxed atomics.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a point-in-time gauge (queue depth, pool residency).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Adjust by a signed delta.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide span sink and metric registry. See the module docs for
+/// the cost model; [`global`] returns the shared instance.
+pub struct Collector {
+    origin: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    next_id: AtomicU64,
+}
+
+impl Collector {
+    /// Fresh collector with its origin pinned to "now". Tests construct
+    /// their own; production code uses [`global`].
+    pub fn new() -> Self {
+        Collector {
+            origin: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Allocate the next span id (ids start at 1; 0 is the inert id).
+    pub fn next_span_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Microseconds from the collector origin to `t`, saturating to 0
+    /// for instants before the origin and to `u64::MAX` far beyond it.
+    pub fn us_since_origin(&self, t: Instant) -> u64 {
+        u64::try_from(t.duration_since(self.origin).as_micros()).unwrap_or(u64::MAX)
+    }
+
+    /// Append a closed span.
+    pub fn record(&self, span: SpanRecord) {
+        lock(&self.spans).push(span);
+    }
+
+    /// Counter handle for `name`, created on first use. Names follow
+    /// Prometheus conventions (`qimeng_requests_total`, optionally with
+    /// a `{label="v"}` suffix that the exposition emits verbatim).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut reg = lock(&self.counters);
+        Counter(Arc::clone(reg.entry(name.to_string()).or_default()))
+    }
+
+    /// Gauge handle for `name`, created on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut reg = lock(&self.gauges);
+        Gauge(Arc::clone(reg.entry(name.to_string()).or_default()))
+    }
+
+    /// Snapshot of every closed span so far (clone; recording continues).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        lock(&self.spans).clone()
+    }
+
+    /// Drain all closed spans, leaving the sink empty.
+    pub fn take_spans(&self) -> Vec<SpanRecord> {
+        std::mem::take(&mut *lock(&self.spans))
+    }
+
+    /// Drop all spans and zero every registered counter and gauge (the
+    /// handles stay valid). Used by tests and `tlc profile` to isolate
+    /// a run.
+    pub fn clear(&self) {
+        lock(&self.spans).clear();
+        for v in lock(&self.counters).values() {
+            v.store(0, Ordering::Relaxed);
+        }
+        for v in lock(&self.gauges).values() {
+            v.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of every registered counter and gauge, in
+    /// registry (name) order, ready for the Prometheus exposition.
+    pub fn samples(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for (name, v) in lock(&self.counters).iter() {
+            out.push(Sample {
+                name: name.clone(),
+                kind: SampleKind::Counter,
+                value: v.load(Ordering::Relaxed) as f64,
+            });
+        }
+        for (name, v) in lock(&self.gauges).iter() {
+            out.push(Sample {
+                name: name.clone(),
+                kind: SampleKind::Gauge,
+                value: v.load(Ordering::Relaxed) as f64,
+            });
+        }
+        out
+    }
+}
+
+impl Default for Collector {
+    fn default() -> Self {
+        Collector::new()
+    }
+}
+
+/// The process-wide collector, created on first touch.
+pub fn global() -> &'static Collector {
+    static GLOBAL: OnceLock<Collector> = OnceLock::new();
+    GLOBAL.get_or_init(Collector::new)
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small sequential id of the calling OS thread (stable for the
+/// thread's lifetime; handed out on first use).
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let c = Collector::new();
+        let n = c.counter("n_total");
+        n.inc();
+        n.add(4);
+        assert_eq!(n.get(), 5);
+        // Same name -> same underlying cell.
+        assert_eq!(c.counter("n_total").get(), 5);
+        let g = c.gauge("depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+        let s = c.samples();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].name, "n_total");
+        assert_eq!(s[0].value, 5.0);
+        c.clear();
+        assert_eq!(n.get(), 0);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn span_sink_take_and_snapshot() {
+        let c = Collector::new();
+        c.record(SpanRecord {
+            name: "a".into(),
+            cat: "test",
+            id: c.next_span_id(),
+            parent: None,
+            tid: current_tid(),
+            start_us: 0,
+            dur_us: 10,
+        });
+        assert_eq!(c.spans().len(), 1);
+        assert_eq!(c.take_spans().len(), 1);
+        assert!(c.spans().is_empty());
+    }
+
+    #[test]
+    fn origin_timebase_saturates() {
+        let c = Collector::new();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(c.us_since_origin(Instant::now()) >= 1000);
+        // An instant at/before the origin clamps to zero, never panics.
+        assert_eq!(c.us_since_origin(c.origin), 0);
+    }
+
+    #[test]
+    fn tids_are_small_and_distinct() {
+        let here = current_tid();
+        let there = std::thread::spawn(current_tid).join().unwrap();
+        assert_ne!(here, there);
+    }
+}

@@ -1,0 +1,468 @@
+//! Exporters (and the matching parsers the tests gate on): Chrome
+//! `trace_event` JSON — loadable in Perfetto / `chrome://tracing` — and
+//! Prometheus text exposition. Both formats are simple enough to emit
+//! and parse by hand, which keeps the vendored-offline discipline (no
+//! serde) and gives the schema tests a real parse-back, not a substring
+//! check.
+
+use std::collections::BTreeSet;
+
+use super::collect::SpanRecord;
+
+/// Metric family kind, mirrored in the `# TYPE` exposition line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleKind {
+    /// Monotonically increasing count.
+    Counter,
+    /// Point-in-time value.
+    Gauge,
+}
+
+impl SampleKind {
+    /// Prometheus spelling of the kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SampleKind::Counter => "counter",
+            SampleKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One exported metric value. `name` may carry a `{label="v"}` suffix,
+/// emitted verbatim; the `# TYPE` line uses the base name before `{`.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Metric name, optionally with a label set suffix.
+    pub name: String,
+    /// Counter or gauge.
+    pub kind: SampleKind,
+    /// Current value.
+    pub value: f64,
+}
+
+/// Render spans as Chrome `trace_event` JSON: one complete (`ph: "X"`)
+/// event per span, timestamps/durations in µs, span ids and parents in
+/// `args`. Load the output in Perfetto or `chrome://tracing`.
+pub fn chrome_trace(spans: &[SpanRecord]) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let parent = match s.parent {
+            Some(p) => format!(",\"parent\":{p}"),
+            None => String::new(),
+        };
+        out.push_str(&format!(
+            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"id\":{}{}}}}}",
+            json_str(&s.name),
+            json_str(s.cat),
+            s.start_us,
+            s.dur_us,
+            s.tid,
+            s.id,
+            parent,
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render samples in the Prometheus text exposition format: a `# TYPE`
+/// line per metric family (base name before any `{`), then one
+/// `name value` line per sample.
+pub fn prometheus_text(samples: &[Sample]) -> String {
+    let mut out = String::new();
+    let mut typed: BTreeSet<&str> = BTreeSet::new();
+    for s in samples {
+        let base = s.name.split('{').next().unwrap_or(&s.name);
+        if typed.insert(base) {
+            out.push_str(&format!("# TYPE {base} {}\n", s.kind.as_str()));
+        }
+        out.push_str(&format!("{} {}\n", s.name, s.value));
+    }
+    out
+}
+
+/// Parse a Prometheus text exposition back into `(name, value)` pairs
+/// (comment and blank lines skipped). The inverse of
+/// [`prometheus_text`] up to value formatting.
+pub fn parse_prometheus(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(char::is_whitespace)
+            .ok_or_else(|| format!("line {}: no value: {line:?}", lineno + 1))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|e| format!("line {}: bad value {value:?}: {e}", lineno + 1))?;
+        out.push((name.trim().to_string(), value));
+    }
+    Ok(out)
+}
+
+/// Minimal JSON value, for schema-checking exported traces without a
+/// serde dependency.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (parsed as f64).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object, insertion-ordered.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (recursive descent; enough of RFC 8259 for
+/// trace files: no depth limit, `\uXXXX` decoded, numbers via `f64`).
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at offset {}", self.i)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number {text:?} at offset {start}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                    .map_err(|e| e.to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| format!("bad \\u escape {hex:?}: {e}"))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Copy one UTF-8 scalar (strings arrive validated).
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|e| e.to_string())?;
+                    let ch = rest.chars().next().ok_or("empty string tail")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                other => return Err(format!("expected , or ] at offset {}: {other:?}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                other => return Err(format!("expected , or }} at offset {}: {other:?}", self.i)),
+            }
+        }
+    }
+}
+
+/// One row of a per-span-name aggregation (the `tlc profile` breakdown
+/// table).
+#[derive(Debug, Clone)]
+pub struct RollupRow {
+    /// Span name.
+    pub name: String,
+    /// How many spans closed under this name.
+    pub count: u64,
+    /// Summed wall time, µs.
+    pub total_us: u64,
+    /// Longest single span, µs.
+    pub max_us: u64,
+}
+
+/// Aggregate spans by name, sorted by total time descending (ties by
+/// name, so the table is deterministic).
+pub fn rollup(spans: &[SpanRecord]) -> Vec<RollupRow> {
+    let mut by_name: std::collections::BTreeMap<&str, RollupRow> =
+        std::collections::BTreeMap::new();
+    for s in spans {
+        let row = by_name.entry(&s.name).or_insert_with(|| RollupRow {
+            name: s.name.clone(),
+            count: 0,
+            total_us: 0,
+            max_us: 0,
+        });
+        row.count += 1;
+        row.total_us = row.total_us.saturating_add(s.dur_us);
+        row.max_us = row.max_us.max(s.dur_us);
+    }
+    let mut rows: Vec<RollupRow> = by_name.into_values().collect();
+    rows.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.name.cmp(&b.name)));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, parent: Option<u64>, id: u64, start: u64, dur: u64) -> SpanRecord {
+        SpanRecord {
+            name: name.into(),
+            cat: "test",
+            id,
+            parent,
+            tid: 1,
+            start_us: start,
+            dur_us: dur,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_back() {
+        let spans =
+            vec![span("outer \"x\"", None, 1, 0, 100), span("inner", Some(1), 2, 10, 50)];
+        let doc = parse_json(&chrome_trace(&spans)).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("name").and_then(Json::as_str), Some("outer \"x\""));
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(events[1].get("dur").and_then(Json::as_f64), Some(50.0));
+        let args = events[1].get("args").expect("args");
+        assert_eq!(args.get("parent").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn prometheus_roundtrip() {
+        let samples = vec![
+            Sample { name: "a_total".into(), kind: SampleKind::Counter, value: 3.0 },
+            Sample {
+                name: "depth{shard=\"0\"}".into(),
+                kind: SampleKind::Gauge,
+                value: 2.5,
+            },
+            Sample {
+                name: "depth{shard=\"1\"}".into(),
+                kind: SampleKind::Gauge,
+                value: 4.0,
+            },
+        ];
+        let text = prometheus_text(&samples);
+        // One TYPE line per family, not per labeled sample.
+        assert_eq!(text.matches("# TYPE depth gauge").count(), 1);
+        let parsed = parse_prometheus(&text).expect("parses");
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[1], ("depth{shard=\"0\"}".to_string(), 2.5));
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let v = parse_json(r#"{"a":[1,-2.5e1,"xA\n"],"b":{"c":null,"d":true}}"#)
+            .expect("parses");
+        let arr = v.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[1].as_f64(), Some(-25.0));
+        assert_eq!(arr[2].as_str(), Some("xA\n"));
+        assert_eq!(v.get("b").unwrap().get("c"), Some(&Json::Null));
+        assert!(parse_json("{\"a\":1,}").is_err());
+        assert!(parse_json("[1 2]").is_err());
+    }
+
+    #[test]
+    fn rollup_aggregates_and_sorts() {
+        let spans = vec![
+            span("b", None, 1, 0, 10),
+            span("a", None, 2, 0, 5),
+            span("b", None, 3, 20, 30),
+        ];
+        let rows = rollup(&spans);
+        assert_eq!(rows[0].name, "b");
+        assert_eq!(rows[0].count, 2);
+        assert_eq!(rows[0].total_us, 40);
+        assert_eq!(rows[0].max_us, 30);
+        assert_eq!(rows[1].name, "a");
+    }
+}

@@ -1,0 +1,66 @@
+//! Unified observability: structured spans, op-level engine profiling
+//! and exportable metrics across the pipeline, the compiled TL engine
+//! and the serving coordinator (DESIGN.md §11).
+//!
+//! Three instruments, one collector:
+//!
+//! * **Spans** ([`span`], [`span_cat`], [`span_under`]) — RAII guards
+//!   with parent/child nesting that works across `std::thread::scope`
+//!   workers via [`SpanCtx`]. The pipeline wraps each stage
+//!   (`pipeline.sketch` … `pipeline.translate`) in a span whose
+//!   [`SpanGuard::finish`] return value still populates
+//!   [`crate::pipeline::Timings`]; the serving coordinator emits the
+//!   request lifecycle (`serve.request`, `serve.plan`, `serve.admit`,
+//!   `serve.execute`, `serve.respond`).
+//! * **Counters and gauges** ([`counter`], [`gauge`]) — a registry of
+//!   relaxed atomics unifying the ad-hoc [`crate::coordinator::Metrics`]
+//!   fields with per-lane queue depths and KV-pool residency.
+//! * **Op profiles** ([`profile::OpProfile`]) — opt-in per-op-kind
+//!   wall-time/bytes attribution inside the compiled engine, aggregated
+//!   lock-free per worker, compared against [`crate::perfmodel::cost`]
+//!   in `tlc tune --report` and `tlc profile`.
+//!
+//! Exporters ([`export::chrome_trace`], [`export::prometheus_text`])
+//! serve Perfetto / `chrome://tracing` and Prometheus scrapes; `tlc
+//! serve --metrics-out --trace-out` and `tlc profile` write them.
+//!
+//! **Cost when disabled** (the default): opening a span is one
+//! `Instant::now()` and one relaxed atomic load; counters and gauges
+//! are single relaxed atomic ops; the engine's profiling mode is a
+//! separate entry point that normal execution never touches. Nothing
+//! allocates and nothing locks until [`set_enabled`]`(true)`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub mod collect;
+pub mod export;
+pub mod profile;
+pub mod span;
+
+pub use collect::{global, Collector, Counter, Gauge, SpanRecord};
+pub use profile::{OpKind, OpProfile};
+pub use span::{record_closed, span, span_cat, span_under, SpanCtx, SpanGuard};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on or off process-wide. Metrics handles keep
+/// working either way (they are plain atomics); only span *recording*
+/// is gated.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span recording on?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Counter handle from the global registry (created on first use).
+pub fn counter(name: &str) -> Counter {
+    global().counter(name)
+}
+
+/// Gauge handle from the global registry (created on first use).
+pub fn gauge(name: &str) -> Gauge {
+    global().gauge(name)
+}

@@ -1,0 +1,404 @@
+//! Per-op-kind engine profiling: wall time, touched bytes and call
+//! counts attributed to coarse op kinds (gather / load / store / GEMM /
+//! softmax / mask / epilogue) by the compiled TL engine's opt-in
+//! profiling mode, plus the modeled-share comparison against
+//! [`crate::perfmodel::cost`].
+//!
+//! Aggregation is lock-free by construction: each `std::thread::scope`
+//! worker owns a private [`OpProfile`] and the host [`OpProfile::merge`]s
+//! them after join — no atomics in the per-op hot path, just two
+//! `Instant::now()` calls around each executed op.
+//!
+//! The observed/modeled comparison is deliberately a comparison of
+//! **time shares**, not absolute times: the compiled engine runs on CPU
+//! while the cost model prices a GPU, so absolute seconds are
+//! incommensurable, but the *distribution* of time across op kinds is
+//! exactly what the model's per-term structure predicts and where its
+//! errors show up (DESIGN.md §11).
+
+use std::time::Duration;
+
+use crate::perfmodel::cost::{self, Schedule};
+use crate::perfmodel::gpu::GpuArch;
+use crate::sketch::spec::{KvLayout, OpSpec};
+
+/// Coarse op kind the engine attributes time and bytes to. The mapping
+/// from concrete engine ops lives next to the engine
+/// (`verify::compiled`); softmax covers the row-stats family
+/// (exp / row-max / row-sum / online and local softmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// Block-table-indexed page gather loads (paged KV).
+    Gather,
+    /// Contiguous tile loads.
+    Load,
+    /// Tile stores to the output.
+    Store,
+    /// Matrix multiplies (including their fused epilogues).
+    Gemm,
+    /// Softmax family: exp, row-max/row-sum, online/local softmax.
+    Softmax,
+    /// Causal and sliding-window masking.
+    Mask,
+    /// Everything else: zeroing, moves, pointwise maps, rescales.
+    Epilogue,
+}
+
+/// Number of op kinds (array dimension of [`OpProfile`]).
+pub const N_KINDS: usize = 7;
+
+impl OpKind {
+    /// All kinds, in display order.
+    pub const ALL: [OpKind; N_KINDS] = [
+        OpKind::Gather,
+        OpKind::Load,
+        OpKind::Store,
+        OpKind::Gemm,
+        OpKind::Softmax,
+        OpKind::Mask,
+        OpKind::Epilogue,
+    ];
+
+    /// Lower-case display name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::Gather => "gather",
+            OpKind::Load => "load",
+            OpKind::Store => "store",
+            OpKind::Gemm => "gemm",
+            OpKind::Softmax => "softmax",
+            OpKind::Mask => "mask",
+            OpKind::Epilogue => "epilogue",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            OpKind::Gather => 0,
+            OpKind::Load => 1,
+            OpKind::Store => 2,
+            OpKind::Gemm => 3,
+            OpKind::Softmax => 4,
+            OpKind::Mask => 5,
+            OpKind::Epilogue => 6,
+        }
+    }
+}
+
+/// Accumulated per-kind wall time (ns), touched bytes and op counts
+/// for one profiled engine run (or one worker's share of it).
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    ns: [u64; N_KINDS],
+    bytes: [u64; N_KINDS],
+    count: [u64; N_KINDS],
+    blocks: u64,
+}
+
+impl OpProfile {
+    /// Empty profile.
+    pub fn new() -> Self {
+        OpProfile {
+            ns: [0; N_KINDS],
+            bytes: [0; N_KINDS],
+            count: [0; N_KINDS],
+            blocks: 0,
+        }
+    }
+
+    /// Attribute one executed op.
+    pub fn record(&mut self, kind: OpKind, elapsed: Duration, bytes: u64) {
+        let i = kind.idx();
+        self.ns[i] = self.ns[i]
+            .saturating_add(u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX));
+        self.bytes[i] = self.bytes[i].saturating_add(bytes);
+        self.count[i] += 1;
+    }
+
+    /// Count one executed q-block.
+    pub fn add_block(&mut self) {
+        self.blocks += 1;
+    }
+
+    /// Fold another profile (typically a worker's) into this one.
+    pub fn merge(&mut self, other: &OpProfile) {
+        for i in 0..N_KINDS {
+            self.ns[i] = self.ns[i].saturating_add(other.ns[i]);
+            self.bytes[i] = self.bytes[i].saturating_add(other.bytes[i]);
+            self.count[i] += other.count[i];
+        }
+        self.blocks += other.blocks;
+    }
+
+    /// Summed wall time across all kinds, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// Wall time attributed to `kind`, ns.
+    pub fn ns_of(&self, kind: OpKind) -> u64 {
+        self.ns[kind.idx()]
+    }
+
+    /// Bytes attributed to `kind`.
+    pub fn bytes_of(&self, kind: OpKind) -> u64 {
+        self.bytes[kind.idx()]
+    }
+
+    /// Ops attributed to `kind`.
+    pub fn count_of(&self, kind: OpKind) -> u64 {
+        self.count[kind.idx()]
+    }
+
+    /// Q-blocks executed.
+    pub fn blocks(&self) -> u64 {
+        self.blocks
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count.iter().all(|&c| c == 0)
+    }
+
+    /// Render the per-kind breakdown as an aligned text table.
+    pub fn table(&self) -> String {
+        let total = self.total_ns().max(1) as f64;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "  {:<10} {:>10} {:>12} {:>7} {:>12} {:>10}\n",
+            "op-kind", "calls", "time", "share", "bytes", "GB/s"
+        ));
+        for kind in OpKind::ALL {
+            if self.count_of(kind) == 0 {
+                continue;
+            }
+            let ns = self.ns_of(kind);
+            let bytes = self.bytes_of(kind);
+            let gbs = if ns > 0 { bytes as f64 / ns as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "  {:<10} {:>10} {:>12} {:>6.1}% {:>12} {:>10.2}\n",
+                kind.as_str(),
+                self.count_of(kind),
+                fmt_ns(ns),
+                100.0 * ns as f64 / total,
+                bytes,
+                gbs,
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<10} {:>10} {:>12} {:>6.1}%   ({} blocks)\n",
+            "total",
+            self.count.iter().sum::<u64>(),
+            fmt_ns(self.total_ns()),
+            100.0,
+            self.blocks,
+        ));
+        out
+    }
+}
+
+impl Default for OpProfile {
+    fn default() -> Self {
+        OpProfile::new()
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Modeled wall-time per op kind (seconds on the modeled GPU) for one
+/// (spec, arch, schedule) cell, decomposed from the same terms
+/// [`cost::estimate`] prices: tensor-core GEMM time, CUDA-core softmax
+/// and mask time, and DRAM stream time split across Q/output
+/// (load/store) and the KV stream (gather under a paged layout, load
+/// otherwise). Kinds the model prices at zero are omitted.
+pub fn modeled_kinds(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Vec<(OpKind, f64)> {
+    let est = cost::estimate(spec, arch, sched);
+    let bw = arch.mem_bw_gbs * 1e9;
+    let bh = (spec.batch * spec.num_q_heads) as f64;
+    let s = spec.seq_len as f64;
+    let kv = spec.kv_len as f64;
+    let el = spec.dtype.bytes() as f64;
+    let visited = if spec.causal && sched.causal_block_skip { 0.5 } else { 1.0 };
+    let score = bh * s * kv * visited;
+    let cuda = arch.cuda_tflops_f32 * 1e12;
+
+    let peak = if sched.tensor_core {
+        arch.tc_tflops(spec.dtype.bytes()) * 1e12
+    } else {
+        cuda
+    };
+    let t_gemm = spec.flops() / (peak * sched.mma_eff.max(1e-6));
+    // Softmax ops per visited score element, after pipeline overlap; the
+    // mask is priced separately (2 ops/elem when causal).
+    let t_softmax = 5.0 * score / cuda * (1.0 - sched.softmax_overlap);
+    let t_mask = if spec.causal { 2.0 * score / cuda } else { 0.0 };
+
+    let q_bytes = bh * s * spec.qk_dim() as f64 * el;
+    let o_bytes = bh * s * spec.v_head_dim as f64 * el;
+    let total_bytes = est.dram_gb * 1e9;
+    let kv_stream = (total_bytes - q_bytes - o_bytes).max(0.0);
+    let t_store = o_bytes / bw;
+    let (t_load, t_gather) = match spec.kv_layout {
+        KvLayout::Paged { .. } => (q_bytes / bw, kv_stream / bw),
+        _ => ((q_bytes + kv_stream) / bw, 0.0),
+    };
+    // Prologue/epilogue overhead, in units of KV-tile iterations.
+    let nkv = (kv * visited / sched.bn.max(1) as f64).max(1.0);
+    let t_epi = sched.c_epi / nkv * (t_gemm + t_softmax);
+
+    [
+        (OpKind::Gather, t_gather),
+        (OpKind::Load, t_load),
+        (OpKind::Store, t_store),
+        (OpKind::Gemm, t_gemm),
+        (OpKind::Softmax, t_softmax),
+        (OpKind::Mask, t_mask),
+        (OpKind::Epilogue, t_epi),
+    ]
+    .into_iter()
+    .filter(|&(_, t)| t > 0.0)
+    .collect()
+}
+
+/// How far the observed and modeled shares may drift (in absolute
+/// percentage points of total time) before a kind is flagged.
+pub const DISAGREE_POINTS: f64 = 15.0;
+
+/// Render the op-level observed-vs-modeled disagreement table: one row
+/// per kind carrying the observed (CPU engine) and modeled (GPU cost
+/// model) shares of total time. Shares, not absolute times, are
+/// compared — see the module docs. A kind is flagged `DISAGREE` when
+/// the shares drift more than [`DISAGREE_POINTS`] points and either
+/// side is above 5%.
+pub fn disagreement_table(observed: &OpProfile, modeled: &[(OpKind, f64)]) -> String {
+    let obs_total = observed.total_ns().max(1) as f64;
+    let mod_total: f64 = modeled.iter().map(|&(_, t)| t).sum();
+    let mod_total = if mod_total > 0.0 { mod_total } else { 1.0 };
+    let mod_share = |kind: OpKind| -> f64 {
+        modeled
+            .iter()
+            .find(|&&(k, _)| k == kind)
+            .map(|&(_, t)| 100.0 * t / mod_total)
+            .unwrap_or(0.0)
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "  {:<10} {:>12} {:>8} {:>8} {:>8}  verdict\n",
+        "op-kind", "observed", "obs%", "model%", "drift"
+    ));
+    for kind in OpKind::ALL {
+        let obs_ns = observed.ns_of(kind);
+        let obs_pct = 100.0 * obs_ns as f64 / obs_total;
+        let mod_pct = mod_share(kind);
+        if obs_ns == 0 && mod_pct == 0.0 {
+            continue;
+        }
+        let drift = obs_pct - mod_pct;
+        let verdict = if drift.abs() > DISAGREE_POINTS && obs_pct.max(mod_pct) > 5.0 {
+            "DISAGREE"
+        } else {
+            "agree"
+        };
+        out.push_str(&format!(
+            "  {:<10} {:>12} {:>7.1}% {:>7.1}% {:>+7.1}p  {verdict}\n",
+            kind.as_str(),
+            fmt_ns(obs_ns),
+            obs_pct,
+            mod_pct,
+            drift,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::schedules;
+    use crate::sketch::spec::AttnVariant;
+
+    #[test]
+    fn record_and_merge_accumulate() {
+        let mut a = OpProfile::new();
+        a.record(OpKind::Gemm, Duration::from_micros(10), 4096);
+        a.record(OpKind::Gemm, Duration::from_micros(5), 2048);
+        a.add_block();
+        let mut b = OpProfile::new();
+        b.record(OpKind::Softmax, Duration::from_micros(3), 512);
+        b.add_block();
+        a.merge(&b);
+        assert_eq!(a.count_of(OpKind::Gemm), 2);
+        assert_eq!(a.ns_of(OpKind::Gemm), 15_000);
+        assert_eq!(a.bytes_of(OpKind::Gemm), 6144);
+        assert_eq!(a.count_of(OpKind::Softmax), 1);
+        assert_eq!(a.blocks(), 2);
+        assert_eq!(a.total_ns(), 18_000);
+        assert!(!a.is_empty());
+        let t = a.table();
+        assert!(t.contains("gemm"), "{t}");
+        assert!(t.contains("softmax"), "{t}");
+    }
+
+    #[test]
+    fn record_saturates_on_pathological_durations() {
+        let mut p = OpProfile::new();
+        p.record(OpKind::Load, Duration::MAX, u64::MAX);
+        p.record(OpKind::Load, Duration::from_nanos(1), 1);
+        assert_eq!(p.ns_of(OpKind::Load), u64::MAX);
+        assert_eq!(p.bytes_of(OpKind::Load), u64::MAX);
+        assert_eq!(p.count_of(OpKind::Load), 2);
+    }
+
+    #[test]
+    fn modeled_kinds_cover_the_fused_terms() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, spec.dtype);
+        let kinds = modeled_kinds(&spec, &arch, &sched);
+        let names: Vec<OpKind> = kinds.iter().map(|&(k, _)| k).collect();
+        assert!(names.contains(&OpKind::Gemm));
+        assert!(names.contains(&OpKind::Softmax));
+        assert!(names.contains(&OpKind::Mask), "causal spec must price the mask");
+        assert!(names.contains(&OpKind::Load));
+        assert!(names.contains(&OpKind::Store));
+        assert!(!names.contains(&OpKind::Gather), "contiguous spec has no gather");
+        assert!(kinds.iter().all(|&(_, t)| t.is_finite() && t > 0.0));
+    }
+
+    #[test]
+    fn paged_spec_moves_kv_stream_to_gather() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_layout(KvLayout::Paged { page_size: 16 });
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, spec.dtype);
+        let kinds = modeled_kinds(&spec, &arch, &sched);
+        let of = |k: OpKind| kinds.iter().find(|&&(x, _)| x == k).map(|&(_, t)| t);
+        let gather = of(OpKind::Gather).expect("paged spec prices the gather");
+        assert!(gather > of(OpKind::Load).unwrap_or(0.0), "KV stream dominates Q load");
+    }
+
+    #[test]
+    fn disagreement_table_flags_large_drift() {
+        let mut obs = OpProfile::new();
+        // Observed: all time in softmax.
+        obs.record(OpKind::Softmax, Duration::from_millis(10), 1024);
+        // Modeled: all time in GEMM.
+        let modeled = vec![(OpKind::Gemm, 1.0)];
+        let t = disagreement_table(&obs, &modeled);
+        assert!(t.contains("DISAGREE"), "{t}");
+        // Concordant shares stay quiet.
+        let modeled = vec![(OpKind::Softmax, 1.0)];
+        let t = disagreement_table(&obs, &modeled);
+        assert!(!t.contains("DISAGREE"), "{t}");
+    }
+}

@@ -1,0 +1,153 @@
+//! RAII span guards with parent/child nesting — including across
+//! `std::thread::scope` workers.
+//!
+//! Within one thread, nesting is implicit: a thread-local stack of open
+//! span ids makes the innermost open span the parent of the next one.
+//! Across threads the stack cannot help (each worker starts with an
+//! empty stack), so a guard exposes a [`SpanCtx`] — a `Copy` capture of
+//! its id — that the host passes into worker closures and the worker
+//! hands to [`span_under`] to adopt the host span as parent.
+//!
+//! Cost when tracing is disabled: a guard is one `Instant::now()` (the
+//! start time is still needed because [`SpanGuard::finish`] doubles as
+//! the stage timer for `pipeline::Timings`) plus one relaxed atomic
+//! load; nothing is allocated and nothing touches the collector.
+
+use std::cell::RefCell;
+use std::time::{Duration, Instant};
+
+use super::collect::{self, SpanRecord};
+use super::enabled;
+
+thread_local! {
+    static STACK: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+}
+
+/// A `Copy` capture of an open span's identity, for parenting spans
+/// opened on *other* threads under it. [`SpanCtx::NONE`] is inert.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanCtx(u64);
+
+impl SpanCtx {
+    /// The inert context: spans opened under it get no parent.
+    pub const NONE: SpanCtx = SpanCtx(0);
+}
+
+/// An open span. Closes (and records, when tracing is enabled) on drop
+/// or explicitly via [`SpanGuard::finish`], which also returns the
+/// elapsed wall time so call sites can keep feeding `Timings`.
+#[derive(Debug)]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    id: u64,
+    parent: Option<u64>,
+    start: Instant,
+    active: bool,
+}
+
+/// Open a span in the default category. Equivalent to
+/// `span_cat(name, "span")`.
+pub fn span(name: &'static str) -> SpanGuard {
+    span_cat(name, "span")
+}
+
+/// Open a span under category `cat`, parented to the innermost span
+/// already open on this thread (if any).
+pub fn span_cat(name: &'static str, cat: &'static str) -> SpanGuard {
+    open(name, cat, None)
+}
+
+/// Open a span parented to `ctx` — the cross-thread form. If this
+/// thread already has an open span, that inner span wins as parent
+/// (it is necessarily a descendant of `ctx`'s thread-crossing point).
+pub fn span_under(name: &'static str, cat: &'static str, ctx: SpanCtx) -> SpanGuard {
+    open(name, cat, if ctx.0 == 0 { None } else { Some(ctx.0) })
+}
+
+fn open(name: &'static str, cat: &'static str, cross: Option<u64>) -> SpanGuard {
+    let start = Instant::now();
+    if !enabled() {
+        return SpanGuard { name, cat, id: 0, parent: None, start, active: false };
+    }
+    let id = collect::global().next_span_id();
+    let parent = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let local = s.last().copied();
+        s.push(id);
+        local.or(cross)
+    });
+    SpanGuard { name, cat, id, parent, start, active: true }
+}
+
+impl SpanGuard {
+    /// Capture this span's identity for parenting worker-thread spans.
+    pub fn ctx(&self) -> SpanCtx {
+        SpanCtx(self.id)
+    }
+
+    /// Close the span now and return its elapsed wall time. The return
+    /// value is measured whether or not tracing is enabled, so stage
+    /// timers (`pipeline::Timings`) read it unconditionally.
+    pub fn finish(mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.close(d);
+        d
+    }
+
+    fn close(&mut self, elapsed: Duration) {
+        if !self.active {
+            return;
+        }
+        self.active = false;
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // Guards are dropped innermost-first in well-formed code;
+            // tolerate out-of-order drops by removing wherever we are.
+            if s.last() == Some(&self.id) {
+                s.pop();
+            } else if let Some(pos) = s.iter().rposition(|&x| x == self.id) {
+                s.remove(pos);
+            }
+        });
+        let c = collect::global();
+        c.record(SpanRecord {
+            name: self.name.to_string(),
+            cat: self.cat,
+            id: self.id,
+            parent: self.parent,
+            tid: collect::current_tid(),
+            start_us: c.us_since_origin(self.start),
+            dur_us: u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX),
+        });
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.active {
+            let d = self.start.elapsed();
+            self.close(d);
+        }
+    }
+}
+
+/// Record an interval that was measured out-of-band as a closed span
+/// (no RAII, no nesting stack). Used where the start instant predates
+/// any guard — e.g. a serving request's `enqueued` timestamp turned
+/// into a `serve.request` span at reply time. No-op when disabled.
+pub fn record_closed(name: &'static str, cat: &'static str, start: Instant, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    let c = collect::global();
+    c.record(SpanRecord {
+        name: name.to_string(),
+        cat,
+        id: c.next_span_id(),
+        parent: None,
+        tid: collect::current_tid(),
+        start_us: c.us_since_origin(start),
+        dur_us: u64::try_from(dur.as_micros()).unwrap_or(u64::MAX),
+    });
+}

@@ -7,9 +7,14 @@
 //!
 //! Every run records per-stage wall-clock so the Table-4 development-cost
 //! comparison ("months → minutes"; here milliseconds) is measured, not
-//! asserted.
+//! asserted. Each stage runs under an [`crate::obs`] span
+//! (`pipeline.sketch` … `pipeline.translate`); the span's
+//! [`crate::obs::SpanGuard::finish`] return value is the stage timer, so
+//! [`Timings`] stays populated whether or not tracing is enabled.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::obs;
 
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::profiles::LlmProfile;
@@ -129,9 +134,9 @@ pub fn run_tuned(
     target: Target,
     tuner: &mut crate::autotune::Autotuner,
 ) -> Result<PipelineResult, PipelineError> {
-    let t0 = Instant::now();
+    let sp = obs::span_cat("pipeline.search", "pipeline");
     let tune = tuner.tune(spec, arch, target);
-    let search = t0.elapsed();
+    let search = sp.finish();
     run_inner(spec, arch, profile, target, Some((tune, search)))
 }
 
@@ -143,13 +148,13 @@ fn run_inner(
     tuned: Option<(crate::autotune::TuneResult, Duration)>,
 ) -> Result<PipelineResult, PipelineError> {
     let backward = spec.direction == Direction::Backward;
-    let t0 = Instant::now();
+    let sp = obs::span_cat("pipeline.sketch", "pipeline");
     let sketch = sketch::generate_sketch(spec);
     let bwd_sketches =
         if backward { sketch::backward_sketches(spec) } else { Vec::new() };
-    let t_sketch = t0.elapsed();
+    let t_sketch = sp.finish();
 
-    let t0 = Instant::now();
+    let sp = obs::span_cat("pipeline.reason", "pipeline");
     let (tune, t_search) = match tuned {
         Some((tune, search)) => (Some(tune), search),
         None => (None, Duration::ZERO),
@@ -172,11 +177,11 @@ fn run_inner(
         .find(|(g, _)| *g == GradTarget::DQ)
         .map(|(_, r)| r.clone())
         .unwrap_or_else(|| reason_one(&sketch));
-    let t_reason = t0.elapsed();
+    let t_reason = sp.finish();
 
     // Verify: the forward program, or every program of the backward
     // bundle (the report kept is the worst-diff one).
-    let t0 = Instant::now();
+    let sp = obs::span_cat("pipeline.verify", "pipeline");
     let mut report = verify::verify_program(&reasoned.program, spec.causal, 0xC0FFEE);
     for (g, r) in &bwd_parts {
         if *g == GradTarget::DQ {
@@ -192,7 +197,7 @@ fn run_inner(
             report = part_report;
         }
     }
-    let t_verify = t0.elapsed();
+    let t_verify = sp.finish();
 
     if !report.passed {
         return Err(PipelineError::VerifyFailed(report));
@@ -201,7 +206,7 @@ fn run_inner(
         return Err(PipelineError::CannotTranslate(profile.name));
     }
 
-    let t0 = Instant::now();
+    let sp = obs::span_cat("pipeline.translate", "pipeline");
     let backend: &dyn Backend = match target {
         Target::Pallas => &PallasBackend,
         Target::Cute => &CuteBackend,
@@ -211,7 +216,7 @@ fn run_inner(
     } else {
         backend.emit(&reasoned, spec, arch).map_err(PipelineError::Translate)?
     };
-    let t_translate = t0.elapsed();
+    let t_translate = sp.finish();
 
     Ok(PipelineResult {
         sketch,

@@ -34,7 +34,9 @@
 //! sweep on exactly that property.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
+use crate::obs::profile::{OpKind, OpProfile};
 use crate::tl::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
 use crate::tl::expr::{BinOp, Expr};
 use crate::tl::types::MemSpace;
@@ -1139,6 +1141,51 @@ impl CompiledBlockProgram {
         tables: &[&[i64]],
         arena: &mut TileArena,
     ) -> Result<(), String> {
+        self.execute_with(inputs, out, out_row0, block_idx, scalars, tables, arena, &mut None)
+    }
+
+    /// [`Self::execute_block_tables`] in the opt-in profiling mode: the
+    /// wall time and touched bytes of every executed op are attributed
+    /// to its [`OpKind`] in `prof`, plus one block tick. The unprofiled
+    /// entry points share this code path with `prof = None`, where the
+    /// residue is one branch per op — the hot loop is otherwise
+    /// untouched (overhead gated by `benches/obs.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_block_tables_profiled(
+        &self,
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        out_row0: usize,
+        block_idx: i64,
+        scalars: &[f32],
+        tables: &[&[i64]],
+        arena: &mut TileArena,
+        prof: &mut OpProfile,
+    ) -> Result<(), String> {
+        self.execute_with(
+            inputs,
+            out,
+            out_row0,
+            block_idx,
+            scalars,
+            tables,
+            arena,
+            &mut Some(prof),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute_with(
+        &self,
+        inputs: &[&[f32]],
+        out: &mut [f32],
+        out_row0: usize,
+        block_idx: i64,
+        scalars: &[f32],
+        tables: &[&[i64]],
+        arena: &mut TileArena,
+        prof: &mut Option<&mut OpProfile>,
+    ) -> Result<(), String> {
         if inputs.len() != self.inputs.len() {
             return Err(format!(
                 "expected {} input globals, got {}",
@@ -1159,7 +1206,10 @@ impl CompiledBlockProgram {
         }
         debug_assert_eq!(arena.bufs.len(), self.slots.len());
         arena.vars[VAR_BLOCK_IDX] = block_idx;
-        self.run(&self.ops, inputs, out, out_row0, scalars, tables, arena)
+        if let Some(p) = prof.as_deref_mut() {
+            p.add_block();
+        }
+        self.run(&self.ops, inputs, out, out_row0, scalars, tables, arena, prof)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1172,8 +1222,10 @@ impl CompiledBlockProgram {
         scalars: &[f32],
         tables: &[&[i64]],
         arena: &mut TileArena,
+        prof: &mut Option<&mut OpProfile>,
     ) -> Result<(), String> {
         for op in ops {
+            let t0 = if prof.is_some() { Some(Instant::now()) } else { None };
             match op {
                 Op::Zero { slot, len } => arena.bufs[*slot][..*len].fill(0.0),
                 Op::Load { global, slot, rows, cols, l } => {
@@ -1540,18 +1592,76 @@ impl CompiledBlockProgram {
                     let hi = end.eval(&arena.vars)?;
                     for i in lo..hi {
                         arena.vars[*var] = i;
-                        self.run(body, inputs, out, out_row0, scalars, tables, arena)?;
+                        self.run(body, inputs, out, out_row0, scalars, tables, arena, prof)?;
                     }
                 }
                 Op::If { lhs, cmp, rhs, body } => {
                     if cmp.eval(lhs.eval(&arena.vars)?, rhs.eval(&arena.vars)?) {
-                        self.run(body, inputs, out, out_row0, scalars, tables, arena)?;
+                        self.run(body, inputs, out, out_row0, scalars, tables, arena, prof)?;
                     }
+                }
+            }
+            if let (Some(t0), Some(p)) = (t0, prof.as_deref_mut()) {
+                // For/If recurse with their leaf ops timed individually;
+                // recording the wrapper too would double-count the body.
+                if !matches!(op, Op::For { .. } | Op::If { .. }) {
+                    p.record(op_kind(op), t0.elapsed(), op_bytes(op));
                 }
             }
         }
         Ok(())
     }
+}
+
+/// Profiling [`OpKind`] of a concrete engine op. Fused GEMM epilogues
+/// count as GEMM time (they run inside the GEMM's pass over the tile);
+/// the row-stats family (exp, row-max/row-sum, online/local softmax)
+/// all report as softmax.
+fn op_kind(op: &Op) -> OpKind {
+    match op {
+        Op::LoadGather { .. } => OpKind::Gather,
+        Op::Load { .. } => OpKind::Load,
+        Op::Store { .. } => OpKind::Store,
+        Op::Gemm { .. } => OpKind::Gemm,
+        Op::Exp { .. }
+        | Op::RowMax { .. }
+        | Op::RowSum { .. }
+        | Op::OnlineSoftmax { .. }
+        | Op::LocalSoftmax { .. } => OpKind::Softmax,
+        Op::CausalMask { .. } | Op::WindowMask { .. } => OpKind::Mask,
+        Op::Zero { .. }
+        | Op::Move { .. }
+        | Op::MapScalar { .. }
+        | Op::MapBroadcast { .. }
+        | Op::MapElem { .. }
+        | Op::For { .. }
+        | Op::If { .. } => OpKind::Epilogue,
+    }
+}
+
+/// Bytes touched by one execution of `op`: tile elements read plus
+/// written, 4 bytes per f32. This is the model-facing traffic
+/// attribution (what [`crate::obs::profile`] compares against the cost
+/// model's DRAM terms), not a cache simulation.
+fn op_bytes(op: &Op) -> u64 {
+    let elems = match op {
+        Op::Zero { len, .. } => *len,
+        Op::Load { rows, cols, .. }
+        | Op::LoadGather { rows, cols, .. }
+        | Op::Store { rows, cols, .. } => rows * cols,
+        Op::Move { len, .. } => 2 * len,
+        Op::Gemm { m, n, k, .. } => m * k + k * n + m * n,
+        Op::MapScalar { len, .. } | Op::Exp { len, .. } => 2 * len,
+        Op::MapElem { len, .. } => 3 * len,
+        Op::MapBroadcast { rows, cols, .. } => 2 * rows * cols + rows,
+        Op::RowMax { rows, cols, .. } | Op::RowSum { rows, cols, .. } => rows * cols + rows,
+        Op::CausalMask { rows, cols, .. } | Op::WindowMask { rows, cols, .. } => rows * cols,
+        Op::OnlineSoftmax { rows, cols, .. } | Op::LocalSoftmax { rows, cols, .. } => {
+            3 * rows * cols
+        }
+        Op::For { .. } | Op::If { .. } => 0,
+    };
+    elems as u64 * 4
 }
 
 #[cfg(test)]
@@ -1677,5 +1787,60 @@ mod tests {
             c.execute_block(&ins, &mut o2, 0, b as i64, &[0.125], &mut arena).unwrap();
         }
         assert_eq!(o1, o2, "arena reuse must not change results");
+    }
+
+    #[test]
+    fn profiled_execution_is_bit_identical_and_attributes_ops() {
+        let p = generated_program();
+        let c = compile(&p).expect("compile");
+        let params = p.params();
+        let (bm, seq) = (params["BM"] as usize, params["seq_len"] as usize);
+        let hd = params["HeadDim"] as usize;
+        let vd = params["VDim"] as usize;
+        let q = crate::verify::tensor::Tensor2::randn(seq, hd, 1);
+        let k = crate::verify::tensor::Tensor2::randn(seq, hd, 2);
+        let v = crate::verify::tensor::Tensor2::randn(seq, vd, 3);
+        let ins: Vec<&[f32]> = c
+            .inputs()
+            .iter()
+            .map(|g| match g.name.as_str() {
+                "Q" => q.data.as_slice(),
+                "K" => k.data.as_slice(),
+                _ => v.data.as_slice(),
+            })
+            .collect();
+        let mut arena = c.new_arena();
+        let mut plain = vec![0.0f32; seq * vd];
+        let mut profiled = vec![0.0f32; seq * vd];
+        let mut prof = OpProfile::new();
+        for b in 0..seq / bm {
+            c.execute_block(&ins, &mut plain, 0, b as i64, &[0.125], &mut arena).unwrap();
+        }
+        for b in 0..seq / bm {
+            c.execute_block_tables_profiled(
+                &ins,
+                &mut profiled,
+                0,
+                b as i64,
+                &[0.125],
+                &[],
+                &mut arena,
+                &mut prof,
+            )
+            .unwrap();
+        }
+        assert_eq!(plain, profiled, "profiling must not perturb the numerics");
+        assert_eq!(prof.blocks() as usize, seq / bm);
+        // The causal attention program must attribute work to the three
+        // load streams, the two GEMMs and the softmax family; the scale
+        // and causal mask fused into the score GEMM's epilogue.
+        assert!(prof.count_of(OpKind::Load) > 0, "loads attributed");
+        assert!(prof.count_of(OpKind::Gemm) > 0, "GEMMs attributed");
+        assert!(prof.count_of(OpKind::Softmax) > 0, "softmax attributed");
+        assert!(prof.count_of(OpKind::Store) > 0, "stores attributed");
+        assert_eq!(prof.count_of(OpKind::Gather), 0, "contiguous program gathers nothing");
+        assert!(prof.bytes_of(OpKind::Gemm) > 0);
+        // Every op carries a timestamp pair, so total time is nonzero.
+        assert!(prof.total_ns() > 0);
     }
 }

@@ -18,9 +18,16 @@
 //! so the output buffer is split into disjoint `&mut` chunks before the
 //! workers start. No locks, no atomics, and the result cannot depend on
 //! scheduling: worker count 1 and N produce the same bits.
+//!
+//! Observability: every sweep opens an `engine.sweep` span (workers
+//! nest `engine.worker` under it via [`obs::SpanCtx`]), and the
+//! `*_profiled` variants run the engine's op-level profiling mode —
+//! same numerics, plus an [`OpProfile`] merged from per-worker local
+//! aggregates (DESIGN.md §11).
 
 use super::compiled;
 use super::tensor::Tensor2;
+use crate::obs::{self, OpProfile};
 use crate::tl::ast::TlProgram;
 
 /// Worker count for the parallel sweeps: the `QIMENG_THREADS`
@@ -78,6 +85,42 @@ pub fn run_attention_tables(
     tables: &std::collections::BTreeMap<String, Vec<i64>>,
     threads: usize,
 ) -> Result<Tensor2, String> {
+    run_attention_inner(program, q, k, v, scale, tables, threads, false).map(|(o, _)| o)
+}
+
+/// [`run_attention_tables`] in the engine's opt-in profiling mode:
+/// alongside the (bit-identical) output, return an
+/// [`OpProfile`] attributing wall time, call counts and touched bytes
+/// to each op kind across every block of the sweep. Workers aggregate
+/// into thread-local profiles (no locks, no atomics on the hot path)
+/// that are merged after the scoped join. `tlc tune --report` and
+/// `tlc profile` feed this to
+/// [`obs::profile::disagreement_table`](crate::obs::profile::disagreement_table).
+#[allow(clippy::too_many_arguments)]
+pub fn run_attention_profiled(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+) -> Result<(Tensor2, OpProfile), String> {
+    run_attention_inner(program, q, k, v, scale, tables, threads, true)
+        .map(|(o, p)| (o, p.unwrap_or_default()))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_attention_inner(
+    program: &TlProgram,
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+    profile: bool,
+) -> Result<(Tensor2, Option<OpProfile>), String> {
     let params = program.params();
     let need = |n: &str| -> Result<i64, String> {
         params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
@@ -100,7 +143,7 @@ pub fn run_attention_tables(
     named.insert("Q", q);
     named.insert("K", k);
     named.insert("V", v);
-    run_program_tables(program, &named, scale, tables, threads)
+    run_program_inner(program, &named, scale, tables, threads, profile)
 }
 
 /// Fully generic compiled driver: run a reasoned TL program whose global
@@ -117,6 +160,31 @@ pub fn run_program_tables(
     tables: &std::collections::BTreeMap<String, Vec<i64>>,
     threads: usize,
 ) -> Result<Tensor2, String> {
+    run_program_inner(program, named, scale, tables, threads, false).map(|(o, _)| o)
+}
+
+/// [`run_program_tables`] in profiling mode — the by-name analogue of
+/// [`run_attention_profiled`], for block programs with arbitrary global
+/// inputs (e.g. the backward bundle's dQ/dK/dV).
+pub fn run_program_tables_profiled(
+    program: &TlProgram,
+    named: &std::collections::BTreeMap<&str, &Tensor2>,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+) -> Result<(Tensor2, OpProfile), String> {
+    run_program_inner(program, named, scale, tables, threads, true)
+        .map(|(o, p)| (o, p.unwrap_or_default()))
+}
+
+fn run_program_inner(
+    program: &TlProgram,
+    named: &std::collections::BTreeMap<&str, &Tensor2>,
+    scale: f32,
+    tables: &std::collections::BTreeMap<String, Vec<i64>>,
+    threads: usize,
+    profile: bool,
+) -> Result<(Tensor2, Option<OpProfile>), String> {
     let params = program.params();
     let need = |n: &str| -> Result<i64, String> {
         params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
@@ -165,20 +233,35 @@ pub fn run_program_tables(
         && compiled.store_rows() == Some(rows_per_block);
     let bm = rows_per_block;
 
+    let sweep = obs::span_cat("engine.sweep", "engine");
     if !parallel {
+        let mut prof = if profile { Some(OpProfile::new()) } else { None };
         let mut arena = compiled.new_arena();
         for b in 0..nblocks {
-            compiled.execute_block_tables(
-                &ins,
-                &mut o.data,
-                0,
-                b as i64,
-                &[scale],
-                &tbls,
-                &mut arena,
-            )?;
+            match prof.as_mut() {
+                Some(p) => compiled.execute_block_tables_profiled(
+                    &ins,
+                    &mut o.data,
+                    0,
+                    b as i64,
+                    &[scale],
+                    &tbls,
+                    &mut arena,
+                    p,
+                )?,
+                None => compiled.execute_block_tables(
+                    &ins,
+                    &mut o.data,
+                    0,
+                    b as i64,
+                    &[scale],
+                    &tbls,
+                    &mut arena,
+                )?,
+            }
         }
-        return Ok(o);
+        sweep.finish();
+        return Ok((o, prof));
     }
 
     // Parallel sweep: split O into one disjoint `bm`-row chunk per
@@ -196,31 +279,55 @@ pub fn run_program_tables(
     let compiled_ref = &compiled;
     let ins_ref = &ins;
     let tbls_ref = &tbls;
+    let ctx = sweep.ctx();
+    let mut merged = if profile { Some(OpProfile::new()) } else { None };
     std::thread::scope(|scope| -> Result<(), String> {
         let mut handles = Vec::with_capacity(workers);
         for group in &mut buckets {
-            handles.push(scope.spawn(move || -> Result<(), String> {
+            handles.push(scope.spawn(move || -> Result<Option<OpProfile>, String> {
+                let _ws = obs::span_under("engine.worker", "engine", ctx);
+                // Each worker aggregates into its own local profile —
+                // no locks or shared atomics on the block loop — and
+                // hands it back through the join for the host to merge.
+                let mut prof = if profile { Some(OpProfile::new()) } else { None };
                 let mut arena = compiled_ref.new_arena();
                 for (b, rows) in group.iter_mut() {
-                    compiled_ref.execute_block_tables(
-                        ins_ref,
-                        rows,
-                        *b * bm,
-                        *b as i64,
-                        &[scale],
-                        tbls_ref,
-                        &mut arena,
-                    )?;
+                    match prof.as_mut() {
+                        Some(p) => compiled_ref.execute_block_tables_profiled(
+                            ins_ref,
+                            rows,
+                            *b * bm,
+                            *b as i64,
+                            &[scale],
+                            tbls_ref,
+                            &mut arena,
+                            p,
+                        )?,
+                        None => compiled_ref.execute_block_tables(
+                            ins_ref,
+                            rows,
+                            *b * bm,
+                            *b as i64,
+                            &[scale],
+                            tbls_ref,
+                            &mut arena,
+                        )?,
+                    }
                 }
-                Ok(())
+                Ok(prof)
             }));
         }
         for h in handles {
-            h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
+            let worker_prof =
+                h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
+            if let (Some(m), Some(p)) = (merged.as_mut(), worker_prof) {
+                m.merge(&p);
+            }
         }
         Ok(())
     })?;
-    Ok(o)
+    sweep.finish();
+    Ok((o, merged))
 }
 
 /// Run a closure over `tasks` indices on up to `threads` scoped
@@ -323,6 +430,29 @@ mod tests {
         let serial = run_attention_threads(&r.program, &q, &k, &v, 0.125, 1).unwrap();
         let wide = run_attention_threads(&r.program, &q, &k, &v, 0.125, 7).unwrap();
         assert_eq!(serial.data, wide.data);
+    }
+
+    #[test]
+    fn profiled_sweep_is_bit_identical_and_merges_worker_profiles() {
+        let spec = small_spec(true);
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let q = Tensor2::randn(spec.seq_len, 64, 40);
+        let k = Tensor2::randn(spec.kv_len, 64, 41);
+        let v = Tensor2::randn(spec.kv_len, 64, 42);
+        let no_tables = std::collections::BTreeMap::new();
+        let plain = run_attention_threads(&r.program, &q, &k, &v, 0.125, 3).unwrap();
+        let bm = r.program.params()["BM"] as usize;
+        for threads in [1, 4] {
+            let (got, prof) =
+                run_attention_profiled(&r.program, &q, &k, &v, 0.125, &no_tables, threads)
+                    .unwrap();
+            assert_eq!(got.data, plain.data, "threads={threads} diverged under profiling");
+            // The merged profile must cover the whole sweep regardless
+            // of how blocks were dealt to workers.
+            assert_eq!(prof.blocks() as usize, spec.seq_len / bm, "threads={threads}");
+            assert!(prof.count_of(crate::obs::OpKind::Gemm) > 0);
+            assert!(prof.total_ns() > 0);
+        }
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Integration tests for the observability layer (DESIGN.md §11):
+//! span-nesting invariants under random open/close/cross-thread scripts,
+//! Chrome-trace schema validity over a real three-layer run, and the
+//! Prometheus exposition round-trip.
+//!
+//! The span switch ([`qimeng::obs::set_enabled`]) and the collector are
+//! process-global, and Rust runs the tests of one binary concurrently —
+//! every test here serializes on [`OBS_LOCK`] and clears the collector
+//! before use. (Unit tests live in other binaries, so only this file
+//! contends.)
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use qimeng::coordinator::{self, Coordinator, ExecutorSpec, ServeConfig};
+use qimeng::obs::{self, export};
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::pipeline::{self, Target};
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+use qimeng::util::proptest::check_no_shrink;
+use qimeng::workload::request_stream_mixed;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Span names used by the random nesting scripts, one per depth.
+const NAMES: [&str; 5] = ["d0", "d1", "d2", "d3", "d4"];
+
+/// Interpret a script of small integers as a span tree: open a span,
+/// then per opcode recurse deeper (1), hop across a scoped thread via
+/// `SpanCtx` (2), do nothing (3), or close and return (0). Depth is
+/// capped so adversarial scripts terminate.
+fn run_tree(script: &[i64], idx: &mut usize, depth: usize) {
+    let g = obs::span_cat(NAMES[depth % NAMES.len()], "test");
+    while *idx < script.len() {
+        let op = script[*idx];
+        *idx += 1;
+        match op {
+            0 => break,
+            1 if depth < 4 => run_tree(script, idx, depth + 1),
+            2 => {
+                let ctx = g.ctx();
+                std::thread::scope(|s| {
+                    s.spawn(move || {
+                        let _w = obs::span_under("worker", "test", ctx);
+                    });
+                });
+            }
+            _ => {}
+        }
+    }
+    drop(g);
+}
+
+#[test]
+fn span_nesting_stays_balanced_under_random_scripts() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    check_no_shrink(
+        48,
+        |r| {
+            let len = r.range(1, 24) as usize;
+            (0..len).map(|_| r.range(0, 4)).collect::<Vec<i64>>()
+        },
+        |script| {
+            obs::global().clear();
+            let mut idx = 0;
+            run_tree(script, &mut idx, 0);
+            let spans = obs::global().take_spans();
+            // Every open recorded exactly one closed span: the root,
+            // each recursion (op 1 at depth < 4), each worker hop.
+            if spans.is_empty() {
+                return Err("no spans recorded for a non-empty script".into());
+            }
+            for s in &spans {
+                let Some(pid) = s.parent else { continue };
+                let Some(p) = spans.iter().find(|c| c.id == pid) else {
+                    return Err(format!("span `{}` has unknown parent {pid}", s.name));
+                };
+                if p.start_us > s.start_us {
+                    return Err(format!(
+                        "parent `{}` starts after child `{}` ({} > {})",
+                        p.name, s.name, p.start_us, s.start_us
+                    ));
+                }
+                // Ends: child closes inside its parent. µs truncation of
+                // start and duration can disagree by a tick each way.
+                let p_end = p.start_us + p.dur_us + 2;
+                let s_end = s.start_us + s.dur_us;
+                if s_end > p_end {
+                    return Err(format!(
+                        "child `{}` outlives parent `{}` ({s_end} > {p_end})",
+                        s.name, p.name
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+    obs::set_enabled(false);
+}
+
+fn small_spec() -> OpSpec {
+    let mut s = OpSpec::benchmark(AttnVariant::Mha, 256, 64, true);
+    s.batch = 1;
+    s
+}
+
+fn serve_smoke(requests: usize) -> std::sync::Arc<qimeng::coordinator::metrics::Metrics> {
+    let c = Coordinator::start(ServeConfig {
+        artifacts_dir: "definitely-not-compiled-artifacts".into(),
+        batch_window: Duration::from_millis(2),
+        shards: 2,
+        executor: ExecutorSpec::Reference,
+        ..ServeConfig::default()
+    })
+    .expect("start coordinator");
+    let stream = request_stream_mixed(&c.families, requests, 1e6, 0.5, 7);
+    let report = coordinator::run_stream(&c, &stream, 1e9);
+    assert_eq!(report.errors, 0, "{}", report.metrics_summary);
+    let metrics = c.metrics.clone();
+    c.shutdown();
+    metrics
+}
+
+#[test]
+fn chrome_trace_is_valid_json_and_covers_all_three_layers() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::global().clear();
+
+    // Layer 1 + 2: a pipeline run (its verify stage sweeps the compiled
+    // engine, so engine.sweep spans appear under pipeline.verify).
+    pipeline::run(&small_spec(), &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+        .expect("pipeline run");
+    // Layer 3: a short serving smoke.
+    serve_smoke(8);
+
+    let spans = obs::global().take_spans();
+    obs::set_enabled(false);
+
+    let trace = export::chrome_trace(&spans);
+    let doc = export::parse_json(&trace).expect("trace is valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+    let mut names = Vec::new();
+    for e in events {
+        let name = e.get("name").and_then(|v| v.as_str()).expect("event name");
+        assert_eq!(e.get("ph").and_then(|v| v.as_str()), Some("X"), "{name}: ph");
+        for field in ["ts", "dur", "pid", "tid"] {
+            assert!(
+                e.get(field).and_then(|v| v.as_f64()).is_some(),
+                "{name}: missing numeric `{field}`"
+            );
+        }
+        assert!(e.get("args").and_then(|v| v.get("id")).is_some(), "{name}: args.id");
+        names.push(name.to_string());
+    }
+    for expect in
+        ["pipeline.sketch", "pipeline.reason", "pipeline.verify", "pipeline.translate",
+         "engine.sweep", "serve.plan", "serve.execute", "serve.respond", "serve.request"]
+    {
+        assert!(names.iter().any(|n| n == expect), "trace misses `{expect}`: {names:?}");
+    }
+}
+
+#[test]
+fn prometheus_exposition_round_trips_with_serving_gauges() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::global().clear();
+
+    let metrics = serve_smoke(12);
+    let text = coordinator::metrics_exposition(&metrics);
+    obs::set_enabled(false);
+
+    let parsed = export::parse_prometheus(&text).expect("exposition parses back");
+    let get = |name: &str| -> Option<f64> {
+        parsed.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    };
+    assert_eq!(get("qimeng_requests_total"), Some(12.0));
+    assert_eq!(get("qimeng_responses_total"), Some(12.0));
+    assert_eq!(get("qimeng_errors_total"), Some(0.0));
+    assert!(get("qimeng_latency_p99_us").unwrap_or(-1.0) >= 0.0);
+    // Per-shard counters and the shard-loop gauges carry labels.
+    assert!(
+        parsed.iter().any(|(n, _)| n.starts_with("qimeng_shard_batches_total{shard=")),
+        "no per-shard samples in:\n{text}"
+    );
+    assert!(
+        parsed.iter().any(|(n, _)| n.starts_with("qimeng_lane_queue_depth{")),
+        "no lane-depth gauges in:\n{text}"
+    );
+    assert!(get("qimeng_kv_pool_in_use_bytes").is_some(), "no kv gauge in:\n{text}");
+    // Exposition format sanity: one TYPE line per metric base.
+    let type_lines = text.lines().filter(|l| l.starts_with("# TYPE ")).count();
+    assert!(type_lines > 0);
+    let depth_types = text
+        .lines()
+        .filter(|l| l.starts_with("# TYPE qimeng_lane_queue_depth "))
+        .count();
+    assert_eq!(depth_types, 1, "labelled series must share one TYPE line:\n{text}");
+}

@@ -295,3 +295,48 @@ fn observed_latencies_survive_shutdown_and_name_decode_specs() {
         assert!(e.micros.is_finite() && e.micros >= 0.0, "bad mean in {}", e.key);
     }
 }
+
+/// An executor whose every batch fails — exercises the shard's error
+/// reply path end-to-end.
+struct FailingExecutor;
+
+impl Executor for FailingExecutor {
+    fn execute_batch(
+        &mut self,
+        _family: &qimeng::coordinator::FamilyKey,
+        _info: &qimeng::coordinator::scheduler::ArtifactInfo,
+        _capacity: usize,
+        _q: &[f32],
+        _k: &[f32],
+        _v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        Err("injected failure".to_string())
+    }
+
+    fn kind(&self) -> &'static str {
+        "failing-test"
+    }
+}
+
+#[test]
+fn executor_failures_reach_replies_and_the_errors_counter() {
+    let config = ServeConfig {
+        executor: ExecutorSpec::Custom(Arc::new(|_shard| {
+            Ok(Box::new(FailingExecutor) as Box<dyn Executor>)
+        })),
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let fams = coordinator.families.clone();
+    let stream = request_stream_mixed(&fams, 16, 1e6, 0.5, 13);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    // Every request must come back as an explicit error reply — none
+    // silently dropped, none hung past shutdown.
+    assert_eq!(report.ok, 0, "{}", report.metrics_summary);
+    assert_eq!(report.errors, 16, "{}", report.metrics_summary);
+    // The regression under test: each failed request increments the
+    // `errors` counter (PR 2 left one executor-failure path uncounted).
+    let errors = coordinator.metrics.errors.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(errors >= 16, "errors counter saw {errors} of 16 failures");
+    coordinator.shutdown();
+}
