@@ -1,0 +1,171 @@
+//! Cost-model self-calibration bench: probe a small candidate grid on
+//! the host engine, feed the observations through the calibration fit,
+//! and record how much the fitted multipliers shrink the
+//! observed-vs-modeled disagreement — plus whether calibration improves
+//! (or at least preserves) the model's candidate *ranking* against the
+//! measured ordering.
+//!
+//! Modes:
+//!   cargo bench --bench calibrate              full run
+//!   cargo bench --bench calibrate -- --smoke   same grid, CI-labelled run
+//!       (the probe grid is already minimal: 3 shapes x 3 tiles x
+//!       `measure::PROBE_SAMPLES` timed sweeps)
+//!
+//! Records BENCH_calib.json and exits non-zero if the fitted
+//! calibration scores *worse* than the identity on its own fit set —
+//! the identity floor in `calibrate::fit` makes that impossible unless
+//! the fit/persistence plumbing regresses.
+//!
+//! Shape discipline: `measure::probe_wallclock` rewrites the probe's
+//! `seq_len`/`kv_len` to `PROBE_BLOCKS * max(bm, bn)` and sweeps one
+//! head, so every bench spec uses `seq = PROBE_BLOCKS * 64`, one head,
+//! batch 1, and only candidates with `max(bm, bn) == 64` — the modeled
+//! spec then matches the measured program exactly.
+
+use qimeng::autotune::{cache, calibration_samples, measure, space};
+use qimeng::perfmodel::calibrate::{self, Calibration};
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::sketch::spec::{AttnVariant, OpSpec};
+
+/// Probe tile cap: candidates keep `max(bm, bn) == TILE`, specs use
+/// `seq = measure::PROBE_BLOCKS * TILE`.
+const TILE: usize = 64;
+
+fn bench_spec(head_dim: usize, causal: bool) -> OpSpec {
+    let mut spec =
+        OpSpec::benchmark(AttnVariant::Mha, measure::PROBE_BLOCKS * TILE, head_dim, causal);
+    spec.batch = 1;
+    spec.num_q_heads = 1;
+    spec.num_kv_heads = 1;
+    spec
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let arch = GpuArch::a100();
+    let specs = [bench_spec(64, true), bench_spec(64, false), bench_spec(128, true)];
+    let mut tune_cache = cache::TuneCache::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    // Probe each shape's candidate slice and record the measured mean
+    // as a serving-style observation (`TuneCache::observe`) — exactly
+    // the entries `tlc tune --calibrate` fits against.
+    let mut probed: Vec<(OpSpec, Vec<(space::Candidate, f64)>)> = Vec::new();
+    for spec in &specs {
+        let part = cache::spec_part(spec);
+        // One candidate per (bm, bn) pair: the observed-cache key only
+        // distinguishes bm/bn/split_k, so stage/warp variants of the
+        // same tile would merge into one running-mean entry.
+        let mut tiles = std::collections::BTreeSet::new();
+        let cands: Vec<space::Candidate> = space::enumerate(spec, &arch)
+            .into_iter()
+            .filter(|c| {
+                c.bm.max(c.bn) == TILE
+                    && c.split_k == 1
+                    && c.prefetch_pages == 1
+                    && tiles.insert((c.bm, c.bn))
+            })
+            .collect();
+        if cands.len() < 2 {
+            failures.push(format!("{part}: fewer than 2 probe-sized candidates enumerated"));
+            continue;
+        }
+        let mut rows = Vec::new();
+        for (i, cand) in cands.iter().enumerate() {
+            match measure::probe_wallclock(spec, &arch, cand, 7 + i as u64) {
+                Ok(d) => {
+                    let micros = d.as_secs_f64() * 1e6;
+                    tune_cache.observe(&part, *cand, micros);
+                    println!("  probed {part} {cand}: {micros:.1}us");
+                    rows.push((*cand, micros));
+                }
+                Err(e) => failures.push(format!("{part} {cand}: probe failed: {e}")),
+            }
+        }
+        probed.push((spec.clone(), rows));
+    }
+
+    // Fit on everything observed, exactly as `tlc tune --calibrate`.
+    let (samples, unmatched) = calibration_samples(&tune_cache, &specs, &arch);
+    if unmatched > 0 {
+        failures.push(format!("{unmatched} observed shapes matched no bench spec"));
+    }
+    let identity = Calibration::identity();
+    let pre = calibrate::disagreement(&samples, &identity);
+    let fitted = calibrate::fit(&samples);
+    let post = calibrate::disagreement(&samples, &fitted);
+    println!("fit over {} samples: {fitted}", samples.len());
+    println!(
+        "disagreement (RMS log observed-vs-modeled): identity {pre:.4} -> calibrated {post:.4}"
+    );
+
+    // Rank agreement: does the model's best candidate (per shape) match
+    // the measured-fastest one, before and after calibration? A global
+    // scale correction cannot reorder candidates, so this only moves
+    // when the three-term fit wins — but it must never *lose* ranks on
+    // the grid it was fitted to without us noticing here.
+    let mut agree_pre = 0usize;
+    let mut agree_post = 0usize;
+    for (spec, rows) in &probed {
+        let fastest = rows
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(c, _)| *c)
+            .expect("rows checked non-empty");
+        let best_by = |cal: &Calibration| {
+            rows.iter()
+                .map(|(c, _)| (*c, space::model_seconds_calibrated(spec, &arch, c, cal)))
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(c, _)| c)
+                .expect("rows checked non-empty")
+        };
+        agree_pre += (best_by(&identity) == fastest) as usize;
+        agree_post += (best_by(&fitted) == fastest) as usize;
+    }
+    println!(
+        "rank agreement (model-best == measured-fastest): {agree_pre}/{} -> {agree_post}/{}",
+        probed.len(),
+        probed.len()
+    );
+
+    let json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"shapes\": {},\n  \
+         \"samples\": {},\n  \"unmatched_shapes\": {unmatched},\n  \
+         \"pre_disagreement\": {pre:.4},\n  \"post_disagreement\": {post:.4},\n  \
+         \"calibration\": {{\"gemm\": {:.6e}, \"softmax\": {:.6e}, \"membw\": {:.6e}}},\n  \
+         \"rank_agree_pre\": {agree_pre},\n  \"rank_agree_post\": {agree_post}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        probed.len(),
+        samples.len(),
+        fitted.gemm,
+        fitted.softmax,
+        fitted.membw,
+    );
+    if let Err(e) = std::fs::write("BENCH_calib.json", &json) {
+        eprintln!("warning: could not write BENCH_calib.json: {e}");
+    } else {
+        println!("recorded BENCH_calib.json:\n{json}");
+    }
+
+    // Hard gates: the fit set must be non-trivial, and the identity
+    // floor guarantees calibration never scores worse than no
+    // calibration on its own observations.
+    if samples.is_empty() {
+        failures.push("no fit samples assembled from the probed observations".into());
+    }
+    if post > pre + 1e-12 {
+        failures.push(format!(
+            "calibrated disagreement {post:.4} exceeds uncalibrated {pre:.4}"
+        ));
+    }
+    // Rank agreement is recorded for the perf trajectory but not
+    // hard-gated: the RMS-optimal fit may legitimately trade one rank
+    // on a near-tie, and host-probe timing jitter decides near-ties.
+    if !failures.is_empty() {
+        eprintln!("calibrate bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,21 @@
 //! Repeated pipeline runs and the serving path read this file so the
 //! search cost is paid once per `(spec, arch, backend)`; hit/miss
 //! counters make cache behaviour observable (and testable).
+//!
+//! A sibling file `<stem>.calib.txt` (so `tune_cache.txt` pairs with
+//! `tune_cache.calib.txt`) holds the fitted cost-model calibration that
+//! `tlc tune --calibrate` derives from this cache's observed entries,
+//! one line per architecture in the same line-oriented spirit:
+//!
+//! ```text
+//! # qimeng calibration v1
+//! calib gemm=3.1 softmax=1.4 membw=27000 samples=42 arch=A100
+//! ```
+//!
+//! (`arch=` is last and takes the rest of the line; multipliers are the
+//! [`crate::perfmodel::calibrate::Calibration`] time corrections, and a
+//! missing file or arch line means identity — the uncalibrated model.)
+//! [`super::Autotuner`] auto-loads the sibling when it loads the cache.
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -6,8 +6,9 @@
 //! benchmarking step (§3.2): the analytical model ranks the space, and —
 //! when [`super::AutotuneConfig::measure`] is on — candidates the model
 //! cannot separate are re-ranked by an actual execution. Wall-clock is
-//! inherently noisy, so each probe takes a warm-up pass (caches, page
-//! faults, compile) followed by three timed runs and reports the
+//! inherently noisy, so each probe lowers the program once, then takes
+//! a warm-up pass (caches, page faults) followed by three timed runs
+//! against the prepared program and reports the
 //! **median**; measurement still only ever breaks exact model ties, and
 //! determinism-sensitive callers leave it off (the default).
 //!
@@ -23,7 +24,7 @@ use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::{self, profiles::LlmProfile};
 use crate::sketch::{self, spec::OpSpec};
 use crate::tl::ast::Stmt;
-use crate::verify::exec::run_attention_threads;
+use crate::verify::exec;
 use crate::verify::tensor::Tensor2;
 
 /// Q-blocks per measured probe: `probe_rows = PROBE_BLOCKS * max(BM,
@@ -63,15 +64,18 @@ pub fn probe_wallclock(
     let scale = 1.0 / (qk as f32).sqrt();
 
     // Single-worker sweeps: candidates compare on serial execute cost,
-    // free of thread-spawn and scheduling jitter. The warm-up run pays
-    // the remaining one-off costs (cold caches, page faults) that must
-    // not decide tie-breaks; program lowering recurs per run but is
-    // AST-walk-cheap (µs) against the ms-scale probe.
-    run_attention_threads(&program, &q, &k, &v, scale, 1)?;
+    // free of thread-spawn and scheduling jitter. The program is lowered
+    // once ([`exec::prepare`]) for the warm-up and every timed sample,
+    // so the probe times pure execution; the warm-up run pays the
+    // remaining one-off costs (cold caches, page faults) that must not
+    // decide tie-breaks.
+    let no_tables = std::collections::BTreeMap::new();
+    let prepared = exec::prepare(&program)?;
+    prepared.run_attention(&q, &k, &v, scale, &no_tables, 1)?;
     let mut times = [Duration::ZERO; PROBE_SAMPLES];
     for t in &mut times {
         let t0 = Instant::now();
-        run_attention_threads(&program, &q, &k, &v, scale, 1)?;
+        prepared.run_attention(&q, &k, &v, scale, &no_tables, 1)?;
         *t = t0.elapsed();
     }
     times.sort_unstable();

@@ -21,7 +21,13 @@
 //!   `(OpSpec, GpuArch, backend)` — the spec key carries the KV layout
 //!   *and* the pass direction (forward = empty suffix, so old caches
 //!   stay valid) — consulted by repeat pipeline runs, the `tlc tune`
-//!   CLI, and the serving registry/coordinator.
+//!   CLI, and the serving registry/coordinator;
+//! * calibration — `tlc tune --calibrate` fits the cost model's three
+//!   time components to the cache's observed latencies
+//!   ([`crate::perfmodel::calibrate`]); the fit persists beside the
+//!   cache file and [`Autotuner::tune`] auto-loads it, so every search
+//!   ranks by the calibrated model for the target arch (`--report`
+//!   prints the pre/post disagreement).
 //!
 //! Backward specs (`OpSpec::direction == Backward`) search the same
 //! space: `perfmodel::cost` prices their five-GEMM recompute and the
@@ -42,6 +48,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::perfmodel::calibrate::{self, Calibration, CalibrationSet, FitSample};
 use crate::perfmodel::cost::{self, Estimate, Schedule};
 use crate::perfmodel::gpu::GpuArch;
 use crate::pipeline::Target;
@@ -98,23 +105,42 @@ pub struct TuneResult {
 pub struct Autotuner {
     pub config: AutotuneConfig,
     cache: TuneCache,
+    /// Per-arch cost-model calibrations, auto-loaded from the file
+    /// beside the cache ([`CalibrationSet::path_beside`]); empty (all
+    /// identity) for in-memory tuners or before the first
+    /// `tlc tune --calibrate` run.
+    calibration: CalibrationSet,
 }
 
 impl Autotuner {
     pub fn new(config: AutotuneConfig) -> Result<Self> {
-        let cache = match &config.cache_path {
-            Some(p) => TuneCache::load(p)?,
-            None => TuneCache::new(),
+        let (cache, calibration) = match &config.cache_path {
+            Some(p) => (
+                TuneCache::load(p)?,
+                CalibrationSet::load(&CalibrationSet::path_beside(p))
+                    .map_err(anyhow::Error::msg)?,
+            ),
+            None => (TuneCache::new(), CalibrationSet::new()),
         };
-        Ok(Autotuner { config, cache })
+        Ok(Autotuner { config, cache, calibration })
     }
 
     pub fn in_memory() -> Self {
-        Autotuner { config: AutotuneConfig::default(), cache: TuneCache::new() }
+        Autotuner {
+            config: AutotuneConfig::default(),
+            cache: TuneCache::new(),
+            calibration: CalibrationSet::new(),
+        }
     }
 
     pub fn cache(&self) -> &TuneCache {
         &self.cache
+    }
+
+    /// The loaded per-arch calibrations (read-only: fits are written by
+    /// `tlc tune --calibrate`, the tuner only consumes them).
+    pub fn calibration(&self) -> &CalibrationSet {
+        &self.calibration
     }
 
     /// Persist the cache (no-op without a configured path).
@@ -130,12 +156,16 @@ impl Autotuner {
     /// analytically, a few hundred float ops); a miss runs the
     /// configured search and records the winner.
     pub fn tune(&mut self, spec: &OpSpec, arch: &GpuArch, target: Target) -> TuneResult {
+        // Searches rank by the calibrated model when a fit for this arch
+        // exists; the identity calibration reproduces the uncalibrated
+        // objective exactly, so un-calibrated tuners are unchanged.
+        let cal = self.calibration.get(arch.name);
         let key = cache::spec_key(spec, arch.name, target);
         if let Some(e) = self.cache.get(&key) {
             let candidate = e.cand;
             let seconds = e.micros / 1e6;
             let schedule = space::schedule_of(spec, arch, &candidate);
-            let estimate = cost::estimate(spec, arch, &schedule);
+            let estimate = cost::estimate_calibrated(spec, arch, &schedule, &cal);
             return TuneResult {
                 candidate,
                 schedule,
@@ -149,7 +179,7 @@ impl Autotuner {
 
         let candidates = space::enumerate(spec, arch);
         let outcome = search::run_search(&candidates, self.config.strategy, |c| {
-            space::model_seconds(spec, arch, c)
+            space::model_seconds_calibrated(spec, arch, c, &cal)
         });
         let mut winner = outcome.best;
         if self.config.measure {
@@ -160,7 +190,7 @@ impl Autotuner {
             let ties: Vec<Candidate> = candidates
                 .iter()
                 .copied()
-                .filter(|c| space::model_seconds(spec, arch, c) <= outcome.seconds)
+                .filter(|c| space::model_seconds_calibrated(spec, arch, c, &cal) <= outcome.seconds)
                 .collect();
             if ties.len() > 1 {
                 winner = measure::refine_ties(spec, arch, &ties, self.config.measure_seed);
@@ -175,7 +205,7 @@ impl Autotuner {
             evaluated: outcome.evaluated,
         });
         let schedule = space::schedule_of(spec, arch, &winner);
-        let estimate = cost::estimate(spec, arch, &schedule);
+        let estimate = cost::estimate_calibrated(spec, arch, &schedule, &cal);
         TuneResult {
             candidate: winner,
             schedule,
@@ -211,11 +241,20 @@ pub fn cli_tune(args: &Args) -> Result<(), String> {
     let strategy = SearchStrategy::parse(&strategy_name, seed)
         .ok_or_else(|| format!("unknown --strategy `{strategy_name}`"))?;
     let measure = args.get_bool("measure");
-    if args.get_bool("report") {
+    let report = args.get_bool("report");
+    let calibrate_flag = args.get_bool("calibrate");
+    if report || calibrate_flag {
         let spec = OpSpec::from_cli(args)?;
         args.finish()?;
         let cache = TuneCache::load(&cache_path).map_err(|e| format!("{e:#}"))?;
-        cli_report(&cache, &cache_path, &arch, target)?;
+        if calibrate_flag {
+            cli_calibrate(&cache, &cache_path, &arch, &spec)?;
+            if !report {
+                return Ok(());
+            }
+            println!();
+        }
+        cli_report(&cache, &cache_path, &arch, target, &spec)?;
         println!();
         return op_profile_report(&spec, &arch);
     }
@@ -269,11 +308,116 @@ pub fn cli_tune(args: &Args) -> Result<(), String> {
 /// winner, and flag disagreements — the signal that the analytical model
 /// mis-ranks that shape and its calibration needs a look (ROADMAP PR-2
 /// follow-up).
+/// The spec shapes calibration scans for observations: the paper grids
+/// plus the CLI-selected operator. The cache stores only rendered spec
+/// keys, so observed entries are matched by re-rendering a known spec
+/// universe rather than parsing keys back into specs.
+fn calibration_universe(extra: &OpSpec) -> Vec<OpSpec> {
+    let mut v = crate::workload::table1_grid(true);
+    v.extend(crate::workload::table1_grid(false));
+    v.extend(crate::workload::table2_grid());
+    v.push(extra.clone());
+    v
+}
+
+/// Assemble calibration fit samples from the cache's serving/bench
+/// observations: every observed `(shape, schedule)` entry whose shape
+/// matches a spec in `specs` becomes one [`FitSample`] (modeled
+/// decomposition vs measured mean micros). Returns the samples plus the
+/// number of observed shapes no spec in the universe matched — silent
+/// truncation would make a partial calibration look exhaustive.
+pub fn calibration_samples(
+    cache: &TuneCache,
+    specs: &[OpSpec],
+    arch: &GpuArch,
+) -> (Vec<FitSample>, usize) {
+    let mut samples = Vec::new();
+    let mut matched = std::collections::BTreeSet::new();
+    for spec in specs {
+        let part = cache::spec_part(spec);
+        if !matched.insert(part.clone()) {
+            continue; // duplicate spec in the universe
+        }
+        for e in cache.observed_for(&part) {
+            let sched = space::schedule_of(spec, arch, &e.cand);
+            if let Some(s) = FitSample::new(spec, arch, &sched, e.micros * 1e-6) {
+                samples.push(s);
+            }
+        }
+    }
+    let unmatched = cache
+        .observed_spec_parts()
+        .iter()
+        .filter(|p| !matched.contains(*p))
+        .count();
+    (samples, unmatched)
+}
+
+/// `tlc tune --calibrate`: fit the cost model's three time-component
+/// multipliers ([`crate::perfmodel::calibrate`]) to every observation in
+/// the cache, persist the per-arch result beside the cache file, and
+/// print the pre/post disagreement. The fit keeps the identity as a
+/// floor, so the persisted calibration never scores worse than the
+/// uncalibrated model on the observations it was fitted to.
+fn cli_calibrate(
+    cache: &TuneCache,
+    cache_path: &std::path::Path,
+    arch: &GpuArch,
+    cli_spec: &OpSpec,
+) -> Result<(), String> {
+    let (samples, unmatched) = calibration_samples(cache, &calibration_universe(cli_spec), arch);
+    if samples.is_empty() {
+        return Err(format!(
+            "no serving observations in {} to calibrate against — run `tlc serve` \
+             (or the calibrate bench) first{}",
+            cache_path.display(),
+            if unmatched > 0 {
+                format!(" ({unmatched} observed shapes matched no known spec)")
+            } else {
+                String::new()
+            },
+        ));
+    }
+    let calib_path = CalibrationSet::path_beside(cache_path);
+    let mut set = CalibrationSet::load(&calib_path)?;
+    let previous = set.get(arch.name);
+    let pre_identity = calibrate::disagreement(&samples, &Calibration::identity());
+    let pre = calibrate::disagreement(&samples, &previous);
+    let fitted = calibrate::fit(&samples);
+    let post = calibrate::disagreement(&samples, &fitted);
+    set.set(arch.name, fitted);
+    set.save(&calib_path)?;
+    println!(
+        "calibrated {} from {} observations over {} shapes{}:",
+        arch.name,
+        samples.len(),
+        cache.observed_spec_parts().len() - unmatched,
+        if unmatched > 0 {
+            format!(" ({unmatched} observed shapes matched no known spec and were skipped)")
+        } else {
+            String::new()
+        },
+    );
+    println!("  fit: {fitted}");
+    println!(
+        "  disagreement (RMS log observed-vs-modeled): identity {pre_identity:.4} -> \
+         calibrated {post:.4}{}",
+        if previous.is_identity() {
+            String::new()
+        } else {
+            format!(" (previous fit scored {pre:.4})")
+        },
+    );
+    println!("  wrote {}", calib_path.display());
+    Ok(())
+}
+
 fn cli_report(
     cache: &TuneCache,
     path: &std::path::Path,
     arch: &GpuArch,
     target: Target,
+    cli_spec: &OpSpec,
 ) -> Result<(), String> {
     let backend = match target {
         Target::Pallas => "pallas",
@@ -349,6 +493,34 @@ fn cli_report(
             "disagreements mean serving evidence overturned the cost model — \
              `Registry::find_best` and the coordinator already prefer the observed winner"
         );
+    }
+
+    // Aggregate model error against the same observations, uncalibrated
+    // vs the persisted per-arch fit (`tlc tune --calibrate` writes it).
+    let calib_path = CalibrationSet::path_beside(path);
+    let set = CalibrationSet::load(&calib_path)?;
+    let (samples, _) = calibration_samples(cache, &calibration_universe(cli_spec), arch);
+    if samples.is_empty() {
+        println!("calibration: no observed shape matched a known spec — nothing to score");
+    } else {
+        let cal = set.get(arch.name);
+        let pre = calibrate::disagreement(&samples, &Calibration::identity());
+        let post = calibrate::disagreement(&samples, &cal);
+        if cal.is_identity() {
+            println!(
+                "calibration: none persisted for {} (disagreement {pre:.4}; run \
+                 `tlc tune --calibrate` to fit {})",
+                arch.name,
+                calib_path.display(),
+            );
+        } else {
+            println!(
+                "calibration ({}): {cal}\n  disagreement (RMS log observed-vs-modeled) \
+                 over {} samples: uncalibrated {pre:.4} -> calibrated {post:.4}",
+                arch.name,
+                samples.len(),
+            );
+        }
     }
     Ok(())
 }
@@ -479,6 +651,49 @@ mod tests {
                 "autotune {best_s} worse than cost-search {cs_s}"
             );
         }
+    }
+
+    #[test]
+    fn calibration_samples_match_observed_shapes() {
+        let spec = mha(4096, 64);
+        let arch = GpuArch::a100();
+        let mut cache = TuneCache::new();
+        let part = cache::spec_part(&spec);
+        let cand =
+            Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        cache.observe(&part, cand, 1234.5);
+        cache.observe("shape_no_spec_renders", cand, 99.0);
+        let (samples, unmatched) = calibration_samples(&cache, &[spec], &arch);
+        assert_eq!(samples.len(), 1, "one observation matches the universe");
+        assert_eq!(unmatched, 1, "the alien shape must be counted, not dropped silently");
+        assert!((samples[0].observed - 1234.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn persisted_calibration_is_loaded_and_drives_the_search() {
+        let dir = std::env::temp_dir().join("qimeng_autotuner_calib_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune.txt");
+        let _ = std::fs::remove_file(&path);
+        let arch = GpuArch::a100();
+        let cal = Calibration { gemm: 2.0, softmax: 3.0, membw: 4.0, samples: 5 };
+        let mut set = CalibrationSet::new();
+        set.set(arch.name, cal);
+        set.save(&CalibrationSet::path_beside(&path)).unwrap();
+
+        let mut tuner = Autotuner::new(AutotuneConfig {
+            cache_path: Some(path),
+            ..AutotuneConfig::default()
+        })
+        .unwrap();
+        assert_eq!(tuner.calibration().get(arch.name), cal);
+        let spec = mha(4096, 64);
+        let r = tuner.tune(&spec, &arch, Target::Pallas);
+        // The winner's score is the *calibrated* objective, exactly.
+        assert_eq!(
+            r.seconds,
+            space::model_seconds_calibrated(&spec, &arch, &r.candidate, &cal)
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! paper's "score candidates against the hardware" loop (§3.2) with the
 //! machine model standing in for the physical cards (DESIGN.md §2).
 
+use crate::perfmodel::calibrate::Calibration;
 use crate::perfmodel::cost::{self, Schedule};
 use crate::perfmodel::gpu::GpuArch;
 use crate::perfmodel::schedules;
@@ -258,8 +259,23 @@ pub fn schedule_of(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> Schedule 
 /// saturated single-split schedules, so on the paper grids this equals
 /// `cost::estimate(..).seconds` exactly.
 pub fn model_seconds(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> f64 {
+    model_seconds_calibrated(spec, arch, cand, &Calibration::identity())
+}
+
+/// [`model_seconds`] under a fitted [`Calibration`]: the estimate is
+/// produced by [`cost::estimate_calibrated`] and the same idle-fraction
+/// and split-K-merge corrections apply on top (the merge traffic term
+/// is scaled by the fitted bandwidth multiplier, consistently with the
+/// estimate's own memory term). The identity calibration reproduces
+/// [`model_seconds`] exactly, so uncalibrated searches are unchanged.
+pub fn model_seconds_calibrated(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    cand: &Candidate,
+    cal: &Calibration,
+) -> f64 {
     let sched = schedule_of(spec, arch, cand);
-    let est = cost::estimate(spec, arch, &sched);
+    let est = cost::estimate_calibrated(spec, arch, &sched, cal);
     if est.oom || !est.seconds.is_finite() {
         return f64::INFINITY;
     }
@@ -272,7 +288,7 @@ pub fn model_seconds(spec: &OpSpec, arch: &GpuArch, cand: &Candidate) -> f64 {
         * (spec.batch * spec.num_q_heads * spec.seq_len * spec.v_head_dim) as f64
         * 4.0  // f32 partials
         * 2.0; // written then re-read by the merge pass
-    est.seconds * idle + merge_bytes / (arch.mem_bw_gbs * 1e9)
+    est.seconds * idle + merge_bytes / (arch.mem_bw_gbs * 1e9) * cal.membw
 }
 
 #[cfg(test)]
@@ -358,6 +374,24 @@ mod tests {
         let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
         let raw = cost::estimate(&spec, &arch, &schedule_of(&spec, &arch, &c)).seconds;
         assert_eq!(model_seconds(&spec, &arch, &c), raw);
+    }
+
+    #[test]
+    fn calibrated_objective_identity_matches_and_scales() {
+        let spec = mha(4096, 64);
+        let arch = GpuArch::a100();
+        let c = Candidate { bm: 128, bn: 64, stages: 2, warps: 4, split_k: 1, prefetch_pages: 1 };
+        let id = Calibration::identity();
+        assert_eq!(
+            model_seconds(&spec, &arch, &c),
+            model_seconds_calibrated(&spec, &arch, &c, &id),
+            "identity calibration must not perturb the search objective"
+        );
+        let slow = Calibration { gemm: 10.0, softmax: 10.0, membw: 10.0, samples: 0 };
+        assert!(
+            model_seconds_calibrated(&spec, &arch, &c, &slow)
+                > model_seconds(&spec, &arch, &c)
+        );
     }
 
     #[test]

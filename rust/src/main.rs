@@ -77,7 +77,12 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve|profile> [flag
                [--measure] [--cache tune_cache.txt]
                --report prints observed-vs-modeled disagreement per
                cached shape (serving-mean latency vs cost-model rank)
-               instead of tuning
+               and the aggregate calibration disagreement instead of
+               tuning; --calibrate fits the cost model's gemm/softmax/
+               membw time multipliers to the cache's observations and
+               persists them beside the cache (tune_cache.calib.txt) —
+               later tunes auto-load the fit and rank by the calibrated
+               model (combine with --report for pre/post numbers)
   serve        [--artifacts artifacts] [--requests N] [--rate-hz F]
                [--window-ms N] [--seed N] [--shards N] [--decode-frac F]
                [--executor pjrt|reference] [--kv-budget-mb N]

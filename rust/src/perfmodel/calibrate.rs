@@ -1,0 +1,604 @@
+//! Self-calibrating cost model: fit the analytical model's three time
+//! components to *observed* runtimes accumulated in the tuning cache.
+//!
+//! The paper's search loop scores candidates "against the hardware"
+//! (§3.2); our stand-in hardware is the analytical model
+//! ([`super::cost`]), whose rate coefficients were hand-anchored at the
+//! paper's published measurements. Serving and benching accumulate
+//! *measured* latencies per schedule variant
+//! ([`crate::autotune::cache::TuneCache::observe`]) — evidence the
+//! model can learn from. This module closes that loop:
+//!
+//! * [`Calibration`] — three multiplicative corrections (`gemm`,
+//!   `softmax`, `membw`) applied to the model's decomposed time
+//!   components by [`super::cost::estimate_calibrated`]. Values > 1
+//!   mean the target runs that component slower than modeled. The
+//!   identity calibration reproduces the uncalibrated model exactly.
+//! * [`fit`] — weighted least squares over [`FitSample`]s (decomposed
+//!   model features vs observed seconds), with a single-scale
+//!   geometric-mean fallback and the identity as a floor, so the fitted
+//!   calibration's [`disagreement`] is **never worse** than before.
+//! * [`CalibrationSet`] — per-architecture calibrations persisted in a
+//!   line-oriented text file beside the tuning cache (format documented
+//!   on [`CalibrationSet::parse`] and in `autotune::cache`).
+//!
+//! The observed entries in this repo come from the host CPU engine (the
+//! no-GPU stand-in for on-device runs), so fitted multipliers are far
+//! from 1 — they absorb the CPU-vs-GPU scale along with the shape of
+//! the disagreement. That is by design: calibration aligns the model
+//! with whatever hardware actually produced the observations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::cost::{self, Schedule};
+use super::gpu::GpuArch;
+use crate::sketch::spec::OpSpec;
+
+/// Fitted multipliers are clamped into this range: wide enough to
+/// absorb host-interpreter observations standing in for on-device runs
+/// (three to six decimal orders off GPU scale), tight enough that a
+/// degenerate fit can never produce a zero or infinite rate.
+const MIN_MULT: f64 = 1e-3;
+/// Upper clamp for fitted multipliers (see [`MIN_MULT`]).
+const MAX_MULT: f64 = 1e9;
+
+/// Multiplicative corrections to the cost model's three decomposed time
+/// components ([`cost::CostTerms`]). Applied by
+/// [`cost::estimate_calibrated`]; fitted by [`fit`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Multiplier on GEMM / Tensor-Core compute time.
+    pub gemm: f64,
+    /// Multiplier on exposed softmax / pointwise CUDA-core time.
+    pub softmax: f64,
+    /// Multiplier on DRAM-traffic time (an inverse achieved-bandwidth
+    /// correction).
+    pub membw: f64,
+    /// Observed entries the fit consumed (0 for the identity and for
+    /// intermediate fit candidates).
+    pub samples: usize,
+}
+
+impl Calibration {
+    /// The no-op calibration: [`cost::estimate_calibrated`] with it
+    /// reproduces [`cost::estimate`] bit-for-bit.
+    pub const fn identity() -> Self {
+        Calibration { gemm: 1.0, softmax: 1.0, membw: 1.0, samples: 0 }
+    }
+
+    /// Exactly the identity multipliers (sample count ignored)?
+    pub fn is_identity(&self) -> bool {
+        self.gemm == 1.0 && self.softmax == 1.0 && self.membw == 1.0
+    }
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::identity()
+    }
+}
+
+impl std::fmt::Display for Calibration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gemm={:.3e} softmax={:.3e} membw={:.3e} ({} samples)",
+            self.gemm, self.softmax, self.membw, self.samples
+        )
+    }
+}
+
+/// One observed-vs-modeled pair: the model's identity-calibration time
+/// components for the schedule that was measured, plus the measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct FitSample {
+    /// Identity-calibration GEMM seconds
+    /// ([`cost::CostTerms::components`]).
+    pub gemm: f64,
+    /// Identity-calibration exposed-softmax seconds.
+    pub softmax: f64,
+    /// Identity-calibration DRAM-traffic seconds.
+    pub mem: f64,
+    /// Uncalibrated launch-overhead seconds.
+    pub overhead: f64,
+    /// Fused combine (`max(compute, mem)`) vs unfused sum.
+    pub fused: bool,
+    /// Measured wall-clock seconds.
+    pub observed: f64,
+}
+
+impl FitSample {
+    /// Decompose `(spec, arch, sched)` through the cost model and pair
+    /// it with a measured runtime. `None` when the measurement is
+    /// non-positive/non-finite or the model declares the cell OOM.
+    pub fn new(
+        spec: &OpSpec,
+        arch: &GpuArch,
+        sched: &Schedule,
+        observed_seconds: f64,
+    ) -> Option<FitSample> {
+        if !observed_seconds.is_finite() || observed_seconds <= 0.0 {
+            return None;
+        }
+        let t = cost::cost_terms(spec, arch, sched);
+        if t.oom {
+            return None;
+        }
+        let (gemm, softmax, mem) = t.components();
+        Some(FitSample {
+            gemm,
+            softmax,
+            mem,
+            overhead: t.overhead,
+            fused: t.fused,
+            observed: observed_seconds,
+        })
+    }
+
+    /// Modeled seconds for this sample under `cal` — the same combine
+    /// rule as [`cost::CostTerms::seconds_with`], so [`disagreement`]
+    /// scores exactly what [`cost::estimate_calibrated`] would predict.
+    pub fn modeled(&self, cal: &Calibration) -> f64 {
+        let compute = self.gemm * cal.gemm + self.softmax * cal.softmax;
+        let mem = self.mem * cal.membw;
+        if self.fused {
+            compute.max(mem) + self.overhead
+        } else {
+            mem + compute + self.overhead
+        }
+    }
+}
+
+/// RMS over samples of `ln(modeled / observed)` — the
+/// observed-vs-modeled disagreement score `tlc tune --report` prints
+/// (0 = the model predicts every observation exactly; each unit is one
+/// e-fold of average misprediction). Empty sample sets score 0.
+pub fn disagreement(samples: &[FitSample], cal: &Calibration) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for s in samples {
+        let m = s.modeled(cal).max(1e-300);
+        let r = (m / s.observed).ln();
+        acc += r * r;
+    }
+    (acc / samples.len() as f64).sqrt()
+}
+
+/// Fit a [`Calibration`] to observed samples.
+///
+/// Three candidates are scored and the lowest [`disagreement`] wins:
+/// the full three-term least-squares fit, a single-scale fit (one
+/// geometric-mean ratio applied to all three components — robust when
+/// the samples cannot separate the components), and the identity. The
+/// identity floor guarantees the fit never *increases* disagreement.
+pub fn fit(samples: &[FitSample]) -> Calibration {
+    let mut best = Calibration::identity();
+    if samples.is_empty() {
+        return best;
+    }
+    let mut best_d = disagreement(samples, &best);
+    for cand in [fit_scale(samples), fit_three_term(samples)].into_iter().flatten() {
+        let d = disagreement(samples, &cand);
+        if d < best_d {
+            best = cand;
+            best_d = d;
+        }
+    }
+    Calibration { samples: samples.len(), ..best }
+}
+
+/// Single-scale fit: the geometric mean of `observed / modeled` applied
+/// to all three components. For fused samples this scales the whole
+/// `max(compute, mem)` uniformly, so it exactly absorbs any constant
+/// rate offset (e.g. a CPU host standing in for the GPU).
+fn fit_scale(samples: &[FitSample]) -> Option<Calibration> {
+    let id = Calibration::identity();
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for s in samples {
+        let m = s.modeled(&id);
+        if m.is_finite() && m > 0.0 {
+            acc += (s.observed / m).ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return None;
+    }
+    let r = (acc / n as f64).exp();
+    if !r.is_finite() || r <= 0.0 {
+        return None;
+    }
+    let r = r.clamp(MIN_MULT, MAX_MULT);
+    Some(Calibration { gemm: r, softmax: r, membw: r, samples: 0 })
+}
+
+/// Full three-term fit: minimize the sum of squared *relative*
+/// residuals `(pred/observed - 1)^2` over the three multipliers.
+///
+/// Fused samples predict through a `max(compute, mem)`, which a linear
+/// solver cannot represent directly, so the fit iterates: each round
+/// assigns every fused sample to the side of the `max` that binds
+/// under the current iterate and solves the resulting linear problem
+/// (an EM-style active-branch refinement, warm-started from the
+/// single-scale fit). A small ridge term biased toward the *identity*
+/// keeps components no sample exercises at multiplier 1 instead of
+/// letting them drift to 0 or blow up.
+fn fit_three_term(samples: &[FitSample]) -> Option<Calibration> {
+    let mut cal = fit_scale(samples).unwrap_or_else(Calibration::identity);
+    for _ in 0..8 {
+        let mut xtx = [[0.0f64; 3]; 3];
+        let mut xty = [0.0f64; 3];
+        for s in samples {
+            let inv = 1.0 / s.observed;
+            let (g, sm, mm) = if s.fused {
+                let compute = s.gemm * cal.gemm + s.softmax * cal.softmax;
+                if compute >= s.mem * cal.membw {
+                    (s.gemm, s.softmax, 0.0)
+                } else {
+                    (0.0, 0.0, s.mem)
+                }
+            } else {
+                (s.gemm, s.softmax, s.mem)
+            };
+            let x = [g * inv, sm * inv, mm * inv];
+            let y = 1.0 - s.overhead * inv;
+            for i in 0..3 {
+                for j in 0..3 {
+                    xtx[i][j] += x[i] * x[j];
+                }
+                xty[i] += x[i] * y;
+            }
+        }
+        let lambda = 1e-6 * (xtx[0][0] + xtx[1][1] + xtx[2][2]).max(1e-12) / 3.0;
+        for i in 0..3 {
+            xtx[i][i] += lambda;
+            xty[i] += lambda; // ridge toward the identity (c = 1), not 0
+        }
+        let sol = solve3(xtx, xty)?;
+        let next = Calibration {
+            gemm: sol[0].clamp(MIN_MULT, MAX_MULT),
+            softmax: sol[1].clamp(MIN_MULT, MAX_MULT),
+            membw: sol[2].clamp(MIN_MULT, MAX_MULT),
+            samples: 0,
+        };
+        let moved = (next.gemm / cal.gemm - 1.0).abs()
+            + (next.softmax / cal.softmax - 1.0).abs()
+            + (next.membw / cal.membw - 1.0).abs();
+        cal = next;
+        if moved < 1e-9 {
+            break;
+        }
+    }
+    (cal.gemm.is_finite() && cal.softmax.is_finite() && cal.membw.is_finite()).then_some(cal)
+}
+
+/// Solve the 3x3 system `a x = b` by Gauss-Jordan elimination with
+/// partial pivoting; `None` when singular.
+fn solve3(a: [[f64; 3]; 3], b: [f64; 3]) -> Option<[f64; 3]> {
+    let mut m = [[0.0f64; 4]; 3];
+    for i in 0..3 {
+        m[i][..3].copy_from_slice(&a[i]);
+        m[i][3] = b[i];
+    }
+    for col in 0..3 {
+        let mut piv = col;
+        for r in col + 1..3 {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        m.swap(col, piv);
+        for r in 0..3 {
+            if r == col {
+                continue;
+            }
+            let f = m[r][col] / m[col][col];
+            for c in col..4 {
+                m[r][c] -= f * m[col][c];
+            }
+        }
+    }
+    Some([m[0][3] / m[0][0], m[1][3] / m[1][1], m[2][3] / m[2][2]])
+}
+
+/// Per-architecture calibrations, persisted in a text file beside the
+/// tuning cache (see [`CalibrationSet::path_beside`]). Architectures
+/// without a fitted entry read as the identity, so a missing or partial
+/// file degrades to the uncalibrated model.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationSet {
+    by_arch: BTreeMap<String, Calibration>,
+}
+
+impl CalibrationSet {
+    /// An empty set (every arch reads as identity).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The calibration fitted for `arch_name`, or the identity.
+    pub fn get(&self, arch_name: &str) -> Calibration {
+        self.by_arch.get(arch_name).copied().unwrap_or_else(Calibration::identity)
+    }
+
+    /// Record `cal` for `arch_name`, replacing any previous fit.
+    pub fn set(&mut self, arch_name: &str, cal: Calibration) {
+        self.by_arch.insert(arch_name.to_string(), cal);
+    }
+
+    /// Number of architectures with a fitted entry.
+    pub fn len(&self) -> usize {
+        self.by_arch.len()
+    }
+
+    /// No architecture has a fitted entry?
+    pub fn is_empty(&self) -> bool {
+        self.by_arch.is_empty()
+    }
+
+    /// Where the calibration file lives for a given tune-cache path:
+    /// a sibling named `<cache stem>.calib.txt` (so the default
+    /// `tune_cache.txt` pairs with `tune_cache.calib.txt`, and an
+    /// artifacts-dir `tune.txt` with `tune.calib.txt`).
+    pub fn path_beside(cache_path: &Path) -> PathBuf {
+        let stem = cache_path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("tune_cache");
+        cache_path.with_file_name(format!("{stem}.calib.txt"))
+    }
+
+    /// Parse the text format:
+    ///
+    /// ```text
+    /// # qimeng calibration v1
+    /// calib gemm=<f64> softmax=<f64> membw=<f64> samples=<n> arch=<name>
+    /// ```
+    ///
+    /// One line per architecture; `arch=` is last and takes the rest of
+    /// the line. `#` comments and blank lines are skipped. Non-finite
+    /// or non-positive multipliers are rejected — a poisoned file must
+    /// not silently corrupt every search ranking downstream.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut set = CalibrationSet::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let body = line
+                .strip_prefix("calib ")
+                .ok_or_else(|| format!("calibration line {}: expected `calib`", lineno + 1))?;
+            let (head, arch) = body.split_once(" arch=").ok_or_else(|| {
+                format!("calibration line {}: missing arch= field", lineno + 1)
+            })?;
+            let arch = arch.trim();
+            if arch.is_empty() {
+                return Err(format!("calibration line {}: empty arch name", lineno + 1));
+            }
+            let mut fields: BTreeMap<&str, &str> = BTreeMap::new();
+            for kv in head.split_whitespace() {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    format!("calibration line {}: bad field `{kv}`", lineno + 1)
+                })?;
+                fields.insert(k, v);
+            }
+            let mult = |name: &str| -> Result<f64, String> {
+                let raw = fields
+                    .get(name)
+                    .ok_or_else(|| format!("calibration arch {arch}: missing {name}="))?;
+                let v: f64 = raw
+                    .parse()
+                    .map_err(|_| format!("calibration arch {arch}: {name} not a number"))?;
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!(
+                        "calibration arch {arch}: {name} must be finite and positive, got {v}"
+                    ));
+                }
+                Ok(v)
+            };
+            let cal = Calibration {
+                gemm: mult("gemm")?,
+                softmax: mult("softmax")?,
+                membw: mult("membw")?,
+                samples: fields
+                    .get("samples")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0),
+            };
+            set.by_arch.insert(arch.to_string(), cal);
+        }
+        Ok(set)
+    }
+
+    /// Serialize back to the text format (stable BTreeMap order; `{}`
+    /// f64 formatting is Rust's shortest-roundtrip form, so a
+    /// parse-render cycle is a fixed point).
+    pub fn render(&self) -> String {
+        let mut out = String::from("# qimeng calibration v1\n");
+        for (arch, c) in &self.by_arch {
+            out.push_str(&format!(
+                "calib gemm={} softmax={} membw={} samples={} arch={arch}\n",
+                c.gemm, c.softmax, c.membw, c.samples
+            ));
+        }
+        out
+    }
+
+    /// Load from disk; a missing file is an empty set (uncalibrated).
+    pub fn load(path: &Path) -> Result<Self, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                Self::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(CalibrationSet::new()),
+            Err(e) => Err(format!("reading {}: {e}", path.display())),
+        }
+    }
+
+    /// Write to disk (parent directories created as needed).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.render()).map_err(|e| format!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::schedules;
+    use crate::sketch::spec::AttnVariant;
+
+    /// A sample set with enough shape diversity to separate the three
+    /// components: head-dims 64/128 and causal on/off vary the
+    /// gemm:softmax ratio; the unfused schedule exercises the linear
+    /// (sum) combine; long-context cells lean on the memory term.
+    fn probe_samples(mut observe: impl FnMut(&FitSample) -> f64) -> Vec<FitSample> {
+        let arch = GpuArch::a100();
+        let mut out = Vec::new();
+        for (seq, hd, causal) in [
+            (1024usize, 64usize, true),
+            (2048, 64, false),
+            (4096, 64, true),
+            (4096, 128, false),
+            (8192, 128, true),
+            (16384, 64, true),
+        ] {
+            let spec = OpSpec::benchmark(AttnVariant::Mha, seq, hd, causal);
+            for (bm, bn) in [(128usize, 64usize), (64, 64), (64, 32)] {
+                let mut sched = schedules::ours(&arch, hd, spec.dtype);
+                sched.bm = bm;
+                sched.bn = bn;
+                if let Some(mut s) = FitSample::new(&spec, &arch, &sched, 1.0) {
+                    s.observed = observe(&s);
+                    out.push(s);
+                }
+            }
+            let naive = schedules::torch_naive();
+            if let Some(mut s) = FitSample::new(&spec, &arch, &naive, 1.0) {
+                s.observed = observe(&s);
+                out.push(s);
+            }
+        }
+        assert!(out.len() >= 12, "probe set unexpectedly small: {}", out.len());
+        out
+    }
+
+    #[test]
+    fn fit_recovers_known_multipliers_from_synthetic_observations() {
+        // Synthesize observations from a known ground-truth calibration;
+        // the fit must recover it (satellite: the self-calibration loop
+        // is sound, not just monotone).
+        let truth = Calibration { gemm: 3.0, softmax: 1.5, membw: 7.0, samples: 0 };
+        let samples = probe_samples(|s| s.modeled(&truth));
+        let cal = fit(&samples);
+        assert_eq!(cal.samples, samples.len());
+        for (got, want, name) in [
+            (cal.gemm, truth.gemm, "gemm"),
+            (cal.softmax, truth.softmax, "softmax"),
+            (cal.membw, truth.membw, "membw"),
+        ] {
+            assert!(
+                (got / want - 1.0).abs() < 0.1,
+                "{name}: fitted {got} vs truth {want}"
+            );
+        }
+        let post = disagreement(&samples, &cal);
+        assert!(post < 0.05, "residual disagreement {post}");
+        assert!(post < disagreement(&samples, &Calibration::identity()));
+    }
+
+    #[test]
+    fn fit_never_increases_disagreement() {
+        // Observations = modeled x a large constant plus deterministic
+        // per-sample jitter (the host-CPU-standing-in-for-GPU regime).
+        let mut i = 0u64;
+        let samples = probe_samples(|s| {
+            i = i.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let jitter = 1.0 + 0.3 * ((i >> 33) as f64 / (1u64 << 31) as f64 - 0.5);
+            s.modeled(&Calibration::identity()) * 25_000.0 * jitter
+        });
+        let pre = disagreement(&samples, &Calibration::identity());
+        let cal = fit(&samples);
+        let post = disagreement(&samples, &cal);
+        assert!(post <= pre, "fit must not increase disagreement: {pre} -> {post}");
+        // The scale gap is 25000x: calibration must close most of it.
+        assert!(post < 0.5 * pre, "fit barely moved: {pre} -> {post}");
+        // And the fitted multipliers absorb the host-vs-model scale.
+        assert!(cal.gemm > 100.0 || cal.membw > 100.0);
+    }
+
+    #[test]
+    fn identity_fit_on_empty_and_perfect_samples() {
+        assert!(fit(&[]).is_identity());
+        let samples = probe_samples(|s| s.modeled(&Calibration::identity()));
+        let cal = fit(&samples);
+        // Perfect observations: disagreement is already ~0; whatever
+        // candidate wins must keep it there.
+        assert!(disagreement(&samples, &cal) < 1e-6);
+    }
+
+    #[test]
+    fn calibration_set_roundtrips_through_text() {
+        let mut set = CalibrationSet::new();
+        set.set("A100", Calibration { gemm: 3.25, softmax: 1.5, membw: 27000.0, samples: 42 });
+        set.set("T4", Calibration { gemm: 0.5, softmax: 2.0, membw: 1.0, samples: 7 });
+        let parsed = CalibrationSet::parse(&set.render()).unwrap();
+        assert_eq!(parsed, set);
+        // Render is a fixed point after one parse.
+        assert_eq!(parsed.render(), set.render());
+        // Unfitted arches read as identity.
+        assert!(parsed.get("L40S").is_identity());
+        assert_eq!(parsed.get("A100").samples, 42);
+    }
+
+    #[test]
+    fn calibration_set_parse_rejects_garbage() {
+        assert!(CalibrationSet::parse("# comment only\n\n").unwrap().is_empty());
+        assert!(CalibrationSet::parse("notcalib gemm=1 arch=A100").is_err());
+        assert!(CalibrationSet::parse("calib gemm=1 softmax=1 membw=1").is_err());
+        assert!(CalibrationSet::parse("calib gemm=nan softmax=1 membw=1 arch=A100").is_err());
+        assert!(CalibrationSet::parse("calib gemm=-2 softmax=1 membw=1 arch=A100").is_err());
+        assert!(CalibrationSet::parse("calib softmax=1 membw=1 arch=A100").is_err());
+    }
+
+    #[test]
+    fn calibration_file_sits_beside_the_cache() {
+        assert_eq!(
+            CalibrationSet::path_beside(Path::new("tune_cache.txt")),
+            PathBuf::from("tune_cache.calib.txt")
+        );
+        assert_eq!(
+            CalibrationSet::path_beside(Path::new("artifacts/tune.txt")),
+            PathBuf::from("artifacts/tune.calib.txt")
+        );
+    }
+
+    #[test]
+    fn calibration_set_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("qimeng_calibration_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune.calib.txt");
+        let mut set = CalibrationSet::new();
+        set.set("A100", Calibration { gemm: 2.0, softmax: 3.0, membw: 4.0, samples: 9 });
+        set.save(&path).unwrap();
+        let loaded = CalibrationSet::load(&path).unwrap();
+        assert_eq!(loaded, set);
+        // Missing file loads as the empty (uncalibrated) set.
+        assert!(CalibrationSet::load(Path::new("/nonexistent/x.calib.txt"))
+            .unwrap()
+            .is_empty());
+    }
+}

@@ -23,6 +23,7 @@
 //! measurements; everything else (the other five sequence lengths,
 //! non-causal, crossovers, OOM) is *predicted* by the model.
 
+use super::calibrate::Calibration;
 use super::gpu::GpuArch;
 use crate::sketch::spec::{Direction, KvLayout, OpSpec};
 
@@ -89,6 +90,89 @@ impl Estimate {
 
 const KERNEL_LAUNCH_S: f64 = 5e-6;
 
+/// The model's wall-clock decomposed into the three calibratable time
+/// components ([`super::calibrate`]): GEMM compute, exposed softmax /
+/// pointwise work, and DRAM traffic. [`CostTerms::seconds_with`]
+/// recombines them exactly as [`estimate`] does — with the identity
+/// [`Calibration`] the result is bit-identical, which is what keeps the
+/// paper-anchored tests meaningful after calibration was bolted on.
+///
+/// Fused schedules keep the per-KV-tile granularity (`gemm`/`softmax`
+/// are *per-tile* seconds, scaled by `tile_iters` and `blocks` at
+/// recombination time) so the float grouping of the original formula is
+/// preserved; unfused schedules fold everything into `gemm` with
+/// `tile_iters = blocks = 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct CostTerms {
+    /// Schedule could not run at all (unfused intermediates exceed
+    /// device memory); every time component is zero.
+    pub oom: bool,
+    /// Fused combine is `max(compute, mem)`; unfused is the sum.
+    pub fused: bool,
+    /// Fused: mma seconds per KV tile. Unfused: whole-pass GEMM seconds
+    /// (including the MLA decompress einsums).
+    pub gemm: f64,
+    /// Fused: exposed softmax/mask seconds per KV tile. Unfused: 0 (the
+    /// pointwise chain is priced as S-matrix traffic there).
+    pub softmax: f64,
+    /// DRAM-traffic seconds at the descriptor's peak bandwidth.
+    pub mem: f64,
+    /// Fused: KV-tile iterations per thread block (`nkv + c_epi`);
+    /// unfused: 1.
+    pub tile_iters: f64,
+    /// Fused: thread blocks in the sweep; unfused: 1.
+    pub blocks: f64,
+    /// Kernel-launch overhead seconds — deliberately *not* calibrated.
+    pub overhead: f64,
+    /// Modeled DRAM traffic in bytes (reported as `dram_gb`).
+    pub traffic: f64,
+    /// The paper's FLOP count for the op (reported as `tflops`).
+    pub flops: f64,
+}
+
+impl CostTerms {
+    /// The all-zero OOM marker.
+    pub const fn oom() -> Self {
+        CostTerms {
+            oom: true,
+            fused: false,
+            gemm: 0.0,
+            softmax: 0.0,
+            mem: 0.0,
+            tile_iters: 0.0,
+            blocks: 0.0,
+            overhead: 0.0,
+            traffic: 0.0,
+            flops: 0.0,
+        }
+    }
+
+    /// Recombine into wall-clock seconds under `cal`. The identity
+    /// calibration reproduces [`estimate`]'s arithmetic bit-for-bit
+    /// (`x * 1.0 == x` and `x + 0.0 == x` exactly in IEEE-754).
+    pub fn seconds_with(&self, cal: &Calibration) -> f64 {
+        let compute = self.blocks
+            * (self.tile_iters * (self.gemm * cal.gemm + self.softmax * cal.softmax));
+        let mem = self.mem * cal.membw;
+        if self.fused {
+            compute.max(mem) + self.overhead
+        } else {
+            mem + compute + self.overhead
+        }
+    }
+
+    /// The three fully-scaled identity-calibration time components
+    /// `(gemm, softmax, mem)` in seconds — the feature vector the
+    /// least-squares fit consumes ([`super::calibrate::FitSample`]).
+    pub fn components(&self) -> (f64, f64, f64) {
+        (
+            self.blocks * self.tile_iters * self.gemm,
+            self.blocks * self.tile_iters * self.softmax,
+            self.mem,
+        )
+    }
+}
+
 /// Mean number of KV tiles visited per q-block under causal block
 /// skipping: mean over q-blocks of ceil((i+1)*BM / BN).
 fn mean_causal_kv_tiles(seq: usize, kv: usize, bm: usize, bn: usize) -> f64 {
@@ -103,6 +187,36 @@ fn mean_causal_kv_tiles(seq: usize, kv: usize, bm: usize, bn: usize) -> f64 {
 
 /// Price one cell.
 pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
+    estimate_calibrated(spec, arch, sched, &Calibration::identity())
+}
+
+/// Price one cell under a fitted [`Calibration`]: the same structural
+/// model with each time component scaled by its fitted multiplier. The
+/// identity calibration reproduces [`estimate`] exactly, so the
+/// paper-anchored tests pin this path too.
+pub fn estimate_calibrated(
+    spec: &OpSpec,
+    arch: &GpuArch,
+    sched: &Schedule,
+    cal: &Calibration,
+) -> Estimate {
+    let t = cost_terms(spec, arch, sched);
+    if t.oom {
+        return Estimate::oom();
+    }
+    let seconds = t.seconds_with(cal);
+    Estimate {
+        seconds,
+        tflops: t.flops / seconds / 1e12,
+        dram_gb: t.traffic / 1e9,
+        oom: false,
+    }
+}
+
+/// Decompose one cell into its calibratable time components — the
+/// shared core of [`estimate`] / [`estimate_calibrated`] and the
+/// feature extractor for the calibration fit.
+pub fn cost_terms(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> CostTerms {
     let b = spec.batch as f64;
     let h = spec.num_q_heads as f64;
     let s = spec.seq_len as f64;
@@ -119,7 +233,7 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
         let intermediates = b * h * s * kv * 6.0;
         let weights_inputs = spec.io_bytes() as f64;
         if intermediates + weights_inputs > arch.mem_gib * 1024.0 * 1024.0 * 1024.0 {
-            return Estimate::oom();
+            return CostTerms::oom();
         }
     }
 
@@ -161,12 +275,17 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
                 * (spec.head_dim + spec.v_head_dim) as f64;
             t_compute += decompress / (peak * 0.5);
         }
-        let seconds = t_mem + t_compute + KERNEL_LAUNCH_S * 8.0;
-        return Estimate {
-            seconds,
-            tflops: reported_flops / seconds / 1e12,
-            dram_gb: traffic / 1e9,
+        return CostTerms {
             oom: false,
+            fused: false,
+            gemm: t_compute,
+            softmax: 0.0,
+            mem: t_mem,
+            tile_iters: 1.0,
+            blocks: 1.0,
+            overhead: KERNEL_LAUNCH_S * 8.0,
+            traffic,
+            flops: reported_flops,
         };
     }
 
@@ -215,9 +334,6 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
         / (arch.cuda_tflops_f32 * 1e12)
         * (1.0 - sched.softmax_overlap);
 
-    let t_block = (nkv + sched.c_epi) * (t_tile_mma + t_tile_sm);
-    let t_compute = blocks * t_block;
-
     // DRAM traffic: Q + O once; K/V streamed per q-block with partial L2
     // reuse (working set vs L2 capacity).
     let q_bytes = b * h * s * spec.qk_dim() as f64 * e;
@@ -261,12 +377,17 @@ pub fn estimate(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> Estimate {
     }
     let t_mem = traffic / (arch.mem_bw_gbs * 1e9);
 
-    let seconds = t_compute.max(t_mem) + KERNEL_LAUNCH_S;
-    Estimate {
-        seconds,
-        tflops: reported_flops / seconds / 1e12,
-        dram_gb: traffic / 1e9,
+    CostTerms {
         oom: false,
+        fused: true,
+        gemm: t_tile_mma,
+        softmax: t_tile_sm,
+        mem: t_mem,
+        tile_iters: nkv + sched.c_epi,
+        blocks,
+        overhead: KERNEL_LAUNCH_S,
+        traffic,
+        flops: reported_flops,
     }
 }
 
@@ -426,6 +547,51 @@ mod tests {
             assert!(est.tflops > prev, "backward TFLOPS must rise: {} at {seq}", est.tflops);
             prev = est.tflops;
         }
+    }
+
+    #[test]
+    fn identity_calibration_recombines_estimate_exactly() {
+        // The decomposed terms must recombine to the exact bits the
+        // monolithic formula produced — calibration is a pure overlay.
+        let id = Calibration::identity();
+        for arch in GpuArch::all() {
+            for spec in crate::workload::table1_grid(true) {
+                for sched in schedules::baselines(&arch, spec.head_dim, spec.dtype) {
+                    let est = estimate(&spec, &arch, &sched);
+                    let terms = cost_terms(&spec, &arch, &sched);
+                    assert_eq!(est.oom, terms.oom, "{} on {}", sched.name, arch.name);
+                    if !est.oom {
+                        assert_eq!(
+                            est.seconds.to_bits(),
+                            terms.seconds_with(&id).to_bits(),
+                            "{} on {}: identity recombine drifted",
+                            sched.name,
+                            arch.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_multipliers_scale_their_component() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let spec = mha(4096, 64, true);
+        let base = estimate(&spec, &arch, &sched);
+        // Slowing every component 3x slows wall-clock (minus the fixed
+        // launch overhead) exactly 3x for the fused max-combine.
+        let slow = Calibration { gemm: 3.0, softmax: 3.0, membw: 3.0, samples: 0 };
+        let s = estimate_calibrated(&spec, &arch, &sched, &slow);
+        let want = (base.seconds - KERNEL_LAUNCH_S) * 3.0 + KERNEL_LAUNCH_S;
+        assert!((s.seconds / want - 1.0).abs() < 1e-12, "{} vs {want}", s.seconds);
+        // A gemm-only slowdown never *reduces* time, and dram_gb (pure
+        // traffic accounting) is untouched by any calibration.
+        let gemm_only = Calibration { gemm: 2.0, ..Calibration::identity() };
+        let g = estimate_calibrated(&spec, &arch, &sched, &gemm_only);
+        assert!(g.seconds >= base.seconds);
+        assert_eq!(g.dram_gb.to_bits(), base.dram_gb.to_bits());
     }
 
     #[test]

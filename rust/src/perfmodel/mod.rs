@@ -2,15 +2,19 @@
 //!
 //! Substitutes for the physical A100 / RTX8000 / T4 / L40S testbeds (see
 //! DESIGN.md §2): GPU descriptors ([`gpu`]), the schedule cost model
-//! ([`cost`]), per-implementation schedule presets ([`schedules`]) and
-//! the NSA latency model ([`nsa`]). The table renderers in
+//! ([`cost`]), per-implementation schedule presets ([`schedules`]), the
+//! NSA latency model ([`nsa`]), and the self-calibration loop
+//! ([`calibrate`]) that fits the cost model's three time components to
+//! observed runtimes from the tuning cache. The table renderers in
 //! [`crate::report`] drive this model to regenerate every table and
 //! figure of the paper's evaluation.
 
+pub mod calibrate;
 pub mod cost;
 pub mod gpu;
 pub mod nsa;
 pub mod schedules;
 
-pub use cost::{estimate, Estimate, Schedule};
+pub use calibrate::{Calibration, CalibrationSet};
+pub use cost::{estimate, estimate_calibrated, Estimate, Schedule};
 pub use gpu::GpuArch;

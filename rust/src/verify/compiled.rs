@@ -129,11 +129,15 @@ impl Arith {
 }
 
 /// Fused score-GEMM epilogue: the compiled op-list peephole collapses a
-/// `GEMM → scale (MapScalar·Mul, in place) → CausalMask → WindowMask`
-/// chain into one pass over the freshly produced tile. Per element the
-/// float ops and their order are exactly those of the separate ops, so
-/// fusion is bit-identical to the walker (enforced by
-/// `tests/compiled_interp.rs`).
+/// `GEMM → scale (MapScalar·Mul, in place) → CausalMask → WindowMask →
+/// row-broadcast Subtract` chain into one pass over the freshly produced
+/// tile. Per element the float ops and their order are exactly those of
+/// the separate ops, so fusion is bit-identical to the walker (enforced
+/// by `tests/compiled_interp.rs` and `tests/backward.rs`).
+///
+/// The `sub` step is what the backward programs hit twice per tile: the
+/// recompute `S`-GEMM absorbs `sub(S, Lse)` (after its scale and mask)
+/// and the `dP`-GEMM absorbs `sub(dP, Delta)`.
 #[derive(Debug, Clone, Default)]
 struct GemmEpilogue {
     /// `out[i] *= scalars[idx]`.
@@ -142,11 +146,17 @@ struct GemmEpilogue {
     causal: Option<(CExpr, CExpr)>,
     /// Sliding-window mask at `(lq, lk)` with the compile-time window.
     window: Option<(CExpr, CExpr, i64)>,
+    /// `out[r][c] -= stat[r]` against a `(rows, 1)` stat tile, applied
+    /// last ([`apply_row_broadcast`], shared with [`Op::MapBroadcast`]).
+    sub: Option<SlotId>,
 }
 
 impl GemmEpilogue {
     fn is_empty(&self) -> bool {
-        self.scale.is_none() && self.causal.is_none() && self.window.is_none()
+        self.scale.is_none()
+            && self.causal.is_none()
+            && self.window.is_none()
+            && self.sub.is_none()
     }
 }
 
@@ -238,6 +248,10 @@ pub struct TileArena {
     bufs: Vec<Vec<f32>>,
     scratch: Vec<Vec<f32>>,
     vars: Vec<i64>,
+    /// `Aᵀ` pack scratch for transposed-A GEMMs
+    /// ([`tensor::matmul_into_scratch`]) — grown on first use, then
+    /// reused so the steady state stays allocation-free.
+    pack: Vec<f32>,
 }
 
 /// A [`TlProgram`] lowered to slot-indexed ops (see module docs).
@@ -944,6 +958,19 @@ fn apply_window_mask(
     }
 }
 
+/// `buf[r][c] = op(buf[r][c], stat[r])` — the in-place row-broadcast
+/// loop shared by the standalone [`Op::MapBroadcast`] execution and the
+/// fused GEMM epilogue's `sub` step, so fusing the subtract changes no
+/// float op (bit-identity by construction).
+fn apply_row_broadcast(buf: &mut [f32], stat: &[f32], rows: usize, cols: usize, op: Arith) {
+    for r in 0..rows {
+        let bv = stat[r];
+        for x in &mut buf[r * cols..(r + 1) * cols] {
+            *x = op.apply(*x, bv);
+        }
+    }
+}
+
 /// Does `op` read or write `slot`? Used by the epilogue-fusion scan to
 /// decide whether the scale/mask ops may commute past it (the reasoner
 /// interleaves the double-buffer prefetch between the score GEMM and
@@ -963,12 +990,17 @@ enum FuseStep {
     Scale(usize),
     Causal(CExpr, CExpr),
     Window(CExpr, CExpr, i64),
+    /// Row-broadcast subtract of a `(rows, 1)` stat slot.
+    Sub(SlotId),
 }
 
 /// Peephole pass over the op list (recursing into loop/guard bodies):
 /// `Gemm (fresh, unaliased) … MapScalar(Mul, in place) … CausalMask …
-/// WindowMask` over the same tile fuses into the GEMM's epilogue,
-/// skipping only intervening ops that provably don't touch the tile.
+/// WindowMask … MapBroadcast(Sub, in place)` over the same tile fuses
+/// into the GEMM's epilogue, skipping only intervening ops that provably
+/// don't touch the tile (the `Sub` step additionally requires that no
+/// skipped op touches its stat slot — hoisting the subtract across a
+/// reload of `Lse`/`Delta` would read stale stats).
 fn fuse_gemm_epilogues(ops: &mut Vec<Op>) {
     for op in ops.iter_mut() {
         match op {
@@ -1011,25 +1043,47 @@ fn fuse_gemm_epilogues(ops: &mut Vec<Op>) {
                 {
                     Some(FuseStep::Window(lq.clone(), lk.clone(), *window))
                 }
+                // In-place row-broadcast subtract of a distinct stat
+                // tile (backward's `sub(S, Lse)` / `sub(dP, Delta)`).
+                // Only legal when none of the skipped ops between the
+                // GEMM and here wrote the stat slot — the fused subtract
+                // runs at the GEMM, before those skipped ops.
+                Op::MapBroadcast { op: Arith::Sub, a, b, out: o, rows, cols }
+                    if *a == out
+                        && *o == out
+                        && *b != out
+                        && rows * cols == len
+                        && ops[i + 1..j].iter().all(|skipped| !op_touches(skipped, *b)) =>
+                {
+                    Some(FuseStep::Sub(*b))
+                }
                 _ => None,
             };
             let Some(step) = step else { break };
             let Op::Gemm { epilogue, .. } = &mut ops[i] else { unreachable!() };
             let accepted = match step {
-                // The epilogue applies scale → causal → window, so each
-                // step is only absorbable while that order holds.
+                // The epilogue applies scale → causal → window → sub, so
+                // each step is only absorbable while that order holds.
                 FuseStep::Scale(scalar) if epilogue.is_empty() => {
                     epilogue.scale = Some(scalar);
                     true
                 }
                 FuseStep::Causal(lq, lk)
-                    if epilogue.causal.is_none() && epilogue.window.is_none() =>
+                    if epilogue.causal.is_none()
+                        && epilogue.window.is_none()
+                        && epilogue.sub.is_none() =>
                 {
                     epilogue.causal = Some((lq, lk));
                     true
                 }
-                FuseStep::Window(lq, lk, w) if epilogue.window.is_none() => {
+                FuseStep::Window(lq, lk, w)
+                    if epilogue.window.is_none() && epilogue.sub.is_none() =>
+                {
                     epilogue.window = Some((lq, lk, w));
+                    true
+                }
+                FuseStep::Sub(b) if epilogue.sub.is_none() => {
+                    epilogue.sub = Some(b);
                     true
                 }
                 _ => false,
@@ -1106,6 +1160,7 @@ impl CompiledBlockProgram {
             bufs: self.slots.iter().map(|&n| vec![0.0; n]).collect(),
             scratch: (0..4).map(|_| vec![0.0; self.max_rows]).collect(),
             vars: vec![0; self.n_vars],
+            pack: Vec::new(),
         }
     }
 
@@ -1306,7 +1361,7 @@ impl CompiledBlockProgram {
                     match scratch {
                         None => {
                             let mut obuf = std::mem::take(&mut arena.bufs[*o]);
-                            tensor::matmul_into(
+                            tensor::matmul_into_scratch(
                                 &arena.bufs[*a][..m * k],
                                 &arena.bufs[*b][..k * n],
                                 &mut obuf[..m * n],
@@ -1315,10 +1370,11 @@ impl CompiledBlockProgram {
                                 k,
                                 *ta,
                                 *tb,
+                                &mut arena.pack,
                             );
-                            // Fused scale + mask over the fresh product —
-                            // the exact float ops the separate op-list
-                            // performed, in the same order.
+                            // Fused scale + mask + subtract over the fresh
+                            // product — the exact float ops the separate
+                            // op-list performed, in the same order.
                             if let Some(scalar) = epilogue.scale {
                                 let v = scalars[scalar];
                                 for x in &mut obuf[..m * n] {
@@ -1335,11 +1391,20 @@ impl CompiledBlockProgram {
                                 let lk = lk.eval(&arena.vars)? as usize;
                                 apply_window_mask(&mut obuf[..m * n], m, n, lq, lk, *w);
                             }
+                            if let Some(bslot) = epilogue.sub {
+                                apply_row_broadcast(
+                                    &mut obuf[..m * n],
+                                    &arena.bufs[bslot][..m],
+                                    m,
+                                    n,
+                                    Arith::Sub,
+                                );
+                            }
                             arena.bufs[*o] = obuf;
                         }
                         Some(t) => {
                             let mut prod = std::mem::take(&mut arena.bufs[*t]);
-                            tensor::matmul_into(
+                            tensor::matmul_into_scratch(
                                 &arena.bufs[*a][..m * k],
                                 &arena.bufs[*b][..k * n],
                                 &mut prod[..m * n],
@@ -1348,6 +1413,7 @@ impl CompiledBlockProgram {
                                 k,
                                 *ta,
                                 *tb,
+                                &mut arena.pack,
                             );
                             let obuf = &mut arena.bufs[*o];
                             if *accumulate {
@@ -1385,13 +1451,13 @@ impl CompiledBlockProgram {
                             *x = op.apply(*x, *x);
                         }
                     } else if a == o {
-                        let bb = &arena.bufs[*b];
-                        for r in 0..rows {
-                            let bv = bb[r];
-                            for x in &mut obuf[r * cols..(r + 1) * cols] {
-                                *x = op.apply(*x, bv);
-                            }
-                        }
+                        apply_row_broadcast(
+                            &mut obuf[..rows * cols],
+                            &arena.bufs[*b][..rows],
+                            rows,
+                            cols,
+                            *op,
+                        );
                     } else if b == o {
                         // The stat column must be read before the output
                         // rows overwrite it: stage it in row scratch.
@@ -1737,6 +1803,29 @@ mod tests {
             1,
             "the score GEMM must absorb the scale + causal-mask chain"
         );
+    }
+
+    #[test]
+    fn backward_gemms_absorb_stat_subtracts_into_epilogues() {
+        use crate::reasoner::reason;
+        use crate::sketch::backward_sketches;
+        use crate::sketch::spec::Direction;
+        use crate::sketch::GradTarget;
+        let mut spec = OpSpec::benchmark(AttnVariant::Mha, 256, 64, true)
+            .with_direction(Direction::Backward);
+        spec.batch = 1;
+        for (grad, sk) in backward_sketches(&spec) {
+            let r = reason(&sk, &spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let c = compile(&r.program).expect("compile backward");
+            let want = match grad {
+                // dV only recomputes S (scale + mask + sub Lse).
+                GradTarget::DV => 1,
+                // dQ/dK additionally fuse sub(dP, Delta) into the
+                // dP-GEMM epilogue.
+                _ => 2,
+            };
+            assert_eq!(c.fused_epilogues(), want, "{grad}: sub must fuse");
+        }
     }
 
     #[test]

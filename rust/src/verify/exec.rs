@@ -185,149 +185,393 @@ fn run_program_inner(
     threads: usize,
     profile: bool,
 ) -> Result<(Tensor2, Option<OpProfile>), String> {
-    let params = program.params();
-    let need = |n: &str| -> Result<i64, String> {
-        params.get(n).copied().ok_or_else(|| format!("program missing param `{n}`"))
-    };
-    let bm = need("BM")? as usize;
+    prepare(program)?.run_inner(named, scale, tables, threads, profile)
+}
 
+/// A TL block program lowered once ([`compiled::compile`]) and ready to
+/// sweep any number of times — the head-batched driver of the compiled
+/// engine. Hosts that execute the same program repeatedly (the
+/// autotuner's warm-up + timed probes, the verify gate's identity +
+/// shuffled-table paged runs, the serving oracle's per-head loop) pay
+/// the lowering cost here once instead of once per run, and
+/// [`PreparedProgram::run_heads`] flattens a whole multi-head batch into
+/// one `(head, q_block)` task list so workers stay saturated even when
+/// any single head has fewer blocks than workers.
+pub struct PreparedProgram {
+    compiled: compiled::CompiledBlockProgram,
+    /// The program's `param` bindings (shape checks for attention runs).
+    params: std::collections::BTreeMap<String, i64>,
+    /// `param BM` — store-tile fallback height.
+    bm: usize,
+}
+
+/// Lower `program` once for repeated sweeps. Fails exactly where the
+/// one-shot drivers would: missing `BM`, compile errors, or a program
+/// that never stores a global output.
+pub fn prepare(program: &TlProgram) -> Result<PreparedProgram, String> {
+    let params = program.params();
+    let bm = params
+        .get("BM")
+        .copied()
+        .ok_or_else(|| "program missing param `BM`".to_string())? as usize;
     let compiled = compiled::compile(program)?;
-    let out_meta = compiled
-        .output()
-        .ok_or_else(|| format!("program `{}` never stores a global output", program.name))?
-        .clone();
-    let mut ins: Vec<&[f32]> = Vec::with_capacity(compiled.inputs().len());
-    for g in compiled.inputs() {
-        let t = named
-            .get(g.name.as_str())
-            .ok_or_else(|| format!("global tensor `{}` missing", g.name))?;
-        if (t.rows, t.cols) != (g.rows, g.cols) {
+    if compiled.output().is_none() {
+        return Err(format!("program `{}` never stores a global output", program.name));
+    }
+    Ok(PreparedProgram { compiled, params, bm })
+}
+
+/// One head's inputs for a head-batched attention sweep
+/// ([`PreparedProgram::run_heads`]). All heads run the same prepared
+/// program, so their shapes must agree with its `param` bindings.
+#[derive(Clone, Copy)]
+pub struct AttnHead<'a> {
+    /// Query tile, `(seq_len, HeadDim)`.
+    pub q: &'a Tensor2,
+    /// Key tile, `(kv_len, HeadDim)`.
+    pub k: &'a Tensor2,
+    /// Value tile, `(kv_len, VDim)`.
+    pub v: &'a Tensor2,
+}
+
+impl PreparedProgram {
+    /// The lowered program (I/O metadata, fusion counts).
+    pub fn compiled(&self) -> &compiled::CompiledBlockProgram {
+        &self.compiled
+    }
+
+    /// [`run_attention_tables`] against this prepared program: one
+    /// head's forward sweep, without re-lowering.
+    pub fn run_attention(
+        &self,
+        q: &Tensor2,
+        k: &Tensor2,
+        v: &Tensor2,
+        scale: f32,
+        tables: &std::collections::BTreeMap<String, Vec<i64>>,
+        threads: usize,
+    ) -> Result<Tensor2, String> {
+        self.check_attention_shapes(q, k, v)?;
+        let mut named = std::collections::BTreeMap::new();
+        named.insert("Q", q);
+        named.insert("K", k);
+        named.insert("V", v);
+        self.run_inner(&named, scale, tables, threads, false).map(|(o, _)| o)
+    }
+
+    /// [`run_program_tables`] against this prepared program: one sweep
+    /// with by-name inputs (forward or backward), without re-lowering.
+    pub fn run_tables(
+        &self,
+        named: &std::collections::BTreeMap<&str, &Tensor2>,
+        scale: f32,
+        tables: &std::collections::BTreeMap<String, Vec<i64>>,
+        threads: usize,
+    ) -> Result<Tensor2, String> {
+        self.run_inner(named, scale, tables, threads, false).map(|(o, _)| o)
+    }
+
+    /// Head-batched sweep: run every head of a batch through one
+    /// flattened `(head, block)` task list. Workers are dealt tasks
+    /// round-robin across the *whole* batch (so four workers stay busy
+    /// even on heads with two q-blocks each) and reuse one
+    /// [`compiled::TileArena`] across all of their tasks. Numerics are
+    /// bit-identical to running [`Self::run_attention`] per head at any
+    /// thread count: each `(head, block)` task performs exactly the
+    /// per-head sweep's float ops on its own disjoint output rows.
+    /// Block tables are shared across heads (paged layouts page the KV
+    /// space identically per head).
+    pub fn run_heads(
+        &self,
+        heads: &[AttnHead<'_>],
+        scale: f32,
+        tables: &std::collections::BTreeMap<String, Vec<i64>>,
+        threads: usize,
+    ) -> Result<Vec<Tensor2>, String> {
+        let out_meta = self.compiled.output().expect("checked in prepare").clone();
+        let mut per_head: Vec<Vec<&[f32]>> = Vec::with_capacity(heads.len());
+        for h in heads {
+            self.check_attention_shapes(h.q, h.k, h.v)?;
+            let mut named = std::collections::BTreeMap::new();
+            named.insert("Q", h.q);
+            named.insert("K", h.k);
+            named.insert("V", h.v);
+            per_head.push(self.bind_inputs(&named)?);
+        }
+        let tbls = self.bind_tables(tables)?;
+        let rows_per_block = self.rows_per_block(&out_meta)?;
+        let nblocks = out_meta.rows / rows_per_block;
+        let mut outs: Vec<Tensor2> =
+            (0..heads.len()).map(|_| Tensor2::zeros(out_meta.rows, out_meta.cols)).collect();
+        let ntasks = heads.len() * nblocks;
+        let parallel = threads > 1
+            && ntasks > 1
+            && out_meta.cols > 0
+            && self.compiled.block_local_store()
+            && self.compiled.store_rows() == Some(rows_per_block);
+        let bm = rows_per_block;
+
+        let sweep = obs::span_cat("engine.sweep", "engine");
+        if !parallel {
+            let mut arena = self.compiled.new_arena();
+            for (h, o) in outs.iter_mut().enumerate() {
+                for b in 0..nblocks {
+                    self.compiled.execute_block_tables(
+                        &per_head[h],
+                        &mut o.data,
+                        0,
+                        b as i64,
+                        &[scale],
+                        &tbls,
+                        &mut arena,
+                    )?;
+                }
+            }
+            sweep.finish();
+            return Ok(outs);
+        }
+
+        // Flatten (head, block) and deal tasks round-robin, striding
+        // both dimensions: causal programs do linearly more work for
+        // later q-blocks, and round-robin over the flattened list keeps
+        // the triangular load balanced across heads too.
+        let chunk = bm * out_meta.cols;
+        let workers = threads.min(ntasks);
+        let mut buckets: Vec<Vec<(usize, usize, &mut [f32])>> =
+            (0..workers).map(|_| Vec::with_capacity(ntasks.div_ceil(workers))).collect();
+        let mut t = 0usize;
+        for (h, o) in outs.iter_mut().enumerate() {
+            for (b, rows) in o.data.chunks_mut(chunk).enumerate() {
+                buckets[t % workers].push((h, b, rows));
+                t += 1;
+            }
+        }
+        let compiled_ref = &self.compiled;
+        let heads_ref = &per_head;
+        let tbls_ref = &tbls;
+        let ctx = sweep.ctx();
+        std::thread::scope(|scope| -> Result<(), String> {
+            let mut handles = Vec::with_capacity(workers);
+            for group in &mut buckets {
+                handles.push(scope.spawn(move || -> Result<(), String> {
+                    let _ws = obs::span_under("engine.worker", "engine", ctx);
+                    let mut arena = compiled_ref.new_arena();
+                    for (h, b, rows) in group.iter_mut() {
+                        compiled_ref.execute_block_tables(
+                            &heads_ref[*h],
+                            rows,
+                            *b * bm,
+                            *b as i64,
+                            &[scale],
+                            tbls_ref,
+                            &mut arena,
+                        )?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
+            }
+            Ok(())
+        })?;
+        sweep.finish();
+        Ok(outs)
+    }
+
+    /// Shape checks shared by the attention entry points — identical to
+    /// the one-shot [`run_attention_tables`] validation.
+    fn check_attention_shapes(&self, q: &Tensor2, k: &Tensor2, v: &Tensor2) -> Result<(), String> {
+        let need = |n: &str| -> Result<i64, String> {
+            self.params
+                .get(n)
+                .copied()
+                .ok_or_else(|| format!("program missing param `{n}`"))
+        };
+        let bm = need("BM")? as usize;
+        let bn = need("BN")? as usize;
+        let seq = need("seq_len")? as usize;
+        let kv = need("kv_len")? as usize;
+        need("VDim")?;
+        if q.rows != seq || k.rows != kv || v.rows != kv {
             return Err(format!(
-                "input `{}` is {}x{} but the program declares {}x{}",
-                g.name, t.rows, t.cols, g.rows, g.cols
+                "input shapes ({}, {}, {}) disagree with params (seq {seq}, kv {kv})",
+                q.rows, k.rows, v.rows
             ));
         }
-        ins.push(&t.data);
-    }
-    let mut tbls: Vec<&[i64]> = Vec::with_capacity(compiled.tables().len());
-    for name in compiled.tables() {
-        let t = tables
-            .get(name)
-            .ok_or_else(|| format!("program gathers through `{name}` but no table was supplied"))?;
-        tbls.push(t.as_slice());
-    }
-
-    let rows_per_block = compiled.store_rows().unwrap_or(bm).max(1);
-    if out_meta.rows % rows_per_block != 0 {
-        return Err(format!(
-            "store tile of {rows_per_block} rows does not tile the {}-row output `{}`",
-            out_meta.rows, out_meta.name
-        ));
-    }
-    let mut o = Tensor2::zeros(out_meta.rows, out_meta.cols);
-    let nblocks = out_meta.rows / rows_per_block;
-    let parallel = threads > 1
-        && nblocks > 1
-        && out_meta.cols > 0
-        && compiled.block_local_store()
-        && compiled.store_rows() == Some(rows_per_block);
-    let bm = rows_per_block;
-
-    let sweep = obs::span_cat("engine.sweep", "engine");
-    if !parallel {
-        let mut prof = if profile { Some(OpProfile::new()) } else { None };
-        let mut arena = compiled.new_arena();
-        for b in 0..nblocks {
-            match prof.as_mut() {
-                Some(p) => compiled.execute_block_tables_profiled(
-                    &ins,
-                    &mut o.data,
-                    0,
-                    b as i64,
-                    &[scale],
-                    &tbls,
-                    &mut arena,
-                    p,
-                )?,
-                None => compiled.execute_block_tables(
-                    &ins,
-                    &mut o.data,
-                    0,
-                    b as i64,
-                    &[scale],
-                    &tbls,
-                    &mut arena,
-                )?,
-            }
-        }
-        sweep.finish();
-        return Ok((o, prof));
-    }
-
-    // Parallel sweep: split O into one disjoint `bm`-row chunk per
-    // block and deal blocks to workers round-robin (worker w takes
-    // blocks w, w+workers, ...). Causal programs do linearly more work
-    // for later q-blocks, so striding balances the triangular load where
-    // contiguous runs would leave the last worker with ~2x the mean.
-    let chunk = bm * out_meta.cols;
-    let workers = threads.min(nblocks);
-    let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
-        (0..workers).map(|_| Vec::with_capacity(nblocks.div_ceil(workers))).collect();
-    for (b, rows) in o.data.chunks_mut(chunk).enumerate() {
-        buckets[b % workers].push((b, rows));
-    }
-    let compiled_ref = &compiled;
-    let ins_ref = &ins;
-    let tbls_ref = &tbls;
-    let ctx = sweep.ctx();
-    let mut merged = if profile { Some(OpProfile::new()) } else { None };
-    std::thread::scope(|scope| -> Result<(), String> {
-        let mut handles = Vec::with_capacity(workers);
-        for group in &mut buckets {
-            handles.push(scope.spawn(move || -> Result<Option<OpProfile>, String> {
-                let _ws = obs::span_under("engine.worker", "engine", ctx);
-                // Each worker aggregates into its own local profile —
-                // no locks or shared atomics on the block loop — and
-                // hands it back through the join for the host to merge.
-                let mut prof = if profile { Some(OpProfile::new()) } else { None };
-                let mut arena = compiled_ref.new_arena();
-                for (b, rows) in group.iter_mut() {
-                    match prof.as_mut() {
-                        Some(p) => compiled_ref.execute_block_tables_profiled(
-                            ins_ref,
-                            rows,
-                            *b * bm,
-                            *b as i64,
-                            &[scale],
-                            tbls_ref,
-                            &mut arena,
-                            p,
-                        )?,
-                        None => compiled_ref.execute_block_tables(
-                            ins_ref,
-                            rows,
-                            *b * bm,
-                            *b as i64,
-                            &[scale],
-                            tbls_ref,
-                            &mut arena,
-                        )?,
-                    }
-                }
-                Ok(prof)
-            }));
-        }
-        for h in handles {
-            let worker_prof =
-                h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
-            if let (Some(m), Some(p)) = (merged.as_mut(), worker_prof) {
-                m.merge(&p);
-            }
+        if seq % bm != 0 || kv % bn != 0 {
+            return Err(format!("BM={bm}/BN={bn} must divide seq={seq}/kv={kv}"));
         }
         Ok(())
-    })?;
-    sweep.finish();
-    Ok((o, merged))
+    }
+
+    /// Resolve each compiled input against the by-name map.
+    fn bind_inputs<'a>(
+        &self,
+        named: &std::collections::BTreeMap<&str, &'a Tensor2>,
+    ) -> Result<Vec<&'a [f32]>, String> {
+        let mut ins: Vec<&[f32]> = Vec::with_capacity(self.compiled.inputs().len());
+        for g in self.compiled.inputs() {
+            let t = named
+                .get(g.name.as_str())
+                .ok_or_else(|| format!("global tensor `{}` missing", g.name))?;
+            if (t.rows, t.cols) != (g.rows, g.cols) {
+                return Err(format!(
+                    "input `{}` is {}x{} but the program declares {}x{}",
+                    g.name, t.rows, t.cols, g.rows, g.cols
+                ));
+            }
+            ins.push(&t.data);
+        }
+        Ok(ins)
+    }
+
+    /// Resolve each gathered block table against the by-name map.
+    fn bind_tables<'a>(
+        &self,
+        tables: &'a std::collections::BTreeMap<String, Vec<i64>>,
+    ) -> Result<Vec<&'a [i64]>, String> {
+        let mut tbls: Vec<&[i64]> = Vec::with_capacity(self.compiled.tables().len());
+        for name in self.compiled.tables() {
+            let t = tables.get(name).ok_or_else(|| {
+                format!("program gathers through `{name}` but no table was supplied")
+            })?;
+            tbls.push(t.as_slice());
+        }
+        Ok(tbls)
+    }
+
+    /// Store-tile height, validated against the output shape.
+    fn rows_per_block(&self, out_meta: &compiled::GlobalMeta) -> Result<usize, String> {
+        let rows_per_block = self.compiled.store_rows().unwrap_or(self.bm).max(1);
+        if out_meta.rows % rows_per_block != 0 {
+            return Err(format!(
+                "store tile of {rows_per_block} rows does not tile the {}-row output `{}`",
+                out_meta.rows, out_meta.name
+            ));
+        }
+        Ok(rows_per_block)
+    }
+
+    fn run_inner(
+        &self,
+        named: &std::collections::BTreeMap<&str, &Tensor2>,
+        scale: f32,
+        tables: &std::collections::BTreeMap<String, Vec<i64>>,
+        threads: usize,
+        profile: bool,
+    ) -> Result<(Tensor2, Option<OpProfile>), String> {
+        let compiled = &self.compiled;
+        let out_meta = compiled.output().expect("checked in prepare").clone();
+        let ins = self.bind_inputs(named)?;
+        let tbls = self.bind_tables(tables)?;
+
+        let rows_per_block = self.rows_per_block(&out_meta)?;
+        let mut o = Tensor2::zeros(out_meta.rows, out_meta.cols);
+        let nblocks = out_meta.rows / rows_per_block;
+        let parallel = threads > 1
+            && nblocks > 1
+            && out_meta.cols > 0
+            && compiled.block_local_store()
+            && compiled.store_rows() == Some(rows_per_block);
+        let bm = rows_per_block;
+
+        let sweep = obs::span_cat("engine.sweep", "engine");
+        if !parallel {
+            let mut prof = if profile { Some(OpProfile::new()) } else { None };
+            let mut arena = compiled.new_arena();
+            for b in 0..nblocks {
+                match prof.as_mut() {
+                    Some(p) => compiled.execute_block_tables_profiled(
+                        &ins,
+                        &mut o.data,
+                        0,
+                        b as i64,
+                        &[scale],
+                        &tbls,
+                        &mut arena,
+                        p,
+                    )?,
+                    None => compiled.execute_block_tables(
+                        &ins,
+                        &mut o.data,
+                        0,
+                        b as i64,
+                        &[scale],
+                        &tbls,
+                        &mut arena,
+                    )?,
+                }
+            }
+            sweep.finish();
+            return Ok((o, prof));
+        }
+
+        // Parallel sweep: split O into one disjoint `bm`-row chunk per
+        // block and deal blocks to workers round-robin (worker w takes
+        // blocks w, w+workers, ...). Causal programs do linearly more work
+        // for later q-blocks, so striding balances the triangular load where
+        // contiguous runs would leave the last worker with ~2x the mean.
+        let chunk = bm * out_meta.cols;
+        let workers = threads.min(nblocks);
+        let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+            (0..workers).map(|_| Vec::with_capacity(nblocks.div_ceil(workers))).collect();
+        for (b, rows) in o.data.chunks_mut(chunk).enumerate() {
+            buckets[b % workers].push((b, rows));
+        }
+        let compiled_ref = compiled;
+        let ins_ref = &ins;
+        let tbls_ref = &tbls;
+        let ctx = sweep.ctx();
+        let mut merged = if profile { Some(OpProfile::new()) } else { None };
+        std::thread::scope(|scope| -> Result<(), String> {
+            let mut handles = Vec::with_capacity(workers);
+            for group in &mut buckets {
+                handles.push(scope.spawn(move || -> Result<Option<OpProfile>, String> {
+                    let _ws = obs::span_under("engine.worker", "engine", ctx);
+                    // Each worker aggregates into its own local profile —
+                    // no locks or shared atomics on the block loop — and
+                    // hands it back through the join for the host to merge.
+                    let mut prof = if profile { Some(OpProfile::new()) } else { None };
+                    let mut arena = compiled_ref.new_arena();
+                    for (b, rows) in group.iter_mut() {
+                        match prof.as_mut() {
+                            Some(p) => compiled_ref.execute_block_tables_profiled(
+                                ins_ref,
+                                rows,
+                                *b * bm,
+                                *b as i64,
+                                &[scale],
+                                tbls_ref,
+                                &mut arena,
+                                p,
+                            )?,
+                            None => compiled_ref.execute_block_tables(
+                                ins_ref,
+                                rows,
+                                *b * bm,
+                                *b as i64,
+                                &[scale],
+                                tbls_ref,
+                                &mut arena,
+                            )?,
+                        }
+                    }
+                    Ok(prof)
+                }));
+            }
+            for h in handles {
+                let worker_prof =
+                    h.join().map_err(|_| "compiled-engine worker panicked".to_string())??;
+                if let (Some(m), Some(p)) = (merged.as_mut(), worker_prof) {
+                    m.merge(&p);
+                }
+            }
+            Ok(())
+        })?;
+        sweep.finish();
+        Ok((o, merged))
+    }
 }
 
 /// Run a closure over `tasks` indices on up to `threads` scoped
@@ -453,6 +697,57 @@ mod tests {
             assert!(prof.count_of(crate::obs::OpKind::Gemm) > 0);
             assert!(prof.total_ns() > 0);
         }
+    }
+
+    #[test]
+    fn head_batched_sweep_is_bit_identical_to_per_head() {
+        let spec = small_spec(true);
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let prepared = prepare(&r.program).expect("prepare");
+        let no_tables = std::collections::BTreeMap::new();
+        let heads: Vec<(Tensor2, Tensor2, Tensor2)> = (0..3)
+            .map(|h| {
+                (
+                    Tensor2::randn(spec.seq_len, 64, 50 + h),
+                    Tensor2::randn(spec.kv_len, 64, 60 + h),
+                    Tensor2::randn(spec.kv_len, 64, 70 + h),
+                )
+            })
+            .collect();
+        // Oracle: the one-shot per-head driver (which itself is pinned
+        // bit-identical to the walker by the tests above).
+        let per_head: Vec<Tensor2> = heads
+            .iter()
+            .map(|(q, k, v)| run_attention_threads(&r.program, q, k, v, 0.125, 1).unwrap())
+            .collect();
+        // Prepared single-head reruns match the one-shot driver.
+        let (q0, k0, v0) = &heads[0];
+        let rerun = prepared.run_attention(q0, k0, v0, 0.125, &no_tables, 2).unwrap();
+        assert_eq!(rerun.data, per_head[0].data, "prepared rerun diverged");
+        // Head-batched sweep matches per-head at every worker count.
+        let refs: Vec<AttnHead> =
+            heads.iter().map(|(q, k, v)| AttnHead { q, k, v }).collect();
+        for threads in [1, 2, 5] {
+            let got = prepared.run_heads(&refs, 0.125, &no_tables, threads).unwrap();
+            assert_eq!(got.len(), heads.len());
+            for (h, (g, w)) in got.iter().zip(&per_head).enumerate() {
+                assert_eq!(g.data, w.data, "head {h} diverged at threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn head_batched_sweep_rejects_bad_shapes() {
+        let spec = small_spec(false);
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let prepared = prepare(&r.program).expect("prepare");
+        let q = Tensor2::randn(spec.seq_len, 64, 1);
+        let k = Tensor2::randn(spec.kv_len, 64, 2);
+        let v = Tensor2::randn(spec.kv_len + 1, 64, 3); // wrong kv rows
+        let err = prepared
+            .run_heads(&[AttnHead { q: &q, k: &k, v: &v }], 0.125, &Default::default(), 2)
+            .unwrap_err();
+        assert!(err.contains("disagree with params"), "got: {err}");
     }
 
     #[test]

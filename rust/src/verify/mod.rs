@@ -244,19 +244,25 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
     let got = if uses_gather(&probe) {
         // Paged probe: identity table on logical K/V, then a shuffled
         // table on physically permuted K/V — bit-identical by contract.
+        // One lowering ([`exec::prepare`]) serves both runs.
         let page = probe.params().get("page_size").copied().unwrap_or(bn) as usize;
         if page == 0 || probe_seq % page != 0 {
             return fail(format!("page_size {page} does not tile the {probe_seq}-row probe"));
         }
-        let mut tables = std::collections::BTreeMap::new();
-        tables.insert("block_table".to_string(), identity_table(probe_seq / page));
-        let ident = match exec::run_attention_tables(&probe, &q, &k, &v, scale, &tables, exec::default_threads()) {
-            Ok(t) => t,
+        let prepared = match exec::prepare(&probe) {
+            Ok(p) => p,
             Err(e) => return fail(e),
         };
+        let mut tables = std::collections::BTreeMap::new();
+        tables.insert("block_table".to_string(), identity_table(probe_seq / page));
+        let ident =
+            match prepared.run_attention(&q, &k, &v, scale, &tables, exec::default_threads()) {
+                Ok(t) => t,
+                Err(e) => return fail(e),
+            };
         let (kp, vp, table) = paged_shuffle(&k, &v, page, seed ^ 0x9A6ED);
         tables.insert("block_table".to_string(), table);
-        match exec::run_attention_tables(&probe, &q, &kp, &vp, scale, &tables, exec::default_threads()) {
+        match prepared.run_attention(&q, &kp, &vp, scale, &tables, exec::default_threads()) {
             Ok(shuffled) if shuffled.data == ident.data => ident,
             Ok(_) => {
                 return fail("paged gather diverged from the identity layout".to_string())
@@ -327,9 +333,13 @@ fn verify_backward(
         if page == 0 || probe_seq % page != 0 {
             return fail(format!("page_size {page} does not tile the {probe_seq}-row probe"));
         }
+        let prepared = match exec::prepare(probe) {
+            Ok(p) => p,
+            Err(e) => return fail(e),
+        };
         let mut tables = std::collections::BTreeMap::new();
         tables.insert("block_table".to_string(), identity_table(probe_seq / page));
-        let ident = match exec::run_program_tables(probe, &named, scale, &tables, threads) {
+        let ident = match prepared.run_tables(&named, scale, &tables, threads) {
             Ok(t) => t,
             Err(e) => return fail(e),
         };
@@ -338,7 +348,7 @@ fn verify_backward(
         shuffled_named.insert("K", &kp);
         shuffled_named.insert("V", &vp);
         tables.insert("block_table".to_string(), table);
-        match exec::run_program_tables(probe, &shuffled_named, scale, &tables, threads) {
+        match prepared.run_tables(&shuffled_named, scale, &tables, threads) {
             Ok(shuffled) if shuffled.data == ident.data => ident,
             Ok(_) => return fail("paged gather diverged from the identity layout".to_string()),
             Err(e) => return fail(e),
