@@ -51,7 +51,7 @@ fn main() {
     let (q, k, v) = req.payload();
     let rx = coordinator.submit(fam.clone(), q.clone(), k.clone(), v.clone());
     let resp = rx.recv().expect("no response");
-    let out = resp.result.expect("serve error");
+    let out = resp.outcome.into_result().expect("serve error");
     // Compare head 0 (per-head slices; GQA maps q-head h -> kv-head h/g).
     let (s, d, vd) = (fam.seq, fam.qk_dim, fam.v_dim);
     let qt = Tensor2 { rows: s, cols: d, data: q[..s * d].to_vec() };
@@ -81,7 +81,7 @@ fn main() {
         })
         .collect();
     for rx in warm_rxs {
-        rx.recv().unwrap().result.unwrap();
+        rx.recv().unwrap().outcome.into_result().unwrap();
     }
     println!("  {} families warm in {:.2?}", coordinator.families.len(), t0.elapsed());
 

@@ -1,0 +1,312 @@
+//! Fault-injection bench: goodput under injected executor errors, shard
+//! crash-recovery time, degraded-lane share when every compiled variant
+//! is quarantined, and deadline shedding under latency spikes — the
+//! numbers DESIGN.md §13 gates on.
+//!
+//! Modes:
+//!   cargo bench --bench faults              full run
+//!   cargo bench --bench faults -- --smoke   tiny request counts
+//!       (CI smoke: fails when goodput at a 10% injected error rate
+//!       drops below 90%, recovery from a shard kill exceeds 5 s, or a
+//!       degraded reply diverges from the reference oracle; records
+//!       results to BENCH_faults.json)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qimeng::autotune::cache::TuneCache;
+use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
+use qimeng::coordinator::{
+    run_stream, Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome, RetryPolicy,
+    ServeConfig, SupervisorConfig,
+};
+use qimeng::workload::{fault_stream, SyntheticRequest};
+
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        heartbeat_timeout: Duration::from_millis(500),
+        check_every: Duration::from_millis(1),
+        max_restarts: 16,
+    }
+}
+
+fn reference_config(shards: usize) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: "definitely-not-compiled-artifacts".into(),
+        batch_window: Duration::from_millis(2),
+        shards,
+        executor: ExecutorSpec::Reference,
+        supervisor: fast_supervisor(),
+        ..ServeConfig::default()
+    }
+}
+
+/// Goodput under a 10% injected executor error rate: bounded retry must
+/// re-serve almost everything (p(fail) ≈ 0.1³ per request with 3
+/// attempts). Returns (goodput, terminal-response conservation ok).
+fn goodput_under_errors(n: usize) -> (f64, bool) {
+    let config = ServeConfig {
+        retry: RetryPolicy { max_attempts: 3, backoff: Duration::from_micros(200) },
+        fault_plan: Some(FaultPlan { error_rate: 0.1, ..FaultPlan::default() }),
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let stream = fault_stream(&coordinator.families, n, 1e6, 8.0, 0.5, 21);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    let retries =
+        coordinator.metrics.retries.load(Ordering::Relaxed);
+    coordinator.shutdown();
+    println!(
+        "goodput_10pct_errors: {}/{} ok ({} errors, {} timeouts, {retries} retries)",
+        report.ok, n, report.errors, report.timeouts
+    );
+    let conserved = report.ok + report.errors + report.timeouts == n;
+    (report.ok as f64 / n as f64, conserved)
+}
+
+/// Executor that panics exactly once (the first batch on shard 0), then
+/// behaves — a deterministic shard kill for measuring supervised
+/// restart + re-serve latency.
+struct PanicOnceExecutor {
+    fired: Arc<AtomicBool>,
+    shard: usize,
+    inner: ReferenceExecutor,
+}
+
+impl Executor for PanicOnceExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &qimeng::coordinator::FamilyKey,
+        info: &ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if self.shard == 0 && !self.fired.swap(true, Ordering::AcqRel) {
+            panic!("bench: injected one-shot shard kill");
+        }
+        self.inner.execute_batch(family, info, capacity, q, k, v)
+    }
+
+    fn kind(&self) -> &'static str {
+        "panic-once"
+    }
+}
+
+/// Kill one shard mid-stream and measure wall time until every request
+/// (including the killed batch, re-queued by the supervisor) is served.
+fn shard_kill_recovery(n: usize) -> (Duration, usize, u64) {
+    let fired = Arc::new(AtomicBool::new(false));
+    let factory_fired = fired.clone();
+    let config = ServeConfig {
+        executor: ExecutorSpec::Custom(Arc::new(move |shard| {
+            Ok(Box::new(PanicOnceExecutor {
+                fired: factory_fired.clone(),
+                shard,
+                inner: ReferenceExecutor::default(),
+            }) as Box<dyn Executor>)
+        })),
+        retry: RetryPolicy { max_attempts: 4, backoff: Duration::from_micros(200) },
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let fams = coordinator.families.clone();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let req = SyntheticRequest {
+                family: fams[i % fams.len()].clone(),
+                seed: 4000 + i as u64,
+                arrival: Duration::ZERO,
+            };
+            let (q, k, v) = req.payload();
+            coordinator.submit(req.family.clone(), q, k, v)
+        })
+        .collect();
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.outcome.is_ok()).unwrap_or(false))
+        .count();
+    let recovery = t0.elapsed();
+    let restarts = coordinator.metrics.shard_restarts.load(Ordering::Relaxed);
+    coordinator.shutdown();
+    println!(
+        "shard_kill_recovery: {ok}/{n} ok in {recovery:.2?} ({restarts} restart(s))"
+    );
+    (recovery, ok, restarts)
+}
+
+/// Executor that fails every compiled variant — drives the pool into
+/// full quarantine so the degraded reference lane serves the traffic.
+struct AlwaysFailingExecutor;
+
+impl Executor for AlwaysFailingExecutor {
+    fn execute_batch(
+        &mut self,
+        _family: &qimeng::coordinator::FamilyKey,
+        info: &ArtifactInfo,
+        _capacity: usize,
+        _q: &[f32],
+        _k: &[f32],
+        _v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        Err(format!("bench: variant {} broken", info.id))
+    }
+
+    fn kind(&self) -> &'static str {
+        "always-failing"
+    }
+}
+
+/// Serve with every compiled variant failing: measure the share of
+/// traffic the degraded lane absorbs and check one degraded reply
+/// bit-exactly against a fresh reference run.
+fn degraded_share(n: usize) -> (f64, bool) {
+    let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=1\n\
+         artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+    let metas = qimeng::runtime::registry::parse_manifest(manifest).unwrap();
+    let topo = ServeTopology::from_manifest(&metas, &TuneCache::new(), usize::MAX).unwrap();
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        executor: ExecutorSpec::Custom(Arc::new(|_shard| {
+            Ok(Box::new(AlwaysFailingExecutor) as Box<dyn Executor>)
+        })),
+        retry: RetryPolicy { max_attempts: 2, backoff: Duration::from_micros(100) },
+        ..reference_config(1)
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, topo, TuneCache::new(), false).expect("start");
+    let fam = coordinator.families[0].clone();
+    let mut degraded = 0usize;
+    let mut bit_exact = true;
+    for i in 0..n {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed: 8000 + i as u64,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let resp = coordinator
+            .submit(fam.clone(), q.clone(), k.clone(), v.clone())
+            .recv()
+            .expect("reply");
+        if resp.degraded {
+            degraded += 1;
+            if let RequestOutcome::Ok(out) = &resp.outcome {
+                let info = ArtifactInfo {
+                    id: "oracle".to_string(),
+                    cand: None,
+                    obs_key: String::new(),
+                };
+                let want = ReferenceExecutor::default()
+                    .execute_batch(&fam, &info, 1, &q, &k, &v)
+                    .expect("oracle");
+                bit_exact &= out == &want;
+            } else {
+                bit_exact = false;
+            }
+        }
+    }
+    let quarantined = coordinator.quarantine.quarantined_count();
+    coordinator.shutdown();
+    println!(
+        "degraded_share: {degraded}/{n} served degraded ({quarantined} variant(s) \
+         quarantined, bit_exact={bit_exact})"
+    );
+    (degraded as f64 / n as f64, bit_exact)
+}
+
+/// Deadline shedding under injected latency spikes: every batch sleeps
+/// past the request deadline, so queued work must shed with a distinct
+/// Timeout outcome (never hang, never mislabel as an error).
+fn deadline_shedding(n: usize) -> (usize, bool) {
+    let config = ServeConfig {
+        deadline: Some(Duration::from_millis(15)),
+        fault_plan: Some(FaultPlan {
+            spike_rate: 1.0,
+            spike: Duration::from_millis(25),
+            ..FaultPlan::default()
+        }),
+        ..reference_config(1)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let stream = fault_stream(&coordinator.families, n, 1e6, 8.0, 0.5, 33);
+    let report = run_stream(&coordinator, &stream, 1e9);
+    coordinator.shutdown();
+    println!(
+        "deadline_shedding: {} ok, {} timeouts, {} errors of {n}",
+        report.ok, report.timeouts, report.errors
+    );
+    let conserved = report.ok + report.errors + report.timeouts == n;
+    (report.timeouts, conserved)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut failures: Vec<String> = Vec::new();
+
+    let n = if smoke { 48 } else { 192 };
+    let (goodput, conserved) = goodput_under_errors(n);
+    if goodput < 0.9 {
+        failures.push(format!("goodput {goodput:.3} < 0.90 at 10% injected errors"));
+    }
+    if !conserved {
+        failures.push("goodput section lost terminal responses".to_string());
+    }
+
+    let kill_n = if smoke { 24 } else { 64 };
+    let (recovery, ok, restarts) = shard_kill_recovery(kill_n);
+    if recovery > Duration::from_millis(5000) {
+        failures.push(format!("shard-kill recovery took {recovery:.2?} (> 5 s)"));
+    }
+    if ok < kill_n {
+        failures.push(format!("{} requests lost to the shard kill", kill_n - ok));
+    }
+    if restarts == 0 {
+        failures.push("shard kill did not register a supervised restart".to_string());
+    }
+
+    let deg_n = if smoke { 32 } else { 96 };
+    let (share, bit_exact) = degraded_share(deg_n);
+    if !bit_exact {
+        failures.push("a degraded reply diverged from the reference oracle".to_string());
+    }
+    if share <= 0.0 {
+        failures.push("pool never degraded despite every variant failing".to_string());
+    }
+
+    let dl_n = if smoke { 32 } else { 96 };
+    let (timeouts, dl_conserved) = deadline_shedding(dl_n);
+    if timeouts == 0 {
+        failures.push("no Timeout outcomes despite certain deadline misses".to_string());
+    }
+    if !dl_conserved {
+        failures.push("deadline section lost terminal responses".to_string());
+    }
+
+    let json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"goodput_at_10pct_errors\": {goodput:.4},\n  \
+         \"recovery_ms\": {:.1},\n  \"shard_restarts\": {restarts},\n  \
+         \"degraded_share\": {share:.4},\n  \"degraded_bit_exact\": {bit_exact},\n  \
+         \"timeouts\": {timeouts}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        recovery.as_secs_f64() * 1e3,
+    );
+    if let Err(e) = std::fs::write("BENCH_faults.json", &json) {
+        eprintln!("warning: could not write BENCH_faults.json: {e}");
+    } else {
+        println!("recorded BENCH_faults.json:\n{json}");
+    }
+
+    if !failures.is_empty() {
+        eprintln!("faults bench FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -14,8 +14,91 @@
 //! are property-tested in `rust/tests/proptest_batcher.rs`.
 
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 use super::request::{FamilyKey, LaneKey};
+
+/// Why a request was shed from the queue instead of planned into a
+/// batch (each maps to one terminal response or a silent cleanup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Deadline passed → [`super::request::RequestOutcome::Timeout`].
+    Timeout,
+    /// Attempt budget exhausted → `Failed`.
+    AttemptsExhausted,
+    /// No executable serves the family → `Failed`.
+    Unservable,
+    /// A terminal response was already delivered elsewhere (the request
+    /// was recovered off this shard while it was hung) — dropped with
+    /// no reply.
+    AlreadyReplied,
+}
+
+/// What the shard loop should do with one queued request this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Offer to the planner; `expired` forces a partial-batch flush.
+    Plan { expired: bool },
+    /// Keep queued, don't plan yet (retry backoff still pending).
+    Defer,
+    /// Remove from the queue for `ShedReason`.
+    Shed(ShedReason),
+}
+
+/// Shed/defer policy shared by every request on a shard this tick.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitPolicy {
+    /// Lane batching window (decode lanes pass a quarter-window).
+    pub lane_window: Duration,
+    /// The pool is draining: flush everything now.
+    pub draining: bool,
+    /// Total execution attempts a request may consume.
+    pub max_attempts: u32,
+}
+
+/// Queue-relevant state of one request (a projection of
+/// [`super::request::AttnRequest`], kept separate so the policy is a
+/// pure function property-testable without channels or reply slots).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestState {
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub not_before: Option<Instant>,
+    pub attempts: u32,
+    pub servable: bool,
+    pub replied: bool,
+}
+
+/// Decide one request's disposition. Precedence: an already-replied
+/// request is dead weight regardless of anything else; then deadline
+/// (a late reply is worthless even if the family became unservable);
+/// then servability; then the attempt budget; then retry backoff.
+/// A request within a quarter lane-window of its deadline counts as
+/// expired so it flushes in a partial batch instead of gambling on
+/// peers arriving in time.
+pub fn classify(now: Instant, r: &RequestState, p: &AdmitPolicy) -> Disposition {
+    if r.replied {
+        return Disposition::Shed(ShedReason::AlreadyReplied);
+    }
+    if r.deadline.is_some_and(|d| now >= d) {
+        return Disposition::Shed(ShedReason::Timeout);
+    }
+    if !r.servable {
+        return Disposition::Shed(ShedReason::Unservable);
+    }
+    if r.attempts >= p.max_attempts {
+        return Disposition::Shed(ShedReason::AttemptsExhausted);
+    }
+    if r.not_before.is_some_and(|nb| now < nb) {
+        return Disposition::Defer;
+    }
+    let near_deadline =
+        r.deadline.is_some_and(|d| now + p.lane_window / 4 >= d);
+    let expired = p.draining
+        || near_deadline
+        || now.duration_since(r.enqueued) >= p.lane_window;
+    Disposition::Plan { expired }
+}
 
 /// Compiled batch capacities for one family, split by ingress lane.
 /// Prefill keeps the raw artifact capacities; the decode lane's set may
@@ -298,6 +381,64 @@ mod tests {
         capacities.insert(d.clone(), LaneCaps { prefill: vec![1, 4], decode: vec![] });
         let pending = vec![(0, d.clone(), true)];
         assert!(plan_batches_lanes(&pending, &capacities).is_empty());
+    }
+
+    #[test]
+    fn classify_precedence_and_expiry() {
+        let now = Instant::now();
+        let policy = AdmitPolicy {
+            lane_window: Duration::from_millis(8),
+            draining: false,
+            max_attempts: 3,
+        };
+        let fresh = RequestState {
+            enqueued: now,
+            deadline: None,
+            not_before: None,
+            attempts: 0,
+            servable: true,
+            replied: false,
+        };
+        assert_eq!(classify(now, &fresh, &policy), Disposition::Plan { expired: false });
+        // Past the lane window: flushes as expired.
+        let waited = RequestState { enqueued: now - Duration::from_millis(9), ..fresh };
+        assert_eq!(classify(now, &waited, &policy), Disposition::Plan { expired: true });
+        // Draining flushes everything immediately.
+        let draining = AdmitPolicy { draining: true, ..policy };
+        assert_eq!(classify(now, &fresh, &draining), Disposition::Plan { expired: true });
+        // Deadline passed → Timeout, even if also unservable/over budget.
+        let dead = RequestState {
+            deadline: Some(now - Duration::from_millis(1)),
+            servable: false,
+            attempts: 99,
+            ..fresh
+        };
+        assert_eq!(classify(now, &dead, &policy), Disposition::Shed(ShedReason::Timeout));
+        // Near-deadline (within a quarter window) plans as expired.
+        let near = RequestState { deadline: Some(now + Duration::from_millis(1)), ..fresh };
+        assert_eq!(classify(now, &near, &policy), Disposition::Plan { expired: true });
+        // A roomy deadline doesn't force a flush.
+        let roomy = RequestState { deadline: Some(now + Duration::from_secs(5)), ..fresh };
+        assert_eq!(classify(now, &roomy, &policy), Disposition::Plan { expired: false });
+        // Unservable family.
+        let alien = RequestState { servable: false, ..fresh };
+        assert_eq!(classify(now, &alien, &policy), Disposition::Shed(ShedReason::Unservable));
+        // Attempt budget exhausted.
+        let spent = RequestState { attempts: 3, ..fresh };
+        assert_eq!(
+            classify(now, &spent, &policy),
+            Disposition::Shed(ShedReason::AttemptsExhausted)
+        );
+        // Retry backoff defers planning without shedding.
+        let backoff =
+            RequestState { not_before: Some(now + Duration::from_millis(2)), ..fresh };
+        assert_eq!(classify(now, &backoff, &policy), Disposition::Defer);
+        // Already replied (recovered elsewhere): silent cleanup wins over all.
+        let ghost = RequestState { replied: true, deadline: Some(now - Duration::from_secs(1)), ..fresh };
+        assert_eq!(
+            classify(now, &ghost, &policy),
+            Disposition::Shed(ShedReason::AlreadyReplied)
+        );
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serving coordinator.
+//!
+//! A [`FaultPlan`] describes seeded failure processes — executor errors,
+//! shard panics, latency spikes, and simulated KV-pool exhaustion — that
+//! the pool threads through every shard: executor-level faults wrap the
+//! shard's [`super::scheduler::Executor`] in a [`FaultyExecutor`], and
+//! admission faults are drawn by the shard loop before a decode batch
+//! reserves KV residency. Every draw comes from a [`crate::util::prng`]
+//! stream derived from `(plan.seed, shard, generation)`, so a given plan
+//! replays the same fault schedule run after run — which is what lets
+//! the chaos proptest and `benches/faults.rs` assert recovery behaviour
+//! instead of merely observing it.
+//!
+//! `tlc serve --fault-plan "error-rate=0.1,panic-rate=0.01,spike-ms=20"`
+//! parses into a plan via [`FaultPlan::parse`].
+
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+
+/// Seeded fault processes injected into a serving run. Rates are
+/// per-batch-execution probabilities in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed; each shard derives its own stream from it.
+    pub seed: u64,
+    /// Probability a batch execution returns an injected error.
+    pub error_rate: f64,
+    /// Probability a batch execution panics (kills the shard thread;
+    /// the supervisor restarts it and the mailbox re-serves its queue).
+    pub panic_rate: f64,
+    /// Probability a batch execution sleeps `spike` first (a hung/slow
+    /// executor; long spikes trip the heartbeat monitor).
+    pub spike_rate: f64,
+    /// Duration of an injected latency spike.
+    pub spike: Duration,
+    /// Probability a decode-batch KV admission is forced to defer, as if
+    /// the pool were exhausted.
+    pub kv_exhaust_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 42,
+            error_rate: 0.0,
+            panic_rate: 0.0,
+            spike_rate: 0.0,
+            spike: Duration::from_millis(20),
+            kv_exhaust_rate: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` CLI syntax: comma-separated `key=value`
+    /// pairs. Keys: `seed`, `error-rate`, `panic-rate`, `spike-rate`,
+    /// `spike-ms`, `kv-exhaust-rate`. Unknown keys and out-of-range
+    /// rates are errors.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for pair in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan entry `{pair}` is not key=value"))?;
+            let rate = |v: &str| -> Result<f64, String> {
+                let r: f64 = v
+                    .parse()
+                    .map_err(|_| format!("fault-plan: bad rate `{v}` for `{key}`"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(format!("fault-plan: rate `{key}={v}` outside [0, 1]"));
+                }
+                Ok(r)
+            };
+            match key.trim() {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("fault-plan: bad seed `{value}`"))?;
+                }
+                "error-rate" => plan.error_rate = rate(value)?,
+                "panic-rate" => plan.panic_rate = rate(value)?,
+                "spike-rate" => plan.spike_rate = rate(value)?,
+                "kv-exhaust-rate" => plan.kv_exhaust_rate = rate(value)?,
+                "spike-ms" => {
+                    let ms: u64 = value
+                        .parse()
+                        .map_err(|_| format!("fault-plan: bad spike-ms `{value}`"))?;
+                    plan.spike = Duration::from_millis(ms);
+                }
+                other => return Err(format!("fault-plan: unknown key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_noop(&self) -> bool {
+        self.error_rate == 0.0
+            && self.panic_rate == 0.0
+            && self.spike_rate == 0.0
+            && self.kv_exhaust_rate == 0.0
+    }
+
+    /// One-line human summary (printed by `tlc serve`).
+    pub fn render(&self) -> String {
+        format!(
+            "seed={} error-rate={} panic-rate={} spike-rate={} spike={:?} kv-exhaust-rate={}",
+            self.seed,
+            self.error_rate,
+            self.panic_rate,
+            self.spike_rate,
+            self.spike,
+            self.kv_exhaust_rate
+        )
+    }
+
+    /// A deterministic fault stream for one shard incarnation. `salt`
+    /// separates the executor-level stream from the admission-level one;
+    /// `generation` re-rolls the schedule after a restart (otherwise a
+    /// respawned shard would replay the exact panic that killed it on
+    /// the same batch ordinal, turning one injected panic into a
+    /// crash loop).
+    pub fn injector(&self, shard: usize, generation: u32, salt: u64) -> FaultInjector {
+        let mix = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((shard as u64) << 32)
+            .wrapping_add(generation as u64)
+            .wrapping_add(salt.wrapping_mul(0xD1B54A32D192ED03));
+        FaultInjector { rng: Rng::new(mix), plan: self.clone() }
+    }
+}
+
+/// What an injector decided for one batch execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecuteFault {
+    /// Run the batch normally.
+    None,
+    /// Fail the batch with an injected error.
+    Error,
+    /// Panic the shard thread.
+    Panic,
+    /// Sleep before executing (latency spike).
+    Spike(Duration),
+}
+
+/// One shard's seeded fault stream (see [`FaultPlan::injector`]).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: Rng,
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    /// Draw the fate of the next batch execution. Draws are ordered
+    /// panic → error → spike so a plan with several non-zero rates
+    /// resolves deterministically.
+    pub fn next_execute(&mut self) -> ExecuteFault {
+        if self.plan.panic_rate > 0.0 && self.rng.f64() < self.plan.panic_rate {
+            return ExecuteFault::Panic;
+        }
+        if self.plan.error_rate > 0.0 && self.rng.f64() < self.plan.error_rate {
+            return ExecuteFault::Error;
+        }
+        if self.plan.spike_rate > 0.0 && self.rng.f64() < self.plan.spike_rate {
+            return ExecuteFault::Spike(self.plan.spike);
+        }
+        ExecuteFault::None
+    }
+
+    /// Should the next decode-batch KV admission be forced to defer?
+    pub fn kv_exhausted(&mut self) -> bool {
+        self.plan.kv_exhaust_rate > 0.0 && self.rng.f64() < self.plan.kv_exhaust_rate
+    }
+}
+
+/// Executor wrapper applying an injector's executor-level faults before
+/// delegating to the wrapped executor. Injected panics unwind through
+/// the shard loop — exactly like a real executor bug would — so the
+/// supervision path under test is the production one.
+pub struct FaultyExecutor {
+    inner: Box<dyn super::scheduler::Executor>,
+    injector: FaultInjector,
+    injected_errors: crate::obs::Counter,
+    injected_panics: crate::obs::Counter,
+    injected_spikes: crate::obs::Counter,
+}
+
+impl FaultyExecutor {
+    pub fn new(inner: Box<dyn super::scheduler::Executor>, injector: FaultInjector) -> Self {
+        FaultyExecutor {
+            inner,
+            injector,
+            injected_errors: crate::obs::counter("qimeng_injected_errors_total"),
+            injected_panics: crate::obs::counter("qimeng_injected_panics_total"),
+            injected_spikes: crate::obs::counter("qimeng_injected_spikes_total"),
+        }
+    }
+}
+
+impl super::scheduler::Executor for FaultyExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &super::request::FamilyKey,
+        info: &super::scheduler::ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        match self.injector.next_execute() {
+            ExecuteFault::Panic => {
+                self.injected_panics.inc();
+                panic!("injected shard panic (fault plan)");
+            }
+            ExecuteFault::Error => {
+                self.injected_errors.inc();
+                return Err("injected executor failure (fault plan)".to_string());
+            }
+            ExecuteFault::Spike(d) => {
+                self.injected_spikes.inc();
+                std::thread::sleep(d);
+            }
+            ExecuteFault::None => {}
+        }
+        self.inner.execute_batch(family, info, capacity, q, k, v)
+    }
+
+    fn kind(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn cold_start(&self) -> bool {
+        self.inner.cold_start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let plan = FaultPlan::parse(
+            "seed=7, error-rate=0.1, panic-rate=0.01, spike-rate=0.05, spike-ms=20, \
+             kv-exhaust-rate=0.25",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert!((plan.error_rate - 0.1).abs() < 1e-12);
+        assert!((plan.panic_rate - 0.01).abs() < 1e-12);
+        assert!((plan.spike_rate - 0.05).abs() < 1e-12);
+        assert_eq!(plan.spike, Duration::from_millis(20));
+        assert!((plan.kv_exhaust_rate - 0.25).abs() < 1e-12);
+        assert!(!plan.is_noop());
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("error-rate=2.0").is_err(), "rate outside [0,1]");
+        assert!(FaultPlan::parse("nope=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("error-rate").is_err(), "missing value");
+        assert!(FaultPlan::parse("seed=abc").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn injector_streams_are_deterministic_and_shard_distinct() {
+        let plan = FaultPlan { error_rate: 0.3, panic_rate: 0.1, ..FaultPlan::default() };
+        let draw = |shard: usize, generation: u32| -> Vec<ExecuteFault> {
+            let mut inj = plan.injector(shard, generation, 0);
+            (0..64).map(|_| inj.next_execute()).collect()
+        };
+        assert_eq!(draw(0, 0), draw(0, 0), "same (shard, generation) replays");
+        assert_ne!(draw(0, 0), draw(1, 0), "shards draw distinct streams");
+        assert_ne!(draw(0, 0), draw(0, 1), "restart re-rolls the schedule");
+        let faults = draw(0, 0);
+        assert!(faults.iter().any(|f| *f != ExecuteFault::None), "rates actually fire");
+    }
+
+    #[test]
+    fn noop_plan_never_fires() {
+        let mut inj = FaultPlan::default().injector(0, 0, 0);
+        for _ in 0..256 {
+            assert_eq!(inj.next_execute(), ExecuteFault::None);
+            assert!(!inj.kv_exhausted());
+        }
+    }
+}

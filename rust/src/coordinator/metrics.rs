@@ -102,6 +102,16 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests shed past their deadline (terminal `Timeout` outcome).
+    pub timeouts: AtomicU64,
+    /// Failed executions requeued to another shard (non-terminal).
+    pub retries: AtomicU64,
+    /// Requests served by the degraded `ReferenceExecutor` lane.
+    pub degraded: AtomicU64,
+    /// Shard threads restarted by the supervisor after a crash.
+    pub shard_restarts: AtomicU64,
+    /// Artifact variants newly quarantined during this run.
+    pub quarantined: AtomicU64,
     /// Router reassignments of a family to a different shard.
     pub rebalances: AtomicU64,
     /// Latencies recorded per-variant into the tune cache as well.
@@ -160,6 +170,7 @@ impl Metrics {
         let shards = self.shard_batches();
         format!(
             "requests={} responses={} batches={} occupancy={:.2} padded={} errors={} \
+             timeouts={} retries={} degraded={} restarts={} quarantined={} \
              rebalances={} shard_batches={:?} latency mean={:?} p50={:?} p95={:?} p99={:?}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -167,6 +178,11 @@ impl Metrics {
             self.mean_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.degraded.load(Ordering::Relaxed),
+            self.shard_restarts.load(Ordering::Relaxed),
+            self.quarantined.load(Ordering::Relaxed),
             self.rebalances.load(Ordering::Relaxed),
             shards,
             self.mean_latency().unwrap_or_default(),
@@ -198,6 +214,14 @@ impl Metrics {
             counter("qimeng_batches_total", self.batches.load(Ordering::Relaxed)),
             counter("qimeng_padded_slots_total", self.padded_slots.load(Ordering::Relaxed)),
             counter("qimeng_errors_total", self.errors.load(Ordering::Relaxed)),
+            counter("qimeng_timeouts_total", self.timeouts.load(Ordering::Relaxed)),
+            counter("qimeng_retries_total", self.retries.load(Ordering::Relaxed)),
+            counter("qimeng_degraded_total", self.degraded.load(Ordering::Relaxed)),
+            counter(
+                "qimeng_shard_restarts_total",
+                self.shard_restarts.load(Ordering::Relaxed),
+            ),
+            counter("qimeng_quarantined_total", self.quarantined.load(Ordering::Relaxed)),
             counter("qimeng_rebalances_total", self.rebalances.load(Ordering::Relaxed)),
             gauge("qimeng_batch_occupancy", self.mean_occupancy()),
             gauge("qimeng_latency_mean_us", us(self.mean_latency())),
@@ -318,6 +342,20 @@ mod tests {
         };
         assert_eq!(find("qimeng_requests_total").value, 7.0);
         assert_eq!(find("qimeng_shard_batches_total{shard=\"1\"}").value, 1.0);
+        m.timeouts.store(2, Ordering::Relaxed);
+        m.shard_restarts.store(1, Ordering::Relaxed);
+        let samples = m.samples();
+        let find = |name: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing sample {name}"))
+        };
+        assert_eq!(find("qimeng_timeouts_total").value, 2.0);
+        assert_eq!(find("qimeng_shard_restarts_total").value, 1.0);
+        assert_eq!(find("qimeng_retries_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_degraded_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_quarantined_total").kind, SampleKind::Counter);
         assert!(find("qimeng_latency_p99_us").value >= 50.0);
         assert_eq!(find("qimeng_errors_total").kind, SampleKind::Counter);
         assert_eq!(find("qimeng_latency_p50_us").kind, SampleKind::Gauge);

@@ -16,15 +16,29 @@
 //! exposition ([`metrics_exposition`]) and `--stats-every <n>` flushes
 //! a summary line (and refreshes the metrics file) every `n` executed
 //! batches while the stream is in flight.
+//!
+//! Fault tolerance (DESIGN.md §13): requests carry deadlines and a
+//! bounded retry budget, shard threads are supervised (crashed shards
+//! restart, hung shards are steered around and their work re-dispatched),
+//! failing artifact variants are quarantined with graceful degradation
+//! down to the bit-exact reference executor, and
+//! `tlc serve --fault-plan ...` injects deterministic seeded faults for
+//! the chaos tests and `benches/faults.rs`.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
+pub mod quarantine;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
-pub use request::{AttnRequest, AttnResponse, FamilyKey, LaneKey};
-pub use scheduler::{Executor, ExecutorSpec, Router, ServeTopology};
+pub use faults::{FaultPlan, FaultyExecutor};
+pub use quarantine::QuarantineBoard;
+pub use request::{AttnRequest, AttnResponse, FamilyKey, LaneKey, ReplySlot, RequestOutcome};
+pub use scheduler::{
+    Executor, ExecutorSpec, PoolOptions, RetryPolicy, Router, ServeTopology, SupervisorConfig,
+};
 pub use service::{Coordinator, ServeConfig};
 
 use std::path::PathBuf;
@@ -94,6 +108,11 @@ pub struct ServeReport {
     pub requests: usize,
     pub ok: usize,
     pub errors: usize,
+    /// Requests shed because their deadline passed.
+    pub timeouts: usize,
+    /// Requests answered by the degraded reference lane (bit-exact, but
+    /// slower than a compiled variant).
+    pub degraded: usize,
     pub wall: Duration,
     pub throughput_rps: f64,
     pub mean_latency: Duration,
@@ -125,10 +144,24 @@ pub fn run_stream(
     }
     let mut ok = 0;
     let mut errors = 0;
+    let mut timeouts = 0;
+    let mut degraded = 0;
     for rx in rxs {
         match rx.recv() {
-            Ok(resp) if resp.result.is_ok() => ok += 1,
-            _ => errors += 1,
+            Ok(resp) => {
+                if resp.degraded {
+                    degraded += 1;
+                }
+                match resp.outcome {
+                    request::RequestOutcome::Ok(_) => ok += 1,
+                    request::RequestOutcome::Timeout => timeouts += 1,
+                    request::RequestOutcome::Failed(_) => errors += 1,
+                }
+            }
+            // A disconnected reply channel means the pool died without a
+            // terminal response — counted as an error (the exactly-once
+            // chaos test asserts this never happens).
+            Err(_) => errors += 1,
         }
     }
     let wall = t0.elapsed();
@@ -137,6 +170,8 @@ pub fn run_stream(
         requests: stream.len(),
         ok,
         errors,
+        timeouts,
+        degraded,
         wall,
         throughput_rps: ok as f64 / wall.as_secs_f64(),
         mean_latency: m.mean_latency().unwrap_or_default(),
@@ -178,12 +213,22 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let stats_every = args.get_usize("stats-every", 0)?;
+    let deadline_ms = args.get_usize("deadline-ms", 0)?;
+    let max_attempts = args.get_usize("max-attempts", 0)?;
+    let fault_plan = args.get("fault-plan").map(faults::FaultPlan::parse).transpose()?;
     args.finish()?;
 
     if trace_out.is_some() {
         crate::obs::set_enabled(true);
     }
 
+    let mut retry = RetryPolicy::default();
+    if max_attempts > 0 {
+        retry.max_attempts = max_attempts as u32;
+    }
+    if let Some(plan) = &fault_plan {
+        println!("fault plan: {}", plan.render());
+    }
     let coordinator = Coordinator::start(ServeConfig {
         artifacts_dir: artifacts,
         batch_window: Duration::from_millis(window_ms as u64),
@@ -191,6 +236,9 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         executor,
         kv_budget_bytes: if kv_budget_mb == 0 { usize::MAX } else { kv_budget_mb << 20 },
         decode_layout,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
+        retry,
+        fault_plan,
         ..ServeConfig::default()
     })
     .map_err(|e| format!("{e:#}"))?;
@@ -220,9 +268,21 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         f.stop();
     }
     println!(
-        "served {} requests in {:.2?}: {} ok, {} errors",
-        report.requests, report.wall, report.ok, report.errors
+        "served {} requests in {:.2?}: {} ok, {} errors, {} timeouts, {} degraded",
+        report.requests, report.wall, report.ok, report.errors, report.timeouts, report.degraded
     );
+    let restarts = coordinator.metrics.shard_restarts.load(std::sync::atomic::Ordering::Relaxed);
+    let retries = coordinator.metrics.retries.load(std::sync::atomic::Ordering::Relaxed);
+    if restarts > 0 || retries > 0 {
+        println!("fault recovery: {restarts} shard restart(s), {retries} retried execution(s)");
+    }
+    if coordinator.quarantine.quarantined_count() > 0 {
+        println!(
+            "quarantined {} artifact variant(s): {}",
+            coordinator.quarantine.quarantined_count(),
+            coordinator.quarantine.quarantined().join(", ")
+        );
+    }
     println!(
         "throughput {:.1} req/s; latency mean {:.2?} p50 {:.2?} p95 {:.2?}; \
          mean batch occupancy {:.2}",

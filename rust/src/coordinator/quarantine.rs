@@ -1,0 +1,240 @@
+//! Artifact quarantine: per-variant health tracking with persistence.
+//!
+//! The pool serves LLM-generated compiled variants that no human
+//! validated on this exact hardware (the paper's premise); a variant
+//! that starts failing or whose latency blows up must stop receiving
+//! traffic. The [`QuarantineBoard`] tracks, per variant key (the
+//! `TuneCache` observed key, so quarantine and latency evidence name
+//! variants identically):
+//!
+//! * **consecutive executor failures** — [`QUARANTINE_AFTER`] in a row
+//!   quarantines the variant (successes reset the streak);
+//! * **observed-latency blowups** — once a variant has
+//!   [`LATENCY_MIN_SAMPLES`] samples, a sample worse than
+//!   [`LATENCY_BLOWUP`] × its own running mean — and at least
+//!   [`LATENCY_BLOWUP_MIN_US`] in absolute terms — quarantines it (a
+//!   variant suddenly 8× slower than itself is broken in a way the
+//!   tune-cache ranking reacts to far too slowly; the absolute floor
+//!   keeps µs-scale batches, where 8× is OS-scheduler noise, immune).
+//!
+//! Selection falls back quarantined-primary → healthy sibling variant →
+//! (all quarantined) the bit-exact `ReferenceExecutor` degraded lane.
+//! The board persists alongside the TuneCache so restarts remember
+//! which variants were bad.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+/// Consecutive executor failures that quarantine a variant.
+pub const QUARANTINE_AFTER: u32 = 3;
+
+/// A latency sample this many times the variant's own running mean
+/// quarantines it.
+pub const LATENCY_BLOWUP: f64 = 8.0;
+
+/// Samples a variant must accumulate before the blowup rule applies
+/// (early samples swing wildly while caches warm).
+pub const LATENCY_MIN_SAMPLES: u64 = 5;
+
+/// Absolute floor (µs) a sample must reach before the blowup rule can
+/// quarantine: a genuinely broken kernel blows up into milliseconds,
+/// while an 8× outlier on a 2 µs batch is timer/scheduler jitter and
+/// must never bench a healthy variant.
+pub const LATENCY_BLOWUP_MIN_US: f64 = 1000.0;
+
+/// Health record for one variant key.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct VariantHealth {
+    consecutive_failures: u32,
+    quarantined: bool,
+    /// Running mean of successful-execution latency (µs).
+    mean_us: f64,
+    samples: u64,
+}
+
+/// Shared, thread-safe variant health board (see module docs).
+#[derive(Debug, Default)]
+pub struct QuarantineBoard {
+    state: Mutex<BTreeMap<String, VariantHealth>>,
+}
+
+fn lock(m: &Mutex<BTreeMap<String, VariantHealth>>) -> MutexGuard<'_, BTreeMap<String, VariantHealth>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl QuarantineBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load a persisted board; a missing or unparsable file yields an
+    /// empty board (quarantine is an optimization, not ground truth).
+    pub fn load(path: &Path) -> Self {
+        let board = Self::new();
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return board;
+        };
+        let mut state = lock(&board.state);
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            // Format: `quarantined <variant key>` — only quarantined
+            // variants persist; healthy stats rebuild from live traffic.
+            if let Some(key) = line.strip_prefix("quarantined ") {
+                state.insert(
+                    key.to_string(),
+                    VariantHealth { quarantined: true, ..VariantHealth::default() },
+                );
+            }
+        }
+        drop(state);
+        board
+    }
+
+    /// Persist the quarantined set (healthy stats are not persisted —
+    /// they rebuild from live traffic and would otherwise pin stale
+    /// means across restarts).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let state = lock(&self.state);
+        let mut out = String::from("# qimeng artifact quarantine v1\n");
+        for (key, h) in state.iter() {
+            if h.quarantined {
+                out.push_str("quarantined ");
+                out.push_str(key);
+                out.push('\n');
+            }
+        }
+        drop(state);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, out)
+    }
+
+    pub fn is_quarantined(&self, vkey: &str) -> bool {
+        lock(&self.state).get(vkey).map(|h| h.quarantined).unwrap_or(false)
+    }
+
+    /// Force-quarantine a variant (tests, operator override).
+    pub fn quarantine(&self, vkey: &str) {
+        lock(&self.state).entry(vkey.to_string()).or_default().quarantined = true;
+    }
+
+    /// Record an executor failure; returns `true` when this failure
+    /// newly quarantined the variant.
+    pub fn record_failure(&self, vkey: &str) -> bool {
+        let mut state = lock(&self.state);
+        let h = state.entry(vkey.to_string()).or_default();
+        h.consecutive_failures += 1;
+        if !h.quarantined && h.consecutive_failures >= QUARANTINE_AFTER {
+            h.quarantined = true;
+            return true;
+        }
+        false
+    }
+
+    /// Record a successful execution's latency; resets the failure
+    /// streak and applies the latency-blowup rule. Returns `true` when
+    /// the sample newly quarantined the variant.
+    pub fn record_success(&self, vkey: &str, us: f64) -> bool {
+        let mut state = lock(&self.state);
+        let h = state.entry(vkey.to_string()).or_default();
+        h.consecutive_failures = 0;
+        let blowup = !h.quarantined
+            && h.samples >= LATENCY_MIN_SAMPLES
+            && h.mean_us > 0.0
+            && us >= LATENCY_BLOWUP_MIN_US
+            && us > LATENCY_BLOWUP * h.mean_us;
+        h.samples += 1;
+        h.mean_us += (us - h.mean_us) / h.samples as f64;
+        if blowup {
+            h.quarantined = true;
+        }
+        blowup
+    }
+
+    /// Keys currently quarantined (sorted).
+    pub fn quarantined(&self) -> Vec<String> {
+        lock(&self.state)
+            .iter()
+            .filter(|(_, h)| h.quarantined)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        lock(&self.state).values().filter(|h| h.quarantined).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consecutive_failures_quarantine_and_successes_reset() {
+        let b = QuarantineBoard::new();
+        for _ in 0..QUARANTINE_AFTER - 1 {
+            assert!(!b.record_failure("v"));
+        }
+        // A success in between resets the streak.
+        assert!(!b.record_success("v", 100.0));
+        for _ in 0..QUARANTINE_AFTER - 1 {
+            assert!(!b.record_failure("v"));
+        }
+        assert!(b.record_failure("v"), "third consecutive failure quarantines");
+        assert!(b.is_quarantined("v"));
+        assert!(!b.record_failure("v"), "already quarantined: not `newly`");
+        assert_eq!(b.quarantined(), vec!["v".to_string()]);
+    }
+
+    #[test]
+    fn latency_blowup_quarantines_after_min_samples() {
+        let b = QuarantineBoard::new();
+        for _ in 0..LATENCY_MIN_SAMPLES {
+            assert!(!b.record_success("v", 100.0));
+        }
+        // Within the blowup bound: fine.
+        assert!(!b.record_success("v", 100.0 * (LATENCY_BLOWUP - 1.0)));
+        // Way past it: quarantined.
+        assert!(b.record_success("v", 100.0 * (LATENCY_BLOWUP + 4.0)));
+        assert!(b.is_quarantined("v"));
+        // An early spike (before min samples) never quarantines.
+        let b2 = QuarantineBoard::new();
+        assert!(!b2.record_success("w", 1.0));
+        assert!(!b2.record_success("w", 1e9));
+        assert!(!b2.is_quarantined("w"));
+        // A relative blowup below the absolute floor is jitter, not a
+        // broken kernel: µs-scale variants must stay healthy.
+        let b3 = QuarantineBoard::new();
+        for _ in 0..LATENCY_MIN_SAMPLES {
+            assert!(!b3.record_success("x", 1.0));
+        }
+        assert!(!b3.record_success("x", 50.0 * LATENCY_BLOWUP));
+        assert!(!b3.is_quarantined("x"));
+    }
+
+    #[test]
+    fn persistence_round_trips_quarantined_set() {
+        let dir = std::env::temp_dir().join("qimeng_quarantine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune.quarantine.txt");
+        let b = QuarantineBoard::new();
+        b.quarantine("bad|observed|bm64bn64sk8");
+        b.record_success("good", 10.0);
+        b.save(&path).unwrap();
+        let loaded = QuarantineBoard::load(&path);
+        assert!(loaded.is_quarantined("bad|observed|bm64bn64sk8"));
+        assert!(!loaded.is_quarantined("good"));
+        assert_eq!(loaded.quarantined_count(), 1);
+        // Missing file → empty board, no error.
+        let empty = QuarantineBoard::load(&dir.join("does-not-exist.txt"));
+        assert_eq!(empty.quarantined_count(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

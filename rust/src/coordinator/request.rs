@@ -1,6 +1,7 @@
 //! Request/response types for the attention-serving coordinator.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
@@ -108,17 +109,104 @@ pub struct AttnRequest {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<AttnResponse>,
+    /// Absolute deadline; past it the request is shed with a
+    /// [`RequestOutcome::Timeout`] instead of being executed.
+    pub deadline: Option<Instant>,
+    /// Executions attempted so far (bumped when a shard claims the
+    /// request into a batch, so crash loops are bounded even when the
+    /// executor panics mid-batch).
+    pub attempts: u32,
+    /// Retry backoff: the request is not planned into a batch before
+    /// this instant (set when a failed execution requeues it).
+    pub not_before: Option<Instant>,
+    /// Exactly-once reply slot, shared with the supervisor so a request
+    /// recovered off a hung shard can never be answered twice.
+    pub reply: Arc<ReplySlot>,
+}
+
+/// Terminal outcome of one request. Every submitted request receives
+/// exactly one of these — success, deadline expiry, or a failure after
+/// the retry budget is exhausted. There is no silent-drop path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestOutcome {
+    /// The flattened output tensor (`family.out_len()` elements).
+    Ok(Vec<f32>),
+    /// The deadline passed while the request was queued or in flight.
+    Timeout,
+    /// Executor / routing failure after retries were exhausted.
+    Failed(String),
+}
+
+impl RequestOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, RequestOutcome::Ok(_))
+    }
+
+    /// Borrow the output when the request succeeded.
+    pub fn ok(&self) -> Option<&Vec<f32>> {
+        match self {
+            RequestOutcome::Ok(out) => Some(out),
+            _ => None,
+        }
+    }
+
+    /// Collapse into the pre-fault-tolerance `Result` shape (timeouts
+    /// become an error string) for callers that only care about
+    /// success/failure.
+    pub fn into_result(self) -> Result<Vec<f32>, String> {
+        match self {
+            RequestOutcome::Ok(out) => Ok(out),
+            RequestOutcome::Timeout => Err("deadline exceeded".to_string()),
+            RequestOutcome::Failed(e) => Err(e),
+        }
+    }
 }
 
 #[derive(Debug)]
 pub struct AttnResponse {
     pub id: u64,
-    pub result: Result<Vec<f32>, String>,
+    /// Terminal outcome (exactly one per request).
+    pub outcome: RequestOutcome,
     /// Queueing + execution time.
     pub latency: std::time::Duration,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Executions this request consumed (1 = served first try).
+    pub attempts: u32,
+    /// Served by the degraded lane (bit-exact `ReferenceExecutor`
+    /// fallback after every compiled variant was quarantined).
+    pub degraded: bool,
+}
+
+/// Exactly-once reply channel: the first `send` wins, every later one is
+/// a no-op. Shared (`Arc`) between the owning shard and the supervisor,
+/// because a request recovered off a hung shard may race the original
+/// thread waking up and executing its stale batch anyway.
+#[derive(Debug)]
+pub struct ReplySlot {
+    tx: mpsc::Sender<AttnResponse>,
+    sent: AtomicBool,
+}
+
+impl ReplySlot {
+    pub fn new(tx: mpsc::Sender<AttnResponse>) -> Self {
+        ReplySlot { tx, sent: AtomicBool::new(false) }
+    }
+
+    /// Deliver the terminal response; returns `false` if one was already
+    /// delivered (the duplicate is dropped).
+    pub fn send(&self, resp: AttnResponse) -> bool {
+        if self.sent.swap(true, Ordering::AcqRel) {
+            return false;
+        }
+        let _ = self.tx.send(resp);
+        true
+    }
+
+    /// Has a terminal response already been delivered?
+    pub fn is_sent(&self) -> bool {
+        self.sent.load(Ordering::Acquire)
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +290,36 @@ mod tests {
         // Boundary: seq 16 against >= 64 cache rows is decode.
         f.kv = 64;
         assert_eq!(LaneKey::of(&f), LaneKey::Decode);
+    }
+
+    #[test]
+    fn reply_slot_delivers_exactly_once() {
+        let (tx, rx) = mpsc::channel();
+        let slot = ReplySlot::new(tx);
+        assert!(!slot.is_sent());
+        let resp = |o: RequestOutcome| AttnResponse {
+            id: 1,
+            outcome: o,
+            latency: std::time::Duration::ZERO,
+            batch_size: 1,
+            attempts: 1,
+            degraded: false,
+        };
+        assert!(slot.send(resp(RequestOutcome::Ok(vec![1.0]))));
+        assert!(slot.is_sent());
+        // The duplicate (a hung shard waking up after recovery) is dropped.
+        assert!(!slot.send(resp(RequestOutcome::Failed("late".into()))));
+        let got = rx.recv().unwrap();
+        assert_eq!(got.outcome, RequestOutcome::Ok(vec![1.0]));
+        assert!(rx.try_recv().is_err(), "exactly one response per request");
+    }
+
+    #[test]
+    fn outcome_collapses_to_result() {
+        assert_eq!(RequestOutcome::Ok(vec![2.0]).into_result(), Ok(vec![2.0]));
+        assert!(RequestOutcome::Timeout.into_result().unwrap_err().contains("deadline"));
+        assert_eq!(RequestOutcome::Failed("x".into()).into_result(), Err("x".into()));
+        assert!(RequestOutcome::Ok(vec![]).is_ok());
+        assert!(!RequestOutcome::Timeout.is_ok());
     }
 }

@@ -34,15 +34,19 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{plan_batches_lanes, BatchPlan, LaneCaps};
+use super::batcher::{
+    classify, plan_batches_lanes, AdmitPolicy, Disposition, LaneCaps, RequestState, ShedReason,
+};
+use super::faults::{FaultInjector, FaultPlan, FaultyExecutor};
 use super::metrics::Metrics;
-use super::request::{AttnRequest, AttnResponse, FamilyKey, LaneKey};
+use super::quarantine::QuarantineBoard;
+use super::request::{AttnRequest, AttnResponse, FamilyKey, LaneKey, ReplySlot, RequestOutcome};
 use crate::obs;
 use crate::autotune::cache::{self as tune_cache, TuneCache};
 use crate::autotune::space::Candidate;
@@ -225,6 +229,36 @@ impl ArtifactSlot {
         } else {
             &self.primary
         }
+    }
+
+    /// [`ArtifactSlot::pick`] honouring the quarantine board: the normal
+    /// pick when it is healthy, else the primary, else the first healthy
+    /// alternate. `None` means every variant of this slot is quarantined
+    /// — the caller falls back to the degraded reference lane.
+    pub fn pick_healthy<F: Fn(&ArtifactInfo) -> bool>(
+        &self,
+        seq_no: u64,
+        quarantined: F,
+    ) -> Option<&ArtifactInfo> {
+        let choice = self.pick(seq_no);
+        if !quarantined(choice) {
+            return Some(choice);
+        }
+        if !quarantined(&self.primary) {
+            return Some(&self.primary);
+        }
+        self.alts.iter().find(|a| !quarantined(a))
+    }
+}
+
+/// The key under which the quarantine board tracks a variant. Variants
+/// with a parsed schedule share the TuneCache observed key (quarantine
+/// and latency evidence name variants identically); schedule-less ones
+/// fall back to the artifact id.
+pub fn variant_key(info: &ArtifactInfo) -> String {
+    match &info.cand {
+        Some(c) => tune_cache::observed_key(&info.obs_key, c),
+        None => format!("{}|artifact|{}", info.obs_key, info.id),
     }
 }
 
@@ -690,47 +724,53 @@ impl Router {
         self.assignment.get(fam).copied()
     }
 
-    fn least_loaded(&self) -> usize {
-        let mut best = 0;
-        for (i, d) in self.depth.iter().enumerate() {
-            if *d < self.depth[best] {
-                best = i;
-            }
-        }
-        best
-    }
-
-    /// Placement for a family seen for the first time: the least-loaded
-    /// shard, with ties broken round-robin from a rotating cursor (an
-    /// idle pool must spread families, not stack them on shard 0).
-    fn place_new(&mut self) -> usize {
-        let min = *self.depth.iter().min().unwrap_or(&0);
-        let n = self.depth.len();
-        for off in 0..n {
-            let i = (self.next + off) % n;
-            if self.depth[i] == min {
-                self.next = (i + 1) % n;
-                return i;
-            }
-        }
-        0
-    }
-
     /// Pick the shard for one request and count it in-flight there.
     /// Returns `(shard, rebalanced)`.
     pub fn route(&mut self, fam: &FamilyKey) -> (usize, bool) {
-        let (shard, rebalanced) = match self.assignment.get(fam).copied() {
-            Some(s) if self.depth[s] <= self.depth[self.least_loaded()] + self.slack => {
-                (s, false)
+        self.route_constrained(fam, &[])
+    }
+
+    /// [`Router::route`] restricted to `allowed` shards (the supervisor
+    /// steers traffic around unhealthy ones). An empty slice — or a mask
+    /// with no allowed shard at all — means unconstrained: serving a
+    /// request on a suspect shard beats never serving it. A family whose
+    /// assigned shard became disallowed is reassigned (and counted as a
+    /// rebalance) to the least-loaded allowed shard.
+    pub fn route_constrained(&mut self, fam: &FamilyKey, allowed: &[bool]) -> (usize, bool) {
+        let n = self.depth.len();
+        let unconstrained =
+            allowed.is_empty() || !(0..n).any(|i| allowed.get(i).copied().unwrap_or(false));
+        let ok = |i: usize| unconstrained || allowed.get(i).copied().unwrap_or(false);
+        // Least-loaded allowed shard (first index wins ties).
+        let mut least = 0;
+        let mut least_seen = false;
+        for i in 0..n {
+            if ok(i) && (!least_seen || self.depth[i] < self.depth[least]) {
+                least = i;
+                least_seen = true;
             }
+        }
+        let (shard, rebalanced) = match self.assignment.get(fam).copied() {
+            Some(s) if ok(s) && self.depth[s] <= self.depth[least] + self.slack => (s, false),
             Some(_) => {
-                let least = self.least_loaded();
                 self.rebalances += 1;
                 self.assignment.insert(fam.clone(), least);
                 (least, true)
             }
             None => {
-                let shard = self.place_new();
+                // First placement: least-loaded allowed shard with ties
+                // broken round-robin from the rotating cursor (an idle
+                // pool must spread families, not stack them on shard 0).
+                let min = self.depth[least];
+                let mut shard = least;
+                for off in 0..n {
+                    let i = (self.next + off) % n;
+                    if ok(i) && self.depth[i] == min {
+                        shard = i;
+                        self.next = (i + 1) % n;
+                        break;
+                    }
+                }
                 self.assignment.insert(fam.clone(), shard);
                 (shard, false)
             }
@@ -747,80 +787,276 @@ impl Router {
     }
 }
 
-/// The running pool: router + N shard threads + the shared tune cache
-/// and decode-lane KV pool.
-pub struct ExecutorPool {
-    txs: Vec<Option<mpsc::Sender<AttnRequest>>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+/// Bounded-retry policy for failed executions: a request whose batch
+/// fails is re-routed (away from the failing shard, after an exponential
+/// backoff) until its attempt budget runs out, then fails terminally.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total executions a request may consume (first try included).
+    pub max_attempts: u32,
+    /// Base backoff before a retry; doubles per attempt already spent.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff: Duration::from_millis(1) }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before the next attempt for a request that has already
+    /// spent `attempts` executions.
+    pub fn backoff_after(&self, attempts: u32) -> Duration {
+        self.backoff * 2u32.saturating_pow(attempts.saturating_sub(1).min(16))
+    }
+}
+
+/// Supervisor tuning: how quickly dead/hung shards are detected and how
+/// many times one shard may be restarted before it is declared dead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SupervisorConfig {
+    /// A shard whose heartbeat is older than this is treated as hung:
+    /// traffic is steered away and its queued work is re-dispatched.
+    pub heartbeat_timeout: Duration,
+    /// Supervisor sweep cadence (also the ingress poll interval).
+    pub check_every: Duration,
+    /// Restarts one shard may consume before it is declared dead.
+    pub max_restarts: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            heartbeat_timeout: Duration::from_secs(2),
+            check_every: Duration::from_millis(5),
+            max_restarts: 8,
+        }
+    }
+}
+
+/// Everything [`ExecutorPool::start`] needs beyond the shared serving
+/// state (topology, metrics, tune cache, KV pool, quarantine board).
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    pub shards: usize,
+    pub spec: ExecutorSpec,
+    pub artifacts_dir: PathBuf,
+    pub window: Duration,
+    pub tune_path: Option<PathBuf>,
+    pub retry: RetryPolicy,
+    pub supervisor: SupervisorConfig,
+    /// Deterministic fault injection (noop/`None` in production).
+    pub fault_plan: Option<FaultPlan>,
+    /// Where the quarantine board persists at shutdown.
+    pub quarantine_path: Option<PathBuf>,
+}
+
+/// One shard's shared mailbox. The supervisor owns dispatch *into* the
+/// queue; the shard thread claims work out of it (queue → `in_flight`)
+/// under the lock, so a hung shard's unclaimed work can be stolen and
+/// a crashed shard's claimed work can be re-queued by its replacement.
+/// Lock order is always `queue` before `in_flight`.
+struct ShardMailbox {
+    queue: Mutex<Vec<AttnRequest>>,
+    in_flight: Mutex<Vec<AttnRequest>>,
+    /// Monotonic liveness stamp (µs since the pool epoch), refreshed by
+    /// the shard loop every tick and between batches.
+    heartbeat_us: AtomicU64,
+    draining: AtomicBool,
+}
+
+impl ShardMailbox {
+    fn new(epoch: &Instant) -> Self {
+        ShardMailbox {
+            queue: Mutex::new(Vec::new()),
+            in_flight: Mutex::new(Vec::new()),
+            heartbeat_us: AtomicU64::new(epoch.elapsed().as_micros() as u64),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    fn beat(&self, epoch: &Instant) {
+        self.heartbeat_us.store(epoch.elapsed().as_micros() as u64, Ordering::Release);
+    }
+}
+
+/// Messages into the supervisor thread.
+enum PoolMsg {
+    Submit(AttnRequest),
+    /// A shard failed this request's batch; route it somewhere else.
+    Requeue { req: AttnRequest, avoid: usize },
+    Shutdown,
+}
+
+/// Supervisor-side handle to one shard.
+struct ShardSlot {
+    mailbox: Arc<ShardMailbox>,
+    doorbell: mpsc::Sender<()>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    generation: u32,
+    restarts: u32,
+    healthy: bool,
+    dead: bool,
+    health_gauge: obs::Gauge,
+}
+
+/// Shared serving state every shard thread closes over.
+#[derive(Clone)]
+struct ShardCtx {
+    topo: Arc<ServeTopology>,
+    window: Duration,
+    metrics: Arc<Metrics>,
     router: Arc<Mutex<Router>>,
+    tune: Arc<Mutex<TuneCache>>,
+    kv_pool: Arc<PagedKvPool>,
+    quarantine: Arc<QuarantineBoard>,
+    /// Back-channel to the supervisor for retry re-routing.
+    requeue: mpsc::Sender<PoolMsg>,
+    retry: RetryPolicy,
+    epoch: Instant,
+    ref_threads: usize,
+}
+
+/// Builds shard threads — at startup and again on every restart.
+struct ShardSpawner {
+    spec: ExecutorSpec,
+    dir: PathBuf,
+    fault_plan: Option<FaultPlan>,
+    ctx: ShardCtx,
+}
+
+impl ShardSpawner {
+    fn spawn(
+        &self,
+        shard: usize,
+        generation: u32,
+        mailbox: Arc<ShardMailbox>,
+        ready: Option<mpsc::Sender<std::result::Result<(), String>>>,
+    ) -> Result<(mpsc::Sender<()>, std::thread::JoinHandle<()>)> {
+        let (bell_tx, bell_rx) = mpsc::channel::<()>();
+        let spec = self.spec.clone();
+        let dir = self.dir.clone();
+        let fault_plan = self.fault_plan.clone();
+        let ctx = self.ctx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("qimeng-shard-{shard}"))
+            .spawn(move || {
+                let base: Box<dyn Executor> = match &spec {
+                    ExecutorSpec::Pjrt => match PjrtExecutor::open(&dir) {
+                        Ok(e) => Box::new(e),
+                        Err(e) => {
+                            if let Some(r) = ready {
+                                let _ = r.send(Err(e));
+                            }
+                            return;
+                        }
+                    },
+                    ExecutorSpec::Reference => {
+                        Box::new(ReferenceExecutor::with_threads(ctx.ref_threads))
+                    }
+                    ExecutorSpec::Custom(f) => match f(shard) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            if let Some(r) = ready {
+                                let _ = r.send(Err(e));
+                            }
+                            return;
+                        }
+                    },
+                };
+                // Fault plans wrap the executor and seed an admission
+                // stream per (shard, generation): a restarted shard draws
+                // a fresh schedule instead of replaying the panic that
+                // killed its predecessor on the same batch ordinal.
+                let (exec, admission) = match fault_plan.as_ref().filter(|p| !p.is_noop()) {
+                    Some(plan) => (
+                        Box::new(FaultyExecutor::new(base, plan.injector(shard, generation, 0)))
+                            as Box<dyn Executor>,
+                        Some(plan.injector(shard, generation, 1)),
+                    ),
+                    None => (base, None),
+                };
+                if let Some(r) = ready {
+                    let _ = r.send(Ok(()));
+                }
+                shard_loop(shard, exec, admission, bell_rx, mailbox, ctx);
+            })
+            .with_context(|| format!("spawning shard {shard}"))?;
+        Ok((bell_tx, handle))
+    }
+}
+
+/// The running pool: a supervisor thread owning N shard threads, plus
+/// the shared tune cache, decode-lane KV pool and quarantine board.
+pub struct ExecutorPool {
+    ingress: mpsc::Sender<PoolMsg>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
     pub topology: Arc<ServeTopology>,
     metrics: Arc<Metrics>,
     tune: Arc<Mutex<TuneCache>>,
     tune_path: Option<PathBuf>,
     pub kv_pool: Arc<PagedKvPool>,
+    pub quarantine: Arc<QuarantineBoard>,
+    quarantine_path: Option<PathBuf>,
 }
 
 impl ExecutorPool {
-    #[allow(clippy::too_many_arguments)]
     pub fn start(
-        shards: usize,
-        spec: ExecutorSpec,
-        artifacts_dir: PathBuf,
+        opts: PoolOptions,
         topology: ServeTopology,
-        window: Duration,
         metrics: Arc<Metrics>,
         tune: TuneCache,
-        tune_path: Option<PathBuf>,
         kv_pool: Arc<PagedKvPool>,
+        quarantine: Arc<QuarantineBoard>,
     ) -> Result<Self> {
-        let shards = shards.max(1);
+        let shards = opts.shards.max(1);
         // Reference shards split the machine's compute-thread budget so
         // N concurrent shards don't oversubscribe the host N-fold.
         let ref_threads = (crate::verify::exec::default_threads() / shards).max(1);
         let topology = Arc::new(topology);
         let router = Arc::new(Mutex::new(Router::new(shards)));
         let tune = Arc::new(Mutex::new(tune));
-        let mut txs = Vec::with_capacity(shards);
-        let mut handles = Vec::with_capacity(shards);
+        let epoch = Instant::now();
+        let (ingress_tx, ingress_rx) = mpsc::channel::<PoolMsg>();
+        let ctx = ShardCtx {
+            topo: topology.clone(),
+            window: opts.window,
+            metrics: metrics.clone(),
+            router: router.clone(),
+            tune: tune.clone(),
+            kv_pool: kv_pool.clone(),
+            quarantine: quarantine.clone(),
+            requeue: ingress_tx.clone(),
+            retry: opts.retry.clone(),
+            epoch,
+            ref_threads,
+        };
+        let spawner = ShardSpawner {
+            spec: opts.spec.clone(),
+            dir: opts.artifacts_dir.clone(),
+            fault_plan: opts.fault_plan.clone(),
+            ctx,
+        };
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let mut slots: Vec<ShardSlot> = Vec::with_capacity(shards);
         for shard in 0..shards {
-            let (tx, rx) = mpsc::channel::<AttnRequest>();
-            let spec = spec.clone();
-            let dir = artifacts_dir.clone();
-            let topo = topology.clone();
-            let m = metrics.clone();
-            let r = router.clone();
-            let t = tune.clone();
-            let pool_ref = kv_pool.clone();
-            let ready = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("qimeng-shard-{shard}"))
-                .spawn(move || {
-                    let exec: Box<dyn Executor> = match &spec {
-                        ExecutorSpec::Pjrt => match PjrtExecutor::open(&dir) {
-                            Ok(e) => Box::new(e),
-                            Err(e) => {
-                                let _ = ready.send(Err(e));
-                                return;
-                            }
-                        },
-                        ExecutorSpec::Reference => {
-                            Box::new(ReferenceExecutor::with_threads(ref_threads))
-                        }
-                        ExecutorSpec::Custom(f) => match f(shard) {
-                            Ok(e) => e,
-                            Err(e) => {
-                                let _ = ready.send(Err(e));
-                                return;
-                            }
-                        },
-                    };
-                    let _ = ready.send(Ok(()));
-                    shard_loop(shard, exec, rx, topo, window, m, r, t, pool_ref);
-                })
-                .with_context(|| format!("spawning shard {shard}"))?;
-            txs.push(Some(tx));
-            handles.push(handle);
+            let mailbox = Arc::new(ShardMailbox::new(&epoch));
+            let (doorbell, handle) =
+                spawner.spawn(shard, 0, mailbox.clone(), Some(ready_tx.clone()))?;
+            let health_gauge =
+                obs::gauge(&format!("qimeng_shard_healthy{{shard=\"{shard}\"}}"));
+            health_gauge.set(1);
+            slots.push(ShardSlot {
+                mailbox,
+                doorbell,
+                handle: Some(handle),
+                generation: 0,
+                restarts: 0,
+                healthy: true,
+                dead: false,
+                health_gauge,
+            });
         }
         drop(ready_tx);
         for _ in 0..shards {
@@ -829,19 +1065,41 @@ impl ExecutorPool {
                 .context("shard died during startup")?
                 .map_err(|e| anyhow::anyhow!(e))?;
         }
-        Ok(ExecutorPool { txs, handles, router, topology, metrics, tune, tune_path, kv_pool })
+        let state = SupervisorState {
+            spawner,
+            shards: slots,
+            router,
+            metrics: metrics.clone(),
+            cfg: opts.supervisor.clone(),
+            epoch,
+            ingress: ingress_rx,
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("qimeng-supervisor".to_string())
+            .spawn(move || supervisor_loop(state))
+            .context("spawning supervisor thread")?;
+        Ok(ExecutorPool {
+            ingress: ingress_tx,
+            supervisor: Some(supervisor),
+            topology,
+            metrics,
+            tune,
+            tune_path: opts.tune_path,
+            kv_pool,
+            quarantine,
+            quarantine_path: opts.quarantine_path,
+        })
     }
 
-    /// Route one request to its shard. A send failure means the shard
-    /// died; the reply channel disconnects, which callers observe as
-    /// `RecvError` (same contract as the single-thread loop).
+    /// Hand one request to the supervisor for dispatch. If the
+    /// supervisor is gone (crashed, or the pool is shutting down) the
+    /// request still gets its terminal response instead of being
+    /// silently dropped.
     pub fn submit(&self, req: AttnRequest) {
-        let (shard, rebalanced) = lock(&self.router).route(&req.family);
-        if rebalanced {
-            self.metrics.rebalances.fetch_add(1, Ordering::Relaxed);
-        }
-        if let Some(Some(tx)) = self.txs.get(shard) {
-            let _ = tx.send(req);
+        if let Err(mpsc::SendError(msg)) = self.ingress.send(PoolMsg::Submit(req)) {
+            if let PoolMsg::Submit(req) = msg {
+                fail_request(&req, "serving pool is down", &self.metrics);
+            }
         }
     }
 
@@ -851,22 +1109,33 @@ impl ExecutorPool {
     }
 
     fn finish(&mut self) {
-        for tx in &mut self.txs {
-            tx.take(); // disconnect → shard flushes pending and exits
-        }
-        for h in self.handles.drain(..) {
+        let _ = self.ingress.send(PoolMsg::Shutdown);
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
         // take() keeps finish() idempotent (shutdown consumes self, and
         // Drop runs right after).
         if let Some(path) = self.tune_path.take() {
-            if let Err(e) = lock(&self.tune).save(&path) {
-                eprintln!("warning: failed to persist tune cache: {e:#}");
+            // Serving evidence is valuable: one bounded retry before
+            // giving up, and a counted (not just printed) failure.
+            let mut saved = lock(&self.tune).save(&path);
+            if saved.is_err() {
+                saved = lock(&self.tune).save(&path);
+            }
+            if let Err(e) = saved {
+                obs::counter("qimeng_tune_flush_failures_total").inc();
+                eprintln!("warning: failed to persist tune cache (after retry): {e:#}");
+            }
+        }
+        if let Some(path) = self.quarantine_path.take() {
+            if let Err(e) = self.quarantine.save(&path) {
+                obs::counter("qimeng_quarantine_flush_failures_total").inc();
+                eprintln!("warning: failed to persist quarantine board: {e:#}");
             }
         }
     }
 
-    /// Drain all shards, stop them, and persist the tune cache.
+    /// Drain all shards, stop them, and persist tune cache + quarantine.
     pub fn shutdown(mut self) {
         self.finish();
     }
@@ -878,21 +1147,350 @@ impl Drop for ExecutorPool {
     }
 }
 
-/// One shard's serve loop: ingest → lane-aware batch planning → execute
-/// → reply, with per-variant latency observation.
-#[allow(clippy::too_many_arguments)]
+/// Terminal failure for a request that never reached a shard (or whose
+/// shard is gone). Counted only if this reply actually won the slot.
+fn fail_request(req: &AttnRequest, msg: &str, metrics: &Metrics) {
+    let latency = req.enqueued.elapsed();
+    obs::record_closed("serve.request", "serve", req.enqueued, latency);
+    if req.reply.send(AttnResponse {
+        id: req.id,
+        outcome: RequestOutcome::Failed(msg.to_string()),
+        latency,
+        batch_size: 0,
+        attempts: req.attempts,
+        degraded: false,
+    }) {
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Fail everything still parked in a dead shard's mailbox, releasing its
+/// router depth.
+fn fail_mailbox(
+    mailbox: &ShardMailbox,
+    shard: usize,
+    router: &Mutex<Router>,
+    metrics: &Metrics,
+    msg: &str,
+) {
+    let stranded: Vec<AttnRequest> = {
+        let mut q = lock(&mailbox.queue);
+        let mut f = lock(&mailbox.in_flight);
+        let mut all = std::mem::take(&mut *q);
+        all.append(&mut f);
+        all
+    };
+    if stranded.is_empty() {
+        return;
+    }
+    {
+        let mut rt = lock(router);
+        for _ in &stranded {
+            rt.complete(shard);
+        }
+    }
+    for req in &stranded {
+        fail_request(req, msg, metrics);
+    }
+}
+
+struct SupervisorState {
+    spawner: ShardSpawner,
+    shards: Vec<ShardSlot>,
+    router: Arc<Mutex<Router>>,
+    metrics: Arc<Metrics>,
+    cfg: SupervisorConfig,
+    epoch: Instant,
+    ingress: mpsc::Receiver<PoolMsg>,
+}
+
+/// The supervisor thread: dispatches ingress traffic to healthy shards,
+/// sweeps shard health (crash → restart on the same mailbox; hung →
+/// steer around and steal its backlog; restart budget exhausted → dead),
+/// and runs the shutdown drain.
+fn supervisor_loop(mut sup: SupervisorState) {
+    let mut shutting_down = false;
+    while !shutting_down {
+        match sup.ingress.recv_timeout(sup.cfg.check_every) {
+            Ok(msg) => shutting_down |= handle_msg(&mut sup, msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+        while let Ok(msg) = sup.ingress.try_recv() {
+            shutting_down |= handle_msg(&mut sup, msg);
+        }
+        if !shutting_down {
+            health_sweep(&mut sup);
+        }
+    }
+    drain_pool(&mut sup);
+}
+
+fn handle_msg(sup: &mut SupervisorState, msg: PoolMsg) -> bool {
+    match msg {
+        PoolMsg::Submit(req) => {
+            dispatch(sup, req, None);
+            false
+        }
+        PoolMsg::Requeue { req, avoid } => {
+            dispatch(sup, req, Some(avoid));
+            false
+        }
+        PoolMsg::Shutdown => true,
+    }
+}
+
+/// Route one request onto a live shard's mailbox, steering around
+/// unhealthy shards (and `avoid`, the shard a retry just failed on)
+/// whenever an alternative exists.
+fn dispatch(sup: &mut SupervisorState, req: AttnRequest, avoid: Option<usize>) {
+    if req.reply.is_sent() {
+        return; // already answered elsewhere (steal/redispatch race)
+    }
+    if sup.shards.iter().all(|s| s.dead) {
+        fail_request(&req, "no live shard to serve request", &sup.metrics);
+        return;
+    }
+    let mut allowed: Vec<bool> = sup.shards.iter().map(|s| !s.dead && s.healthy).collect();
+    if let Some(a) = avoid {
+        if a < allowed.len() && allowed.iter().enumerate().any(|(i, &x)| x && i != a) {
+            allowed[a] = false;
+        }
+    }
+    if !allowed.iter().any(|&x| x) {
+        // Every shard is suspect: any live one beats not serving at all.
+        allowed = sup.shards.iter().map(|s| !s.dead).collect();
+    }
+    let (shard, rebalanced) = lock(&sup.router).route_constrained(&req.family, &allowed);
+    if rebalanced {
+        sup.metrics.rebalances.fetch_add(1, Ordering::Relaxed);
+    }
+    match sup.shards.get(shard) {
+        Some(slot) if !slot.dead => {
+            lock(&slot.mailbox.queue).push(req);
+            let _ = slot.doorbell.send(());
+        }
+        _ => {
+            lock(&sup.router).complete(shard);
+            fail_request(&req, "routed to a dead shard", &sup.metrics);
+        }
+    }
+}
+
+fn health_sweep(sup: &mut SupervisorState) {
+    let now_us = sup.epoch.elapsed().as_micros() as u64;
+    let hb_limit = sup.cfg.heartbeat_timeout.as_micros() as u64;
+    for shard in 0..sup.shards.len() {
+        if sup.shards[shard].dead {
+            continue;
+        }
+        let finished = sup.shards[shard].handle.as_ref().is_none_or(|h| h.is_finished());
+        if finished {
+            // Outside of draining a shard loop never returns: a finished
+            // thread is a crash (injected panic, executor bug).
+            restart_shard(sup, shard);
+            continue;
+        }
+        let hb = sup.shards[shard].mailbox.heartbeat_us.load(Ordering::Acquire);
+        let stale = now_us.saturating_sub(hb) > hb_limit;
+        if stale && sup.shards[shard].healthy {
+            sup.shards[shard].healthy = false;
+            sup.shards[shard].health_gauge.set(0);
+            steal_work(sup, shard);
+        } else if !stale && !sup.shards[shard].healthy {
+            // The hang resolved (heartbeat is fresh again): readmit.
+            sup.shards[shard].healthy = true;
+            sup.shards[shard].health_gauge.set(1);
+        }
+    }
+}
+
+/// Replace a crashed shard thread. The replacement runs on the same
+/// mailbox, so claimed-but-unfinished work is re-queued by its first
+/// tick; attempt counts were bumped at claim time, which bounds how
+/// often a poisonous batch can crash-loop before failing terminally.
+fn restart_shard(sup: &mut SupervisorState, shard: usize) {
+    if let Some(h) = sup.shards[shard].handle.take() {
+        let _ = h.join(); // reap the crashed thread
+    }
+    if sup.shards[shard].restarts >= sup.cfg.max_restarts {
+        kill_shard(sup, shard);
+        return;
+    }
+    sup.shards[shard].restarts += 1;
+    sup.shards[shard].generation += 1;
+    sup.metrics.shard_restarts.fetch_add(1, Ordering::Relaxed);
+    let generation = sup.shards[shard].generation;
+    let mailbox = sup.shards[shard].mailbox.clone();
+    // Fresh heartbeat: the replacement must not be declared hung while
+    // it is still constructing its executor.
+    mailbox.beat(&sup.epoch);
+    match sup.spawner.spawn(shard, generation, mailbox, None) {
+        Ok((doorbell, handle)) => {
+            sup.shards[shard].doorbell = doorbell;
+            sup.shards[shard].handle = Some(handle);
+            sup.shards[shard].healthy = true;
+            sup.shards[shard].health_gauge.set(1);
+        }
+        Err(_) => kill_shard(sup, shard),
+    }
+}
+
+/// Declare a shard dead (restart budget exhausted or respawn failed) and
+/// give its backlog one more chance elsewhere.
+fn kill_shard(sup: &mut SupervisorState, shard: usize) {
+    sup.shards[shard].dead = true;
+    sup.shards[shard].healthy = false;
+    sup.shards[shard].health_gauge.set(0);
+    sup.shards[shard].handle = None;
+    let mailbox = sup.shards[shard].mailbox.clone();
+    let stranded: Vec<AttnRequest> = {
+        let mut q = lock(&mailbox.queue);
+        let mut f = lock(&mailbox.in_flight);
+        let mut all = std::mem::take(&mut *q);
+        all.append(&mut f);
+        all
+    };
+    if stranded.is_empty() {
+        return;
+    }
+    {
+        let mut rt = lock(&sup.router);
+        for _ in &stranded {
+            rt.complete(shard);
+        }
+    }
+    for req in stranded {
+        if !req.reply.is_sent() {
+            dispatch(sup, req, Some(shard));
+        }
+    }
+}
+
+/// A hung (heartbeat-stale, thread still running) shard loses its
+/// backlog: queued work was never claimed and is simply re-routed;
+/// claimed work may still complete on the hung thread, so a copy is
+/// re-dispatched and the reply slot's exactly-once latch picks whichever
+/// execution finishes first (the owning thread's epilogue releases its
+/// own router depth when it eventually wakes).
+fn steal_work(sup: &mut SupervisorState, shard: usize) {
+    let mailbox = sup.shards[shard].mailbox.clone();
+    let queued: Vec<AttnRequest> = std::mem::take(&mut *lock(&mailbox.queue));
+    let claimed: Vec<AttnRequest> = std::mem::take(&mut *lock(&mailbox.in_flight));
+    if !queued.is_empty() {
+        let mut rt = lock(&sup.router);
+        for _ in &queued {
+            rt.complete(shard);
+        }
+    }
+    for req in queued.into_iter().chain(claimed) {
+        if !req.reply.is_sent() {
+            dispatch(sup, req, Some(shard));
+        }
+    }
+}
+
+/// Shutdown drain: flag every mailbox as draining (shards flush their
+/// backlog immediately and exit), then reap shard threads — failing
+/// whatever a crashed or hung shard leaves behind so every submitted
+/// request still gets exactly one terminal response.
+fn drain_pool(sup: &mut SupervisorState) {
+    for slot in &sup.shards {
+        slot.mailbox.draining.store(true, Ordering::Release);
+        let _ = slot.doorbell.send(());
+    }
+    let grace = (sup.cfg.heartbeat_timeout * 4).max(Duration::from_secs(1));
+    let deadline = Instant::now() + grace;
+    loop {
+        // Traffic arriving after shards may have exited cannot be served
+        // reliably: fail it fast rather than strand it in a dead queue.
+        while let Ok(msg) = sup.ingress.try_recv() {
+            match msg {
+                PoolMsg::Submit(req) | PoolMsg::Requeue { req, .. } => {
+                    fail_request(&req, "serving pool is shutting down", &sup.metrics);
+                }
+                PoolMsg::Shutdown => {}
+            }
+        }
+        let mut all_done = true;
+        for shard in 0..sup.shards.len() {
+            let finished = sup.shards[shard].handle.as_ref().is_none_or(|h| h.is_finished());
+            if !finished {
+                all_done = false;
+                continue;
+            }
+            if let Some(h) = sup.shards[shard].handle.take() {
+                let _ = h.join();
+                let mailbox = sup.shards[shard].mailbox.clone();
+                fail_mailbox(
+                    &mailbox,
+                    shard,
+                    &sup.router,
+                    &sup.metrics,
+                    "pool shut down before request was served",
+                );
+            }
+        }
+        if all_done {
+            return;
+        }
+        if Instant::now() >= deadline {
+            for shard in 0..sup.shards.len() {
+                if sup.shards[shard].handle.take().is_some() {
+                    // Detach the hung thread; its backlog fails now.
+                    let mailbox = sup.shards[shard].mailbox.clone();
+                    fail_mailbox(
+                        &mailbox,
+                        shard,
+                        &sup.router,
+                        &sup.metrics,
+                        "shard hung at shutdown",
+                    );
+                }
+            }
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// One member of a claimed batch: just enough to reply and to scrub the
+/// in-flight ledger, independent of whether the supervisor stole the
+/// underlying request in the meantime.
+struct ClaimedMember {
+    id: u64,
+    reply: Arc<ReplySlot>,
+    enqueued: Instant,
+    /// Attempt count *after* this claim's bump.
+    attempts: u32,
+}
+
+/// A batch claimed out of the mailbox: packed host buffers plus member
+/// reply handles. Its requests live in `mailbox.in_flight` while it
+/// executes.
+struct PackedBatch {
+    family: FamilyKey,
+    lane: LaneKey,
+    capacity: usize,
+    padding: usize,
+    kv_reserved: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    members: Vec<ClaimedMember>,
+}
+
+/// One shard's serve loop: heartbeat → shed/plan/claim out of the shared
+/// mailbox → execute → reply, with per-variant latency observation,
+/// quarantine bookkeeping and retry re-routing.
 fn shard_loop(
     shard: usize,
     mut exec: Box<dyn Executor>,
-    rx: mpsc::Receiver<AttnRequest>,
-    topo: Arc<ServeTopology>,
-    window: Duration,
-    metrics: Arc<Metrics>,
-    router: Arc<Mutex<Router>>,
-    tune: Arc<Mutex<TuneCache>>,
-    kv_pool: Arc<PagedKvPool>,
+    mut admission_faults: Option<FaultInjector>,
+    doorbell: mpsc::Receiver<()>,
+    mailbox: Arc<ShardMailbox>,
+    ctx: ShardCtx,
 ) {
-    let mut pending: Vec<AttnRequest> = Vec::new();
     // Lane-depth and KV-residency gauges for the Prometheus exposition
     // (`tlc serve --metrics-out`); handles are created once, updates are
     // single relaxed stores per planning tick.
@@ -906,121 +1504,146 @@ fn shard_loop(
     // Variants that have executed at least once: their first sample is a
     // warm-up (lazy compilation, cold caches) and is not observed.
     let mut warmed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
-    let mut disconnected = false;
+    // Degraded lane (every variant of a slot quarantined): bit-exact
+    // reference fallback, built lazily so healthy serving pays nothing.
+    let mut degraded_exec: Option<ReferenceExecutor> = None;
+    let mut supervisor_gone = false;
+
+    // A replacement shard inherits its predecessor's mailbox: whatever
+    // was claimed when the thread died goes back to the queue for
+    // another attempt (claims bump attempt counts, so a poisonous batch
+    // cannot crash-loop forever).
+    {
+        let mut q = lock(&mailbox.queue);
+        let mut f = lock(&mailbox.in_flight);
+        q.append(&mut f);
+    }
+
     loop {
+        mailbox.beat(&ctx.epoch);
         // Ingest: block briefly so idle spinning stays cheap. Pending
         // decode work shortens the poll to window/8 so the decode lane's
         // quarter-window flush deadline is actually honoured — a
         // half-window sleep would double latency for exactly the
         // traffic the lane exists to serve quickly.
-        let decode_depth = pending
-            .iter()
-            .filter(|r| LaneKey::of(&r.family) == LaneKey::Decode)
-            .count();
-        g_decode.set(decode_depth as i64);
-        g_prefill.set((pending.len() - decode_depth) as i64);
-        g_kv.set(kv_pool.in_use_bytes() as i64);
-        let poll = if decode_depth > 0 { window / 8 } else { window / 2 };
-        match rx.recv_timeout(poll.max(Duration::from_micros(100))) {
-            Ok(req) => {
-                pending.push(req);
-                // Opportunistically drain whatever else is queued.
-                while let Ok(r) = rx.try_recv() {
-                    pending.push(r);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
-        }
-
-        let now = Instant::now();
-        let view: Vec<(usize, FamilyKey, bool)> = pending
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                // Decode requests are cheap and latency-critical: they
-                // flush at a quarter of the prefill batching window.
-                let lane_window = match LaneKey::of(&r.family) {
-                    LaneKey::Decode => window / 4,
-                    LaneKey::Prefill => window,
-                };
-                let expired = disconnected || now.duration_since(r.enqueued) >= lane_window;
-                (i, r.family.clone(), expired)
-            })
-            .collect();
-        let plans = {
-            // Only time real planning work — an idle tick would spam
-            // the trace with empty spans at every poll timeout.
-            let _sp = (!pending.is_empty()).then(|| obs::span_cat("serve.plan", "serve"));
-            plan_batches_lanes(&view, &topo.capacities)
+        let (decode_depth, total) = {
+            let q = lock(&mailbox.queue);
+            let d = q.iter().filter(|r| LaneKey::of(&r.family) == LaneKey::Decode).count();
+            (d, q.len())
         };
+        g_decode.set(decode_depth as i64);
+        g_prefill.set((total - decode_depth) as i64);
+        g_kv.set(ctx.kv_pool.in_use_bytes() as i64);
+        let poll = if decode_depth > 0 { ctx.window / 8 } else { ctx.window / 2 };
+        match doorbell.recv_timeout(poll.max(Duration::from_micros(100))) {
+            Ok(()) => while doorbell.try_recv().is_ok() {},
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => supervisor_gone = true,
+        }
+        mailbox.beat(&ctx.epoch);
+        let draining = mailbox.draining.load(Ordering::Acquire) || supervisor_gone;
 
-        if !plans.is_empty() {
-            execute_plans(
+        let batches = shed_plan_claim(shard, &mailbox, &mut admission_faults, &ctx, draining);
+        for batch in batches {
+            execute_claimed(
                 shard,
                 exec.as_mut(),
-                &mut pending,
-                plans,
-                &topo,
+                &mut degraded_exec,
+                batch,
                 &mut slot_seq,
                 &mut warmed,
-                &metrics,
-                &router,
-                &tune,
-                &kv_pool,
+                &mailbox,
+                &ctx,
+                draining,
             );
+            // Long executions must not read as a dead shard.
+            mailbox.beat(&ctx.epoch);
         }
 
-        // Reject requests no executable can serve (router error).
-        let mut i = 0;
-        while i < pending.len() {
-            if !topo.servable(&pending[i].family) {
-                let req = pending.swap_remove(i);
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                lock(&router).complete(shard);
-                let _ = req.reply.send(AttnResponse {
-                    id: req.id,
-                    result: Err(format!("no compiled artifact for family {:?}", req.family)),
-                    latency: req.enqueued.elapsed(),
-                    batch_size: 0,
-                });
-            } else {
-                i += 1;
-            }
-        }
-
-        if disconnected && pending.is_empty() {
+        if draining
+            && lock(&mailbox.queue).is_empty()
+            && lock(&mailbox.in_flight).is_empty()
+        {
             return;
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn execute_plans(
+/// One planning tick against the mailbox: shed requests with terminal
+/// dispositions (timeout, retry budget, unservable), plan batches over
+/// what remains (backoff-deferred requests are invisible), and claim the
+/// planned members queue → `in_flight` under a single lock session — the
+/// supervisor may steal from the queue the moment the lock drops.
+fn shed_plan_claim(
     shard: usize,
-    exec: &mut dyn Executor,
-    pending: &mut Vec<AttnRequest>,
-    plans: Vec<BatchPlan>,
-    topo: &ServeTopology,
-    slot_seq: &mut BTreeMap<(FamilyKey, LaneKey, usize), u64>,
-    warmed: &mut std::collections::BTreeSet<String>,
-    metrics: &Metrics,
-    router: &Mutex<Router>,
-    tune: &Mutex<TuneCache>,
-    kv_pool: &PagedKvPool,
-) {
-    // Execute plans in order; collect consumed indices, then compact.
-    let mut consumed: Vec<usize> = Vec::new();
+    mailbox: &ShardMailbox,
+    admission_faults: &mut Option<FaultInjector>,
+    ctx: &ShardCtx,
+    draining: bool,
+) -> Vec<PackedBatch> {
+    let now = Instant::now();
+    let state_of = |r: &AttnRequest, servable: bool| RequestState {
+        enqueued: r.enqueued,
+        deadline: r.deadline,
+        not_before: r.not_before,
+        attempts: r.attempts,
+        servable,
+        replied: r.reply.is_sent(),
+    };
+    let policy_of = |fam: &FamilyKey| {
+        // Decode requests are cheap and latency-critical: they flush at
+        // a quarter of the prefill batching window.
+        let lane_window = match LaneKey::of(fam) {
+            LaneKey::Decode => ctx.window / 4,
+            LaneKey::Prefill => ctx.window,
+        };
+        AdmitPolicy { lane_window, draining, max_attempts: ctx.retry.max_attempts }
+    };
+
+    let mut q = lock(&mailbox.queue);
+
+    // Shed pass: terminal dispositions leave with a response before
+    // planning ever sees them.
+    let mut i = 0;
+    while i < q.len() {
+        let servable = ctx.topo.servable(&q[i].family);
+        match classify(now, &state_of(&q[i], servable), &policy_of(&q[i].family)) {
+            Disposition::Shed(reason) => {
+                let req = q.swap_remove(i);
+                shed_request(shard, req, reason, ctx);
+            }
+            _ => i += 1,
+        }
+    }
+
+    let view: Vec<(usize, FamilyKey, bool)> = q
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| match classify(now, &state_of(r, true), &policy_of(&r.family)) {
+            Disposition::Plan { expired } => Some((i, r.family.clone(), expired)),
+            _ => None,
+        })
+        .collect();
+    let plans = {
+        // Only time real planning work — an idle tick would spam the
+        // trace with empty spans at every poll timeout.
+        let _sp = (!view.is_empty()).then(|| obs::span_cat("serve.plan", "serve"));
+        plan_batches_lanes(&view, &ctx.topo.capacities)
+    };
+
+    let mut batches: Vec<PackedBatch> = Vec::new();
+    let mut claimed_idx: Vec<usize> = Vec::new();
     for plan in plans {
         let fam = plan.family.clone();
         // Decode batches draw their KV residency (pages actually
         // resident, per the family's layout) from the shared pool before
-        // executing; a full pool defers the batch to the next planning
-        // tick — its members simply stay pending.
+        // executing; a full pool — or an injected exhaustion fault —
+        // defers the batch to the next tick: members simply stay queued.
         let kv_reserved = if plan.lane == LaneKey::Decode {
             let sp = obs::span_cat("serve.admit", "serve");
             let bytes = plan.capacity.saturating_mul(fam.kv_bytes());
-            let admitted = kv_pool.try_alloc(bytes);
+            let exhausted = admission_faults.as_mut().is_some_and(|inj| inj.kv_exhausted());
+            let admitted = !exhausted && ctx.kv_pool.try_alloc(bytes);
             sp.finish();
             if !admitted {
                 continue;
@@ -1029,138 +1652,336 @@ fn execute_plans(
         } else {
             0
         };
-        let slot_key = (fam.clone(), plan.lane, plan.capacity);
-        let info = match topo.artifacts.get(&slot_key) {
-            Some(slot) => {
-                let seq_no = slot_seq.entry(slot_key).or_insert(0);
-                *seq_no += 1;
-                slot.pick(*seq_no).clone()
-            }
-            None => {
-                // A capacity with no artifact slot (hand-built topology
-                // gone inconsistent): fail the batch rather than leave
-                // its members pending forever — that would hang shutdown.
-                for &idx in &plan.members {
-                    let r = &pending[idx];
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(AttnResponse {
-                        id: r.id,
-                        result: Err(format!(
-                            "no artifact for slot ({:?}, {}, {})",
-                            fam, plan.lane, plan.capacity
-                        )),
-                        latency: r.enqueued.elapsed(),
-                        batch_size: plan.members.len(),
-                    });
-                }
-                let mut rt = lock(router);
-                for _ in &plan.members {
-                    rt.complete(shard);
-                }
-                drop(rt);
-                consumed.extend(plan.members.iter().copied());
-                kv_pool.free(kv_reserved);
-                continue;
-            }
-        };
         let cap = plan.capacity;
-        let (qn, kn, vn, on) = (fam.q_len(), fam.k_len(), fam.v_len(), fam.out_len());
-        let mut q = vec![0.0f32; cap * qn];
-        let mut k = vec![0.0f32; cap * kn];
-        let mut v = vec![0.0f32; cap * vn];
+        let (qn, kn, vn) = (fam.q_len(), fam.k_len(), fam.v_len());
+        let mut qb = vec![0.0f32; cap * qn];
+        let mut kb = vec![0.0f32; cap * kn];
+        let mut vb = vec![0.0f32; cap * vn];
+        let mut members = Vec::with_capacity(plan.members.len());
         for (slot, &idx) in plan.members.iter().enumerate() {
-            let r = &pending[idx];
-            q[slot * qn..(slot + 1) * qn].copy_from_slice(&r.q);
-            k[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
-            v[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
+            let r = &q[idx];
+            qb[slot * qn..(slot + 1) * qn].copy_from_slice(&r.q);
+            kb[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
+            vb[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
+            members.push(ClaimedMember {
+                id: r.id,
+                reply: r.reply.clone(),
+                enqueued: r.enqueued,
+                attempts: r.attempts + 1,
+            });
         }
-
-        let sp_exec = obs::span_cat("serve.execute", "serve");
-        let t0 = Instant::now();
-        let result = exec.execute_batch(&fam, &info, cap, &q, &k, &v);
-        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-        sp_exec.finish();
-
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.record_shard_batch(shard);
-        metrics.padded_slots.fetch_add(plan.padding() as u64, Ordering::Relaxed);
-
-        // An executor returning the wrong output size must fail the batch,
-        // not panic the shard on the per-slot slicing below.
-        let result = result.and_then(|out| {
-            if out.len() == cap * on {
-                Ok(out)
-            } else {
-                Err(format!(
-                    "executor returned {} elements for a {}-slot batch (want {})",
-                    out.len(),
-                    cap,
-                    cap * on
-                ))
-            }
+        claimed_idx.extend(plan.members.iter().copied());
+        batches.push(PackedBatch {
+            family: fam,
+            lane: plan.lane,
+            capacity: cap,
+            padding: plan.padding(),
+            kv_reserved,
+            q: qb,
+            k: kb,
+            v: vb,
+            members,
         });
+    }
+    if !claimed_idx.is_empty() {
+        // Move claimed requests queue → in_flight; descending index
+        // order keeps the remaining indices valid under swap_remove.
+        claimed_idx.sort_unstable_by(|a, b| b.cmp(a));
+        let mut flight = lock(&mailbox.in_flight);
+        for idx in claimed_idx {
+            let mut r = q.swap_remove(idx);
+            r.attempts += 1;
+            flight.push(r);
+        }
+    }
+    batches
+}
 
-        match result {
-            Ok(out) => {
+/// Deliver a shed request's terminal response and release its routed
+/// depth.
+fn shed_request(shard: usize, req: AttnRequest, reason: ShedReason, ctx: &ShardCtx) {
+    // The routed depth is released whichever way the request leaves.
+    lock(&ctx.router).complete(shard);
+    if matches!(reason, ShedReason::AlreadyReplied) {
+        return; // served elsewhere (steal + redispatch won the race)
+    }
+    let latency = req.enqueued.elapsed();
+    let (outcome, counter) = match reason {
+        ShedReason::Timeout => (RequestOutcome::Timeout, &ctx.metrics.timeouts),
+        ShedReason::AttemptsExhausted => (
+            RequestOutcome::Failed(format!(
+                "retry budget exhausted after {} attempts",
+                req.attempts
+            )),
+            &ctx.metrics.errors,
+        ),
+        ShedReason::Unservable => (
+            RequestOutcome::Failed(format!(
+                "no compiled artifact for family {:?}",
+                req.family
+            )),
+            &ctx.metrics.errors,
+        ),
+        ShedReason::AlreadyReplied => unreachable!("handled above"),
+    };
+    obs::record_closed("serve.request", "serve", req.enqueued, latency);
+    if req.reply.send(AttnResponse {
+        id: req.id,
+        outcome,
+        latency,
+        batch_size: 0,
+        attempts: req.attempts,
+        degraded: false,
+    }) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Execute one claimed batch and settle every member: reply on success,
+/// retry-or-fail on error, quarantine bookkeeping either way.
+#[allow(clippy::too_many_arguments)]
+fn execute_claimed(
+    shard: usize,
+    exec: &mut dyn Executor,
+    degraded_exec: &mut Option<ReferenceExecutor>,
+    batch: PackedBatch,
+    slot_seq: &mut BTreeMap<(FamilyKey, LaneKey, usize), u64>,
+    warmed: &mut std::collections::BTreeSet<String>,
+    mailbox: &ShardMailbox,
+    ctx: &ShardCtx,
+    draining: bool,
+) {
+    let fam = batch.family.clone();
+    let cap = batch.capacity;
+    let on = fam.out_len();
+    let slot_key = (fam.clone(), batch.lane, cap);
+    let choice: Option<ArtifactInfo> = match ctx.topo.artifacts.get(&slot_key) {
+        Some(slot) => {
+            let seq_no = slot_seq.entry(slot_key).or_insert(0);
+            *seq_no += 1;
+            slot.pick_healthy(*seq_no, |i| ctx.quarantine.is_quarantined(&variant_key(i)))
+                .cloned()
+        }
+        None => {
+            // A capacity with no artifact slot (hand-built topology gone
+            // inconsistent): terminal failure, never a retry — the same
+            // hole exists on every shard.
+            fail_claimed(
+                &batch,
+                &format!("no artifact for slot ({:?}, {}, {})", fam, batch.lane, cap),
+                mailbox,
+                ctx,
+            );
+            release(shard, &batch, ctx);
+            return;
+        }
+    };
+    // Every variant quarantined → degraded-but-correct reference lane.
+    let (info, degraded) = match choice {
+        Some(info) => (info, false),
+        None => (
+            ArtifactInfo {
+                id: "degraded:reference".to_string(),
+                cand: None,
+                obs_key: String::new(),
+            },
+            true,
+        ),
+    };
+
+    let sp_exec = obs::span_cat("serve.execute", "serve");
+    let t0 = Instant::now();
+    let result = if degraded {
+        degraded_exec
+            .get_or_insert_with(|| ReferenceExecutor::with_threads(ctx.ref_threads))
+            .execute_batch(&fam, &info, cap, &batch.q, &batch.k, &batch.v)
+    } else {
+        exec.execute_batch(&fam, &info, cap, &batch.q, &batch.k, &batch.v)
+    };
+    let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+    sp_exec.finish();
+
+    ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics.record_shard_batch(shard);
+    ctx.metrics.padded_slots.fetch_add(batch.padding as u64, Ordering::Relaxed);
+
+    // An executor returning the wrong output size must fail the batch,
+    // not panic the shard on the per-slot slicing below.
+    let result = result.and_then(|out| {
+        if out.len() == cap * on {
+            Ok(out)
+        } else {
+            Err(format!(
+                "executor returned {} elements for a {}-slot batch (want {})",
+                out.len(),
+                cap,
+                cap * on
+            ))
+        }
+    });
+
+    match result {
+        Ok(out) => {
+            if !degraded {
+                let vkey = variant_key(&info);
+                // Latency-blowup quarantine: a variant suddenly 8× worse
+                // than its own running mean stops receiving traffic.
+                if ctx.quarantine.record_success(&vkey, exec_us) {
+                    ctx.metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                }
                 // Close the loop to L1: fold this variant's measured
                 // latency into the shared tune cache. For cold-start
                 // executors the variant's first sample is a warm-up
                 // (lazy compile) and is discarded.
-                if let Some(cand) = info.cand {
-                    let vkey = tune_cache::observed_key(&info.obs_key, &cand);
+                if let Some(cand) = info.cand.clone() {
                     if !exec.cold_start() || !warmed.insert(vkey) {
-                        lock(tune).observe(&info.obs_key, cand, exec_us);
+                        lock(&ctx.tune).observe(&info.obs_key, cand, exec_us);
                     }
                 }
-                let sp_respond = obs::span_cat("serve.respond", "serve");
-                for (slot, &idx) in plan.members.iter().enumerate() {
-                    let r = &pending[idx];
-                    let piece = out[slot * on..(slot + 1) * on].to_vec();
-                    let latency = r.enqueued.elapsed();
-                    metrics.responses.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_latency(latency);
-                    // The whole queue→reply lifetime as one closed span:
-                    // the request predates any guard, so it is recorded
-                    // out-of-band from its `enqueued` timestamp.
-                    obs::record_closed("serve.request", "serve", r.enqueued, latency);
-                    let _ = r.reply.send(AttnResponse {
-                        id: r.id,
-                        result: Ok(piece),
-                        latency,
-                        batch_size: plan.members.len(),
-                    });
-                }
-                sp_respond.finish();
             }
-            Err(e) => {
-                for &idx in &plan.members {
-                    let r = &pending[idx];
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    let latency = r.enqueued.elapsed();
-                    obs::record_closed("serve.request", "serve", r.enqueued, latency);
-                    let _ = r.reply.send(AttnResponse {
-                        id: r.id,
-                        result: Err(e.clone()),
-                        latency,
-                        batch_size: plan.members.len(),
-                    });
+            let sp_respond = obs::span_cat("serve.respond", "serve");
+            for (slot, m) in batch.members.iter().enumerate() {
+                let piece = out[slot * on..(slot + 1) * on].to_vec();
+                let latency = m.enqueued.elapsed();
+                // The whole queue→reply lifetime as one closed span:
+                // the request predates any guard, so it is recorded
+                // out-of-band from its `enqueued` timestamp.
+                obs::record_closed("serve.request", "serve", m.enqueued, latency);
+                if m.reply.send(AttnResponse {
+                    id: m.id,
+                    outcome: RequestOutcome::Ok(piece),
+                    latency,
+                    batch_size: batch.members.len(),
+                    attempts: m.attempts,
+                    degraded,
+                }) {
+                    ctx.metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    ctx.metrics.record_latency(latency);
+                    if degraded {
+                        ctx.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
+            sp_respond.finish();
+            // Done: clear this batch's in-flight entries (any the
+            // supervisor stole are simply no longer there).
+            let ids: Vec<u64> = batch.members.iter().map(|m| m.id).collect();
+            lock(&mailbox.in_flight).retain(|r| !ids.contains(&r.id));
         }
-        {
-            let mut rt = lock(router);
-            for _ in &plan.members {
-                rt.complete(shard);
+        Err(e) => {
+            if !degraded {
+                let vkey = variant_key(&info);
+                if ctx.quarantine.record_failure(&vkey) {
+                    ctx.metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                }
             }
+            // A failing degraded lane is not retryable: the reference
+            // oracle rejecting the batch means the request is malformed.
+            retry_or_fail(shard, &batch, e, !degraded, mailbox, ctx, draining);
         }
-        consumed.extend(plan.members.iter().copied());
-        kv_pool.free(kv_reserved);
     }
-    // Remove consumed requests (descending index order keeps indices valid).
-    consumed.sort_unstable_by(|a, b| b.cmp(a));
-    consumed.dedup();
-    for idx in consumed {
-        pending.swap_remove(idx);
+    release(shard, &batch, ctx);
+}
+
+/// Release a settled batch's router depth and KV reservation.
+fn release(shard: usize, batch: &PackedBatch, ctx: &ShardCtx) {
+    {
+        let mut rt = lock(&ctx.router);
+        for _ in &batch.members {
+            rt.complete(shard);
+        }
+    }
+    ctx.kv_pool.free(batch.kv_reserved);
+}
+
+/// Terminal failure for a whole claimed batch (no retry).
+fn fail_claimed(batch: &PackedBatch, e: &str, mailbox: &ShardMailbox, ctx: &ShardCtx) {
+    let ids: Vec<u64> = batch.members.iter().map(|m| m.id).collect();
+    lock(&mailbox.in_flight).retain(|r| !ids.contains(&r.id));
+    for m in &batch.members {
+        let latency = m.enqueued.elapsed();
+        obs::record_closed("serve.request", "serve", m.enqueued, latency);
+        if m.reply.send(AttnResponse {
+            id: m.id,
+            outcome: RequestOutcome::Failed(e.to_string()),
+            latency,
+            batch_size: batch.members.len(),
+            attempts: m.attempts,
+            degraded: false,
+        }) {
+            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Settle a failed batch member by member: expired deadlines become
+/// `Timeout`, requests with attempt budget left are requeued through the
+/// supervisor (with backoff, steered away from this shard), the rest
+/// fail terminally. Members the supervisor stole mid-execution are left
+/// to their new owner.
+fn retry_or_fail(
+    shard: usize,
+    batch: &PackedBatch,
+    e: String,
+    retryable: bool,
+    mailbox: &ShardMailbox,
+    ctx: &ShardCtx,
+    draining: bool,
+) {
+    let now = Instant::now();
+    let ids: Vec<u64> = batch.members.iter().map(|m| m.id).collect();
+    let mut extracted: Vec<AttnRequest> = Vec::new();
+    {
+        let mut flight = lock(&mailbox.in_flight);
+        let mut i = 0;
+        while i < flight.len() {
+            if ids.contains(&flight[i].id) {
+                extracted.push(flight.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    let nbatch = batch.members.len();
+    let terminal = |req: &AttnRequest, outcome: RequestOutcome| -> bool {
+        let latency = req.enqueued.elapsed();
+        obs::record_closed("serve.request", "serve", req.enqueued, latency);
+        req.reply.send(AttnResponse {
+            id: req.id,
+            outcome,
+            latency,
+            batch_size: nbatch,
+            attempts: req.attempts,
+            degraded: false,
+        })
+    };
+    for mut req in extracted {
+        if req.deadline.is_some_and(|d| now >= d) {
+            if terminal(&req, RequestOutcome::Timeout) {
+                ctx.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            continue;
+        }
+        if retryable && !draining && req.attempts < ctx.retry.max_attempts {
+            req.not_before = Some(now + ctx.retry.backoff_after(req.attempts));
+            match ctx.requeue.send(PoolMsg::Requeue { req, avoid: shard }) {
+                Ok(()) => {
+                    ctx.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(mpsc::SendError(msg)) => {
+                    // Supervisor gone mid-flight: terminal failure.
+                    if let PoolMsg::Requeue { req, .. } = msg {
+                        if terminal(&req, RequestOutcome::Failed(e.clone())) {
+                            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        if terminal(&req, RequestOutcome::Failed(e.clone())) {
+            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -1286,6 +2107,85 @@ mod tests {
         // A solo slot never explores.
         let solo = ArtifactSlot::solo(mk("only", 1));
         assert_eq!(solo.pick(EXPLORE_EVERY).id, "only");
+    }
+
+    #[test]
+    fn route_constrained_steers_around_disallowed_shards() {
+        let mut r = Router::new(3);
+        let f = fam(256, 256);
+        let (home, _) = r.route(&f);
+        // Disallowing the home shard moves the family (counted as a
+        // rebalance) onto an allowed shard.
+        let mut allowed = vec![true, true, true];
+        allowed[home] = false;
+        let (s, rebalanced) = r.route_constrained(&f, &allowed);
+        assert_ne!(s, home);
+        assert!(allowed[s]);
+        assert!(rebalanced);
+        assert_eq!(r.assignment_of(&f), Some(s));
+        // Affinity then sticks on the new shard while it stays allowed.
+        let (again, rb) = r.route_constrained(&f, &allowed);
+        assert_eq!(again, s);
+        assert!(!rb);
+    }
+
+    #[test]
+    fn route_constrained_all_false_falls_back_to_unconstrained() {
+        let mut r = Router::new(2);
+        let f = fam(256, 256);
+        // No shard allowed: serving somewhere beats never serving.
+        let (s, _) = r.route_constrained(&f, &[false, false]);
+        assert!(s < 2);
+        assert_eq!(r.depths().iter().sum::<usize>(), 1);
+        // An empty mask is plain route() — identical behaviour.
+        let mut a = Router::new(4);
+        let mut b = Router::new(4);
+        for i in 0..16 {
+            let f = fam(256, 256 + i);
+            assert_eq!(a.route(&f), b.route_constrained(&f, &[]));
+        }
+    }
+
+    #[test]
+    fn pick_healthy_falls_back_primary_then_alternate_then_degraded() {
+        let mk = |id: &str, sk: usize| ArtifactInfo {
+            id: id.into(),
+            cand: Some(Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: sk, prefetch_pages: 1 }),
+            obs_key: "k".into(),
+        };
+        let slot = ArtifactSlot { primary: mk("p", 1), alts: vec![mk("a", 4), mk("b", 8)] };
+        let none_quarantined = |_: &ArtifactInfo| false;
+        // Healthy board: identical to pick().
+        assert_eq!(slot.pick_healthy(EXPLORE_EVERY, none_quarantined).unwrap().id, "a");
+        // Quarantined exploration probe falls back to the primary.
+        let a_bad = |i: &ArtifactInfo| i.id == "a";
+        assert_eq!(slot.pick_healthy(EXPLORE_EVERY, a_bad).unwrap().id, "p");
+        // Quarantined primary falls back to the first healthy alternate.
+        let p_and_a_bad = |i: &ArtifactInfo| i.id == "p" || i.id == "a";
+        assert_eq!(slot.pick_healthy(1, p_and_a_bad).unwrap().id, "b");
+        // Everything quarantined → None → caller takes the degraded lane.
+        assert!(slot.pick_healthy(1, |_| true).is_none());
+    }
+
+    #[test]
+    fn variant_key_matches_tune_observed_key() {
+        let cand =
+            Candidate { bm: 64, bn: 64, stages: 2, warps: 4, split_k: 8, prefetch_pages: 1 };
+        let with_cand =
+            ArtifactInfo { id: "x".into(), cand: Some(cand.clone()), obs_key: "sig".into() };
+        assert_eq!(variant_key(&with_cand), tune_cache::observed_key("sig", &cand));
+        let bare = ArtifactInfo { id: "x".into(), cand: None, obs_key: "sig".into() };
+        assert_eq!(variant_key(&bare), "sig|artifact|x");
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_saturates() {
+        let p = RetryPolicy { max_attempts: 5, backoff: Duration::from_millis(2) };
+        assert_eq!(p.backoff_after(1), Duration::from_millis(2));
+        assert_eq!(p.backoff_after(2), Duration::from_millis(4));
+        assert_eq!(p.backoff_after(3), Duration::from_millis(8));
+        // Absurd attempt counts must not overflow the shift.
+        assert_eq!(p.backoff_after(1_000), Duration::from_millis(2) * 65536);
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! per-shard `Registry` which lazily compiles only the artifacts the
 //! router sends that shard. Submitters communicate over channels; the
 //! [`Coordinator`] is a thin handle around the pool.
+//!
+//! Fault tolerance (DESIGN.md §13): requests carry an optional deadline
+//! and a bounded retry budget, shard threads are supervised (dead ones
+//! restarted, hung ones steered around and their work re-dispatched),
+//! and artifact variants that repeatedly fail are quarantined with
+//! graceful degradation down to the bit-exact reference executor.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -15,9 +21,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::faults::FaultPlan;
 use super::metrics::Metrics;
-use super::request::{AttnRequest, AttnResponse, FamilyKey};
-use super::scheduler::{ExecutorPool, ExecutorSpec, PagedKvPool, ServeTopology};
+use super::quarantine::QuarantineBoard;
+use super::request::{AttnRequest, AttnResponse, FamilyKey, ReplySlot};
+use super::scheduler::{
+    ExecutorPool, ExecutorSpec, PagedKvPool, PoolOptions, RetryPolicy, ServeTopology,
+    SupervisorConfig,
+};
 use crate::autotune::cache::TuneCache;
 
 pub use super::scheduler::family_of;
@@ -43,6 +54,19 @@ pub struct ServeConfig {
     /// synthetic (reference executor without a manifest); manifest
     /// topologies carry the layout per artifact (`layout=` field).
     pub decode_layout: crate::sketch::spec::KvLayout,
+    /// Per-request deadline applied at submission; `None` disables
+    /// deadline shedding (requests wait as long as they must).
+    pub deadline: Option<Duration>,
+    /// Bounded retry for failed executions.
+    pub retry: RetryPolicy,
+    /// Shard supervision tuning (heartbeat timeout, restart budget).
+    pub supervisor: SupervisorConfig,
+    /// Deterministic fault injection (`None` in production).
+    pub fault_plan: Option<FaultPlan>,
+    /// Where the artifact quarantine board persists. `None` derives
+    /// `<tune_path>.quarantine.txt` next to the tune cache (and disables
+    /// persistence when the tune cache is not persisted either).
+    pub quarantine_path: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +79,11 @@ impl Default for ServeConfig {
             kv_budget_bytes: usize::MAX,
             tune_path: None,
             decode_layout: crate::sketch::spec::KvLayout::Contiguous,
+            deadline: None,
+            retry: RetryPolicy::default(),
+            supervisor: SupervisorConfig::default(),
+            fault_plan: None,
+            quarantine_path: None,
         }
     }
 }
@@ -71,6 +100,11 @@ pub struct Coordinator {
     pub tuned_selections: usize,
     /// Decode-lane KV residency pool (layout-aware byte accounting).
     pub kv_pool: Arc<PagedKvPool>,
+    /// Artifact health board (variants quarantined after repeated
+    /// failures or latency blowups stop receiving traffic).
+    pub quarantine: Arc<QuarantineBoard>,
+    /// Deadline stamped on every submitted request.
+    deadline: Option<Duration>,
     shards: usize,
 }
 
@@ -123,17 +157,35 @@ impl Coordinator {
             (have_manifest && matches!(config.executor, ExecutorSpec::Pjrt))
                 .then(|| config.artifacts_dir.join("tune.txt"))
         });
+        // The quarantine board lives alongside the tune cache so restarts
+        // remember which variants were bad; same persistence policy.
+        let quarantine_path = config
+            .quarantine_path
+            .clone()
+            .or_else(|| tune_path.as_ref().map(|p| p.with_extension("quarantine.txt")));
+        let quarantine = Arc::new(match &quarantine_path {
+            Some(p) => QuarantineBoard::load(p),
+            None => QuarantineBoard::new(),
+        });
         let kv_pool = Arc::new(PagedKvPool::new(config.kv_budget_bytes));
-        let pool = ExecutorPool::start(
+        let opts = PoolOptions {
             shards,
-            config.executor.clone(),
-            config.artifacts_dir.clone(),
+            spec: config.executor.clone(),
+            artifacts_dir: config.artifacts_dir.clone(),
+            window: config.batch_window,
+            tune_path,
+            retry: config.retry.clone(),
+            supervisor: config.supervisor.clone(),
+            fault_plan: config.fault_plan.clone(),
+            quarantine_path,
+        };
+        let pool = ExecutorPool::start(
+            opts,
             topology,
-            config.batch_window,
             metrics.clone(),
             tune,
-            tune_path,
             kv_pool.clone(),
+            quarantine.clone(),
         )?;
         Ok(Coordinator {
             pool: Some(pool),
@@ -142,6 +194,8 @@ impl Coordinator {
             families,
             tuned_selections,
             kv_pool,
+            quarantine,
+            deadline: config.deadline,
             shards,
         })
     }
@@ -156,7 +210,8 @@ impl Coordinator {
         self.pool.as_ref().map(|p| p.tune_snapshot())
     }
 
-    /// Submit one request; returns the reply channel.
+    /// Submit one request under the configured default deadline; returns
+    /// the reply channel (exactly one terminal [`AttnResponse`] arrives).
     pub fn submit(
         &self,
         family: FamilyKey,
@@ -164,19 +219,45 @@ impl Coordinator {
         k: Vec<f32>,
         v: Vec<f32>,
     ) -> mpsc::Receiver<AttnResponse> {
-        let (reply, rx) = mpsc::channel();
+        self.submit_with_deadline(family, q, k, v, self.deadline)
+    }
+
+    /// Submit one request with an explicit deadline (overriding the
+    /// configured default; `None` waits forever).
+    pub fn submit_with_deadline(
+        &self,
+        family: FamilyKey,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<AttnResponse> {
+        let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let req = AttnRequest { id, family, q, k, v, enqueued: Instant::now(), reply };
-        // Routing failure means a shard died; the reply channel simply
-        // disconnects, which callers observe as RecvError.
+        let now = Instant::now();
+        let req = AttnRequest {
+            id,
+            family,
+            q,
+            k,
+            v,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            attempts: 0,
+            not_before: None,
+            reply: Arc::new(ReplySlot::new(tx)),
+        };
+        // A pool that is already shut down answers with a terminal
+        // `Failed` (submit never silently drops a request).
         if let Some(pool) = &self.pool {
             pool.submit(req);
         }
         rx
     }
 
-    /// Drain and stop every shard, persisting measured latencies.
+    /// Drain and stop every shard, persisting measured latencies and the
+    /// quarantine board.
     pub fn shutdown(mut self) {
         if let Some(pool) = self.pool.take() {
             pool.shutdown();

@@ -99,6 +99,12 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve|profile> [flag
                writes a Chrome trace (Perfetto / chrome://tracing);
                [--stats-every N] prints a metrics summary (and refreshes
                --metrics-out) every N executed batches
+               [--deadline-ms N] sheds requests whose deadline passes
+               (Timeout outcome); [--max-attempts N] bounds retries of
+               failed executions; [--fault-plan \"error-rate=0.1,...\"]
+               injects deterministic seeded faults (keys: seed,
+               error-rate, panic-rate, spike-rate, spike-ms,
+               kv-exhaust-rate) for chaos/recovery testing
   profile      [operator flags] [--requests N] [--artifacts DIR]
                [--trace-out trace.json] [--metrics-out FILE]
                traces one pipeline run, profiles the compiled engine per

@@ -244,6 +244,61 @@ pub fn request_stream_mixed(
     out
 }
 
+/// Bursty stream for the fault-injection harness: arrivals alternate
+/// between calm stretches at `rate_hz` and bursts at `burst_factor ×`
+/// that rate (geometric phase lengths), so deadline shedding and retry
+/// backoff are exercised under realistic load spikes instead of a
+/// smooth Poisson process. Deterministic per seed; same family mix as
+/// [`request_stream_mixed`].
+pub fn fault_stream(
+    families: &[FamilyKey],
+    n: usize,
+    rate_hz: f64,
+    burst_factor: f64,
+    decode_frac: f64,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    assert!(!families.is_empty(), "no servable families");
+    assert!(burst_factor >= 1.0, "burst_factor must be >= 1");
+    let decode: Vec<&FamilyKey> =
+        families.iter().filter(|f| LaneKey::of(f) == LaneKey::Decode).collect();
+    let prefill: Vec<&FamilyKey> =
+        families.iter().filter(|f| LaneKey::of(f) == LaneKey::Prefill).collect();
+    let mut rng = Rng::new(seed ^ 0xFA17);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    let mut bursting = false;
+    let mut phase_left = 0usize;
+    for i in 0..n {
+        if phase_left == 0 {
+            // Geometric phase lengths: bursts are short (mean 8
+            // requests), calm stretches longer (mean 24).
+            bursting = !bursting;
+            let mean = if bursting { 8.0 } else { 24.0 };
+            phase_left = 1 + (-(rng.f64().max(1e-12)).ln() * mean) as usize;
+        }
+        phase_left -= 1;
+        let rate = if bursting { rate_hz * burst_factor } else { rate_hz };
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / rate;
+        let lane_pool: &[&FamilyKey] = if !decode.is_empty()
+            && (prefill.is_empty() || rng.f64() < decode_frac)
+        {
+            &decode
+        } else {
+            &prefill
+        };
+        let idx = ((rng.f64().powi(2)) * lane_pool.len() as f64) as usize;
+        let family = lane_pool[idx.min(lane_pool.len() - 1)].clone();
+        out.push(SyntheticRequest {
+            family,
+            seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            arrival: std::time::Duration::from_secs_f64(t),
+        });
+    }
+    out
+}
+
 /// Decode-only stream over the Appendix-C / Table-8 production configs:
 /// each model contributes decode families (one query row over a KV cache
 /// drawn from the paper's sweep, clamped to `max_kv` so host payloads
@@ -406,6 +461,32 @@ mod tests {
                 (r.family.q_heads, r.family.kv_heads)
             );
         }
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic_and_bursty() {
+        let fams = reference_serving_families();
+        let a = fault_stream(&fams, 300, 200.0, 8.0, 0.5, 13);
+        let b = fault_stream(&fams, 300, 200.0, 8.0, 0.5, 13);
+        assert_eq!(a.len(), 300);
+        assert_eq!(
+            a.iter().map(|r| (r.family.clone(), r.arrival)).collect::<Vec<_>>(),
+            b.iter().map(|r| (r.family.clone(), r.arrival)).collect::<Vec<_>>(),
+            "same seed, same stream"
+        );
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals sorted");
+        }
+        // Bursty: the inter-arrival spread is far wider than a smooth
+        // Poisson process at the same mean rate — the shortest gaps
+        // (inside bursts) are much tighter than the longest (calm).
+        let gaps: Vec<f64> = a
+            .windows(2)
+            .map(|w| (w[1].arrival - w[0].arrival).as_secs_f64())
+            .collect();
+        let min = gaps.iter().cloned().fold(f64::MAX, f64::min);
+        let max = gaps.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 8.0 * min.max(1e-9), "burst/calm gap spread: {min} .. {max}");
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Chaos tests over the fault-tolerant serving core: seeded fault plans
+//! (injected executor errors, shard panics, KV exhaustion) against the
+//! production supervision/retry/quarantine machinery, asserting the two
+//! properties the design hinges on:
+//!
+//! 1. **Exactly one terminal response per request** — no silent drops,
+//!    no duplicates, under any injected fault mix.
+//! 2. **Served outputs stay bit-identical to the reference oracle** —
+//!    retries, shard restarts, and the degraded lane never corrupt a
+//!    successful reply.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use qimeng::autotune::cache::TuneCache;
+use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
+use qimeng::coordinator::{
+    Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome, RetryPolicy, ServeConfig,
+    SupervisorConfig,
+};
+use qimeng::util::prng::Rng;
+use qimeng::workload::SyntheticRequest;
+
+/// Oracle run: one request through a fresh solo reference executor
+/// (capacity 1, no batching, no pool) — the bit-exact ground truth.
+fn oracle(fam: &qimeng::coordinator::FamilyKey, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+    let info =
+        ArtifactInfo { id: "oracle".to_string(), cand: None, obs_key: String::new() };
+    ReferenceExecutor::default()
+        .execute_batch(fam, &info, 1, q, k, v)
+        .expect("oracle execution")
+}
+
+/// Supervisor tuned for tests: fast sweeps, generous restart budget.
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        heartbeat_timeout: Duration::from_millis(500),
+        check_every: Duration::from_millis(1),
+        max_restarts: 64,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ChaosCase {
+    seed: u64,
+    shards: usize,
+    requests: usize,
+    error_rate: f64,
+    panic_rate: f64,
+    kv_exhaust_rate: f64,
+    deadline_ms: Option<u64>,
+}
+
+fn run_chaos_case(case: &ChaosCase) -> Result<(), String> {
+    let config = ServeConfig {
+        artifacts_dir: "definitely-not-compiled-artifacts".into(),
+        batch_window: Duration::from_millis(1),
+        shards: case.shards,
+        executor: ExecutorSpec::Reference,
+        retry: RetryPolicy { max_attempts: 3, backoff: Duration::from_micros(200) },
+        supervisor: fast_supervisor(),
+        fault_plan: Some(FaultPlan {
+            seed: case.seed,
+            error_rate: case.error_rate,
+            panic_rate: case.panic_rate,
+            kv_exhaust_rate: case.kv_exhaust_rate,
+            ..FaultPlan::default()
+        }),
+        deadline: case.deadline_ms.map(Duration::from_millis),
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(config).map_err(|e| format!("start: {e:#}"))?;
+    let fams = coordinator.families.clone();
+    let mut submitted = Vec::with_capacity(case.requests);
+    for i in 0..case.requests {
+        let req = SyntheticRequest {
+            family: fams[i % fams.len()].clone(),
+            seed: case.seed.wrapping_mul(1000).wrapping_add(i as u64),
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let rx = coordinator.submit(req.family.clone(), q.clone(), k.clone(), v.clone());
+        submitted.push((req.family.clone(), q, k, v, rx));
+    }
+    // Drain everything (flushes queues, joins shards, detaches hung ones).
+    coordinator.shutdown();
+    for (i, (fam, q, k, v, rx)) in submitted.into_iter().enumerate() {
+        // Property 1: exactly one terminal response. After shutdown the
+        // reply (or a disconnect — a drop, which must not happen) is
+        // already in the channel.
+        let resp = rx
+            .recv()
+            .map_err(|_| format!("request {i} dropped without a terminal response"))?;
+        if rx.try_recv().is_ok() {
+            return Err(format!("request {i} answered twice"));
+        }
+        // Property 2: successful outputs are bit-identical to the oracle
+        // (reference executor both lanes, so equality is exact).
+        if let RequestOutcome::Ok(out) = &resp.outcome {
+            let want = oracle(&fam, &q, &k, &v);
+            if out != &want {
+                return Err(format!(
+                    "request {i} (degraded={}) output diverged from the oracle",
+                    resp.degraded
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_request_gets_exactly_one_bit_exact_terminal_response_under_chaos() {
+    // Each case stands up a real pool (threads, supervisor, injected
+    // panics), so the case count is modest; rates span quiet to hostile.
+    qimeng::util::proptest::check_no_shrink(
+        8,
+        |rng: &mut Rng| ChaosCase {
+            seed: rng.below(1 << 30),
+            shards: 1 + rng.below(3) as usize,
+            requests: 16 + rng.below(17) as usize,
+            error_rate: 0.3 * rng.f64(),
+            panic_rate: 0.08 * rng.f64(),
+            kv_exhaust_rate: 0.3 * rng.f64(),
+            deadline_ms: if rng.f64() < 0.3 { Some(30 + rng.below(80)) } else { None },
+        },
+        run_chaos_case,
+    );
+}
+
+#[test]
+fn hostile_plan_still_answers_every_request() {
+    // A deliberately nasty fixed case: high error rate + panics on every
+    // shard; exercises restart + retry + terminal-failure paths together.
+    run_chaos_case(&ChaosCase {
+        seed: 7,
+        shards: 2,
+        requests: 40,
+        error_rate: 0.5,
+        panic_rate: 0.15,
+        kv_exhaust_rate: 0.2,
+        deadline_ms: Some(200),
+    })
+    .unwrap();
+}
+
+/// Executor that fails every batch routed to the `splitk` variant and
+/// logs which variant each execution used — the probe for "quarantined
+/// variants stop being selected".
+struct SplitkFailingExecutor {
+    log: Arc<Mutex<Vec<String>>>,
+    inner: ReferenceExecutor,
+}
+
+impl Executor for SplitkFailingExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &qimeng::coordinator::FamilyKey,
+        info: &ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        self.log.lock().unwrap().push(info.id.clone());
+        if info.id == "splitk" {
+            return Err("splitk variant is broken on this host".to_string());
+        }
+        self.inner.execute_batch(family, info, capacity, q, k, v)
+    }
+
+    fn kind(&self) -> &'static str {
+        "splitk-failing"
+    }
+}
+
+fn two_variant_topology() -> ServeTopology {
+    // Two compiled variants for one decode slot, differing only in
+    // split_k; the tune-cache ranking makes `splitk` the primary.
+    let manifest = "artifact plain file=a.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=1\n\
+         artifact splitk file=b.hlo.txt kind=attention variant=mha causal=0 \
+         batch=1 q_heads=2 kv_heads=2 seq=1 kv=128 qk=64 vd=64 bm=64 bn=64 split_k=8\n";
+    let metas = qimeng::runtime::registry::parse_manifest(manifest).unwrap();
+    ServeTopology::from_manifest(&metas, &TuneCache::new(), usize::MAX).unwrap()
+}
+
+#[test]
+fn quarantined_variant_stops_being_selected_and_siblings_take_over() {
+    let log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let factory_log = log.clone();
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 1,
+        executor: ExecutorSpec::Custom(Arc::new(move |_shard| {
+            Ok(Box::new(SplitkFailingExecutor {
+                log: factory_log.clone(),
+                inner: ReferenceExecutor::default(),
+            }) as Box<dyn Executor>)
+        })),
+        retry: RetryPolicy { max_attempts: 4, backoff: Duration::from_micros(100) },
+        supervisor: fast_supervisor(),
+        ..ServeConfig::default()
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, two_variant_topology(), TuneCache::new(), false)
+            .expect("start");
+    let fam = coordinator.families[0].clone();
+
+    // Sequential submit→recv: one batch per request, deterministic slot
+    // sequence. The primary (`splitk`) fails; after QUARANTINE_AFTER
+    // consecutive failures it is quarantined and `plain` takes over.
+    let n = 32;
+    let mut outcomes = Vec::new();
+    for i in 0..n {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed: 9000 + i as u64,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let resp = coordinator.submit(fam.clone(), q, k, v).recv().expect("reply");
+        outcomes.push(resp.outcome);
+    }
+    // The quarantine board learned the split-K variant is bad...
+    let quarantined = coordinator.quarantine.quarantined();
+    assert!(
+        quarantined.iter().any(|k| k.contains("sk8")),
+        "split-K variant not quarantined: {quarantined:?}"
+    );
+    assert!(
+        !quarantined.iter().any(|k| k.contains("sk1")),
+        "healthy sibling wrongly quarantined: {quarantined:?}"
+    );
+    // ...the tail of the stream is served successfully by the sibling...
+    for (i, o) in outcomes.iter().enumerate().skip(n - 10) {
+        assert!(o.is_ok(), "request {i} after quarantine failed: {o:?}");
+    }
+    // ...and `splitk` stops being executed entirely once quarantined.
+    let ids = log.lock().unwrap().clone();
+    let last_bad = ids.iter().rposition(|id| id == "splitk").unwrap();
+    let plain_after = ids[last_bad..].iter().filter(|id| *id == "plain").count();
+    assert!(
+        plain_after >= 10,
+        "sibling did not take over after quarantine: {ids:?}"
+    );
+    coordinator.shutdown();
+}
+
+/// Executor that fails every batch — drives *all* compiled variants into
+/// quarantine so the pool must degrade to the reference lane.
+struct AlwaysFailingExecutor;
+
+impl Executor for AlwaysFailingExecutor {
+    fn execute_batch(
+        &mut self,
+        _family: &qimeng::coordinator::FamilyKey,
+        info: &ArtifactInfo,
+        _capacity: usize,
+        _q: &[f32],
+        _k: &[f32],
+        _v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        Err(format!("variant {} is broken", info.id))
+    }
+
+    fn kind(&self) -> &'static str {
+        "always-failing"
+    }
+}
+
+#[test]
+fn degraded_lane_serves_bit_exact_when_every_variant_is_quarantined() {
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 1,
+        executor: ExecutorSpec::Custom(Arc::new(|_shard| {
+            Ok(Box::new(AlwaysFailingExecutor) as Box<dyn Executor>)
+        })),
+        retry: RetryPolicy { max_attempts: 2, backoff: Duration::from_micros(100) },
+        supervisor: fast_supervisor(),
+        ..ServeConfig::default()
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, two_variant_topology(), TuneCache::new(), false)
+            .expect("start");
+    let fam = coordinator.families[0].clone();
+
+    // Keep submitting until the pool degrades (both variants need
+    // QUARANTINE_AFTER consecutive failures each; retries accelerate it).
+    let mut degraded_outputs = Vec::new();
+    for i in 0..48 {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed: 31000 + i as u64,
+            arrival: Duration::ZERO,
+        };
+        let (q, k, v) = req.payload();
+        let resp = coordinator
+            .submit(fam.clone(), q.clone(), k.clone(), v.clone())
+            .recv()
+            .expect("reply");
+        if resp.degraded {
+            let out = match resp.outcome {
+                RequestOutcome::Ok(out) => out,
+                other => panic!("degraded reply {i} not ok: {other:?}"),
+            };
+            degraded_outputs.push((q, k, v, out));
+            if degraded_outputs.len() >= 8 {
+                break;
+            }
+        }
+    }
+    assert!(
+        !degraded_outputs.is_empty(),
+        "pool never degraded to the reference lane: {}",
+        coordinator.metrics.summary()
+    );
+    assert_eq!(coordinator.quarantine.quarantined_count(), 2, "both variants quarantined");
+    // Degraded replies are bit-identical to the reference oracle.
+    for (q, k, v, out) in &degraded_outputs {
+        assert_eq!(out, &oracle(&fam, q, k, v), "degraded lane diverged from the oracle");
+    }
+    let degraded =
+        coordinator.metrics.degraded.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(degraded as usize >= degraded_outputs.len());
+    coordinator.shutdown();
+}

@@ -43,7 +43,7 @@ fn served_outputs_match_reference_for_every_family() {
         let (q, k, v) = req.payload();
         let rx = coordinator.submit(fam.clone(), q.clone(), k.clone(), v.clone());
         let resp = rx.recv().expect("response");
-        let out = resp.result.expect("serve error");
+        let out = resp.outcome.into_result().expect("serve error");
         assert_eq!(out.len(), fam.out_len());
 
         // Verify the *last* q-head (exercises the GQA/MQA head mapping:
@@ -91,15 +91,18 @@ fn batched_and_unbatched_paths_agree() {
             coordinator.submit(fam.clone(), q, k, v)
         })
         .collect();
-    let batched: Vec<Vec<f32>> =
-        rxs.into_iter().map(|rx| rx.recv().unwrap().result.unwrap()).collect();
+    let batched: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().outcome.into_result().unwrap())
+        .collect();
 
     let (q, k, v) = reqs[2].payload();
     let solo = coordinator
         .submit(fam.clone(), q, k, v)
         .recv()
         .unwrap()
-        .result
+        .outcome
+        .into_result()
         .unwrap();
     let max_diff = batched[2]
         .iter()
