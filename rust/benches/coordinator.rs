@@ -15,15 +15,19 @@
 //! artifacts` — including CI).
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
+use qimeng::autotune::cache::TuneCache;
 use qimeng::coordinator::batcher::plan_batches;
+use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
 use qimeng::coordinator::{
-    run_stream, Coordinator, ExecutorSpec, FamilyKey, ServeConfig, ServeReport,
+    run_stream, BatchKv, Coordinator, Executor, ExecutorSpec, FamilyKey, ServeConfig,
+    ServeReport,
 };
 use qimeng::sketch::spec::{AttnVariant, KvLayout};
 use qimeng::util::bench::Bench;
-use qimeng::workload::request_stream_mixed;
+use qimeng::workload::{request_stream_mixed, shared_prefix_stream};
 
 fn start(shards: usize, window_ms: u64, executor: ExecutorSpec) -> Coordinator {
     Coordinator::start(ServeConfig {
@@ -46,6 +50,50 @@ fn serve(shards: usize, window_ms: u64, executor: ExecutorSpec, n: usize) -> Ser
     let report = run_stream(&coordinator, &stream, 1e9);
     coordinator.shutdown();
     report
+}
+
+/// Shared-prefix serving: one pass over a fanout-heavy decode stream
+/// with pregenerated payloads, either over COW-shared prefix pages or
+/// private per-request KV copies. Returns (admitted QPS, KV bytes
+/// charged per request, outputs in submission order).
+fn serve_shared_prefix(
+    payloads: &[(FamilyKey, Vec<f32>, Vec<f32>, Vec<f32>)],
+    prefix_cache: bool,
+    kv_budget_bytes: usize,
+) -> (f64, f64, Vec<Vec<f32>>) {
+    let mut fams: Vec<FamilyKey> = Vec::new();
+    for (fam, ..) in payloads {
+        if !fams.contains(fam) {
+            fams.push(fam.clone());
+        }
+    }
+    let topo = ServeTopology::synthetic(&fams, &[1, 2, 4, 8]);
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(2),
+        shards: 4,
+        executor: ExecutorSpec::Reference,
+        kv_budget_bytes,
+        prefix_cache,
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start_with_topology(config, topo, TuneCache::new(), false)
+        .expect("coordinator start");
+    let owned: Vec<_> = payloads.to_vec();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = owned
+        .into_iter()
+        .map(|(fam, q, k, v)| coordinator.submit(fam, q, k, v))
+        .collect();
+    let outs: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply").outcome.into_result().expect("serve error"))
+        .collect();
+    let wall = t0.elapsed();
+    let charged = coordinator.metrics.kv_charged_bytes.load(Ordering::Relaxed);
+    coordinator.shutdown();
+    let n = payloads.len() as f64;
+    (n / wall.as_secs_f64(), charged as f64 / n, outs)
 }
 
 fn main() {
@@ -125,11 +173,82 @@ fn main() {
         }
     }
 
+    // -- continuous batching + COW shared-prefix KV caching --
+    // A fanout-heavy decode stream (many requests per shared prefix)
+    // under a KV budget sized so the *shared* resident set (one page run
+    // per prefix) fits with headroom, while private per-request copies
+    // must cycle through the pool — the regime prefix caching targets.
+    let (n_prefixes, fanout) = (6usize, 8usize);
+    let stream = shared_prefix_stream(n_prefixes, fanout, 23);
+    let payloads: Vec<(FamilyKey, Vec<f32>, Vec<f32>, Vec<f32>)> = stream
+        .iter()
+        .map(|r| {
+            let (q, k, v) = r.payload();
+            (r.family.clone(), q, k, v)
+        })
+        .collect();
+    let group_bytes: usize = {
+        let mut seen: Vec<&FamilyKey> = Vec::new();
+        let mut total = 0usize;
+        for (fam, ..) in &payloads {
+            if !seen.contains(&fam) {
+                seen.push(fam);
+                total += fam.kv_bytes();
+            }
+        }
+        total
+    };
+    let budget = group_bytes + group_bytes / 8;
+    let (qps_shared, bpr_shared, out_shared) = serve_shared_prefix(&payloads, true, budget);
+    let (qps_private, bpr_private, out_private) =
+        serve_shared_prefix(&payloads, false, budget);
+    println!(
+        "shared_prefix fanout{fanout}: {qps_shared:.0} req/s @ {:.0} KiB/req (COW) vs \
+         {qps_private:.0} req/s @ {:.0} KiB/req (private)",
+        bpr_shared / 1024.0,
+        bpr_private / 1024.0
+    );
+    let qps_ratio = if qps_private > 0.0 { qps_shared / qps_private } else { 0.0 };
+    let bytes_ratio = if bpr_private > 0.0 { bpr_shared / bpr_private } else { 1.0 };
+    println!(
+        "shared_prefix: {qps_ratio:.2}x admitted QPS, {bytes_ratio:.3}x KV bytes/request"
+    );
+    if qps_ratio < 1.5 {
+        failures.push(format!(
+            "shared-prefix QPS {qps_ratio:.2}x < 1.5x private baseline at fanout {fanout}"
+        ));
+    }
+    if bytes_ratio > 0.5 {
+        failures.push(format!(
+            "shared-prefix KV bytes {bytes_ratio:.3}x > 0.5x private baseline"
+        ));
+    }
+    // Bit-exactness: COW-shared, private-copy, and a solo dense oracle
+    // must all agree exactly — sharing pages is a residency optimization,
+    // never a numerics change.
+    let info = ArtifactInfo { id: "oracle".to_string(), cand: None, obs_key: String::new() };
+    for (i, (fam, q, k, v)) in payloads.iter().enumerate() {
+        let want = ReferenceExecutor::default()
+            .execute_batch(fam, &info, 1, q, BatchKv::Dense { k, v })
+            .expect("oracle");
+        if out_shared[i] != want || out_private[i] != want {
+            failures
+                .push(format!("shared-prefix request {i} diverged from the dense oracle"));
+            break;
+        }
+    }
+
     // Record results where CI can diff them.
     let json = format!(
         "{{\n  \"mode\": \"{}\",\n  \"executor\": \"{}\",\n  \"requests\": {n},\n  \
          \"planning_us_256_pending\": {planning_us:.1},\n  \
-         \"shards1_rps\": {:.2},\n  \"shards4_rps\": {:.2},\n  \"speedup\": {speedup:.3}\n}}\n",
+         \"shards1_rps\": {:.2},\n  \"shards4_rps\": {:.2},\n  \"speedup\": {speedup:.3},\n  \
+         \"shared_prefix_n_prefixes\": {n_prefixes},\n  \
+         \"shared_prefix_fanout\": {fanout},\n  \
+         \"shared_prefix_qps\": {qps_shared:.1},\n  \
+         \"shared_prefix_kv_bytes_per_request\": {bpr_shared:.0},\n  \
+         \"shared_prefix_qps_ratio\": {qps_ratio:.3},\n  \
+         \"shared_prefix_kv_bytes_ratio\": {bytes_ratio:.3}\n}}\n",
         if smoke { "smoke" } else { "full" },
         match executor {
             ExecutorSpec::Pjrt => "pjrt",

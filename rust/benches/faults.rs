@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 use qimeng::autotune::cache::TuneCache;
 use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
 use qimeng::coordinator::{
-    run_stream, Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome, RetryPolicy,
-    ServeConfig, SupervisorConfig,
+    run_stream, BatchKv, Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome,
+    RetryPolicy, ServeConfig, SupervisorConfig,
 };
 use qimeng::workload::{fault_stream, SyntheticRequest};
 
@@ -81,13 +81,12 @@ impl Executor for PanicOnceExecutor {
         info: &ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         if self.shard == 0 && !self.fired.swap(true, Ordering::AcqRel) {
             panic!("bench: injected one-shot shard kill");
         }
-        self.inner.execute_batch(family, info, capacity, q, k, v)
+        self.inner.execute_batch(family, info, capacity, q, kv)
     }
 
     fn kind(&self) -> &'static str {
@@ -120,6 +119,7 @@ fn shard_kill_recovery(n: usize) -> (Duration, usize, u64) {
                 family: fams[i % fams.len()].clone(),
                 seed: 4000 + i as u64,
                 arrival: Duration::ZERO,
+                prefix: None,
             };
             let (q, k, v) = req.payload();
             coordinator.submit(req.family.clone(), q, k, v)
@@ -149,8 +149,7 @@ impl Executor for AlwaysFailingExecutor {
         info: &ArtifactInfo,
         _capacity: usize,
         _q: &[f32],
-        _k: &[f32],
-        _v: &[f32],
+        _kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         Err(format!("bench: variant {} broken", info.id))
     }
@@ -188,6 +187,7 @@ fn degraded_share(n: usize) -> (f64, bool) {
             family: fam.clone(),
             seed: 8000 + i as u64,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let resp = coordinator
@@ -203,7 +203,7 @@ fn degraded_share(n: usize) -> (f64, bool) {
                     obs_key: String::new(),
                 };
                 let want = ReferenceExecutor::default()
-                    .execute_batch(&fam, &info, 1, &q, &k, &v)
+                    .execute_batch(&fam, &info, 1, &q, BatchKv::Dense { k: &k, v: &v })
                     .expect("oracle");
                 bit_exact &= out == &want;
             } else {

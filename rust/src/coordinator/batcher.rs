@@ -54,6 +54,11 @@ pub struct AdmitPolicy {
     pub draining: bool,
     /// Total execution attempts a request may consume.
     pub max_attempts: u32,
+    /// Continuous-batching ingress: every plannable request counts as
+    /// expired immediately, so it joins the very next step instead of
+    /// aging toward the lane-window flush deadline (shards pass this for
+    /// the decode lane when continuous batching is on).
+    pub continuous: bool,
 }
 
 /// Queue-relevant state of one request (a projection of
@@ -95,6 +100,7 @@ pub fn classify(now: Instant, r: &RequestState, p: &AdmitPolicy) -> Disposition 
     let near_deadline =
         r.deadline.is_some_and(|d| now + p.lane_window / 4 >= d);
     let expired = p.draining
+        || p.continuous
         || near_deadline
         || now.duration_since(r.enqueued) >= p.lane_window;
     Disposition::Plan { expired }
@@ -390,6 +396,7 @@ mod tests {
             lane_window: Duration::from_millis(8),
             draining: false,
             max_attempts: 3,
+            continuous: false,
         };
         let fresh = RequestState {
             enqueued: now,
@@ -439,6 +446,34 @@ mod tests {
             classify(now, &ghost, &policy),
             Disposition::Shed(ShedReason::AlreadyReplied)
         );
+    }
+
+    #[test]
+    fn continuous_ingress_flushes_fresh_requests() {
+        let now = Instant::now();
+        let policy = AdmitPolicy {
+            lane_window: Duration::from_millis(8),
+            draining: false,
+            max_attempts: 3,
+            continuous: true,
+        };
+        let fresh = RequestState {
+            enqueued: now,
+            deadline: None,
+            not_before: None,
+            attempts: 0,
+            servable: true,
+            replied: false,
+        };
+        // A just-arrived request joins the next step immediately.
+        assert_eq!(classify(now, &fresh, &policy), Disposition::Plan { expired: true });
+        // Continuous mode never overrides terminal dispositions...
+        let dead = RequestState { deadline: Some(now - Duration::from_millis(1)), ..fresh };
+        assert_eq!(classify(now, &dead, &policy), Disposition::Shed(ShedReason::Timeout));
+        // ...or retry backoff (a failed request still waits out its delay).
+        let backoff =
+            RequestState { not_before: Some(now + Duration::from_millis(2)), ..fresh };
+        assert_eq!(classify(now, &backoff, &policy), Disposition::Defer);
     }
 
     #[test]

@@ -206,8 +206,7 @@ impl super::scheduler::Executor for FaultyExecutor {
         info: &super::scheduler::ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: super::scheduler::BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         match self.injector.next_execute() {
             ExecuteFault::Panic => {
@@ -224,7 +223,7 @@ impl super::scheduler::Executor for FaultyExecutor {
             }
             ExecuteFault::None => {}
         }
-        self.inner.execute_batch(family, info, capacity, q, k, v)
+        self.inner.execute_batch(family, info, capacity, q, kv)
     }
 
     fn kind(&self) -> &'static str {

@@ -114,6 +114,17 @@ pub struct Metrics {
     pub quarantined: AtomicU64,
     /// Router reassignments of a family to a different shard.
     pub rebalances: AtomicU64,
+    /// KV-residency bytes actually charged at decode admission. Under
+    /// the prefix cache only newly-interned pages count, so
+    /// `kv_charged_bytes / responses` is the KV-bytes-per-request the
+    /// serve bench gates on.
+    pub kv_charged_bytes: AtomicU64,
+    /// Decode batch members whose intern shared at least one page.
+    pub prefix_hits: AtomicU64,
+    /// Bytes served from already-resident shared prefix pages.
+    pub prefix_shared_bytes: AtomicU64,
+    /// Queued requests pulled to an idle shard by cold-family stealing.
+    pub work_steals: AtomicU64,
     /// Latencies recorded per-variant into the tune cache as well.
     latencies: LatencyHistogram,
     /// Batches executed per shard (sized by [`Metrics::with_shards`]).
@@ -171,7 +182,8 @@ impl Metrics {
         format!(
             "requests={} responses={} batches={} occupancy={:.2} padded={} errors={} \
              timeouts={} retries={} degraded={} restarts={} quarantined={} \
-             rebalances={} shard_batches={:?} latency mean={:?} p50={:?} p95={:?} p99={:?}",
+             rebalances={} kv_charged={} prefix_hits={} prefix_shared={} work_steals={} \
+             shard_batches={:?} latency mean={:?} p50={:?} p95={:?} p99={:?}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -184,6 +196,10 @@ impl Metrics {
             self.shard_restarts.load(Ordering::Relaxed),
             self.quarantined.load(Ordering::Relaxed),
             self.rebalances.load(Ordering::Relaxed),
+            self.kv_charged_bytes.load(Ordering::Relaxed),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_shared_bytes.load(Ordering::Relaxed),
+            self.work_steals.load(Ordering::Relaxed),
             shards,
             self.mean_latency().unwrap_or_default(),
             self.latency_percentile(0.5).unwrap_or_default(),
@@ -223,6 +239,16 @@ impl Metrics {
             ),
             counter("qimeng_quarantined_total", self.quarantined.load(Ordering::Relaxed)),
             counter("qimeng_rebalances_total", self.rebalances.load(Ordering::Relaxed)),
+            counter(
+                "qimeng_kv_charged_bytes_total",
+                self.kv_charged_bytes.load(Ordering::Relaxed),
+            ),
+            counter("qimeng_prefix_hits_total", self.prefix_hits.load(Ordering::Relaxed)),
+            counter(
+                "qimeng_prefix_shared_bytes_total",
+                self.prefix_shared_bytes.load(Ordering::Relaxed),
+            ),
+            counter("qimeng_work_steals_total", self.work_steals.load(Ordering::Relaxed)),
             gauge("qimeng_batch_occupancy", self.mean_occupancy()),
             gauge("qimeng_latency_mean_us", us(self.mean_latency())),
             gauge("qimeng_latency_p50_us", us(self.latency_percentile(0.5))),
@@ -356,6 +382,10 @@ mod tests {
         assert_eq!(find("qimeng_retries_total").kind, SampleKind::Counter);
         assert_eq!(find("qimeng_degraded_total").kind, SampleKind::Counter);
         assert_eq!(find("qimeng_quarantined_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_kv_charged_bytes_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_prefix_hits_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_prefix_shared_bytes_total").kind, SampleKind::Counter);
+        assert_eq!(find("qimeng_work_steals_total").kind, SampleKind::Counter);
         assert!(find("qimeng_latency_p99_us").value >= 50.0);
         assert_eq!(find("qimeng_errors_total").kind, SampleKind::Counter);
         assert_eq!(find("qimeng_latency_p50_us").kind, SampleKind::Gauge);

@@ -28,16 +28,19 @@
 pub mod batcher;
 pub mod faults;
 pub mod metrics;
+pub mod prefix;
 pub mod quarantine;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
 pub use faults::{FaultPlan, FaultyExecutor};
+pub use prefix::{PrefixCache, PrefixClaim};
 pub use quarantine::QuarantineBoard;
 pub use request::{AttnRequest, AttnResponse, FamilyKey, LaneKey, ReplySlot, RequestOutcome};
 pub use scheduler::{
-    Executor, ExecutorSpec, PoolOptions, RetryPolicy, Router, ServeTopology, SupervisorConfig,
+    BatchKv, Executor, ExecutorSpec, PoolOptions, RetryPolicy, Router, ServeTopology,
+    SupervisorConfig,
 };
 pub use service::{Coordinator, ServeConfig};
 
@@ -216,6 +219,8 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
     let deadline_ms = args.get_usize("deadline-ms", 0)?;
     let max_attempts = args.get_usize("max-attempts", 0)?;
     let fault_plan = args.get("fault-plan").map(faults::FaultPlan::parse).transpose()?;
+    let prefix_cache = args.get_bool("prefix-cache");
+    let max_inflight = args.get_usize("max-inflight", 0)?;
     args.finish()?;
 
     if trace_out.is_some() {
@@ -239,6 +244,8 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
         retry,
         fault_plan,
+        prefix_cache,
+        max_inflight,
         ..ServeConfig::default()
     })
     .map_err(|e| format!("{e:#}"))?;
@@ -293,6 +300,18 @@ pub fn cli_serve(args: &Args) -> Result<(), String> {
         report.mean_occupancy
     );
     println!("{}", report.metrics_summary);
+    if let Some(cache) = &coordinator.prefix {
+        println!(
+            "prefix cache: {} hit(s) / {} miss(es), {:.2} MiB shared, \
+             {:.2} MiB materialized, {} eviction(s), peak {:.2} MiB resident",
+            cache.hits(),
+            cache.misses(),
+            cache.shared_bytes_total() as f64 / (1 << 20) as f64,
+            cache.new_bytes_total() as f64 / (1 << 20) as f64,
+            cache.evictions(),
+            cache.peak_bytes() as f64 / (1 << 20) as f64,
+        );
+    }
     if coordinator.kv_pool.peak_bytes() > 0 {
         println!(
             "kv pool ({}): peak {:.2} MiB resident, {} deferred batch(es)",

@@ -1,0 +1,746 @@
+//! Copy-on-write shared-prefix KV cache for the decode lane.
+//!
+//! Requests in a serving fleet overwhelmingly share K/V prefixes — the
+//! system prompt, a RAG context, or parallel samples from one decoding
+//! session. The serving payload carries dense per-request K/V (there are
+//! no token IDs at this layer), so prefixes are recognized *by content*:
+//! the cache splits each request's K/V into page-granular runs, hashes
+//! every page, and interns the pages into a radix tree whose edges are
+//! page contents (hash-indexed, bitwise-verified — a hash collision can
+//! never alias two different pages). Two requests with an identical
+//! prefix walk the same path from the family root and map their block
+//! tables onto the same physical pages.
+//!
+//! Accounting and lifecycle:
+//!
+//! * A shared page is charged against the byte budget **once**, no
+//!   matter how many in-flight claims reference it.
+//! * Every claim pins its chain (per-node refcounts), so a page can
+//!   never be evicted or mutated while a batch reads it. Shared pages
+//!   are read-only for their whole pinned lifetime — mutation goes
+//!   through [`PrefixCache::cow_extend`], which copies a shared tail
+//!   page before writing (copy-on-write).
+//! * Releasing a claim unpins its chain but keeps the pages resident;
+//!   eviction is LRU over refcount-0 childless runs, so a hot prefix
+//!   interior is kept alive by its cached descendants.
+//! * When the budget is exhausted and nothing is evictable, an intern
+//!   whose pins are the only pins in the cache is admitted anyway —
+//!   the same idle-admit progress guarantee as `PagedKvPool`, so one
+//!   oversized sequence cannot deadlock the decode lane.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::request::FamilyKey;
+use super::scheduler::lock;
+
+/// Block-table entry for a padded (absent) slot.
+pub const NO_PAGE: i64 = -1;
+
+/// One interned page run: `rows` K/V rows stored head-major
+/// (`[kv_heads][rows][dim]`), chained to the preceding page of its
+/// sequence. Only full pages have children; a partial tail page is
+/// always a leaf.
+struct PageNode {
+    family: FamilyKey,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    /// In-flight claims holding this page (pinned while > 0).
+    refcount: u32,
+    /// Logical clock at the last unpin — the LRU eviction key.
+    last_release: u64,
+    rows: usize,
+    hash: u64,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bytes: usize,
+}
+
+struct Inner {
+    nodes: Vec<Option<PageNode>>,
+    free: Vec<usize>,
+    /// Per-family first-page children (the radix roots).
+    roots: BTreeMap<FamilyKey, Vec<usize>>,
+    /// Bytes of every resident page (pinned + cached).
+    resident_bytes: usize,
+    /// Bytes of pages with refcount > 0 (charged, unevictable).
+    pinned_bytes: usize,
+    clock: u64,
+}
+
+/// A pinned page chain for one request. Holders must call
+/// [`PrefixCache::release`] exactly once when the batch retires.
+#[derive(Debug, Clone)]
+pub struct PrefixClaim {
+    pub family: FamilyKey,
+    /// Node ids, first page → last.
+    pub chain: Vec<usize>,
+    /// Total K/V rows covered by the chain.
+    pub rows: usize,
+    pub page_rows: usize,
+    /// Bytes newly charged by this intern (pages nobody else had).
+    pub new_bytes: usize,
+    /// Bytes served from already-resident shared pages.
+    pub shared_bytes: usize,
+}
+
+pub struct PrefixCache {
+    capacity_bytes: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    new_bytes_total: AtomicU64,
+    shared_bytes_total: AtomicU64,
+    evictions: AtomicU64,
+    waits: AtomicU64,
+    peak_bytes: AtomicU64,
+}
+
+/// Head-major row-range gather: rows `r0 .. r0+rows` of a
+/// `[heads][total_rows][dim]` tensor, preserving head order.
+fn gather_rows(
+    src: &[f32],
+    heads: usize,
+    total_rows: usize,
+    dim: usize,
+    r0: usize,
+    rows: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(heads * rows * dim);
+    for h in 0..heads {
+        let base = h * total_rows * dim + r0 * dim;
+        out.extend_from_slice(&src[base..base + rows * dim]);
+    }
+    out
+}
+
+/// FNV-1a over the exact bit patterns (so +0.0 and -0.0 hash apart and
+/// bitwise-equal pages always collide into the same bucket).
+fn page_hash(k: &[f32], v: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in k.iter().chain(v.iter()) {
+        h = (h ^ u64::from(x.to_bits())).wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+impl PrefixCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        PrefixCache {
+            capacity_bytes,
+            inner: Mutex::new(Inner {
+                nodes: Vec::new(),
+                free: Vec::new(),
+                roots: BTreeMap::new(),
+                resident_bytes: 0,
+                pinned_bytes: 0,
+                clock: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            new_bytes_total: AtomicU64::new(0),
+            shared_bytes_total: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            waits: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows per page for a family: the paged layout's page size, or the
+    /// whole cache as one run for dense layouts (degenerate but still
+    /// shareable between identical caches).
+    pub fn page_rows(fam: &FamilyKey) -> usize {
+        match fam.kv_layout {
+            crate::sketch::spec::KvLayout::Paged { page_size } => page_size.max(1),
+            _ => fam.kv.max(1),
+        }
+    }
+
+    /// Evict the least-recently-released unpinned leaf. Returns false
+    /// when nothing is evictable (everything pinned or an interior of a
+    /// cached chain).
+    fn evict_one(g: &mut Inner) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for (id, slot) in g.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.refcount == 0
+                    && n.children.is_empty()
+                    && best.map_or(true, |(_, t)| n.last_release < t)
+                {
+                    best = Some((id, n.last_release));
+                }
+            }
+        }
+        let Some((id, _)) = best else { return false };
+        let node = g.nodes[id].take().expect("evict target alive");
+        g.resident_bytes -= node.bytes;
+        match node.parent {
+            Some(p) => {
+                if let Some(pn) = g.nodes[p].as_mut() {
+                    pn.children.retain(|&c| c != id);
+                }
+            }
+            None => {
+                if let Some(kids) = g.roots.get_mut(&node.family) {
+                    kids.retain(|&c| c != id);
+                }
+            }
+        }
+        g.free.push(id);
+        true
+    }
+
+    /// Make room for `bytes` more resident bytes, evicting LRU runs.
+    /// When nothing is evictable, admits only if every pinned byte
+    /// belongs to the caller's own in-progress claim (`own_pinned`) —
+    /// the idle-admit progress guarantee.
+    fn make_room(&self, g: &mut Inner, bytes: usize, own_pinned: usize) -> bool {
+        loop {
+            if g.resident_bytes.saturating_add(bytes) <= self.capacity_bytes {
+                return true;
+            }
+            if Self::evict_one(g) {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            return g.pinned_bytes <= own_pinned;
+        }
+    }
+
+    fn unpin(g: &mut Inner, chain: &[usize]) {
+        g.clock += 1;
+        let stamp = g.clock;
+        for &id in chain {
+            if let Some(n) = g.nodes[id].as_mut() {
+                n.refcount = n.refcount.saturating_sub(1);
+                if n.refcount == 0 {
+                    g.pinned_bytes = g.pinned_bytes.saturating_sub(n.bytes);
+                    n.last_release = stamp;
+                }
+            }
+        }
+    }
+
+    fn alloc_node(g: &mut Inner, node: PageNode) -> usize {
+        match g.free.pop() {
+            Some(id) => {
+                g.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                g.nodes.push(Some(node));
+                g.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Intern one request's K/V (`[kv_heads][kv][dim]` head-major, the
+    /// serving payload layout) into the radix tree, pinning the chain.
+    /// Returns `None` when the byte budget defers admission — the
+    /// caller leaves the request queued and retries next tick.
+    pub fn intern(&self, fam: &FamilyKey, k: &[f32], v: &[f32]) -> Option<PrefixClaim> {
+        let pr = Self::page_rows(fam);
+        let (kh, d, vd, kvl) = (fam.kv_heads, fam.qk_dim, fam.v_dim, fam.kv);
+        debug_assert_eq!(k.len(), fam.k_len(), "intern K payload size");
+        debug_assert_eq!(v.len(), fam.v_len(), "intern V payload size");
+        let n_pages = kvl.div_ceil(pr).max(1);
+        let mut g = lock(&self.inner);
+        g.clock += 1;
+        let mut chain: Vec<usize> = Vec::with_capacity(n_pages);
+        let mut new_bytes = 0usize;
+        let mut shared_bytes = 0usize;
+        let mut parent: Option<usize> = None;
+        for p in 0..n_pages {
+            let r0 = p * pr;
+            let rows = ((p + 1) * pr).min(kvl) - r0;
+            let kp = gather_rows(k, kh, kvl, d, r0, rows);
+            let vp = gather_rows(v, kh, kvl, vd, r0, rows);
+            let h = page_hash(&kp, &vp);
+            let kids: Vec<usize> = match parent {
+                None => g.roots.get(fam).cloned().unwrap_or_default(),
+                Some(c) => {
+                    g.nodes[c].as_ref().map(|n| n.children.clone()).unwrap_or_default()
+                }
+            };
+            // Hash narrows the candidates; bitwise equality decides.
+            let hit = kids.iter().copied().find(|&id| {
+                g.nodes[id]
+                    .as_ref()
+                    .is_some_and(|n| n.rows == rows && n.hash == h && n.k == kp && n.v == vp)
+            });
+            match hit {
+                Some(id) => {
+                    let n = g.nodes[id].as_mut().expect("hit node alive");
+                    if n.refcount == 0 {
+                        g.pinned_bytes += n.bytes;
+                    }
+                    n.refcount += 1;
+                    shared_bytes += n.bytes;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    chain.push(id);
+                    parent = Some(id);
+                }
+                None => {
+                    let bytes = (kp.len() + vp.len()) * std::mem::size_of::<f32>();
+                    if !self.make_room(&mut g, bytes, shared_bytes + new_bytes) {
+                        Self::unpin(&mut g, &chain);
+                        self.waits.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                    let id = Self::alloc_node(
+                        &mut g,
+                        PageNode {
+                            family: fam.clone(),
+                            parent,
+                            children: Vec::new(),
+                            refcount: 1,
+                            last_release: 0,
+                            rows,
+                            hash: h,
+                            k: kp,
+                            v: vp,
+                            bytes,
+                        },
+                    );
+                    match parent {
+                        Some(c) => g.nodes[c].as_mut().expect("parent alive").children.push(id),
+                        None => g.roots.entry(fam.clone()).or_default().push(id),
+                    }
+                    g.resident_bytes += bytes;
+                    g.pinned_bytes += bytes;
+                    new_bytes += bytes;
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    chain.push(id);
+                    parent = Some(id);
+                }
+            }
+        }
+        self.peak_bytes.fetch_max(g.resident_bytes as u64, Ordering::Relaxed);
+        self.new_bytes_total.fetch_add(new_bytes as u64, Ordering::Relaxed);
+        self.shared_bytes_total.fetch_add(shared_bytes as u64, Ordering::Relaxed);
+        Some(PrefixClaim {
+            family: fam.clone(),
+            chain,
+            rows: kvl,
+            page_rows: pr,
+            new_bytes,
+            shared_bytes,
+        })
+    }
+
+    /// Unpin a claim's chain. The pages stay resident (LRU-evictable
+    /// once refcount-0) so the next request with the same prefix hits.
+    pub fn release(&self, claim: &PrefixClaim) {
+        let mut g = lock(&self.inner);
+        Self::unpin(&mut g, &claim.chain);
+    }
+
+    /// Append `rows` K/V rows (`[kv_heads][rows][dim]` head-major) to a
+    /// claimed sequence — the multi-step-decode growth path. A tail
+    /// page shared with other claims or cached descendants is first
+    /// copied into a private page (**copy-on-write**), so every other
+    /// holder of the old chain keeps reading the original bytes.
+    /// Returns `None` when the byte budget defers the extension.
+    pub fn cow_extend(
+        &self,
+        claim: &mut PrefixClaim,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        rows: usize,
+    ) -> Option<()> {
+        let f = claim.family.clone();
+        let (kh, d, vd, pr) = (f.kv_heads, f.qk_dim, f.v_dim, claim.page_rows);
+        debug_assert_eq!(k_rows.len(), kh * rows * d);
+        debug_assert_eq!(v_rows.len(), kh * rows * vd);
+        let mut g = lock(&self.inner);
+        g.clock += 1;
+
+        // Budget upfront: worst case is one COW copy of the tail plus
+        // all the appended rows.
+        let row_bytes = (d + vd) * kh * std::mem::size_of::<f32>();
+        let tail_copy_bytes = claim
+            .chain
+            .last()
+            .and_then(|&id| g.nodes[id].as_ref())
+            .map_or(0, |n| n.bytes);
+        let own_pinned = claim.shared_bytes + claim.new_bytes;
+        if !self.make_room(&mut g, tail_copy_bytes + rows * row_bytes, own_pinned) {
+            self.waits.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+
+        let mut appended = 0usize;
+        while appended < rows {
+            let tail = claim.chain.last().copied();
+            let (tail_rows, tail_shared) = match tail.and_then(|id| g.nodes[id].as_ref()) {
+                Some(n) => (n.rows, n.refcount > 1 || !n.children.is_empty()),
+                None => (pr, false), // no tail: open a fresh page below
+            };
+            if tail_rows < pr {
+                let id = tail.expect("partial tail exists");
+                let take = (pr - tail_rows).min(rows - appended);
+                if tail_shared {
+                    // COW: private copy of the tail, siblinged next to
+                    // the shared original, which loses this claim's pin.
+                    let (pk, pv, pb, prows, pparent) = {
+                        let n = g.nodes[id].as_ref().expect("tail alive");
+                        (n.k.clone(), n.v.clone(), n.bytes, n.rows, n.parent)
+                    };
+                    let copy = Self::alloc_node(
+                        &mut g,
+                        PageNode {
+                            family: f.clone(),
+                            parent: pparent,
+                            children: Vec::new(),
+                            refcount: 1,
+                            last_release: 0,
+                            rows: prows,
+                            hash: 0, // recomputed after the append below
+                            k: pk,
+                            v: pv,
+                            bytes: pb,
+                        },
+                    );
+                    match pparent {
+                        Some(c) => {
+                            g.nodes[c].as_mut().expect("parent alive").children.push(copy)
+                        }
+                        None => g.roots.entry(f.clone()).or_default().push(copy),
+                    }
+                    g.resident_bytes += pb;
+                    g.pinned_bytes += pb;
+                    claim.new_bytes += pb;
+                    self.peak_bytes.fetch_max(g.resident_bytes as u64, Ordering::Relaxed);
+                    Self::unpin(&mut g, &[id]);
+                    claim.shared_bytes = claim.shared_bytes.saturating_sub(pb);
+                    *claim.chain.last_mut().expect("chain tail") = copy;
+                    continue; // retry the append against the private copy
+                }
+                // Private partial tail: append in place, head-major.
+                let n = g.nodes[id].as_mut().expect("tail alive");
+                let (old, new) = (n.rows, n.rows + take);
+                let mut k2 = Vec::with_capacity(kh * new * d);
+                let mut v2 = Vec::with_capacity(kh * new * vd);
+                for h in 0..kh {
+                    k2.extend_from_slice(&n.k[h * old * d..(h + 1) * old * d]);
+                    k2.extend_from_slice(
+                        &k_rows[h * rows * d + appended * d..h * rows * d + (appended + take) * d],
+                    );
+                    v2.extend_from_slice(&n.v[h * old * vd..(h + 1) * old * vd]);
+                    v2.extend_from_slice(
+                        &v_rows
+                            [h * rows * vd + appended * vd..h * rows * vd + (appended + take) * vd],
+                    );
+                }
+                let added = take * row_bytes;
+                n.rows = new;
+                n.hash = page_hash(&k2, &v2);
+                n.k = k2;
+                n.v = v2;
+                n.bytes += added;
+                g.resident_bytes += added;
+                g.pinned_bytes += added;
+                claim.new_bytes += added;
+                claim.rows += take;
+                appended += take;
+            } else {
+                // Tail full: open a new private child page.
+                let take = pr.min(rows - appended);
+                let kp = gather_rows(k_rows, kh, rows, d, appended, take);
+                let vp = gather_rows(v_rows, kh, rows, vd, appended, take);
+                let bytes = (kp.len() + vp.len()) * std::mem::size_of::<f32>();
+                let h = page_hash(&kp, &vp);
+                let id = Self::alloc_node(
+                    &mut g,
+                    PageNode {
+                        family: f.clone(),
+                        parent: tail,
+                        children: Vec::new(),
+                        refcount: 1,
+                        last_release: 0,
+                        rows: take,
+                        hash: h,
+                        k: kp,
+                        v: vp,
+                        bytes,
+                    },
+                );
+                match tail {
+                    Some(c) => g.nodes[c].as_mut().expect("tail alive").children.push(id),
+                    None => g.roots.entry(f.clone()).or_default().push(id),
+                }
+                g.resident_bytes += bytes;
+                g.pinned_bytes += bytes;
+                claim.new_bytes += bytes;
+                claim.chain.push(id);
+                claim.rows += take;
+                appended += take;
+            }
+        }
+        self.peak_bytes.fetch_max(g.resident_bytes as u64, Ordering::Relaxed);
+        Some(())
+    }
+
+    /// Copy the pages `ids` into batch-local pools (head-major
+    /// `[kv_heads][page_rows][dim]` per page, partial tails zero-padded
+    /// to the full page height). The batch packer renumbers block
+    /// tables against this pool so executors never see cache node ids.
+    pub fn export_pages(&self, fam: &FamilyKey, ids: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let pr = Self::page_rows(fam);
+        let (kh, d, vd) = (fam.kv_heads, fam.qk_dim, fam.v_dim);
+        let kp_len = kh * pr * d;
+        let vp_len = kh * pr * vd;
+        let mut kps = vec![0.0f32; ids.len() * kp_len];
+        let mut vps = vec![0.0f32; ids.len() * vp_len];
+        let g = lock(&self.inner);
+        for (i, &id) in ids.iter().enumerate() {
+            let Some(n) = g.nodes.get(id).and_then(|s| s.as_ref()) else { continue };
+            for h in 0..kh {
+                kps[i * kp_len + h * pr * d..][..n.rows * d]
+                    .copy_from_slice(&n.k[h * n.rows * d..(h + 1) * n.rows * d]);
+                vps[i * vp_len + h * pr * vd..][..n.rows * vd]
+                    .copy_from_slice(&n.v[h * n.rows * vd..(h + 1) * n.rows * vd]);
+            }
+        }
+        (kps, vps)
+    }
+
+    /// Reassemble a claim's dense head-major K/V (test oracle for the
+    /// COW bit-identity guarantee).
+    pub fn gather(&self, claim: &PrefixClaim) -> (Vec<f32>, Vec<f32>) {
+        let f = &claim.family;
+        let (kh, d, vd) = (f.kv_heads, f.qk_dim, f.v_dim);
+        let rows = claim.rows;
+        let mut k = vec![0.0f32; kh * rows * d];
+        let mut v = vec![0.0f32; kh * rows * vd];
+        let g = lock(&self.inner);
+        let mut r0 = 0usize;
+        for &id in &claim.chain {
+            let n = g.nodes[id].as_ref().expect("claim node alive");
+            for h in 0..kh {
+                k[h * rows * d + r0 * d..][..n.rows * d]
+                    .copy_from_slice(&n.k[h * n.rows * d..(h + 1) * n.rows * d]);
+                v[h * rows * vd + r0 * vd..][..n.rows * vd]
+                    .copy_from_slice(&n.v[h * n.rows * vd..(h + 1) * n.rows * vd]);
+            }
+            r0 += n.rows;
+        }
+        (k, v)
+    }
+
+    pub fn pinned_bytes(&self) -> usize {
+        lock(&self.inner).pinned_bytes
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        lock(&self.inner).resident_bytes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn new_bytes_total(&self) -> u64 {
+        self.new_bytes_total.load(Ordering::Relaxed)
+    }
+
+    pub fn shared_bytes_total(&self) -> u64 {
+        self.shared_bytes_total.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
+
+    fn fam(kv: usize, page: usize) -> FamilyKey {
+        FamilyKey {
+            variant: AttnVariant::Gqa,
+            causal: false,
+            qk_dim: 8,
+            v_dim: 8,
+            q_heads: 4,
+            kv_heads: 2,
+            seq: 1,
+            kv,
+            kv_layout: KvLayout::Paged { page_size: page },
+            direction: Direction::Forward,
+        }
+    }
+
+    fn payload(f: &FamilyKey, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let gen = |n: usize, salt: u64| -> Vec<f32> {
+            (0..n)
+                .map(|i| {
+                    let x = (i as u64).wrapping_add(seed.wrapping_mul(31).wrapping_add(salt));
+                    (x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40) as f32 / 1e4
+                })
+                .collect()
+        };
+        (gen(f.k_len(), 1), gen(f.v_len(), 2))
+    }
+
+    #[test]
+    fn identical_chains_share_every_page() {
+        let f = fam(32, 8);
+        let cache = PrefixCache::new(usize::MAX);
+        let (k, v) = payload(&f, 7);
+        let a = cache.intern(&f, &k, &v).unwrap();
+        assert_eq!(a.shared_bytes, 0);
+        assert!(a.new_bytes > 0);
+        let b = cache.intern(&f, &k, &v).unwrap();
+        assert_eq!(b.new_bytes, 0, "fanout twin charges nothing");
+        assert_eq!(b.shared_bytes, a.new_bytes);
+        assert_eq!(b.chain, a.chain, "same physical pages");
+        assert_eq!(cache.resident_bytes(), a.new_bytes, "shared pages charged once");
+        cache.release(&a);
+        cache.release(&b);
+        assert_eq!(cache.pinned_bytes(), 0, "drain unpins everything");
+        assert_eq!(cache.resident_bytes(), a.new_bytes, "pages stay cached");
+    }
+
+    #[test]
+    fn divergent_suffix_shares_only_the_prefix() {
+        let f = fam(32, 8); // 4 pages
+        let cache = PrefixCache::new(usize::MAX);
+        let (k, v) = payload(&f, 7);
+        let (mut k2, v2) = (k.clone(), v.clone());
+        // Flip one element in the last page's rows of head 0.
+        k2[31 * f.qk_dim] += 1.0;
+        let a = cache.intern(&f, &k, &v).unwrap();
+        let b = cache.intern(&f, &k2, &v2).unwrap();
+        assert_eq!(b.chain[..3], a.chain[..3], "first three pages shared");
+        assert_ne!(b.chain[3], a.chain[3], "diverged tail gets its own page");
+        assert!(b.shared_bytes > 0 && b.new_bytes > 0);
+        cache.release(&a);
+        cache.release(&b);
+        assert_eq!(cache.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_defers_then_admits_and_evicts_lru() {
+        let f = fam(16, 16); // one page per chain
+        let (ka, va) = payload(&f, 1);
+        let (kb, vb) = payload(&f, 2);
+        let (kc, vc) = payload(&f, 3);
+        let chain_bytes = (f.k_len() + f.v_len()) * 4;
+        let cache = PrefixCache::new(2 * chain_bytes);
+        let a = cache.intern(&f, &ka, &va).unwrap();
+        let b = cache.intern(&f, &kb, &vb).unwrap();
+        // Both pinned, budget full: a third distinct chain defers.
+        assert!(cache.intern(&f, &kc, &vc).is_none());
+        assert!(cache.waits() > 0);
+        cache.release(&a);
+        // A is now LRU refcount-0: C evicts it and admits.
+        let c = cache.intern(&f, &kc, &vc).unwrap();
+        assert!(cache.evictions() > 0);
+        assert!(cache.resident_bytes() <= 2 * chain_bytes);
+        cache.release(&b);
+        cache.release(&c);
+        assert_eq!(cache.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_sequence_admitted_when_idle() {
+        let f = fam(64, 16);
+        let cache = PrefixCache::new(8); // comically small budget
+        let (k, v) = payload(&f, 9);
+        // Idle-admit progress guarantee: the only claimant always gets in.
+        let a = cache.intern(&f, &k, &v).expect("idle cache admits oversized chain");
+        // A second concurrent distinct chain must defer.
+        let (k2, v2) = payload(&f, 10);
+        assert!(cache.intern(&f, &k2, &v2).is_none());
+        cache.release(&a);
+        assert_eq!(cache.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn gather_roundtrips_and_export_pads_partial_pages() {
+        let f = fam(24, 16); // pages of 16 + partial 8
+        let cache = PrefixCache::new(usize::MAX);
+        let (k, v) = payload(&f, 4);
+        let a = cache.intern(&f, &k, &v).unwrap();
+        let (gk, gv) = cache.gather(&a);
+        assert_eq!(gk, k, "gather is bitwise");
+        assert_eq!(gv, v);
+        let (kp, vp) = cache.export_pages(&f, &a.chain);
+        let pr = PrefixCache::page_rows(&f);
+        assert_eq!(kp.len(), a.chain.len() * f.kv_heads * pr * f.qk_dim);
+        // Padding rows of the partial tail are zero.
+        let tail = &kp[(a.chain.len() - 1) * f.kv_heads * pr * f.qk_dim..];
+        let pad = &tail[8 * f.qk_dim..pr * f.qk_dim]; // head 0 rows 8..16
+        assert!(pad.iter().all(|x| *x == 0.0));
+        assert_eq!(vp.len(), a.chain.len() * f.kv_heads * pr * f.v_dim);
+        cache.release(&a);
+    }
+
+    #[test]
+    fn cow_extend_copies_shared_tail_before_writing() {
+        let f = fam(24, 16); // partial tail page of 8 rows
+        let cache = PrefixCache::new(usize::MAX);
+        let (k, v) = payload(&f, 4);
+        let a = cache.intern(&f, &k, &v).unwrap();
+        let mut b = cache.intern(&f, &k, &v).unwrap();
+        assert_eq!(b.chain, a.chain);
+        let (ak0, av0) = cache.gather(&a);
+        // Extend B by 4 rows: the shared partial tail must be COW-copied.
+        let (kh, d, vd) = (f.kv_heads, f.qk_dim, f.v_dim);
+        let krows: Vec<f32> = (0..kh * 4 * d).map(|i| 100.0 + i as f32).collect();
+        let vrows: Vec<f32> = (0..kh * 4 * vd).map(|i| 200.0 + i as f32).collect();
+        cache.cow_extend(&mut b, &krows, &vrows, 4).unwrap();
+        assert_eq!(b.rows, 28);
+        assert_ne!(b.chain.last(), a.chain.last(), "tail privatized");
+        // A's view is bit-identical to before the write.
+        let (ak1, av1) = cache.gather(&a);
+        assert_eq!(ak1, ak0, "COW: shared readers never observe the mutation");
+        assert_eq!(av1, av0);
+        // B's view is the original plus the appended rows, head-major.
+        let (bk, _bv) = cache.gather(&b);
+        for h in 0..kh {
+            assert_eq!(&bk[h * 28 * d..h * 28 * d + 24 * d], &k[h * 24 * d..(h + 1) * 24 * d]);
+            assert_eq!(&bk[h * 28 * d + 24 * d..(h + 1) * 28 * d], &krows[h * 4 * d..(h + 1) * 4 * d]);
+        }
+        cache.release(&a);
+        cache.release(&b);
+        assert_eq!(cache.pinned_bytes(), 0, "refcounts balance after COW");
+    }
+
+    #[test]
+    fn cow_extend_past_page_boundary_opens_children() {
+        let f = fam(16, 16); // full single page
+        let cache = PrefixCache::new(usize::MAX);
+        let (k, v) = payload(&f, 4);
+        let mut a = cache.intern(&f, &k, &v).unwrap();
+        let (kh, d, vd) = (f.kv_heads, f.qk_dim, f.v_dim);
+        let krows: Vec<f32> = (0..kh * 20 * d).map(|i| i as f32).collect();
+        let vrows: Vec<f32> = (0..kh * 20 * vd).map(|i| -(i as f32)).collect();
+        cache.cow_extend(&mut a, &krows, &vrows, 20).unwrap();
+        assert_eq!(a.rows, 36);
+        assert_eq!(a.chain.len(), 3, "16 + 16 + partial 4");
+        let (gk, _) = cache.gather(&a);
+        for h in 0..kh {
+            assert_eq!(&gk[h * 36 * d..h * 36 * d + 16 * d], &k[h * 16 * d..(h + 1) * 16 * d]);
+            assert_eq!(&gk[h * 36 * d + 16 * d..(h + 1) * 36 * d], &krows[h * 20 * d..(h + 1) * 20 * d]);
+        }
+        cache.release(&a);
+        assert_eq!(cache.pinned_bytes(), 0);
+    }
+}

@@ -425,13 +425,101 @@ impl ServeTopology {
     }
 }
 
+/// The K/V operands of one packed batch: either dense per-slot copies
+/// (the pre-prefix-cache serving path) or shared prefix-cache pages plus
+/// per-slot block tables — the form in which block tables travel
+/// end-to-end through the serving payload.
+#[derive(Debug, Clone, Copy)]
+pub enum BatchKv<'a> {
+    /// Private copies: zero-padded host buffers of `capacity` slots in
+    /// the family's head-major `[kv_heads][kv][dim]` layout.
+    Dense { k: &'a [f32], v: &'a [f32] },
+    /// Shared pages: `k_pages`/`v_pages` are batch-local page pools
+    /// (each page `[kv_heads][page_rows][dim]`, partial tails
+    /// zero-padded), `tables` is a row-major `capacity * pages_per_slot`
+    /// block table whose entries index the pools
+    /// ([`super::prefix::NO_PAGE`] marks a padded slot's hole). Two
+    /// slots sharing a prefix carry the same physical page indices.
+    Paged {
+        k_pages: &'a [f32],
+        v_pages: &'a [f32],
+        page_rows: usize,
+        pages_per_slot: usize,
+        tables: &'a [i64],
+    },
+}
+
+impl<'a> BatchKv<'a> {
+    /// Materialize dense per-slot K/V. The dense case borrows; the paged
+    /// case gathers each slot's pages back into the family's head-major
+    /// layout — a bitwise copy of the rows the pages were interned from,
+    /// so an executor consuming the gathered view is bit-identical to
+    /// private-copy serving. (The PJRT runtime ABI takes dense f32
+    /// operands, so even compiled executors gather host-side today;
+    /// device-side table indirection for the generated paged kernels is
+    /// the remaining step and changes nothing about this accounting.)
+    pub fn gather_dense(
+        &self,
+        fam: &FamilyKey,
+        capacity: usize,
+    ) -> Result<(std::borrow::Cow<'a, [f32]>, std::borrow::Cow<'a, [f32]>), String> {
+        use std::borrow::Cow;
+        match *self {
+            BatchKv::Dense { k, v } => {
+                if k.len() != capacity * fam.k_len() || v.len() != capacity * fam.v_len() {
+                    return Err("packed buffer size mismatch".to_string());
+                }
+                Ok((Cow::Borrowed(k), Cow::Borrowed(v)))
+            }
+            BatchKv::Paged { k_pages, v_pages, page_rows, pages_per_slot, tables } => {
+                let (kh, d, vd, kvl) = (fam.kv_heads, fam.qk_dim, fam.v_dim, fam.kv);
+                let (kn, vn) = (fam.k_len(), fam.v_len());
+                if tables.len() != capacity * pages_per_slot || page_rows == 0 {
+                    return Err("block table size mismatch".to_string());
+                }
+                let kp_len = kh * page_rows * d;
+                let vp_len = kh * page_rows * vd;
+                let mut k = vec![0.0f32; capacity * kn];
+                let mut v = vec![0.0f32; capacity * vn];
+                for slot in 0..capacity {
+                    for pi in 0..pages_per_slot {
+                        let entry = tables[slot * pages_per_slot + pi];
+                        if entry == super::prefix::NO_PAGE {
+                            continue; // padded slot: rows stay zero
+                        }
+                        let page = usize::try_from(entry)
+                            .map_err(|_| format!("negative block-table entry {entry}"))?;
+                        if (page + 1) * kp_len > k_pages.len()
+                            || (page + 1) * vp_len > v_pages.len()
+                        {
+                            return Err(format!("block-table entry {page} out of range"));
+                        }
+                        let r0 = pi * page_rows;
+                        let rows = page_rows.min(kvl.saturating_sub(r0));
+                        for h in 0..kh {
+                            k[slot * kn + h * kvl * d + r0 * d..][..rows * d].copy_from_slice(
+                                &k_pages[page * kp_len + h * page_rows * d..][..rows * d],
+                            );
+                            v[slot * vn + h * kvl * vd + r0 * vd..][..rows * vd].copy_from_slice(
+                                &v_pages[page * vp_len + h * page_rows * vd..][..rows * vd],
+                            );
+                        }
+                    }
+                }
+                Ok((Cow::Owned(k), Cow::Owned(v)))
+            }
+        }
+    }
+}
+
 /// One shard's execution backend. Implementations own whatever runtime
 /// state they need (the PJRT executor owns a full `Registry`); a box is
 /// constructed *inside* its shard thread, so implementations need not be
 /// `Send` (the PJRT wrapper types are not).
 pub trait Executor {
-    /// Execute one packed batch: `q`/`k`/`v` are zero-padded host
-    /// buffers of `capacity` slots; returns the flattened outputs
+    /// Execute one packed batch: `q` is a zero-padded host buffer of
+    /// `capacity` slots, `kv` carries the K/V operands (dense copies or
+    /// shared pages + block tables); returns the flattened outputs
     /// (`capacity * family.out_len()` elements).
     fn execute_batch(
         &mut self,
@@ -439,8 +527,7 @@ pub trait Executor {
         info: &ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String>;
 
     fn kind(&self) -> &'static str;
@@ -503,9 +590,9 @@ impl Executor for PjrtExecutor {
         info: &ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: BatchKv<'_>,
     ) -> std::result::Result<Vec<f32>, String> {
+        let (k, v) = kv.gather_dense(fam, capacity)?;
         let cap = capacity as i64;
         let qshape = [cap, fam.q_heads as i64, fam.seq as i64, fam.qk_dim as i64];
         let kshape = [cap, fam.kv_heads as i64, fam.kv as i64, fam.qk_dim as i64];
@@ -513,9 +600,10 @@ impl Executor for PjrtExecutor {
         self.registry
             .executable(&info.id)
             .and_then(|exe| {
-                self.registry
-                    .runtime
-                    .execute_f32(&exe, &[(q, &qshape), (k, &kshape), (v, &vshape)])
+                self.registry.runtime.execute_f32(
+                    &exe,
+                    &[(q, &qshape), (k.as_ref(), &kshape), (v.as_ref(), &vshape)],
+                )
             })
             .map_err(|e| format!("{e:#}"))
     }
@@ -606,8 +694,7 @@ impl Executor for ReferenceExecutor {
         _info: &ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: BatchKv<'_>,
     ) -> std::result::Result<Vec<f32>, String> {
         use crate::verify::tensor::{reference_attention, Tensor2};
         let (s, kvl, d, vd) = (fam.seq, fam.kv, fam.qk_dim, fam.v_dim);
@@ -620,8 +707,9 @@ impl Executor for ReferenceExecutor {
         let group = fam.q_heads / fam.kv_heads;
         let scale = 1.0 / (d as f32).sqrt();
         let (qn, kn, vn, on) = (fam.q_len(), fam.k_len(), fam.v_len(), fam.out_len());
-        if q.len() != capacity * qn || k.len() != capacity * kn || v.len() != capacity * vn
-        {
+        let (k, v) = kv.gather_dense(fam, capacity)?;
+        let (k, v) = (k.as_ref(), v.as_ref());
+        if q.len() != capacity * qn {
             return Err("packed buffer size mismatch".to_string());
         }
         debug_assert_eq!(on, fam.q_heads * s * vd, "out_len is (q_heads, seq, vd)");
@@ -785,6 +873,24 @@ impl Router {
             *d = d.saturating_sub(1);
         }
     }
+
+    /// Pin `fam`'s affinity to `shard` without routing a request — work
+    /// stealing moves a family's queued backlog between shards outside
+    /// of `route`, and follow-up traffic must land where the work went.
+    pub fn assign(&mut self, fam: &FamilyKey, shard: usize) {
+        if shard < self.depth.len() {
+            self.assignment.insert(fam.clone(), shard);
+        }
+    }
+
+    /// Count one already-routed request against `shard` (the stealing
+    /// side of a queue move: `complete(donor)` + `charge(thief)` keeps
+    /// the depth ledger consistent with where requests actually sit).
+    pub fn charge(&mut self, shard: usize) {
+        if let Some(d) = self.depth.get_mut(shard) {
+            *d += 1;
+        }
+    }
 }
 
 /// Bounded-retry policy for failed executions: a request whose batch
@@ -850,6 +956,15 @@ pub struct PoolOptions {
     pub fault_plan: Option<FaultPlan>,
     /// Where the quarantine board persists at shutdown.
     pub quarantine_path: Option<PathBuf>,
+    /// Continuous-batching ingress: decode requests flush into a batch
+    /// on the tick they arrive (joining between steps) instead of
+    /// waiting out the quarter-window flush deadline.
+    pub continuous: bool,
+    /// Cap on decode requests claimed in flight per shard at once
+    /// (0 = unlimited). Bounds per-step latency under continuous
+    /// ingress: a step never grows past the cap, late arrivals join the
+    /// next step.
+    pub max_inflight: usize,
 }
 
 /// One shard's shared mailbox. The supervisor owns dispatch *into* the
@@ -916,6 +1031,11 @@ struct ShardCtx {
     retry: RetryPolicy,
     epoch: Instant,
     ref_threads: usize,
+    continuous: bool,
+    max_inflight: usize,
+    /// Shared-prefix KV cache (decode lane, paged families). `None`
+    /// keeps the private-copy serving path.
+    prefix: Option<Arc<super::prefix::PrefixCache>>,
 }
 
 /// Builds shard threads — at startup and again on every restart.
@@ -999,6 +1119,8 @@ pub struct ExecutorPool {
     pub kv_pool: Arc<PagedKvPool>,
     pub quarantine: Arc<QuarantineBoard>,
     quarantine_path: Option<PathBuf>,
+    /// Shared-prefix KV cache, when `--prefix-cache` enabled it.
+    pub prefix: Option<Arc<super::prefix::PrefixCache>>,
 }
 
 impl ExecutorPool {
@@ -1009,6 +1131,7 @@ impl ExecutorPool {
         tune: TuneCache,
         kv_pool: Arc<PagedKvPool>,
         quarantine: Arc<QuarantineBoard>,
+        prefix: Option<Arc<super::prefix::PrefixCache>>,
     ) -> Result<Self> {
         let shards = opts.shards.max(1);
         // Reference shards split the machine's compute-thread budget so
@@ -1031,6 +1154,9 @@ impl ExecutorPool {
             retry: opts.retry.clone(),
             epoch,
             ref_threads,
+            continuous: opts.continuous,
+            max_inflight: opts.max_inflight,
+            prefix: prefix.clone(),
         };
         let spawner = ShardSpawner {
             spec: opts.spec.clone(),
@@ -1088,6 +1214,7 @@ impl ExecutorPool {
             kv_pool,
             quarantine,
             quarantine_path: opts.quarantine_path,
+            prefix,
         })
     }
 
@@ -1303,6 +1430,86 @@ fn health_sweep(sup: &mut SupervisorState) {
             sup.shards[shard].health_gauge.set(1);
         }
     }
+    steal_cold_families(sup);
+}
+
+/// Cross-shard work stealing for cold families: a fully idle shard
+/// pulls another shard's queued requests for a family with no in-flight
+/// traffic on that shard. Hot families stay put — moving one would only
+/// cold-start a second executor cache — but a family queued behind
+/// someone else's long-running batch has no warmth to lose, so the idle
+/// shard takes its whole backlog and the router re-pins affinity there.
+fn steal_cold_families(sup: &mut SupervisorState) {
+    let n = sup.shards.len();
+    let now = Instant::now();
+    // Only steal work that has already waited a couple of sweep periods:
+    // fresh arrivals are about to be claimed by their own shard anyway.
+    let wait_floor = sup.cfg.check_every * 2;
+    for thief in 0..n {
+        if sup.shards[thief].dead || !sup.shards[thief].healthy {
+            continue;
+        }
+        {
+            let mb = &sup.shards[thief].mailbox;
+            // Lock order queue → in_flight, matching the shard loop.
+            let q = lock(&mb.queue);
+            let f = lock(&mb.in_flight);
+            if !q.is_empty() || !f.is_empty() {
+                continue; // only a fully idle shard steals
+            }
+        }
+        let mut moved: Vec<AttnRequest> = Vec::new();
+        let mut donor_shard = None;
+        for donor in 0..n {
+            if donor == thief || sup.shards[donor].dead {
+                continue;
+            }
+            let mb = &sup.shards[donor].mailbox;
+            let mut q = lock(&mb.queue);
+            if q.is_empty() {
+                continue;
+            }
+            let busy: Vec<FamilyKey> =
+                lock(&mb.in_flight).iter().map(|r| r.family.clone()).collect();
+            if busy.is_empty() {
+                continue; // donor is not stuck executing: it will catch up
+            }
+            // Oldest queued family with no affinity (in-flight) traffic.
+            let cold = q
+                .iter()
+                .filter(|r| !busy.contains(&r.family))
+                .filter(|r| now.duration_since(r.enqueued) >= wait_floor)
+                .min_by_key(|r| r.enqueued)
+                .map(|r| r.family.clone());
+            let Some(fam) = cold else { continue };
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].family == fam {
+                    moved.push(q.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            donor_shard = Some(donor);
+            break;
+        }
+        let Some(donor) = donor_shard else { continue };
+        if moved.is_empty() {
+            continue;
+        }
+        {
+            let mut rt = lock(&sup.router);
+            rt.assign(&moved[0].family, thief);
+            for _ in &moved {
+                rt.complete(donor);
+                rt.charge(thief);
+            }
+        }
+        sup.metrics.work_steals.fetch_add(moved.len() as u64, Ordering::Relaxed);
+        let slot = &sup.shards[thief];
+        lock(&slot.mailbox.queue).append(&mut moved);
+        let _ = slot.doorbell.send(());
+    }
 }
 
 /// Replace a crashed shard thread. The replacement runs on the same
@@ -1465,6 +1672,64 @@ struct ClaimedMember {
     attempts: u32,
 }
 
+/// The owned K/V half of a claimed batch: dense private copies, or the
+/// shared-prefix form — batch-local page pools plus per-slot block
+/// tables over them.
+enum PackedKv {
+    Dense {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Paged {
+        k_pages: Vec<f32>,
+        v_pages: Vec<f32>,
+        tables: Vec<i64>,
+        page_rows: usize,
+        pages_per_slot: usize,
+    },
+}
+
+impl PackedKv {
+    /// Borrow as the executor-facing view.
+    fn view(&self) -> BatchKv<'_> {
+        match self {
+            PackedKv::Dense { k, v } => BatchKv::Dense { k, v },
+            PackedKv::Paged { k_pages, v_pages, tables, page_rows, pages_per_slot } => {
+                BatchKv::Paged {
+                    k_pages,
+                    v_pages,
+                    page_rows: *page_rows,
+                    pages_per_slot: *pages_per_slot,
+                    tables,
+                }
+            }
+        }
+    }
+}
+
+/// A claimed batch's KV-pool reservation and pinned prefix-cache claims,
+/// freed exactly once when the batch drops — on every settle path *and*
+/// during unwind when an executor panics mid-batch (the supervised
+/// restart re-serves the members with fresh reservations, so a leaked
+/// pin here would hold shared pages hostage forever).
+struct Residency {
+    kv_pool: Arc<PagedKvPool>,
+    reserved: usize,
+    prefix: Option<Arc<super::prefix::PrefixCache>>,
+    claims: Vec<super::prefix::PrefixClaim>,
+}
+
+impl Drop for Residency {
+    fn drop(&mut self) {
+        self.kv_pool.free(self.reserved);
+        if let Some(cache) = &self.prefix {
+            for c in &self.claims {
+                cache.release(c);
+            }
+        }
+    }
+}
+
 /// A batch claimed out of the mailbox: packed host buffers plus member
 /// reply handles. Its requests live in `mailbox.in_flight` while it
 /// executes.
@@ -1473,11 +1738,11 @@ struct PackedBatch {
     lane: LaneKey,
     capacity: usize,
     padding: usize,
-    kv_reserved: usize,
     q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    kv: PackedKv,
     members: Vec<ClaimedMember>,
+    /// KV reservation + prefix pins; released by drop (unwind-safe).
+    residency: Residency,
 }
 
 /// One shard's serve loop: heartbeat → shed/plan/claim out of the shared
@@ -1508,6 +1773,12 @@ fn shard_loop(
     // reference fallback, built lazily so healthy serving pays nothing.
     let mut degraded_exec: Option<ReferenceExecutor> = None;
     let mut supervisor_gone = false;
+    // Continuous ingress: when the last tick executed work, skip the
+    // doorbell wait and re-plan immediately — requests that arrived
+    // during the step join the next batch with zero added latency. Each
+    // skip is preceded by real execution, so an idle shard still parks
+    // on the doorbell (no hot spin).
+    let mut executed_last_tick = false;
 
     // A replacement shard inherits its predecessor's mailbox: whatever
     // was claimed when the thread died goes back to the queue for
@@ -1534,16 +1805,32 @@ fn shard_loop(
         g_decode.set(decode_depth as i64);
         g_prefill.set((total - decode_depth) as i64);
         g_kv.set(ctx.kv_pool.in_use_bytes() as i64);
-        let poll = if decode_depth > 0 { ctx.window / 8 } else { ctx.window / 2 };
-        match doorbell.recv_timeout(poll.max(Duration::from_micros(100))) {
-            Ok(()) => while doorbell.try_recv().is_ok() {},
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => supervisor_gone = true,
+        if ctx.continuous && executed_last_tick {
+            // Drain without blocking: the doorbell was likely rung while
+            // the step executed, and the next step starts now.
+            loop {
+                match doorbell.try_recv() {
+                    Ok(()) => {}
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        supervisor_gone = true;
+                        break;
+                    }
+                }
+            }
+        } else {
+            let poll = if decode_depth > 0 { ctx.window / 8 } else { ctx.window / 2 };
+            match doorbell.recv_timeout(poll.max(Duration::from_micros(100))) {
+                Ok(()) => while doorbell.try_recv().is_ok() {},
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => supervisor_gone = true,
+            }
         }
         mailbox.beat(&ctx.epoch);
         let draining = mailbox.draining.load(Ordering::Acquire) || supervisor_gone;
 
         let batches = shed_plan_claim(shard, &mailbox, &mut admission_faults, &ctx, draining);
+        executed_last_tick = !batches.is_empty();
         for batch in batches {
             execute_claimed(
                 shard,
@@ -1592,12 +1879,14 @@ fn shed_plan_claim(
     };
     let policy_of = |fam: &FamilyKey| {
         // Decode requests are cheap and latency-critical: they flush at
-        // a quarter of the prefill batching window.
-        let lane_window = match LaneKey::of(fam) {
-            LaneKey::Decode => ctx.window / 4,
-            LaneKey::Prefill => ctx.window,
+        // a quarter of the prefill batching window — or on the tick they
+        // arrive under continuous ingress, joining whatever step the
+        // shard plans next instead of aging toward a flush deadline.
+        let (lane_window, continuous) = match LaneKey::of(fam) {
+            LaneKey::Decode => (ctx.window / 4, ctx.continuous),
+            LaneKey::Prefill => (ctx.window, false),
         };
-        AdmitPolicy { lane_window, draining, max_attempts: ctx.retry.max_attempts }
+        AdmitPolicy { lane_window, draining, max_attempts: ctx.retry.max_attempts, continuous }
     };
 
     let mut q = lock(&mailbox.queue);
@@ -1633,36 +1922,87 @@ fn shed_plan_claim(
 
     let mut batches: Vec<PackedBatch> = Vec::new();
     let mut claimed_idx: Vec<usize> = Vec::new();
+    // Continuous-ingress in-flight cap: a step never claims past it, so
+    // per-step latency stays bounded; late arrivals join the next step.
+    let in_flight_now =
+        if ctx.max_inflight > 0 { lock(&mailbox.in_flight).len() } else { 0 };
+    let mut admitted_members = 0usize;
     for plan in plans {
         let fam = plan.family.clone();
+        if ctx.max_inflight > 0
+            && plan.lane == LaneKey::Decode
+            && in_flight_now + admitted_members + plan.members.len() > ctx.max_inflight
+        {
+            continue; // over the in-flight cap: members stay queued
+        }
         // Decode batches draw their KV residency (pages actually
         // resident, per the family's layout) from the shared pool before
         // executing; a full pool — or an injected exhaustion fault —
         // defers the batch to the next tick: members simply stay queued.
-        let kv_reserved = if plan.lane == LaneKey::Decode {
+        // Under the prefix cache, paged decode batches intern their K/V
+        // into the shared radix tree instead: residency is charged only
+        // for pages nobody else holds, and the batch ships block tables
+        // over shared page pools rather than private dense copies.
+        let cache = ctx.prefix.as_ref().filter(|_| {
+            plan.lane == LaneKey::Decode
+                && matches!(fam.kv_layout, crate::sketch::spec::KvLayout::Paged { .. })
+        });
+        let mut kv_reserved = 0usize;
+        let mut claims: Vec<super::prefix::PrefixClaim> = Vec::new();
+        if plan.lane == LaneKey::Decode {
             let sp = obs::span_cat("serve.admit", "serve");
-            let bytes = plan.capacity.saturating_mul(fam.kv_bytes());
             let exhausted = admission_faults.as_mut().is_some_and(|inj| inj.kv_exhausted());
-            let admitted = !exhausted && ctx.kv_pool.try_alloc(bytes);
+            let admitted = if let Some(cache) = cache {
+                let mut ok = !exhausted;
+                if ok {
+                    for &idx in &plan.members {
+                        let r = &q[idx];
+                        match cache.intern(&fam, &r.k, &r.v) {
+                            Some(c) => claims.push(c),
+                            None => {
+                                ok = false; // budget deferred: retry next tick
+                                break;
+                            }
+                        }
+                    }
+                }
+                if !ok {
+                    for c in &claims {
+                        cache.release(c);
+                    }
+                    claims.clear();
+                } else {
+                    let new: usize = claims.iter().map(|c| c.new_bytes).sum();
+                    let shared: usize = claims.iter().map(|c| c.shared_bytes).sum();
+                    let hit = claims.iter().filter(|c| c.shared_bytes > 0).count();
+                    ctx.metrics.kv_charged_bytes.fetch_add(new as u64, Ordering::Relaxed);
+                    ctx.metrics
+                        .prefix_shared_bytes
+                        .fetch_add(shared as u64, Ordering::Relaxed);
+                    ctx.metrics.prefix_hits.fetch_add(hit as u64, Ordering::Relaxed);
+                }
+                ok
+            } else {
+                let bytes = plan.capacity.saturating_mul(fam.kv_bytes());
+                let got = !exhausted && ctx.kv_pool.try_alloc(bytes);
+                if got {
+                    kv_reserved = bytes;
+                    ctx.metrics.kv_charged_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                }
+                got
+            };
             sp.finish();
             if !admitted {
                 continue;
             }
-            bytes
-        } else {
-            0
-        };
+        }
         let cap = plan.capacity;
         let (qn, kn, vn) = (fam.q_len(), fam.k_len(), fam.v_len());
         let mut qb = vec![0.0f32; cap * qn];
-        let mut kb = vec![0.0f32; cap * kn];
-        let mut vb = vec![0.0f32; cap * vn];
         let mut members = Vec::with_capacity(plan.members.len());
         for (slot, &idx) in plan.members.iter().enumerate() {
             let r = &q[idx];
             qb[slot * qn..(slot + 1) * qn].copy_from_slice(&r.q);
-            kb[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
-            vb[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
             members.push(ClaimedMember {
                 id: r.id,
                 reply: r.reply.clone(),
@@ -1670,17 +2010,54 @@ fn shed_plan_claim(
                 attempts: r.attempts + 1,
             });
         }
+        let kv = if claims.is_empty() {
+            let mut kb = vec![0.0f32; cap * kn];
+            let mut vb = vec![0.0f32; cap * vn];
+            for (slot, &idx) in plan.members.iter().enumerate() {
+                let r = &q[idx];
+                kb[slot * kn..(slot + 1) * kn].copy_from_slice(&r.k);
+                vb[slot * vn..(slot + 1) * vn].copy_from_slice(&r.v);
+            }
+            PackedKv::Dense { k: kb, v: vb }
+        } else {
+            // Batch-local compaction: number each distinct physical page
+            // once, renumber every claim's chain against the pool, and
+            // export exactly the pages this batch touches. Slots sharing
+            // a prefix point at the same pool pages — the whole point.
+            let cache = cache.expect("claims imply a prefix cache");
+            let page_rows = claims[0].page_rows;
+            let pages_per_slot = fam.kv.div_ceil(page_rows).max(1);
+            let mut uniq: Vec<usize> = Vec::new();
+            let mut local: BTreeMap<usize, i64> = BTreeMap::new();
+            let mut tables = vec![super::prefix::NO_PAGE; cap * pages_per_slot];
+            for (slot, claim) in claims.iter().enumerate() {
+                for (pi, &id) in claim.chain.iter().enumerate() {
+                    let l = *local.entry(id).or_insert_with(|| {
+                        uniq.push(id);
+                        (uniq.len() - 1) as i64
+                    });
+                    tables[slot * pages_per_slot + pi] = l;
+                }
+            }
+            let (k_pages, v_pages) = cache.export_pages(&fam, &uniq);
+            PackedKv::Paged { k_pages, v_pages, tables, page_rows, pages_per_slot }
+        };
+        admitted_members += plan.members.len();
         claimed_idx.extend(plan.members.iter().copied());
         batches.push(PackedBatch {
             family: fam,
             lane: plan.lane,
             capacity: cap,
             padding: plan.padding(),
-            kv_reserved,
             q: qb,
-            k: kb,
-            v: vb,
+            kv,
             members,
+            residency: Residency {
+                kv_pool: ctx.kv_pool.clone(),
+                reserved: kv_reserved,
+                prefix: cache.cloned(),
+                claims,
+            },
         });
     }
     if !claimed_idx.is_empty() {
@@ -1794,9 +2171,9 @@ fn execute_claimed(
     let result = if degraded {
         degraded_exec
             .get_or_insert_with(|| ReferenceExecutor::with_threads(ctx.ref_threads))
-            .execute_batch(&fam, &info, cap, &batch.q, &batch.k, &batch.v)
+            .execute_batch(&fam, &info, cap, &batch.q, batch.kv.view())
     } else {
-        exec.execute_batch(&fam, &info, cap, &batch.q, &batch.k, &batch.v)
+        exec.execute_batch(&fam, &info, cap, &batch.q, batch.kv.view())
     };
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     sp_exec.finish();
@@ -1883,15 +2260,15 @@ fn execute_claimed(
     release(shard, &batch, ctx);
 }
 
-/// Release a settled batch's router depth and KV reservation.
+/// Release a settled batch's router depth. The KV reservation and
+/// pinned prefix-cache claims live in the batch's [`Residency`] and are
+/// freed when the batch drops — unpinned pages stay resident for LRU
+/// reuse.
 fn release(shard: usize, batch: &PackedBatch, ctx: &ShardCtx) {
-    {
-        let mut rt = lock(&ctx.router);
-        for _ in &batch.members {
-            rt.complete(shard);
-        }
+    let mut rt = lock(&ctx.router);
+    for _ in &batch.members {
+        rt.complete(shard);
     }
-    ctx.kv_pool.free(batch.kv_reserved);
 }
 
 /// Terminal failure for a whole claimed batch (no retry).

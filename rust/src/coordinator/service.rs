@@ -67,6 +67,14 @@ pub struct ServeConfig {
     /// `<tune_path>.quarantine.txt` next to the tune cache (and disables
     /// persistence when the tune cache is not persisted either).
     pub quarantine_path: Option<PathBuf>,
+    /// Continuous batching (DESIGN.md §14): decode requests join in-flight
+    /// batches between steps instead of waiting out a batch window.
+    pub continuous: bool,
+    /// Copy-on-write shared-prefix KV caching for paged decode families.
+    pub prefix_cache: bool,
+    /// Cap on decode requests admitted but not yet answered per shard
+    /// (`0` = unlimited).
+    pub max_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +92,9 @@ impl Default for ServeConfig {
             supervisor: SupervisorConfig::default(),
             fault_plan: None,
             quarantine_path: None,
+            continuous: true,
+            prefix_cache: false,
+            max_inflight: 0,
         }
     }
 }
@@ -103,6 +114,8 @@ pub struct Coordinator {
     /// Artifact health board (variants quarantined after repeated
     /// failures or latency blowups stop receiving traffic).
     pub quarantine: Arc<QuarantineBoard>,
+    /// Shared-prefix KV cache (`Some` when `prefix_cache` was enabled).
+    pub prefix: Option<Arc<super::prefix::PrefixCache>>,
     /// Deadline stamped on every submitted request.
     deadline: Option<Duration>,
     shards: usize,
@@ -168,6 +181,9 @@ impl Coordinator {
             None => QuarantineBoard::new(),
         });
         let kv_pool = Arc::new(PagedKvPool::new(config.kv_budget_bytes));
+        let prefix = config
+            .prefix_cache
+            .then(|| Arc::new(super::prefix::PrefixCache::new(config.kv_budget_bytes)));
         let opts = PoolOptions {
             shards,
             spec: config.executor.clone(),
@@ -178,6 +194,8 @@ impl Coordinator {
             supervisor: config.supervisor.clone(),
             fault_plan: config.fault_plan.clone(),
             quarantine_path,
+            continuous: config.continuous,
+            max_inflight: config.max_inflight,
         };
         let pool = ExecutorPool::start(
             opts,
@@ -186,6 +204,7 @@ impl Coordinator {
             tune,
             kv_pool.clone(),
             quarantine.clone(),
+            prefix.clone(),
         )?;
         Ok(Coordinator {
             pool: Some(pool),
@@ -195,6 +214,7 @@ impl Coordinator {
             tuned_selections,
             kv_pool,
             quarantine,
+            prefix,
             deadline: config.deadline,
             shards,
         })

@@ -74,6 +74,10 @@ struct Emitter<'a> {
     roles: BTreeMap<String, Role>,
     out: Vec<String>,
     indent: usize,
+    /// Python names of the online-softmax running stats `(m, l)`, noted
+    /// while lowering `Compute Softmax` so the output store can emit the
+    /// per-row logsumexp (`m + log(l)`) as a first-class kernel output.
+    softmax_stats: Option<(String, String)>,
 }
 
 impl<'a> Emitter<'a> {
@@ -85,6 +89,7 @@ impl<'a> Emitter<'a> {
             roles: infer_roles(&reasoned.program),
             out: Vec::new(),
             indent: 0,
+            softmax_stats: None,
         }
     }
 
@@ -219,9 +224,9 @@ impl<'a> Emitter<'a> {
         // ---- kernel ----
         let paged = matches!(self.spec.kv_layout, KvLayout::Paged { .. });
         if paged {
-            self.line("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref):");
+            self.line("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref, lse_ref):");
         } else {
-            self.line("def _kernel(q_ref, k_ref, v_ref, o_ref):");
+            self.line("def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref):");
         }
         self.indent = 1;
         self.line("# One program instance per (batch, q-head, q-block) -- the TL");
@@ -259,9 +264,9 @@ impl<'a> Emitter<'a> {
 
         // ---- host wrapper ----
         if paged {
-            self.line("def attention(q, k, v, block_table, interpret=True):");
+            self.line("def attention_with_lse(q, k, v, block_table, interpret=True):");
         } else {
-            self.line("def attention(q, k, v, interpret=True):");
+            self.line("def attention_with_lse(q, k, v, interpret=True):");
         }
         self.indent = 1;
         self.line("\"\"\"Batched attention via the generated kernel.");
@@ -274,7 +279,10 @@ impl<'a> Emitter<'a> {
             self.line("    block_table: (kv_len // PAGE_SIZE,) int32, logical -> physical page");
         }
         self.line("Returns:");
-        self.line("    (batch, num_q_heads, seq_len, V_DIM), dtype of q.");
+        self.line("    o: (batch, num_q_heads, seq_len, V_DIM), dtype of q.");
+        self.line("    lse: (batch, num_q_heads, seq_len, 1) float32 per-row logsumexp of");
+        self.line("        the scaled scores -- feeds attention_backward directly, so the");
+        self.line("        VJP wrapper never recomputes the forward stats.");
         self.line("\"\"\"");
         self.line("batch, num_q_heads, seq_len, qk_dim = q.shape");
         self.line("kv_len = k.shape[2]");
@@ -309,16 +317,39 @@ impl<'a> Emitter<'a> {
             "        pl.BlockSpec((1, 1, kv_len, V_DIM), lambda b, h, i: (b, h // GROUP_SIZE, 0, 0)),",
         );
         self.line("    ],");
-        self.line("    # TL: Allocate O in global (seq_len, VDim) with offset q_offset");
-        self.line("    out_specs=pl.BlockSpec((1, 1, BM, V_DIM), lambda b, h, i: (b, h, i, 0)),");
+        self.line("    out_specs=[");
+        self.line("        # TL: Allocate O in global (seq_len, VDim) with offset q_offset");
+        self.line("        pl.BlockSpec((1, 1, BM, V_DIM), lambda b, h, i: (b, h, i, 0)),");
+        self.line("        # per-row logsumexp, saved for the backward pass");
+        self.line("        pl.BlockSpec((1, 1, BM, 1), lambda b, h, i: (b, h, i, 0)),");
+        self.line("    ],");
+        self.line("    out_shape=[");
         self.line(
-            "    out_shape=jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, V_DIM), q.dtype),",
+            "        jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, V_DIM), q.dtype),",
         );
+        self.line(
+            "        jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, 1), jnp.float32),",
+        );
+        self.line("    ],");
         self.line("    interpret=interpret,");
         if paged {
             self.line(")(block_table, q, k, v)");
         } else {
             self.line(")(q, k, v)");
+        }
+        self.indent = 0;
+        self.line("");
+        self.line("");
+        if paged {
+            self.line("def attention(q, k, v, block_table, interpret=True):");
+            self.indent = 1;
+            self.line("\"\"\"Output-only convenience wrapper around attention_with_lse.\"\"\"");
+            self.line("return attention_with_lse(q, k, v, block_table, interpret=interpret)[0]");
+        } else {
+            self.line("def attention(q, k, v, interpret=True):");
+            self.indent = 1;
+            self.line("\"\"\"Output-only convenience wrapper around attention_with_lse.\"\"\"");
+            self.line("return attention_with_lse(q, k, v, interpret=interpret)[0]");
         }
         self.indent = 0;
         Ok(self.out.join("\n") + "\n")
@@ -421,6 +452,16 @@ impl<'a> Emitter<'a> {
                     "o_ref[0, 0] = {}.astype(o_ref.dtype)",
                     self.py(tensor)
                 ));
+                // First-class logsumexp output: the backward wrapper
+                // reads it instead of recomputing the forward stats
+                // with a dense jnp pass (DESIGN.md S10).
+                if let Some((m, l)) = self.softmax_stats.clone() {
+                    self.line(format!(
+                        "lse_ref[0, 0] = ({m} + jnp.log({l})).astype(lse_ref.dtype)"
+                    ));
+                } else {
+                    self.line("lse_ref[0, 0] = jnp.zeros((BM, 1), lse_ref.dtype)");
+                }
             }
             (a, b) => {
                 return Err(TranslateError(format!(
@@ -620,6 +661,7 @@ impl<'a> Emitter<'a> {
                 }
                 let m = self.py(&with[0]);
                 let l = self.py(&with[1]);
+                self.softmax_stats = Some((m.clone(), l.clone()));
                 let sname = self.py(&inputs[0].name);
                 self.line(format!(
                     "m_new = jnp.maximum({m}, jnp.max({sname}, axis=1, keepdims=True))"
@@ -1146,15 +1188,18 @@ impl<'a> BwdEmitter<'a> {
         self.line("    k: (batch, num_kv_heads, kv_len, QK_DIM)");
         self.line("    v: (batch, num_kv_heads, kv_len, V_DIM)");
         self.line("    do: (batch, num_q_heads, seq_len, V_DIM) -- the cotangent of O");
-        self.line("    o, lse: forward outputs; recomputed by a jnp reference pass when");
-        self.line("        the forward kernel did not save them.");
+        self.line("    o, lse: forward outputs. The forward kernel emits both first-class");
+        self.line("        (attention_with_lse), so pass them through; the dense jnp");
+        self.line("        recompute below is only a fallback for legacy callers.");
         if paged {
             self.line("    block_table: (kv_len // PAGE_SIZE,) int32, logical -> physical page");
         }
         self.line("");
         self.line("Pairs with the forward module as a jax.custom_vjp:");
-        self.line("    f.defvjp(lambda q, k, v: (attention(q, k, v), (q, k, v, o, lse)),");
-        self.line("             lambda res, do: attention_backward(*res[:3], do, *res[3:]))");
+        self.line("    def fwd(q, k, v):");
+        self.line("        o, lse = attention_with_lse(q, k, v)");
+        self.line("        return o, (q, k, v, o, lse)");
+        self.line("    f.defvjp(fwd, lambda res, do: attention_backward(*res[:3], do, *res[3:]))");
         self.line("\"\"\"");
         self.line("batch, num_q_heads, seq_len, qk_dim = q.shape");
         self.line("kv_len = k.shape[2]");
@@ -1169,8 +1214,9 @@ impl<'a> BwdEmitter<'a> {
         self.line("kk = jnp.repeat(k, GROUP_SIZE, axis=1) if GROUP_SIZE > 1 else k");
         self.line("vv = jnp.repeat(v, GROUP_SIZE, axis=1) if GROUP_SIZE > 1 else v");
         self.line("if o is None or lse is None:");
-        self.line("    # Reference recompute of the forward stats (the fused forward");
-        self.line("    # kernel can be taught to emit lse; DESIGN.md S10).");
+        self.line("    # Legacy fallback: dense recompute of the forward stats. The");
+        self.line("    # fused forward emits lse first-class (attention_with_lse), so");
+        self.line("    # callers that thread it through never take this path.");
         self.line("    s = jnp.einsum(\"bhqd,bhkd->bhqk\", q, kk).astype(jnp.float32) * SOFTMAX_SCALE");
         if self.spec.causal {
             self.line("    q_pos = jax.lax.broadcasted_iota(jnp.int32, (seq_len, kv_len), 0)");
@@ -1273,12 +1319,29 @@ mod tests {
     #[test]
     fn emits_valid_looking_python() {
         let src = emit(&OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true));
-        assert!(src.contains("def _kernel(q_ref, k_ref, v_ref, o_ref):"));
+        assert!(src.contains("def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref):"));
+        assert!(src.contains("def attention_with_lse(q, k, v, interpret=True):"));
         assert!(src.contains("def attention(q, k, v, interpret=True):"));
         assert!(src.contains("pl.pallas_call("));
         assert!(src.contains("jax.lax.fori_loop"));
         // Balanced indentation sanity: no tabs, 4-space indents only.
         assert!(!src.contains('\t'));
+    }
+
+    #[test]
+    fn forward_emits_first_class_lse() {
+        let src = emit(&OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true));
+        // The kernel stores m + log(l) alongside O...
+        let lse_line = src
+            .lines()
+            .find(|l| l.trim_start().starts_with("lse_ref[0, 0] ="))
+            .expect("no lse store emitted");
+        assert!(lse_line.contains("jnp.log("), "lse store: {lse_line}");
+        // ...the host wrapper declares the second output...
+        assert!(src.contains("jax.ShapeDtypeStruct((batch, num_q_heads, seq_len, 1), jnp.float32)"));
+        assert!(src.contains("pl.BlockSpec((1, 1, BM, 1), lambda b, h, i: (b, h, i, 0))"));
+        // ...and the thin output-only wrapper delegates to it.
+        assert!(src.contains("return attention_with_lse(q, k, v, interpret=interpret)[0]"));
     }
 
     #[test]
@@ -1344,7 +1407,7 @@ mod tests {
         let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
             .with_layout(KvLayout::Paged { page_size: 16 });
         let src = emit(&spec);
-        assert!(src.contains("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref):"));
+        assert!(src.contains("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref, lse_ref):"));
         assert!(src.contains("PAGE_SIZE = 16"));
         assert!(src.contains("PAGES_PER_TILE"));
         assert!(src.contains("bt_ref[(i) * PAGES_PER_TILE + j] * PAGE_SIZE"), "{src}");

@@ -68,6 +68,11 @@ pub struct SyntheticRequest {
     pub seed: u64,
     /// Offset from stream start (exponential inter-arrival).
     pub arrival: std::time::Duration,
+    /// Shared-prefix group: `(prefix_seed, prefix_rows)`. The first
+    /// `prefix_rows` K/V rows of every head are drawn from a group-wide
+    /// stream, so every request carrying the same pair materializes
+    /// bit-identical prefix content (what the COW prefix cache dedups).
+    pub prefix: Option<(u64, usize)>,
 }
 
 impl SyntheticRequest {
@@ -78,9 +83,41 @@ impl SyntheticRequest {
             (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
         };
         let q = gen(self.family.q_len(), &mut rng);
-        let k = gen(self.family.k_len(), &mut rng);
-        let v = gen(self.family.v_len(), &mut rng);
-        (q, k, v)
+        match self.prefix {
+            // No prefix group: the draw order below is byte-identical to
+            // what this generator always produced (seeded streams stay
+            // reproducible across the prefix-cache change).
+            None => {
+                let k = gen(self.family.k_len(), &mut rng);
+                let v = gen(self.family.v_len(), &mut rng);
+                (q, k, v)
+            }
+            Some((prefix_seed, prefix_rows)) => {
+                let prows = prefix_rows.min(self.family.kv);
+                let mut prng = Rng::new(prefix_seed);
+                let (heads, kv) = (self.family.kv_heads, self.family.kv);
+                let mut build = |dim: usize| -> Vec<f32> {
+                    // Head-major [kv_heads][kv][dim]: shared rows come
+                    // from the group stream, the tail from the request
+                    // stream. Draw order is fixed per family shape, so
+                    // fan-out members produce identical prefixes.
+                    let mut out = Vec::with_capacity(heads * kv * dim);
+                    for _ in 0..heads {
+                        for r in 0..kv {
+                            let src =
+                                if r < prows { &mut prng } else { &mut rng };
+                            for _ in 0..dim {
+                                out.push(src.normal() as f32 * 0.5);
+                            }
+                        }
+                    }
+                    out
+                };
+                let k = build(self.family.qk_dim);
+                let v = build(self.family.v_dim);
+                (q, k, v)
+            }
+        }
     }
 }
 
@@ -110,6 +147,7 @@ pub fn request_stream(
             family,
             seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
             arrival: std::time::Duration::from_secs_f64(t),
+            prefix: None,
         });
     }
     out
@@ -239,6 +277,7 @@ pub fn request_stream_mixed(
             family,
             seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
             arrival: std::time::Duration::from_secs_f64(t),
+            prefix: None,
         });
     }
     out
@@ -294,6 +333,7 @@ pub fn fault_stream(
             family,
             seed: seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15),
             arrival: std::time::Duration::from_secs_f64(t),
+            prefix: None,
         });
     }
     out
@@ -332,6 +372,51 @@ pub fn real_model_decode_stream(
     }
     assert!(!fams.is_empty(), "max_kv clamps away every Table-8 config");
     request_stream_mixed(&fams, n, rate_hz, 1.0, seed)
+}
+
+/// Shared-prefix decode traffic for the continuous-batching bench: each
+/// of `n_prefixes` groups is a distinct paged GQA decode family whose
+/// `fanout` members share the *entire* K/V cache (bit-identical pages)
+/// while carrying unique Q rows — the many-completions-per-prompt shape
+/// the COW prefix cache exists for. Arrivals are all-at-once; the bench
+/// submits the stream in a tight loop and measures admitted QPS.
+pub fn shared_prefix_stream(
+    n_prefixes: usize,
+    fanout: usize,
+    seed: u64,
+) -> Vec<SyntheticRequest> {
+    assert!(n_prefixes > 0 && fanout > 0, "empty shared-prefix stream");
+    let page_size = 16usize;
+    let mut out = Vec::with_capacity(n_prefixes * fanout);
+    for g in 0..n_prefixes {
+        // Distinct KV length per group keeps the families (and hence the
+        // radix-tree roots) distinct while staying page-aligned.
+        let kv = 512 + page_size * g;
+        let family = FamilyKey {
+            variant: AttnVariant::Gqa,
+            causal: false,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 8,
+            kv_heads: 2,
+            seq: 1,
+            kv,
+            kv_layout: KvLayout::Paged { page_size },
+            direction: Direction::Forward,
+        };
+        let prefix_seed =
+            seed ^ (0xA5A5_0000u64 + g as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        for f in 0..fanout {
+            let i = (g * fanout + f) as u64;
+            out.push(SyntheticRequest {
+                family: family.clone(),
+                seed: seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15),
+                arrival: std::time::Duration::ZERO,
+                prefix: Some((prefix_seed, kv)),
+            });
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -507,10 +592,55 @@ mod tests {
             family: fam.clone(),
             seed: 1,
             arrival: std::time::Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = r.payload();
         assert_eq!(q.len(), fam.q_len());
         assert_eq!(k.len(), fam.k_len());
         assert_eq!(v.len(), fam.v_len());
+    }
+
+    #[test]
+    fn shared_prefix_groups_share_kv_bitwise_with_unique_q() {
+        let stream = shared_prefix_stream(3, 4, 17);
+        assert_eq!(stream.len(), 12);
+        for group in stream.chunks(4) {
+            let (q0, k0, v0) = group[0].payload();
+            assert_eq!(k0.len(), group[0].family.k_len());
+            for member in &group[1..] {
+                assert_eq!(member.family, group[0].family);
+                let (q, k, v) = member.payload();
+                assert_eq!(k, k0, "fan-out members share K bitwise");
+                assert_eq!(v, v0, "fan-out members share V bitwise");
+                assert_ne!(q, q0, "each member carries a unique Q");
+            }
+        }
+        // Distinct groups carry distinct families and distinct caches.
+        assert_ne!(stream[0].family, stream[4].family);
+        assert_ne!(stream[0].payload().1, stream[4].payload().1);
+        // Determinism per seed.
+        let again = shared_prefix_stream(3, 4, 17);
+        assert_eq!(stream[5].payload(), again[5].payload());
+    }
+
+    #[test]
+    fn prefixless_payload_is_unchanged_by_the_prefix_field() {
+        // The prefix-less draw order must stay byte-identical to the
+        // historical generator: Q then K then V from one seeded stream.
+        let fam = reference_serving_families().remove(0);
+        let r = SyntheticRequest {
+            family: fam.clone(),
+            seed: 99,
+            arrival: std::time::Duration::ZERO,
+            prefix: None,
+        };
+        let mut rng = Rng::new(99);
+        let mut draw = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+        };
+        let expect_q = draw(fam.q_len());
+        let expect_k = draw(fam.k_len());
+        let expect_v = draw(fam.v_len());
+        assert_eq!(r.payload(), (expect_q, expect_k, expect_v));
     }
 }

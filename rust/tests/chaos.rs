@@ -15,11 +15,11 @@ use std::time::Duration;
 use qimeng::autotune::cache::TuneCache;
 use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
 use qimeng::coordinator::{
-    Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome, RetryPolicy, ServeConfig,
-    SupervisorConfig,
+    BatchKv, Coordinator, Executor, ExecutorSpec, FaultPlan, RequestOutcome, RetryPolicy,
+    ServeConfig, SupervisorConfig,
 };
 use qimeng::util::prng::Rng;
-use qimeng::workload::SyntheticRequest;
+use qimeng::workload::{shared_prefix_stream, SyntheticRequest};
 
 /// Oracle run: one request through a fresh solo reference executor
 /// (capacity 1, no batching, no pool) — the bit-exact ground truth.
@@ -27,7 +27,7 @@ fn oracle(fam: &qimeng::coordinator::FamilyKey, q: &[f32], k: &[f32], v: &[f32])
     let info =
         ArtifactInfo { id: "oracle".to_string(), cand: None, obs_key: String::new() };
     ReferenceExecutor::default()
-        .execute_batch(fam, &info, 1, q, k, v)
+        .execute_batch(fam, &info, 1, q, BatchKv::Dense { k, v })
         .expect("oracle execution")
 }
 
@@ -77,6 +77,7 @@ fn run_chaos_case(case: &ChaosCase) -> Result<(), String> {
             family: fams[i % fams.len()].clone(),
             seed: case.seed.wrapping_mul(1000).wrapping_add(i as u64),
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let rx = coordinator.submit(req.family.clone(), q.clone(), k.clone(), v.clone());
@@ -159,14 +160,13 @@ impl Executor for SplitkFailingExecutor {
         info: &ArtifactInfo,
         capacity: usize,
         q: &[f32],
-        k: &[f32],
-        v: &[f32],
+        kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         self.log.lock().unwrap().push(info.id.clone());
         if info.id == "splitk" {
             return Err("splitk variant is broken on this host".to_string());
         }
-        self.inner.execute_batch(family, info, capacity, q, k, v)
+        self.inner.execute_batch(family, info, capacity, q, kv)
     }
 
     fn kind(&self) -> &'static str {
@@ -218,6 +218,7 @@ fn quarantined_variant_stops_being_selected_and_siblings_take_over() {
             family: fam.clone(),
             seed: 9000 + i as u64,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let resp = coordinator.submit(fam.clone(), q, k, v).recv().expect("reply");
@@ -259,8 +260,7 @@ impl Executor for AlwaysFailingExecutor {
         info: &ArtifactInfo,
         _capacity: usize,
         _q: &[f32],
-        _k: &[f32],
-        _v: &[f32],
+        _kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         Err(format!("variant {} is broken", info.id))
     }
@@ -296,6 +296,7 @@ fn degraded_lane_serves_bit_exact_when_every_variant_is_quarantined() {
             family: fam.clone(),
             seed: 31000 + i as u64,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let resp = coordinator
@@ -327,4 +328,66 @@ fn degraded_lane_serves_bit_exact_when_every_variant_is_quarantined() {
         coordinator.metrics.degraded.load(std::sync::atomic::Ordering::Relaxed);
     assert!(degraded as usize >= degraded_outputs.len());
     coordinator.shutdown();
+}
+
+#[test]
+fn prefix_cache_stays_bit_exact_and_leak_free_under_chaos() {
+    // COW-shared KV pages under injected errors, shard panics, and KV
+    // exhaustion: every served output must stay bit-identical to a
+    // private-copy oracle, and no prefix claim may leak a refcount —
+    // mid-batch panics included (the residency guard releases on unwind).
+    let stream = shared_prefix_stream(3, 4, 77);
+    let mut fams: Vec<qimeng::coordinator::FamilyKey> = Vec::new();
+    for r in &stream {
+        if !fams.contains(&r.family) {
+            fams.push(r.family.clone());
+        }
+    }
+    let topo = ServeTopology::synthetic(&fams, &[1, 2, 4, 8]);
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 2,
+        executor: ExecutorSpec::Reference,
+        retry: RetryPolicy { max_attempts: 3, backoff: Duration::from_micros(200) },
+        supervisor: fast_supervisor(),
+        fault_plan: Some(FaultPlan {
+            seed: 5,
+            error_rate: 0.2,
+            panic_rate: 0.05,
+            kv_exhaust_rate: 0.2,
+            ..FaultPlan::default()
+        }),
+        prefix_cache: true,
+        ..ServeConfig::default()
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, topo, TuneCache::new(), false).expect("start");
+    let cache = coordinator.prefix.clone().expect("prefix cache enabled");
+    let mut submitted = Vec::with_capacity(stream.len());
+    for req in &stream {
+        let (q, k, v) = req.payload();
+        let rx = coordinator.submit(req.family.clone(), q.clone(), k.clone(), v.clone());
+        submitted.push((req.family.clone(), q, k, v, rx));
+    }
+    coordinator.shutdown();
+    for (i, (fam, q, k, v, rx)) in submitted.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} dropped without a terminal response"));
+        assert!(rx.try_recv().is_err(), "request {i} answered twice");
+        if let RequestOutcome::Ok(out) = &resp.outcome {
+            assert_eq!(
+                out,
+                &oracle(&fam, &q, &k, &v),
+                "request {i} served off shared pages diverged from the private oracle"
+            );
+        }
+    }
+    assert!(cache.hits() > 0, "fanout-4 stream never shared a prefix");
+    assert_eq!(
+        cache.pinned_bytes(),
+        0,
+        "prefix claims leaked a refcount under chaos"
+    );
 }

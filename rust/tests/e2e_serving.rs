@@ -39,6 +39,7 @@ fn served_outputs_match_reference_for_every_family() {
             family: fam.clone(),
             seed: 1000 + i as u64,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let rx = coordinator.submit(fam.clone(), q.clone(), k.clone(), v.clone());
@@ -82,6 +83,7 @@ fn batched_and_unbatched_paths_agree() {
             family: fam.clone(),
             seed: 42 + i,
             arrival: Duration::ZERO,
+            prefix: None,
         })
         .collect();
     let rxs: Vec<_> = reqs

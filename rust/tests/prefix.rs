@@ -1,0 +1,139 @@
+//! Property tests for copy-on-write shared-prefix KV caching: the same
+//! shared-prefix stream served with COW shared pages, with private
+//! per-request copies, and by a capacity-1 dense oracle must produce
+//! bit-identical outputs — across shard counts — while the cache
+//! actually shares pages, charges fewer KV bytes, and never leaks a
+//! refcount.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use qimeng::autotune::cache::TuneCache;
+use qimeng::coordinator::scheduler::{ArtifactInfo, ReferenceExecutor, ServeTopology};
+use qimeng::coordinator::{BatchKv, Coordinator, Executor, ExecutorSpec, ServeConfig};
+use qimeng::util::prng::Rng;
+use qimeng::workload::{shared_prefix_stream, SyntheticRequest};
+
+/// Serve a fixed stream through a fresh pool; returns per-request
+/// outputs in submission order plus (prefix_hits, kv_charged_bytes).
+fn serve_stream(
+    stream: &[SyntheticRequest],
+    shards: usize,
+    prefix_cache: bool,
+) -> Result<(Vec<Vec<f32>>, u64, u64), String> {
+    let mut fams = Vec::new();
+    for r in stream {
+        if !fams.contains(&r.family) {
+            fams.push(r.family.clone());
+        }
+    }
+    let topo = ServeTopology::synthetic(&fams, &[1, 2, 4, 8]);
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards,
+        executor: ExecutorSpec::Reference,
+        prefix_cache,
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start_with_topology(config, topo, TuneCache::new(), false)
+        .map_err(|e| format!("start: {e:#}"))?;
+    let cache = coordinator.prefix.clone();
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|req| {
+            let (q, k, v) = req.payload();
+            coordinator.submit(req.family.clone(), q, k, v)
+        })
+        .collect();
+    let mut outs = Vec::with_capacity(rxs.len());
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().map_err(|_| format!("request {i} dropped"))?;
+        outs.push(
+            resp.outcome.into_result().map_err(|e| format!("request {i} failed: {e}"))?,
+        );
+    }
+    let hits = coordinator.metrics.prefix_hits.load(Ordering::Relaxed);
+    let charged = coordinator.metrics.kv_charged_bytes.load(Ordering::Relaxed);
+    coordinator.shutdown();
+    if let Some(cache) = cache {
+        if cache.pinned_bytes() != 0 {
+            return Err(format!("{} prefix bytes left pinned", cache.pinned_bytes()));
+        }
+    }
+    Ok((outs, hits, charged))
+}
+
+/// Ground truth: each request alone through a fresh capacity-1 dense
+/// reference executor — no batching, no paging, no sharing.
+fn dense_oracle(stream: &[SyntheticRequest]) -> Vec<Vec<f32>> {
+    let info =
+        ArtifactInfo { id: "oracle".to_string(), cand: None, obs_key: String::new() };
+    stream
+        .iter()
+        .map(|req| {
+            let (q, k, v) = req.payload();
+            ReferenceExecutor::default()
+                .execute_batch(&req.family, &info, 1, &q, BatchKv::Dense { k: &k, v: &v })
+                .expect("oracle execution")
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+struct PrefixCase {
+    n_prefixes: usize,
+    fanout: usize,
+    shards: usize,
+    seed: u64,
+}
+
+fn run_prefix_case(case: &PrefixCase) -> Result<(), String> {
+    let stream = shared_prefix_stream(case.n_prefixes, case.fanout, case.seed);
+    let want = dense_oracle(&stream);
+    let (shared, hits, charged_shared) = serve_stream(&stream, case.shards, true)?;
+    let (private, _, charged_private) = serve_stream(&stream, case.shards, false)?;
+    for (i, w) in want.iter().enumerate() {
+        if &shared[i] != w {
+            return Err(format!("request {i}: COW-shared output diverged from the oracle"));
+        }
+        if &private[i] != w {
+            return Err(format!("request {i}: private-copy output diverged from the oracle"));
+        }
+    }
+    // With any sharing opportunity at all, the radix tree must land hits
+    // and charge strictly fewer residency bytes than private copies
+    // (which pay per slot, padding included).
+    if case.fanout >= 2 && hits == 0 {
+        return Err("fanout >= 2 never hit the prefix cache".to_string());
+    }
+    if case.fanout >= 2 && charged_shared >= charged_private {
+        return Err(format!(
+            "sharing did not reduce charged KV bytes: {charged_shared} vs {charged_private}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn cow_shared_and_private_copies_are_bit_identical_across_shard_counts() {
+    for &shards in &[1usize, 3] {
+        run_prefix_case(&PrefixCase { n_prefixes: 2, fanout: 4, shards, seed: 11 })
+            .unwrap();
+    }
+}
+
+#[test]
+fn cow_bit_identity_holds_over_random_streams() {
+    // Each case stands up two real pools, so the case count is modest.
+    qimeng::util::proptest::check_no_shrink(
+        6,
+        |rng: &mut Rng| PrefixCase {
+            n_prefixes: 1 + rng.below(2) as usize,
+            fanout: 1 + rng.below(4) as usize,
+            shards: 1 + rng.below(3) as usize,
+            seed: rng.below(1 << 30),
+        },
+        run_prefix_case,
+    );
+}

@@ -8,8 +8,8 @@ use std::time::Duration;
 
 use qimeng::autotune::cache::TuneCache;
 use qimeng::coordinator::{
-    run_stream, Coordinator, Executor, ExecutorSpec, LaneKey, RetryPolicy, ServeConfig,
-    ServeTopology,
+    run_stream, BatchKv, Coordinator, Executor, ExecutorSpec, LaneKey, RetryPolicy,
+    ServeConfig, ServeTopology,
 };
 use qimeng::verify::tensor::{reference_attention, Tensor2};
 use qimeng::workload::{request_stream_mixed, SyntheticRequest};
@@ -65,6 +65,7 @@ fn shutdown_drains_every_submitted_request() {
             family: fams[(i as usize) % fams.len()].clone(),
             seed: 100 + i,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         rxs.push(coordinator.submit(req.family.clone(), q, k, v));
@@ -86,6 +87,7 @@ fn served_outputs_match_oracle_for_every_family_and_lane() {
             family: fam.clone(),
             seed: 2000 + i as u64,
             arrival: Duration::ZERO,
+            prefix: None,
         };
         let (q, k, v) = req.payload();
         let resp = coordinator
@@ -213,8 +215,7 @@ impl Executor for ZeroExecutor {
         _info: &qimeng::coordinator::scheduler::ArtifactInfo,
         capacity: usize,
         _q: &[f32],
-        _k: &[f32],
-        _v: &[f32],
+        _kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         Ok(vec![0.0; capacity * family.out_len()])
     }
@@ -329,6 +330,101 @@ fn observed_latencies_survive_shutdown_and_name_decode_specs() {
     }
 }
 
+/// Executor that parks on the prefill-MHA family — a long-running batch
+/// pinning its shard while colder families queue up behind it.
+struct SlowMhaExecutor {
+    started: Arc<std::sync::atomic::AtomicBool>,
+    inner: qimeng::coordinator::scheduler::ReferenceExecutor,
+}
+
+impl Executor for SlowMhaExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &qimeng::coordinator::FamilyKey,
+        info: &qimeng::coordinator::scheduler::ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        kv: BatchKv<'_>,
+    ) -> Result<Vec<f32>, String> {
+        if family.variant == qimeng::sketch::spec::AttnVariant::Mha && family.seq == 64 {
+            self.started.store(true, std::sync::atomic::Ordering::Release);
+            std::thread::sleep(Duration::from_millis(250));
+        }
+        self.inner.execute_batch(family, info, capacity, q, kv)
+    }
+
+    fn kind(&self) -> &'static str {
+        "slow-mha"
+    }
+}
+
+#[test]
+fn idle_shard_steals_cold_families_queued_behind_a_long_batch() {
+    use qimeng::coordinator::SupervisorConfig;
+    use qimeng::sketch::spec::AttnVariant;
+    let started = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let factory_started = started.clone();
+    let config = ServeConfig {
+        executor: ExecutorSpec::Custom(Arc::new(move |_shard| {
+            Ok(Box::new(SlowMhaExecutor {
+                started: factory_started.clone(),
+                inner: Default::default(),
+            }) as Box<dyn Executor>)
+        })),
+        supervisor: SupervisorConfig {
+            heartbeat_timeout: Duration::from_secs(2),
+            check_every: Duration::from_millis(1),
+            max_restarts: 4,
+        },
+        ..reference_config(2)
+    };
+    let coordinator = Coordinator::start(config).expect("start");
+    let fams = coordinator.families.clone();
+    let prefill = |variant: AttnVariant| {
+        fams.iter()
+            .find(|f| f.variant == variant && f.seq == 64)
+            .cloned()
+            .expect("prefill family")
+    };
+    let (slow, warm, cold) =
+        (prefill(AttnVariant::Mha), prefill(AttnVariant::Gqa), prefill(AttnVariant::Mqa));
+    let submit = |fam: &qimeng::coordinator::FamilyKey, seed: u64| {
+        let req = SyntheticRequest {
+            family: fam.clone(),
+            seed,
+            arrival: Duration::ZERO,
+            prefix: None,
+        };
+        let (q, k, v) = req.payload();
+        coordinator.submit(fam.clone(), q, k, v)
+    };
+
+    // Pin affinities while the pool is idle: the round-robin placement
+    // cursor sends `cold` to shard 0, `warm` to shard 1, and then wraps
+    // `slow` onto shard 0 — the same shard `cold` is pinned to.
+    assert!(submit(&cold, 1).recv().unwrap().outcome.is_ok());
+    assert!(submit(&warm, 2).recv().unwrap().outcome.is_ok());
+    let slow_rx = submit(&slow, 3);
+    // Wait until the slow batch is *executing* (claimed, not queued), so
+    // the cold backlog below demonstrably sits behind it.
+    let t0 = std::time::Instant::now();
+    while !started.load(std::sync::atomic::Ordering::Acquire) {
+        assert!(t0.elapsed() < Duration::from_secs(5), "slow batch never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Cold-family backlog on the busy shard; shard 1 is fully idle, so
+    // the supervisor's sweep must move the whole family over.
+    let rxs: Vec<_> = (0..4).map(|i| submit(&cold, 10 + i)).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().outcome.is_ok());
+    }
+    assert!(slow_rx.recv().unwrap().outcome.is_ok());
+    let steals =
+        coordinator.metrics.work_steals.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(steals >= 1, "idle shard never stole the cold family backlog");
+    coordinator.shutdown();
+}
+
 /// An executor whose every batch fails — exercises the shard's error
 /// reply path end-to-end.
 struct FailingExecutor;
@@ -340,8 +436,7 @@ impl Executor for FailingExecutor {
         _info: &qimeng::coordinator::scheduler::ArtifactInfo,
         _capacity: usize,
         _q: &[f32],
-        _k: &[f32],
-        _v: &[f32],
+        _kv: BatchKv<'_>,
     ) -> Result<Vec<f32>, String> {
         Err("injected failure".to_string())
     }
