@@ -112,6 +112,7 @@ fn main() {
         kv: 256,
         kv_layout: KvLayout::Contiguous,
         direction: qimeng::sketch::spec::Direction::Forward,
+        pattern: qimeng::sketch::spec::ScorePattern::Dense,
     };
     let caps: BTreeMap<FamilyKey, Vec<usize>> = [(fam.clone(), vec![1, 4])].into();
     let pending: Vec<(usize, FamilyKey, bool)> =

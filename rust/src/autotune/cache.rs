@@ -54,12 +54,13 @@ pub struct TuneEntry {
     pub evaluated: usize,
 }
 
-/// The spec half of a cache key (shape + dtype + KV layout + direction,
-/// no arch/backend). All fields are derivable both from an [`OpSpec`]
-/// (tuning time) and from an [`AttnSignature`] (serving time), so the
-/// two sides agree. The contiguous layout and the forward direction both
-/// contribute empty suffixes, keeping pre-layout/pre-direction cache
-/// files valid.
+/// The spec half of a cache key (shape + dtype + KV layout + score
+/// pattern + direction, no arch/backend). All fields are derivable both
+/// from an [`OpSpec`] (tuning time) and from an [`AttnSignature`]
+/// (serving time), so the two sides agree. The contiguous layout, the
+/// dense pattern and the forward direction all contribute empty
+/// suffixes, keeping pre-layout/pre-pattern/pre-direction cache files
+/// valid.
 #[allow(clippy::too_many_arguments)]
 fn key_fields(
     variant: &str,
@@ -73,12 +74,14 @@ fn key_fields(
     kv: usize,
     dtype: &str,
     layout: crate::sketch::spec::KvLayout,
+    pattern: crate::sketch::spec::ScorePattern,
     direction: crate::sketch::spec::Direction,
 ) -> String {
     format!(
-        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}{}{}",
+        "{variant}_{}_qk{qk}_v{vd}_b{batch}_h{qh}kv{kvh}_s{seq}_kv{kv}_{dtype}{}{}{}",
         if causal { "causal" } else { "full" },
         layout.suffix(),
+        pattern.suffix(),
         direction.suffix(),
     )
 }
@@ -97,6 +100,7 @@ pub fn spec_part(spec: &OpSpec) -> String {
         spec.kv_len,
         spec.dtype.as_str(),
         spec.kv_layout,
+        spec.pattern,
         spec.direction,
     )
 }
@@ -116,6 +120,7 @@ pub fn sig_part(sig: &AttnSignature) -> String {
         sig.kv,
         "f16",
         sig.kv_layout,
+        sig.pattern,
         sig.direction,
     )
 }
@@ -511,6 +516,7 @@ mod tests {
             kv: spec.kv_len,
             kv_layout: spec.kv_layout,
             direction: spec.direction,
+            pattern: spec.pattern,
         };
         assert_eq!(spec_part(&spec), sig_part(&sig));
     }
@@ -624,6 +630,23 @@ mod tests {
         // the suffix.
         assert!(!spec_part(&fwd).ends_with("_bwd"));
         assert_eq!(spec_part(&bwd), format!("{}_bwd", spec_part(&fwd)));
+    }
+
+    #[test]
+    fn spec_part_grows_the_pattern_dimension() {
+        use crate::sketch::spec::ScorePattern;
+        let dense = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false);
+        let bs = dense
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        // Dense keeps the exact pre-pattern spelling; sparse patterns
+        // get the suffix (before the direction slot).
+        assert!(!spec_part(&dense).contains("_bs"));
+        assert_eq!(spec_part(&bs), format!("{}_bs64x16", spec_part(&dense)));
+        let wg = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+            .with_pattern(ScorePattern::WindowGlobal { window: 256, n_global: 32 })
+            .unwrap();
+        assert!(spec_part(&wg).ends_with("_wg256g32"));
     }
 
     #[test]

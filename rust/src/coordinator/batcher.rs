@@ -266,6 +266,7 @@ mod tests {
             kv: seq,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
             direction: crate::sketch::spec::Direction::Forward,
+            pattern: crate::sketch::spec::ScorePattern::Dense,
         }
     }
 
@@ -281,6 +282,7 @@ mod tests {
             kv,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
             direction: crate::sketch::spec::Direction::Forward,
+            pattern: crate::sketch::spec::ScorePattern::Dense,
         }
     }
 

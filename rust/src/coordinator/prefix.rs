@@ -569,7 +569,7 @@ impl PrefixCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
+    use crate::sketch::spec::{AttnVariant, Direction, KvLayout, ScorePattern};
 
     fn fam(kv: usize, page: usize) -> FamilyKey {
         FamilyKey {
@@ -583,6 +583,7 @@ mod tests {
             kv,
             kv_layout: KvLayout::Paged { page_size: page },
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         }
     }
 

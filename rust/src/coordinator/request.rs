@@ -4,14 +4,16 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout, ScorePattern};
 
 /// The routing key: everything that identifies a kernel family + problem
 /// shape except the batch dimension (which the batcher chooses). The KV
 /// layout is part of the family — a paged kernel takes a block-table
 /// operand, so paged and contiguous traffic can never share a batch —
 /// and so is the pass direction (a backward kernel consumes dO/lse/delta
-/// and produces gradients).
+/// and produces gradients) and the score pattern (a block-sparse kernel
+/// takes a selection-table operand; window+global bakes its mask
+/// constants into the artifact).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FamilyKey {
     pub variant: AttnVariant,
@@ -24,6 +26,7 @@ pub struct FamilyKey {
     pub kv: usize,
     pub kv_layout: KvLayout,
     pub direction: Direction,
+    pub pattern: ScorePattern,
 }
 
 /// Ingress lane: decode-shaped traffic (short query against a long KV
@@ -86,9 +89,14 @@ impl FamilyKey {
     ///   (8 bytes per page) — dense rounded up to page granularity.
     /// * Sliding: only the trailing `window` rows stay resident; older
     ///   pages are recycled by the pool.
+    ///
+    /// Sparse score patterns then clip the residency to their attended
+    /// rows: block-sparse pins `topk * block` selected rows plus the
+    /// 8-byte selection-table entries; window+global pins the trailing
+    /// window and the leading globals. Dense is charged unchanged.
     pub fn kv_bytes(&self) -> usize {
         let row = (self.qk_dim + self.v_dim) * self.kv_heads * std::mem::size_of::<f32>();
-        match self.kv_layout {
+        let base = match self.kv_layout {
             KvLayout::Contiguous => self.kv * row,
             KvLayout::Paged { page_size } => {
                 let page = page_size.max(1);
@@ -96,6 +104,14 @@ impl FamilyKey {
                 pages * page * row + pages * std::mem::size_of::<i64>()
             }
             KvLayout::Sliding { window } => self.kv.min(window) * row,
+        };
+        match self.pattern {
+            ScorePattern::Dense => base,
+            ScorePattern::BlockSparse { block, topk } => base
+                .min(self.kv.min(topk * block) * row + topk * std::mem::size_of::<i64>()),
+            ScorePattern::WindowGlobal { window, n_global } => {
+                base.min(self.kv.min(window + n_global) * row)
+            }
         }
     }
 
@@ -226,6 +242,7 @@ mod tests {
             kv: 256,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         assert_eq!(f.q_len(), 8 * 256 * 64);
         assert_eq!(f.k_len(), 2 * 256 * 64);
@@ -246,6 +263,7 @@ mod tests {
             kv: 1000, // deliberately not page-aligned
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         let row = (64 + 64) * 4 * 4;
         assert_eq!(dense.kv_bytes(), 1000 * row);
@@ -265,6 +283,44 @@ mod tests {
     }
 
     #[test]
+    fn kv_bytes_charges_sparse_patterns_by_attended_rows() {
+        let dense = FamilyKey {
+            variant: AttnVariant::Mha,
+            causal: false,
+            qk_dim: 64,
+            v_dim: 64,
+            q_heads: 4,
+            kv_heads: 4,
+            seq: 256,
+            kv: 4096,
+            kv_layout: KvLayout::Contiguous,
+            direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
+        };
+        let row = (64 + 64) * 4 * 4;
+        assert_eq!(dense.kv_bytes(), 4096 * row);
+        // 16 selected tiles of 64 rows + the 8-byte selection table.
+        let bs = FamilyKey {
+            pattern: ScorePattern::BlockSparse { block: 64, topk: 16 },
+            ..dense.clone()
+        };
+        assert_eq!(bs.kv_bytes(), 1024 * row + 16 * 8);
+        // Trailing window + leading globals stay pinned.
+        let wg = FamilyKey {
+            causal: true,
+            pattern: ScorePattern::WindowGlobal { window: 512, n_global: 64 },
+            ..dense.clone()
+        };
+        assert_eq!(wg.kv_bytes(), 576 * row);
+        // A selection wider than the cache can't charge more than dense.
+        let wide = FamilyKey {
+            pattern: ScorePattern::BlockSparse { block: 64, topk: 4096 },
+            ..dense.clone()
+        };
+        assert!(wide.kv_bytes() <= dense.kv_bytes());
+    }
+
+    #[test]
     fn lane_classification() {
         let mut f = FamilyKey {
             variant: AttnVariant::Mha,
@@ -277,6 +333,7 @@ mod tests {
             kv: 256,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         assert_eq!(LaneKey::of(&f), LaneKey::Prefill);
         // One query row over a long cache: decode.

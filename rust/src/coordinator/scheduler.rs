@@ -72,6 +72,7 @@ pub fn family_of(sig: &AttnSignature) -> FamilyKey {
         kv: sig.kv,
         kv_layout: sig.kv_layout,
         direction: sig.direction,
+        pattern: sig.pattern,
     }
 }
 
@@ -89,6 +90,7 @@ pub fn sig_of(fam: &FamilyKey, batch: usize) -> AttnSignature {
         kv: fam.kv,
         kv_layout: fam.kv_layout,
         direction: fam.direction,
+        pattern: fam.pattern,
     }
 }
 
@@ -2379,6 +2381,7 @@ mod tests {
             kv,
             kv_layout: crate::sketch::spec::KvLayout::Contiguous,
             direction: crate::sketch::spec::Direction::Forward,
+            pattern: crate::sketch::spec::ScorePattern::Dense,
         }
     }
 

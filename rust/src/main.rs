@@ -67,6 +67,14 @@ USAGE: tlc <generate|generate-all|verify|ablate|tables|tune|serve|profile> [flag
                generates the FlashAttention-2 dQ/dK/dV bundle: three
                verified block programs emitted as one module behind a
                custom-VJP-shaped attention_backward host wrapper
+               [--pattern dense|block-sparse|window-global] [--block N]
+               [--topk N] [--n-global N] [--kv-len N] — block-sparse
+               gathers the top-k selected KV blocks through a selection
+               table (verified against the masked-dense oracle, and
+               bitwise equal to dense when every tile is selected);
+               window-global attends the trailing window plus n-global
+               leading keys; --kv-len decouples the KV length from the
+               query length (cross-attention shapes)
   generate-all [--out-dir python/compile/kernels/generated]
   verify       same operator flags as generate
   ablate       --failure reshape|gemm [operator flags]

@@ -25,7 +25,7 @@
 
 use super::calibrate::Calibration;
 use super::gpu::GpuArch;
-use crate::sketch::spec::{Direction, KvLayout, OpSpec};
+use crate::sketch::spec::{Direction, KvLayout, OpSpec, ScorePattern};
 
 /// Backward-over-forward GEMM ratio per score tile: the FlashAttention-2
 /// backward runs five GEMMs (S recompute, dP, dV, dK, dQ) where the
@@ -173,6 +173,28 @@ impl CostTerms {
     }
 }
 
+/// Attended score-rectangle elements for a spec: the (query, key) score
+/// entries the pattern actually computes, summed over batch and query
+/// heads. Dense counts the full `seq × kv` rectangle (causality is a
+/// schedule optimization, not a pattern — Table 9's eager baseline pays
+/// for the whole rectangle either way); block-sparse counts `topk ×
+/// block` keys per query; window+global counts `window + n_global`.
+/// This is the single rectangle model [`super::nsa::nsa_latency_s`]
+/// prices — any per-element cost model belongs on top of this, not
+/// duplicated beside it.
+pub fn score_rect_elems(spec: &OpSpec) -> f64 {
+    let bh = (spec.batch * spec.num_q_heads) as f64;
+    let kv = spec.kv_len as f64;
+    let per_query = match spec.pattern {
+        ScorePattern::Dense => kv,
+        ScorePattern::BlockSparse { block, topk } => ((topk * block) as f64).min(kv),
+        ScorePattern::WindowGlobal { window, n_global } => {
+            ((window + n_global) as f64).min(kv)
+        }
+    };
+    bh * spec.seq_len as f64 * per_query
+}
+
 /// Mean number of KV tiles visited per q-block under causal block
 /// skipping: mean over q-blocks of ceil((i+1)*BM / BN).
 fn mean_causal_kv_tiles(seq: usize, kv: usize, bm: usize, bn: usize) -> f64 {
@@ -306,6 +328,21 @@ pub fn cost_terms(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> CostTerms 
         KvLayout::Sliding { window } => nkv.min((window as f64 / bn as f64).ceil() + 1.0),
         _ => nkv,
     };
+    // Score-pattern clip: sparse patterns visit only their score
+    // rectangle's tiles. Block-sparse streams exactly the selected
+    // tiles; window+global streams the trailing window (plus one
+    // boundary tile) and the leading global tiles. The Dense arm is an
+    // arithmetic no-op — the identity-recombine tests pin the dense
+    // bits, so no float op may touch that path.
+    let nkv = match spec.pattern {
+        ScorePattern::Dense => nkv,
+        ScorePattern::BlockSparse { block, topk } => {
+            nkv.min(((topk * block) as f64 / bn as f64).ceil().max(1.0))
+        }
+        ScorePattern::WindowGlobal { window, n_global } => nkv.min(
+            (window as f64 / bn as f64).ceil() + 1.0 + (n_global as f64 / bn as f64).ceil(),
+        ),
+    };
 
     // Per-KV-tile mma work (both GEMMs; the backward's five-GEMM
     // recompute scales it by [`BWD_GEMM_RATIO`]). Times are aggregate:
@@ -355,6 +392,25 @@ pub fn cost_terms(spec: &OpSpec, arch: &GpuArch, sched: &Schedule) -> CostTerms 
         KvLayout::Sliding { window } => {
             kv_bytes_head =
                 kv_bytes_head.min((window as f64 + bn as f64) * gemm_width * e);
+            causal_reread_half = 1.0;
+        }
+    }
+    // Score-pattern traffic clip mirrors the tile clip: only attended
+    // K/V rows stream through, plus one 8-byte selection-table entry
+    // per gathered tile for block-sparse (the same shape as the paged
+    // block-table term). Dense is untouched, bit-for-bit.
+    match spec.pattern {
+        ScorePattern::Dense => {}
+        ScorePattern::BlockSparse { block, topk } => {
+            let attended = ((topk * block) as f64).min(kv);
+            let sel_tiles = ((topk * block) as f64 / bn as f64).ceil();
+            kv_bytes_head = kv_bytes_head.min(attended * gemm_width * e) + sel_tiles * 8.0;
+        }
+        ScorePattern::WindowGlobal { window, n_global } => {
+            let attended = ((window + n_global) as f64 + bn as f64).min(kv);
+            kv_bytes_head = kv_bytes_head.min(attended * gemm_width * e);
+            // Window rows are all read at full rate — the causal reread
+            // halving is a dense-sweep artifact (same as Sliding).
             causal_reread_half = 1.0;
         }
     }
@@ -509,6 +565,52 @@ mod tests {
         assert!(
             clipped.seconds < full.seconds,
             "a 512-window sweep of a 16k context must beat the full causal sweep"
+        );
+        assert!(clipped.dram_gb < full.dram_gb);
+    }
+
+    #[test]
+    fn score_rect_elems_clips_per_pattern() {
+        let dense = mha(4096, 64, false);
+        let bh = (dense.batch * dense.num_q_heads) as f64;
+        assert_eq!(score_rect_elems(&dense), bh * 4096.0 * 4096.0);
+        let bs = dense
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        assert_eq!(score_rect_elems(&bs), bh * 4096.0 * 1024.0);
+        let wg = mha(4096, 64, true)
+            .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+            .unwrap();
+        assert_eq!(score_rect_elems(&wg), bh * 4096.0 * 576.0);
+    }
+
+    #[test]
+    fn sparse_patterns_price_below_dense_at_long_context() {
+        let arch = GpuArch::a100();
+        let sched = schedules::ours(&arch, 64, crate::tl::types::DType::F16);
+        let dense = mha(16384, 64, false);
+        let bs = dense
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        let full = estimate(&dense, &arch, &sched);
+        let clipped = estimate(&bs, &arch, &sched);
+        assert!(
+            clipped.seconds < full.seconds / 2.0,
+            "16-of-256-tile selection must beat the dense sweep: {} vs {}",
+            clipped.seconds,
+            full.seconds
+        );
+        assert!(clipped.dram_gb < full.dram_gb);
+
+        let causal = mha(16384, 64, true);
+        let wg = causal
+            .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+            .unwrap();
+        let full = estimate(&causal, &arch, &sched);
+        let clipped = estimate(&wg, &arch, &sched);
+        assert!(
+            clipped.seconds < full.seconds,
+            "a 512-window + 64-global sweep must beat the full causal sweep"
         );
         assert!(clipped.dram_gb < full.dram_gb);
     }

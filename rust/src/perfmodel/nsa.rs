@@ -10,6 +10,7 @@
 //! into one online-softmax pass over gathered blocks, removing ~21% of
 //! the per-element work (paper: 1.24-1.33x).
 
+use super::cost::score_rect_elems;
 use super::gpu::GpuArch;
 use crate::sketch::spec::OpSpec;
 
@@ -18,10 +19,13 @@ use crate::sketch::spec::OpSpec;
 const NAIVE_ELEM_COST_A100: f64 = 6.3e-9;
 const BLOCKED_ELEM_COST_A100: f64 = 5.0e-9;
 
+/// Table 9 latency: the per-element calibration applied to the shared
+/// score-rectangle model ([`score_rect_elems`]) — NSA specs carry a
+/// dense rectangle (the eager baseline materializes all of it), and a
+/// [`crate::sketch::spec::ScorePattern`]-restricted spec is priced on
+/// its clipped rectangle by the same formula.
 pub fn nsa_latency_s(spec: &OpSpec, arch: &GpuArch, blocked: bool) -> f64 {
-    let elems = (spec.batch * spec.num_q_heads) as f64
-        * spec.seq_len as f64
-        * spec.kv_len as f64;
+    let elems = score_rect_elems(spec);
     let a100_bw = 2039.0;
     let scale = a100_bw / arch.mem_bw_gbs;
     let cost = if blocked { BLOCKED_ELEM_COST_A100 } else { NAIVE_ELEM_COST_A100 };
@@ -47,6 +51,20 @@ mod tests {
         // Speedup in the paper's 1.24-1.33x band.
         assert!((1.15..1.40).contains(&(naive512 / ours512)));
         assert!((1.15..1.40).contains(&(naive16k / ours16k)));
+    }
+
+    #[test]
+    fn latency_routes_through_the_pattern_clipped_rectangle() {
+        use crate::sketch::spec::{AttnVariant, ScorePattern};
+        let arch = GpuArch::a100();
+        let dense = OpSpec::benchmark(AttnVariant::Mha, 4096, 128, false);
+        let bs = dense
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        let full = nsa_latency_s(&dense, &arch, true);
+        let clipped = nsa_latency_s(&bs, &arch, true);
+        // 16 tiles × 64 rows of 4096 keys -> exactly a 4x smaller rectangle.
+        assert!((full / clipped - 4.0).abs() < 1e-9, "{}", full / clipped);
     }
 
     #[test]

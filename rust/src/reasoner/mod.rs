@@ -33,7 +33,7 @@ pub mod tiling;
 use std::collections::BTreeMap;
 
 use crate::perfmodel::gpu::GpuArch;
-use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec, ScorePattern};
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use crate::tl::expr::Expr;
 use crate::tl::types::{DType, MemSpace};
@@ -121,6 +121,23 @@ pub fn reason_with_tiling(
             stmts.push(param("page_size", page as i64));
         }
         KvLayout::Sliding { window } => stmts.push(param("window", window as i64)),
+    }
+    // Score-pattern parameters. Block-sparse converts the element-level
+    // (block, topk) budget into a count of BN-row tiles: the streaming
+    // loop visits exactly `sel_topk` entries of the selection table, so
+    // with topk covering every block the loop degenerates to the dense
+    // sweep (the ⊇-containment law `tests/patterns.rs` pins bitwise).
+    match spec.pattern {
+        ScorePattern::Dense => {}
+        ScorePattern::BlockSparse { block, topk } => {
+            let total_tiles = spec.kv_len.div_ceil(tiling.bn).max(1);
+            let sel_tiles = (topk * block).div_ceil(tiling.bn).clamp(1, total_tiles);
+            stmts.push(param("sel_topk", sel_tiles as i64));
+        }
+        ScorePattern::WindowGlobal { window, n_global } => {
+            stmts.push(param("window", window as i64));
+            stmts.push(param("n_global", n_global as i64));
+        }
     }
 
     // 2. Allocations, in hierarchy order.
@@ -364,8 +381,12 @@ impl<'a> Ctx<'a> {
                 };
                 let mut out = vec![mask(ComputeOp::CausalMask)];
                 // Sliding layout: also blind scores trailing the query by
-                // `window` or more (same Lq/Lk coordinates).
-                if matches!(self.spec.kv_layout, KvLayout::Sliding { .. }) {
+                // `window` or more (same Lq/Lk coordinates). WindowGlobal
+                // reuses the same mask op; its `n_global` binding exempts
+                // the leading global keys (engines read both bindings).
+                if matches!(self.spec.kv_layout, KvLayout::Sliding { .. })
+                    || matches!(self.spec.pattern, ScorePattern::WindowGlobal { .. })
+                {
                     out.push(mask(ComputeOp::WindowMask));
                 }
                 out
@@ -819,19 +840,103 @@ mod tests {
     fn nsa_keeps_indirect_coordinates() {
         let spec = OpSpec::nsa(4096);
         let r = reasoned(&spec, &LlmProfile::deepseek_v3());
-        let mut saw_sel = false;
+        let mut sel_gathers = 0;
         r.program.walk(|s| {
             if let Stmt::Copy { coord, .. } = s {
-                if coord.iter().any(|(_, e)| {
-                    let mut syms = Vec::new();
-                    e.symbols(&mut syms);
-                    syms.contains(&"sel_idx".to_string())
-                }) {
-                    saw_sel = true;
+                for (_, e) in coord {
+                    if let Some((table, _)) = e.gather() {
+                        assert_eq!(table, "sel_table", "NSA indirection must gather");
+                        sel_gathers += 1;
+                    }
                 }
             }
         });
-        assert!(saw_sel, "NSA selected-block indirection lost");
+        assert!(sel_gathers >= 2, "NSA selected-block indirection lost");
+        // The NSA params stay bound *and* consumed (loop bounds).
+        assert!(r.program.params().contains_key("num_selected"));
+        assert!(r.program.params().contains_key("window"));
+    }
+
+    #[test]
+    fn block_sparse_reasons_to_a_sel_table_gather_loop() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        let r = reasoned(&spec, &LlmProfile::deepseek_v3());
+        // sel_topk = ceil(16*64 / BN) tiles, clipped to kv_len/BN.
+        let params = r.program.params();
+        let bn = params["BN"] as usize;
+        let expect = (16usize * 64).div_ceil(bn).min(4096usize.div_ceil(bn)) as i64;
+        assert_eq!(params.get("sel_topk"), Some(&expect));
+        // The streaming loop runs to sel_topk and gathers via sel_table.
+        let mut saw_loop = false;
+        let mut gathers = 0;
+        r.program.walk(|s| match s {
+            Stmt::For { end, .. } => {
+                let mut syms = Vec::new();
+                end.symbols(&mut syms);
+                if syms.contains(&"sel_topk".to_string()) {
+                    saw_loop = true;
+                }
+            }
+            Stmt::Copy { coord, .. } => {
+                for (_, e) in coord {
+                    if let Some((table, _)) = e.gather() {
+                        assert_eq!(table, "sel_table");
+                        gathers += 1;
+                    }
+                }
+            }
+            _ => {}
+        });
+        assert!(saw_loop, "loop bound must be sel_topk");
+        assert!(gathers >= 2, "K and V must gather through sel_table");
+        // No prefetch: the next selected tile's index is data-dependent.
+        r.program.walk(|s| {
+            if let Stmt::If { body, .. } = s {
+                assert!(
+                    !body.iter().any(|b| matches!(b, Stmt::Copy { .. })),
+                    "no prefetch through a selection table"
+                );
+            }
+        });
+        // Roundtrips through text like every reasoned program.
+        let text = print_program(&r.program);
+        let back = parse_program(&text).unwrap();
+        assert_eq!(r.program.stmts, back.stmts);
+    }
+
+    #[test]
+    fn window_global_reasons_to_masks_with_n_global() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+            .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+            .unwrap();
+        assert!(spec.causal, "window+global implies causal");
+        let r = reasoned(&spec, &LlmProfile::deepseek_v3());
+        let params = r.program.params();
+        assert_eq!(params.get("window"), Some(&512));
+        assert_eq!(params.get("n_global"), Some(&64));
+        let mut saw_causal = false;
+        let mut saw_window = false;
+        r.program.walk(|s| match s {
+            Stmt::Compute { op: ComputeOp::CausalMask, .. } => saw_causal = true,
+            Stmt::Compute { op: ComputeOp::WindowMask, coord, .. } => {
+                assert!(coord.iter().any(|(n, _)| n == "Lq"));
+                saw_window = true;
+            }
+            _ => {}
+        });
+        assert!(saw_causal && saw_window, "both masks must be present");
+        // Mask-only: no tile-skip guard (global keys keep every leading
+        // tile live), and no gathers — the KV stream stays contiguous.
+        r.program.walk(|s| {
+            if let Stmt::Copy { coord, .. } = s {
+                assert!(coord.iter().all(|(_, e)| e.gather().is_none()));
+            }
+        });
+        let text = print_program(&r.program);
+        let back = parse_program(&text).unwrap();
+        assert_eq!(r.program.stmts, back.stmts);
     }
 
     #[test]

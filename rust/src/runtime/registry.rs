@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{Executable, Runtime};
 use crate::autotune::cache::{self as tune_cache, TuneCache};
-use crate::sketch::spec::{AttnVariant, Direction, KvLayout};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout, ScorePattern};
 
 /// One manifest entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -57,6 +57,15 @@ impl ArtifactMeta {
             .get("dir")
             .and_then(|v| Direction::parse_field(v))
             .unwrap_or(Direction::Forward)
+    }
+
+    /// Score pattern from the optional `pattern=` manifest field (absent
+    /// or unparseable means dense — pre-pattern manifests stay valid).
+    pub fn pattern(&self) -> ScorePattern {
+        self.fields
+            .get("pattern")
+            .and_then(|v| ScorePattern::parse_field(v))
+            .unwrap_or(ScorePattern::Dense)
     }
 }
 
@@ -115,6 +124,10 @@ pub struct AttnSignature {
     /// Pass direction: a backward executable takes dO/lse/delta operands
     /// and produces gradients, so forward traffic can never route to it.
     pub direction: Direction,
+    /// Score pattern: a block-sparse executable takes a selection-table
+    /// operand, a window+global one bakes its mask constants in, so
+    /// neither can serve dense traffic (or vice versa).
+    pub pattern: ScorePattern,
 }
 
 impl AttnSignature {
@@ -131,6 +144,7 @@ impl AttnSignature {
             kv: m.usize_field("kv")?,
             kv_layout: m.kv_layout(),
             direction: m.direction(),
+            pattern: m.pattern(),
         })
     }
 }
@@ -318,6 +332,7 @@ mod tests {
             kv: 4096,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         assert_eq!(reg.find(&sig).unwrap().id, "v1", "find keeps first-match semantics");
         assert_eq!(reg.find_best(&sig).unwrap().id, "v2", "find_best follows the tune cache");
@@ -368,6 +383,7 @@ mod tests {
             kv: 4096,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         assert_eq!(
             reg.find_best(&sig).unwrap().id,
@@ -397,6 +413,7 @@ mod tests {
             kv: 256,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         assert_eq!(
             reg.find(&sig).map(|m| &m.id),
@@ -420,6 +437,29 @@ mod tests {
             tune_cache::sig_part(&dense),
             tune_cache::sig_part(&paged),
             "tune cache keys grow the layout dimension"
+        );
+    }
+
+    #[test]
+    fn pattern_field_distinguishes_signatures() {
+        let text = "artifact dense file=a.hlo.txt kind=attention variant=mha causal=0 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64\n\
+                    artifact bs file=b.hlo.txt kind=attention variant=mha causal=0 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64 pattern=bs64x16\n\
+                    artifact wg file=c.hlo.txt kind=attention variant=mha causal=1 \
+                    batch=1 q_heads=4 kv_heads=4 seq=256 kv=256 qk=64 vd=64 pattern=wg512g64\n";
+        let metas = parse_manifest(text).unwrap();
+        let dense = AttnSignature::from_meta(&metas[0]).unwrap();
+        let bs = AttnSignature::from_meta(&metas[1]).unwrap();
+        let wg = AttnSignature::from_meta(&metas[2]).unwrap();
+        assert_eq!(dense.pattern, ScorePattern::Dense, "absent field means dense");
+        assert_eq!(bs.pattern, ScorePattern::BlockSparse { block: 64, topk: 16 });
+        assert_eq!(wg.pattern, ScorePattern::WindowGlobal { window: 512, n_global: 64 });
+        assert_ne!(dense, bs, "pattern is part of the signature");
+        assert_ne!(
+            tune_cache::sig_part(&dense),
+            tune_cache::sig_part(&bs),
+            "tune cache keys grow the pattern dimension"
         );
     }
 

@@ -18,7 +18,7 @@ pub mod spec;
 use crate::tl::ast::{ComputeOp, Stmt, TensorRef, TlProgram};
 use crate::tl::expr::Expr;
 use crate::tl::types::MemSpace;
-use spec::{AttnVariant, Direction, OpSpec};
+use spec::{AttnVariant, Direction, OpSpec, ScorePattern};
 
 /// Which gradient a backward block program produces. The FlashAttention-2
 /// backward splits into three single-output block programs so each sweep
@@ -83,7 +83,13 @@ pub fn generate_sketch(spec: &OpSpec) -> TlProgram {
     }
     match spec.variant {
         AttnVariant::Nsa => nsa_sketch(spec),
-        _ => flash_sketch(spec),
+        _ => match spec.pattern {
+            ScorePattern::BlockSparse { .. } => block_sparse_sketch(spec),
+            // WindowGlobal shares the dense streaming flow; the window+
+            // global mask is a reasoner-level refinement (stage 1b), not
+            // a dataflow change.
+            ScorePattern::Dense | ScorePattern::WindowGlobal { .. } => flash_sketch(spec),
+        },
     }
 }
 
@@ -166,6 +172,70 @@ fn flash_sketch(spec: &OpSpec) -> TlProgram {
     TlProgram::new(format!("{}_sketch", spec.kernel_name()), stmts)
 }
 
+/// Block-sparse (NSA-style top-k selection) execution flow: identical to
+/// the dense flash sweep except that the KV streaming loop visits only
+/// the `sel_topk` selected tiles, and every K/V tile load is *indirect*
+/// through the `sel_table` selection table (an `Expr::Idx` gather — the
+/// same coordinate machinery the paged-KV layout uses for its block
+/// table). Tiles never selected are never touched, which is where the
+/// O(n·k)-vs-O(n²) win comes from.
+fn block_sparse_sketch(spec: &OpSpec) -> TlProgram {
+    debug_assert!(!spec.causal, "with_pattern forbids causal block-sparse");
+    let mut stmts: Vec<Stmt> = Vec::new();
+    stmts.push(copy("Q", MemSpace::Global, MemSpace::Shared));
+    stmts.push(copy("Q", MemSpace::Shared, MemSpace::Register));
+
+    let gather_copy = |tensor: &str| Stmt::Copy {
+        tensor: tensor.into(),
+        shape: None,
+        coord: vec![("L".into(), Expr::idx("sel_table", Expr::sym("i")))],
+        src: MemSpace::Global,
+        dst: MemSpace::Shared,
+    };
+    let body: Vec<Stmt> = vec![
+        gather_copy("K"),
+        gather_copy("V"),
+        gemm(&[TensorRef::new("Q"), TensorRef::t("K")], "S", false),
+        Stmt::Compute {
+            op: ComputeOp::Multiply,
+            inputs: vec![TensorRef::new("S"), TensorRef::new("softmax_scale")],
+            coord: vec![],
+            with: vec![],
+            output: Some("S".into()),
+            accumulate: false,
+            new_var: true,
+        },
+        Stmt::Compute {
+            op: ComputeOp::Softmax,
+            inputs: vec![TensorRef::new("S")],
+            coord: vec![],
+            with: vec!["m".into(), "l".into()],
+            output: None,
+            accumulate: false,
+            new_var: false,
+        },
+        gemm(&[TensorRef::new("S"), TensorRef::new("V")], "O", true),
+    ];
+    stmts.push(Stmt::For {
+        var: "i".into(),
+        start: Expr::int(0),
+        end: Expr::sym("sel_topk"),
+        body,
+    });
+
+    stmts.push(Stmt::Compute {
+        op: ComputeOp::Divide,
+        inputs: vec![TensorRef::new("O"), TensorRef::new("l")],
+        coord: vec![],
+        with: vec![],
+        output: Some("O".into()),
+        accumulate: false,
+        new_var: true,
+    });
+    stmts.push(copy("O", MemSpace::Register, MemSpace::Global));
+    TlProgram::new(format!("{}_sketch", spec.kernel_name()), stmts)
+}
+
 /// NSA sketch (Appendix A, Table 9): simplified Native Sparse Attention
 /// with two streamed branches — top-k *selected* KV blocks (indices
 /// computed on the compressed representation outside the kernel) and a
@@ -179,12 +249,14 @@ fn nsa_sketch(spec: &OpSpec) -> TlProgram {
     let branch = |kname: &str, vname: &str, nblocks: Expr, indirect: bool| -> Stmt {
         let mut body = vec![
             if indirect {
-                // Indirect block load: the block index comes from the
-                // selection table produced by the compression branch.
+                // Indirect block load: the block index is a *gather*
+                // through the selection table produced by the compression
+                // branch — `sel_table[i]`, not a free symbol, so engines
+                // and backends have an actual consumer to wire up.
                 Stmt::Copy {
                     tensor: kname.into(),
                     shape: None,
-                    coord: vec![("L".into(), Expr::sym("sel_idx"))],
+                    coord: vec![("L".into(), Expr::idx("sel_table", Expr::sym("i")))],
                     src: MemSpace::Global,
                     dst: MemSpace::Shared,
                 }
@@ -195,7 +267,7 @@ fn nsa_sketch(spec: &OpSpec) -> TlProgram {
                 Stmt::Copy {
                     tensor: vname.into(),
                     shape: None,
-                    coord: vec![("L".into(), Expr::sym("sel_idx"))],
+                    coord: vec![("L".into(), Expr::idx("sel_table", Expr::sym("i")))],
                     src: MemSpace::Global,
                     dst: MemSpace::Shared,
                 }
@@ -570,6 +642,76 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn block_sparse_sketch_gathers_through_sel_table() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        let sk = generate_sketch(&spec);
+        let mut gathers = 0;
+        sk.walk(|s| {
+            if let Stmt::Copy { coord, .. } = s {
+                for (_, e) in coord {
+                    if let Some((table, _)) = e.gather() {
+                        assert_eq!(table, "sel_table");
+                        gathers += 1;
+                    }
+                }
+            }
+        });
+        assert_eq!(gathers, 2, "both K and V tile loads must be indirect");
+        // The streaming loop runs over the selected tiles, not kv_len/BN.
+        let mut saw_topk_loop = false;
+        sk.walk(|s| {
+            if let Stmt::For { end, .. } = s {
+                let mut syms = Vec::new();
+                end.symbols(&mut syms);
+                if syms.contains(&"sel_topk".to_string()) {
+                    saw_topk_loop = true;
+                }
+            }
+        });
+        assert!(saw_topk_loop, "loop bound must be sel_topk");
+        // And it roundtrips through the printer/parser like every sketch.
+        let text = print_program(&sk);
+        let re = parse_program(&text).unwrap();
+        assert_eq!(sk.stmts, re.stmts);
+        assert!(!sk.is_reasoned());
+    }
+
+    #[test]
+    fn window_global_sketch_shares_the_dense_flow() {
+        // WindowGlobal is mask-only at sketch level: same statement
+        // skeleton as a causal dense sketch (the reasoner adds the
+        // n_global-aware window mask in stage 1b).
+        let wg = generate_sketch(
+            &OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+                .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+                .unwrap(),
+        );
+        let dense = generate_sketch(&OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true));
+        assert_eq!(wg.stmts, dense.stmts, "only the name differs at sketch level");
+        assert!(wg.name.contains("_wg512g64_"), "{}", wg.name);
+    }
+
+    #[test]
+    fn nsa_selected_branch_gathers_through_sel_table() {
+        let sk = generate_sketch(&OpSpec::nsa(4096));
+        let mut gathers = 0;
+        sk.walk(|s| {
+            if let Stmt::Copy { coord, .. } = s {
+                for (_, e) in coord {
+                    if let Some((table, inner)) = e.gather() {
+                        assert_eq!(table, "sel_table");
+                        assert_eq!(*inner, Expr::sym("i"));
+                        gathers += 1;
+                    }
+                }
+            }
+        });
+        assert_eq!(gathers, 2, "K_sel and V_sel loads must gather via sel_table");
     }
 
     #[test]

@@ -184,6 +184,112 @@ impl fmt::Display for Direction {
     }
 }
 
+/// Which score-matrix entries the operator computes. Orthogonal to the
+/// *physical* [`KvLayout`]: a pattern decides which logical KV tiles
+/// participate in the softmax, a layout decides where their bytes live.
+/// The generation pipeline is pattern-polymorphic the same way it is
+/// layout-polymorphic — the dense pattern keeps the empty suffix on
+/// every naming/caching surface so pre-pattern artifacts stay valid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum ScorePattern {
+    /// Every (q, k) pair is scored (the paper's benchmark pattern).
+    #[default]
+    Dense,
+    /// NSA-style block selection: each query block attends only the
+    /// `topk` selected KV blocks of `block` rows each, addressed through
+    /// a host-supplied selection table (`sel_table`). Selecting every
+    /// block with the identity table degenerates to [`Self::Dense`]
+    /// bit-for-bit.
+    BlockSparse { block: usize, topk: usize },
+    /// Sliding window + global sink tokens (Longformer/StreamingLLM
+    /// shape): position `k` is attended iff `k < n_global` or
+    /// `k > q - window` (causal). Expressed as a mask over the dense
+    /// sweep, so it composes with any contiguous layout.
+    WindowGlobal { window: usize, n_global: usize },
+}
+
+impl ScorePattern {
+    /// Stable identifier fragment (`""` for dense — the same
+    /// empty-suffix convention as [`KvLayout`] / [`Direction`]).
+    pub fn suffix(&self) -> String {
+        match self {
+            ScorePattern::Dense => String::new(),
+            ScorePattern::BlockSparse { block, topk } => format!("_bs{block}x{topk}"),
+            ScorePattern::WindowGlobal { window, n_global } => {
+                format!("_wg{window}g{n_global}")
+            }
+        }
+    }
+
+    /// Manifest-field spelling (round-trips through [`Self::parse_field`]).
+    pub fn field(&self) -> String {
+        match self {
+            ScorePattern::Dense => "dense".to_string(),
+            ScorePattern::BlockSparse { block, topk } => format!("bs{block}x{topk}"),
+            ScorePattern::WindowGlobal { window, n_global } => {
+                format!("wg{window}g{n_global}")
+            }
+        }
+    }
+
+    /// Parse the `pattern=` manifest field produced by [`Self::field`]
+    /// (`dense`, `bs64x16`, `wg512g64`).
+    pub fn parse_field(s: &str) -> Option<ScorePattern> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "dense" {
+            return Some(ScorePattern::Dense);
+        }
+        if let Some(rest) = s.strip_prefix("bs") {
+            let (b, t) = rest.split_once('x')?;
+            return Some(ScorePattern::BlockSparse {
+                block: b.parse().ok()?,
+                topk: t.parse().ok()?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("wg") {
+            let (w, g) = rest.split_once('g')?;
+            return Some(ScorePattern::WindowGlobal {
+                window: w.parse().ok()?,
+                n_global: g.parse().ok()?,
+            });
+        }
+        None
+    }
+
+    /// `(block, topk)` for the block-sparse pattern (`None` otherwise).
+    pub fn block_topk(&self) -> Option<(usize, usize)> {
+        match self {
+            ScorePattern::BlockSparse { block, topk } => Some((*block, *topk)),
+            _ => None,
+        }
+    }
+
+    /// `(window, n_global)` for the window+global pattern.
+    pub fn window_global(&self) -> Option<(usize, usize)> {
+        match self {
+            ScorePattern::WindowGlobal { window, n_global } => Some((*window, *n_global)),
+            _ => None,
+        }
+    }
+
+    /// KV positions a query can attend at most, out of `kv_len` — the
+    /// score-rectangle width the cost model and the serving KV-residency
+    /// accounting both clip by.
+    pub fn max_attended(&self, kv_len: usize) -> usize {
+        match self {
+            ScorePattern::Dense => kv_len,
+            ScorePattern::BlockSparse { block, topk } => kv_len.min(block * topk),
+            ScorePattern::WindowGlobal { window, n_global } => kv_len.min(window + n_global),
+        }
+    }
+}
+
+impl fmt::Display for ScorePattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.field())
+    }
+}
+
 /// One attention-operator instance: the input to sketch generation and to
 /// the performance model, and the cache key for compiled artifacts.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -217,6 +323,9 @@ pub struct OpSpec {
     pub kv_layout: KvLayout,
     /// Forward or backward pass (forward = the paper's benchmark setup).
     pub direction: Direction,
+    /// Which score-matrix entries are computed (dense, block-sparse
+    /// selection, window+global mask).
+    pub pattern: ScorePattern,
 }
 
 /// Paper benchmark constants (§4.1): hidden dim 2048, total tokens 16k.
@@ -254,6 +363,7 @@ impl OpSpec {
             nsa_window: 0,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         }
     }
 
@@ -300,7 +410,8 @@ impl OpSpec {
 
     /// Build a spec from the CLI operator flags (`--variant`, `--seq`,
     /// `--head-dim`, `--causal`, `--kv-layout`, `--page-size`,
-    /// `--window`) — the one parser shared by the
+    /// `--window`, `--pattern`, `--block`, `--topk`, `--n-global`,
+    /// `--kv-len`) — the one parser shared by the
     /// `tlc generate|verify|ablate|tune` subcommands.
     pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self, String> {
         let variant = AttnVariant::parse(args.get_or("variant", "mha"))
@@ -309,6 +420,7 @@ impl OpSpec {
         let head_dim = args.get_usize("head-dim", 64)?;
         let causal = args.get_bool("causal");
         let layout = kv_layout_from_cli(args)?;
+        let pattern = score_pattern_from_cli(args)?;
         let direction = if args.get_bool("backward") {
             Direction::Backward
         } else {
@@ -337,6 +449,10 @@ impl OpSpec {
         }
         spec.kv_layout = layout;
         spec.direction = direction;
+        spec = spec.with_pattern(pattern)?;
+        if let Some(kv_len) = args.get_opt_usize("kv-len")? {
+            spec = spec.with_kv_len(kv_len)?;
+        }
         Ok(spec)
     }
 
@@ -352,6 +468,85 @@ impl OpSpec {
         let mut s = self.clone();
         s.direction = direction;
         s
+    }
+
+    /// Clone of this spec with a different score pattern, validating the
+    /// combinations the generation layers support. `WindowGlobal`
+    /// implies the causal mask (the window trails each query);
+    /// `BlockSparse` is a non-causal gather over selected tiles and
+    /// rides only the contiguous forward path today.
+    pub fn with_pattern(&self, pattern: ScorePattern) -> Result<Self, String> {
+        let mut s = self.clone();
+        match pattern {
+            ScorePattern::Dense => {}
+            ScorePattern::BlockSparse { block, topk } => {
+                if block == 0 || topk == 0 {
+                    return Err("block-sparse needs positive --block and --topk".into());
+                }
+                if s.variant == AttnVariant::Nsa {
+                    return Err("--pattern is not supported for the NSA variant (its \
+                                selection branch already carries the pattern)"
+                        .into());
+                }
+                if s.causal {
+                    return Err("--pattern block-sparse requires a non-causal spec \
+                                (selected tiles carry no causal coupling)"
+                        .into());
+                }
+                if s.kv_layout != KvLayout::Contiguous {
+                    return Err("--pattern block-sparse requires --kv-layout contiguous \
+                                (the selection table is already an indirect layout)"
+                        .into());
+                }
+                if s.direction == Direction::Backward {
+                    return Err("--pattern block-sparse has no backward path yet".into());
+                }
+            }
+            ScorePattern::WindowGlobal { window, n_global } => {
+                if window == 0 {
+                    return Err("window+global needs a positive --window".into());
+                }
+                if s.variant == AttnVariant::Nsa {
+                    return Err("--pattern is not supported for the NSA variant (its \
+                                selection branch already carries the pattern)"
+                        .into());
+                }
+                if s.kv_layout != KvLayout::Contiguous {
+                    return Err("--pattern window-global requires --kv-layout contiguous \
+                                (use --kv-layout sliding for the physical window cache)"
+                        .into());
+                }
+                if s.direction == Direction::Backward {
+                    return Err("--pattern window-global has no backward path yet".into());
+                }
+                let _ = n_global;
+                s.causal = true; // the window trails each query position
+            }
+        }
+        s.pattern = pattern;
+        Ok(s)
+    }
+
+    /// Clone of this spec with a decoupled KV length (cross-attention:
+    /// queries and keys index different sequences, so there is no causal
+    /// coupling between the two axes).
+    pub fn with_kv_len(&self, kv_len: usize) -> Result<Self, String> {
+        if kv_len == 0 {
+            return Err("--kv-len must be positive".into());
+        }
+        if kv_len != self.seq_len {
+            if self.causal {
+                return Err("--kv-len != --seq requires a non-causal spec (cross-attention \
+                            has no causal coupling between the q and kv axes)"
+                    .into());
+            }
+            if self.direction == Direction::Backward {
+                return Err("cross-attention (--kv-len) has no backward path yet".into());
+            }
+        }
+        let mut s = self.clone();
+        s.kv_len = kv_len;
+        Ok(s)
     }
 
     /// Q-heads per KV head (1 for MHA, >1 for GQA, all for MQA).
@@ -416,25 +611,34 @@ impl OpSpec {
     /// (suffix-free) spelling.
     pub fn kernel_name(&self) -> String {
         format!(
-            "{}_hd{}_{}_{}{}{}",
+            "{}_hd{}_{}_{}{}{}{}",
             self.variant,
             self.head_dim,
             if self.causal { "causal" } else { "full" },
             self.dtype,
             self.kv_layout.suffix(),
+            self.pattern.suffix(),
             self.direction.suffix(),
         )
     }
 
     /// Fully-shaped artifact identifier (one HLO module per shape).
+    /// Self-attention (`kv_len == seq_len`) keeps the historical
+    /// spelling; cross-attention appends the decoupled KV length.
     pub fn artifact_name(&self) -> String {
+        let cross = if self.kv_len != self.seq_len {
+            format!("_kv{}", self.kv_len)
+        } else {
+            String::new()
+        };
         format!(
-            "{}_b{}_h{}kv{}_s{}",
+            "{}_b{}_h{}kv{}_s{}{}",
             self.kernel_name(),
             self.batch,
             self.num_q_heads,
             self.num_kv_heads,
-            self.seq_len
+            self.seq_len,
+            cross,
         )
     }
 }
@@ -462,6 +666,36 @@ pub fn kv_layout_from_cli(args: &crate::util::cli::Args) -> Result<KvLayout, Str
         }
         other => KvLayout::parse_field(other)
             .ok_or_else(|| format!("unknown --kv-layout `{other}` (contiguous|paged|sliding)")),
+    }
+}
+
+/// Parse the `--pattern dense|block-sparse|window-global` flag family
+/// (`--block`/`--topk` for block-sparse, `--window`/`--n-global` for
+/// window+global). Also accepts the compact manifest spellings
+/// (`bs64x16`, `wg512g64`).
+pub fn score_pattern_from_cli(args: &crate::util::cli::Args) -> Result<ScorePattern, String> {
+    let name = args.get_or("pattern", "dense").to_ascii_lowercase();
+    match name.as_str() {
+        "dense" => Ok(ScorePattern::Dense),
+        "block-sparse" | "blocksparse" | "bs" => {
+            let block = args.get_usize("block", 64)?;
+            let topk = args.get_usize("topk", 16)?;
+            if block == 0 || topk == 0 {
+                return Err("--block and --topk must be positive".into());
+            }
+            Ok(ScorePattern::BlockSparse { block, topk })
+        }
+        "window-global" | "windowglobal" | "wg" => {
+            let window = args.get_usize("window", 512)?;
+            let n_global = args.get_usize("n-global", 64)?;
+            if window == 0 {
+                return Err("--window must be positive".into());
+            }
+            Ok(ScorePattern::WindowGlobal { window, n_global })
+        }
+        other => ScorePattern::parse_field(other).ok_or_else(|| {
+            format!("unknown --pattern `{other}` (dense|block-sparse|window-global)")
+        }),
     }
 }
 
@@ -571,6 +805,79 @@ mod tests {
         let b = f.with_direction(Direction::Backward);
         assert!((b.flops() / f.flops() - 2.5).abs() < 1e-9);
         assert!(b.io_bytes() > f.io_bytes());
+    }
+
+    #[test]
+    fn score_pattern_field_roundtrip() {
+        for p in [
+            ScorePattern::Dense,
+            ScorePattern::BlockSparse { block: 64, topk: 16 },
+            ScorePattern::WindowGlobal { window: 512, n_global: 64 },
+        ] {
+            assert_eq!(ScorePattern::parse_field(&p.field()), Some(p));
+        }
+        assert_eq!(ScorePattern::parse_field(""), Some(ScorePattern::Dense));
+        assert_eq!(ScorePattern::parse_field("bs64"), None);
+        assert_eq!(ScorePattern::parse_field("wgx"), None);
+    }
+
+    #[test]
+    fn kernel_name_grows_pattern_dimension() {
+        let s = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false);
+        // Dense keeps the pre-pattern spelling exactly.
+        assert_eq!(s.kernel_name(), "mha_hd64_full_f16");
+        let bs = s.with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 }).unwrap();
+        assert_eq!(bs.kernel_name(), "mha_hd64_full_f16_bs64x16");
+        let wg = s.with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+            .unwrap();
+        // WindowGlobal implies the causal mask.
+        assert_eq!(wg.kernel_name(), "mha_hd64_causal_f16_wg512g64");
+    }
+
+    #[test]
+    fn pattern_validation_rejects_unsupported_combinations() {
+        let causal = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        assert!(causal.with_pattern(ScorePattern::BlockSparse { block: 64, topk: 4 }).is_err());
+        let paged = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+            .with_layout(KvLayout::Paged { page_size: 16 });
+        assert!(paged.with_pattern(ScorePattern::BlockSparse { block: 64, topk: 4 }).is_err());
+        assert!(paged
+            .with_pattern(ScorePattern::WindowGlobal { window: 64, n_global: 0 })
+            .is_err());
+        let bwd = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+            .with_direction(Direction::Backward);
+        assert!(bwd.with_pattern(ScorePattern::BlockSparse { block: 64, topk: 4 }).is_err());
+        let nsa = OpSpec::nsa(1024);
+        assert!(nsa.with_pattern(ScorePattern::BlockSparse { block: 64, topk: 4 }).is_err());
+    }
+
+    #[test]
+    fn cross_attention_decouples_kv_len() {
+        let s = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false);
+        let x = s.with_kv_len(2048).unwrap();
+        assert_eq!(x.kv_len, 2048);
+        assert_eq!(x.seq_len, 1024);
+        assert!(x.artifact_name().ends_with("_kv2048"));
+        // Self-attention keeps the historical artifact spelling.
+        assert!(!s.artifact_name().contains("_kv1024"));
+        // Causal coupling is rejected for decoupled axes.
+        let causal = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true);
+        assert!(causal.with_kv_len(2048).is_err());
+    }
+
+    #[test]
+    fn pattern_max_attended_clips_the_score_rectangle() {
+        assert_eq!(ScorePattern::Dense.max_attended(4096), 4096);
+        assert_eq!(
+            ScorePattern::BlockSparse { block: 64, topk: 16 }.max_attended(4096),
+            1024
+        );
+        assert_eq!(
+            ScorePattern::WindowGlobal { window: 512, n_global: 64 }.max_attended(4096),
+            576
+        );
+        // Clipped at kv_len when the pattern covers everything.
+        assert_eq!(ScorePattern::BlockSparse { block: 64, topk: 64 }.max_attended(1024), 1024);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 use super::{Backend, TranslateError};
 use crate::perfmodel::gpu::GpuArch;
 use crate::reasoner::{infer_roles, Reasoned, Role};
-use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use crate::sketch::spec::{AttnVariant, KvLayout, OpSpec, ScorePattern};
 use crate::sketch::GradTarget;
 use crate::tl::ast::{ComputeOp, Stmt, TlProgram};
 use crate::tl::expr::{BinOp, Expr};
@@ -134,6 +134,9 @@ impl<'a> Emitter<'a> {
                 "seq_len" => "SEQ_LEN".into(),
                 "kv_len" => "KV_LEN".into(),
                 "group_size" => "GROUP_SIZE".into(),
+                "sel_topk" => "SEL_TILES".into(),
+                "window" => "WINDOW".into(),
+                "n_global" => "N_GLOBAL".into(),
                 "block_idx" => "block_idx".into(),
                 "head_idx" => "head_idx".into(),
                 other => other.to_string(),
@@ -149,7 +152,11 @@ impl<'a> Emitter<'a> {
                 format!("({} {} {})", self.expr_py(a), sym, self.expr_py(b))
             }
             Expr::Idx(t, e) => {
-                let table = if t == "block_table" { "bt_ref" } else { t.as_str() };
+                let table = match t.as_str() {
+                    "block_table" => "bt_ref",
+                    "sel_table" => "st_ref",
+                    other => other,
+                };
                 format!("{table}[{}]", self.expr_py(e))
             }
         }
@@ -208,6 +215,24 @@ impl<'a> Emitter<'a> {
                 self.line(format!("WINDOW = {window}  # sliding-window length (keys per query)"));
             }
         }
+        match self.spec.pattern {
+            ScorePattern::Dense => {}
+            ScorePattern::BlockSparse { block, topk } => {
+                let sel = params.get("sel_topk").copied().unwrap_or(1);
+                self.line(format!(
+                    "SEL_TILES = {sel}  # selected BN-row kv tiles per q-block \
+                     (block={block}, topk={topk})"
+                ));
+            }
+            ScorePattern::WindowGlobal { .. } => {
+                let window = params.get("window").copied().unwrap_or(bn);
+                let n_global = params.get("n_global").copied().unwrap_or(0);
+                self.line(format!("WINDOW = {window}  # local attention window (keys per query)"));
+                self.line(format!(
+                    "N_GLOBAL = {n_global}  # leading global keys exempt from the window"
+                ));
+            }
+        }
         self.line("");
         self.line("META = {");
         self.line(format!("    \"name\": \"{name}\","));
@@ -217,14 +242,18 @@ impl<'a> Emitter<'a> {
         self.line(format!("    \"qk_dim\": {qk}, \"v_dim\": {vd}, \"group_size\": {group},"));
         self.line(format!("    \"target\": \"{}\",", self.arch.name));
         self.line(format!("    \"kv_layout\": \"{}\",", self.spec.kv_layout.field()));
+        self.line(format!("    \"pattern\": \"{}\",", self.spec.pattern.field()));
         self.line("}");
         self.line("");
         self.line("");
 
         // ---- kernel ----
         let paged = matches!(self.spec.kv_layout, KvLayout::Paged { .. });
+        let selection = matches!(self.spec.pattern, ScorePattern::BlockSparse { .. });
         if paged {
             self.line("def _kernel(bt_ref, q_ref, k_ref, v_ref, o_ref, lse_ref):");
+        } else if selection {
+            self.line("def _kernel(st_ref, q_ref, k_ref, v_ref, o_ref, lse_ref):");
         } else {
             self.line("def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref):");
         }
@@ -265,6 +294,8 @@ impl<'a> Emitter<'a> {
         // ---- host wrapper ----
         if paged {
             self.line("def attention_with_lse(q, k, v, block_table, interpret=True):");
+        } else if selection {
+            self.line("def attention_with_lse(q, k, v, sel_table, interpret=True):");
         } else {
             self.line("def attention_with_lse(q, k, v, interpret=True):");
         }
@@ -277,6 +308,10 @@ impl<'a> Emitter<'a> {
         self.line("    v: (batch, num_kv_heads, kv_len, V_DIM)");
         if paged {
             self.line("    block_table: (kv_len // PAGE_SIZE,) int32, logical -> physical page");
+        }
+        if selection {
+            self.line("    sel_table: (SEL_TILES,) int32, indices of the BN-row kv tiles");
+            self.line("        each q-block attends (block-sparse top-k selection)");
         }
         self.line("Returns:");
         self.line("    o: (batch, num_q_heads, seq_len, V_DIM), dtype of q.");
@@ -295,6 +330,9 @@ impl<'a> Emitter<'a> {
             self.line("assert kv_len % PAGE_SIZE == 0");
             self.line("assert block_table.shape == (kv_len // PAGE_SIZE,)");
         }
+        if selection {
+            self.line("assert sel_table.shape == (SEL_TILES,)");
+        }
         self.line("grid = (batch, num_q_heads, seq_len // BM)");
         self.line("return pl.pallas_call(");
         self.line("    _kernel,");
@@ -305,6 +343,10 @@ impl<'a> Emitter<'a> {
             self.line(
                 "        pl.BlockSpec((kv_len // PAGE_SIZE,), lambda b, h, i: (0,)),",
             );
+        }
+        if selection {
+            self.line("        # selection-table operand: whole table visible to every program");
+            self.line("        pl.BlockSpec((SEL_TILES,), lambda b, h, i: (0,)),");
         }
         self.line("        # TL: Allocate Q in global (seq_len, HeadDim) with offset q_offset");
         self.line("        pl.BlockSpec((1, 1, BM, QK_DIM), lambda b, h, i: (b, h, i, 0)),");
@@ -334,6 +376,8 @@ impl<'a> Emitter<'a> {
         self.line("    interpret=interpret,");
         if paged {
             self.line(")(block_table, q, k, v)");
+        } else if selection {
+            self.line(")(sel_table, q, k, v)");
         } else {
             self.line(")(q, k, v)");
         }
@@ -345,6 +389,11 @@ impl<'a> Emitter<'a> {
             self.indent = 1;
             self.line("\"\"\"Output-only convenience wrapper around attention_with_lse.\"\"\"");
             self.line("return attention_with_lse(q, k, v, block_table, interpret=interpret)[0]");
+        } else if selection {
+            self.line("def attention(q, k, v, sel_table, interpret=True):");
+            self.indent = 1;
+            self.line("\"\"\"Output-only convenience wrapper around attention_with_lse.\"\"\"");
+            self.line("return attention_with_lse(q, k, v, sel_table, interpret=interpret)[0]");
         } else {
             self.line("def attention(q, k, v, interpret=True):");
             self.indent = 1;
@@ -411,7 +460,14 @@ impl<'a> Emitter<'a> {
                             .ok_or_else(|| {
                                 TranslateError(format!("copy of `{tensor}` lacks L coord"))
                             })?;
-                        if let Some((_, idx)) = l_expr.gather() {
+                        if let Some(("sel_table", idx)) = l_expr.gather() {
+                            // Selection gather: each table entry names a
+                            // whole BN-row kv tile to stream.
+                            let e = self.expr_py(idx);
+                            self.line(format!(
+                                "{pyname} = jax.lax.dynamic_slice_in_dim({refname}[0, 0], st_ref[{e}] * BN, BN, axis=0).astype(jnp.float32)"
+                            ));
+                        } else if let Some((_, idx)) = l_expr.gather() {
                             // Gather load from the page-table operand:
                             // assemble the BN-row tile page by page.
                             let e = self.expr_py(idx);
@@ -646,9 +702,16 @@ impl<'a> Emitter<'a> {
                 self.line(format!(
                     "k_pos = {lk} * BN + jax.lax.broadcasted_iota(jnp.int32, (BM, BN), 1)"
                 ));
-                self.line(format!(
-                    "{sname} = jnp.where(k_pos + WINDOW > q_pos, {sname}, MASK_VALUE)"
-                ));
+                if matches!(self.spec.pattern, ScorePattern::WindowGlobal { .. }) {
+                    // Leading global keys are exempt from the window.
+                    self.line(format!(
+                        "{sname} = jnp.where((k_pos < N_GLOBAL) | (k_pos + WINDOW > q_pos), {sname}, MASK_VALUE)"
+                    ));
+                } else {
+                    self.line(format!(
+                        "{sname} = jnp.where(k_pos + WINDOW > q_pos, {sname}, MASK_VALUE)"
+                    ));
+                }
             }
             ComputeOp::Softmax => {
                 self.tl_comment(s);
@@ -1521,6 +1584,52 @@ mod tests {
         assert!(src.contains("lo_kv = jnp.maximum(0, (block_idx * BM - WINDOW) // BN)"), "{src}");
         assert!(src.contains("hi_q = jnp.minimum("), "{src}");
         assert!(src.contains("jnp.where(k_pos + WINDOW > q_pos"), "{src}");
+    }
+
+    #[test]
+    fn block_sparse_emits_selection_gather_and_table_operand() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 4 })
+            .unwrap();
+        let src = emit(&spec);
+        assert!(src.contains("def _kernel(st_ref, q_ref, k_ref, v_ref, o_ref, lse_ref):"), "{src}");
+        assert!(src.contains("SEL_TILES = "));
+        assert!(src.contains("st_ref[i] * BN"), "{src}");
+        // The kv loop runs over the selection, not the full extent.
+        assert!(src.contains("num_kv_blocks = SEL_TILES"), "{src}");
+        assert!(src.contains("def attention_with_lse(q, k, v, sel_table, interpret=True):"));
+        assert!(src.contains("assert sel_table.shape == (SEL_TILES,)"));
+        assert!(src.contains("pl.BlockSpec((SEL_TILES,), lambda b, h, i: (0,))"));
+        assert!(src.contains(")(sel_table, q, k, v)"));
+        assert!(src.contains("\"pattern\": \"bs64x4\""));
+        assert!(!src.contains('\t'));
+    }
+
+    #[test]
+    fn window_global_emits_global_exempt_mask() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+            .with_pattern(ScorePattern::WindowGlobal { window: 256, n_global: 64 })
+            .unwrap();
+        let src = emit(&spec);
+        assert!(src.contains("WINDOW = 256"));
+        assert!(src.contains("N_GLOBAL = 64"));
+        assert!(
+            src.contains("jnp.where((k_pos < N_GLOBAL) | (k_pos + WINDOW > q_pos)"),
+            "{src}"
+        );
+        // Window+global implies causal; the causal mask stays.
+        assert!(src.contains("jnp.where(k_pos <= q_pos"));
+        // Mask-only lowering: no sliding tile-skip clip — the leading
+        // global keys keep every early tile live.
+        assert!(!src.contains("lo_kv"), "{src}");
+        assert!(src.contains("\"pattern\": \"wg256g64\""));
+    }
+
+    #[test]
+    fn dense_meta_records_the_empty_suffix_pattern() {
+        let src = emit(&OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true));
+        assert!(src.contains("\"pattern\": \"dense\""));
+        assert!(!src.contains("SEL_TILES"));
     }
 
     #[test]

@@ -58,6 +58,16 @@ impl Args {
         }
     }
 
+    /// Optional numeric flag: `Ok(None)` when the flag is absent.
+    pub fn get_opt_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| format!("--{key}: `{v}` is not a number"))
+            }
+        }
+    }
+
     /// Error on any flag that was never read (typo protection).
     pub fn finish(&self) -> Result<(), String> {
         let consumed = self.consumed.borrow();

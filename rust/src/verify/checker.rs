@@ -17,6 +17,13 @@
 //!   (`seq_len % BM`, `kv_len % BN`).
 //! * **E006 SoftmaxStats** — online softmax running stats not allocated
 //!   in registers, or the accumulator missing from the 3-name form.
+//! * **E007 UnconsumedParam** — a reasoned attention program (binds both
+//!   `BM` and `BN`) binds a parameter that nothing consumes: no
+//!   expression references it and no engine reads it implicitly
+//!   (`window`/`n_global` are engine-read only under a `WindowMask`,
+//!   `page_size` only under a gather copy). A bound-but-dead parameter
+//!   is a reasoning bug — the knob the stage thought it was turning is
+//!   disconnected.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
@@ -33,6 +40,7 @@ pub enum Code {
     MissingCoordinate,
     BadDivisibility,
     SoftmaxStats,
+    UnconsumedParam,
 }
 
 impl Code {
@@ -44,6 +52,7 @@ impl Code {
             Code::MissingCoordinate => "E004",
             Code::BadDivisibility => "E005",
             Code::SoftmaxStats => "E006",
+            Code::UnconsumedParam => "E007",
         }
     }
 }
@@ -94,6 +103,75 @@ pub fn check(program: &TlProgram) -> Vec<Diagnostic> {
                 code: Code::BadDivisibility,
                 message: format!("BN = {bn} is not divisible by page_size = {page}"),
             });
+        }
+    }
+
+    // E007: every bound param of a reasoned attention program must have a
+    // consumer. Gated on BM+BN so free-standing TL snippets (and the
+    // static-only path for non-attention programs) stay lint-free.
+    if params.contains_key("BM") && params.contains_key("BN") {
+        let mut syms: Vec<String> = Vec::new();
+        let mut has_window_mask = false;
+        let mut has_gather = false;
+        program.walk(|s| match s {
+            Stmt::Allocate { shape, offset, .. } => {
+                for e in shape {
+                    e.symbols(&mut syms);
+                }
+                if let Some(e) = offset {
+                    e.symbols(&mut syms);
+                }
+            }
+            Stmt::Copy { shape, coord, .. } => {
+                if let Some(shape) = shape {
+                    for e in shape {
+                        e.symbols(&mut syms);
+                    }
+                }
+                for (_, e) in coord {
+                    e.symbols(&mut syms);
+                    if e.gather().is_some() {
+                        has_gather = true;
+                    }
+                }
+            }
+            Stmt::Compute { op, coord, .. } => {
+                if *op == ComputeOp::WindowMask {
+                    has_window_mask = true;
+                }
+                for (_, e) in coord {
+                    e.symbols(&mut syms);
+                }
+            }
+            Stmt::For { start, end, .. } => {
+                start.symbols(&mut syms);
+                end.symbols(&mut syms);
+            }
+            Stmt::If { lhs, rhs, .. } => {
+                lhs.symbols(&mut syms);
+                rhs.symbols(&mut syms);
+            }
+            _ => {}
+        });
+        let used: BTreeSet<String> = syms.into_iter().collect();
+        for name in params.keys() {
+            // Engine-read bindings: the block sweep reads the geometry
+            // params directly; masks and gathers read their knobs from
+            // the binding environment rather than through expressions.
+            let engine_read = matches!(
+                name.as_str(),
+                "BM" | "BN" | "HeadDim" | "VDim" | "seq_len" | "kv_len" | "group_size"
+            ) || (has_window_mask && matches!(name.as_str(), "window" | "n_global"))
+                || (has_gather && name == "page_size");
+            if !engine_read && !used.contains(name) {
+                diags.push(Diagnostic {
+                    code: Code::UnconsumedParam,
+                    message: format!(
+                        "param `{name}` is bound but nothing consumes it — no expression \
+                         references it and no engine reads it implicitly"
+                    ),
+                });
+            }
         }
     }
 
@@ -413,6 +491,64 @@ Compute Softmax S with m and l
         let p = crate::tl::parser::parse_program(src).unwrap();
         let diags = check(&p);
         assert!(diags.iter().any(|d| d.code == Code::SoftmaxStats));
+    }
+
+    #[test]
+    fn unconsumed_param_detected() {
+        // `num_selected` is bound but referenced by nothing — the exact
+        // shape of the reasoner bug this lint exists to catch.
+        let src = "\
+param BM = 64
+param BN = 64
+param num_selected = 4
+Allocate Q_shared in shared (BM, HeadDim)
+Allocate K_shared in shared (BN, HeadDim)
+Allocate S in register (BM, BN)
+Compute GEMM Q_shared, K_shared.T and get S
+";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        let diags = check(&p);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.code == Code::UnconsumedParam && d.message.contains("num_selected")),
+            "E007 not raised: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn lint_skips_programs_without_full_tiling() {
+        // No BN binding: free-standing snippets are not linted.
+        let src = "param BM = 64\nparam mystery = 3";
+        let p = crate::tl::parser::parse_program(src).unwrap();
+        assert!(!check(&p).iter().any(|d| d.code == Code::UnconsumedParam));
+    }
+
+    #[test]
+    fn reasoned_pattern_programs_consume_every_param() {
+        use crate::sketch::spec::ScorePattern;
+        // NSA (num_selected/window as loop bounds), block-sparse
+        // (sel_topk), window+global and sliding (engine-read window/
+        // n_global under WindowMask), paged (engine-read page_size):
+        // every bound param must have a consumer.
+        let specs = vec![
+            OpSpec::nsa(4096),
+            OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+                .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+                .unwrap(),
+            OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+                .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+                .unwrap(),
+        ];
+        for spec in specs {
+            let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+            let diags = check(&r.program);
+            assert!(
+                !diags.iter().any(|d| d.code == Code::UnconsumedParam),
+                "{}: {diags:?}",
+                spec.kernel_name()
+            );
+        }
     }
 
     #[test]

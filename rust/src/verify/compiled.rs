@@ -144,8 +144,10 @@ struct GemmEpilogue {
     scale: Option<usize>,
     /// Causal mask at `(lq, lk)` block coordinates.
     causal: Option<(CExpr, CExpr)>,
-    /// Sliding-window mask at `(lq, lk)` with the compile-time window.
-    window: Option<(CExpr, CExpr, i64)>,
+    /// Sliding-window mask at `(lq, lk)` with the compile-time window
+    /// and `n_global` (count of leading keys exempt from the window; 0
+    /// for the plain sliding layout).
+    window: Option<(CExpr, CExpr, i64, i64)>,
     /// `out[r][c] -= stat[r]` against a `(rows, 1)` stat tile, applied
     /// last ([`apply_row_broadcast`], shared with [`Op::MapBroadcast`]).
     sub: Option<SlotId>,
@@ -219,8 +221,18 @@ enum Op {
     /// is computed per row instead of comparing per element).
     CausalMask { s: SlotId, rows: usize, cols: usize, lq: CExpr, lk: CExpr },
     /// Sliding-window mask: `kpos <= qpos - window` entries become
-    /// [`MASK_VALUE`] (the lower-bound twin of [`Op::CausalMask`]).
-    WindowMask { s: SlotId, rows: usize, cols: usize, lq: CExpr, lk: CExpr, window: i64 },
+    /// [`MASK_VALUE`] (the lower-bound twin of [`Op::CausalMask`]),
+    /// except the leading `n_global` keys (window+global pattern; 0 under
+    /// the plain sliding layout).
+    WindowMask {
+        s: SlotId,
+        rows: usize,
+        cols: usize,
+        lq: CExpr,
+        lk: CExpr,
+        window: i64,
+        n_global: i64,
+    },
     /// FlashAttention online-softmax block update (see
     /// [`super::interp::Interp`]'s `exec_online_softmax` for the
     /// recurrence); `acc` carries the 3-name form's rescaled accumulator.
@@ -788,7 +800,8 @@ impl Compiler {
                         .get("window")
                         .copied()
                         .ok_or("WindowMask without a `window` param")?;
-                    ops.push(Op::WindowMask { s, rows, cols, lq, lk, window });
+                    let n_global = self.statics.get("n_global").copied().unwrap_or(0);
+                    ops.push(Op::WindowMask { s, rows, cols, lq, lk, window, n_global });
                 } else {
                     ops.push(Op::CausalMask { s, rows, cols, lq, lk });
                 }
@@ -937,7 +950,10 @@ fn apply_causal_mask(buf: &mut [f32], rows: usize, cols: usize, lq: usize, lk: u
 }
 
 /// Sliding-window mask: entries with `kpos <= qpos - window` become
-/// [`MASK_VALUE`] (row-sliced like the causal mask).
+/// [`MASK_VALUE`] (row-sliced like the causal mask), sparing the leading
+/// `n_global` global keys (window+global pattern; `n_global = 0` is the
+/// plain sliding layout and reproduces the historical mask bitwise).
+#[allow(clippy::too_many_arguments)]
 fn apply_window_mask(
     buf: &mut [f32],
     rows: usize,
@@ -945,15 +961,17 @@ fn apply_window_mask(
     lq: usize,
     lk: usize,
     window: i64,
+    n_global: i64,
 ) {
     for r in 0..rows {
         let qpos = (lq * rows + r) as i64;
         let kpos0 = (lk * cols) as i64;
-        // Mask columns c with kpos0 + c + window <= qpos.
-        let dead = qpos - window - kpos0 + 1; // count of masked leading cols
-        if dead > 0 {
-            let dead = (dead as usize).min(cols);
-            buf[r * cols..r * cols + dead].fill(MASK_VALUE);
+        // Mask columns c with kpos0 + c >= n_global and
+        // kpos0 + c + window <= qpos: the contiguous range [start, end).
+        let start = (n_global - kpos0).clamp(0, cols as i64) as usize;
+        let end = (qpos - window - kpos0 + 1).clamp(0, cols as i64) as usize;
+        if start < end {
+            buf[r * cols + start..r * cols + end].fill(MASK_VALUE);
         }
     }
 }
@@ -989,7 +1007,7 @@ fn op_touches(op: &Op, slot: SlotId) -> bool {
 enum FuseStep {
     Scale(usize),
     Causal(CExpr, CExpr),
-    Window(CExpr, CExpr, i64),
+    Window(CExpr, CExpr, i64, i64),
     /// Row-broadcast subtract of a `(rows, 1)` stat slot.
     Sub(SlotId),
 }
@@ -1038,10 +1056,10 @@ fn fuse_gemm_epilogues(ops: &mut Vec<Op>) {
                 {
                     Some(FuseStep::Causal(lq.clone(), lk.clone()))
                 }
-                Op::WindowMask { s, rows, cols, lq, lk, window }
+                Op::WindowMask { s, rows, cols, lq, lk, window, n_global }
                     if *s == out && rows * cols == len =>
                 {
-                    Some(FuseStep::Window(lq.clone(), lk.clone(), *window))
+                    Some(FuseStep::Window(lq.clone(), lk.clone(), *window, *n_global))
                 }
                 // In-place row-broadcast subtract of a distinct stat
                 // tile (backward's `sub(S, Lse)` / `sub(dP, Delta)`).
@@ -1076,10 +1094,10 @@ fn fuse_gemm_epilogues(ops: &mut Vec<Op>) {
                     epilogue.causal = Some((lq, lk));
                     true
                 }
-                FuseStep::Window(lq, lk, w)
+                FuseStep::Window(lq, lk, w, g)
                     if epilogue.window.is_none() && epilogue.sub.is_none() =>
                 {
-                    epilogue.window = Some((lq, lk, w));
+                    epilogue.window = Some((lq, lk, w, g));
                     true
                 }
                 FuseStep::Sub(b) if epilogue.sub.is_none() => {
@@ -1386,10 +1404,10 @@ impl CompiledBlockProgram {
                                 let lk = lk.eval(&arena.vars)? as usize;
                                 apply_causal_mask(&mut obuf[..m * n], m, n, lq, lk);
                             }
-                            if let Some((lq, lk, w)) = &epilogue.window {
+                            if let Some((lq, lk, w, g)) = &epilogue.window {
                                 let lq = lq.eval(&arena.vars)? as usize;
                                 let lk = lk.eval(&arena.vars)? as usize;
-                                apply_window_mask(&mut obuf[..m * n], m, n, lq, lk, *w);
+                                apply_window_mask(&mut obuf[..m * n], m, n, lq, lk, *w, *g);
                             }
                             if let Some(bslot) = epilogue.sub {
                                 apply_row_broadcast(
@@ -1561,7 +1579,7 @@ impl CompiledBlockProgram {
                     let (rows, cols) = (*rows, *cols);
                     apply_causal_mask(&mut arena.bufs[*s][..rows * cols], rows, cols, lq, lk);
                 }
-                Op::WindowMask { s, rows, cols, lq, lk, window } => {
+                Op::WindowMask { s, rows, cols, lq, lk, window, n_global } => {
                     let lq = lq.eval(&arena.vars)? as usize;
                     let lk = lk.eval(&arena.vars)? as usize;
                     let (rows, cols) = (*rows, *cols);
@@ -1572,6 +1590,7 @@ impl CompiledBlockProgram {
                         lq,
                         lk,
                         *window,
+                        *n_global,
                     );
                 }
                 Op::OnlineSoftmax { s, rows, cols, m, l, l_rows, acc } => {

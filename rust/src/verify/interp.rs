@@ -327,6 +327,11 @@ impl<'g> Interp<'g> {
                     .get("window")
                     .copied()
                     .ok_or("WindowMask without a `window` binding")?;
+                // Window+global pattern: the leading `n_global` keys are
+                // exempt from the window (attention sinks). Absent binding
+                // (plain sliding layout) means no exemption — bit-identical
+                // to the historical mask.
+                let n_global = self.bindings.get("n_global").copied().unwrap_or(0);
                 let s = self
                     .regs
                     .get_mut(&inputs[0].name)
@@ -336,7 +341,7 @@ impl<'g> Interp<'g> {
                     let qpos = (lq as usize * bm + r) as i64;
                     for c in 0..bn {
                         let kpos = (lk as usize * bn + c) as i64;
-                        if kpos + window <= qpos {
+                        if kpos >= n_global && kpos + window <= qpos {
                             *s.at_mut(r, c) = MASK_VALUE;
                         }
                     }

@@ -23,6 +23,7 @@ pub mod checker;
 pub mod compiled;
 pub mod exec;
 pub mod interp;
+pub mod oracle;
 pub mod tensor;
 
 use crate::sketch::GradTarget;
@@ -105,6 +106,26 @@ pub fn uses_gather(program: &TlProgram) -> bool {
     found
 }
 
+/// Names of the tables this program gathers through, in first-use order
+/// (deduplicated). Distinguishes paged programs (`block_table`) from
+/// block-sparse selection programs (`sel_table`) so the numeric probe
+/// can pick the right oracle.
+pub fn gather_tables(program: &TlProgram) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    program.walk(|s| {
+        if let Stmt::Copy { coord, .. } = s {
+            for (_, e) in coord.iter() {
+                if let Some((table, _)) = e.gather() {
+                    if !out.iter().any(|t| t == table) {
+                        out.push(table.to_string());
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
 /// Does this program apply a sliding-window mask?
 pub fn uses_window(program: &TlProgram) -> bool {
     let mut found = false;
@@ -158,8 +179,12 @@ pub fn backward_target(program: &TlProgram) -> Option<GradTarget> {
 ///   physically permuted K/V — and the two runs must agree **bit for
 ///   bit** (the identity run is separately held bit-identical to the
 ///   contiguous engine by `tests/paged.rs`);
+/// * a block-sparse selection program (gathering through `sel_table`)
+///   runs twice — prefix selection and a seeded shuffle — each held to
+///   its own masked-dense oracle ([`oracle::block_sparse_reference`]);
 /// * a windowed (sliding) program is compared against the
-///   sliding-window reference oracle;
+///   sliding-window reference oracle; with a positive `n_global`
+///   binding, against [`oracle::window_global_reference`] instead;
 /// * everything else follows the original contiguous path.
 pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyReport {
     let diagnostics = checker::check(program);
@@ -198,6 +223,13 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
         .get("window")
         .map(|&w| (w as usize).clamp(1, probe_seq / 2))
         .filter(|_| windowed);
+    // Window+global: keep a few leading global keys inside the probe so
+    // the global-exemption branch of the mask is exercised.
+    let probe_n_global = params
+        .get("n_global")
+        .map(|&g| (g as usize).min(probe_seq / 4))
+        .filter(|_| windowed)
+        .unwrap_or(0);
     let mut probe = program.clone();
     for s in &mut probe.stmts {
         if let Stmt::Param { name, value } = s {
@@ -208,6 +240,14 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
                 if let Some(w) = probe_window {
                     *value = w as i64;
                 }
+            }
+            if name == "n_global" && windowed {
+                *value = probe_n_global as i64;
+            }
+            // Selection length shrinks with the probe's kv extent: keep
+            // it a valid tile count for the reduced shape.
+            if name == "sel_topk" {
+                *value = (*value).clamp(1, (probe_seq / bnu) as i64);
             }
         }
     }
@@ -241,7 +281,49 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
         passed: false,
     };
 
-    let got = if uses_gather(&probe) {
+    let got = if uses_gather(&probe) && gather_tables(&probe).iter().any(|t| t == "sel_table") {
+        // Block-sparse probe: the program streams only the kv tiles
+        // named by `sel_table`. Run twice — a prefix selection and a
+        // seeded distinct shuffle — and hold each run to its own
+        // masked-dense oracle. (The two runs visit tiles in different
+        // orders, so online-softmax accumulation differs in the low
+        // bits between them; bit-identity across engines and thread
+        // counts for a *fixed* table is enforced by `tests/patterns.rs`.)
+        let sel = probe.params().get("sel_topk").copied().unwrap_or(0);
+        let total = (probe_seq / bnu) as i64;
+        if sel < 1 || sel > total {
+            return fail(format!("sel_topk {sel} outside the probe's 1..={total} kv tiles"));
+        }
+        let prepared = match exec::prepare(&probe) {
+            Ok(p) => p,
+            Err(e) => return fail(e),
+        };
+        let prefix: Vec<i64> = (0..sel).collect();
+        let mut shuffled: Vec<i64> = (0..total).collect();
+        let mut rng = crate::util::prng::Rng::new(seed ^ 0x5E1EC7);
+        for i in (1..total as usize).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            shuffled.swap(i, j);
+        }
+        shuffled.truncate(sel as usize);
+        let mut worst = 0.0f32;
+        let mut tables = std::collections::BTreeMap::new();
+        for table in [prefix, shuffled] {
+            tables.insert("sel_table".to_string(), table.clone());
+            let run =
+                match prepared.run_attention(&q, &k, &v, scale, &tables, exec::default_threads()) {
+                    Ok(t) => t,
+                    Err(e) => return fail(e),
+                };
+            let want = oracle::block_sparse_reference(&q, &k, &v, scale, &table, bnu);
+            worst = worst.max(run.max_abs_diff(&want));
+        }
+        return VerifyReport {
+            diagnostics,
+            max_abs_diff: Some(worst),
+            passed: worst < NUMERIC_TOL,
+        };
+    } else if uses_gather(&probe) {
         // Paged probe: identity table on logical K/V, then a shuffled
         // table on physically permuted K/V — bit-identical by contract.
         // One lowering ([`exec::prepare`]) serves both runs.
@@ -277,6 +359,9 @@ pub fn verify_program(program: &TlProgram, causal: bool, seed: u64) -> VerifyRep
     };
 
     let want = match probe_window {
+        Some(w) if probe_n_global > 0 => {
+            oracle::window_global_reference(&q, &k, &v, scale, w, probe_n_global)
+        }
         Some(w) => reference_attention_sliding(&q, &k, &v, scale, w),
         None => reference_attention(&q, &k, &v, scale, causal),
     };
@@ -428,7 +513,31 @@ mod tests {
     use crate::perfmodel::gpu::GpuArch;
     use crate::reasoner::generate_tl_code;
     use crate::reasoner::profiles::{FailureMode, LlmProfile};
-    use crate::sketch::spec::{AttnVariant, OpSpec};
+    use crate::sketch::spec::{AttnVariant, OpSpec, ScorePattern};
+
+    #[test]
+    fn verify_probe_runs_block_sparse_against_the_selection_oracle() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+            .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+            .unwrap();
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        assert!(gather_tables(&r.program).iter().any(|t| t == "sel_table"));
+        let report = verify_program(&r.program, false, 11);
+        assert!(report.passed, "{report:?}");
+        assert!(report.max_abs_diff.unwrap() < NUMERIC_TOL);
+    }
+
+    #[test]
+    fn verify_probe_runs_window_global_against_its_oracle() {
+        let spec = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+            .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+            .unwrap();
+        assert!(spec.causal, "window+global implies causal");
+        let r = generate_tl_code(&spec, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+        let report = verify_program(&r.program, true, 12);
+        assert!(report.passed, "{report:?}");
+        assert!(report.max_abs_diff.unwrap() < NUMERIC_TOL);
+    }
 
     #[test]
     fn verify_gate_passes_clean_generation() {

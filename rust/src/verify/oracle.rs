@@ -1,0 +1,177 @@
+//! Pattern-differential oracles: O(n²) masked-dense references for the
+//! [`crate::sketch::spec::ScorePattern`] family.
+//!
+//! Each oracle materializes the full score matrix and masks the entries
+//! the pattern never attends — the brute-force semantics the streamed
+//! TL programs must reproduce. `tests/patterns.rs` holds both engines to
+//! these references (within [`super::NUMERIC_TOL`]) across patterns ×
+//! variants × tilings × thread counts, and [`super::verify_program`]
+//! runs them as the numeric gate for pattern programs.
+//!
+//! The masking follows [`super::tensor::reference_attention`]'s idiom
+//! exactly (scale, mask to [`MASK_VALUE`], row softmax, PV GEMM), so a
+//! pattern that degenerates to dense — block-sparse selecting every
+//! tile, window+global with `n_global = 0` equal to plain sliding — is
+//! **bitwise** equal to the corresponding existing reference.
+
+use super::tensor::{Tensor2, MASK_VALUE};
+
+/// Row-sliced softmax over already scaled+masked scores, then `P @ V` —
+/// the shared tail of every oracle (identical float ops and order to
+/// [`super::tensor::reference_attention`]).
+fn softmax_pv(mut s: Tensor2, v: &Tensor2) -> Tensor2 {
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    s.matmul(v, false, false).expect("oracle pv")
+}
+
+/// Masked-dense reference for the block-sparse (top-k selection) score
+/// pattern: every query attends exactly the keys whose `tile_rows`-row
+/// tile index appears in `sel_table` (the same table the TL program
+/// gathers through). Entries of `sel_table` must be in-range tile
+/// indices; duplicates are harmless (a key is visible or not).
+pub fn block_sparse_reference(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    sel_table: &[i64],
+    tile_rows: usize,
+) -> Tensor2 {
+    assert!(tile_rows > 0, "tile_rows must be positive");
+    let mut visible = vec![false; k.rows];
+    for &t in sel_table {
+        assert!(t >= 0, "negative selection index {t}");
+        let t = t as usize;
+        assert!((t + 1) * tile_rows <= k.rows, "selected tile {t} outside {} keys", k.rows);
+        visible[t * tile_rows..(t + 1) * tile_rows].fill(true);
+    }
+    let mut s = q.matmul(k, false, true).expect("oracle qk");
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        for (c, x) in row.iter_mut().enumerate() {
+            *x *= scale;
+            if !visible[c] {
+                *x = MASK_VALUE;
+            }
+        }
+    }
+    softmax_pv(s, v)
+}
+
+/// Masked-dense reference for the window+global score pattern: causal,
+/// with query `r` attending key `c` iff `c <= r` and (`c < n_global` or
+/// `c > r - window`). `n_global = 0` reduces to the plain causal
+/// sliding-window reference
+/// ([`super::tensor::reference_attention_sliding`]), bitwise.
+pub fn window_global_reference(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    scale: f32,
+    window: usize,
+    n_global: usize,
+) -> Tensor2 {
+    let mut s = q.matmul(k, false, true).expect("oracle qk");
+    let cols = s.cols;
+    for r in 0..s.rows {
+        let row = &mut s.data[r * cols..(r + 1) * cols];
+        for x in row.iter_mut() {
+            *x *= scale;
+        }
+        if r + 1 < cols {
+            for x in &mut row[r + 1..] {
+                *x = MASK_VALUE;
+            }
+        }
+        // Window lower bound, sparing the leading global keys.
+        let lo = (r as i64 - window as i64 + 1).max(0) as usize;
+        for x in &mut row[n_global.min(cols)..lo.min(cols)] {
+            *x = MASK_VALUE;
+        }
+    }
+    softmax_pv(s, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::tensor::{reference_attention, reference_attention_sliding};
+
+    #[test]
+    fn full_selection_is_bitwise_dense() {
+        let (q, k, v) = (
+            Tensor2::randn(64, 16, 1),
+            Tensor2::randn(64, 16, 2),
+            Tensor2::randn(64, 16, 3),
+        );
+        let all: Vec<i64> = (0..4).collect(); // 4 tiles of 16 rows
+        let got = block_sparse_reference(&q, &k, &v, 0.25, &all, 16);
+        let want = reference_attention(&q, &k, &v, 0.25, false);
+        assert_eq!(got.data, want.data, "containment law must hold bitwise");
+    }
+
+    #[test]
+    fn zero_globals_is_bitwise_sliding() {
+        let (q, k, v) = (
+            Tensor2::randn(64, 16, 4),
+            Tensor2::randn(64, 16, 5),
+            Tensor2::randn(64, 16, 6),
+        );
+        let got = window_global_reference(&q, &k, &v, 0.25, 24, 0);
+        let want = reference_attention_sliding(&q, &k, &v, 0.25, 24);
+        assert_eq!(got.data, want.data, "n_global = 0 must reduce to sliding bitwise");
+    }
+
+    #[test]
+    fn sparse_selection_differs_from_dense_and_respects_visibility() {
+        let (q, k, v) = (
+            Tensor2::randn(64, 16, 7),
+            Tensor2::randn(64, 16, 8),
+            Tensor2::randn(64, 16, 9),
+        );
+        let got = block_sparse_reference(&q, &k, &v, 0.25, &[0, 2], 16);
+        let dense = reference_attention(&q, &k, &v, 0.25, false);
+        assert!(got.max_abs_diff(&dense) > 1e-3, "masking must actually bite");
+        // Keys in tiles 1 and 3 are invisible: zeroing them must not
+        // change the output at all.
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for r in (16..32).chain(48..64) {
+            for c in 0..16 {
+                *k2.at_mut(r, c) = 0.0;
+                *v2.at_mut(r, c) = 0.0;
+            }
+        }
+        let got2 = block_sparse_reference(&q, &k2, &v2, 0.25, &[0, 2], 16);
+        assert_eq!(got.data, got2.data, "invisible keys must not influence the output");
+    }
+
+    #[test]
+    fn global_keys_stay_visible_beyond_the_window() {
+        let (q, k, v) = (
+            Tensor2::randn(64, 16, 10),
+            Tensor2::randn(64, 16, 11),
+            Tensor2::randn(64, 16, 12),
+        );
+        let with_globals = window_global_reference(&q, &k, &v, 0.25, 8, 4);
+        let without = window_global_reference(&q, &k, &v, 0.25, 8, 0);
+        assert!(
+            with_globals.max_abs_diff(&without) > 1e-3,
+            "global keys must influence far queries"
+        );
+    }
+}

@@ -4,7 +4,7 @@
 //! serving coordinator.
 
 use crate::coordinator::request::{FamilyKey, LaneKey};
-use crate::sketch::spec::{AttnVariant, Direction, KvLayout, OpSpec};
+use crate::sketch::spec::{AttnVariant, Direction, KvLayout, OpSpec, ScorePattern};
 use crate::util::prng::Rng;
 
 /// The paper's sequence-length sweep: 512, 1k, ..., 16k.
@@ -195,6 +195,7 @@ pub fn reference_serving_families_layout(decode_layout: KvLayout) -> Vec<FamilyK
             kv: 64,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         let mut d = decode_twin(&f);
         d.kv_layout = decode_layout;
@@ -234,6 +235,7 @@ pub fn paged_decode_stream(
                 kv,
                 kv_layout: KvLayout::Paged { page_size },
                 direction: Direction::Forward,
+                pattern: ScorePattern::Dense,
             });
         }
     }
@@ -367,6 +369,7 @@ pub fn real_model_decode_stream(
                 kv: spec.kv_len,
                 kv_layout: spec.kv_layout,
                 direction: spec.direction,
+                pattern: spec.pattern,
             });
         }
     }
@@ -403,6 +406,7 @@ pub fn shared_prefix_stream(
             kv,
             kv_layout: KvLayout::Paged { page_size },
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         let prefix_seed =
             seed ^ (0xA5A5_0000u64 + g as u64).wrapping_mul(0x9E3779B97F4A7C15);
@@ -417,6 +421,44 @@ pub fn shared_prefix_stream(
         }
     }
     out
+}
+
+/// Mixed score-pattern decode traffic: one base decode shape served
+/// under all three [`ScorePattern`]s (dense, block-sparse top-k,
+/// window+global). The three families share every shape field and
+/// differ only in pattern (and the causality window+global implies), so
+/// a stream over them exercises per-pattern family isolation in the
+/// router/batcher, the pattern-clipped KV-residency accounting of
+/// [`FamilyKey::kv_bytes`], and per-pattern outcome bookkeeping under
+/// fault injection. Poisson arrivals, head-heavy mix, deterministic per
+/// seed.
+pub fn mixed_pattern_stream(n: usize, rate_hz: f64, seed: u64) -> Vec<SyntheticRequest> {
+    let base = FamilyKey {
+        variant: AttnVariant::Gqa,
+        causal: false,
+        qk_dim: 64,
+        v_dim: 64,
+        q_heads: 8,
+        kv_heads: 2,
+        seq: 1,
+        kv: 1024,
+        kv_layout: KvLayout::Contiguous,
+        direction: Direction::Forward,
+        pattern: ScorePattern::Dense,
+    };
+    let fams = vec![
+        base.clone(),
+        FamilyKey {
+            pattern: ScorePattern::BlockSparse { block: 64, topk: 4 },
+            ..base.clone()
+        },
+        FamilyKey {
+            causal: true, // window+global implies a causal sweep
+            pattern: ScorePattern::WindowGlobal { window: 256, n_global: 64 },
+            ..base
+        },
+    ];
+    request_stream_mixed(&fams, n, rate_hz, 1.0, seed)
 }
 
 #[cfg(test)]
@@ -461,6 +503,7 @@ mod tests {
             kv: 256,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         let a = request_stream(&[fam.clone()], 50, 100.0, 7);
         let b = request_stream(&[fam], 50, 100.0, 7);
@@ -587,6 +630,7 @@ mod tests {
             kv: 128,
             kv_layout: KvLayout::Contiguous,
             direction: Direction::Forward,
+            pattern: ScorePattern::Dense,
         };
         let r = SyntheticRequest {
             family: fam.clone(),
@@ -621,6 +665,30 @@ mod tests {
         // Determinism per seed.
         let again = shared_prefix_stream(3, 4, 17);
         assert_eq!(stream[5].payload(), again[5].payload());
+    }
+
+    #[test]
+    fn mixed_pattern_stream_covers_all_three_patterns() {
+        let a = mixed_pattern_stream(120, 500.0, 21);
+        let b = mixed_pattern_stream(120, 500.0, 21);
+        assert_eq!(
+            a.iter().map(|r| r.family.clone()).collect::<Vec<_>>(),
+            b.iter().map(|r| r.family.clone()).collect::<Vec<_>>(),
+            "same seed, same stream"
+        );
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &a {
+            assert_eq!(LaneKey::of(&r.family), LaneKey::Decode);
+            seen.insert(r.family.pattern);
+        }
+        assert_eq!(seen.len(), 3, "dense, block-sparse and window+global all present");
+        // Sparse members pin fewer KV bytes than the dense member.
+        let dense = a.iter().find(|r| r.family.pattern == ScorePattern::Dense).unwrap();
+        for r in &a {
+            if r.family.pattern != ScorePattern::Dense {
+                assert!(r.family.kv_bytes() < dense.family.kv_bytes());
+            }
+        }
     }
 
     #[test]

@@ -276,6 +276,7 @@ fn serving_sig_keys_resolve_tuned_specs() {
         kv: spec.kv_len,
         kv_layout: spec.kv_layout,
         direction: spec.direction,
+        pattern: spec.pattern,
     };
     let entry = tuner
         .cache()

@@ -19,7 +19,7 @@ use qimeng::coordinator::{
     ServeConfig, SupervisorConfig,
 };
 use qimeng::util::prng::Rng;
-use qimeng::workload::{shared_prefix_stream, SyntheticRequest};
+use qimeng::workload::{mixed_pattern_stream, shared_prefix_stream, SyntheticRequest};
 
 /// Oracle run: one request through a fresh solo reference executor
 /// (capacity 1, no batching, no pool) — the bit-exact ground truth.
@@ -328,6 +328,74 @@ fn degraded_lane_serves_bit_exact_when_every_variant_is_quarantined() {
         coordinator.metrics.degraded.load(std::sync::atomic::Ordering::Relaxed);
     assert!(degraded as usize >= degraded_outputs.len());
     coordinator.shutdown();
+}
+
+#[test]
+fn mixed_pattern_stream_settles_exactly_once_under_chaos() {
+    // Mixed dense / block-sparse / window-global decode traffic through
+    // the full fault-injection stack: every pattern family keeps the
+    // one-terminal-response guarantee, and successful replies stay
+    // bit-identical to the oracle regardless of the family's pattern key.
+    let stream = mixed_pattern_stream(48, 1e6, 91);
+    let mut fams: Vec<qimeng::coordinator::FamilyKey> = Vec::new();
+    for r in &stream {
+        if !fams.contains(&r.family) {
+            fams.push(r.family.clone());
+        }
+    }
+    assert_eq!(fams.len(), 3, "stream must cover all three score patterns");
+    let topo = ServeTopology::synthetic(&fams, &[1, 2, 4]);
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 2,
+        executor: ExecutorSpec::Reference,
+        retry: RetryPolicy { max_attempts: 3, backoff: Duration::from_micros(200) },
+        supervisor: fast_supervisor(),
+        fault_plan: Some(FaultPlan {
+            seed: 11,
+            error_rate: 0.25,
+            panic_rate: 0.05,
+            kv_exhaust_rate: 0.2,
+            ..FaultPlan::default()
+        }),
+        ..ServeConfig::default()
+    };
+    let coordinator =
+        Coordinator::start_with_topology(config, topo, TuneCache::new(), false).expect("start");
+    let mut submitted = Vec::with_capacity(stream.len());
+    for req in &stream {
+        let (q, k, v) = req.payload();
+        let rx = coordinator.submit(req.family.clone(), q.clone(), k.clone(), v.clone());
+        submitted.push((req.family.clone(), q, k, v, rx));
+    }
+    coordinator.shutdown();
+    let mut ok_per_pattern: std::collections::BTreeMap<
+        qimeng::sketch::spec::ScorePattern,
+        usize,
+    > = Default::default();
+    for (i, (fam, q, k, v, rx)) in submitted.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} dropped without a terminal response"));
+        assert!(rx.try_recv().is_err(), "request {i} answered twice");
+        if let RequestOutcome::Ok(out) = &resp.outcome {
+            assert_eq!(
+                out,
+                &oracle(&fam, &q, &k, &v),
+                "request {i} ({:?}) diverged from the oracle",
+                fam.pattern
+            );
+            *ok_per_pattern.entry(fam.pattern).or_default() += 1;
+        }
+    }
+    // The fault plan is probabilistic per batch, but with a retry budget
+    // of 3 and modest rates every pattern family must land successes.
+    assert_eq!(
+        ok_per_pattern.len(),
+        3,
+        "some pattern family never succeeded: {ok_per_pattern:?}"
+    );
 }
 
 #[test]

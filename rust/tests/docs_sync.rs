@@ -70,11 +70,16 @@ fn statement_and_surface_forms_are_documented() {
         );
     }
     // Surface forms: transpose marker, coordinate clauses (including the
-    // PR-4 gather form), memory spaces, with-lists and output clauses.
+    // gather forms — paged block tables and block-sparse selection
+    // tables), score-pattern params, memory spaces, with-lists and
+    // output clauses.
     for needle in [
         ".T",
         "in coordinate",
         "block_table[i]",
+        "sel_table[i]",
+        "sel_topk",
+        "n_global",
         "with offset",
         "and get",
         "and get new",

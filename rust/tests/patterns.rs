@@ -1,0 +1,313 @@
+//! Pattern-differential oracle harness (the ScorePattern contract):
+//! every score pattern's streamed TL program is held to its O(n²)
+//! masked-dense reference ([`qimeng::verify::oracle`]) across patterns ×
+//! variants × tilings × kv layouts × thread counts × both execution
+//! engines — with two *exact* laws layered on top of the numeric bound:
+//!
+//! 1. **Bit-identity**: for a fixed selection table, the compiled engine
+//!    produces the same bits at every thread count, and the legacy
+//!    walker produces those bits too (extending the
+//!    `tests/compiled_interp.rs` / `tests/paged.rs` differential).
+//! 2. **Containment**: block-sparse selecting *every* tile (`topk =
+//!    kv_len / block` with an identity-ordered table) is bitwise equal
+//!    to the dense program on the same tiling — the selection loop
+//!    degenerates to the dense streaming sweep.
+//!
+//! Cross-attention shape decoupling rides the same sweep: `kv_len` is
+//! sampled independently of `seq_len` for the non-causal patterns.
+
+use std::collections::BTreeMap;
+
+use qimeng::perfmodel::gpu::GpuArch;
+use qimeng::reasoner::profiles::LlmProfile;
+use qimeng::reasoner::{reason_with_tiling, tiling::Tiling};
+use qimeng::sketch::generate_sketch;
+use qimeng::sketch::spec::{AttnVariant, KvLayout, OpSpec, ScorePattern};
+use qimeng::util::prng::Rng;
+use qimeng::util::proptest;
+use qimeng::verify::exec::run_attention_tables;
+use qimeng::verify::oracle::{block_sparse_reference, window_global_reference};
+use qimeng::verify::tensor::{reference_attention, Tensor2};
+use qimeng::verify::{identity_table, interp, NUMERIC_TOL};
+
+const SEQ: usize = 128;
+const HD: usize = 64;
+const SCALE: f32 = 0.125;
+
+fn tiling(bm: usize, bn: usize, double_buffer: bool) -> Tiling {
+    Tiling { bm, bn, double_buffer, smem_bytes: 0, reg_bytes: 0, blocks_per_sm: 1 }
+}
+
+fn build(spec: &OpSpec, bm: usize, bn: usize, db: bool) -> qimeng::TlProgram {
+    reason_with_tiling(
+        &generate_sketch(spec),
+        spec,
+        &LlmProfile::deepseek_v3(),
+        tiling(bm, bn, db),
+    )
+    .program
+}
+
+/// A seeded permutation of the `total` kv tiles, truncated to the
+/// program's own `sel_topk` binding — the table both the engines and the
+/// masked-dense oracle read.
+fn shuffled_selection(total: usize, topk_tiles: usize, seed: u64) -> Vec<i64> {
+    let mut idx: Vec<i64> = (0..total as i64).collect();
+    let mut rng = Rng::new(seed);
+    for i in (1..total).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(topk_tiles);
+    idx
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    variant: AttnVariant,
+    pattern: ScorePattern,
+    layout: KvLayout,
+    /// `kv_len = kv_mult * seq_len` (cross-attention when 2).
+    kv_mult: usize,
+    bm: usize,
+    bn: usize,
+    double_buffer: bool,
+    threads: usize,
+    seed: u64,
+}
+
+/// The full pattern contract on one configuration: compiled engine at
+/// 1 and N threads and the legacy walker agree bit for bit, and the
+/// shared bits land within [`NUMERIC_TOL`] of the pattern's oracle.
+fn assert_pattern_contract(case: &Case) -> Result<(), String> {
+    let kv = SEQ * case.kv_mult;
+    let mut spec = OpSpec::benchmark(case.variant, SEQ, HD, false);
+    spec.batch = 1;
+    spec.kv_layout = case.layout;
+    let spec = spec
+        .with_pattern(case.pattern)
+        .and_then(|s| s.with_kv_len(kv))
+        .map_err(|e| format!("spec rejected: {e}"))?;
+    let program = build(&spec, case.bm, case.bn, case.double_buffer);
+    let params = program.params();
+    let bn = params["BN"] as usize;
+
+    let q = Tensor2::randn(SEQ, HD, case.seed);
+    let k = Tensor2::randn(kv, HD, case.seed + 1);
+    let v = Tensor2::randn(kv, HD, case.seed + 2);
+
+    let mut tables = BTreeMap::new();
+    let want = match case.pattern {
+        ScorePattern::Dense => {
+            if let KvLayout::Paged { .. } = spec.kv_layout {
+                let page = params["page_size"] as usize;
+                tables.insert("block_table".to_string(), identity_table(kv / page));
+            }
+            reference_attention(&q, &k, &v, SCALE, spec.causal)
+        }
+        ScorePattern::BlockSparse { .. } => {
+            let topk_tiles = params["sel_topk"] as usize;
+            let sel = shuffled_selection(kv / bn, topk_tiles, case.seed ^ 0xB5);
+            let want = block_sparse_reference(&q, &k, &v, SCALE, &sel, bn);
+            tables.insert("sel_table".to_string(), sel);
+            want
+        }
+        ScorePattern::WindowGlobal { window, n_global } => {
+            window_global_reference(&q, &k, &v, SCALE, window, n_global)
+        }
+    };
+
+    let one = run_attention_tables(&program, &q, &k, &v, SCALE, &tables, 1)
+        .map_err(|e| format!("compiled(1 thread) failed: {e}"))?;
+    let many = run_attention_tables(&program, &q, &k, &v, SCALE, &tables, case.threads)
+        .map_err(|e| format!("compiled({} threads) failed: {e}", case.threads))?;
+    if many.data != one.data {
+        return Err(format!("thread count {} changed the bits", case.threads));
+    }
+    let walked = interp::run_attention_tables(&program, &q, &k, &v, SCALE, &tables)
+        .map_err(|e| format!("walker failed: {e}"))?;
+    if walked.data != one.data {
+        return Err("walker != compiled".to_string());
+    }
+    let diff = one.max_abs_diff(&want);
+    if diff >= NUMERIC_TOL {
+        return Err(format!("diff {diff} vs the {:?} oracle", case.pattern));
+    }
+    Ok(())
+}
+
+#[test]
+fn every_pattern_matches_its_oracle_smoke() {
+    for (pattern, kv_mult) in [
+        (ScorePattern::Dense, 1),
+        (ScorePattern::Dense, 2), // cross-attention: kv_len = 2 * seq_len
+        (ScorePattern::BlockSparse { block: 32, topk: 2 }, 1),
+        (ScorePattern::BlockSparse { block: 64, topk: 3 }, 2),
+        (ScorePattern::WindowGlobal { window: 32, n_global: 16 }, 1),
+        (ScorePattern::WindowGlobal { window: 64, n_global: 0 }, 1),
+    ] {
+        let case = Case {
+            variant: AttnVariant::Mha,
+            pattern,
+            layout: KvLayout::Contiguous,
+            kv_mult,
+            bm: 64,
+            bn: 32,
+            double_buffer: true,
+            threads: 4,
+            seed: 42,
+        };
+        assert_pattern_contract(&case)
+            .unwrap_or_else(|e| panic!("{pattern:?} (kv_mult {kv_mult}): {e}"));
+    }
+}
+
+#[test]
+fn full_selection_block_sparse_is_bitwise_dense() {
+    // The containment law: with topk covering every kv tile and the
+    // identity-ordered table, the selection loop visits exactly the
+    // tiles the dense sweep streams, in the same order — so the online
+    // softmax accumulates identically and the outputs match bit for bit.
+    for (bm, bn, kv_mult) in [(64usize, 32usize, 1usize), (32, 64, 1), (64, 64, 2)] {
+        let kv = SEQ * kv_mult;
+        let mut dense = OpSpec::benchmark(AttnVariant::Mha, SEQ, HD, false);
+        dense.batch = 1;
+        let dense = dense.with_kv_len(kv).unwrap();
+        let sparse = dense
+            .with_pattern(ScorePattern::BlockSparse { block: bn, topk: kv / bn })
+            .unwrap();
+        let d_prog = build(&dense, bm, bn, true);
+        let s_prog = build(&sparse, bm, bn, true);
+        assert_eq!(
+            s_prog.params()["sel_topk"] as usize,
+            kv / bn,
+            "full selection must keep every tile"
+        );
+
+        let q = Tensor2::randn(SEQ, HD, 7);
+        let k = Tensor2::randn(kv, HD, 8);
+        let v = Tensor2::randn(kv, HD, 9);
+        let empty = BTreeMap::new();
+        let want = run_attention_tables(&d_prog, &q, &k, &v, SCALE, &empty, 4).unwrap();
+        let mut tables = BTreeMap::new();
+        tables.insert("sel_table".to_string(), identity_table(kv / bn));
+        let got = run_attention_tables(&s_prog, &q, &k, &v, SCALE, &tables, 4).unwrap();
+        assert_eq!(
+            got.data, want.data,
+            "bm={bm} bn={bn} kv={kv}: full selection != dense bitwise"
+        );
+        let walked = interp::run_attention_tables(&s_prog, &q, &k, &v, SCALE, &tables).unwrap();
+        assert_eq!(walked.data, want.data, "walker containment diverged");
+    }
+}
+
+#[test]
+fn selection_order_is_free_but_selection_set_is_not() {
+    // Reordering a fixed selection set only perturbs the online-softmax
+    // accumulation order (within tolerance of the same oracle); changing
+    // the *set* changes the answer outright.
+    let mut spec = OpSpec::benchmark(AttnVariant::Mha, SEQ, HD, false);
+    spec.batch = 1;
+    let spec = spec.with_pattern(ScorePattern::BlockSparse { block: 32, topk: 2 }).unwrap();
+    let program = build(&spec, 64, 32, false);
+    let topk_tiles = program.params()["sel_topk"] as usize;
+    assert_eq!(topk_tiles, 2);
+
+    let q = Tensor2::randn(SEQ, HD, 50);
+    let k = Tensor2::randn(SEQ, HD, 51);
+    let v = Tensor2::randn(SEQ, HD, 52);
+    let run = |sel: Vec<i64>| {
+        let mut tables = BTreeMap::new();
+        tables.insert("sel_table".to_string(), sel);
+        run_attention_tables(&program, &q, &k, &v, SCALE, &tables, 2).unwrap()
+    };
+    let fwd = run(vec![0, 3]);
+    let rev = run(vec![3, 0]);
+    let other = run(vec![1, 2]);
+    let want = block_sparse_reference(&q, &k, &v, SCALE, &[0, 3], 32);
+    assert!(fwd.max_abs_diff(&want) < NUMERIC_TOL);
+    assert!(rev.max_abs_diff(&want) < NUMERIC_TOL, "order must not change the set");
+    assert!(
+        other.max_abs_diff(&want) > 1e-3,
+        "a different selection set must change the output"
+    );
+}
+
+#[test]
+fn proptest_patterns_across_variants_tilings_layouts_and_threads() {
+    proptest::check_no_shrink(
+        20,
+        |rng: &mut Rng| {
+            let variants = [AttnVariant::Mha, AttnVariant::Gqa, AttnVariant::Mqa];
+            let variant = variants[rng.range(0, 2) as usize];
+            let bm = [16usize, 32, 64, 128][rng.range(0, 3) as usize];
+            let bn = [16usize, 32, 64, 128][rng.range(0, 3) as usize];
+            let (pattern, layout, kv_mult) = match rng.range(0, 3) {
+                0 => {
+                    // Dense is the only pattern that composes with the
+                    // paged layout (sparse patterns are themselves an
+                    // indirect layout over contiguous kv).
+                    let layout = if rng.range(0, 1) == 1 {
+                        KvLayout::Paged { page_size: [8usize, 16][rng.range(0, 1) as usize] }
+                    } else {
+                        KvLayout::Contiguous
+                    };
+                    (ScorePattern::Dense, layout, 1 + rng.range(0, 1) as usize)
+                }
+                1 | 2 => {
+                    let pattern = ScorePattern::BlockSparse {
+                        block: [16usize, 32, 64][rng.range(0, 2) as usize],
+                        topk: 1 + rng.below(4) as usize,
+                    };
+                    (pattern, KvLayout::Contiguous, 1 + rng.range(0, 1) as usize)
+                }
+                _ => {
+                    let pattern = ScorePattern::WindowGlobal {
+                        window: [16usize, 32, 64][rng.range(0, 2) as usize],
+                        n_global: [0usize, 8, 16][rng.range(0, 2) as usize],
+                    };
+                    // Window+global implies causal, which pins kv = seq.
+                    (pattern, KvLayout::Contiguous, 1)
+                }
+            };
+            Case {
+                variant,
+                pattern,
+                layout,
+                kv_mult,
+                bm,
+                bn,
+                double_buffer: rng.range(0, 1) == 1,
+                threads: rng.range(1, 8) as usize,
+                seed: rng.range(0, 1 << 30) as u64,
+            }
+        },
+        assert_pattern_contract,
+    );
+}
+
+#[test]
+fn full_cli_shaped_pipeline_roundtrips_patterns() {
+    // The acceptance-criteria path: `tlc generate --pattern block-sparse
+    // --block 64 --topk 16` and `--pattern window-global` — spec →
+    // sketch → reason → verify → translate, for both emitters.
+    use qimeng::pipeline::{run, Target};
+
+    let sparse = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, false)
+        .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+        .unwrap();
+    let r = run(&sparse, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Pallas)
+        .expect("block-sparse pipeline");
+    assert!(r.verify.passed, "{:?}", r.verify);
+    let src = r.source.unwrap();
+    assert!(src.contains("st_ref"), "pallas source must take the selection-table operand");
+
+    let wg = OpSpec::benchmark(AttnVariant::Mha, 1024, 64, true)
+        .with_pattern(ScorePattern::WindowGlobal { window: 256, n_global: 64 })
+        .unwrap();
+    let r = run(&wg, &GpuArch::a100(), &LlmProfile::deepseek_v3(), Target::Cute)
+        .expect("window-global pipeline");
+    assert!(r.verify.passed, "{:?}", r.verify);
+    let src = r.source.unwrap();
+    assert!(src.contains("kNGlobal"), "cute source must carry the n_global constant");
+}

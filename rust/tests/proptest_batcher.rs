@@ -24,6 +24,7 @@ fn family(i: u64) -> FamilyKey {
         kv: 256,
         kv_layout: KvLayout::Contiguous,
         direction: qimeng::sketch::spec::Direction::Forward,
+        pattern: qimeng::sketch::spec::ScorePattern::Dense,
     }
 }
 

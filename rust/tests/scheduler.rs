@@ -203,6 +203,123 @@ fn unknown_family_is_rejected_not_dropped() {
     coordinator.shutdown();
 }
 
+/// Executor that logs `(family, capacity)` for every executed batch and
+/// delegates to the reference implementation — the probe for pattern
+/// isolation and KV-residency accounting under mixed-pattern traffic.
+struct PatternLoggingExecutor {
+    log: Arc<std::sync::Mutex<Vec<(qimeng::coordinator::FamilyKey, usize)>>>,
+    inner: qimeng::coordinator::scheduler::ReferenceExecutor,
+}
+
+impl Executor for PatternLoggingExecutor {
+    fn execute_batch(
+        &mut self,
+        family: &qimeng::coordinator::FamilyKey,
+        info: &qimeng::coordinator::scheduler::ArtifactInfo,
+        capacity: usize,
+        q: &[f32],
+        kv: BatchKv<'_>,
+    ) -> Result<Vec<f32>, String> {
+        self.log.lock().unwrap().push((family.clone(), capacity));
+        self.inner.execute_batch(family, info, capacity, q, kv)
+    }
+
+    fn kind(&self) -> &'static str {
+        "pattern-logging"
+    }
+}
+
+#[test]
+fn mixed_pattern_decode_keeps_families_isolated_and_charges_attended_kv() {
+    use qimeng::sketch::spec::ScorePattern;
+    use qimeng::workload::mixed_pattern_stream;
+
+    let stream = mixed_pattern_stream(36, 1e6, 23);
+    let mut fams: Vec<qimeng::coordinator::FamilyKey> = Vec::new();
+    for r in &stream {
+        if !fams.contains(&r.family) {
+            fams.push(r.family.clone());
+        }
+    }
+    assert_eq!(fams.len(), 3, "stream must cover dense, block-sparse and window-global");
+    // Capacity 1 on every slot: one request per batch, so the KV pool
+    // charge for each admitted batch is exactly its family's kv_bytes().
+    let topo = ServeTopology::synthetic(&fams, &[1]);
+    let log: Arc<std::sync::Mutex<Vec<(qimeng::coordinator::FamilyKey, usize)>>> =
+        Arc::new(std::sync::Mutex::new(Vec::new()));
+    let factory_log = log.clone();
+    let config = ServeConfig {
+        artifacts_dir: "unused".into(),
+        batch_window: Duration::from_millis(1),
+        shards: 2,
+        executor: ExecutorSpec::Custom(Arc::new(move |_shard| {
+            Ok(Box::new(PatternLoggingExecutor {
+                log: factory_log.clone(),
+                inner: Default::default(),
+            }) as Box<dyn Executor>)
+        })),
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start_with_topology(config, topo, TuneCache::new(), false)
+        .expect("start");
+    let report = run_stream(&coordinator, &stream, 1e9);
+    assert_eq!(report.ok, 36, "errors: {} ({})", report.errors, report.metrics_summary);
+
+    // The latency feedback loop keys evidence per pattern: sparse
+    // families must observe under their own suffixed keys, never the
+    // dense family's key.
+    let snapshot = coordinator.tune_snapshot().expect("pool alive");
+    let observed: Vec<String> = snapshot
+        .entries()
+        .filter(|e| TuneCache::is_observed(e))
+        .map(|e| e.key.clone())
+        .collect();
+    assert!(
+        observed.iter().any(|k| k.contains("_bs64x4")),
+        "block-sparse family produced no pattern-keyed observations: {observed:?}"
+    );
+    assert!(
+        observed.iter().any(|k| k.contains("_wg256g64")),
+        "window-global family produced no pattern-keyed observations: {observed:?}"
+    );
+    coordinator.shutdown();
+    assert_eq!(coordinator.kv_pool.in_use_bytes(), 0, "every reservation released");
+
+    // Every executed batch carries exactly one family, so patterns never
+    // mix inside a batch; per-pattern batch counts must match per-pattern
+    // request counts, and the pool was charged each family's (pattern-
+    // clipped) kv_bytes — sparse families strictly less than dense.
+    let batches = log.lock().unwrap().clone();
+    let mut want: std::collections::BTreeMap<ScorePattern, usize> = Default::default();
+    for r in &stream {
+        *want.entry(r.family.pattern).or_default() += 1;
+    }
+    let mut got: std::collections::BTreeMap<ScorePattern, usize> = Default::default();
+    let mut charged = 0u64;
+    for (fam, cap) in &batches {
+        assert_eq!(*cap, 1, "capacity-1 slots must batch one request");
+        *got.entry(fam.pattern).or_default() += 1;
+        charged += fam.kv_bytes() as u64;
+    }
+    assert_eq!(got, want, "each request must be served in a batch of its own pattern family");
+    let metered =
+        coordinator.metrics.kv_charged_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(
+        metered, charged,
+        "KV pool charges must equal the sum of pattern-clipped kv_bytes over batches"
+    );
+    let dense = fams.iter().find(|f| f.pattern == ScorePattern::Dense).unwrap();
+    for f in &fams {
+        if f.pattern != ScorePattern::Dense {
+            assert!(
+                f.kv_bytes() < dense.kv_bytes(),
+                "sparse family {:?} must charge less KV residency than its dense twin",
+                f.pattern
+            );
+        }
+    }
+}
+
 /// Trivial executor for exploration accounting: returns zeros of the
 /// right size, so batch identity (which variant ran) is the only thing
 /// under test.

@@ -4,7 +4,7 @@
 use qimeng::perfmodel::gpu::GpuArch;
 use qimeng::reasoner::generate_tl_code;
 use qimeng::reasoner::profiles::LlmProfile;
-use qimeng::sketch::spec::{AttnVariant, KvLayout, OpSpec};
+use qimeng::sketch::spec::{AttnVariant, KvLayout, OpSpec, ScorePattern};
 use qimeng::tl::ast::{CmpOp, ComputeOp, Stmt, TensorRef, TlProgram};
 use qimeng::tl::expr::Expr;
 use qimeng::tl::types::{Frag, Layout, MemSpace};
@@ -205,12 +205,38 @@ fn reasoned_programs_roundtrip_for_random_specs() {
                 1 => KvLayout::Paged { page_size: *rng.choice(&[8usize, 16, 32]) },
                 _ => KvLayout::Sliding { window: *rng.choice(&[128usize, 512]) },
             };
-            (variant, seq, hd, causal, arch_i, layout)
+            // Score patterns (selection gathers, window+global masks) are
+            // part of the printable surface syntax too. Non-dense
+            // patterns require the contiguous layout, so the pattern
+            // overrides the sampled layout below.
+            let pattern = match rng.below(3) {
+                0 | 1 => ScorePattern::Dense,
+                _ => {
+                    if rng.bool() {
+                        ScorePattern::BlockSparse {
+                            block: *rng.choice(&[32usize, 64]),
+                            topk: 4 + rng.below(13) as usize,
+                        }
+                    } else {
+                        ScorePattern::WindowGlobal {
+                            window: *rng.choice(&[128usize, 256]),
+                            n_global: *rng.choice(&[0usize, 64]),
+                        }
+                    }
+                }
+            };
+            (variant, seq, hd, causal, arch_i, layout, pattern)
         },
         |_| vec![],
-        |&(variant, seq, hd, causal, arch_i, layout)| {
+        |&(variant, seq, hd, causal, arch_i, layout, pattern)| {
             let causal = causal || matches!(layout, KvLayout::Sliding { .. });
-            let spec = OpSpec::benchmark(variant, seq, hd, causal).with_layout(layout);
+            let spec = if pattern == ScorePattern::Dense {
+                OpSpec::benchmark(variant, seq, hd, causal).with_layout(layout)
+            } else {
+                // Block-sparse needs a non-causal contiguous spec;
+                // window+global sets causal itself.
+                OpSpec::benchmark(variant, seq, hd, false).with_pattern(pattern)?
+            };
             let arch = &GpuArch::all()[arch_i as usize];
             let r = generate_tl_code(&spec, arch, &LlmProfile::deepseek_r1());
             let text = print_program(&r.program);
@@ -222,6 +248,33 @@ fn reasoned_programs_roundtrip_for_random_specs() {
             }
         },
     );
+}
+
+#[test]
+fn pattern_programs_roundtrip_and_keep_their_surface_syntax() {
+    // Deterministic anchors for the two non-dense score patterns: the
+    // selection gather (`sel_table[...]` coordinates, `sel_topk` bound)
+    // and the window+global mask params must survive print → parse with
+    // the AST intact.
+    let bs = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, false)
+        .with_pattern(ScorePattern::BlockSparse { block: 64, topk: 16 })
+        .unwrap();
+    let r = generate_tl_code(&bs, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+    let text = print_program(&r.program);
+    assert!(text.contains("sel_table["), "selection gather must print:\n{text}");
+    assert!(text.contains("param sel_topk"), "selection bound must print:\n{text}");
+    let back = parse_program(&text).unwrap();
+    assert_eq!(back.stmts, r.program.stmts, "block-sparse TL failed text roundtrip");
+
+    let wg = OpSpec::benchmark(AttnVariant::Mha, 4096, 64, true)
+        .with_pattern(ScorePattern::WindowGlobal { window: 512, n_global: 64 })
+        .unwrap();
+    let r = generate_tl_code(&wg, &GpuArch::a100(), &LlmProfile::deepseek_v3());
+    let text = print_program(&r.program);
+    assert!(text.contains("param window"), "window bound must print:\n{text}");
+    assert!(text.contains("param n_global"), "global exemption must print:\n{text}");
+    let back = parse_program(&text).unwrap();
+    assert_eq!(back.stmts, r.program.stmts, "window+global TL failed text roundtrip");
 }
 
 #[test]
